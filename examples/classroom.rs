@@ -1,0 +1,113 @@
+//! Classroom scenario (paper §V.B) over REAL TCP: a QueueServer+DataServer
+//! process boundary, volunteers dialing in over the wire (the browser /
+//! WebSocket analog), and the paper's three scenarios:
+//!   1. async-start: volunteers trickle in
+//!   2. sync-start: all 8 already connected
+//!   3. churn: half the volunteers close their tab mid-run
+//! Each run uses real PJRT compute on a scaled schedule and prints the
+//! per-scenario wall-clock + a Fig-7-style timeline.
+//!
+//!     make artifacts && cargo run --release --example classroom
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use jsdoop::config::Config;
+use jsdoop::coordinator::initiator::setup_problem;
+use jsdoop::coordinator::ProblemSpec;
+use jsdoop::data::{DataApi, Store};
+use jsdoop::driver;
+use jsdoop::faults::FaultPlan;
+use jsdoop::metrics::Timeline;
+use jsdoop::queue::broker::Broker;
+use jsdoop::queue::client::{RemoteData, RemoteQueue};
+use jsdoop::queue::server::serve;
+use jsdoop::queue::QueueApi;
+use jsdoop::runtime::Engine;
+use jsdoop::util::prng::Rng;
+use jsdoop::volunteer::agent::AgentOptions;
+use jsdoop::volunteer::pool::run_pool;
+
+const WORKERS: usize = 8;
+
+fn scenario(
+    name: &str,
+    engine: &Arc<Engine>,
+    cfg: &Config,
+    plan: &FaultPlan,
+) -> anyhow::Result<f64> {
+    // Fresh servers per scenario (fresh problem state).
+    let broker = Arc::new(Broker::new(Duration::from_secs_f64(cfg.visibility_timeout_secs)));
+    let store = Arc::new(Store::new());
+    let handle = serve("127.0.0.1:0", broker, store)?;
+    let addr = handle.addr.to_string();
+
+    // Initiator publishes over the wire.
+    {
+        let q = RemoteQueue::connect(&addr)?;
+        let d = RemoteData::connect(&addr)?;
+        let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
+        let corpus = driver::load_corpus(cfg)?;
+        let init = engine.meta().load_init_params(&cfg.artifact_dir)?;
+        setup_problem(&q, &d, &spec, &corpus, init)?;
+    }
+
+    // Volunteers dial in over TCP (one connection pair each).
+    let timeline = Timeline::new();
+    let opts = AgentOptions {
+        poll: Duration::from_millis(100),
+        version_wait: Duration::from_secs(2),
+        ..Default::default()
+    };
+    let addr2 = addr.clone();
+    let conns = move |_i: usize| -> anyhow::Result<(
+        Arc<dyn QueueApi>,
+        Arc<dyn DataApi>,
+    )> {
+        Ok((
+            Arc::new(RemoteQueue::connect(&addr2)?) as Arc<dyn QueueApi>,
+            Arc::new(RemoteData::connect(&addr2)?) as Arc<dyn DataApi>,
+        ))
+    };
+    let outcome = run_pool(engine, &conns, plan, &vec![1.0; WORKERS], Some(&timeline), &opts)?;
+    let secs = outcome.runtime.as_secs_f64();
+
+    let d = RemoteData::connect(&addr)?;
+    let version = jsdoop::coordinator::version::current_version(&d)?.unwrap_or(0);
+    println!("\n--- {name}: {secs:.1}s, final version {version} ---");
+    println!("{}", timeline.render_gantt(72));
+    handle.shutdown();
+    Ok(secs)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.batch_size = 64;
+    cfg.examples_per_epoch = 256;
+    cfg.epochs = 2;
+    cfg.visibility_timeout_secs = 10.0;
+    cfg.task_poll_timeout_secs = 0.1;
+    cfg.validate()?;
+    let engine = Engine::load_shared(&cfg.artifact_dir)?;
+    println!("classroom demo over TCP, {WORKERS} volunteers, scaled schedule");
+
+    // Scenario 1: async-start (trickle in over 2s).
+    let mut rng = Rng::new(7);
+    let async_plan = FaultPlan::async_start(WORKERS, 2.0, &mut rng);
+    let t_async = scenario("scenario 1: async-start", &engine, &cfg, &async_plan)?;
+
+    // Scenario 2: sync-start.
+    let sync_plan = FaultPlan::sync_start(WORKERS);
+    let t_sync = scenario("scenario 2: sync-start", &engine, &cfg, &sync_plan)?;
+
+    // Scenario 3: half close their tab at t=2s.
+    let churn_plan = FaultPlan::departure(WORKERS, WORKERS / 2, 0.3);
+    let t_churn = scenario("scenario 3: half leave at 0.3s", &engine, &cfg, &churn_plan)?;
+
+    println!("\n=== classroom summary ===");
+    println!("  async-start : {t_async:.1}s");
+    println!("  sync-start  : {t_sync:.1}s");
+    println!("  churn(half) : {t_churn:.1}s");
+    println!("(paper shape: sync <= async; churn completes correctly, slower)");
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Cluster sweep (paper §V.A, Figs 4-6 in one shot): run the calibrated
+//! discrete-event cluster profile for 1..32 workers and print the
+//! runtime / relative speedup / relative efficiency triple — the quick
+//! way to eyeball the paper's headline scaling result.
+//!
+//!     cargo run --release --example cluster_sweep [--seed=N]
+
+use jsdoop::metrics::{efficiency, speedup};
+use jsdoop::profiles;
+use jsdoop::util::prng::Rng;
+use jsdoop::volunteer::sim::{simulate, SimWorkload};
+
+fn main() -> anyhow::Result<()> {
+    let seed: u64 = std::env::args()
+        .find_map(|a| a.strip_prefix("--seed=").map(|v| v.parse().ok()).flatten())
+        .unwrap_or(42);
+    println!("cluster sweep, paper workload (80 batches x 16 minibatches), seed {seed}");
+    println!(
+        "{:>8} | {:>14} | {:>9} | {:>10} | {:>10}",
+        "workers", "runtime (min)", "speedup", "efficiency", "cache hit"
+    );
+    let mut t1 = None;
+    for w in [1usize, 2, 4, 8, 16, 32] {
+        let mut rng = Rng::new(seed);
+        let (params, speeds, plan) = profiles::cluster(w, &mut rng);
+        let r = simulate(SimWorkload::paper(), &params, &plan, &speeds, seed)?;
+        let base = *t1.get_or_insert(r.runtime);
+        println!(
+            "{w:>8} | {:>14.1} | {:>9.2} | {:>10.2} | {:>10.2}",
+            r.runtime / 60.0,
+            speedup(base, r.runtime),
+            efficiency(base, r.runtime, w),
+            r.cache_hit_rate
+        );
+    }
+    println!("\n(expect: superlinear speedup 2..16 — slow-first node fill + cache");
+    println!(" thrash at 1 worker — then the 16-minibatch sync wall at 32)");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: the smallest end-to-end JSDoop run.
+//!
+//! Spins up an in-process QueueServer + DataServer, publishes a scaled
+//! char-RNN training problem, runs 4 volunteer threads with real PJRT
+//! compute, and prints the resulting loss.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use jsdoop::config::Config;
+use jsdoop::driver;
+use jsdoop::faults::FaultPlan;
+use jsdoop::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configuration: paper defaults, scaled down to run in seconds.
+    let mut cfg = Config::default();
+    cfg.batch_size = 64; // 8 map tasks per batch
+    cfg.examples_per_epoch = 256; // 4 batches per epoch
+    cfg.epochs = 2;
+    cfg.workers = 4;
+    cfg.validate()?;
+
+    // 2. The compute engine: AOT-compiled JAX/Pallas artifacts on PJRT.
+    let engine: Arc<Engine> = Engine::load_shared(&cfg.artifact_dir)?;
+    println!("engine ready on {} ({} params)", engine.platform(), engine.meta().num_params);
+
+    // 3. Run: Initiator publishes tasks; volunteers pull, compute, ACK.
+    let plan = FaultPlan::sync_start(cfg.workers);
+    let out = driver::run_local(&cfg, &engine, &plan, &vec![1.0; cfg.workers])?;
+
+    println!(
+        "trained {} model versions in {:.1}s across {} volunteers",
+        out.final_model.version,
+        out.pool.runtime.as_secs_f64(),
+        cfg.workers
+    );
+    println!("final eval loss: {:.4} (ln(98) = 4.585 is chance)", out.final_loss);
+    for (i, r) in out.pool.reports.iter().enumerate() {
+        println!(
+            "  volunteer {i}: {} maps, {} reduces, {} swaps",
+            r.maps_done, r.reduces_done, r.tasks_swapped
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Text generation demo: train the paper's char-RNN briefly with JSDoop,
+//! then sample text from it through the `predict_b1` artifact — the fun
+//! half of the TF.js lstm-text-generation example the paper builds on.
+//!
+//!     make artifacts && cargo run --release --example textgen
+
+use std::sync::Arc;
+
+use jsdoop::config::Config;
+use jsdoop::driver;
+use jsdoop::faults::FaultPlan;
+use jsdoop::runtime::Engine;
+use jsdoop::textdata::id_to_char;
+use jsdoop::util::prng::Rng;
+
+fn sample(probs: &[f32], rng: &mut Rng, temperature: f32) -> usize {
+    // Temperature-adjusted categorical sample.
+    let logits: Vec<f64> = probs
+        .iter()
+        .map(|p| (p.max(1e-9) as f64).ln() / temperature as f64)
+        .collect();
+    let m = logits.iter().cloned().fold(f64::MIN, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|l| (l - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    let r = rng.f64() * z;
+    let mut cum = 0.0;
+    for (i, e) in exps.iter().enumerate() {
+        cum += e;
+        if cum >= r {
+            return i;
+        }
+    }
+    exps.len() - 1
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.epochs = 2;
+    cfg.examples_per_epoch = 1024;
+    cfg.workers = 8;
+    cfg.task_poll_timeout_secs = 0.1;
+    cfg.validate()?;
+
+    let engine: Arc<Engine> = Engine::load_shared(&cfg.artifact_dir)?;
+    let corpus = driver::load_corpus(&cfg)?;
+
+    println!("training char-RNN with {} volunteers...", cfg.workers);
+    let out = driver::run_local(&cfg, &engine, &FaultPlan::sync_start(cfg.workers), &vec![1.0; cfg.workers])?;
+    println!(
+        "trained to version {} (loss {:.3}) in {:.1}s",
+        out.final_model.version,
+        out.final_loss,
+        out.pool.runtime.as_secs_f64()
+    );
+
+    // Seed window from the corpus, then free-run the model.
+    let t = engine.meta().seq_len;
+    let seed_text = corpus.decode(0, t);
+    let mut window: Vec<i32> = corpus.ids()[..t].iter().map(|&c| c as i32).collect();
+    let mut rng = Rng::new(7);
+    for temperature in [0.5f32, 1.0] {
+        let mut generated = String::new();
+        let mut w = window.clone();
+        for _ in 0..300 {
+            let probs = engine.predict(&out.final_model.params, &w)?;
+            let next = sample(&probs, &mut rng, temperature);
+            generated.push(id_to_char(next as u8) as char);
+            w.remove(0);
+            w.push(next as i32);
+        }
+        println!("\n--- temperature {temperature} ---");
+        println!("seed: {seed_text:?}");
+        println!("{generated}");
+    }
+    window.clear();
+    Ok(())
+}

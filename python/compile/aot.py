@@ -1,0 +1,159 @@
+"""AOT pipeline: lower the L2 entry points to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the Rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/gen_hlo.py and its README.
+
+Also emits:
+  artifacts/init_params.bin   flat f32 little-endian initial parameters
+  artifacts/model_meta.json   shapes + layout + constants for the Rust side
+
+Usage:  cd python && python -m compile.aot --out ../artifacts/model.hlo.txt
+(the --out path's *directory* is the artifact dir; every artifact lands
+there; the named file doubles as the Makefile's freshness stamp).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Batch sizes lowered to artifacts. 8 = map-task minibatch (Table 3);
+# 128 = full batch for the sequential baseline + eval (Table 2).
+MAP_BATCH = 8
+FULL_BATCH = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_signatures():
+    """name -> (fn, example arg specs, human signature). One HLO each."""
+    n = model.NUM_PARAMS
+    p = _spec((n,))
+    i32 = jnp.int32
+    return {
+        "grad_step_b8": (
+            model.grad_step,
+            (p, _spec((MAP_BATCH, model.SEQ_LEN), i32), _spec((MAP_BATCH,), i32)),
+            "(params[N], x[8,40]i32, y[8]i32) -> (grads[N], loss[])",
+        ),
+        "grad_step_b128": (
+            model.grad_step,
+            (p, _spec((FULL_BATCH, model.SEQ_LEN), i32), _spec((FULL_BATCH,), i32)),
+            "(params[N], x[128,40]i32, y[128]i32) -> (grads[N], loss[])",
+        ),
+        "rmsprop_update": (
+            model.rmsprop_update,
+            (p, p, p, _spec((1,))),
+            "(params[N], ms[N], grads[N], lr[1]) -> (params'[N], ms'[N])",
+        ),
+        "eval_loss_b128": (
+            model.eval_loss,
+            (p, _spec((FULL_BATCH, model.SEQ_LEN), i32), _spec((FULL_BATCH,), i32)),
+            "(params[N], x[128,40]i32, y[128]i32) -> loss[]",
+        ),
+        "predict_b1": (
+            model.predict,
+            (p, _spec((1, model.SEQ_LEN), i32)),
+            "(params[N], x[1,40]i32) -> probs[1,V]",
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="stamp file; its directory receives all artifacts")
+    args = ap.parse_args()
+    art_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(art_dir, exist_ok=True)
+
+    sigs = artifact_signatures()
+    manifest = {}
+    for name, (fn, specs, sig) in sigs.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(art_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {"file": f"{name}.hlo.txt", "signature": sig}
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    # Initial parameters (seed 42) + optimizer state zeros are defined HERE
+    # so every runner (rust, python tests) starts from the identical model.
+    params = np.asarray(model.init_params(42), dtype="<f4")
+    with open(os.path.join(art_dir, "init_params.bin"), "wb") as f:
+        f.write(params.tobytes())
+    print(f"  wrote init_params.bin ({params.size} f32)")
+
+    meta = {
+        "vocab": model.VOCAB,
+        "hidden": model.HIDDEN,
+        "seq_len": model.SEQ_LEN,
+        "num_params": model.NUM_PARAMS,
+        "map_batch": MAP_BATCH,
+        "full_batch": FULL_BATCH,
+        "rmsprop_rho": model.RMSPROP_RHO,
+        "rmsprop_eps": model.RMSPROP_EPS,
+        "param_layout": [
+            {"name": name, "shape": list(shape), "start": a, "end": b}
+            for name, shape, a, b in model.param_offsets()
+        ],
+        "artifacts": manifest,
+    }
+    with open(os.path.join(art_dir, "model_meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print("  wrote model_meta.json")
+
+    # Cross-language test vector: deterministic inputs + expected outputs so
+    # the Rust runtime can verify its PJRT execution bit-for-bit-ish
+    # (tolerance 1e-5) against this very JAX build. See rust/tests/.
+    xv = np.fromfunction(lambda i, j: (i * 7 + j * 13) % model.VOCAB,
+                         (MAP_BATCH, model.SEQ_LEN)).astype(np.int32)
+    yv = ((np.arange(MAP_BATCH) * 31 + 5) % model.VOCAB).astype(np.int32)
+    grads, loss = jax.jit(model.grad_step)(params, xv, yv)
+    grads = np.asarray(grads, dtype="<f4")
+    p2, ms2 = jax.jit(model.rmsprop_update)(
+        jnp.asarray(params), jnp.zeros_like(params), jnp.asarray(grads),
+        jnp.array([0.1], jnp.float32))
+    testvec = {
+        "x": xv.reshape(-1).tolist(),
+        "y": yv.tolist(),
+        "loss": float(loss),
+        "grads_head": grads[:16].astype(float).tolist(),
+        "grads_sum": float(grads.sum()),
+        "grads_abs_sum": float(np.abs(grads).sum()),
+        "updated_head": np.asarray(p2[:16]).astype(float).tolist(),
+        "ms_sum": float(np.asarray(ms2).sum()),
+    }
+    with open(os.path.join(art_dir, "testvec.json"), "w") as f:
+        json.dump(testvec, f)
+    print("  wrote testvec.json")
+
+    # Stamp file for make.
+    with open(args.out, "w") as f:
+        f.write("".join(sorted(m["file"] + "\n" for m in manifest.values())))
+    print(f"  stamped {args.out}")
+
+
+if __name__ == "__main__":
+    main()

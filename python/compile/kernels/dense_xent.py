@@ -1,0 +1,130 @@
+"""L1 — fused Dense + softmax + categorical-cross-entropy Pallas kernel.
+
+In TF.js the classifier head is three separate ops (matmul, softmax,
+xent), each a WebGL pass with an HBM round-trip for the [B, V] logits.
+Here the head is ONE kernel: logits are produced, normalized, and reduced
+to the scalar loss without leaving VMEM; the softmax probabilities are
+emitted once as the VJP residual. The backward kernel turns
+(probs - onehot(y)) / B into dh/dW/db with two matmuls on the same block.
+
+Wired into `dense_softmax_xent` via jax.custom_vjp. interpret=True —
+see kernels/lstm.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _head_fwd_kernel(h_ref, w_ref, b_ref, y1h_ref, loss_out, probs_out):
+    """loss = mean_b xent(softmax(h @ W + b), y); probs saved for the VJP."""
+    logits = (
+        jnp.dot(h_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...][None, :]
+    )
+    # Numerically-stable softmax, all in VMEM.
+    m = jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(logits - m)
+    s = jnp.sum(e, axis=1, keepdims=True)
+    probs = e / s
+    logp = (logits - m) - jnp.log(s)
+    nll = -jnp.sum(y1h_ref[...] * logp, axis=1)
+    loss_out[0] = jnp.mean(nll)
+    probs_out[...] = probs
+
+
+def _head_fwd(h, w, b, y1h):
+    batch = h.shape[0]
+    vocab = w.shape[1]
+    loss, probs = pl.pallas_call(
+        _head_fwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((batch, vocab), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(h, w, b, y1h)
+    return loss[0], probs
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+def _head_bwd_kernel(h_ref, w_ref, probs_ref, y1h_ref, dloss_ref,
+                     dh_out, dw_out, db_out):
+    batch = h_ref.shape[0]
+    # d(mean xent)/dlogits = (p - y) / B, scaled by the incoming cotangent.
+    dlogits = (probs_ref[...] - y1h_ref[...]) * (dloss_ref[0] / batch)
+    dh_out[...] = jnp.dot(dlogits, w_ref[...].T,
+                          preferred_element_type=jnp.float32)
+    dw_out[...] = jnp.dot(h_ref[...].T, dlogits,
+                          preferred_element_type=jnp.float32)
+    db_out[...] = jnp.sum(dlogits, axis=0)
+
+
+def _head_bwd_call(h, w, probs, y1h, dloss):
+    f32 = jnp.float32
+    out_shapes = (
+        jax.ShapeDtypeStruct(h.shape, f32),
+        jax.ShapeDtypeStruct(w.shape, f32),
+        jax.ShapeDtypeStruct((w.shape[1],), f32),
+    )
+    return pl.pallas_call(
+        _head_bwd_kernel, out_shape=out_shapes, interpret=INTERPRET,
+    )(h, w, probs, y1h, jnp.reshape(dloss, (1,)))
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def dense_softmax_xent(h, w, b, y1h):
+    """Mean categorical cross-entropy of softmax(h @ w + b) against one-hot
+    targets y1h. h: [B, H]; w: [H, V]; b: [V]; y1h: [B, V]. Returns scalar."""
+    loss, _ = _head_fwd(h, w, b, y1h)
+    return loss
+
+
+def _head_fwd_rule(h, w, b, y1h):
+    loss, probs = _head_fwd(h, w, b, y1h)
+    return loss, (h, w, probs, y1h)
+
+
+def _head_bwd_rule(res, dloss):
+    h, w, probs, y1h = res
+    dh, dw, db = _head_bwd_call(h, w, probs, y1h, dloss)
+    return dh, dw, db, None
+
+
+dense_softmax_xent.defvjp(_head_fwd_rule, _head_bwd_rule)
+
+
+# ---------------------------------------------------------------------------
+# Inference head (no loss): dense + softmax, one kernel.
+# ---------------------------------------------------------------------------
+
+def _predict_kernel(h_ref, w_ref, b_ref, probs_out):
+    logits = (
+        jnp.dot(h_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...][None, :]
+    )
+    m = jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs_out[...] = e / jnp.sum(e, axis=1, keepdims=True)
+
+
+def dense_softmax(h, w, b):
+    """softmax(h @ w + b): [B, H] x [H, V] -> [B, V]."""
+    return pl.pallas_call(
+        _predict_kernel,
+        out_shape=jax.ShapeDtypeStruct((h.shape[0], w.shape[1]), jnp.float32),
+        interpret=INTERPRET,
+    )(h, w, b)

@@ -1,0 +1,286 @@
+"""L1 — fused LSTM cell as a Pallas kernel, with a hand-written VJP.
+
+The paper's compute hot-spot is the TensorFlow.js LSTM layer (WebGL
+fragment-shader matmuls, one pass per op). The TPU-shaped rethink (see
+DESIGN.md §Hardware-Adaptation): the four gates share two matmuls, so a
+single kernel computes the fused gate pre-activation
+
+    z = [x | h_prev] @ [Wx ; Wh] + b          # one MXU-friendly matmul
+    i, f, g, o = sigmoid/tanh splits of z      # fused in-register
+    c = f * c_prev + i * g
+    h = o * tanh(c)
+
+with every operand VMEM-resident (whole-array BlockSpec, grid=1 — shapes
+are tiny: B<=128, I+H~148, 4H=200). The backward pass is a second Pallas
+kernel over the saved activations; both are wired into `lstm_cell` via
+`jax.custom_vjp` so `jax.grad` of the full model flows through them.
+
+Kernels run `interpret=True` (CPU PJRT cannot execute Mosaic custom-calls);
+correctness is pinned to `ref.lstm_cell_ref` by pytest + hypothesis.
+
+Gate ordering is i, f, g (candidate), o — Keras/TF.js order.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT target; see module docstring.
+
+
+def _sigmoid(x):
+    # Stable sigmoid in-kernel (jnp ops lower fine inside interpret mode).
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _lstm_fwd_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
+                     h_out, c_out, i_out, f_out, g_out, o_out):
+    """One LSTM step; writes new state plus gate activations (residuals)."""
+    hdim = h_ref.shape[1]
+    # Single fused gate matmul: [B,I]@[I,4H] + [B,H]@[H,4H] + b  -> [B,4H].
+    z = (
+        jnp.dot(x_ref[...], wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h_ref[...], wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...][None, :]
+    )
+    i = _sigmoid(z[:, 0 * hdim:1 * hdim])
+    f = _sigmoid(z[:, 1 * hdim:2 * hdim])
+    g = jnp.tanh(z[:, 2 * hdim:3 * hdim])
+    o = _sigmoid(z[:, 3 * hdim:4 * hdim])
+    c_new = f * c_ref[...] + i * g
+    h_out[...] = o * jnp.tanh(c_new)
+    c_out[...] = c_new
+    i_out[...] = i
+    f_out[...] = f
+    g_out[...] = g
+    o_out[...] = o
+
+
+def _lstm_fwd(x, h_prev, c_prev, wx, wh, b):
+    batch, _ = x.shape
+    hdim = h_prev.shape[1]
+    out = jax.ShapeDtypeStruct((batch, hdim), jnp.float32)
+    h, c, i, f, g, o = pl.pallas_call(
+        _lstm_fwd_kernel,
+        out_shape=(out, out, out, out, out, out),
+        interpret=INTERPRET,
+    )(x, h_prev, c_prev, wx, wh, b)
+    return h, c, (i, f, g, o)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernel
+# ---------------------------------------------------------------------------
+
+def _lstm_bwd_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref,
+                     i_ref, f_ref, g_ref, o_ref, c_new_ref,
+                     dh_ref, dc_ref,
+                     dx_out, dhp_out, dcp_out, dwx_out, dwh_out, db_out):
+    """Backward of one LSTM step. All residuals VMEM-resident; the two
+    transposed matmuls for dx/dh_prev and the two outer-product matmuls for
+    dWx/dWh run back-to-back on the same block — no HBM round-trips."""
+    i, f, g, o = i_ref[...], f_ref[...], g_ref[...], o_ref[...]
+    tc = jnp.tanh(c_new_ref[...])
+    dh = dh_ref[...]
+    do = dh * tc
+    dc = dc_ref[...] + dh * o * (1.0 - tc * tc)
+    di = dc * g
+    df = dc * c_ref[...]
+    dg = dc * i
+    dcp_out[...] = dc * f
+    # Pre-activation gradients (sigmoid'/tanh' in terms of activations).
+    dz = jnp.concatenate(
+        [di * i * (1.0 - i),
+         df * f * (1.0 - f),
+         dg * (1.0 - g * g),
+         do * o * (1.0 - o)],
+        axis=1,
+    )
+    dx_out[...] = jnp.dot(dz, wx_ref[...].T, preferred_element_type=jnp.float32)
+    dhp_out[...] = jnp.dot(dz, wh_ref[...].T, preferred_element_type=jnp.float32)
+    dwx_out[...] = jnp.dot(x_ref[...].T, dz, preferred_element_type=jnp.float32)
+    dwh_out[...] = jnp.dot(h_ref[...].T, dz, preferred_element_type=jnp.float32)
+    db_out[...] = jnp.sum(dz, axis=0)
+
+
+def _lstm_bwd_call(x, h_prev, c_prev, wx, wh, i, f, g, o, c_new, dh, dc):
+    batch, idim = x.shape
+    hdim = h_prev.shape[1]
+    f32 = jnp.float32
+    out_shapes = (
+        jax.ShapeDtypeStruct((batch, idim), f32),   # dx
+        jax.ShapeDtypeStruct((batch, hdim), f32),   # dh_prev
+        jax.ShapeDtypeStruct((batch, hdim), f32),   # dc_prev
+        jax.ShapeDtypeStruct((idim, 4 * hdim), f32),  # dWx
+        jax.ShapeDtypeStruct((hdim, 4 * hdim), f32),  # dWh
+        jax.ShapeDtypeStruct((4 * hdim,), f32),       # db
+    )
+    return pl.pallas_call(
+        _lstm_bwd_kernel, out_shape=out_shapes, interpret=INTERPRET,
+    )(x, h_prev, c_prev, wx, wh, i, f, g, o, c_new, dh, dc)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper — the public op
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def lstm_cell(x, h_prev, c_prev, wx, wh, b):
+    """Fused LSTM step: returns (h_new, c_new).
+
+    x: [B, I] float32 input; h_prev/c_prev: [B, H] state;
+    wx: [I, 4H]; wh: [H, 4H]; b: [4H] (gate order i,f,g,o).
+    """
+    h, c, _ = _lstm_fwd(x, h_prev, c_prev, wx, wh, b)
+    return h, c
+
+
+def _lstm_cell_fwd_rule(x, h_prev, c_prev, wx, wh, b):
+    h, c, (i, f, g, o) = _lstm_fwd(x, h_prev, c_prev, wx, wh, b)
+    return (h, c), (x, h_prev, c_prev, wx, wh, i, f, g, o, c)
+
+
+def _lstm_cell_bwd_rule(res, cot):
+    x, h_prev, c_prev, wx, wh, i, f, g, o, c_new = res
+    dh, dc = cot
+    dx, dhp, dcp, dwx, dwh, db = _lstm_bwd_call(
+        x, h_prev, c_prev, wx, wh, i, f, g, o, c_new, dh, dc)
+    return dx, dhp, dcp, dwx, dwh, db
+
+
+lstm_cell.defvjp(_lstm_cell_fwd_rule, _lstm_cell_bwd_rule)
+
+
+# ---------------------------------------------------------------------------
+# Pre-projected variant (PERF, see EXPERIMENTS.md §Perf L2-1): when the
+# input is one-hot (layer 1 of the char-RNN), x @ Wx is a row gather, so
+# the input projection for ALL timesteps is hoisted out of the scan as one
+# embedding lookup (jnp.take, with autodiff providing the scatter-add for
+# dWx). The per-step kernel then fuses only the recurrent matmul + gates --
+# the cuDNN-style "pre-projected input" LSTM optimization, adapted to the
+# MXU: the hot loop's matmul shrinks from [B,V+H]x[V+H,4H] to [B,H]x[H,4H].
+# ---------------------------------------------------------------------------
+
+def _lstm_pre_fwd_kernel(xp_ref, h_ref, c_ref, wh_ref,
+                         h_out, c_out, i_out, f_out, g_out, o_out):
+    """One step with pre-projected input xp = x @ Wx + b (shape [B, 4H])."""
+    hdim = h_ref.shape[1]
+    z = xp_ref[...] + jnp.dot(h_ref[...], wh_ref[...],
+                              preferred_element_type=jnp.float32)
+    i = _sigmoid(z[:, 0 * hdim:1 * hdim])
+    f = _sigmoid(z[:, 1 * hdim:2 * hdim])
+    g = jnp.tanh(z[:, 2 * hdim:3 * hdim])
+    o = _sigmoid(z[:, 3 * hdim:4 * hdim])
+    c_new = f * c_ref[...] + i * g
+    h_out[...] = o * jnp.tanh(c_new)
+    c_out[...] = c_new
+    i_out[...] = i
+    f_out[...] = f
+    g_out[...] = g
+    o_out[...] = o
+
+
+def _lstm_pre_fwd(xp, h_prev, c_prev, wh):
+    batch = xp.shape[0]
+    hdim = h_prev.shape[1]
+    out = jax.ShapeDtypeStruct((batch, hdim), jnp.float32)
+    h, c, i, f, g, o = pl.pallas_call(
+        _lstm_pre_fwd_kernel,
+        out_shape=(out, out, out, out, out, out),
+        interpret=INTERPRET,
+    )(xp, h_prev, c_prev, wh)
+    return h, c, (i, f, g, o)
+
+
+def _lstm_pre_bwd_kernel(h_ref, c_ref, wh_ref,
+                         i_ref, f_ref, g_ref, o_ref, c_new_ref,
+                         dh_ref, dc_ref,
+                         dxp_out, dhp_out, dcp_out, dwh_out):
+    """Backward of the pre-projected step: dz IS dxp (xp enters z as-is)."""
+    i, f, g, o = i_ref[...], f_ref[...], g_ref[...], o_ref[...]
+    tc = jnp.tanh(c_new_ref[...])
+    dh = dh_ref[...]
+    do = dh * tc
+    dc = dc_ref[...] + dh * o * (1.0 - tc * tc)
+    di = dc * g
+    df = dc * c_ref[...]
+    dg = dc * i
+    dcp_out[...] = dc * f
+    dz = jnp.concatenate(
+        [di * i * (1.0 - i),
+         df * f * (1.0 - f),
+         dg * (1.0 - g * g),
+         do * o * (1.0 - o)],
+        axis=1,
+    )
+    dxp_out[...] = dz
+    dhp_out[...] = jnp.dot(dz, wh_ref[...].T, preferred_element_type=jnp.float32)
+    dwh_out[...] = jnp.dot(h_ref[...].T, dz, preferred_element_type=jnp.float32)
+
+
+def _lstm_pre_bwd_call(h_prev, c_prev, wh, i, f, g, o, c_new, dh, dc):
+    batch, hdim = h_prev.shape
+    f32 = jnp.float32
+    out_shapes = (
+        jax.ShapeDtypeStruct((batch, 4 * hdim), f32),  # dxp
+        jax.ShapeDtypeStruct((batch, hdim), f32),      # dh_prev
+        jax.ShapeDtypeStruct((batch, hdim), f32),      # dc_prev
+        jax.ShapeDtypeStruct((hdim, 4 * hdim), f32),   # dWh
+    )
+    return pl.pallas_call(
+        _lstm_pre_bwd_kernel, out_shape=out_shapes, interpret=INTERPRET,
+    )(h_prev, c_prev, wh, i, f, g, o, c_new, dh, dc)
+
+
+@jax.custom_vjp
+def lstm_cell_pre(xp, h_prev, c_prev, wh):
+    """Fused LSTM step with pre-projected input xp = x @ Wx + b [B, 4H]."""
+    h, c, _ = _lstm_pre_fwd(xp, h_prev, c_prev, wh)
+    return h, c
+
+
+def _lstm_pre_fwd_rule(xp, h_prev, c_prev, wh):
+    h, c, (i, f, g, o) = _lstm_pre_fwd(xp, h_prev, c_prev, wh)
+    return (h, c), (h_prev, c_prev, wh, i, f, g, o, c)
+
+
+def _lstm_pre_bwd_rule(res, cot):
+    h_prev, c_prev, wh, i, f, g, o, c_new = res
+    dh, dc = cot
+    dxp, dhp, dcp, dwh = _lstm_pre_bwd_call(h_prev, c_prev, wh, i, f, g, o, c_new, dh, dc)
+    return dxp, dhp, dcp, dwh
+
+
+lstm_cell_pre.defvjp(_lstm_pre_fwd_rule, _lstm_pre_bwd_rule)
+
+
+def lstm_layer_pre(xps, h0, c0, wh):
+    """xps: [T, B, 4H] pre-projected inputs -> hs: [T, B, H] + final state."""
+
+    def step(carry, xp_t):
+        h, c = carry
+        h2, c2 = lstm_cell_pre(xp_t, h, c, wh)
+        return (h2, c2), h2
+
+    (h_fin, c_fin), hs = jax.lax.scan(step, (h0, c0), xps)
+    return hs, h_fin, c_fin
+
+
+# Convenience: run a whole sequence with lax.scan over the fused cell.
+@partial(jax.jit, static_argnames=())
+def lstm_layer(xs, h0, c0, wx, wh, b):
+    """xs: [T, B, I] -> hs: [T, B, H] plus final (h, c)."""
+
+    def step(carry, x_t):
+        h, c = carry
+        h2, c2 = lstm_cell(x_t, h, c, wx, wh, b)
+        return (h2, c2), h2
+
+    (h_fin, c_fin), hs = jax.lax.scan(step, (h0, c0), xs)
+    return hs, h_fin, c_fin

@@ -1,0 +1,178 @@
+"""L2 — the paper's model: char-RNN LSTM(50)->LSTM(50)->Dense(V softmax).
+
+This is the TensorFlow.js lstm-text-generation example the paper trains
+(Table 2: batch 128, sample length 40, lr 0.1, RMSprop, categorical
+cross-entropy), rebuilt in JAX on top of the L1 Pallas kernels
+(kernels/lstm.py, kernels/dense_xent.py). Build-time only: aot.py lowers
+the jitted entry points to HLO text; the Rust runtime executes them.
+
+Parameters travel as ONE flat f32 vector (layout below) so the Rust side
+handles a single PJRT buffer and the DataServer stores a single blob.
+
+Entry points (AOT surface):
+  grad_step(params, x[B,40]i32, y[B]i32)         -> (grads, loss)
+  rmsprop_update(params, ms, grads, lr[1])       -> (params', ms')
+  eval_loss(params, x, y)                        -> loss
+  predict(params, x[B,40]i32)                    -> probs [B, V]
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import lstm as klstm
+from compile.kernels import dense_xent as khead
+from compile.kernels import ref as kref
+
+# --- Paper / Table 2 constants -------------------------------------------
+VOCAB = 98          # fixed charset: \t, \n, ASCII 32..126, <unk>  (textdata)
+HIDDEN = 50         # 50 LSTM cells per layer (paper §V.A)
+SEQ_LEN = 40        # sample length (Table 2)
+RMSPROP_RHO = 0.9   # TF.js RMSprop defaults
+RMSPROP_EPS = 1e-8
+
+# Flat-vector parameter layout: (name, shape), concatenated in order.
+PARAM_SPEC = (
+    ("lstm1/wx", (VOCAB, 4 * HIDDEN)),
+    ("lstm1/wh", (HIDDEN, 4 * HIDDEN)),
+    ("lstm1/b", (4 * HIDDEN,)),
+    ("lstm2/wx", (HIDDEN, 4 * HIDDEN)),
+    ("lstm2/wh", (HIDDEN, 4 * HIDDEN)),
+    ("lstm2/b", (4 * HIDDEN,)),
+    ("dense/w", (HIDDEN, VOCAB)),
+    ("dense/b", (VOCAB,)),
+)
+
+NUM_PARAMS = sum(int(jnp.prod(jnp.array(s))) for _, s in PARAM_SPEC)
+
+
+def param_offsets():
+    """[(name, shape, start, end)] over the flat vector."""
+    out, off = [], 0
+    for name, shape in PARAM_SPEC:
+        n = 1
+        for d in shape:
+            n *= d
+        out.append((name, shape, off, off + n))
+        off += n
+    return out
+
+
+_OFFSETS = param_offsets()
+
+
+def unflatten(flat):
+    """Flat [NUM_PARAMS] f32 -> dict of named arrays (views, no copy)."""
+    return {name: flat[a:b].reshape(shape) for name, shape, a, b in _OFFSETS}
+
+
+def flatten(tree):
+    return jnp.concatenate([tree[name].reshape(-1) for name, _, _, _ in _OFFSETS])
+
+
+def init_params(seed: int = 42):
+    """Glorot-uniform kernels, orthogonal-ish recurrent, unit forget bias —
+    the Keras/TF.js LSTM initialization recipe."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in PARAM_SPEC:
+        key, sub = jax.random.split(key)
+        if name.endswith("/b"):
+            b = jnp.zeros(shape, jnp.float32)
+            if "lstm" in name:
+                # unit forget-gate bias (gate order i,f,g,o)
+                b = b.at[HIDDEN:2 * HIDDEN].set(1.0)
+            parts.append(b.reshape(-1))
+        else:
+            fan_in, fan_out = shape
+            limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+            w = jax.random.uniform(sub, shape, jnp.float32, -limit, limit)
+            parts.append(w.reshape(-1))
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _forward_h(params_flat, x_int, *, use_ref=False):
+    """Run both LSTM layers; return the last hidden state h2_T [B, H].
+
+    x_int: [B, T] int32 char ids. Layer 1's input is one-hot, so its
+    input projection is an embedding gather hoisted out of the scan
+    (PERF L2-1, see kernels/lstm.py and EXPERIMENTS.md §Perf): one
+    jnp.take replaces T one-hot [B,V]x[V,4H] matmuls; jax.grad of the
+    gather provides the dWx scatter-add. The ref path keeps the
+    textbook one-hot formulation as the oracle (mathematically equal:
+    one-hot @ Wx selects rows exactly).
+    """
+    p = unflatten(params_flat)
+    batch = x_int.shape[0]
+    h0 = jnp.zeros((batch, HIDDEN), jnp.float32)
+    c0 = jnp.zeros((batch, HIDDEN), jnp.float32)
+    if use_ref:
+        xs = jax.nn.one_hot(x_int, VOCAB, dtype=jnp.float32)  # [B, T, V]
+        xs = jnp.transpose(xs, (1, 0, 2))                     # [T, B, V]
+        hs1, _, _ = kref.lstm_layer_ref(
+            xs, h0, c0, p["lstm1/wx"], p["lstm1/wh"], p["lstm1/b"])
+        _, h2, _ = kref.lstm_layer_ref(
+            hs1, h0, c0, p["lstm2/wx"], p["lstm2/wh"], p["lstm2/b"])
+        return h2, p
+    if batch < 64:
+        # Pre-projected layer 1: xp[t] = Wx[x[t]] + b, hoisted out of the
+        # scan. Wins for the small map-task batch (B=8: -6% measured);
+        # at B=128 the CPU GEMM beats gather+scatter-add, so the large
+        # batches keep the one-hot matmul (EXPERIMENTS.md §Perf L2-1).
+        xp = jnp.take(p["lstm1/wx"], x_int, axis=0) + p["lstm1/b"]  # [B,T,4H]
+        xp = jnp.transpose(xp, (1, 0, 2))                           # [T,B,4H]
+        hs1, _, _ = klstm.lstm_layer_pre(xp, h0, c0, p["lstm1/wh"])
+    else:
+        xs = jax.nn.one_hot(x_int, VOCAB, dtype=jnp.float32)
+        xs = jnp.transpose(xs, (1, 0, 2))
+        hs1, _, _ = klstm.lstm_layer(
+            xs, h0, c0, p["lstm1/wx"], p["lstm1/wh"], p["lstm1/b"])
+    # Layer 2's input is dense (h1): keep the fully fused cell.
+    _, h2, _ = klstm.lstm_layer(
+        hs1, h0, c0, p["lstm2/wx"], p["lstm2/wh"], p["lstm2/b"])
+    return h2, p
+
+
+def loss_fn(params_flat, x_int, y_int, *, use_ref=False):
+    """Mean categorical cross-entropy of next-char prediction."""
+    h2, p = _forward_h(params_flat, x_int, use_ref=use_ref)
+    y1h = jax.nn.one_hot(y_int, VOCAB, dtype=jnp.float32)
+    head = kref.dense_softmax_xent_ref if use_ref else khead.dense_softmax_xent
+    return head(h2, p["dense/w"], p["dense/b"], y1h)
+
+
+def grad_step(params_flat, x_int, y_int):
+    """Map task: (grads_flat, loss). Gradients flow through the Pallas VJPs."""
+    loss, grads = jax.value_and_grad(loss_fn)(params_flat, x_int, y_int)
+    return grads, loss
+
+
+def grad_step_ref(params_flat, x_int, y_int):
+    """Oracle twin of grad_step (pure jnp) for pytest."""
+    loss, grads = jax.value_and_grad(
+        partial(loss_fn, use_ref=True))(params_flat, x_int, y_int)
+    return grads, loss
+
+
+def rmsprop_update(params_flat, ms_flat, grads_flat, lr):
+    """Reduce task: TF.js RMSprop. lr arrives as a [1] vector so the same
+    artifact serves any learning-rate schedule. Params/ms are donated at
+    lowering time (aot.py) — the update is in-place on the PJRT buffer."""
+    ms = RMSPROP_RHO * ms_flat + (1.0 - RMSPROP_RHO) * grads_flat * grads_flat
+    new_p = params_flat - lr[0] * grads_flat / (jnp.sqrt(ms) + RMSPROP_EPS)
+    return new_p, ms
+
+
+def eval_loss(params_flat, x_int, y_int):
+    return loss_fn(params_flat, x_int, y_int)
+
+
+def predict(params_flat, x_int):
+    """probs [B, V] for the next char — the text-generation demo surface."""
+    h2, p = _forward_h(params_flat, x_int)
+    return khead.dense_softmax(h2, p["dense/w"], p["dense/b"])

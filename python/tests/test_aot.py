@@ -1,0 +1,87 @@
+"""AOT pipeline: every artifact lowers to parseable HLO text with the
+expected entry signature; metadata is consistent with the model."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+
+
+class TestSignatures:
+    def test_artifact_set_is_complete(self):
+        sigs = aot.artifact_signatures()
+        assert set(sigs) == {
+            "grad_step_b8",
+            "grad_step_b128",
+            "rmsprop_update",
+            "eval_loss_b128",
+            "predict_b1",
+        }
+
+    def test_grad_step_b8_lowers_to_hlo_text(self):
+        fn, specs, _ = aot.artifact_signatures()["grad_step_b8"]
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        # HLO text essentials: a module header and an ENTRY computation.
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # Parameters: flat params vector + x + y.
+        assert f"f32[{model.NUM_PARAMS}]" in text
+
+    def test_rmsprop_lowers_small(self):
+        fn, specs, _ = aot.artifact_signatures()["rmsprop_update"]
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text
+        # Elementwise-only module: no dot/convolution ops.
+        assert " dot(" not in text
+
+
+class TestEmittedArtifacts:
+    """Validate the artifacts/ directory if it exists (post `make
+    artifacts`); skipped otherwise so the suite runs standalone."""
+
+    @pytest.fixture(scope="class")
+    def art_dir(self):
+        d = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        if not os.path.exists(os.path.join(d, "model_meta.json")):
+            pytest.skip("artifacts not built")
+        return d
+
+    def test_meta_consistent(self, art_dir):
+        meta = json.load(open(os.path.join(art_dir, "model_meta.json")))
+        assert meta["vocab"] == model.VOCAB
+        assert meta["hidden"] == model.HIDDEN
+        assert meta["num_params"] == model.NUM_PARAMS
+        assert meta["rmsprop_rho"] == model.RMSPROP_RHO
+        layout = meta["param_layout"]
+        assert layout[-1]["end"] == model.NUM_PARAMS
+
+    def test_init_params_bin_matches_model(self, art_dir):
+        import numpy as np
+
+        blob = np.fromfile(os.path.join(art_dir, "init_params.bin"), dtype="<f4")
+        assert blob.shape == (model.NUM_PARAMS,)
+        np.testing.assert_array_equal(blob, np.asarray(model.init_params(42)))
+
+    def test_all_listed_artifacts_exist(self, art_dir):
+        meta = json.load(open(os.path.join(art_dir, "model_meta.json")))
+        for name, entry in meta["artifacts"].items():
+            path = os.path.join(art_dir, entry["file"])
+            assert os.path.exists(path), name
+            head = open(path).read(64)
+            assert head.startswith("HloModule"), name
+
+    def test_testvec_present_and_sane(self, art_dir):
+        tv = json.load(open(os.path.join(art_dir, "testvec.json")))
+        assert len(tv["x"]) == 8 * model.SEQ_LEN
+        assert len(tv["y"]) == 8
+        assert 0 < tv["loss"] < 10
+        assert len(tv["grads_head"]) == 16
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

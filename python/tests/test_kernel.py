@@ -1,0 +1,246 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py) —
+values AND gradients, plus hypothesis sweeps over shapes/dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense_xent, lstm, ref
+
+ATOL = 2e-5
+
+
+def _lstm_inputs(key, batch, idim, hdim, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return (
+        jax.random.normal(ks[0], (batch, idim), dtype),
+        jax.random.normal(ks[1], (batch, hdim), dtype),
+        jax.random.normal(ks[2], (batch, hdim), dtype),
+        jax.random.normal(ks[3], (idim, 4 * hdim), dtype) * 0.3,
+        jax.random.normal(ks[4], (hdim, 4 * hdim), dtype) * 0.3,
+        jax.random.normal(ks[5], (4 * hdim,), dtype) * 0.1,
+    )
+
+
+class TestLstmCell:
+    def test_forward_matches_ref(self):
+        args = _lstm_inputs(jax.random.PRNGKey(0), 8, 98, 50)
+        h1, c1 = lstm.lstm_cell(*args)
+        h2, c2 = ref.lstm_cell_ref(*args)
+        np.testing.assert_allclose(h1, h2, atol=ATOL)
+        np.testing.assert_allclose(c1, c2, atol=ATOL)
+
+    def test_gradients_match_ref(self):
+        args = _lstm_inputs(jax.random.PRNGKey(1), 4, 12, 6)
+
+        def loss_pal(*a):
+            h, c = lstm.lstm_cell(*a)
+            return jnp.sum(h * 1.3 + c * 0.7)
+
+        def loss_ref(*a):
+            h, c = ref.lstm_cell_ref(*a)
+            return jnp.sum(h * 1.3 + c * 0.7)
+
+        g1 = jax.grad(loss_pal, argnums=tuple(range(6)))(*args)
+        g2 = jax.grad(loss_ref, argnums=tuple(range(6)))(*args)
+        for a, b, name in zip(g1, g2, ["dx", "dh", "dc", "dwx", "dwh", "db"]):
+            np.testing.assert_allclose(a, b, atol=ATOL, err_msg=name)
+
+    def test_state_propagates(self):
+        # Two chained steps: cell state must influence later outputs.
+        args = _lstm_inputs(jax.random.PRNGKey(2), 2, 5, 4)
+        x, h, c, wx, wh, b = args
+        h1, c1 = lstm.lstm_cell(x, h, c, wx, wh, b)
+        h2, _ = lstm.lstm_cell(x, h1, c1, wx, wh, b)
+        assert not np.allclose(h1, h2)
+
+    def test_forget_bias_saturates_memory(self):
+        # With a huge forget-gate bias and zero input gate, c' ~= c.
+        batch, idim, hdim = 2, 3, 4
+        x = jnp.zeros((batch, idim))
+        h = jnp.zeros((batch, hdim))
+        c = jnp.arange(batch * hdim, dtype=jnp.float32).reshape(batch, hdim)
+        wx = jnp.zeros((idim, 4 * hdim))
+        wh = jnp.zeros((hdim, 4 * hdim))
+        b = jnp.concatenate([
+            jnp.full((hdim,), -50.0),  # i: closed
+            jnp.full((hdim,), 50.0),   # f: open
+            jnp.zeros((hdim,)),        # g
+            jnp.zeros((hdim,)),        # o
+        ])
+        _, c1 = lstm.lstm_cell(x, h, c, wx, wh, b)
+        np.testing.assert_allclose(c1, c, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        batch=st.integers(1, 16),
+        idim=st.integers(1, 64),
+        hdim=st.integers(1, 32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, batch, idim, hdim, seed):
+        args = _lstm_inputs(jax.random.PRNGKey(seed), batch, idim, hdim)
+        h1, c1 = lstm.lstm_cell(*args)
+        h2, c2 = ref.lstm_cell_ref(*args)
+        np.testing.assert_allclose(h1, h2, atol=ATOL)
+        np.testing.assert_allclose(c1, c2, atol=ATOL)
+        assert h1.dtype == jnp.float32
+
+    def test_layer_scan_matches_ref(self):
+        key = jax.random.PRNGKey(3)
+        T, B, I, H = 7, 4, 10, 6
+        ks = jax.random.split(key, 4)
+        xs = jax.random.normal(ks[0], (T, B, I))
+        wx = jax.random.normal(ks[1], (I, 4 * H)) * 0.3
+        wh = jax.random.normal(ks[2], (H, 4 * H)) * 0.3
+        b = jax.random.normal(ks[3], (4 * H,)) * 0.1
+        h0 = jnp.zeros((B, H))
+        c0 = jnp.zeros((B, H))
+        hs1, hf1, cf1 = lstm.lstm_layer(xs, h0, c0, wx, wh, b)
+        hs2, hf2, cf2 = ref.lstm_layer_ref(xs, h0, c0, wx, wh, b)
+        np.testing.assert_allclose(hs1, hs2, atol=ATOL)
+        np.testing.assert_allclose(hf1, hf2, atol=ATOL)
+        np.testing.assert_allclose(cf1, cf2, atol=ATOL)
+
+
+class TestLstmCellPre:
+    """The pre-projected variant (PERF L2-1) must agree with the full
+    cell when xp = x @ wx + b."""
+
+    def test_forward_equivalent_to_full_cell(self):
+        x, h, c, wx, wh, b = _lstm_inputs(jax.random.PRNGKey(4), 8, 98, 50)
+        xp = x @ wx + b[None, :]
+        h1, c1 = lstm.lstm_cell_pre(xp, h, c, wh)
+        h2, c2 = lstm.lstm_cell(x, h, c, wx, wh, b)
+        np.testing.assert_allclose(h1, h2, atol=ATOL)
+        np.testing.assert_allclose(c1, c2, atol=ATOL)
+
+    def test_gradients_match_full_cell(self):
+        x, h, c, wx, wh, b = _lstm_inputs(jax.random.PRNGKey(5), 4, 12, 6)
+
+        def loss_pre(wx_, wh_, b_):
+            xp = x @ wx_ + b_[None, :]
+            hh, cc = lstm.lstm_cell_pre(xp, h, c, wh_)
+            return jnp.sum(hh * 1.3 + cc * 0.7)
+
+        def loss_full(wx_, wh_, b_):
+            hh, cc = lstm.lstm_cell(x, h, c, wx_, wh_, b_)
+            return jnp.sum(hh * 1.3 + cc * 0.7)
+
+        g1 = jax.grad(loss_pre, argnums=(0, 1, 2))(wx, wh, b)
+        g2 = jax.grad(loss_full, argnums=(0, 1, 2))(wx, wh, b)
+        for a, bb, name in zip(g1, g2, ["dwx", "dwh", "db"]):
+            np.testing.assert_allclose(a, bb, atol=ATOL, err_msg=name)
+
+    def test_layer_pre_matches_layer(self):
+        key = jax.random.PRNGKey(6)
+        T, B, I, H = 5, 3, 8, 4
+        ks = jax.random.split(key, 4)
+        xs = jax.random.normal(ks[0], (T, B, I))
+        wx = jax.random.normal(ks[1], (I, 4 * H)) * 0.3
+        wh = jax.random.normal(ks[2], (H, 4 * H)) * 0.3
+        b = jax.random.normal(ks[3], (4 * H,)) * 0.1
+        h0 = jnp.zeros((B, H))
+        c0 = jnp.zeros((B, H))
+        xps = xs @ wx + b[None, None, :]
+        hs1, hf1, cf1 = lstm.lstm_layer_pre(xps, h0, c0, wh)
+        hs2, hf2, cf2 = lstm.lstm_layer(xs, h0, c0, wx, wh, b)
+        np.testing.assert_allclose(hs1, hs2, atol=ATOL)
+        np.testing.assert_allclose(hf1, hf2, atol=ATOL)
+        np.testing.assert_allclose(cf1, cf2, atol=ATOL)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        batch=st.integers(1, 16),
+        hdim=st.integers(1, 32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_pre_sweep(self, batch, hdim, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        xp = jax.random.normal(ks[0], (batch, 4 * hdim))
+        h = jax.random.normal(ks[1], (batch, hdim))
+        c = jax.random.normal(ks[2], (batch, hdim))
+        wh = jax.random.normal(ks[3], (hdim, 4 * hdim)) * 0.3
+        h1, c1 = lstm.lstm_cell_pre(xp, h, c, wh)
+        # Oracle: full cell with identity-free input path (x=0, b=0 and
+        # the pre-projection folded in is simplest via ref formula).
+        z = xp + h @ wh
+        i = jax.nn.sigmoid(z[:, :hdim])
+        f = jax.nn.sigmoid(z[:, hdim:2 * hdim])
+        g = jnp.tanh(z[:, 2 * hdim:3 * hdim])
+        o = jax.nn.sigmoid(z[:, 3 * hdim:])
+        c2 = f * c + i * g
+        h2 = o * jnp.tanh(c2)
+        np.testing.assert_allclose(h1, h2, atol=ATOL)
+        np.testing.assert_allclose(c1, c2, atol=ATOL)
+
+
+class TestDenseSoftmaxXent:
+    def _head_inputs(self, key, batch, hdim, vocab):
+        ks = jax.random.split(key, 3)
+        h = jax.random.normal(ks[0], (batch, hdim))
+        w = jax.random.normal(ks[1], (hdim, vocab)) * 0.3
+        b = jax.random.normal(ks[2], (vocab,)) * 0.1
+        y = jax.random.randint(ks[0], (batch,), 0, vocab)
+        y1h = jax.nn.one_hot(y, vocab)
+        return h, w, b, y1h
+
+    def test_loss_matches_ref(self):
+        args = self._head_inputs(jax.random.PRNGKey(0), 8, 50, 98)
+        l1 = dense_xent.dense_softmax_xent(*args)
+        l2 = ref.dense_softmax_xent_ref(*args)
+        np.testing.assert_allclose(l1, l2, atol=ATOL)
+
+    def test_gradients_match_ref(self):
+        args = self._head_inputs(jax.random.PRNGKey(1), 4, 6, 10)
+        g1 = jax.grad(dense_xent.dense_softmax_xent, argnums=(0, 1, 2))(*args)
+        g2 = jax.grad(ref.dense_softmax_xent_ref, argnums=(0, 1, 2))(*args)
+        for a, b, name in zip(g1, g2, ["dh", "dw", "db"]):
+            np.testing.assert_allclose(a, b, atol=ATOL, err_msg=name)
+
+    def test_uniform_logits_give_log_vocab(self):
+        vocab = 98
+        h = jnp.zeros((4, 50))
+        w = jnp.zeros((50, vocab))
+        b = jnp.zeros((vocab,))
+        y1h = jax.nn.one_hot(jnp.array([0, 1, 2, 3]), vocab)
+        loss = dense_xent.dense_softmax_xent(h, w, b, y1h)
+        np.testing.assert_allclose(loss, np.log(vocab), atol=1e-5)
+
+    def test_predict_matches_ref_and_normalizes(self):
+        h, w, b, _ = self._head_inputs(jax.random.PRNGKey(2), 5, 7, 13)
+        p1 = dense_xent.dense_softmax(h, w, b)
+        p2 = ref.dense_softmax_ref(h, w, b)
+        np.testing.assert_allclose(p1, p2, atol=1e-6)
+        np.testing.assert_allclose(p1.sum(axis=1), 1.0, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        batch=st.integers(1, 16),
+        hdim=st.integers(1, 64),
+        vocab=st.integers(2, 128),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, batch, hdim, vocab, seed):
+        args = self._head_inputs(jax.random.PRNGKey(seed), batch, hdim, vocab)
+        l1 = dense_xent.dense_softmax_xent(*args)
+        l2 = ref.dense_softmax_xent_ref(*args)
+        np.testing.assert_allclose(l1, l2, atol=ATOL)
+        assert float(l1) >= 0.0
+
+    def test_numerical_stability_large_logits(self):
+        # Huge activations must not produce nan/inf (stable softmax).
+        h = jnp.full((2, 4), 1e4)
+        w = jnp.ones((4, 9))
+        b = jnp.zeros((9,))
+        y1h = jax.nn.one_hot(jnp.array([0, 5]), 9)
+        loss = dense_xent.dense_softmax_xent(h, w, b, y1h)
+        assert np.isfinite(float(loss))
+        probs = dense_xent.dense_softmax(h, w, b)
+        assert np.all(np.isfinite(probs))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,124 @@
+"""L2 correctness: the char-RNN model — Pallas path vs pure-jnp oracle,
+parameter layout, initialization, RMSprop semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(42)
+
+
+class TestParamLayout:
+    def test_total_size(self):
+        # 2x50-LSTM + dense over vocab 98 => 54,998 params (DESIGN.md).
+        assert model.NUM_PARAMS == 54_998
+
+    def test_flatten_unflatten_roundtrip(self, params):
+        tree = model.unflatten(params)
+        again = model.flatten(tree)
+        np.testing.assert_array_equal(params, again)
+
+    def test_layout_is_contiguous(self):
+        off = 0
+        for _name, shape, start, end in model.param_offsets():
+            assert start == off
+            assert end - start == int(np.prod(shape))
+            off = end
+        assert off == model.NUM_PARAMS
+
+    def test_shapes(self, params):
+        tree = model.unflatten(params)
+        assert tree["lstm1/wx"].shape == (98, 200)
+        assert tree["lstm2/wx"].shape == (50, 200)
+        assert tree["dense/w"].shape == (50, 98)
+
+
+class TestInit:
+    def test_deterministic(self):
+        a = model.init_params(42)
+        b = model.init_params(42)
+        np.testing.assert_array_equal(a, b)
+        c = model.init_params(43)
+        assert not np.array_equal(a, c)
+
+    def test_forget_gate_bias_is_one(self, params):
+        tree = model.unflatten(params)
+        for layer in ["lstm1/b", "lstm2/b"]:
+            b = np.asarray(tree[layer])
+            np.testing.assert_array_equal(b[50:100], 1.0)  # f-gate block
+            np.testing.assert_array_equal(b[:50], 0.0)     # i-gate block
+
+
+class TestGradStep:
+    def test_matches_ref(self, params):
+        x = jax.random.randint(jax.random.PRNGKey(1), (8, model.SEQ_LEN), 0, model.VOCAB)
+        y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, model.VOCAB)
+        g1, l1 = model.grad_step(params, x, y)
+        g2, l2 = model.grad_step_ref(params, x, y)
+        np.testing.assert_allclose(l1, l2, atol=1e-5)
+        np.testing.assert_allclose(g1, g2, atol=2e-5)
+
+    def test_initial_loss_near_uniform(self, params):
+        x = jax.random.randint(jax.random.PRNGKey(3), (8, model.SEQ_LEN), 0, model.VOCAB)
+        y = jax.random.randint(jax.random.PRNGKey(4), (8,), 0, model.VOCAB)
+        _, loss = model.grad_step(params, x, y)
+        assert abs(float(loss) - np.log(model.VOCAB)) < 0.1
+
+    @settings(max_examples=8, deadline=None)
+    @given(batch=st.sampled_from([1, 2, 8, 16]), seed=st.integers(0, 1000))
+    def test_hypothesis_batch_sweep(self, params, batch, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.randint(k1, (batch, model.SEQ_LEN), 0, model.VOCAB)
+        y = jax.random.randint(k2, (batch,), 0, model.VOCAB)
+        grads, loss = model.grad_step(params, x, y)
+        assert grads.shape == (model.NUM_PARAMS,)
+        assert np.isfinite(float(loss))
+        assert np.all(np.isfinite(np.asarray(grads)))
+
+    def test_gradient_descends(self, params):
+        # One RMSprop step on a fixed minibatch must reduce its loss.
+        x = jax.random.randint(jax.random.PRNGKey(5), (8, model.SEQ_LEN), 0, model.VOCAB)
+        y = jax.random.randint(jax.random.PRNGKey(6), (8,), 0, model.VOCAB)
+        grads, loss0 = model.grad_step(params, x, y)
+        p2, _ = model.rmsprop_update(params, jnp.zeros_like(params), grads,
+                                     jnp.array([0.05], jnp.float32))
+        _, loss1 = model.grad_step(p2, x, y)
+        assert float(loss1) < float(loss0)
+
+
+class TestRmsprop:
+    def test_matches_numpy_formula(self, params):
+        g = jax.random.normal(jax.random.PRNGKey(7), params.shape) * 0.01
+        ms = jnp.abs(jax.random.normal(jax.random.PRNGKey(8), params.shape)) * 0.001
+        lr = 0.1
+        p2, ms2 = model.rmsprop_update(params, ms, g, jnp.array([lr], jnp.float32))
+        ms_want = model.RMSPROP_RHO * np.asarray(ms) + (1 - model.RMSPROP_RHO) * np.asarray(g) ** 2
+        p_want = np.asarray(params) - lr * np.asarray(g) / (np.sqrt(ms_want) + model.RMSPROP_EPS)
+        np.testing.assert_allclose(ms2, ms_want, rtol=1e-6)
+        np.testing.assert_allclose(p2, p_want, rtol=1e-5)
+
+    def test_zero_gradient_is_identity(self, params):
+        z = jnp.zeros_like(params)
+        p2, ms2 = model.rmsprop_update(params, z, z, jnp.array([0.1], jnp.float32))
+        np.testing.assert_array_equal(p2, params)
+        np.testing.assert_array_equal(ms2, z)
+
+
+class TestPredict:
+    def test_distribution(self, params):
+        x = jax.random.randint(jax.random.PRNGKey(9), (1, model.SEQ_LEN), 0, model.VOCAB)
+        probs = model.predict(params, x)
+        assert probs.shape == (1, model.VOCAB)
+        np.testing.assert_allclose(probs.sum(), 1.0, atol=1e-5)
+        assert np.all(np.asarray(probs) >= 0)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

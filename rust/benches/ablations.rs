@@ -1,0 +1,90 @@
+//! E8 — ablations over the design choices DESIGN.md calls out:
+//!   A1  cache model on/off          (what superlinearity costs/buys)
+//!   A2  minibatch count per batch   (the sync-wall position: k=8/16/32)
+//!   A3  visibility timeout          (straggler re-issue vs duplicate work)
+//!   A4  churn robustness overhead   (runtime vs % of fleet leaving)
+//!
+//! Run: cargo bench --bench ablations
+
+use jsdoop::faults::FaultPlan;
+use jsdoop::profiles;
+use jsdoop::util::prng::Rng;
+use jsdoop::volunteer::sim::{simulate, SimParams, SimWorkload};
+
+fn cluster(w: usize) -> (SimParams, Vec<f64>, FaultPlan) {
+    let mut rng = Rng::new(42);
+    profiles::cluster(w, &mut rng)
+}
+
+fn main() {
+    std::fs::create_dir_all("bench_results").unwrap();
+    let wl = SimWorkload::paper();
+
+    // ---- A1: cache effect on/off ------------------------------------
+    println!("== A1: cache model (superlinearity driver) ==");
+    let mut csv = String::from("workers,cached_speedup,flat_speedup\n");
+    let (p_on, _, _) = cluster(1);
+    let mut p_off = p_on.clone();
+    p_off.cache_miss_penalty = 0.0;
+    let base_on = simulate(wl, &p_on, &FaultPlan::sync_start(1), &cluster(1).1, 42).unwrap().runtime;
+    let base_off = simulate(wl, &p_off, &FaultPlan::sync_start(1), &cluster(1).1, 42).unwrap().runtime;
+    for w in [2usize, 4, 8, 16] {
+        let (_, speeds, plan) = cluster(w);
+        let t_on = simulate(wl, &p_on, &plan, &speeds, 42).unwrap().runtime;
+        let t_off = simulate(wl, &p_off, &plan, &speeds, 42).unwrap().runtime;
+        let (s_on, s_off) = (base_on / t_on, base_off / t_off);
+        println!("  {w:>2} workers: speedup cached {s_on:>6.2} vs flat {s_off:>6.2}");
+        csv.push_str(&format!("{w},{s_on:.4},{s_off:.4}\n"));
+    }
+    std::fs::write("bench_results/ablation_cache.csv", csv).unwrap();
+
+    // ---- A2: minibatch count (sync-wall position) --------------------
+    println!("== A2: minibatches per batch k (wall at k+1 tasks) ==");
+    let mut csv = String::from("k,t16,t32,gain_32_over_16\n");
+    for k in [8u32, 16, 32] {
+        let wl_k = SimWorkload {
+            total_batches: 80,
+            minibatches_per_batch: k,
+            batches_per_epoch: 16,
+        };
+        let (p, s16, plan16) = cluster(16);
+        let t16 = simulate(wl_k, &p, &plan16, &s16, 42).unwrap().runtime;
+        let (_, s32, plan32) = cluster(32);
+        let t32 = simulate(wl_k, &p, &plan32, &s32, 42).unwrap().runtime;
+        let gain = t16 / t32;
+        println!("  k={k:>2}: t16 {:.1} min, t32 {:.1} min, 32-over-16 gain {gain:.2}x", t16 / 60.0, t32 / 60.0);
+        csv.push_str(&format!("{k},{t16:.1},{t32:.1},{gain:.3}\n"));
+    }
+    std::fs::write("bench_results/ablation_minibatch.csv", csv).unwrap();
+    println!("  (expected: larger k moves the wall right: bigger 32-worker gain)");
+
+    // ---- A3: visibility timeout (straggler re-issue) ------------------
+    println!("== A3: classroom visibility timeout ==");
+    let mut csv = String::from("visibility,runtime,duplicate_maps\n");
+    for vis in [1.0f64, 3.0, 10.0, 60.0] {
+        let (mut p, speeds, plan) = profiles::classroom(32);
+        p.visibility_timeout = vis;
+        let r = simulate(wl, &p, &plan, &speeds, 42).unwrap();
+        let dup = r.maps_done - 1280;
+        println!(
+            "  vis {vis:>5.1}s: runtime {:>6.1}s, duplicate maps {dup}",
+            r.runtime
+        );
+        csv.push_str(&format!("{vis},{:.2},{dup}\n", r.runtime));
+    }
+    std::fs::write("bench_results/ablation_visibility.csv", csv).unwrap();
+    println!("  (expected: too-short = duplicate-work overhead; too-long = stragglers unmitigated)");
+
+    // ---- A4: churn overhead ------------------------------------------
+    println!("== A4: churn (fraction of 32 volunteers leaving mid-run) ==");
+    let mut csv = String::from("leavers,runtime\n");
+    let (p, speeds, _) = profiles::classroom(32);
+    for leavers in [0usize, 4, 8, 16, 24] {
+        let plan = FaultPlan::departure(32, leavers, 120.0);
+        let r = simulate(wl, &p, &plan, &speeds, 42).unwrap();
+        println!("  {leavers:>2} leave @120s: runtime {:>7.1}s  requeues {}", r.runtime, r.requeues);
+        csv.push_str(&format!("{leavers},{:.2}\n", r.runtime));
+    }
+    std::fs::write("bench_results/ablation_churn.csv", csv).unwrap();
+    println!("csvs -> bench_results/ablation_*.csv");
+}

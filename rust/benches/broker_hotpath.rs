@@ -1,0 +1,141 @@
+//! L3 micro-benchmarks — the coordinator hot path (criterion is
+//! unavailable offline; this is a hand-rolled timing harness with warmup
+//! + best-of-N, which is enough to steer the §Perf optimization loop):
+//!   B1 broker publish/consume/ack cycle (in-process)
+//!   B2 wire frame encode/decode
+//!   B3 task + gradient codecs (55k-float payloads)
+//!   B4 TCP roundtrip (loopback)
+//!   B5 snapshot/restore of a loaded broker
+//!
+//! Run: cargo bench --bench broker_hotpath
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jsdoop::coordinator::task::{BatchRef, GradResult, Task};
+use jsdoop::data::Store;
+use jsdoop::queue::broker::Broker;
+use jsdoop::queue::client::RemoteQueue;
+use jsdoop::queue::server::serve;
+use jsdoop::queue::QueueApi;
+
+fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let mut best = f64::MAX;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        best = best.min(per);
+    }
+    let (v, unit) = if best < 1e-6 {
+        (best * 1e9, "ns")
+    } else if best < 1e-3 {
+        (best * 1e6, "us")
+    } else {
+        (best * 1e3, "ms")
+    };
+    println!("  {name:<44} {v:>9.2} {unit}/op");
+    best
+}
+
+fn main() {
+    println!("== B1: in-process broker cycle ==");
+    let broker = Broker::new(Duration::from_secs(60));
+    broker.declare("q").unwrap();
+    let payload = vec![7u8; 21]; // task-sized
+    bench("publish+consume+ack (21 B)", 20_000, || {
+        broker.publish("q", &payload).unwrap();
+        let d = broker.consume("q", Duration::from_millis(1)).unwrap().unwrap();
+        broker.ack("q", d.tag).unwrap();
+    });
+    let grad_payload = vec![0u8; 20 + 54998 * 4]; // gradient-sized
+    bench("publish+consume+ack (220 KB gradient)", 2_000, || {
+        broker.publish("q", &grad_payload).unwrap();
+        let d = broker.consume("q", Duration::from_millis(1)).unwrap().unwrap();
+        broker.ack("q", d.tag).unwrap();
+    });
+
+    println!("== B2: wire framing ==");
+    let mut buf = Vec::with_capacity(grad_payload.len() + 16);
+    bench("write_frame (220 KB)", 5_000, || {
+        buf.clear();
+        jsdoop::queue::wire::write_frame(&mut buf, 2, &grad_payload).unwrap();
+    });
+    let mut frame = Vec::new();
+    jsdoop::queue::wire::write_frame(&mut frame, 2, &grad_payload).unwrap();
+    bench("read_frame (220 KB)", 5_000, || {
+        let (_, body) = jsdoop::queue::wire::read_frame(&mut &frame[..]).unwrap();
+        std::hint::black_box(body.len());
+    });
+
+    println!("== B3: codecs ==");
+    let task = Task::Map {
+        batch_ref: BatchRef { epoch: 3, batch: 9 },
+        minibatch: 7,
+        model_version: 57,
+    };
+    bench("task encode+decode", 200_000, || {
+        let b = task.encode();
+        std::hint::black_box(Task::decode(&b).unwrap());
+    });
+    let grad = GradResult {
+        batch_ref: BatchRef { epoch: 1, batch: 2 },
+        minibatch: 3,
+        loss: 4.58,
+        grads: vec![0.001; 54_998],
+    };
+    bench("gradient encode (55k f32)", 2_000, || {
+        std::hint::black_box(grad.encode().len());
+    });
+    let gbytes = grad.encode();
+    bench("gradient decode (55k f32)", 2_000, || {
+        std::hint::black_box(GradResult::decode(&gbytes).unwrap().grads.len());
+    });
+
+    println!("== B4: TCP loopback roundtrip ==");
+    let h = serve(
+        "127.0.0.1:0",
+        Arc::new(Broker::new(Duration::from_secs(60))),
+        Arc::new(Store::new()),
+    )
+    .unwrap();
+    let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
+    q.declare("r").unwrap();
+    bench("remote publish+consume+ack (21 B)", 3_000, || {
+        q.publish("r", &payload).unwrap();
+        let d = q.consume("r", Duration::from_millis(100)).unwrap().unwrap();
+        q.ack("r", d.tag).unwrap();
+    });
+    bench("remote publish+consume+ack (220 KB)", 500, || {
+        q.publish("r", &grad_payload).unwrap();
+        let d = q.consume("r", Duration::from_millis(500)).unwrap().unwrap();
+        q.ack("r", d.tag).unwrap();
+    });
+    h.shutdown();
+
+    println!("== B5: broker snapshot/restore (1280 tasks + 80 grads) ==");
+    let b2 = Broker::new(Duration::from_secs(60));
+    b2.declare("tasks").unwrap();
+    for _ in 0..1280 {
+        b2.publish("tasks", &payload).unwrap();
+    }
+    b2.declare("grads").unwrap();
+    for _ in 0..80 {
+        b2.publish("grads", &grad_payload).unwrap();
+    }
+    bench("snapshot (18 MB state)", 50, || {
+        std::hint::black_box(b2.snapshot().len());
+    });
+    let snap = b2.snapshot();
+    bench("restore (18 MB state)", 50, || {
+        std::hint::black_box(
+            Broker::restore(&snap, Duration::from_secs(60)).unwrap().total_ready(),
+        );
+    });
+}

@@ -1,0 +1,49 @@
+//! E1 / Figure 4 — "Runtime on a cluster of computers": parallel runtime
+//! for 1..32 workers vs the ideal (linear) runtime, on the calibrated
+//! cluster profile. Regenerates the paper's figure as an ASCII chart +
+//! CSV (bench_results/fig4_runtime.csv).
+//!
+//! Run: cargo bench --bench fig4_runtime
+
+use jsdoop::metrics::{render_series, series_csv};
+use jsdoop::profiles;
+use jsdoop::util::prng::Rng;
+use jsdoop::volunteer::sim::{simulate, SimWorkload};
+
+pub const WORKER_COUNTS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+pub fn cluster_runtimes() -> Vec<(usize, f64)> {
+    WORKER_COUNTS
+        .iter()
+        .map(|&w| {
+            let mut rng = Rng::new(42);
+            let (params, speeds, plan) = profiles::cluster(w, &mut rng);
+            let r = simulate(SimWorkload::paper(), &params, &plan, &speeds, 42).unwrap();
+            (w, r.runtime)
+        })
+        .collect()
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let points = cluster_runtimes();
+    let t1 = points[0].1;
+    // Ideal: linear scaling of the 1-worker runtime (paper's solid line).
+    let ideal = |w: usize| t1 / w as f64;
+    let minutes: Vec<(usize, f64)> = points.iter().map(|(w, t)| (*w, t / 60.0)).collect();
+    println!(
+        "{}",
+        render_series("Fig 4 — runtime on a cluster (minutes)", "runtime", &minutes, |w| {
+            ideal(w) / 60.0
+        })
+    );
+    std::fs::create_dir_all("bench_results").unwrap();
+    std::fs::write("bench_results/fig4_runtime.csv", series_csv(&points, ideal)).unwrap();
+    println!("csv -> bench_results/fig4_runtime.csv");
+    println!("paper shape check: runtime monotonically decreasing, 32 ~ 16 (sync wall)");
+    let dec = points.windows(2).all(|p| p[1].1 < p[0].1);
+    let wall = points[5].1 > points[4].1 * 0.6;
+    println!("  monotone: {dec}   wall(32 vs 16 within 40%): {wall}");
+    assert!(dec && wall, "figure shape regressed");
+    println!("bench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

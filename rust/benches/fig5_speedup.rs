@@ -1,0 +1,46 @@
+//! E2 / Figure 5 — "Relative speedup on a cluster of computers": speedup
+//! vs the 1-worker distributed runtime (Foster's relative speedup). The
+//! paper's headline shape: SUPERLINEAR for 2..16 (slow-first node
+//! assignment + cache effect), sublinear at 32 (the 16-minibatch sync
+//! wall).
+//!
+//! Run: cargo bench --bench fig5_speedup
+
+use jsdoop::metrics::{render_series, series_csv, speedup};
+use jsdoop::profiles;
+use jsdoop::util::prng::Rng;
+use jsdoop::volunteer::sim::{simulate, SimWorkload};
+
+const WORKER_COUNTS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+fn main() {
+    let runtimes: Vec<(usize, f64)> = WORKER_COUNTS
+        .iter()
+        .map(|&w| {
+            let mut rng = Rng::new(42);
+            let (params, speeds, plan) = profiles::cluster(w, &mut rng);
+            let r = simulate(SimWorkload::paper(), &params, &plan, &speeds, 42).unwrap();
+            (w, r.runtime)
+        })
+        .collect();
+    let t1 = runtimes[0].1;
+    let points: Vec<(usize, f64)> = runtimes.iter().map(|(w, t)| (*w, speedup(t1, *t))).collect();
+    println!(
+        "{}",
+        render_series("Fig 5 — relative speedup on a cluster", "speedup", &points, |w| w as f64)
+    );
+    std::fs::create_dir_all("bench_results").unwrap();
+    std::fs::write(
+        "bench_results/fig5_speedup.csv",
+        series_csv(&points, |w| w as f64),
+    )
+    .unwrap();
+    println!("csv -> bench_results/fig5_speedup.csv");
+
+    // Paper shape assertions.
+    let s = |w: usize| points.iter().find(|(x, _)| *x == w).unwrap().1;
+    let superlinear = [2usize, 4, 8, 16].iter().all(|&w| s(w) > w as f64);
+    let sublinear32 = s(32) < 32.0;
+    println!("  superlinear 2..16: {superlinear}   sublinear @32: {sublinear32}");
+    assert!(superlinear && sublinear32, "figure shape regressed");
+}

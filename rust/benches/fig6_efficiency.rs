@@ -1,0 +1,42 @@
+//! E3 / Figure 6 — "Relative efficiency on a cluster of computers":
+//! efficiency = speedup / workers. Paper shape: > 1 for 2..16 workers
+//! (superlinear region), < 1 at 32 (synchronization).
+//!
+//! Run: cargo bench --bench fig6_efficiency
+
+use jsdoop::metrics::{efficiency, render_series, series_csv};
+use jsdoop::profiles;
+use jsdoop::util::prng::Rng;
+use jsdoop::volunteer::sim::{simulate, SimWorkload};
+
+const WORKER_COUNTS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+fn main() {
+    let runtimes: Vec<(usize, f64)> = WORKER_COUNTS
+        .iter()
+        .map(|&w| {
+            let mut rng = Rng::new(42);
+            let (params, speeds, plan) = profiles::cluster(w, &mut rng);
+            let r = simulate(SimWorkload::paper(), &params, &plan, &speeds, 42).unwrap();
+            (w, r.runtime)
+        })
+        .collect();
+    let t1 = runtimes[0].1;
+    let points: Vec<(usize, f64)> = runtimes
+        .iter()
+        .map(|(w, t)| (*w, efficiency(t1, *t, *w)))
+        .collect();
+    println!(
+        "{}",
+        render_series("Fig 6 — relative efficiency on a cluster", "efficiency", &points, |_| 1.0)
+    );
+    std::fs::create_dir_all("bench_results").unwrap();
+    std::fs::write("bench_results/fig6_efficiency.csv", series_csv(&points, |_| 1.0)).unwrap();
+    println!("csv -> bench_results/fig6_efficiency.csv");
+
+    let e = |w: usize| points.iter().find(|(x, _)| *x == w).unwrap().1;
+    let above_one = [2usize, 4, 8, 16].iter().all(|&w| e(w) > 1.0);
+    let below_one_32 = e(32) < 1.0;
+    println!("  efficiency > 1 for 2..16: {above_one}   < 1 @32: {below_one_32}");
+    assert!(above_one && below_one_32, "figure shape regressed");
+}

@@ -1,0 +1,43 @@
+//! E5 / Figure 7 — "Timeline of JSDoop-classroom-sync-start with 32
+//! volunteers": per-volunteer Gantt of Compute (map) and Accumulate
+//! (reduce) spans, receipt -> completion. Emits the ASCII Gantt and the
+//! raw spans CSV (bench_results/fig7_timeline.csv).
+//!
+//! Paper shape: all volunteers busy computing most of the time; the
+//! accumulate tasks are sparse and evenly spread across volunteers.
+//!
+//! Run: cargo bench --bench fig7_timeline
+
+use jsdoop::metrics::SpanKind;
+use jsdoop::profiles;
+use jsdoop::volunteer::sim::{simulate, SimWorkload};
+
+fn main() {
+    let (params, speeds, plan) = profiles::classroom(32);
+    let r = simulate(SimWorkload::paper(), &params, &plan, &speeds, 42).unwrap();
+    println!("{}", r.timeline.render_gantt(100));
+    std::fs::create_dir_all("bench_results").unwrap();
+    std::fs::write("bench_results/fig7_timeline.csv", r.timeline.to_csv()).unwrap();
+    println!("csv -> bench_results/fig7_timeline.csv");
+
+    // Shape checks: every volunteer worked, and accumulates are spread
+    // over many volunteers (paper: "tasks (e.g., Accumulate) are evenly
+    // distributed").
+    let spans = r.timeline.spans();
+    let workers_used: std::collections::HashSet<usize> =
+        spans.iter().map(|s| s.worker).collect();
+    let reducers: std::collections::HashSet<usize> = spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Accumulate)
+        .map(|s| s.worker)
+        .collect();
+    println!(
+        "volunteers active: {}/32   distinct reducers: {}   reduces: {}",
+        workers_used.len(),
+        reducers.len(),
+        r.reduces_done
+    );
+    assert_eq!(workers_used.len(), 32, "every volunteer should compute");
+    assert!(reducers.len() >= 8, "accumulates should spread across volunteers");
+    assert_eq!(r.reduces_done, 80);
+}

@@ -1,0 +1,92 @@
+//! E6 / Figure 8 — "Absolute speedup": distributed runtimes versus the
+//! *sequential* baselines (Foster's absolute speedup), for both reference
+//! points the paper uses:
+//!   - TFJS-Sequential-128: full-batch sequential training (fast: no
+//!     queue/DataServer overhead, one optimizer step per 128 samples)
+//!   - TFJS-Sequential-8: minibatch-8 sequential training (slow: 16x more
+//!     optimizer steps, each with fixed per-update overhead)
+//!
+//! Sequential runtimes are modeled with the same calibration family as
+//! the distributed profiles (constants below, documented in
+//! EXPERIMENTS.md E6): a per-sample compute cost on a classroom-class
+//! machine plus a per-update overhead. Paper shape: absolute speedups are
+//! SUBLINEAR everywhere; TFJS-128 beats most distributed configurations;
+//! distributed with >= 16 volunteers decisively beats TFJS-8.
+//!
+//! Run: cargo bench --bench fig8_absolute
+
+use jsdoop::metrics::{render_series, series_csv, speedup};
+use jsdoop::profiles;
+use jsdoop::util::prng::Rng;
+use jsdoop::volunteer::sim::{simulate, SimWorkload};
+
+const WORKER_COUNTS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Sequential model (classroom-class machine, speed ~3.2):
+/// per-sample fwd+bwd cost and per-optimizer-update overhead, seconds.
+const T_SAMPLE: f64 = 0.028;
+const T_UPDATE_OVERHEAD: f64 = 0.9;
+
+fn sequential_runtime(batch: usize) -> f64 {
+    let samples = 2048 * 5;
+    let updates = samples / batch;
+    samples as f64 * T_SAMPLE + updates as f64 * T_UPDATE_OVERHEAD
+}
+
+fn main() {
+    let seq128 = sequential_runtime(128);
+    let seq8 = sequential_runtime(8);
+    println!(
+        "modeled sequential runtimes: TFJS-128 {:.1} min, TFJS-8 {:.1} min",
+        seq128 / 60.0,
+        seq8 / 60.0
+    );
+
+    let cluster: Vec<(usize, f64)> = WORKER_COUNTS
+        .iter()
+        .map(|&w| {
+            let mut rng = Rng::new(42);
+            let (params, speeds, plan) = profiles::cluster(w, &mut rng);
+            (w, simulate(SimWorkload::paper(), &params, &plan, &speeds, 42).unwrap().runtime)
+        })
+        .collect();
+
+    let vs128: Vec<(usize, f64)> = cluster.iter().map(|(w, t)| (*w, speedup(seq128, *t))).collect();
+    let vs8: Vec<(usize, f64)> = cluster.iter().map(|(w, t)| (*w, speedup(seq8, *t))).collect();
+    println!(
+        "{}",
+        render_series("Fig 8a — absolute speedup vs TFJS-Sequential-128", "speedup", &vs128, |w| w as f64)
+    );
+    println!(
+        "{}",
+        render_series("Fig 8b — absolute speedup vs TFJS-Sequential-8", "speedup", &vs8, |w| w as f64)
+    );
+
+    // Classroom points (paper overlays them).
+    for w in [16usize, 32] {
+        let (params, speeds, plan) = profiles::classroom(w);
+        let t = simulate(SimWorkload::paper(), &params, &plan, &speeds, 42).unwrap().runtime;
+        println!(
+            "classroom-{w}: {:.1} min | speedup vs TFJS-128 {:.2} | vs TFJS-8 {:.2}",
+            t / 60.0,
+            speedup(seq128, t),
+            speedup(seq8, t)
+        );
+    }
+
+    std::fs::create_dir_all("bench_results").unwrap();
+    std::fs::write("bench_results/fig8_vs_seq128.csv", series_csv(&vs128, |w| w as f64)).unwrap();
+    std::fs::write("bench_results/fig8_vs_seq8.csv", series_csv(&vs8, |w| w as f64)).unwrap();
+    println!("csv -> bench_results/fig8_vs_seq{{128,8}}.csv");
+
+    // Shape assertions (paper §V.C).
+    let all_sublinear = vs128.iter().chain(vs8.iter()).all(|(w, s)| s < &(*w as f64));
+    let seq128_beats_cluster = vs128.iter().all(|(_, s)| *s < 1.0);
+    let (params, speeds, plan) = profiles::classroom(32);
+    let cl32 = simulate(SimWorkload::paper(), &params, &plan, &speeds, 42).unwrap().runtime;
+    let dist_beats_seq8 = speedup(seq8, cl32) > 1.0;
+    println!(
+        "  sublinear everywhere: {all_sublinear}   TFJS-128 beats cluster: {seq128_beats_cluster}   classroom-32 beats TFJS-8: {dist_beats_seq8}"
+    );
+    assert!(all_sublinear && seq128_beats_cluster && dist_beats_seq8, "figure shape regressed");
+}

@@ -1,0 +1,163 @@
+//! E4 / Table 4 — "Distributed and sequential training": the full table.
+//!
+//! Runtime column: calibrated simulation (paper-scale minutes) for every
+//! row. Loss column: REAL training through the PJRT engine on a scaled
+//! schedule (artifacts pin seq_len=40/minibatch=8; we shrink epochs x
+//! batches so the bench stays fast) — by the E9 determinism property the
+//! distributed loss is identical for every worker count, which is
+//! exactly the paper's observation ("the loss ... is the same in all
+//! cases"), so one real distributed run provides the loss for all rows.
+//!
+//! Run: cargo bench --bench table4_full      (set JSDOOP_TABLE4_FAST=1 to
+//! skip the real-loss runs when artifacts are unavailable)
+
+use jsdoop::baseline;
+use jsdoop::coordinator::ProblemSpec;
+use jsdoop::driver;
+use jsdoop::faults::FaultPlan;
+use jsdoop::metrics::{render_table4, RunResult};
+use jsdoop::profiles;
+use jsdoop::runtime::Engine;
+use jsdoop::util::prng::Rng;
+use jsdoop::volunteer::sim::{simulate, SimWorkload};
+
+fn sim_runtime(profile: &str, workers: usize) -> f64 {
+    let mut rng = Rng::new(42);
+    let (params, speeds, plan) = match profile {
+        "cluster" => profiles::cluster(workers, &mut rng),
+        "classroom" => profiles::classroom(workers),
+        "classroom-async" => profiles::classroom_async(workers, &mut rng),
+        _ => unreachable!(),
+    };
+    simulate(SimWorkload::paper(), &params, &plan, &speeds, 42).unwrap().runtime
+}
+
+/// Modeled sequential runtimes (same constants as fig8_absolute).
+fn seq_runtime(batch: usize) -> f64 {
+    let samples = 2048 * 5;
+    (samples as f64) * 0.028 + (samples / batch) as f64 * 0.9
+}
+
+struct RealLosses {
+    distributed: f64,
+    seq128: f64,
+    seq8: f64,
+}
+
+fn real_losses() -> Option<RealLosses> {
+    if std::env::var("JSDOOP_TABLE4_FAST").is_ok() {
+        return None;
+    }
+    let dir = jsdoop::runtime::default_artifact_dir();
+    if !dir.join("model_meta.json").exists() {
+        eprintln!("(artifacts missing; loss column = n/a)");
+        return None;
+    }
+    let engine = Engine::load_shared(&dir).ok()?;
+    let mut cfg = jsdoop::config::Config::default();
+    cfg.artifact_dir = dir.clone();
+    // Scaled schedule: 2 epochs x 4 batches of 128 (PJRT-real compute).
+    cfg.examples_per_epoch = 512;
+    cfg.epochs = 2;
+    cfg.task_poll_timeout_secs = 0.1;
+    cfg.validate().unwrap();
+    let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
+    let corpus = driver::load_corpus(&cfg).ok()?;
+    let init = engine.meta().load_init_params(&dir).ok()?;
+
+    let out = driver::run_local(&cfg, &engine, &FaultPlan::sync_start(4), &[1.0; 4]).ok()?;
+    let full = baseline::train_sequential_full(&engine, &corpus, &spec, init.clone()).ok()?;
+    let mini = baseline::train_sequential_mini(&engine, &corpus, &spec, init).ok()?;
+    let eval_full = driver::eval_final_loss(&engine, &corpus, &spec, &full.snapshot.params).ok()?;
+    let eval_mini = driver::eval_final_loss(&engine, &corpus, &spec, &mini.snapshot.params).ok()?;
+    Some(RealLosses {
+        distributed: out.final_loss as f64,
+        seq128: eval_full as f64,
+        seq8: eval_mini as f64,
+    })
+}
+
+fn main() {
+    let losses = real_losses();
+    let dl = losses.as_ref().map(|l| l.distributed);
+    let mut rows = Vec::new();
+    for w in [1usize, 2, 4, 8, 16, 32] {
+        rows.push(RunResult {
+            system: "JSDoop-cluster".into(),
+            workers: w,
+            runtime_secs: sim_runtime("cluster", w),
+            final_loss: dl,
+        });
+    }
+    rows.push(RunResult {
+        system: "JSDoop-classroom-sync-start".into(),
+        workers: 16,
+        runtime_secs: sim_runtime("classroom", 16),
+        final_loss: dl,
+    });
+    rows.push(RunResult {
+        system: "JSDoop-classroom-sync-start".into(),
+        workers: 32,
+        runtime_secs: sim_runtime("classroom", 32),
+        final_loss: dl,
+    });
+    rows.push(RunResult {
+        system: "JSDoop-classroom-async-start".into(),
+        workers: 32,
+        runtime_secs: sim_runtime("classroom-async", 32),
+        final_loss: dl,
+    });
+    rows.push(RunResult {
+        system: "TFJS-Sequential-128".into(),
+        workers: 1,
+        runtime_secs: seq_runtime(128),
+        final_loss: losses.as_ref().map(|l| l.seq128),
+    });
+    rows.push(RunResult {
+        system: "TFJS-Sequential-8".into(),
+        workers: 1,
+        runtime_secs: seq_runtime(8),
+        final_loss: losses.as_ref().map(|l| l.seq8),
+    });
+
+    println!("{}", render_table4(&rows));
+    std::fs::create_dir_all("bench_results").unwrap();
+    let mut csv = String::from("system,workers,runtime_min,loss\n");
+    for r in &rows {
+        csv.push_str(&format!(
+            "{},{},{:.2},{}\n",
+            r.system,
+            r.workers,
+            r.runtime_secs / 60.0,
+            r.final_loss.map(|l| format!("{l:.4}")).unwrap_or_default()
+        ));
+    }
+    std::fs::write("bench_results/table4.csv", csv).unwrap();
+    println!("csv -> bench_results/table4.csv");
+
+    // Shape checks (paper Table 4):
+    let rt = |sys: &str, w: usize| {
+        rows.iter()
+            .find(|r| r.system == sys && r.workers == w)
+            .unwrap()
+            .runtime_secs
+    };
+    assert!(rt("JSDoop-cluster", 1) > rt("JSDoop-cluster", 32));
+    assert!(rt("JSDoop-classroom-sync-start", 32) < rt("JSDoop-cluster", 32));
+    assert!(rt("JSDoop-classroom-async-start", 32) >= rt("JSDoop-classroom-sync-start", 32) * 0.95);
+    assert!(rt("TFJS-Sequential-128", 1) < rt("JSDoop-classroom-sync-start", 32));
+    assert!(rt("TFJS-Sequential-8", 1) > rt("JSDoop-classroom-sync-start", 32));
+    if let Some(l) = &losses {
+        // Distributed == sequential-128 regime (~ same loss). The paper's
+        // "seq-8 loss much worse (12.7)" only emerges at full scale (6400
+        // small-batch updates at lr 0.1 diverge; our scaled bench does
+        // 128) — the full-scale comparison lives in examples/e2e_train
+        // and EXPERIMENTS.md E4.
+        assert!((l.distributed - l.seq128).abs() < 0.35, "{} vs {}", l.distributed, l.seq128);
+        println!(
+            "losses: distributed {:.3} == seq128 {:.3} (E9); seq8 {:.3} (scale-dependent, see EXPERIMENTS.md)",
+            l.distributed, l.seq128, l.seq8
+        );
+    }
+    println!("table shape OK");
+}

@@ -1,0 +1,147 @@
+//! Sequential baselines (S19, paper §V.C): the same model trained without
+//! JSDoop — "we used TensorFlow.js on a single browser" — here: the PJRT
+//! engine driven by a plain loop.
+//!
+//! - [`train_sequential_full`]: TFJS-Sequential-128 (one B=128 gradient +
+//!   update per batch).
+//! - [`train_sequential_mini`]: TFJS-Sequential-8 (one B=8 gradient +
+//!   update per minibatch — 16x more updates, different optimization
+//!   problem; the paper expects a worse loss).
+//! - [`train_accumulated`]: the distributed algorithm run serially (16
+//!   minibatch gradients, mean in index order, one update) — the oracle
+//!   for the determinism property: a JSDoop run with ANY worker count
+//!   must produce bit-identical parameters to this.
+
+use anyhow::Result;
+
+use crate::coordinator::ProblemSpec;
+use crate::model::{GradAccumulator, ModelSnapshot};
+use crate::runtime::{Engine, GRAD_STEP_B128, GRAD_STEP_B8};
+use crate::textdata::Corpus;
+
+/// Outcome of a sequential training run.
+#[derive(Debug, Clone)]
+pub struct SeqOutcome {
+    pub snapshot: ModelSnapshot,
+    /// Mean training loss observed during the final epoch.
+    pub last_epoch_mean_loss: f32,
+    pub updates: u64,
+}
+
+/// TFJS-Sequential-128: full-batch gradient + RMSprop update per batch.
+pub fn train_sequential_full(
+    engine: &Engine,
+    corpus: &Corpus,
+    spec: &ProblemSpec,
+    init_params: Vec<f32>,
+) -> Result<SeqOutcome> {
+    let s = &spec.schedule;
+    let mut snap = ModelSnapshot::initial(init_params);
+    let mut losses = Vec::new();
+    for epoch in 0..s.epochs {
+        for b in 0..s.batches_per_epoch() {
+            let (x, y) = s.batch(corpus, epoch, b);
+            // The B=128 artifact is shape-specialized; for scaled-down test
+            // schedules compute the batch gradient as the mean of minibatch
+            // gradients (identical math: mean of equal-sized means).
+            let (grads, loss) = if y.len() == engine.meta().full_batch {
+                engine.grad_step(GRAD_STEP_B128, &snap.params, &x, &y)?
+            } else {
+                let k = s.minibatches_per_batch();
+                let mut acc = GradAccumulator::new(k);
+                let mut l = 0.0f32;
+                for m in 0..k {
+                    let (mx, my) = s.minibatch(corpus, epoch, b, m);
+                    let (g, lm) = engine.grad_step(GRAD_STEP_B8, &snap.params, &mx, &my)?;
+                    acc.insert(m, g)?;
+                    l += lm / k as f32;
+                }
+                (acc.fold()?, l)
+            };
+            let (p, ms) =
+                engine.rmsprop_update(&snap.params, &snap.ms, &grads, spec.learning_rate)?;
+            snap.params = p;
+            snap.ms = ms;
+            snap.version += 1;
+            if epoch == s.epochs - 1 {
+                losses.push(loss);
+            }
+        }
+    }
+    Ok(finish(snap, losses))
+}
+
+/// TFJS-Sequential-8: minibatch gradient + update per minibatch.
+pub fn train_sequential_mini(
+    engine: &Engine,
+    corpus: &Corpus,
+    spec: &ProblemSpec,
+    init_params: Vec<f32>,
+) -> Result<SeqOutcome> {
+    let s = &spec.schedule;
+    let mut snap = ModelSnapshot::initial(init_params);
+    let mut losses = Vec::new();
+    for epoch in 0..s.epochs {
+        for b in 0..s.batches_per_epoch() {
+            for m in 0..s.minibatches_per_batch() {
+                let (x, y) = s.minibatch(corpus, epoch, b, m);
+                let (grads, loss) = engine.grad_step(GRAD_STEP_B8, &snap.params, &x, &y)?;
+                let (p, ms) =
+                    engine.rmsprop_update(&snap.params, &snap.ms, &grads, spec.learning_rate)?;
+                snap.params = p;
+                snap.ms = ms;
+                snap.version += 1;
+                if epoch == s.epochs - 1 {
+                    losses.push(loss);
+                }
+            }
+        }
+    }
+    Ok(finish(snap, losses))
+}
+
+/// The distributed algorithm executed serially: 16 minibatch gradients,
+/// fold (mean, index order), one update per batch — the determinism
+/// oracle for E9.
+pub fn train_accumulated(
+    engine: &Engine,
+    corpus: &Corpus,
+    spec: &ProblemSpec,
+    init_params: Vec<f32>,
+) -> Result<SeqOutcome> {
+    let s = &spec.schedule;
+    let k = s.minibatches_per_batch();
+    let mut snap = ModelSnapshot::initial(init_params);
+    let mut losses = Vec::new();
+    for epoch in 0..s.epochs {
+        for b in 0..s.batches_per_epoch() {
+            let mut acc = GradAccumulator::new(k);
+            let mut batch_loss = 0.0f32;
+            for m in 0..k {
+                let (x, y) = s.minibatch(corpus, epoch, b, m);
+                let (grads, loss) = engine.grad_step(GRAD_STEP_B8, &snap.params, &x, &y)?;
+                acc.insert(m, grads)?;
+                batch_loss += loss / k as f32;
+            }
+            let folded = acc.fold()?;
+            let (p, ms) =
+                engine.rmsprop_update(&snap.params, &snap.ms, &folded, spec.learning_rate)?;
+            snap.params = p;
+            snap.ms = ms;
+            snap.version += 1;
+            if epoch == s.epochs - 1 {
+                losses.push(batch_loss);
+            }
+        }
+    }
+    Ok(finish(snap, losses))
+}
+
+fn finish(snap: ModelSnapshot, losses: Vec<f32>) -> SeqOutcome {
+    let mean = if losses.is_empty() {
+        f32::NAN
+    } else {
+        losses.iter().sum::<f32>() / losses.len() as f32
+    };
+    SeqOutcome { updates: snap.version, snapshot: snap, last_epoch_mean_loss: mean }
+}

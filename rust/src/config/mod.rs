@@ -1,0 +1,225 @@
+//! Configuration system (S15): typed experiment config with defaults
+//! matching the paper's Tables 2-3, loadable from a `key = value` file and
+//! overridable with `--key=value` CLI flags (in that precedence order).
+//!
+//! Example file (see `examples/configs/paper.conf`):
+//! ```text
+//! # training
+//! batch_size = 128
+//! epochs = 5
+//! learning_rate = 0.1
+//! workers = 16
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::textdata::Schedule;
+
+/// Everything a run needs. `Default` = the paper's configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    // Table 2
+    pub batch_size: usize,
+    pub examples_per_epoch: usize,
+    pub learning_rate: f32,
+    pub epochs: usize,
+    pub seq_len: usize,
+    // Table 3
+    pub minibatch_size: usize,
+    // Topology / runtime
+    pub workers: usize,
+    pub queue_addr: Option<String>, // None = in-process broker
+    pub data_addr: Option<String>,  // None = in-process store
+    pub artifact_dir: PathBuf,
+    pub visibility_timeout_secs: f64,
+    pub task_poll_timeout_secs: f64,
+    // Corpus
+    pub corpus_file: Option<PathBuf>,
+    pub corpus_seed: u64,
+    pub corpus_len: usize,
+    // Reproducibility / simulation
+    pub seed: u64,
+    pub timeline_out: Option<PathBuf>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            batch_size: 128,
+            examples_per_epoch: 2048,
+            learning_rate: 0.1,
+            epochs: 5,
+            seq_len: 40,
+            minibatch_size: 8,
+            workers: 4,
+            queue_addr: None,
+            data_addr: None,
+            artifact_dir: crate::runtime::default_artifact_dir(),
+            visibility_timeout_secs: 120.0,
+            task_poll_timeout_secs: 5.0,
+            corpus_file: None,
+            corpus_seed: 1234,
+            corpus_len: 200_000,
+            seed: 42,
+            timeline_out: None,
+        }
+    }
+}
+
+impl Config {
+    pub fn schedule(&self) -> Schedule {
+        Schedule {
+            seq_len: self.seq_len,
+            batch_size: self.batch_size,
+            minibatch_size: self.minibatch_size,
+            examples_per_epoch: self.examples_per_epoch,
+            epochs: self.epochs,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.schedule().validate()?;
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if !(self.learning_rate > 0.0) {
+            bail!("learning_rate must be positive");
+        }
+        if self.visibility_timeout_secs <= 0.0 {
+            bail!("visibility_timeout_secs must be positive");
+        }
+        Ok(())
+    }
+
+    /// Parse a `key = value` file ('#' comments, blank lines ok).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        let mut cfg = Config::default();
+        cfg.apply_pairs(parse_pairs(&text)?)?;
+        Ok(cfg)
+    }
+
+    /// Apply `--key=value` CLI overrides (unknown keys are errors).
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<Vec<String>> {
+        let mut rest = Vec::new();
+        let mut pairs = BTreeMap::new();
+        for a in args {
+            if let Some(kv) = a.strip_prefix("--") {
+                match kv.split_once('=') {
+                    Some((k, v)) => {
+                        pairs.insert(k.replace('-', "_"), v.to_string());
+                    }
+                    None => bail!("flag '{a}' needs =value"),
+                }
+            } else {
+                rest.push(a.clone());
+            }
+        }
+        self.apply_pairs(pairs)?;
+        Ok(rest)
+    }
+
+    fn apply_pairs(&mut self, pairs: BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in pairs {
+            self.set(&k, &v)?;
+        }
+        Ok(())
+    }
+
+    /// Set one field by name.
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        fn p<T: std::str::FromStr>(key: &str, v: &str) -> Result<T> {
+            v.parse()
+                .map_err(|_| anyhow::anyhow!("bad value '{v}' for {key}"))
+        }
+        match key {
+            "batch_size" => self.batch_size = p(key, val)?,
+            "examples_per_epoch" => self.examples_per_epoch = p(key, val)?,
+            "learning_rate" => self.learning_rate = p(key, val)?,
+            "epochs" => self.epochs = p(key, val)?,
+            "seq_len" => self.seq_len = p(key, val)?,
+            "minibatch_size" => self.minibatch_size = p(key, val)?,
+            "workers" => self.workers = p(key, val)?,
+            "queue_addr" => self.queue_addr = Some(val.to_string()),
+            "data_addr" => self.data_addr = Some(val.to_string()),
+            "artifact_dir" => self.artifact_dir = PathBuf::from(val),
+            "visibility_timeout_secs" => self.visibility_timeout_secs = p(key, val)?,
+            "task_poll_timeout_secs" => self.task_poll_timeout_secs = p(key, val)?,
+            "corpus_file" => self.corpus_file = Some(PathBuf::from(val)),
+            "corpus_seed" => self.corpus_seed = p(key, val)?,
+            "corpus_len" => self.corpus_len = p(key, val)?,
+            "seed" => self.seed = p(key, val)?,
+            "timeline_out" => self.timeline_out = Some(PathBuf::from(val)),
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+}
+
+fn parse_pairs(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("config line {} is not key = value: {raw:?}", lineno + 1);
+        };
+        out.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_config() {
+        let c = Config::default();
+        c.validate().unwrap();
+        assert_eq!(c.batch_size, 128);
+        assert_eq!(c.epochs, 5);
+        assert_eq!(c.schedule().total_map_tasks(), 1280);
+    }
+
+    #[test]
+    fn parse_pairs_and_comments() {
+        let pairs = parse_pairs("a = 1\n# comment\n\nb= x  # trailing\n").unwrap();
+        assert_eq!(pairs["a"], "1");
+        assert_eq!(pairs["b"], "x");
+        assert!(parse_pairs("no_equals_here\n").is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = Config::default();
+        let rest = c
+            .apply_cli(&[
+                "--workers=32".into(),
+                "--learning-rate=0.05".into(),
+                "positional".into(),
+            ])
+            .unwrap();
+        assert_eq!(c.workers, 32);
+        assert_eq!(c.learning_rate, 0.05);
+        assert_eq!(rest, vec!["positional"]);
+        assert!(c.apply_cli(&["--nope=1".into()]).is_err());
+        assert!(c.apply_cli(&["--workers".into()]).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad() {
+        let mut c = Config::default();
+        c.workers = 0;
+        assert!(c.validate().is_err());
+        let mut c2 = Config::default();
+        c2.learning_rate = -1.0;
+        assert!(c2.validate().is_err());
+    }
+}

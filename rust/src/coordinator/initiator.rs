@@ -1,0 +1,169 @@
+//! The Initiator (S3, paper §IV.B + §IV.F steps 0-1): configures the
+//! DataServer, divides the problem into map/reduce tasks, and uploads them
+//! to the QueueServer. "From then on, the Initiator does not participate
+//! again in the solution of the problem."
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::task::{BatchRef, Task};
+use crate::coordinator::version::publish_model;
+use crate::coordinator::{keys, queues, ProblemSpec};
+use crate::data::DataApi;
+use crate::model::ModelSnapshot;
+use crate::queue::QueueApi;
+use crate::textdata::Corpus;
+
+/// Result of problem setup (for logging / asserts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SetupSummary {
+    pub map_tasks: usize,
+    pub reduce_tasks: usize,
+    pub total_versions: u64,
+}
+
+/// Step 0-1: upload corpus + initial model + spec to the DataServer,
+/// declare all queues, enqueue every task in batch order (maps of batch k,
+/// then reduce of batch k — the paper's InitialQueue layout).
+pub fn setup_problem(
+    queue: &dyn QueueApi,
+    data: &dyn DataApi,
+    spec: &ProblemSpec,
+    corpus: &Corpus,
+    init_params: Vec<f32>,
+) -> Result<SetupSummary> {
+    spec.schedule.validate()?;
+    if corpus.len() < spec.schedule.seq_len + 2 {
+        bail!("corpus shorter than one sample");
+    }
+
+    // DataServer: problem descriptor, corpus, model v0.
+    data.put(keys::PROBLEM, &spec.encode())?;
+    data.put(keys::CORPUS, &corpus.to_bytes())?;
+    data.del(keys::STOP)?;
+    publish_model(data, &ModelSnapshot::initial(init_params))?;
+
+    // QueueServer: the InitialQueue + one results queue per batch.
+    queue.declare(queues::TASKS)?;
+
+    let s = &spec.schedule;
+    let k = s.minibatches_per_batch() as u32;
+    let mut map_tasks = 0usize;
+    let mut reduce_tasks = 0usize;
+    for epoch in 0..s.epochs as u32 {
+        for batch in 0..s.batches_per_epoch() as u32 {
+            let bref = BatchRef { epoch, batch };
+            let version = bref.global_index(s.batches_per_epoch() as u32);
+            queue.declare(&queues::map_results(bref))?;
+            // Priority = batch order (maps before their reduce): the
+            // queue serves earliest-batch work first no matter how tasks
+            // re-enter it (redelivery, hand-back) — the deadlock-freedom
+            // backbone, see coordinator/mod.rs.
+            for minibatch in 0..k {
+                let t = Task::Map { batch_ref: bref, minibatch, model_version: version };
+                queue.publish_pri(queues::TASKS, &t.encode(), version * 2)?;
+                map_tasks += 1;
+            }
+            let t = Task::Reduce { batch_ref: bref, num_minibatches: k, model_version: version };
+            queue.publish_pri(queues::TASKS, &t.encode(), version * 2 + 1)?;
+            reduce_tasks += 1;
+        }
+    }
+    Ok(SetupSummary {
+        map_tasks,
+        reduce_tasks,
+        total_versions: spec.total_versions(),
+    })
+}
+
+/// Fetch the problem + corpus a volunteer needs (§IV.F step 2: "a program
+/// is executed in background" — this is its bootstrap).
+pub fn fetch_problem(data: &dyn DataApi) -> Result<(ProblemSpec, Corpus)> {
+    let spec_bytes = data
+        .get(keys::PROBLEM)?
+        .ok_or_else(|| anyhow::anyhow!("no problem published"))?;
+    let spec = ProblemSpec::decode(&spec_bytes)?;
+    let corpus_bytes = data
+        .get(keys::CORPUS)?
+        .ok_or_else(|| anyhow::anyhow!("no corpus published"))?;
+    let corpus = Corpus::from_bytes(&corpus_bytes)?;
+    Ok((spec, corpus))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Store;
+    use crate::queue::broker::Broker;
+    use crate::queue::QueueApi;
+    use crate::textdata::Schedule;
+    use std::time::Duration;
+
+    fn tiny_setup() -> (Broker, Store, SetupSummary) {
+        let broker = Broker::with_default_timeout();
+        let store = Store::new();
+        let spec = ProblemSpec { schedule: Schedule::tiny(), learning_rate: 0.1 };
+        let corpus = Corpus::synthetic_js(1, 2000);
+        let summary =
+            setup_problem(&broker, &store, &spec, &corpus, vec![0.0; 16]).unwrap();
+        (broker, store, summary)
+    }
+
+    #[test]
+    fn setup_counts_match_schedule() {
+        let (broker, _store, summary) = tiny_setup();
+        // tiny: 32 examples / 16 batch = 2 batches/epoch, 1 epoch,
+        // 16/8 = 2 minibatches per batch.
+        assert_eq!(summary.map_tasks, 4);
+        assert_eq!(summary.reduce_tasks, 2);
+        assert_eq!(summary.total_versions, 2);
+        assert_eq!(broker.len(queues::TASKS).unwrap(), 6);
+    }
+
+    #[test]
+    fn queue_order_is_maps_then_reduce_per_batch() {
+        let (broker, _store, _s) = tiny_setup();
+        let mut kinds = Vec::new();
+        while let Some(d) = broker
+            .consume(queues::TASKS, Duration::from_millis(1))
+            .unwrap()
+        {
+            let t = Task::decode(&d.payload).unwrap();
+            kinds.push((t.kind_str(), t.model_version()));
+            broker.ack(queues::TASKS, d.tag).unwrap();
+        }
+        assert_eq!(
+            kinds,
+            vec![
+                ("map", 0),
+                ("map", 0),
+                ("reduce", 0),
+                ("map", 1),
+                ("map", 1),
+                ("reduce", 1)
+            ]
+        );
+    }
+
+    #[test]
+    fn volunteer_bootstrap_roundtrip() {
+        let (_broker, store, _s) = tiny_setup();
+        let (spec, corpus) = fetch_problem(&store).unwrap();
+        assert_eq!(spec.schedule, Schedule::tiny());
+        assert_eq!(corpus.len(), 2000);
+        // Model v0 is live.
+        let v = crate::coordinator::version::current_version(&store).unwrap();
+        assert_eq!(v, Some(0));
+    }
+
+    #[test]
+    fn setup_rejects_tiny_corpus() {
+        let broker = Broker::with_default_timeout();
+        let store = Store::new();
+        let spec = ProblemSpec { schedule: Schedule::tiny(), learning_rate: 0.1 };
+        let corpus = Corpus::from_encoded(vec![0u8; 300]).unwrap();
+        // seq_len 40 fits in 300; shrink corpus below sample size via spec:
+        let mut bad = spec;
+        bad.schedule.seq_len = 299;
+        assert!(setup_problem(&broker, &store, &bad, &corpus, vec![]).is_err());
+    }
+}

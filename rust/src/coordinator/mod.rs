@@ -1,0 +1,123 @@
+//! The JSDoop coordination layer (S3-S5): problem setup (Initiator),
+//! execution flow over queues, and the model-version synchronization
+//! protocol of paper §IV.G.
+//!
+//! Layout of the distributed training problem (paper Fig 3):
+//!
+//! ```text
+//!  tasks            = [ map(b0,0..16), reduce(b0), map(b1,0..16), ... ]   FIFO
+//!  results.map.<b>  = gradients published by map tasks of batch b
+//!  DataServer: "problem" (spec), "corpus", "model" (versioned snapshot)
+//! ```
+//!
+//! Both task kinds share ONE FIFO queue, exactly like the paper's
+//! `InitialQueue`: with in-order consumption this guarantees the reduce of
+//! batch k is claimed before any map of batch k+1, which (together with
+//! redelivery-to-front) makes the protocol deadlock-free for any number of
+//! volunteers >= 1 (proved by the property tests).
+
+pub mod initiator;
+pub mod task;
+pub mod version;
+
+use anyhow::{bail, Result};
+
+use crate::textdata::Schedule;
+
+/// Queue names (paper §IV.D: "different specialized queues").
+pub mod queues {
+    use super::task::BatchRef;
+
+    /// The InitialQueue: interleaved map + reduce tasks.
+    pub const TASKS: &str = "tasks";
+
+    /// MapResultsQueue, one per batch so a slow straggler from batch k
+    /// can never contaminate batch k+1.
+    pub fn map_results(b: BatchRef) -> String {
+        format!("results.map.e{}.b{}", b.epoch, b.batch)
+    }
+}
+
+/// DataServer keys.
+pub mod keys {
+    /// Versioned model snapshot (the parameter server).
+    pub const MODEL: &str = "model";
+    /// Encoded corpus blob.
+    pub const CORPUS: &str = "corpus";
+    /// Encoded [`ProblemSpec`].
+    pub const PROBLEM: &str = "problem";
+    /// Cooperative stop flag (volunteers poll it between tasks).
+    pub const STOP: &str = "stop";
+    /// Progress counter: completed reduce tasks.
+    pub const REDUCES_DONE: &str = "ctr.reduces";
+}
+
+/// Everything a volunteer needs to know about the problem — the stand-in
+/// for the JavaScript the paper's WebServer ships to the browser.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProblemSpec {
+    pub schedule: Schedule,
+    pub learning_rate: f32,
+}
+
+impl ProblemSpec {
+    pub fn total_versions(&self) -> u64 {
+        self.schedule.total_batches() as u64
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let s = &self.schedule;
+        let mut b = Vec::with_capacity(44);
+        for v in [
+            s.seq_len as u64,
+            s.batch_size as u64,
+            s.minibatch_size as u64,
+            s.examples_per_epoch as u64,
+            s.epochs as u64,
+        ] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.extend_from_slice(&self.learning_rate.to_le_bytes());
+        b
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Self> {
+        if b.len() != 44 {
+            bail!("problem spec must be 44 bytes, got {}", b.len());
+        }
+        let u = |i: usize| u64::from_le_bytes(b[i..i + 8].try_into().unwrap()) as usize;
+        let spec = ProblemSpec {
+            schedule: Schedule {
+                seq_len: u(0),
+                batch_size: u(8),
+                minibatch_size: u(16),
+                examples_per_epoch: u(24),
+                epochs: u(32),
+            },
+            learning_rate: f32::from_le_bytes(b[40..44].try_into().unwrap()),
+        };
+        spec.schedule.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problem_spec_roundtrip() {
+        let spec = ProblemSpec { schedule: Schedule::paper(), learning_rate: 0.1 };
+        let d = ProblemSpec::decode(&spec.encode()).unwrap();
+        assert_eq!(d, spec);
+        assert_eq!(d.total_versions(), 80);
+    }
+
+    #[test]
+    fn problem_spec_rejects_bad() {
+        assert!(ProblemSpec::decode(&[0; 10]).is_err());
+        let mut spec = ProblemSpec { schedule: Schedule::paper(), learning_rate: 0.1 };
+        spec.schedule.minibatch_size = 3; // doesn't divide 128
+        assert!(ProblemSpec::decode(&spec.encode()).is_err());
+    }
+}

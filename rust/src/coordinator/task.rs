@@ -1,0 +1,211 @@
+//! Task model (paper §IV.F): the Initiator divides training into *map*
+//! tasks (compute one minibatch gradient against model version v) and
+//! *reduce* tasks (accumulate the batch's minibatch gradients, update the
+//! model v -> v+1). Tasks and results are plain byte payloads on the queue
+//! — volunteers need no a-priori knowledge beyond the task codec, exactly
+//! like the paper's browser workers downloading task code + params.
+
+use anyhow::{bail, Result};
+
+use crate::util::{f32_from_le_bytes, f32_to_le_bytes};
+
+/// Position of a batch in the training run. `global_index = epoch * batches_per_epoch + batch`
+/// doubles as the model version the batch's map tasks require.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BatchRef {
+    pub epoch: u32,
+    pub batch: u32,
+}
+
+impl BatchRef {
+    pub fn global_index(&self, batches_per_epoch: u32) -> u64 {
+        self.epoch as u64 * batches_per_epoch as u64 + self.batch as u64
+    }
+}
+
+/// A unit of volunteer work.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Task {
+    /// Compute the gradient of minibatch `minibatch` of `batch_ref` against
+    /// model version `model_version`; publish a `GradResult`.
+    Map {
+        batch_ref: BatchRef,
+        minibatch: u32,
+        model_version: u64,
+    },
+    /// Collect `num_minibatches` gradients for `batch_ref`, fold them in
+    /// index order, RMSprop-update model `model_version` -> `+1`.
+    Reduce {
+        batch_ref: BatchRef,
+        num_minibatches: u32,
+        model_version: u64,
+    },
+}
+
+const TAG_MAP: u8 = 1;
+const TAG_REDUCE: u8 = 2;
+
+impl Task {
+    pub fn model_version(&self) -> u64 {
+        match self {
+            Task::Map { model_version, .. } | Task::Reduce { model_version, .. } => *model_version,
+        }
+    }
+
+    pub fn batch_ref(&self) -> BatchRef {
+        match self {
+            Task::Map { batch_ref, .. } | Task::Reduce { batch_ref, .. } => *batch_ref,
+        }
+    }
+
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            Task::Map { .. } => "map",
+            Task::Reduce { .. } => "reduce",
+        }
+    }
+
+    /// Compact fixed-layout binary codec (wire + queue payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(25);
+        match self {
+            Task::Map { batch_ref, minibatch, model_version } => {
+                b.push(TAG_MAP);
+                b.extend_from_slice(&batch_ref.epoch.to_le_bytes());
+                b.extend_from_slice(&batch_ref.batch.to_le_bytes());
+                b.extend_from_slice(&minibatch.to_le_bytes());
+                b.extend_from_slice(&model_version.to_le_bytes());
+            }
+            Task::Reduce { batch_ref, num_minibatches, model_version } => {
+                b.push(TAG_REDUCE);
+                b.extend_from_slice(&batch_ref.epoch.to_le_bytes());
+                b.extend_from_slice(&batch_ref.batch.to_le_bytes());
+                b.extend_from_slice(&num_minibatches.to_le_bytes());
+                b.extend_from_slice(&model_version.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Task> {
+        if b.len() != 21 {
+            bail!("task payload must be 21 bytes, got {}", b.len());
+        }
+        let u32at = |i: usize| u32::from_le_bytes(b[i..i + 4].try_into().unwrap());
+        let u64at = |i: usize| u64::from_le_bytes(b[i..i + 8].try_into().unwrap());
+        let batch_ref = BatchRef { epoch: u32at(1), batch: u32at(5) };
+        match b[0] {
+            TAG_MAP => Ok(Task::Map {
+                batch_ref,
+                minibatch: u32at(9),
+                model_version: u64at(13),
+            }),
+            TAG_REDUCE => Ok(Task::Reduce {
+                batch_ref,
+                num_minibatches: u32at(9),
+                model_version: u64at(13),
+            }),
+            t => bail!("unknown task tag {t}"),
+        }
+    }
+}
+
+/// Result of a map task, published to the batch's results queue.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GradResult {
+    pub batch_ref: BatchRef,
+    pub minibatch: u32,
+    pub loss: f32,
+    pub grads: Vec<f32>,
+}
+
+impl GradResult {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(20 + self.grads.len() * 4);
+        b.extend_from_slice(&self.batch_ref.epoch.to_le_bytes());
+        b.extend_from_slice(&self.batch_ref.batch.to_le_bytes());
+        b.extend_from_slice(&self.minibatch.to_le_bytes());
+        b.extend_from_slice(&self.loss.to_le_bytes());
+        b.extend_from_slice(&(self.grads.len() as u32).to_le_bytes());
+        b.extend_from_slice(&f32_to_le_bytes(&self.grads));
+        b
+    }
+
+    pub fn decode(b: &[u8]) -> Result<GradResult> {
+        if b.len() < 20 {
+            bail!("grad result too short");
+        }
+        let u32at = |i: usize| u32::from_le_bytes(b[i..i + 4].try_into().unwrap());
+        let n = u32at(16) as usize;
+        if b.len() != 20 + n * 4 {
+            bail!("grad result length mismatch");
+        }
+        Ok(GradResult {
+            batch_ref: BatchRef { epoch: u32at(0), batch: u32at(4) },
+            minibatch: u32at(8),
+            loss: f32::from_le_bytes(b[12..16].try_into().unwrap()),
+            grads: f32_from_le_bytes(&b[20..]),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_codec_roundtrip() {
+        let tasks = [
+            Task::Map {
+                batch_ref: BatchRef { epoch: 3, batch: 11 },
+                minibatch: 7,
+                model_version: 59,
+            },
+            Task::Reduce {
+                batch_ref: BatchRef { epoch: 0, batch: 0 },
+                num_minibatches: 16,
+                model_version: 0,
+            },
+        ];
+        for t in tasks {
+            assert_eq!(Task::decode(&t.encode()).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn task_decode_rejects_garbage() {
+        assert!(Task::decode(&[]).is_err());
+        assert!(Task::decode(&[9; 21]).is_err());
+        assert!(Task::decode(&[1; 20]).is_err());
+    }
+
+    #[test]
+    fn grad_result_roundtrip() {
+        let g = GradResult {
+            batch_ref: BatchRef { epoch: 1, batch: 2 },
+            minibatch: 5,
+            loss: 4.58,
+            grads: vec![0.25, -1.5, 3.0],
+        };
+        assert_eq!(GradResult::decode(&g.encode()).unwrap(), g);
+    }
+
+    #[test]
+    fn grad_result_rejects_truncation() {
+        let g = GradResult {
+            batch_ref: BatchRef { epoch: 0, batch: 0 },
+            minibatch: 0,
+            loss: 0.0,
+            grads: vec![1.0],
+        };
+        let mut b = g.encode();
+        b.pop();
+        assert!(GradResult::decode(&b).is_err());
+    }
+
+    #[test]
+    fn global_index() {
+        let b = BatchRef { epoch: 2, batch: 3 };
+        assert_eq!(b.global_index(16), 35);
+    }
+}

@@ -1,0 +1,122 @@
+//! Model-version synchronization protocol (S5, paper §IV.G):
+//!
+//! "The NN model is stored and shared in the DataServer, and it is updated
+//! after each reduce task. The NN model has an ID identifying the model
+//! version. Each map task has an ID that identifies the version of the
+//! model to which the calculation of the gradients is to be made. If the
+//! required version is not yet available, the task waits."
+//!
+//! Thin, typed wrappers over [`DataApi`] keeping the snapshot codec and
+//! key names in one place.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::keys;
+use crate::data::DataApi;
+use crate::model::ModelSnapshot;
+
+/// Publish model version `snapshot.version` (idempotent: versions only
+/// move forward, so duplicate reduce executions are harmless).
+pub fn publish_model(data: &dyn DataApi, snapshot: &ModelSnapshot) -> Result<()> {
+    data.put_versioned(keys::MODEL, snapshot.version, &snapshot.to_bytes())
+}
+
+/// Current model version, if any.
+pub fn current_version(data: &dyn DataApi) -> Result<Option<u64>> {
+    Ok(data.get_versioned(keys::MODEL)?.map(|v| v.version))
+}
+
+/// Fetch the newest snapshot.
+pub fn get_model(data: &dyn DataApi) -> Result<Option<ModelSnapshot>> {
+    match data.get_versioned(keys::MODEL)? {
+        Some(v) => Ok(Some(ModelSnapshot::from_bytes(&v.bytes)?)),
+        None => Ok(None),
+    }
+}
+
+/// Block until the model reaches at least `version` (the map-task wait).
+/// Returns the snapshot actually stored (its version may be newer; the
+/// caller decides whether that matters — for gradient computation the
+/// paper pins the exact version, so [`wait_exact_model`] checks).
+pub fn wait_model(
+    data: &dyn DataApi,
+    version: u64,
+    timeout: Duration,
+) -> Result<Option<ModelSnapshot>> {
+    match data.wait_version(keys::MODEL, version, timeout)? {
+        Some(v) => Ok(Some(ModelSnapshot::from_bytes(&v.bytes)?)),
+        None => Ok(None),
+    }
+}
+
+/// Wait for exactly `version`; errors if the server has already advanced
+/// past it (the task is stale — its batch was completed by someone else,
+/// which can only happen after duplicate delivery).
+pub fn wait_exact_model(
+    data: &dyn DataApi,
+    version: u64,
+    timeout: Duration,
+) -> Result<Option<ModelSnapshot>> {
+    match wait_model(data, version, timeout)? {
+        None => Ok(None),
+        Some(s) if s.version == version => Ok(Some(s)),
+        Some(s) => Err(anyhow!(
+            "model advanced past v{version} (at v{}): task is stale",
+            s.version
+        )),
+    }
+}
+
+/// Cooperative stop flag (classroom scenario 3: volunteers dismissed).
+pub fn request_stop(data: &dyn DataApi) -> Result<()> {
+    data.put(keys::STOP, &[1])
+}
+
+pub fn stop_requested(data: &dyn DataApi) -> Result<bool> {
+    Ok(data.get(keys::STOP)?.map(|v| v == [1]).unwrap_or(false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Store;
+
+    #[test]
+    fn publish_and_wait() {
+        let s = Store::new();
+        assert_eq!(current_version(&s).unwrap(), None);
+        let snap = ModelSnapshot { version: 0, params: vec![1.0], ms: vec![0.0] };
+        publish_model(&s, &snap).unwrap();
+        assert_eq!(current_version(&s).unwrap(), Some(0));
+        let got = wait_model(&s, 0, Duration::from_millis(5)).unwrap().unwrap();
+        assert_eq!(got, snap);
+        assert!(wait_model(&s, 1, Duration::from_millis(5)).unwrap().is_none());
+    }
+
+    #[test]
+    fn stale_version_detected() {
+        let s = Store::new();
+        publish_model(&s, &ModelSnapshot { version: 7, params: vec![], ms: vec![] }).unwrap();
+        assert!(wait_exact_model(&s, 7, Duration::from_millis(5)).unwrap().is_some());
+        assert!(wait_exact_model(&s, 3, Duration::from_millis(5)).is_err());
+    }
+
+    #[test]
+    fn duplicate_publish_keeps_newest() {
+        let s = Store::new();
+        publish_model(&s, &ModelSnapshot { version: 2, params: vec![2.0], ms: vec![0.0] }).unwrap();
+        publish_model(&s, &ModelSnapshot { version: 1, params: vec![1.0], ms: vec![0.0] }).unwrap();
+        let got = get_model(&s).unwrap().unwrap();
+        assert_eq!(got.version, 2);
+    }
+
+    #[test]
+    fn stop_flag() {
+        let s = Store::new();
+        assert!(!stop_requested(&s).unwrap());
+        request_stop(&s).unwrap();
+        assert!(stop_requested(&s).unwrap());
+    }
+}

@@ -1,0 +1,199 @@
+//! DataServer substrate (S2, paper §IV.E) — the Redis stand-in.
+//!
+//! JSDoop "does not care about the type of DataServer implementation ...
+//! just needs to know where the data is and how it can be accessed". The
+//! experiment uses it as (a) blob storage for the corpus, (b) the
+//! parameter server holding the versioned NN model, and (c) the
+//! synchronization primitive of §IV.G: "if the required version is not yet
+//! available, the task waits for updating of the NN model" —
+//! [`DataApi::wait_version`].
+//!
+//! [`Store`] is the in-process implementation; `queue::client::RemoteData`
+//! speaks the same API over TCP.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+/// Versioned value: plain KV entries have version 0; `put_versioned`
+/// stores (version, bytes) and only moves forward.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Versioned {
+    pub version: u64,
+    pub bytes: Vec<u8>,
+}
+
+/// The data operations JSDoop needs (CRUD + versioned blobs + waiting).
+pub trait DataApi: Send + Sync {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()>;
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>>;
+    fn del(&self, key: &str) -> Result<bool>;
+    /// Store (version, bytes); ignored if `version` <= the stored version
+    /// (idempotent against duplicate reduce executions).
+    fn put_versioned(&self, key: &str, version: u64, bytes: &[u8]) -> Result<()>;
+    fn get_versioned(&self, key: &str) -> Result<Option<Versioned>>;
+    /// Block until `key` reaches at least `min_version` (paper §IV.G map
+    /// task sync). `None` on timeout.
+    fn wait_version(&self, key: &str, min_version: u64, timeout: Duration)
+        -> Result<Option<Versioned>>;
+    /// Atomic counter increment; returns the new value (progress metrics).
+    fn incr(&self, key: &str) -> Result<u64>;
+}
+
+#[derive(Debug, Default)]
+struct StoreState {
+    kv: HashMap<String, Versioned>,
+    counters: HashMap<String, u64>,
+}
+
+/// In-process data server.
+#[derive(Default)]
+pub struct Store {
+    state: Mutex<StoreState>,
+    changed: Condvar,
+}
+
+impl Store {
+    pub fn new() -> Self {
+        Store::default()
+    }
+
+    /// Number of keys (admin).
+    pub fn num_keys(&self) -> usize {
+        self.state.lock().unwrap().kv.len()
+    }
+}
+
+impl DataApi for Store {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        st.kv.insert(key.to_string(), Versioned { version: 0, bytes: bytes.to_vec() });
+        drop(st);
+        self.changed.notify_all();
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        let st = self.state.lock().unwrap();
+        Ok(st.kv.get(key).map(|v| v.bytes.clone()))
+    }
+
+    fn del(&self, key: &str) -> Result<bool> {
+        let mut st = self.state.lock().unwrap();
+        Ok(st.kv.remove(key).is_some())
+    }
+
+    fn put_versioned(&self, key: &str, version: u64, bytes: &[u8]) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let advance = match st.kv.get(key) {
+            Some(v) => version > v.version,
+            None => true,
+        };
+        if advance {
+            st.kv.insert(key.to_string(), Versioned { version, bytes: bytes.to_vec() });
+            drop(st);
+            self.changed.notify_all();
+        }
+        Ok(())
+    }
+
+    fn get_versioned(&self, key: &str) -> Result<Option<Versioned>> {
+        let st = self.state.lock().unwrap();
+        Ok(st.kv.get(key).cloned())
+    }
+
+    fn wait_version(
+        &self,
+        key: &str,
+        min_version: u64,
+        timeout: Duration,
+    ) -> Result<Option<Versioned>> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.kv.get(key) {
+                if v.version >= min_version {
+                    return Ok(Some(v.clone()));
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, _) = self.changed.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    fn incr(&self, key: &str) -> Result<u64> {
+        let mut st = self.state.lock().unwrap();
+        let c = st.counters.entry(key.to_string()).or_insert(0);
+        *c += 1;
+        let v = *c;
+        drop(st);
+        self.changed.notify_all();
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn kv_crud() {
+        let s = Store::new();
+        assert_eq!(s.get("k").unwrap(), None);
+        s.put("k", b"v").unwrap();
+        assert_eq!(s.get("k").unwrap().unwrap(), b"v");
+        assert!(s.del("k").unwrap());
+        assert!(!s.del("k").unwrap());
+        assert_eq!(s.get("k").unwrap(), None);
+    }
+
+    #[test]
+    fn versioned_moves_forward_only() {
+        let s = Store::new();
+        s.put_versioned("m", 3, b"v3").unwrap();
+        s.put_versioned("m", 2, b"v2").unwrap(); // stale duplicate: ignored
+        let v = s.get_versioned("m").unwrap().unwrap();
+        assert_eq!(v.version, 3);
+        assert_eq!(v.bytes, b"v3");
+        s.put_versioned("m", 4, b"v4").unwrap();
+        assert_eq!(s.get_versioned("m").unwrap().unwrap().version, 4);
+    }
+
+    #[test]
+    fn wait_version_immediate_and_timeout() {
+        let s = Store::new();
+        s.put_versioned("m", 5, b"x").unwrap();
+        let v = s.wait_version("m", 5, Duration::from_millis(1)).unwrap();
+        assert_eq!(v.unwrap().version, 5);
+        let v = s.wait_version("m", 6, Duration::from_millis(10)).unwrap();
+        assert!(v.is_none());
+    }
+
+    #[test]
+    fn wait_version_wakes_on_put() {
+        let s = Arc::new(Store::new());
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || {
+            s2.wait_version("m", 1, Duration::from_secs(5)).unwrap().unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        s.put_versioned("m", 1, b"ready").unwrap();
+        let v = h.join().unwrap();
+        assert_eq!(v.bytes, b"ready");
+    }
+
+    #[test]
+    fn incr_counts() {
+        let s = Store::new();
+        assert_eq!(s.incr("c").unwrap(), 1);
+        assert_eq!(s.incr("c").unwrap(), 2);
+        assert_eq!(s.incr("d").unwrap(), 1);
+    }
+}

@@ -1,0 +1,139 @@
+//! End-to-end run drivers: wire Initiator + QueueServer + DataServer +
+//! volunteer fleet together for one distributed training run (the leader
+//! entrypoint used by the CLI, the examples, and the integration tests).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Config;
+use crate::coordinator::initiator::{setup_problem, SetupSummary};
+use crate::coordinator::version::{get_model, wait_model};
+use crate::coordinator::ProblemSpec;
+use crate::data::{DataApi, Store};
+use crate::faults::FaultPlan;
+use crate::metrics::Timeline;
+use crate::model::ModelSnapshot;
+use crate::queue::broker::Broker;
+use crate::queue::QueueApi;
+use crate::runtime::Engine;
+use crate::textdata::Corpus;
+use crate::volunteer::agent::AgentOptions;
+use crate::volunteer::pool::{run_pool, PoolOutcome};
+
+/// Outcome of one distributed run.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub setup: SetupSummary,
+    pub pool: PoolOutcome,
+    pub final_model: ModelSnapshot,
+    /// Mean eval loss over every batch of the final epoch.
+    pub final_loss: f32,
+    pub timeline: Timeline,
+}
+
+/// Build the corpus a config describes.
+pub fn load_corpus(cfg: &Config) -> Result<Corpus> {
+    match &cfg.corpus_file {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading corpus {path:?}"))?;
+            Corpus::from_text(&text)
+        }
+        None => Ok(Corpus::synthetic_js(cfg.corpus_seed, cfg.corpus_len)),
+    }
+}
+
+/// Evaluate the model on every batch of the last epoch (B=128 artifact).
+pub fn eval_final_loss(
+    engine: &Engine,
+    corpus: &Corpus,
+    spec: &ProblemSpec,
+    params: &[f32],
+) -> Result<f32> {
+    let s = &spec.schedule;
+    let epoch = s.epochs - 1;
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for b in 0..s.batches_per_epoch() {
+        // The eval artifact is shape-specialized to B=128; fall back to
+        // averaging map-batch losses when the schedule is smaller (tests).
+        let (x, y) = s.batch(corpus, epoch, b);
+        if y.len() == engine.meta().full_batch {
+            total += engine.eval_loss(params, &x, &y)? as f64;
+        } else {
+            let k = s.minibatches_per_batch();
+            let mut acc = 0.0f64;
+            for m in 0..k {
+                let (mx, my) = s.minibatch(corpus, epoch, b, m);
+                let (_, loss) =
+                    engine.grad_step(crate::runtime::GRAD_STEP_B8, params, &mx, &my)?;
+                acc += loss as f64;
+            }
+            total += acc / k as f64;
+        }
+        count += 1;
+    }
+    Ok((total / count.max(1) as f64) as f32)
+}
+
+/// Run a full distributed training locally: in-process broker + store,
+/// threaded volunteer fleet, real PJRT compute.
+pub fn run_local(
+    cfg: &Config,
+    engine: &Arc<Engine>,
+    plan: &FaultPlan,
+    speeds: &[f64],
+) -> Result<RunOutcome> {
+    cfg.validate()?;
+    let broker: Arc<Broker> = Arc::new(Broker::new(Duration::from_secs_f64(
+        cfg.visibility_timeout_secs,
+    )));
+    let store: Arc<Store> = Arc::new(Store::new());
+    run_with(cfg, engine, plan, speeds, broker, store)
+}
+
+/// Run with caller-provided broker/store (shared with a TCP server, or
+/// pre-seeded by a test).
+pub fn run_with(
+    cfg: &Config,
+    engine: &Arc<Engine>,
+    plan: &FaultPlan,
+    speeds: &[f64],
+    broker: Arc<Broker>,
+    store: Arc<Store>,
+) -> Result<RunOutcome> {
+    let corpus = load_corpus(cfg)?;
+    let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
+    let init = engine.meta().load_init_params(&cfg.artifact_dir)?;
+    let setup = setup_problem(broker.as_ref(), store.as_ref(), &spec, &corpus, init)?;
+
+    let timeline = Timeline::new();
+    let opts = AgentOptions {
+        poll: Duration::from_secs_f64(cfg.task_poll_timeout_secs.min(0.5)),
+        version_wait: Duration::from_secs_f64(cfg.visibility_timeout_secs / 4.0),
+        speed: 1.0,
+        t0: std::time::Instant::now(),
+    };
+    let broker_c = broker.clone();
+    let store_c = store.clone();
+    let conns = move |_i: usize| -> Result<(Arc<dyn QueueApi>, Arc<dyn DataApi>)> {
+        Ok((broker_c.clone() as Arc<dyn QueueApi>, store_c.clone() as Arc<dyn DataApi>))
+    };
+    let pool = run_pool(engine, &conns, plan, speeds, Some(&timeline), &opts)?;
+
+    // The fleet exits when the final version is live (or everyone left).
+    let final_model = wait_model(store.as_ref(), spec.total_versions(), Duration::from_secs(5))?
+        .or_else(|| get_model(store.as_ref()).ok().flatten())
+        .ok_or_else(|| anyhow!("no model produced"))?;
+    if final_model.version < spec.total_versions() {
+        return Err(anyhow!(
+            "training incomplete: version {}/{} (all volunteers left?)",
+            final_model.version,
+            spec.total_versions()
+        ));
+    }
+    let final_loss = eval_final_loss(engine, &corpus, &spec, &final_model.params)?;
+    Ok(RunOutcome { setup, pool, final_model, final_loss, timeline })
+}

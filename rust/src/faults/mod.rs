@@ -1,0 +1,147 @@
+//! Fault & churn injection (S10, paper §II.E / §VI): volunteers join and
+//! leave at will, freeze mid-task, or vanish silently. One [`FaultPlan`]
+//! drives both the real threaded worker pool (volunteer::pool) and the
+//! discrete-event simulator (volunteer::sim), so the same scenario can be
+//! exercised at both fidelities.
+//!
+//! Times are seconds relative to experiment start (virtual seconds in the
+//! simulator, wall seconds in real mode).
+
+use crate::util::prng::Rng;
+
+/// Per-worker lifecycle script.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerScript {
+    /// When the volunteer opens the page (0.0 = sync-start).
+    pub join_at: f64,
+    /// When the volunteer closes the tab (None = stays to the end).
+    pub leave_at: Option<f64>,
+    /// Freeze window [start, start+duration): the worker holds its task
+    /// without progress (paper: "if a volunteer freezes during the
+    /// resolution of a task, the task is added back to the queue").
+    pub freeze: Option<(f64, f64)>,
+}
+
+impl WorkerScript {
+    pub fn steady() -> Self {
+        WorkerScript { join_at: 0.0, leave_at: None, freeze: None }
+    }
+}
+
+/// The whole fleet's script.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub workers: Vec<WorkerScript>,
+}
+
+impl FaultPlan {
+    /// All workers present from t=0 to the end (paper: sync-start).
+    pub fn sync_start(n: usize) -> Self {
+        FaultPlan { workers: vec![WorkerScript::steady(); n] }
+    }
+
+    /// Volunteers trickle in (paper classroom scenario 1: "volunteers were
+    /// not connected at the same time, but gradually connected").
+    /// Joins are uniform over [0, spread_secs).
+    pub fn async_start(n: usize, spread_secs: f64, rng: &mut Rng) -> Self {
+        let mut workers: Vec<WorkerScript> = (0..n)
+            .map(|_| WorkerScript {
+                join_at: rng.range_f64(0.0, spread_secs),
+                leave_at: None,
+                freeze: None,
+            })
+            .collect();
+        // Someone must be first at ~0 so the experiment clock is honest.
+        if let Some(first) = workers.iter_mut().min_by(|a, b| a.join_at.total_cmp(&b.join_at)) {
+            first.join_at = 0.0;
+        }
+        FaultPlan { workers }
+    }
+
+    /// `leavers` workers close their tab at `at` (classroom scenario 3:
+    /// "we asked 16 volunteers to close their web browsers").
+    pub fn departure(n: usize, leavers: usize, at: f64) -> Self {
+        let mut plan = Self::sync_start(n);
+        for w in plan.workers.iter_mut().take(leavers) {
+            w.leave_at = Some(at);
+        }
+        plan
+    }
+
+    /// Random churn: each worker independently leaves with probability
+    /// `p_leave` at a uniform time in [0, horizon).
+    pub fn random_churn(n: usize, p_leave: f64, horizon: f64, rng: &mut Rng) -> Self {
+        let workers = (0..n)
+            .map(|_| WorkerScript {
+                join_at: 0.0,
+                leave_at: (rng.f64() < p_leave).then(|| rng.range_f64(0.0, horizon)),
+                freeze: None,
+            })
+            .collect();
+        FaultPlan { workers }
+    }
+
+    /// Inject a freeze into worker `w`.
+    pub fn with_freeze(mut self, w: usize, at: f64, dur: f64) -> Self {
+        if let Some(ws) = self.workers.get_mut(w) {
+            ws.freeze = Some((at, dur));
+        }
+        self
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Number of workers still present at time t.
+    pub fn alive_at(&self, t: f64) -> usize {
+        self.workers
+            .iter()
+            .filter(|w| w.join_at <= t && w.leave_at.map(|l| l > t).unwrap_or(true))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_start_all_alive() {
+        let p = FaultPlan::sync_start(8);
+        assert_eq!(p.n_workers(), 8);
+        assert_eq!(p.alive_at(0.0), 8);
+        assert_eq!(p.alive_at(1e9), 8);
+    }
+
+    #[test]
+    fn async_start_has_zero_first_join() {
+        let mut rng = Rng::new(9);
+        let p = FaultPlan::async_start(16, 60.0, &mut rng);
+        let min = p.workers.iter().map(|w| w.join_at).fold(f64::MAX, f64::min);
+        assert_eq!(min, 0.0);
+        assert!(p.alive_at(0.0) >= 1);
+        assert_eq!(p.alive_at(60.0), 16);
+    }
+
+    #[test]
+    fn departure_drops_half() {
+        let p = FaultPlan::departure(32, 16, 100.0);
+        assert_eq!(p.alive_at(50.0), 32);
+        assert_eq!(p.alive_at(150.0), 16);
+    }
+
+    #[test]
+    fn churn_is_deterministic_per_seed() {
+        let a = FaultPlan::random_churn(20, 0.5, 100.0, &mut Rng::new(3));
+        let b = FaultPlan::random_churn(20, 0.5, 100.0, &mut Rng::new(3));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn freeze_attaches() {
+        let p = FaultPlan::sync_start(2).with_freeze(1, 5.0, 10.0);
+        assert_eq!(p.workers[1].freeze, Some((5.0, 10.0)));
+        assert_eq!(p.workers[0].freeze, None);
+    }
+}

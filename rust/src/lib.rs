@@ -1,0 +1,34 @@
+//! # jsdoop — volunteer distributed NN training, reproduced in Rust+JAX+Pallas
+//!
+//! Reproduction of *"JSDoop and TensorFlow.js: Volunteer Distributed Web
+//! Browser-Based Neural Network Training"* (Morell, Camero, Alba — IEEE
+//! Access 2019, 10.1109/ACCESS.2019.2950287) as a three-layer stack:
+//!
+//! - **L3 (this crate)** — the JSDoop coordination system: queue broker
+//!   ([`queue`]), data server ([`data`]), initiator + execution flow
+//!   ([`coordinator`]), volunteer agents ([`volunteer`]), discrete-event
+//!   simulator ([`simclock`]), fault injection ([`faults`]), metrics
+//!   ([`metrics`]).
+//! - **L2/L1 (build-time Python)** — the char-RNN model (JAX) over fused
+//!   Pallas LSTM kernels, AOT-lowered to the HLO artifacts executed by
+//!   [`runtime`].
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every figure/table of the paper to a bench target.
+
+pub mod baseline;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod driver;
+pub mod faults;
+pub mod metrics;
+pub mod model;
+pub mod profiles;
+pub mod queue;
+pub mod runtime;
+pub mod simclock;
+pub mod testutil;
+pub mod textdata;
+pub mod util;
+pub mod volunteer;

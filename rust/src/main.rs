@@ -1,0 +1,299 @@
+//! `jsdoop` — leader CLI for the JSDoop reproduction.
+//!
+//! Subcommands:
+//!   smoke                         verify the PJRT bridge + artifacts
+//!   train [--workers=N ...]       distributed training, in-process fleet
+//!   seq [--variant=...]           sequential baselines (TFJS-Sequential-*)
+//!   sim [--profile=... --workers=N]  discrete-event experiment
+//!   serve [--addr=H:P]            host QueueServer + DataServer over TCP
+//!   init [--queue-addr --data-addr]  publish the problem to remote servers
+//!   volunteer [--queue-addr --data-addr --id=N]  remote volunteer process
+//!   generate [--model=path --chars=N --seed-text=...]  text-gen demo
+//!
+//! Flags double as config keys (see config/mod.rs); defaults are the
+//! paper's Tables 2-3.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use jsdoop::config::Config;
+use jsdoop::coordinator::initiator::setup_problem;
+use jsdoop::coordinator::ProblemSpec;
+use jsdoop::data::DataApi;
+use jsdoop::driver;
+use jsdoop::faults::FaultPlan;
+use jsdoop::metrics::{render_table4, RunResult};
+use jsdoop::queue::broker::Broker;
+use jsdoop::queue::client::{RemoteData, RemoteQueue};
+use jsdoop::runtime::Engine;
+use jsdoop::textdata::id_to_char;
+use jsdoop::util::prng::Rng;
+use jsdoop::volunteer::agent::{Agent, AgentOptions};
+use jsdoop::volunteer::sim::{simulate, SimParams, SimWorkload};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print_usage();
+        return Ok(());
+    };
+    let mut cfg = Config::default();
+    let rest = cfg.apply_cli(&argv[1..])?;
+    match cmd.as_str() {
+        "smoke" => smoke(&cfg),
+        "train" => train(&cfg),
+        "seq" => seq(&cfg, &rest),
+        "sim" => sim(&cfg, &rest),
+        "serve" => serve(&cfg, &rest),
+        "init" => init_remote(&cfg),
+        "volunteer" => volunteer(&cfg, &rest),
+        "generate" => generate(&cfg, &rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try 'jsdoop help')"),
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "jsdoop — volunteer distributed NN training (JSDoop reproduction)\n\
+         usage: jsdoop <smoke|train|seq|sim|serve|init|volunteer|generate> [--key=value ...]\n\
+         see rust/src/main.rs header and config/mod.rs for the flag set"
+    );
+}
+
+fn smoke(cfg: &Config) -> Result<()> {
+    let engine = Engine::load(&cfg.artifact_dir)?;
+    println!("platform    = {}", engine.platform());
+    println!("num_params  = {}", engine.meta().num_params);
+    let params = engine.meta().load_init_params(&cfg.artifact_dir)?;
+    let m = engine.meta();
+    let x: Vec<i32> = (0..m.map_batch * m.seq_len)
+        .map(|k| (((k / m.seq_len) * 7 + (k % m.seq_len) * 13) % m.vocab) as i32)
+        .collect();
+    let y: Vec<i32> = (0..m.map_batch).map(|i| ((i * 31 + 5) % m.vocab) as i32).collect();
+    let (grads, loss) = engine.grad_step(jsdoop::runtime::GRAD_STEP_B8, &params, &x, &y)?;
+    println!("loss        = {loss}");
+    let (p2, _) = engine.rmsprop_update(&params, &vec![0.0; params.len()], &grads, 0.1)?;
+    println!("updated[0]  = {}", p2[0]);
+    println!("smoke OK");
+    Ok(())
+}
+
+fn train(cfg: &Config) -> Result<()> {
+    cfg.validate()?;
+    let engine = Engine::load_shared(&cfg.artifact_dir)?;
+    let plan = FaultPlan::sync_start(cfg.workers);
+    let speeds = vec![1.0; cfg.workers];
+    println!(
+        "distributed training: {} workers, {} epochs x {} batches, lr {}",
+        cfg.workers,
+        cfg.epochs,
+        cfg.schedule().batches_per_epoch(),
+        cfg.learning_rate
+    );
+    let out = driver::run_local(cfg, &engine, &plan, &speeds)?;
+    println!(
+        "done in {:.1}s  (maps {}, reduces {})",
+        out.pool.runtime.as_secs_f64(),
+        out.pool.reports.iter().map(|r| r.maps_done).sum::<u64>(),
+        out.pool.reports.iter().map(|r| r.reduces_done).sum::<u64>(),
+    );
+    println!("final model version = {}", out.final_model.version);
+    println!("final eval loss     = {:.4}", out.final_loss);
+    if let Some(path) = &cfg.timeline_out {
+        std::fs::write(path, out.timeline.to_csv())?;
+        println!("timeline csv -> {path:?}");
+    }
+    Ok(())
+}
+
+fn seq(cfg: &Config, rest: &[String]) -> Result<()> {
+    cfg.validate()?;
+    let variant = rest.first().map(String::as_str).unwrap_or("full");
+    let engine = Engine::load(&cfg.artifact_dir)?;
+    let corpus = driver::load_corpus(cfg)?;
+    let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
+    let init = engine.meta().load_init_params(&cfg.artifact_dir)?;
+    let t0 = std::time::Instant::now();
+    let out = match variant {
+        "full" => jsdoop::baseline::train_sequential_full(&engine, &corpus, &spec, init)?,
+        "mini" => jsdoop::baseline::train_sequential_mini(&engine, &corpus, &spec, init)?,
+        "accumulated" => jsdoop::baseline::train_accumulated(&engine, &corpus, &spec, init)?,
+        v => bail!("unknown variant '{v}' (full|mini|accumulated)"),
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    let eval = driver::eval_final_loss(&engine, &corpus, &spec, &out.snapshot.params)?;
+    println!("TFJS-Sequential-{variant}: {} updates in {dt:.1}s", out.updates);
+    println!("last-epoch train loss = {:.4}", out.last_epoch_mean_loss);
+    println!("final eval loss       = {eval:.4}");
+    Ok(())
+}
+
+fn sim(cfg: &Config, rest: &[String]) -> Result<()> {
+    let profile = rest.first().map(String::as_str).unwrap_or("cluster");
+    let workers = cfg.workers;
+    let workload = SimWorkload {
+        total_batches: cfg.schedule().total_batches() as u64,
+        minibatches_per_batch: cfg.schedule().minibatches_per_batch() as u32,
+        batches_per_epoch: cfg.schedule().batches_per_epoch() as u32,
+    };
+    let mut rng = Rng::new(cfg.seed);
+    let (params, speeds, plan) = profiles::build(profile, workers, &mut rng)?;
+    let r = simulate(workload, &params, &plan, &speeds, cfg.seed)?;
+    println!(
+        "sim[{profile}] workers={workers}: runtime {:.1} min ({:.1} s), maps {}, reduces {}, requeues {}, cache hit {:.2}",
+        r.runtime / 60.0,
+        r.runtime,
+        r.maps_done,
+        r.reduces_done,
+        r.requeues,
+        r.cache_hit_rate
+    );
+    let rows = vec![RunResult {
+        system: format!("JSDoop-sim-{profile}"),
+        workers,
+        runtime_secs: r.runtime,
+        final_loss: None,
+    }];
+    println!("{}", render_table4(&rows));
+    if let Some(path) = &cfg.timeline_out {
+        std::fs::write(path, r.timeline.to_csv())?;
+        println!("timeline csv -> {path:?}");
+    }
+    Ok(())
+}
+
+fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
+    let addr = rest
+        .first()
+        .cloned()
+        .or_else(|| cfg.queue_addr.clone())
+        .unwrap_or_else(|| "127.0.0.1:7333".to_string());
+    let broker = Arc::new(Broker::new(Duration::from_secs_f64(cfg.visibility_timeout_secs)));
+    let store = Arc::new(jsdoop::data::Store::new());
+    let handle = jsdoop::queue::server::serve(&addr, broker, store)?;
+    println!("QueueServer+DataServer listening on {}", handle.addr);
+    println!("(send the Shutdown op or Ctrl-C to stop)");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn init_remote(cfg: &Config) -> Result<()> {
+    cfg.validate()?;
+    let qaddr = cfg.queue_addr.clone().context("--queue_addr required")?;
+    let daddr = cfg.data_addr.clone().unwrap_or_else(|| qaddr.clone());
+    let queue = RemoteQueue::connect(&qaddr)?;
+    let data = RemoteData::connect(&daddr)?;
+    let engine_meta = jsdoop::model::ModelMeta::load(&cfg.artifact_dir)?;
+    let init = engine_meta.load_init_params(&cfg.artifact_dir)?;
+    let corpus = driver::load_corpus(cfg)?;
+    let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
+    let summary = setup_problem(&queue, &data, &spec, &corpus, init)?;
+    println!(
+        "problem published: {} map + {} reduce tasks, {} model versions",
+        summary.map_tasks, summary.reduce_tasks, summary.total_versions
+    );
+    Ok(())
+}
+
+fn volunteer(cfg: &Config, rest: &[String]) -> Result<()> {
+    let qaddr = cfg.queue_addr.clone().context("--queue_addr required")?;
+    let daddr = cfg.data_addr.clone().unwrap_or_else(|| qaddr.clone());
+    let id: usize = rest.first().map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let engine = Engine::load(&cfg.artifact_dir)?;
+    let queue = RemoteQueue::connect(&qaddr)?;
+    let data = RemoteData::connect(&daddr)?;
+    let agent = Agent {
+        id,
+        engine: &engine,
+        queue: &queue,
+        data: &data,
+        timeline: None,
+        opts: AgentOptions {
+            poll: Duration::from_secs_f64(cfg.task_poll_timeout_secs.min(0.5)),
+            version_wait: Duration::from_secs_f64(cfg.visibility_timeout_secs / 4.0),
+            ..Default::default()
+        },
+    };
+    println!("volunteer {id} joined {qaddr}");
+    let quit = AtomicBool::new(false);
+    let report = agent.run(&quit)?;
+    println!(
+        "volunteer {id} done: maps {}, reduces {}, nacked {}, stale {}",
+        report.maps_done, report.reduces_done, report.tasks_nacked, report.stale_skipped
+    );
+    Ok(())
+}
+
+fn generate(cfg: &Config, rest: &[String]) -> Result<()> {
+    // Demo: sample text from a model snapshot (file written by examples /
+    // `train --timeline_out`-style runs) or from the initial weights.
+    let engine = Engine::load(&cfg.artifact_dir)?;
+    let params = match rest.first() {
+        Some(path) => {
+            let bytes = std::fs::read(path)?;
+            let snap = jsdoop::model::ModelSnapshot::from_bytes(&bytes)?;
+            println!("loaded model v{} from {path}", snap.version);
+            snap.params
+        }
+        None => engine.meta().load_init_params(&cfg.artifact_dir)?,
+    };
+    let corpus = driver::load_corpus(cfg)?;
+    let t = engine.meta().seq_len;
+    let mut window: Vec<i32> = corpus.ids()[..t].iter().map(|&c| c as i32).collect();
+    let mut rng = Rng::new(cfg.seed);
+    let mut out = String::new();
+    for _ in 0..400 {
+        let probs = engine.predict(&params, &window)?;
+        // Sample from the distribution (temperature 1).
+        let r = rng.f64() as f32;
+        let mut cum = 0.0f32;
+        let mut next = 0usize;
+        for (i, p) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= r {
+                next = i;
+                break;
+            }
+        }
+        out.push(id_to_char(next as u8) as char);
+        window.remove(0);
+        window.push(next as i32);
+    }
+    println!("--- generated ---\n{out}\n-----------------");
+    Ok(())
+}
+
+/// Simulation environment profiles (calibrations documented in
+/// EXPERIMENTS.md; shared with the benches via this module).
+pub mod profiles {
+    use super::*;
+
+    /// Build (params, speeds, plan) for a named profile.
+    pub fn build(
+        profile: &str,
+        workers: usize,
+        rng: &mut Rng,
+    ) -> Result<(SimParams, Vec<f64>, FaultPlan)> {
+        match profile {
+            "cluster" => Ok(jsdoop::profiles::cluster(workers, rng)),
+            "classroom" => Ok(jsdoop::profiles::classroom(workers)),
+            "classroom-async" => Ok(jsdoop::profiles::classroom_async(workers, rng)),
+            p => Err(anyhow!("unknown profile '{p}' (cluster|classroom|classroom-async)")),
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Metrics & reporting (S14): task timelines (Fig 7), runtime/speedup/
+//! efficiency aggregation (Figs 4-6, 8; Table 4), CSV + ASCII renderers
+//! used by the bench harness.
+//!
+//! The speedup/efficiency definitions follow Foster (the paper's [64]):
+//! *relative* speedup uses the 1-worker distributed runtime as baseline;
+//! *absolute* speedup uses the sequential algorithm's runtime.
+
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+/// What a worker was doing (Fig 7 legend: Compute = map/gradient,
+/// Accumulate = reduce/update).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Compute,
+    Accumulate,
+}
+
+impl SpanKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::Compute => "compute",
+            SpanKind::Accumulate => "accumulate",
+        }
+    }
+}
+
+/// One task execution on one worker, in experiment-relative seconds
+/// ("from the moment that a task is received to the time the task is
+/// completed" — paper Fig 7 caption).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub worker: usize,
+    pub kind: SpanKind,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Thread-safe span collector.
+#[derive(Debug, Default)]
+pub struct Timeline {
+    spans: Mutex<Vec<Span>>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Timeline::default()
+    }
+
+    pub fn record(&self, span: Span) {
+        debug_assert!(span.end >= span.start);
+        self.spans.lock().unwrap().push(span);
+    }
+
+    pub fn spans(&self) -> Vec<Span> {
+        let mut v = self.spans.lock().unwrap().clone();
+        v.sort_by(|a, b| a.start.total_cmp(&b.start));
+        v
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.lock().unwrap().is_empty()
+    }
+
+    /// Experiment makespan: max end over spans (Fig 4's "parallel runtime":
+    /// first start is 0 by construction).
+    pub fn makespan(&self) -> f64 {
+        self.spans
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.end)
+            .fold(0.0, f64::max)
+    }
+
+    /// Fraction of busy time spent computing vs accumulating, per worker.
+    pub fn busy_secs(&self, worker: usize) -> f64 {
+        self.spans
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.worker == worker)
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// CSV: worker,kind,start,end (Fig 7 data file).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("worker,kind,start,end\n");
+        for s in self.spans() {
+            let _ = writeln!(out, "{},{},{:.6},{:.6}", s.worker, s.kind.label(), s.start, s.end);
+        }
+        out
+    }
+
+    /// ASCII Gantt chart (Fig 7): one row per worker, '▒' compute,
+    /// '█' accumulate, '·' idle.
+    pub fn render_gantt(&self, width: usize) -> String {
+        let spans = self.spans();
+        if spans.is_empty() {
+            return String::from("(empty timeline)\n");
+        }
+        let t_end = self.makespan().max(1e-9);
+        let n_workers = spans.iter().map(|s| s.worker).max().unwrap() + 1;
+        let mut grid = vec![vec!['·'; width]; n_workers];
+        for s in &spans {
+            let a = ((s.start / t_end) * width as f64) as usize;
+            let b = (((s.end / t_end) * width as f64).ceil() as usize).min(width);
+            let ch = match s.kind {
+                SpanKind::Compute => '▒',
+                SpanKind::Accumulate => '█',
+            };
+            for cell in grid[s.worker].iter_mut().take(b).skip(a.min(width)) {
+                // Accumulate wins rendering conflicts (it is rarer).
+                if *cell != '█' {
+                    *cell = ch;
+                }
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "timeline 0 .. {:.1}s  (▒ compute, █ accumulate, · idle)",
+            t_end
+        );
+        for (w, row) in grid.iter().enumerate() {
+            let _ = writeln!(out, "w{:02} |{}|", w, row.iter().collect::<String>());
+        }
+        out
+    }
+}
+
+/// One experiment outcome (a row of Table 4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunResult {
+    pub system: String,
+    pub workers: usize,
+    pub runtime_secs: f64,
+    pub final_loss: Option<f64>,
+}
+
+/// speedup = t_ref / t (Foster). Caller picks the reference (relative vs
+/// absolute — see module docs).
+pub fn speedup(t_ref: f64, t: f64) -> f64 {
+    t_ref / t
+}
+
+/// efficiency = speedup / workers.
+pub fn efficiency(t_ref: f64, t: f64, workers: usize) -> f64 {
+    speedup(t_ref, t) / workers as f64
+}
+
+/// Render Table 4: System | Workers | Runtime (min) | Loss.
+pub fn render_table4(rows: &[RunResult]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "| {:<30} | {:>7} | {:>13} | {:>5} |", "System", "Workers", "Runtime (min)", "Loss");
+    let _ = writeln!(out, "|{}|{}|{}|{}|", "-".repeat(32), "-".repeat(9), "-".repeat(15), "-".repeat(7));
+    for r in rows {
+        let loss = r
+            .final_loss
+            .map(|l| format!("{l:.1}"))
+            .unwrap_or_else(|| "-".into());
+        let _ = writeln!(
+            out,
+            "| {:<30} | {:>7} | {:>13.1} | {:>5} |",
+            r.system,
+            r.workers,
+            r.runtime_secs / 60.0,
+            loss
+        );
+    }
+    out
+}
+
+/// Render an x/y series with an ideal line as an ASCII chart + data table
+/// (Figs 4, 5, 6, 8). `points` are (x = workers, y); `ideal` maps x -> y.
+pub fn render_series(
+    title: &str,
+    ylabel: &str,
+    points: &[(usize, f64)],
+    ideal: impl Fn(usize) -> f64,
+) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    let _ = writeln!(out, "{:>8} | {:>12} | {:>12}", "workers", ylabel, "ideal");
+    for (x, y) in points {
+        let _ = writeln!(out, "{x:>8} | {y:>12.3} | {:>12.3}", ideal(*x));
+    }
+    // Log-x bar chart of measured vs ideal.
+    let ymax = points
+        .iter()
+        .map(|(x, y)| y.max(ideal(*x)))
+        .fold(0.0, f64::max)
+        .max(1e-9);
+    const W: usize = 48;
+    for (x, y) in points {
+        let bar = ((*y / ymax) * W as f64).round() as usize;
+        let id = ((ideal(*x) / ymax) * W as f64).round() as usize;
+        let mut row: Vec<char> = vec![' '; W + 1];
+        for c in row.iter_mut().take(bar.min(W)) {
+            *c = '#';
+        }
+        if id <= W {
+            row[id] = '|';
+        }
+        let _ = writeln!(out, "{:>6}  [{}]", x, row.into_iter().collect::<String>());
+    }
+    let _ = writeln!(out, "        ('#' measured, '|' ideal)");
+    out
+}
+
+/// CSV for a series: workers,value,ideal.
+pub fn series_csv(points: &[(usize, f64)], ideal: impl Fn(usize) -> f64) -> String {
+    let mut out = String::from("workers,value,ideal\n");
+    for (x, y) in points {
+        let _ = writeln!(out, "{x},{y:.6},{:.6}", ideal(*x));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_makespan_and_busy() {
+        let t = Timeline::new();
+        t.record(Span { worker: 0, kind: SpanKind::Compute, start: 0.0, end: 2.0 });
+        t.record(Span { worker: 1, kind: SpanKind::Accumulate, start: 1.0, end: 4.0 });
+        t.record(Span { worker: 0, kind: SpanKind::Compute, start: 2.0, end: 3.0 });
+        assert_eq!(t.makespan(), 4.0);
+        assert_eq!(t.busy_secs(0), 3.0);
+        assert_eq!(t.busy_secs(1), 3.0);
+    }
+
+    #[test]
+    fn timeline_csv_sorted() {
+        let t = Timeline::new();
+        t.record(Span { worker: 1, kind: SpanKind::Compute, start: 5.0, end: 6.0 });
+        t.record(Span { worker: 0, kind: SpanKind::Accumulate, start: 1.0, end: 2.0 });
+        let csv = t.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "worker,kind,start,end");
+        assert!(lines[1].starts_with("0,accumulate,1.0"));
+        assert!(lines[2].starts_with("1,compute,5.0"));
+    }
+
+    #[test]
+    fn gantt_renders_rows() {
+        let t = Timeline::new();
+        t.record(Span { worker: 0, kind: SpanKind::Compute, start: 0.0, end: 10.0 });
+        t.record(Span { worker: 1, kind: SpanKind::Accumulate, start: 5.0, end: 10.0 });
+        let g = t.render_gantt(20);
+        assert!(g.contains("w00 |"));
+        assert!(g.contains("w01 |"));
+        assert!(g.contains('▒'));
+        assert!(g.contains('█'));
+    }
+
+    #[test]
+    fn speedup_efficiency() {
+        assert_eq!(speedup(100.0, 25.0), 4.0);
+        assert_eq!(efficiency(100.0, 25.0, 4), 1.0);
+        assert!(efficiency(100.0, 25.0, 8) < 1.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let rows = vec![
+            RunResult { system: "JSDoop-cluster".into(), workers: 1, runtime_secs: 10626.0, final_loss: Some(4.6) },
+            RunResult { system: "TFJS-Sequential-128".into(), workers: 1, runtime_secs: 54.0, final_loss: None },
+        ];
+        let t = render_table4(&rows);
+        assert!(t.contains("JSDoop-cluster"));
+        assert!(t.contains("177.1"));
+        assert!(t.contains("4.6"));
+    }
+
+    #[test]
+    fn series_renders() {
+        let pts = vec![(1, 1.0), (2, 2.2), (4, 4.5)];
+        let s = render_series("fig5", "speedup", &pts, |w| w as f64);
+        assert!(s.contains("fig5"));
+        assert!(s.contains("4.500"));
+        let csv = series_csv(&pts, |w| w as f64);
+        assert!(csv.contains("4,4.500000,4.000000"));
+    }
+}

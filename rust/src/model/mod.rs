@@ -1,0 +1,289 @@
+//! Model state handling on the Rust side (S12 in DESIGN.md).
+//!
+//! The L2 layer flattens all parameters into ONE f32 vector (layout owned
+//! by `python/compile/model.py`, mirrored in `artifacts/model_meta.json`).
+//! This module loads that metadata + the initial parameters, implements the
+//! deterministic gradient accumulation the reduce task performs, and the
+//! (de)serialization of model snapshots stored on the DataServer.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::{f32_from_le_bytes, f32_to_le_bytes};
+
+/// Shapes + constants exported by `python/compile/aot.py`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub seq_len: usize,
+    pub num_params: usize,
+    pub map_batch: usize,
+    pub full_batch: usize,
+    pub rmsprop_rho: f64,
+    pub rmsprop_eps: f64,
+    pub param_layout: Vec<ParamEntry>,
+    pub artifacts: Vec<(String, String)>, // (name, file)
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl ModelMeta {
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let path = artifact_dir.join("model_meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("model_meta.json: {e}"))?;
+        let num = |k: &str| -> Result<usize> {
+            Ok(j.req(k)
+                .map_err(|e| anyhow::anyhow!(e))?
+                .as_usize()
+                .context(k.to_string())?)
+        };
+        let fnum = |k: &str| -> Result<f64> {
+            Ok(j.req(k)
+                .map_err(|e| anyhow::anyhow!(e))?
+                .as_f64()
+                .context(k.to_string())?)
+        };
+        let mut param_layout = Vec::new();
+        for e in j
+            .req("param_layout")
+            .map_err(|e| anyhow::anyhow!(e))?
+            .as_arr()
+            .context("param_layout")?
+        {
+            param_layout.push(ParamEntry {
+                name: e.req("name").map_err(|e| anyhow::anyhow!(e))?.as_str().unwrap_or("").to_string(),
+                shape: e
+                    .req("shape")
+                    .map_err(|e| anyhow::anyhow!(e))?
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .filter_map(|v| v.as_usize())
+                    .collect(),
+                start: e.req("start").map_err(|e| anyhow::anyhow!(e))?.as_usize().context("start")?,
+                end: e.req("end").map_err(|e| anyhow::anyhow!(e))?.as_usize().context("end")?,
+            });
+        }
+        let mut artifacts = Vec::new();
+        if let Some(m) = j.req("artifacts").map_err(|e| anyhow::anyhow!(e))?.as_obj() {
+            for (name, v) in m {
+                let file = v.req("file").map_err(|e| anyhow::anyhow!(e))?.as_str().unwrap_or("").to_string();
+                artifacts.push((name.clone(), file));
+            }
+        }
+        let meta = ModelMeta {
+            vocab: num("vocab")?,
+            hidden: num("hidden")?,
+            seq_len: num("seq_len")?,
+            num_params: num("num_params")?,
+            map_batch: num("map_batch")?,
+            full_batch: num("full_batch")?,
+            rmsprop_rho: fnum("rmsprop_rho")?,
+            rmsprop_eps: fnum("rmsprop_eps")?,
+            param_layout,
+            artifacts,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    /// Internal consistency: layout covers [0, num_params) contiguously.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0usize;
+        for e in &self.param_layout {
+            if e.start != off {
+                bail!("param layout gap before {}", e.name);
+            }
+            let n: usize = e.shape.iter().product();
+            if e.end - e.start != n {
+                bail!("param {} shape/extent mismatch", e.name);
+            }
+            off = e.end;
+        }
+        if off != self.num_params {
+            bail!("param layout covers {off}, expected {}", self.num_params);
+        }
+        Ok(())
+    }
+
+    /// Load `init_params.bin` (seed-42 initial model from aot.py).
+    pub fn load_init_params(&self, artifact_dir: &Path) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(artifact_dir.join("init_params.bin"))
+            .context("reading init_params.bin")?;
+        let v = f32_from_le_bytes(&bytes);
+        if v.len() != self.num_params {
+            bail!("init_params.bin has {} f32, expected {}", v.len(), self.num_params);
+        }
+        Ok(v)
+    }
+}
+
+/// A model snapshot as stored on the DataServer: version + params + RMSprop
+/// second-moment state. The reduce task reads version v, writes v+1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSnapshot {
+    pub version: u64,
+    pub params: Vec<f32>,
+    pub ms: Vec<f32>,
+}
+
+impl ModelSnapshot {
+    pub fn initial(params: Vec<f32>) -> Self {
+        let n = params.len();
+        ModelSnapshot { version: 0, params, ms: vec![0.0; n] }
+    }
+
+    /// Wire/storage format: [version u64 LE][n u64 LE][params f32*n][ms f32*n].
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.params.len() * 8);
+        out.extend_from_slice(&self.version.to_le_bytes());
+        out.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        out.extend_from_slice(&f32_to_le_bytes(&self.params));
+        out.extend_from_slice(&f32_to_le_bytes(&self.ms));
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 16 {
+            bail!("snapshot too short");
+        }
+        let version = u64::from_le_bytes(bytes[0..8].try_into().unwrap());
+        let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let need = 16 + n * 8;
+        if bytes.len() != need {
+            bail!("snapshot length {} != expected {}", bytes.len(), need);
+        }
+        let params = f32_from_le_bytes(&bytes[16..16 + n * 4]);
+        let ms = f32_from_le_bytes(&bytes[16 + n * 4..]);
+        Ok(ModelSnapshot { version, params, ms })
+    }
+}
+
+/// Deterministic gradient accumulator for the reduce task.
+///
+/// The paper's reduce "downloads all calculated gradients ... accumulates
+/// gradients and updates the NN model". To make the final model independent
+/// of worker scheduling (Table 4: identical loss for every configuration)
+/// we accumulate strictly in minibatch-index order: slot i holds minibatch
+/// i's gradient, and `fold()` sums slots 0..k left-to-right — float addition
+/// is not associative, so the order is part of the contract (proptested in
+/// rust/tests/prop_invariants.rs).
+#[derive(Debug)]
+pub struct GradAccumulator {
+    slots: Vec<Option<Vec<f32>>>,
+}
+
+impl GradAccumulator {
+    pub fn new(num_minibatches: usize) -> Self {
+        GradAccumulator { slots: (0..num_minibatches).map(|_| None).collect() }
+    }
+
+    pub fn insert(&mut self, minibatch_idx: usize, grad: Vec<f32>) -> Result<()> {
+        if minibatch_idx >= self.slots.len() {
+            bail!("minibatch index {minibatch_idx} out of range");
+        }
+        if self.slots[minibatch_idx].is_some() {
+            // Duplicate delivery (at-least-once queue semantics) — first wins.
+            return Ok(());
+        }
+        self.slots[minibatch_idx] = Some(grad);
+        Ok(())
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.slots.iter().all(|s| s.is_some())
+    }
+
+    pub fn missing(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.is_none().then_some(i))
+            .collect()
+    }
+
+    /// Mean of the k minibatch gradients, summed in index order.
+    /// (Mean — not sum — matches the sequential batch-128 gradient: each
+    /// minibatch gradient is already a mean over its 8 samples, and the
+    /// batch gradient is the mean of equal-sized minibatch means.)
+    pub fn fold(&self) -> Result<Vec<f32>> {
+        if !self.is_complete() {
+            bail!("accumulator incomplete: missing {:?}", self.missing());
+        }
+        let k = self.slots.len();
+        let n = self.slots[0].as_ref().unwrap().len();
+        let mut acc = vec![0.0f32; n];
+        for slot in &self.slots {
+            let g = slot.as_ref().unwrap();
+            if g.len() != n {
+                bail!("gradient length mismatch");
+            }
+            for (a, b) in acc.iter_mut().zip(g.iter()) {
+                *a += b;
+            }
+        }
+        let inv = 1.0f32 / k as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let s = ModelSnapshot { version: 7, params: vec![1.0, -2.0], ms: vec![0.5, 0.25] };
+        let b = s.to_bytes();
+        assert_eq!(ModelSnapshot::from_bytes(&b).unwrap(), s);
+    }
+
+    #[test]
+    fn snapshot_rejects_truncation() {
+        let s = ModelSnapshot::initial(vec![1.0; 4]);
+        let mut b = s.to_bytes();
+        b.pop();
+        assert!(ModelSnapshot::from_bytes(&b).is_err());
+        assert!(ModelSnapshot::from_bytes(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn accumulator_order_and_mean() {
+        let mut acc = GradAccumulator::new(2);
+        assert!(!acc.is_complete());
+        acc.insert(1, vec![2.0, 4.0]).unwrap();
+        assert_eq!(acc.missing(), vec![0]);
+        acc.insert(0, vec![0.0, 2.0]).unwrap();
+        assert!(acc.is_complete());
+        assert_eq!(acc.fold().unwrap(), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn accumulator_duplicate_first_wins() {
+        let mut acc = GradAccumulator::new(1);
+        acc.insert(0, vec![1.0]).unwrap();
+        acc.insert(0, vec![99.0]).unwrap(); // redelivered duplicate
+        assert_eq!(acc.fold().unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn accumulator_bounds() {
+        let mut acc = GradAccumulator::new(1);
+        assert!(acc.insert(1, vec![]).is_err());
+        assert!(acc.fold().is_err());
+    }
+}

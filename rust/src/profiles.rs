@@ -1,0 +1,178 @@
+//! Calibrated simulation profiles for the paper's two testbeds (§V.A-B).
+//!
+//! The absolute constants are calibrations, not measurements of the
+//! authors' hardware; what the benches assert is the SHAPE of the results
+//! (who wins, superlinearity region, the 16-task synchronization wall) —
+//! see DESIGN.md "Experiment index". Calibration notes in EXPERIMENTS.md.
+//!
+//! **cluster** — "more than 32 heterogeneous computers of different
+//! performances administrated with HTCondor". Heterogeneous speeds, the
+//! scheduler hands out the SLOWEST nodes first (idle-first fill), plus the
+//! Foster cache effect: both are required to reproduce the paper's heavily
+//! superlinear relative speedups (4.8x at 2 workers) — a slow 1-worker
+//! baseline plus thrashing.
+//!
+//! **classroom** — 32 student machines running browsers: faster, LAN-local,
+//! but with high service-time variance (foreground browsing); straggler
+//! re-issue (short visibility window + fast priority-swap probing) trims
+//! the jitter tail. NOTE: the paper's own Table 4 shows classroom-32 at
+//! 2.16x classroom-16, which contradicts its own §V.A analysis ("no
+//! scalability with more than 16 devices is possible" — the 16-map + 1
+//! reduce lock-step). Under the protocol as described, W > 17 only adds
+//! redundancy; we reproduce the theory-consistent plateau and discuss the
+//! discrepancy in EXPERIMENTS.md E4.
+
+use crate::faults::FaultPlan;
+use crate::util::prng::Rng;
+use crate::volunteer::sim::SimParams;
+
+/// HTCondor-like speed pool: slowest-first. Node 0 is the dusty Pentium in
+/// the rack bottom (speed 0.22); later nodes approach and exceed 1.0.
+pub fn cluster_speed_pool(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut speeds = Vec::with_capacity(n);
+    for i in 0..n {
+        // Deterministic sqrt ramp + mild jitter: 0.20 .. ~1.45. The sqrt
+        // makes the first nodes markedly slower than the pack, which is
+        // what drives the paper's strongly superlinear S(2)..S(4).
+        let ramp = 0.20 + 1.25 * (i as f64 / 31.0).min(1.0).sqrt();
+        let j = 1.0 + 0.08 * (rng.f64() - 0.5);
+        speeds.push(ramp * j);
+    }
+    speeds
+}
+
+/// Cluster profile (Fig 4-6, Table 4 "JSDoop-cluster").
+pub fn cluster(workers: usize, rng: &mut Rng) -> (SimParams, Vec<f64>, FaultPlan) {
+    let params = SimParams {
+        t_map: 4.2,
+        t_reduce: 4.0,
+        rtt: 0.05,
+        model_fetch: 0.35,
+        model_push: 0.35,
+        grad_push: 0.25,
+        grad_collect: 0.15,
+        cache_capacity: 96,
+        cache_miss_penalty: 0.7,
+        jitter_sigma: 0.08,
+        visibility_timeout: 300.0,
+        requeue_on_disconnect: true,
+        poll: 0.5,
+        version_wait: 30.0,
+        ..SimParams::default()
+    };
+    let speeds = cluster_speed_pool(workers, rng);
+    (params, speeds, FaultPlan::sync_start(workers))
+}
+
+/// Classroom machine speeds: uniformly fast (modern laptops), small spread.
+pub fn classroom_speeds(n: usize) -> Vec<f64> {
+    (0..n).map(|i| 3.1 + 0.2 * ((i % 5) as f64 / 4.0)).collect()
+}
+
+fn classroom_params() -> SimParams {
+    SimParams {
+        t_map: 4.2,
+        t_reduce: 2.4,
+        rtt: 0.01,
+        model_fetch: 0.10,
+        model_push: 0.10,
+        grad_push: 0.06,
+        grad_collect: 0.03,
+        cache_capacity: 96,
+        cache_miss_penalty: 0.25,
+        // Students keep browsing: heavy-tailed service times.
+        jitter_sigma: 0.85,
+        // Tight visibility window: stragglers get re-issued quickly and
+        // the spare half of a 32-volunteer fleet rescues them.
+        visibility_timeout: 3.0,
+        requeue_on_disconnect: true,
+        poll: 0.25,
+        // Browsers probe fast: swap-rescue of redelivered stragglers
+        // within ~1s.
+        version_wait: 1.0,
+        ..SimParams::default()
+    }
+}
+
+/// Classroom, everyone already on the page (Table 4 "sync-start").
+pub fn classroom(workers: usize) -> (SimParams, Vec<f64>, FaultPlan) {
+    (classroom_params(), classroom_speeds(workers), FaultPlan::sync_start(workers))
+}
+
+/// Classroom, volunteers trickling in over ~40s (Table 4 "async-start").
+pub fn classroom_async(workers: usize, rng: &mut Rng) -> (SimParams, Vec<f64>, FaultPlan) {
+    (
+        classroom_params(),
+        classroom_speeds(workers),
+        FaultPlan::async_start(workers, 40.0, rng),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volunteer::sim::{simulate, SimWorkload};
+
+    fn run(profile: &str, workers: usize) -> f64 {
+        let mut rng = Rng::new(42);
+        let (p, s, plan) = match profile {
+            "cluster" => cluster(workers, &mut rng),
+            "classroom" => classroom(workers),
+            "classroom-async" => classroom_async(workers, &mut rng),
+            _ => unreachable!(),
+        };
+        simulate(SimWorkload::paper(), &p, &plan, &s, 42).unwrap().runtime
+    }
+
+    #[test]
+    fn cluster_speed_pool_is_slowest_first() {
+        let mut rng = Rng::new(1);
+        let s = cluster_speed_pool(32, &mut rng);
+        assert!(s[0] < 0.3);
+        assert!(s[31] > 1.1);
+    }
+
+    #[test]
+    fn cluster_superlinear_then_wall() {
+        let t1 = run("cluster", 1);
+        let t2 = run("cluster", 2);
+        let t16 = run("cluster", 16);
+        let t32 = run("cluster", 32);
+        // Superlinear relative speedup at 2 and 16; sublinear at 32.
+        assert!(t1 / t2 > 2.0, "S(2) = {}", t1 / t2);
+        assert!(t1 / t16 > 16.0, "S(16) = {}", t1 / t16);
+        assert!(t1 / t32 < 32.0, "S(32) = {}", t1 / t32);
+        // The 16-minibatch wall: 32 barely beats 16.
+        assert!(t32 < t16, "t32 {} vs t16 {}", t32, t16);
+        assert!(t32 > t16 * 0.6, "32 workers cannot break the sync wall");
+    }
+
+    #[test]
+    fn classroom_beats_cluster_and_plateaus_past_16() {
+        let cl16 = run("classroom", 16);
+        let cl32 = run("classroom", 32);
+        let cu16 = run("cluster", 16);
+        let cu32 = run("cluster", 32);
+        // Classroom machines are faster: both sizes beat the cluster.
+        assert!(cl32 < cu32, "classroom-32 {} should beat cluster-32 {}", cl32, cu32);
+        assert!(cl16 < cu16, "classroom-16 {} should beat cluster-16 {}", cl16, cu16);
+        // The 16-map lock-step wall: 32 volunteers no worse, not much
+        // better (see module docs on the paper's Table 4 anomaly).
+        assert!(cl32 < cl16 * 1.05, "cl32 {} vs cl16 {}", cl32, cl16);
+    }
+
+    #[test]
+    fn async_start_slower_than_sync() {
+        // At 32 volunteers the 17-task lock-step hides a 40s ramp-in
+        // almost entirely (paper: 2.7 vs 2.5 min) — only require "not
+        // better, not blown up".
+        let sync32 = run("classroom", 32);
+        let async32 = run("classroom-async", 32);
+        assert!(async32 > sync32 * 0.95, "async32 {async32} vs sync32 {sync32}");
+        assert!(async32 < sync32 * 2.0, "async should not blow up");
+        // At 16 volunteers every machine matters: ramp-in must cost time.
+        let sync16 = run("classroom", 16);
+        let async16 = run("classroom-async", 16);
+        assert!(async16 > sync16, "async16 {async16} vs sync16 {sync16}");
+    }
+}

@@ -1,0 +1,500 @@
+//! In-process message broker: the heart of the QueueServer (S1).
+//!
+//! Semantics (the AMQP subset JSDoop uses — see queue/mod.rs):
+//! at-least-once delivery, PRIORITY-ordered queues (RabbitMQ
+//! `x-max-priority` analog: lower value = served first; plain `publish`
+//! uses a single default priority, which degrades to exact FIFO),
+//! unACKed messages redeliver to their ORIGINAL position after
+//! `visibility_timeout` (lazy sweep on every operation plus an explicit
+//! [`Broker::sweep`] the TCP server calls periodically), NACK likewise
+//! reinserts at the original position immediately. Priority ordering is
+//! load-bearing: the Initiator publishes tasks with priority = batch
+//! order, so redeliveries and voluntary hand-backs can never be buried
+//! behind later batches' tasks (the FIFO + hand-back composition is NOT
+//! deadlock-free under churn — see coordinator/mod.rs).
+//!
+//! Snapshot/restore gives the paper's "QueueServer is able to recover
+//! from failures without losing execution status": unACKed messages fold
+//! back into ready on restore (never ACKed => redelivery is correct).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::{Delivery, QueueApi, QueueStats, DEFAULT_PRIORITY};
+
+#[derive(Debug, Clone)]
+struct Msg {
+    payload: Vec<u8>,
+    redelivered: bool,
+    /// Service order: (priority, seq) — both preserved across
+    /// redelivery/NACK so a message always returns to its original slot.
+    priority: u64,
+    seq: u64,
+}
+
+#[derive(Debug, Default)]
+struct QueueState {
+    /// Ready messages ordered by (priority, seq).
+    ready: BTreeMap<(u64, u64), Msg>,
+    /// tag -> (message, visibility deadline)
+    unacked: HashMap<u64, (Msg, Instant)>,
+    stats: QueueStats,
+}
+
+#[derive(Debug, Default)]
+struct BrokerState {
+    queues: HashMap<String, QueueState>,
+    next_tag: u64,
+    next_seq: u64,
+}
+
+/// Thread-safe in-process broker.
+pub struct Broker {
+    state: Mutex<BrokerState>,
+    readable: Condvar,
+    visibility_timeout: Duration,
+}
+
+impl Broker {
+    /// `visibility_timeout` is the paper's "maximum time to solve a task".
+    pub fn new(visibility_timeout: Duration) -> Self {
+        Broker {
+            state: Mutex::new(BrokerState::default()),
+            readable: Condvar::new(),
+            visibility_timeout,
+        }
+    }
+
+    pub fn with_default_timeout() -> Self {
+        Broker::new(Duration::from_secs(60))
+    }
+
+    pub fn visibility_timeout(&self) -> Duration {
+        self.visibility_timeout
+    }
+
+    /// Requeue every expired unACKed message (front, redelivered=true).
+    /// Called lazily under the lock by all operations; also public so the
+    /// TCP server can run it on a timer.
+    pub fn sweep(&self) {
+        let mut st = self.state.lock().unwrap();
+        Self::sweep_locked(&mut st, Instant::now());
+        drop(st);
+        self.readable.notify_all();
+    }
+
+    fn sweep_locked(st: &mut BrokerState, now: Instant) {
+        for q in st.queues.values_mut() {
+            if q.unacked.is_empty() {
+                continue;
+            }
+            let expired: Vec<u64> = q
+                .unacked
+                .iter()
+                .filter(|(_, (_, dl))| *dl <= now)
+                .map(|(t, _)| *t)
+                .collect();
+            for tag in expired {
+                let (mut msg, _) = q.unacked.remove(&tag).unwrap();
+                msg.redelivered = true;
+                q.stats.redelivered += 1;
+                q.ready.insert((msg.priority, msg.seq), msg);
+            }
+        }
+    }
+
+    fn queue_mut<'a>(st: &'a mut BrokerState, queue: &str) -> Result<&'a mut QueueState> {
+        match st.queues.get_mut(queue) {
+            Some(q) => Ok(q),
+            None => bail!("queue '{queue}' does not exist (declare first)"),
+        }
+    }
+
+    /// List queue names (admin/metrics).
+    pub fn queue_names(&self) -> Vec<String> {
+        let st = self.state.lock().unwrap();
+        let mut names: Vec<String> = st.queues.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Total ready messages across queues.
+    pub fn total_ready(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.queues.values().map(|q| q.ready.len()).sum()
+    }
+
+    // --- persistence ------------------------------------------------------
+
+    /// Serialize all queues. UnACKed messages are folded into ready (they
+    /// will redeliver after recovery — at-least-once).
+    /// Format: [n u32][ per queue: name_len u32, name, count u32,
+    ///                  per msg: redelivered u8, len u32, bytes ]
+    pub fn snapshot(&self) -> Vec<u8> {
+        let st = self.state.lock().unwrap();
+        let mut out = Vec::new();
+        out.extend_from_slice(&(st.queues.len() as u32).to_le_bytes());
+        let mut names: Vec<&String> = st.queues.keys().collect();
+        names.sort();
+        for name in names {
+            let q = &st.queues[name];
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            let count = q.ready.len() + q.unacked.len();
+            out.extend_from_slice(&(count as u32).to_le_bytes());
+            let mut emit = |m: &Msg| {
+                out.push(m.redelivered as u8);
+                out.extend_from_slice(&m.priority.to_le_bytes());
+                out.extend_from_slice(&m.seq.to_le_bytes());
+                out.extend_from_slice(&(m.payload.len() as u32).to_le_bytes());
+                out.extend_from_slice(&m.payload);
+            };
+            for m in q.ready.values() {
+                emit(m);
+            }
+            // Deterministic order for unacked: by tag.
+            let mut tags: Vec<&u64> = q.unacked.keys().collect();
+            tags.sort();
+            for t in tags {
+                emit(&q.unacked[t].0);
+            }
+        }
+        out
+    }
+
+    pub fn restore(bytes: &[u8], visibility_timeout: Duration) -> Result<Broker> {
+        let mut i = 0usize;
+        let rd_u32 = |b: &[u8], i: &mut usize| -> Result<u32> {
+            if *i + 4 > b.len() {
+                bail!("snapshot truncated");
+            }
+            let v = u32::from_le_bytes(b[*i..*i + 4].try_into().unwrap());
+            *i += 4;
+            Ok(v)
+        };
+        let nqueues = rd_u32(bytes, &mut i)?;
+        let mut queues = HashMap::new();
+        let mut max_seq = 0u64;
+        for _ in 0..nqueues {
+            let nlen = rd_u32(bytes, &mut i)? as usize;
+            if i + nlen > bytes.len() {
+                bail!("snapshot truncated (name)");
+            }
+            let name = String::from_utf8(bytes[i..i + nlen].to_vec())?;
+            i += nlen;
+            let count = rd_u32(bytes, &mut i)?;
+            let mut q = QueueState::default();
+            for _ in 0..count {
+                if i >= bytes.len() {
+                    bail!("snapshot truncated (msg header)");
+                }
+                let redelivered = bytes[i] != 0;
+                i += 1;
+                if i + 16 > bytes.len() {
+                    bail!("snapshot truncated (priority/seq)");
+                }
+                let priority = u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
+                i += 8;
+                let seq = u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
+                i += 8;
+                max_seq = max_seq.max(seq);
+                let mlen = rd_u32(bytes, &mut i)? as usize;
+                if i + mlen > bytes.len() {
+                    bail!("snapshot truncated (msg body)");
+                }
+                q.ready.insert(
+                    (priority, seq),
+                    Msg { payload: bytes[i..i + mlen].to_vec(), redelivered, priority, seq },
+                );
+                i += mlen;
+            }
+            queues.insert(name, q);
+        }
+        if i != bytes.len() {
+            bail!("snapshot has {} trailing bytes", bytes.len() - i);
+        }
+        Ok(Broker {
+            state: Mutex::new(BrokerState { queues, next_tag: 1, next_seq: max_seq + 1 }),
+            readable: Condvar::new(),
+            visibility_timeout,
+        })
+    }
+}
+
+impl QueueApi for Broker {
+    fn declare(&self, queue: &str) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        st.queues.entry(queue.to_string()).or_default();
+        Ok(())
+    }
+
+    fn publish(&self, queue: &str, payload: &[u8]) -> Result<()> {
+        self.publish_pri(queue, payload, DEFAULT_PRIORITY)
+    }
+
+    fn publish_pri(&self, queue: &str, payload: &[u8], priority: u64) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        Self::sweep_locked(&mut st, Instant::now());
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        let q = Self::queue_mut(&mut st, queue)?;
+        q.ready.insert(
+            (priority, seq),
+            Msg { payload: payload.to_vec(), redelivered: false, priority, seq },
+        );
+        q.stats.published += 1;
+        drop(st);
+        self.readable.notify_all();
+        Ok(())
+    }
+
+    fn consume(&self, queue: &str, timeout: Duration) -> Result<Option<Delivery>> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            Self::sweep_locked(&mut st, now);
+            // Ensure the queue exists before waiting on it.
+            if !st.queues.contains_key(queue) {
+                bail!("queue '{queue}' does not exist (declare first)");
+            }
+            let visibility = self.visibility_timeout;
+            let tag = st.next_tag;
+            let q = st.queues.get_mut(queue).unwrap();
+            if let Some((&key, _)) = q.ready.iter().next() {
+                let msg = q.ready.remove(&key).unwrap();
+                st.next_tag += 1;
+                let q = st.queues.get_mut(queue).unwrap();
+                let redelivered = msg.redelivered;
+                let payload = msg.payload.clone();
+                q.unacked.insert(tag, (msg, now + visibility));
+                q.stats.delivered += 1;
+                return Ok(Some(Delivery { tag, payload, redelivered }));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            // Wait, bounded by both the caller deadline and the earliest
+            // visibility deadline so expiries wake us up.
+            let mut wait = deadline - now;
+            for q in st.queues.values() {
+                for (_, dl) in q.unacked.values() {
+                    if *dl > now {
+                        wait = wait.min(*dl - now);
+                    } else {
+                        wait = Duration::from_millis(0);
+                    }
+                }
+            }
+            let (guard, _res) = self
+                .readable
+                .wait_timeout(st, wait.max(Duration::from_millis(1)))
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    fn ack(&self, queue: &str, tag: u64) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let q = Self::queue_mut(&mut st, queue)?;
+        match q.unacked.remove(&tag) {
+            Some(_) => {
+                q.stats.acked += 1;
+                Ok(())
+            }
+            // Tag may have expired + been redelivered: ACK becomes a no-op
+            // (at-least-once; the duplicate consumer owns it now).
+            None => Ok(()),
+        }
+    }
+
+    fn nack(&self, queue: &str, tag: u64) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let q = Self::queue_mut(&mut st, queue)?;
+        if let Some((mut msg, _)) = q.unacked.remove(&tag) {
+            msg.redelivered = true;
+            q.stats.nacked += 1;
+            // Original position — see QueueApi::nack for why.
+            q.ready.insert((msg.priority, msg.seq), msg);
+        }
+        drop(st);
+        self.readable.notify_all();
+        Ok(())
+    }
+
+    fn len(&self, queue: &str) -> Result<usize> {
+        let mut st = self.state.lock().unwrap();
+        Self::sweep_locked(&mut st, Instant::now());
+        Ok(Self::queue_mut(&mut st, queue)?.ready.len())
+    }
+
+    fn purge(&self, queue: &str) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let q = Self::queue_mut(&mut st, queue)?;
+        q.ready.clear();
+        q.unacked.clear();
+        Ok(())
+    }
+
+    fn stats(&self, queue: &str) -> Result<QueueStats> {
+        let mut st = self.state.lock().unwrap();
+        Self::sweep_locked(&mut st, Instant::now());
+        let q = Self::queue_mut(&mut st, queue)?;
+        let mut s = q.stats;
+        s.ready = q.ready.len();
+        s.unacked = q.unacked.len();
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn broker_ms(ms: u64) -> Broker {
+        Broker::new(Duration::from_millis(ms))
+    }
+
+    #[test]
+    fn fifo_order() {
+        let b = broker_ms(1000);
+        b.declare("q").unwrap();
+        for i in 0..5u8 {
+            b.publish("q", &[i]).unwrap();
+        }
+        for i in 0..5u8 {
+            let d = b.consume("q", Duration::from_millis(10)).unwrap().unwrap();
+            assert_eq!(d.payload, vec![i]);
+            b.ack("q", d.tag).unwrap();
+        }
+        assert!(b.consume("q", Duration::from_millis(5)).unwrap().is_none());
+    }
+
+    #[test]
+    fn consume_undeclared_errors() {
+        let b = broker_ms(1000);
+        assert!(b.consume("nope", Duration::from_millis(1)).is_err());
+        assert!(b.publish("nope", &[1]).is_err());
+    }
+
+    #[test]
+    fn unacked_redelivers_after_timeout() {
+        let b = broker_ms(20);
+        b.declare("q").unwrap();
+        b.publish("q", b"task").unwrap();
+        let d = b.consume("q", Duration::from_millis(10)).unwrap().unwrap();
+        assert!(!d.redelivered);
+        // Don't ACK; wait past visibility.
+        std::thread::sleep(Duration::from_millis(30));
+        let d2 = b.consume("q", Duration::from_millis(50)).unwrap().unwrap();
+        assert!(d2.redelivered);
+        assert_eq!(d2.payload, b"task");
+        b.ack("q", d2.tag).unwrap();
+        // Late ACK of the first tag is a no-op, not an error.
+        b.ack("q", d.tag).unwrap();
+        assert_eq!(b.len("q").unwrap(), 0);
+    }
+
+    #[test]
+    fn ack_settles() {
+        let b = broker_ms(20);
+        b.declare("q").unwrap();
+        b.publish("q", b"x").unwrap();
+        let d = b.consume("q", Duration::from_millis(10)).unwrap().unwrap();
+        b.ack("q", d.tag).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(b.consume("q", Duration::from_millis(5)).unwrap().is_none());
+    }
+
+    #[test]
+    fn nack_requeues_to_front() {
+        let b = broker_ms(1000);
+        b.declare("q").unwrap();
+        b.publish("q", b"a").unwrap();
+        b.publish("q", b"b").unwrap();
+        let d = b.consume("q", Duration::from_millis(10)).unwrap().unwrap();
+        assert_eq!(d.payload, b"a");
+        b.nack("q", d.tag).unwrap();
+        // The nacked delivery returns to its original (front) position.
+        let d2 = b.consume("q", Duration::from_millis(10)).unwrap().unwrap();
+        assert_eq!(d2.payload, b"a");
+        assert!(d2.redelivered);
+    }
+
+    #[test]
+    fn blocking_consume_wakes_on_publish() {
+        let b = Arc::new(broker_ms(1000));
+        b.declare("q").unwrap();
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            b2.consume("q", Duration::from_secs(5)).unwrap().unwrap().payload
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        b.publish("q", b"wake").unwrap();
+        assert_eq!(h.join().unwrap(), b"wake");
+    }
+
+    #[test]
+    fn stats_track_lifecycle() {
+        let b = broker_ms(10);
+        b.declare("q").unwrap();
+        b.publish("q", b"1").unwrap();
+        b.publish("q", b"2").unwrap();
+        let d = b.consume("q", Duration::from_millis(5)).unwrap().unwrap();
+        b.ack("q", d.tag).unwrap();
+        let _d2 = b.consume("q", Duration::from_millis(5)).unwrap().unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        b.sweep();
+        let s = b.stats("q").unwrap();
+        assert_eq!(s.published, 2);
+        assert_eq!(s.acked, 1);
+        assert_eq!(s.redelivered, 1);
+        assert_eq!(s.ready, 1);
+        assert_eq!(s.unacked, 0);
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_messages() {
+        let b = broker_ms(1000);
+        b.declare("a").unwrap();
+        b.declare("b").unwrap();
+        b.publish("a", b"m1").unwrap();
+        b.publish("a", b"m2").unwrap();
+        b.publish("b", b"m3").unwrap();
+        // One message in-flight: must survive restore (as ready).
+        let _d = b.consume("a", Duration::from_millis(5)).unwrap().unwrap();
+        let snap = b.snapshot();
+        let r = Broker::restore(&snap, Duration::from_millis(1000)).unwrap();
+        assert_eq!(r.len("a").unwrap(), 2);
+        assert_eq!(r.len("b").unwrap(), 1);
+        // The in-flight (never ACKed) m1 folds back at its ORIGINAL
+        // position, ahead of m2 — priority/seq survive the snapshot.
+        let d = r.consume("a", Duration::from_millis(5)).unwrap().unwrap();
+        assert_eq!(d.payload, b"m1");
+    }
+
+    #[test]
+    fn restore_rejects_corrupt() {
+        assert!(Broker::restore(&[1, 2], Duration::from_secs(1)).is_err());
+        let b = broker_ms(10);
+        b.declare("q").unwrap();
+        b.publish("q", b"zzz").unwrap();
+        let mut snap = b.snapshot();
+        snap.truncate(snap.len() - 1);
+        assert!(Broker::restore(&snap, Duration::from_secs(1)).is_err());
+    }
+
+    #[test]
+    fn purge_clears() {
+        let b = broker_ms(1000);
+        b.declare("q").unwrap();
+        b.publish("q", b"x").unwrap();
+        b.purge("q").unwrap();
+        assert_eq!(b.len("q").unwrap(), 0);
+    }
+}

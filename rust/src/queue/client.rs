@@ -1,0 +1,239 @@
+//! TCP clients: [`RemoteQueue`] implements [`QueueApi`] and [`RemoteData`]
+//! implements [`DataApi`] against a `server::serve` endpoint, so a
+//! volunteer process is wire-compatible with in-process tests (paper: the
+//! same JavaScript runs in the browser and under NodeJS).
+//!
+//! Each client owns one connection guarded by a mutex; volunteers use one
+//! client per thread. Consume timeouts ride inside the protocol, so the
+//! socket itself uses a generous read timeout on top.
+
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::{DataApi, Versioned};
+use crate::queue::server::{body_with_name, roundtrip};
+use crate::queue::wire::{BodyReader, Op, ST_NONE, ST_OK};
+use crate::queue::{Delivery, QueueApi, QueueStats};
+
+/// Extra slack on the socket read deadline beyond protocol-level timeouts.
+const SOCKET_SLACK: Duration = Duration::from_secs(30);
+
+struct Conn {
+    stream: Mutex<TcpStream>,
+}
+
+impl Conn {
+    fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(SOCKET_SLACK))?;
+        Ok(Conn { stream: Mutex::new(stream) })
+    }
+
+    fn call(&self, op: Op, body: &[u8], wait: Option<Duration>) -> Result<(u8, Vec<u8>)> {
+        let mut s = self.stream.lock().unwrap();
+        if let Some(w) = wait {
+            s.set_read_timeout(Some(w + SOCKET_SLACK))?;
+        }
+        let out = roundtrip(&mut s, op, body);
+        if wait.is_some() {
+            s.set_read_timeout(Some(SOCKET_SLACK))?;
+        }
+        out
+    }
+
+    fn expect_ok(&self, op: Op, body: &[u8]) -> Result<Vec<u8>> {
+        let (st, resp) = self.call(op, body, None)?;
+        if st != ST_OK {
+            bail!("{op:?} failed: {}", String::from_utf8_lossy(&resp));
+        }
+        Ok(resp)
+    }
+}
+
+/// Remote QueueServer client.
+pub struct RemoteQueue {
+    conn: Conn,
+}
+
+impl RemoteQueue {
+    pub fn connect(addr: &str) -> Result<Self> {
+        Ok(RemoteQueue { conn: Conn::connect(addr)? })
+    }
+
+    pub fn ping(&self) -> Result<()> {
+        let resp = self.conn.expect_ok(Op::Ping, &[])?;
+        if resp != b"pong" {
+            bail!("bad ping response");
+        }
+        Ok(())
+    }
+
+    /// Ask the server to stop accepting connections (admin/tests).
+    pub fn shutdown_server(&self) -> Result<()> {
+        self.conn.expect_ok(Op::Shutdown, &[])?;
+        Ok(())
+    }
+}
+
+impl QueueApi for RemoteQueue {
+    fn declare(&self, queue: &str) -> Result<()> {
+        self.conn.expect_ok(Op::Declare, &body_with_name(queue, &[]))?;
+        Ok(())
+    }
+
+    fn publish(&self, queue: &str, payload: &[u8]) -> Result<()> {
+        self.conn.expect_ok(Op::Publish, &body_with_name(queue, payload))?;
+        Ok(())
+    }
+
+    fn publish_pri(&self, queue: &str, payload: &[u8], priority: u64) -> Result<()> {
+        let mut extra = Vec::with_capacity(8 + payload.len());
+        extra.extend_from_slice(&priority.to_le_bytes());
+        extra.extend_from_slice(payload);
+        self.conn
+            .expect_ok(Op::PublishPri, &body_with_name(queue, &extra))?;
+        Ok(())
+    }
+
+    fn consume(&self, queue: &str, timeout: Duration) -> Result<Option<Delivery>> {
+        let ms = timeout.as_millis() as u64;
+        let body = body_with_name(queue, &ms.to_le_bytes());
+        let (st, resp) = self.conn.call(Op::Consume, &body, Some(timeout))?;
+        match st {
+            ST_NONE => Ok(None),
+            ST_OK => {
+                let mut r = BodyReader::new(&resp);
+                let tag = r.u64()?;
+                let redelivered = r.u8()? != 0;
+                Ok(Some(Delivery { tag, payload: r.rest().to_vec(), redelivered }))
+            }
+            _ => Err(anyhow!("consume failed: {}", String::from_utf8_lossy(&resp))),
+        }
+    }
+
+    fn ack(&self, queue: &str, tag: u64) -> Result<()> {
+        self.conn
+            .expect_ok(Op::Ack, &body_with_name(queue, &tag.to_le_bytes()))?;
+        Ok(())
+    }
+
+    fn nack(&self, queue: &str, tag: u64) -> Result<()> {
+        self.conn
+            .expect_ok(Op::Nack, &body_with_name(queue, &tag.to_le_bytes()))?;
+        Ok(())
+    }
+
+    fn len(&self, queue: &str) -> Result<usize> {
+        let resp = self.conn.expect_ok(Op::Len, &body_with_name(queue, &[]))?;
+        let mut r = BodyReader::new(&resp);
+        Ok(r.u64()? as usize)
+    }
+
+    fn purge(&self, queue: &str) -> Result<()> {
+        self.conn.expect_ok(Op::Purge, &body_with_name(queue, &[]))?;
+        Ok(())
+    }
+
+    fn stats(&self, queue: &str) -> Result<QueueStats> {
+        let resp = self.conn.expect_ok(Op::Stats, &body_with_name(queue, &[]))?;
+        let mut r = BodyReader::new(&resp);
+        Ok(QueueStats {
+            published: r.u64()?,
+            delivered: r.u64()?,
+            acked: r.u64()?,
+            nacked: r.u64()?,
+            redelivered: r.u64()?,
+            ready: r.u64()? as usize,
+            unacked: r.u64()? as usize,
+        })
+    }
+}
+
+/// Remote DataServer client.
+pub struct RemoteData {
+    conn: Conn,
+}
+
+impl RemoteData {
+    pub fn connect(addr: &str) -> Result<Self> {
+        Ok(RemoteData { conn: Conn::connect(addr)? })
+    }
+}
+
+impl DataApi for RemoteData {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.conn.expect_ok(Op::Put, &body_with_name(key, bytes))?;
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        let (st, resp) = self.conn.call(Op::Get, &body_with_name(key, &[]), None)?;
+        match st {
+            ST_NONE => Ok(None),
+            ST_OK => Ok(Some(resp)),
+            _ => Err(anyhow!("get failed: {}", String::from_utf8_lossy(&resp))),
+        }
+    }
+
+    fn del(&self, key: &str) -> Result<bool> {
+        let resp = self.conn.expect_ok(Op::Del, &body_with_name(key, &[]))?;
+        Ok(resp.first().copied() == Some(1))
+    }
+
+    fn put_versioned(&self, key: &str, version: u64, bytes: &[u8]) -> Result<()> {
+        let mut extra = Vec::with_capacity(8 + bytes.len());
+        extra.extend_from_slice(&version.to_le_bytes());
+        extra.extend_from_slice(bytes);
+        self.conn
+            .expect_ok(Op::PutVersioned, &body_with_name(key, &extra))?;
+        Ok(())
+    }
+
+    fn get_versioned(&self, key: &str) -> Result<Option<Versioned>> {
+        let (st, resp) = self
+            .conn
+            .call(Op::GetVersioned, &body_with_name(key, &[]), None)?;
+        match st {
+            ST_NONE => Ok(None),
+            ST_OK => {
+                let mut r = BodyReader::new(&resp);
+                let version = r.u64()?;
+                Ok(Some(Versioned { version, bytes: r.rest().to_vec() }))
+            }
+            _ => Err(anyhow!("get_versioned failed")),
+        }
+    }
+
+    fn wait_version(
+        &self,
+        key: &str,
+        min_version: u64,
+        timeout: Duration,
+    ) -> Result<Option<Versioned>> {
+        let mut extra = Vec::with_capacity(16);
+        extra.extend_from_slice(&min_version.to_le_bytes());
+        extra.extend_from_slice(&(timeout.as_millis() as u64).to_le_bytes());
+        let (st, resp) = self
+            .conn
+            .call(Op::WaitVersion, &body_with_name(key, &extra), Some(timeout))?;
+        match st {
+            ST_NONE => Ok(None),
+            ST_OK => {
+                let mut r = BodyReader::new(&resp);
+                let version = r.u64()?;
+                Ok(Some(Versioned { version, bytes: r.rest().to_vec() }))
+            }
+            _ => Err(anyhow!("wait_version failed")),
+        }
+    }
+
+    fn incr(&self, key: &str) -> Result<u64> {
+        let resp = self.conn.expect_ok(Op::Incr, &body_with_name(key, &[]))?;
+        let mut r = BodyReader::new(&resp);
+        r.u64()
+    }
+}

@@ -1,0 +1,79 @@
+//! QueueServer substrate (S1, paper §IV.D) — the RabbitMQ stand-in.
+//!
+//! JSDoop relies on a small AMQP subset: named FIFO queues, explicit ACK
+//! ("tasks are not removed from the queue until an ACK is received"), a
+//! per-task visibility timeout after which an unACKed task is requeued
+//! (paper §II.E *Adaptability*: "if a task is not resolved within the
+//! maximum time, it is added back to the pending queue"), and multiple
+//! specialized queues for load balancing. [`broker::Broker`] implements it
+//! in-process; [`server`]/[`client`] expose the same API over TCP
+//! ([`wire`] frames — the STOMP-over-WebSocket stand-in) so volunteers can
+//! run as separate OS processes, and [`QueueApi`] makes the two
+//! interchangeable to the agents.
+
+pub mod broker;
+pub mod client;
+pub mod server;
+pub mod sharded;
+pub mod wire;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+/// One message handed to a consumer; must be ACKed (or NACKed) by `tag`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Delivery {
+    pub tag: u64,
+    pub payload: Vec<u8>,
+    /// True if this delivery is a retry (visibility timeout or NACK).
+    pub redelivered: bool,
+}
+
+/// Per-queue counters (metrics + ablation benches).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    pub published: u64,
+    pub delivered: u64,
+    pub acked: u64,
+    pub nacked: u64,
+    pub redelivered: u64,
+    pub ready: usize,
+    pub unacked: usize,
+}
+
+/// Priority used by plain [`QueueApi::publish`]: queues where every
+/// message has this priority behave exactly FIFO.
+pub const DEFAULT_PRIORITY: u64 = 1 << 62;
+
+/// The queue operations JSDoop needs, implemented by both the in-process
+/// [`broker::Broker`] and the TCP [`client::RemoteQueue`].
+pub trait QueueApi: Send + Sync {
+    /// Create the queue if it does not exist (idempotent).
+    fn declare(&self, queue: &str) -> Result<()>;
+    /// Append a message at [`DEFAULT_PRIORITY`] (FIFO behaviour).
+    fn publish(&self, queue: &str, payload: &[u8]) -> Result<()>;
+    /// Append a message with an explicit priority (lower = served first).
+    /// The Initiator publishes tasks with priority = batch order so
+    /// redelivered/handed-back tasks can never be buried behind later
+    /// batches (RabbitMQ `x-max-priority` analog).
+    fn publish_pri(&self, queue: &str, payload: &[u8], priority: u64) -> Result<()>;
+    /// Pop the head message, holding it unACKed under a visibility
+    /// deadline. Blocks up to `timeout`; `None` on timeout.
+    fn consume(&self, queue: &str, timeout: Duration) -> Result<Option<Delivery>>;
+    /// Settle a delivery (removes it permanently).
+    fn ack(&self, queue: &str, tag: u64) -> Result<()>;
+    /// Return a delivery to its ORIGINAL queue position (voluntary
+    /// hand-back: "I cannot or should not run this yet"). Used by the
+    /// agents' priority-swap escape: a worker parked on a future model
+    /// version probes the head, and if the head task precedes its own it
+    /// nacks its held task and runs the earlier one. With priority
+    /// ordering the hand-back can never bury earlier work.
+    fn nack(&self, queue: &str, tag: u64) -> Result<()>;
+    /// Ready-message count.
+    fn len(&self, queue: &str) -> Result<usize>;
+    /// Drop all ready + unacked messages.
+    fn purge(&self, queue: &str) -> Result<()>;
+    /// Counters snapshot.
+    fn stats(&self, queue: &str) -> Result<QueueStats>;
+}

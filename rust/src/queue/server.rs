@@ -1,0 +1,263 @@
+//! TCP server hosting the QueueServer and/or DataServer (paper Figure 2).
+//!
+//! One thread per connection (one volunteer = one connection = one
+//! synchronous request/response loop — the WebSocket analogue). A
+//! background sweeper requeues expired unACKed tasks. `Shutdown` stops the
+//! accept loop for clean test teardown.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::data::{DataApi, Store};
+use crate::queue::broker::Broker;
+use crate::queue::wire::{
+    put_str, read_frame, write_frame, BodyReader, Op, ST_ERR, ST_NONE, ST_OK,
+};
+use crate::queue::QueueApi;
+
+/// A running server; dropping does NOT stop it — call [`ServerHandle::shutdown`].
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    pub broker: Arc<Broker>,
+    pub store: Arc<Store>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Serve `broker` + `store` on `addr` (use port 0 for an ephemeral port).
+pub fn serve(addr: &str, broker: Arc<Broker>, store: Arc<Store>) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Visibility sweeper: the lazy in-op sweep covers active brokers; this
+    // timer covers idle periods (all volunteers gone mid-batch).
+    {
+        let broker = broker.clone();
+        let stop = stop.clone();
+        std::thread::Builder::new()
+            .name("jsdoop-sweeper".into())
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(100));
+                    broker.sweep();
+                }
+            })?;
+    }
+
+    let accept_thread = {
+        let broker = broker.clone();
+        let store = store.clone();
+        let stop = stop.clone();
+        std::thread::Builder::new()
+            .name("jsdoop-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let broker = broker.clone();
+                    let store = store.clone();
+                    let stop = stop.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("jsdoop-conn".into())
+                        .spawn(move || {
+                            let _ = handle_conn(stream, &broker, &store, &stop);
+                        });
+                }
+            })?
+    };
+
+    Ok(ServerHandle { addr: local, stop, accept_thread: Some(accept_thread), broker, store })
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    broker: &Broker,
+    store: &Store,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    loop {
+        let (op_byte, body) = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // client disconnected
+        };
+        let op = match Op::from_u8(op_byte) {
+            Ok(op) => op,
+            Err(e) => {
+                write_frame(&mut stream, ST_ERR, e.to_string().as_bytes())?;
+                continue;
+            }
+        };
+        if matches!(op, Op::Shutdown) {
+            stop.store(true, Ordering::SeqCst);
+            write_frame(&mut stream, ST_OK, &[])?;
+            return Ok(());
+        }
+        match respond(op, &body, broker, store, &mut stream) {
+            Ok(()) => {}
+            Err(e) => write_frame(&mut stream, ST_ERR, e.to_string().as_bytes())?,
+        }
+    }
+}
+
+fn respond<W: Write>(
+    op: Op,
+    body: &[u8],
+    broker: &Broker,
+    store: &Store,
+    stream: &mut W,
+) -> Result<()> {
+    let mut r = BodyReader::new(body);
+    match op {
+        Op::Ping => write_frame(stream, ST_OK, b"pong")?,
+        Op::Shutdown => unreachable!("handled by caller"),
+        Op::Declare => {
+            broker.declare(r.str()?)?;
+            write_frame(stream, ST_OK, &[])?;
+        }
+        Op::Publish => {
+            let q = r.str()?;
+            broker.publish(q, r.rest())?;
+            write_frame(stream, ST_OK, &[])?;
+        }
+        Op::PublishPri => {
+            let q = r.str()?;
+            let pri = r.u64()?;
+            broker.publish_pri(q, r.rest(), pri)?;
+            write_frame(stream, ST_OK, &[])?;
+        }
+        Op::Consume => {
+            let q = r.str()?;
+            let timeout = Duration::from_millis(r.u64()?);
+            match broker.consume(q, timeout)? {
+                Some(d) => {
+                    let mut out = Vec::with_capacity(9 + d.payload.len());
+                    out.extend_from_slice(&d.tag.to_le_bytes());
+                    out.push(d.redelivered as u8);
+                    out.extend_from_slice(&d.payload);
+                    write_frame(stream, ST_OK, &out)?;
+                }
+                None => write_frame(stream, ST_NONE, &[])?,
+            }
+        }
+        Op::Ack => {
+            let q = r.str()?;
+            broker.ack(q, r.u64()?)?;
+            write_frame(stream, ST_OK, &[])?;
+        }
+        Op::Nack => {
+            let q = r.str()?;
+            broker.nack(q, r.u64()?)?;
+            write_frame(stream, ST_OK, &[])?;
+        }
+        Op::Len => {
+            let n = broker.len(r.str()?)? as u64;
+            write_frame(stream, ST_OK, &n.to_le_bytes())?;
+        }
+        Op::Purge => {
+            broker.purge(r.str()?)?;
+            write_frame(stream, ST_OK, &[])?;
+        }
+        Op::Stats => {
+            let s = broker.stats(r.str()?)?;
+            let mut out = Vec::with_capacity(56);
+            for v in [
+                s.published,
+                s.delivered,
+                s.acked,
+                s.nacked,
+                s.redelivered,
+                s.ready as u64,
+                s.unacked as u64,
+            ] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            write_frame(stream, ST_OK, &out)?;
+        }
+        Op::Put => {
+            let k = r.str()?;
+            store.put(k, r.rest())?;
+            write_frame(stream, ST_OK, &[])?;
+        }
+        Op::Get => match store.get(r.str()?)? {
+            Some(v) => write_frame(stream, ST_OK, &v)?,
+            None => write_frame(stream, ST_NONE, &[])?,
+        },
+        Op::Del => {
+            let existed = store.del(r.str()?)?;
+            write_frame(stream, ST_OK, &[existed as u8])?;
+        }
+        Op::PutVersioned => {
+            let k = r.str()?;
+            let ver = r.u64()?;
+            store.put_versioned(k, ver, r.rest())?;
+            write_frame(stream, ST_OK, &[])?;
+        }
+        Op::GetVersioned => match store.get_versioned(r.str()?)? {
+            Some(v) => {
+                let mut out = Vec::with_capacity(8 + v.bytes.len());
+                out.extend_from_slice(&v.version.to_le_bytes());
+                out.extend_from_slice(&v.bytes);
+                write_frame(stream, ST_OK, &out)?;
+            }
+            None => write_frame(stream, ST_NONE, &[])?,
+        },
+        Op::WaitVersion => {
+            let k = r.str()?;
+            let min = r.u64()?;
+            let timeout = Duration::from_millis(r.u64()?);
+            match store.wait_version(k, min, timeout)? {
+                Some(v) => {
+                    let mut out = Vec::with_capacity(8 + v.bytes.len());
+                    out.extend_from_slice(&v.version.to_le_bytes());
+                    out.extend_from_slice(&v.bytes);
+                    write_frame(stream, ST_OK, &out)?;
+                }
+                None => write_frame(stream, ST_NONE, &[])?,
+            }
+        }
+        Op::Incr => {
+            let v = store.incr(r.str()?)?;
+            write_frame(stream, ST_OK, &v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Client-side helper shared with `client.rs`: send one request, read the
+/// response frame.
+pub(crate) fn roundtrip(
+    stream: &mut TcpStream,
+    op: Op,
+    body: &[u8],
+) -> Result<(u8, Vec<u8>)> {
+    write_frame(stream, op as u8, body)?;
+    read_frame(stream)
+}
+
+/// Build a body that starts with a name string.
+pub(crate) fn body_with_name(name: &str, extra: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 + name.len() + extra.len());
+    put_str(&mut out, name);
+    out.extend_from_slice(extra);
+    out
+}

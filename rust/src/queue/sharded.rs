@@ -1,0 +1,192 @@
+//! Sharded QueueServer (paper §II.E, Scalability): "it is possible to use
+//! several QueueServers in which each one stores a different type of task
+//! ... A different server can host each queue, and we can use a load
+//! balancer to choose the correct queue."
+//!
+//! [`ShardedQueue`] is that load balancer: it routes each QUEUE NAME to
+//! one of N backends via rendezvous (highest-random-weight) hashing, so
+//! adding a shard only remaps ~1/N of the queues and every client derives
+//! the same placement independently — no routing table to distribute.
+//! Backends are any [`QueueApi`] (in-process brokers, TCP clients, or a
+//! mix), so the training run's heavy per-batch gradient queues can live
+//! on different servers than the task queue.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::{Delivery, QueueApi, QueueStats};
+
+/// Stateless queue-name -> shard router + fan-out for the QueueApi.
+pub struct ShardedQueue {
+    shards: Vec<Box<dyn QueueApi>>,
+}
+
+impl ShardedQueue {
+    pub fn new(shards: Vec<Box<dyn QueueApi>>) -> Result<Self> {
+        if shards.is_empty() {
+            bail!("need at least one shard");
+        }
+        Ok(ShardedQueue { shards })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Rendezvous hash: shard with the highest weight(queue, shard) wins.
+    pub fn shard_for(&self, queue: &str) -> usize {
+        let mut best = (0usize, 0u64);
+        for i in 0..self.shards.len() {
+            let w = Self::weight(queue, i as u64);
+            if w >= best.1 {
+                best = (i, w);
+            }
+        }
+        best.0
+    }
+
+    fn weight(queue: &str, shard: u64) -> u64 {
+        // FNV-1a over the name, mixed with the shard id (SplitMix finale).
+        let mut h = 0xcbf29ce484222325u64;
+        for b in queue.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        let mut z = h ^ shard.wrapping_mul(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    fn shard(&self, queue: &str) -> &dyn QueueApi {
+        self.shards[self.shard_for(queue)].as_ref()
+    }
+}
+
+impl QueueApi for ShardedQueue {
+    fn declare(&self, queue: &str) -> Result<()> {
+        self.shard(queue).declare(queue)
+    }
+
+    fn publish(&self, queue: &str, payload: &[u8]) -> Result<()> {
+        self.shard(queue).publish(queue, payload)
+    }
+
+    fn publish_pri(&self, queue: &str, payload: &[u8], priority: u64) -> Result<()> {
+        self.shard(queue).publish_pri(queue, payload, priority)
+    }
+
+    fn consume(&self, queue: &str, timeout: Duration) -> Result<Option<Delivery>> {
+        self.shard(queue).consume(queue, timeout)
+    }
+
+    fn ack(&self, queue: &str, tag: u64) -> Result<()> {
+        self.shard(queue).ack(queue, tag)
+    }
+
+    fn nack(&self, queue: &str, tag: u64) -> Result<()> {
+        self.shard(queue).nack(queue, tag)
+    }
+
+    fn len(&self, queue: &str) -> Result<usize> {
+        self.shard(queue).len(queue)
+    }
+
+    fn purge(&self, queue: &str) -> Result<()> {
+        self.shard(queue).purge(queue)
+    }
+
+    fn stats(&self, queue: &str) -> Result<QueueStats> {
+        self.shard(queue).stats(queue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::broker::Broker;
+
+    fn sharded(n: usize) -> ShardedQueue {
+        ShardedQueue::new(
+            (0..n)
+                .map(|_| Box::new(Broker::with_default_timeout()) as Box<dyn QueueApi>)
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(ShardedQueue::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_spread() {
+        let s = sharded(4);
+        let mut counts = [0usize; 4];
+        for i in 0..200 {
+            let q = format!("results.map.e{}.b{}", i / 16, i % 16);
+            let shard = s.shard_for(&q);
+            assert_eq!(shard, s.shard_for(&q), "routing must be stable");
+            counts[shard] += 1;
+        }
+        // All shards get a reasonable share (no pathological skew).
+        for (i, c) in counts.iter().enumerate() {
+            assert!(*c > 20, "shard {i} got only {c}/200 queues");
+        }
+    }
+
+    #[test]
+    fn adding_a_shard_remaps_a_minority() {
+        let a = sharded(4);
+        let b = sharded(5);
+        let mut moved = 0;
+        let total = 300;
+        for i in 0..total {
+            let q = format!("queue.{i}");
+            // Rendezvous property: placements only move TO the new shard.
+            let sa = a.shard_for(&q);
+            let sb = b.shard_for(&q);
+            if sa != sb {
+                moved += 1;
+                assert_eq!(sb, 4, "queue {q} moved between old shards");
+            }
+        }
+        assert!(
+            moved < total / 3,
+            "adding one shard moved {moved}/{total} queues"
+        );
+    }
+
+    #[test]
+    fn end_to_end_through_shards() {
+        let s = sharded(3);
+        for q in ["tasks", "results.map.e0.b0", "results.map.e0.b1"] {
+            s.declare(q).unwrap();
+            s.publish_pri(q, q.as_bytes(), 1).unwrap();
+        }
+        for q in ["tasks", "results.map.e0.b0", "results.map.e0.b1"] {
+            let d = s.consume(q, Duration::from_millis(10)).unwrap().unwrap();
+            assert_eq!(d.payload, q.as_bytes());
+            s.ack(q, d.tag).unwrap();
+            assert_eq!(s.len(q).unwrap(), 0);
+        }
+    }
+
+    #[test]
+    fn full_training_protocol_over_shards() {
+        // The Initiator + queue ops work unchanged over the balancer.
+        use crate::coordinator::initiator::setup_problem;
+        use crate::coordinator::ProblemSpec;
+        use crate::data::Store;
+        use crate::textdata::{Corpus, Schedule};
+
+        let s = sharded(3);
+        let store = Store::new();
+        let spec = ProblemSpec { schedule: Schedule::tiny(), learning_rate: 0.1 };
+        let corpus = Corpus::synthetic_js(1, 2000);
+        let summary = setup_problem(&s, &store, &spec, &corpus, vec![0.0; 16]).unwrap();
+        assert_eq!(summary.map_tasks + summary.reduce_tasks, s.len("tasks").unwrap());
+    }
+}

@@ -1,0 +1,223 @@
+//! Wire protocol (S16) — the STOMP-over-WebSocket stand-in.
+//!
+//! Length-prefixed binary frames over TCP, synchronous request/response
+//! per connection (one connection per volunteer thread, like one WebSocket
+//! per browser tab):
+//!
+//! ```text
+//! request:  [len u32 LE] [op u8]     [body ...]
+//! response: [len u32 LE] [status u8] [body ...]
+//! ```
+//!
+//! `len` counts op/status + body. Queue and data operations share the
+//! framing so one server binary can host the QueueServer, the DataServer,
+//! or both (paper §II.E Scalability: "several QueueServers ... a
+//! distributed DataServer").
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+/// Request opcodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Op {
+    // Queue ops
+    Declare = 1,
+    Publish = 2,
+    Consume = 3,
+    Ack = 4,
+    Nack = 5,
+    Len = 6,
+    Purge = 7,
+    Stats = 8,
+    PublishPri = 9,
+    // Data ops
+    Put = 16,
+    Get = 17,
+    Del = 18,
+    PutVersioned = 19,
+    GetVersioned = 20,
+    WaitVersion = 21,
+    Incr = 22,
+    // Admin
+    Ping = 32,
+    Shutdown = 33,
+}
+
+impl Op {
+    pub fn from_u8(v: u8) -> Result<Op> {
+        Ok(match v {
+            1 => Op::Declare,
+            2 => Op::Publish,
+            3 => Op::Consume,
+            4 => Op::Ack,
+            5 => Op::Nack,
+            6 => Op::Len,
+            7 => Op::Purge,
+            8 => Op::Stats,
+            9 => Op::PublishPri,
+            16 => Op::Put,
+            17 => Op::Get,
+            18 => Op::Del,
+            19 => Op::PutVersioned,
+            20 => Op::GetVersioned,
+            21 => Op::WaitVersion,
+            22 => Op::Incr,
+            32 => Op::Ping,
+            33 => Op::Shutdown,
+            _ => bail!("unknown opcode {v}"),
+        })
+    }
+}
+
+/// Response status byte.
+pub const ST_OK: u8 = 0;
+pub const ST_ERR: u8 = 1;
+/// Successful call, empty result (consume timeout, missing key).
+pub const ST_NONE: u8 = 2;
+
+/// Hard cap on frame size: a model snapshot is ~440 KB; corpus ~1 MB.
+pub const MAX_FRAME: usize = 64 << 20;
+
+pub fn write_frame<W: Write>(w: &mut W, head: u8, body: &[u8]) -> Result<()> {
+    let len = 1 + body.len();
+    if len > MAX_FRAME {
+        bail!("frame too large: {len}");
+    }
+    w.write_all(&(len as u32).to_le_bytes())?;
+    w.write_all(&[head])?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>)> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 || len > MAX_FRAME {
+        bail!("bad frame length {len}");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    let head = buf[0];
+    buf.drain(..1);
+    Ok((head, buf))
+}
+
+// --- body building / parsing ------------------------------------------------
+
+/// Append a length-prefixed string (u16 length).
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    assert!(b.len() <= u16::MAX as usize, "name too long");
+    out.extend_from_slice(&(b.len() as u16).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+/// Sequential reader over a frame body.
+pub struct BodyReader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> BodyReader<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        BodyReader { b, i: 0 }
+    }
+
+    pub fn str(&mut self) -> Result<&'a str> {
+        if self.i + 2 > self.b.len() {
+            bail!("body truncated (str len)");
+        }
+        let n = u16::from_le_bytes(self.b[self.i..self.i + 2].try_into().unwrap()) as usize;
+        self.i += 2;
+        if self.i + n > self.b.len() {
+            bail!("body truncated (str)");
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + n])?;
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        if self.i + 8 > self.b.len() {
+            bail!("body truncated (u64)");
+        }
+        let v = u64::from_le_bytes(self.b[self.i..self.i + 8].try_into().unwrap());
+        self.i += 8;
+        Ok(v)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        if self.i >= self.b.len() {
+            bail!("body truncated (u8)");
+        }
+        let v = self.b[self.i];
+        self.i += 1;
+        Ok(v)
+    }
+
+    /// All remaining bytes.
+    pub fn rest(&mut self) -> &'a [u8] {
+        let r = &self.b[self.i..];
+        self.i = self.b.len();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Op::Publish as u8, b"hello").unwrap();
+        let (op, body) = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(op, Op::Publish as u8);
+        assert_eq!(body, b"hello");
+    }
+
+    #[test]
+    fn frame_rejects_bad_length() {
+        let buf = 0u32.to_le_bytes();
+        assert!(read_frame(&mut &buf[..]).is_err());
+        let huge = ((MAX_FRAME + 2) as u32).to_le_bytes();
+        assert!(read_frame(&mut &huge[..]).is_err());
+    }
+
+    #[test]
+    fn body_reader_parses_mixed() {
+        let mut out = Vec::new();
+        put_str(&mut out, "queue.name");
+        out.extend_from_slice(&7u64.to_le_bytes());
+        out.push(1);
+        out.extend_from_slice(b"payload");
+        let mut r = BodyReader::new(&out);
+        assert_eq!(r.str().unwrap(), "queue.name");
+        assert_eq!(r.u64().unwrap(), 7);
+        assert_eq!(r.u8().unwrap(), 1);
+        assert_eq!(r.rest(), b"payload");
+    }
+
+    #[test]
+    fn body_reader_rejects_truncation() {
+        let mut out = Vec::new();
+        put_str(&mut out, "q");
+        let mut r = BodyReader::new(&out[..1]);
+        assert!(r.str().is_err());
+        let mut r2 = BodyReader::new(&out);
+        r2.str().unwrap();
+        assert!(r2.u64().is_err());
+    }
+
+    #[test]
+    fn opcode_roundtrip() {
+        for op in [Op::Declare, Op::Consume, Op::WaitVersion, Op::Shutdown] {
+            assert_eq!(Op::from_u8(op as u8).unwrap(), op);
+        }
+        assert!(Op::from_u8(99).is_err());
+    }
+}

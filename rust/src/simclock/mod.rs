@@ -1,0 +1,165 @@
+//! Discrete-event simulation engine (S9).
+//!
+//! The paper's experiments run for minutes to hours of wall-clock time
+//! (Table 4: 177 minutes for one cluster worker). To regenerate every
+//! figure deterministically and in milliseconds, the volunteer simulator
+//! (`volunteer::sim`) runs the *same protocol state machine* on a virtual
+//! clock: a priority queue of (time, seq, event), with seq breaking ties
+//! FIFO so equal-time events replay identically.
+//!
+//! Time is f64 seconds since experiment start (matching the paper's axes).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at a virtual time, carrying an opaque payload `E`.
+struct Scheduled<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first, then
+        // smallest-seq-first for deterministic FIFO tie-breaking.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The virtual clock + event queue.
+pub struct SimClock<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: f64,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for SimClock<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> SimClock<E> {
+    pub fn new() -> Self {
+        SimClock { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    /// Current virtual time (seconds).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Number of events executed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `event` at `now + delay` (delay clamped to >= 0).
+    pub fn schedule_in(&mut self, delay: f64, event: E) {
+        let t = self.now + delay.max(0.0);
+        self.schedule_at(t, event);
+    }
+
+    /// Schedule `event` at absolute time `t` (clamped to >= now).
+    pub fn schedule_at(&mut self, t: f64, event: E) {
+        let time = if t < self.now { self.now } else { t };
+        assert!(time.is_finite(), "non-finite event time");
+        self.heap.push(Scheduled { time, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Pop the next event, advancing the clock to its time.
+    pub fn next(&mut self) -> Option<(f64, E)> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.time >= self.now, "time went backwards");
+        self.now = s.time;
+        self.processed += 1;
+        Some((s.time, s.event))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut c = SimClock::new();
+        c.schedule_in(5.0, "c");
+        c.schedule_in(1.0, "a");
+        c.schedule_in(3.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| c.next().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(c.now(), 5.0);
+        assert_eq!(c.processed(), 3);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut c = SimClock::new();
+        for i in 0..10 {
+            c.schedule_at(2.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| c.next().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut c = SimClock::new();
+        c.schedule_in(2.0, ());
+        c.next();
+        // Scheduling in the past clamps to now.
+        c.schedule_at(1.0, ());
+        let (t, _) = c.next().unwrap();
+        assert_eq!(t, 2.0);
+    }
+
+    #[test]
+    fn negative_delay_clamps() {
+        let mut c = SimClock::new();
+        c.schedule_in(-5.0, "x");
+        let (t, _) = c.next().unwrap();
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn interleaved_schedule_and_pop() {
+        let mut c = SimClock::new();
+        c.schedule_in(1.0, 1);
+        let (_, e) = c.next().unwrap();
+        assert_eq!(e, 1);
+        c.schedule_in(1.0, 2); // at t=2
+        c.schedule_in(0.5, 3); // at t=1.5
+        assert_eq!(c.next().unwrap(), (1.5, 3));
+        assert_eq!(c.next().unwrap(), (2.0, 2));
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,6 @@
+//! Mini property-testing harness (proptest is unavailable offline — see
+//! DESIGN.md §Substitutions). Seeded generation + a fixed case budget +
+//! failure reporting with the reproducing seed. No shrinking; cases are
+//! kept small instead.
+
+pub mod prop;

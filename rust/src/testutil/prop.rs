@@ -1,0 +1,78 @@
+//! `check(name, cases, |rng| ...)` runs a property over `cases` random
+//! inputs derived from a fixed master seed (override with env
+//! JSDOOP_PROP_SEED to replay). Each case gets an independent [`Rng`]; on
+//! failure the panic message carries the case seed for replay.
+
+use crate::util::prng::Rng;
+
+/// Default number of cases per property (kept moderate: several
+/// properties spin up whole broker/fleet stacks per case).
+pub const DEFAULT_CASES: u64 = 32;
+
+fn master_seed() -> u64 {
+    std::env::var("JSDOOP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_cafe_f00d_u64)
+}
+
+/// Run `prop` over `cases` seeded inputs. The property receives a fresh
+/// deterministic [`Rng`]; return `Err(msg)` (or panic) to fail.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let master = master_seed();
+    for case in 0..cases {
+        let case_seed = master ^ case.wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases}: {msg}\n\
+                 replay with JSDOOP_PROP_SEED={master} (case seed {case_seed})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 10, |_rng| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'boom' failed")]
+    fn failing_property_panics_with_seed() {
+        check("boom", 5, |rng| {
+            if rng.below(2) == 0 {
+                Err("bad".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check("collect", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("collect", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,392 @@
+//! Text workload substrate (S13, paper §V.A): vocabulary, training corpus,
+//! and the deterministic sample/batch schedule.
+//!
+//! The paper trains on "TensorFlow.js code (compiled, 0.11.7)" — minified
+//! JavaScript. That exact blob is immaterial (the paper itself says any
+//! text would do); we ship a deterministic JS-like corpus generator with
+//! the same character regime (printable ASCII + newlines/tabs) so every
+//! run — Rust or Python, distributed or sequential — sees identical data.
+//!
+//! Determinism contract: sample i of epoch e is a pure function of
+//! (corpus, e, i). The distributed map tasks and the sequential baseline
+//! therefore consume bit-identical batches, which is what makes the
+//! paper's "same loss in every configuration" row reproducible.
+
+use anyhow::{bail, Result};
+
+use crate::util::prng::Rng;
+
+/// Fixed vocabulary: 0='\t', 1='\n', 2..=96 = ASCII 32..126, 97 = <unk>.
+/// Matches `VOCAB = 98` in python/compile/model.py (checked at load).
+pub const VOCAB: usize = 98;
+const UNK: u8 = 97;
+
+/// Char -> id. Total function: unknown bytes map to `<unk>`.
+pub fn char_to_id(c: u8) -> u8 {
+    match c {
+        b'\t' => 0,
+        b'\n' => 1,
+        32..=126 => c - 32 + 2,
+        _ => UNK,
+    }
+}
+
+/// Id -> representative char ('?' for `<unk>`).
+pub fn id_to_char(id: u8) -> u8 {
+    match id {
+        0 => b'\t',
+        1 => b'\n',
+        2..=96 => id - 2 + 32,
+        _ => b'?',
+    }
+}
+
+/// An encoded training corpus.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    ids: Vec<u8>,
+}
+
+impl Corpus {
+    pub fn from_text(text: &str) -> Result<Self> {
+        if text.len() < 256 {
+            bail!("corpus too small ({} bytes); need >= 256", text.len());
+        }
+        Ok(Corpus { ids: text.bytes().map(char_to_id).collect() })
+    }
+
+    pub fn from_encoded(ids: Vec<u8>) -> Result<Self> {
+        if ids.len() < 256 {
+            bail!("corpus too small");
+        }
+        if let Some(&bad) = ids.iter().find(|&&c| c as usize >= VOCAB) {
+            bail!("corpus contains invalid id {bad}");
+        }
+        Ok(Corpus { ids })
+    }
+
+    /// Deterministic JS-like corpus (the TF.js-0.11.7 stand-in): seeded
+    /// stream of function definitions, expressions, and literals with
+    /// realistic character statistics.
+    pub fn synthetic_js(seed: u64, target_len: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut text = String::with_capacity(target_len + 128);
+        text.push_str("// jsdoop synthetic corpus (tfjs stand-in)\n'use strict';\n");
+        const IDENTS: &[&str] = &[
+            "tensor", "shape", "dtype", "grad", "matMul", "forward", "backward",
+            "adamStep", "lstmCell", "batch", "loss", "optimizer", "weights",
+            "bias", "kernel", "output", "input", "layer", "model", "train",
+            "dispose", "dataSync", "softmax", "sigmoid", "tanh", "relu",
+            "slice", "concat", "reshape", "transpose", "sum", "mean", "sqrt",
+        ];
+        const KEYWORDS: &[&str] = &[
+            "function", "const", "let", "var", "return", "if", "else", "for",
+            "while", "new", "this", "class", "extends", "async", "await",
+        ];
+        while text.len() < target_len {
+            let f = IDENTS[rng.below(IDENTS.len() as u64) as usize];
+            let g = IDENTS[rng.below(IDENTS.len() as u64) as usize];
+            let h = IDENTS[rng.below(IDENTS.len() as u64) as usize];
+            let kw = KEYWORDS[rng.below(KEYWORDS.len() as u64) as usize];
+            match rng.below(6) {
+                0 => {
+                    text.push_str(&format!(
+                        "function {f}_{n}({g}, {h}) {{\n  return {g}.{f}({h}) * {v};\n}}\n",
+                        n = rng.below(1000),
+                        v = rng.f64() * 4.0 - 2.0
+                    ));
+                }
+                1 => {
+                    text.push_str(&format!(
+                        "const {f}{n} = {kw} === '{g}' ? {h}[{i}] : {f}.{g}();\n",
+                        n = rng.below(100),
+                        i = rng.below(64)
+                    ));
+                }
+                2 => {
+                    text.push_str(&format!(
+                        "for (let i = 0; i < {n}; ++i) {{ {f}[i] += {g}[i] * {v}; }}\n",
+                        n = rng.below(512) + 1,
+                        v = rng.f64()
+                    ));
+                }
+                3 => {
+                    text.push_str(&format!(
+                        "if ({f}.{g} > {v}) {{ {h}.push({{{f}: {n}, {g}: '{h}'}}); }}\n",
+                        v = rng.f64() * 10.0,
+                        n = rng.below(9999)
+                    ));
+                }
+                4 => {
+                    text.push_str(&format!(
+                        "class {F}{n} extends {G} {{ constructor() {{ super(); this.{f} = {v}; }} }}\n",
+                        F = capitalize(f),
+                        G = capitalize(g),
+                        n = rng.below(50),
+                        v = rng.below(256)
+                    ));
+                }
+                _ => {
+                    text.push_str(&format!(
+                        "\tmodule.exports.{f} = ({g}) => {g}.map(x => x * {v}).reduce((a, b) => a + b, {n});\n",
+                        v = rng.f64() * 2.0,
+                        n = rng.below(10)
+                    ));
+                }
+            }
+        }
+        text.truncate(target_len);
+        Corpus { ids: text.bytes().map(char_to_id).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn ids(&self) -> &[u8] {
+        &self.ids
+    }
+
+    /// Raw bytes for DataServer storage.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.ids.clone()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        Self::from_encoded(bytes.to_vec())
+    }
+
+    /// Decode a window back to text (demo / debugging).
+    pub fn decode(&self, start: usize, len: usize) -> String {
+        self.ids[start..(start + len).min(self.ids.len())]
+            .iter()
+            .map(|&i| id_to_char(i) as char)
+            .collect()
+    }
+}
+
+fn capitalize(s: &str) -> String {
+    let mut c = s.chars();
+    match c.next() {
+        Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+        None => String::new(),
+    }
+}
+
+/// Table 2 + Table 3 parameters as one schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Schedule {
+    pub seq_len: usize,            // 40
+    pub batch_size: usize,         // 128
+    pub minibatch_size: usize,     // 8
+    pub examples_per_epoch: usize, // 2048
+    pub epochs: usize,             // 5
+}
+
+impl Schedule {
+    /// The paper's configuration (Tables 2-3).
+    pub fn paper() -> Self {
+        Schedule {
+            seq_len: 40,
+            batch_size: 128,
+            minibatch_size: 8,
+            examples_per_epoch: 2048,
+            epochs: 5,
+        }
+    }
+
+    /// A scaled-down schedule for fast tests.
+    pub fn tiny() -> Self {
+        Schedule {
+            seq_len: 40,
+            batch_size: 16,
+            minibatch_size: 8,
+            examples_per_epoch: 32,
+            epochs: 1,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.batch_size == 0 || self.minibatch_size == 0 || self.seq_len == 0 {
+            bail!("schedule sizes must be positive");
+        }
+        if self.batch_size % self.minibatch_size != 0 {
+            bail!("batch_size must be a multiple of minibatch_size");
+        }
+        if self.examples_per_epoch % self.batch_size != 0 {
+            bail!("examples_per_epoch must be a multiple of batch_size");
+        }
+        Ok(())
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.examples_per_epoch / self.batch_size
+    }
+
+    pub fn minibatches_per_batch(&self) -> usize {
+        self.batch_size / self.minibatch_size
+    }
+
+    pub fn total_batches(&self) -> usize {
+        self.epochs * self.batches_per_epoch()
+    }
+
+    pub fn total_map_tasks(&self) -> usize {
+        self.total_batches() * self.minibatches_per_batch()
+    }
+
+    /// Start offset of sample `idx` of `epoch` — pure deterministic hash
+    /// (replaces the TF.js example's `Math.random()` starts; same effect,
+    /// reproducible).
+    pub fn sample_start(&self, corpus_len: usize, epoch: usize, idx: usize) -> usize {
+        let span = corpus_len - self.seq_len - 1;
+        let mut h = (epoch as u64).wrapping_mul(0x9e3779b97f4a7c15) ^ (idx as u64);
+        h ^= h >> 33;
+        h = h.wrapping_mul(0xff51afd7ed558ccd);
+        h ^= h >> 33;
+        (h % span as u64) as usize
+    }
+
+    /// Materialize samples [first, first+count) of `epoch` as (x, y)
+    /// arrays: x is row-major [count, seq_len] i32, y is [count] i32.
+    pub fn samples(
+        &self,
+        corpus: &Corpus,
+        epoch: usize,
+        first: usize,
+        count: usize,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(count * self.seq_len);
+        let mut y = Vec::with_capacity(count);
+        for k in 0..count {
+            let start = self.sample_start(corpus.len(), epoch, first + k);
+            for t in 0..self.seq_len {
+                x.push(corpus.ids()[start + t] as i32);
+            }
+            y.push(corpus.ids()[start + self.seq_len] as i32);
+        }
+        (x, y)
+    }
+
+    /// The 8-sample minibatch for a map task.
+    pub fn minibatch(
+        &self,
+        corpus: &Corpus,
+        epoch: usize,
+        batch: usize,
+        minibatch: usize,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let first = batch * self.batch_size + minibatch * self.minibatch_size;
+        self.samples(corpus, epoch, first, self.minibatch_size)
+    }
+
+    /// The full 128-sample batch (sequential baseline / eval).
+    pub fn batch(&self, corpus: &Corpus, epoch: usize, batch: usize) -> (Vec<i32>, Vec<i32>) {
+        self.samples(corpus, epoch, batch * self.batch_size, self.batch_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn char_mapping_roundtrips_printables() {
+        for c in 32u8..=126 {
+            assert_eq!(id_to_char(char_to_id(c)), c);
+        }
+        assert_eq!(id_to_char(char_to_id(b'\n')), b'\n');
+        assert_eq!(id_to_char(char_to_id(b'\t')), b'\t');
+        assert_eq!(char_to_id(200), UNK);
+        assert!((char_to_id(0) as usize) < VOCAB);
+    }
+
+    #[test]
+    fn synthetic_corpus_deterministic() {
+        let a = Corpus::synthetic_js(7, 5000);
+        let b = Corpus::synthetic_js(7, 5000);
+        assert_eq!(a.ids(), b.ids());
+        assert_eq!(a.len(), 5000);
+        let c = Corpus::synthetic_js(8, 5000);
+        assert_ne!(a.ids(), c.ids());
+    }
+
+    #[test]
+    fn corpus_bytes_roundtrip() {
+        let a = Corpus::synthetic_js(1, 1000);
+        let b = Corpus::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(a.ids(), b.ids());
+    }
+
+    #[test]
+    fn corpus_rejects_tiny_and_invalid() {
+        assert!(Corpus::from_text("short").is_err());
+        let mut ids = vec![0u8; 300];
+        ids[5] = 99; // >= VOCAB
+        assert!(Corpus::from_encoded(ids).is_err());
+    }
+
+    #[test]
+    fn paper_schedule_counts() {
+        let s = Schedule::paper();
+        s.validate().unwrap();
+        assert_eq!(s.batches_per_epoch(), 16);
+        assert_eq!(s.minibatches_per_batch(), 16);
+        assert_eq!(s.total_batches(), 80);
+        assert_eq!(s.total_map_tasks(), 1280);
+    }
+
+    #[test]
+    fn schedule_validation_catches_misconfig() {
+        let mut s = Schedule::paper();
+        s.minibatch_size = 7;
+        assert!(s.validate().is_err());
+        let mut s2 = Schedule::paper();
+        s2.examples_per_epoch = 100;
+        assert!(s2.validate().is_err());
+    }
+
+    #[test]
+    fn minibatches_tile_the_batch() {
+        let s = Schedule::tiny();
+        let corpus = Corpus::synthetic_js(3, 4000);
+        let (bx, by) = s.batch(&corpus, 0, 1);
+        let k = s.minibatches_per_batch();
+        let mut mx = Vec::new();
+        let mut my = Vec::new();
+        for m in 0..k {
+            let (x, y) = s.minibatch(&corpus, 0, 1, m);
+            mx.extend(x);
+            my.extend(y);
+        }
+        assert_eq!(mx, bx);
+        assert_eq!(my, by);
+    }
+
+    #[test]
+    fn sample_starts_in_bounds_and_stable() {
+        let s = Schedule::paper();
+        let len = 100_000;
+        for epoch in 0..3 {
+            for idx in (0..2048).step_by(111) {
+                let st = s.sample_start(len, epoch, idx);
+                assert!(st + s.seq_len + 1 <= len);
+                assert_eq!(st, s.sample_start(len, epoch, idx));
+            }
+        }
+    }
+
+    #[test]
+    fn next_char_label_is_adjacent() {
+        let s = Schedule::tiny();
+        let corpus = Corpus::synthetic_js(5, 3000);
+        let (x, y) = s.samples(&corpus, 0, 0, 1);
+        let start = s.sample_start(corpus.len(), 0, 0);
+        assert_eq!(x[0], corpus.ids()[start] as i32);
+        assert_eq!(y[0], corpus.ids()[start + s.seq_len] as i32);
+    }
+}

@@ -1,0 +1,45 @@
+//! Small shared utilities: JSON codec, deterministic PRNG, byte helpers.
+
+pub mod json;
+pub mod prng;
+
+/// Decode a little-endian f32 buffer (e.g. `artifacts/init_params.bin`,
+/// gradient payloads on the wire).
+pub fn f32_from_le_bytes(bytes: &[u8]) -> Vec<f32> {
+    assert!(bytes.len() % 4 == 0, "f32 buffer length must be 4-aligned");
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Encode f32s little-endian.
+pub fn f32_to_le_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Format a duration in the paper's unit (minutes, 1 decimal).
+pub fn fmt_minutes(seconds: f64) -> String {
+    format!("{:.1}", seconds / 60.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let v = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        assert_eq!(f32_from_le_bytes(&f32_to_le_bytes(&v)), v);
+    }
+
+    #[test]
+    #[should_panic]
+    fn f32_misaligned_panics() {
+        f32_from_le_bytes(&[1, 2, 3]);
+    }
+}

@@ -1,0 +1,286 @@
+//! Volunteer agent (S6, paper §IV.A + §IV.F steps 2-5): the task loop a
+//! browser runs. Pull a task from the InitialQueue, resolve it (map =
+//! minibatch gradient via the PJRT engine; reduce = collect + fold +
+//! RMSprop update), publish results, ACK. Synchronization is the §IV.G
+//! model-version wait; fault tolerance is ACK + visibility timeout.
+//!
+//! The agent only sees trait objects ([`QueueApi`], [`DataApi`]) so the
+//! same code runs against the in-process broker (cluster mode) or TCP
+//! clients (classroom mode) — the paper's NodeJS-console vs browser split.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::initiator::fetch_problem;
+use crate::coordinator::task::{GradResult, Task};
+use crate::coordinator::version::{publish_model, stop_requested, wait_exact_model};
+use crate::coordinator::{keys, queues, ProblemSpec};
+use crate::data::DataApi;
+use crate::metrics::{Span, SpanKind, Timeline};
+use crate::model::{GradAccumulator, ModelSnapshot};
+use crate::queue::{Delivery, QueueApi};
+use crate::runtime::{Engine, GRAD_STEP_B8};
+use crate::textdata::Corpus;
+
+/// Tuning knobs for one agent.
+#[derive(Debug, Clone)]
+pub struct AgentOptions {
+    /// Long-poll timeout per consume.
+    pub poll: Duration,
+    /// Bound on one model-version wait before NACKing the task back
+    /// (prevents holding a task past its visibility window).
+    pub version_wait: Duration,
+    /// Artificial per-task slowdown factor (heterogeneity emulation in
+    /// real mode; 1.0 = full speed).
+    pub speed: f64,
+    /// Experiment start for timeline spans.
+    pub t0: std::time::Instant,
+}
+
+impl Default for AgentOptions {
+    fn default() -> Self {
+        AgentOptions {
+            poll: Duration::from_millis(500),
+            version_wait: Duration::from_secs(20),
+            speed: 1.0,
+            t0: std::time::Instant::now(),
+        }
+    }
+}
+
+/// Outcome counters for one agent's session.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AgentReport {
+    pub maps_done: u64,
+    pub reduces_done: u64,
+    pub tasks_nacked: u64,
+    pub stale_skipped: u64,
+    /// Priority swaps: held task returned for an earlier one (see below).
+    pub tasks_swapped: u64,
+}
+
+/// Does `a` precede `b` in the batch order? Strictly-earlier model
+/// versions always precede; within a batch its maps precede its reduce.
+/// This is the priority-swap rule that keeps the protocol deadlock-free:
+/// a worker parked on a future version periodically probes the queue head
+/// and trades its held task (NACKed back to the front, i.e. its original
+/// position) for an earlier one — so redelivered tasks of the current
+/// batch can never be starved by parked workers.
+fn precedes(a: &Task, b: &Task) -> bool {
+    a.model_version() < b.model_version()
+        || (a.model_version() == b.model_version()
+            && matches!(a, Task::Map { .. })
+            && matches!(b, Task::Reduce { .. }))
+}
+
+/// A volunteer: wraps the engine + connections and runs the task loop.
+pub struct Agent<'a> {
+    pub id: usize,
+    pub engine: &'a Engine,
+    pub queue: &'a dyn QueueApi,
+    pub data: &'a dyn DataApi,
+    pub timeline: Option<&'a Timeline>,
+    pub opts: AgentOptions,
+}
+
+impl<'a> Agent<'a> {
+    /// Run until the model reaches its final version, stop is requested,
+    /// or `quit` is set (the volunteer closes the tab).
+    pub fn run(&self, quit: &AtomicBool) -> Result<AgentReport> {
+        let (spec, corpus) = fetch_problem(self.data)?;
+        let mut report = AgentReport::default();
+        loop {
+            if quit.load(Ordering::Relaxed) || stop_requested(self.data)? {
+                return Ok(report);
+            }
+            if self.finished(&spec)? {
+                return Ok(report);
+            }
+            let Some(delivery) = self.queue.consume(queues::TASKS, self.opts.poll)? else {
+                continue;
+            };
+            let task = match Task::decode(&delivery.payload) {
+                Ok(t) => t,
+                Err(e) => {
+                    // Poison message: drop it (ACK) and keep serving.
+                    self.queue.ack(queues::TASKS, delivery.tag)?;
+                    eprintln!("agent {}: dropping malformed task: {e}", self.id);
+                    continue;
+                }
+            };
+            self.handle(&spec, &corpus, task, &delivery, quit, &mut report)?;
+        }
+    }
+
+    fn finished(&self, spec: &ProblemSpec) -> Result<bool> {
+        let v = crate::coordinator::version::current_version(self.data)?;
+        Ok(v.unwrap_or(0) >= spec.total_versions())
+    }
+
+    fn now(&self) -> f64 {
+        self.opts.t0.elapsed().as_secs_f64()
+    }
+
+    fn record(&self, kind: SpanKind, start: f64) {
+        if let Some(t) = self.timeline {
+            t.record(Span { worker: self.id, kind, start, end: self.now() });
+        }
+    }
+
+    fn handle(
+        &self,
+        spec: &ProblemSpec,
+        corpus: &Corpus,
+        task: Task,
+        delivery: &Delivery,
+        quit: &AtomicBool,
+        report: &mut AgentReport,
+    ) -> Result<()> {
+        let start = self.now();
+        // §IV.G: wait for the model version this task pins, probing the
+        // queue head between waits for earlier work (priority-swap).
+        let snapshot = loop {
+            match wait_exact_model(self.data, task.model_version(), self.opts.version_wait) {
+                Ok(Some(s)) => break s,
+                Ok(None) => {
+                    if quit.load(Ordering::Relaxed) {
+                        self.queue.nack(queues::TASKS, delivery.tag)?;
+                        report.tasks_nacked += 1;
+                        return Ok(());
+                    }
+                    if let Some(d2) = self.queue.consume(queues::TASKS, Duration::ZERO)? {
+                        match Task::decode(&d2.payload) {
+                            Ok(t2) if precedes(&t2, &task) => {
+                                // Swap: our task returns to the front; the
+                                // earlier task runs now.
+                                self.queue.nack(queues::TASKS, delivery.tag)?;
+                                report.tasks_swapped += 1;
+                                return self.handle(spec, corpus, t2, &d2, quit, report);
+                            }
+                            Ok(_) => self.queue.nack(queues::TASKS, d2.tag)?,
+                            Err(_) => self.queue.ack(queues::TASKS, d2.tag)?, // poison
+                        }
+                    }
+                    continue;
+                }
+                    Err(_) => {
+                    // Model advanced past the pinned version: a duplicate
+                    // of an already-reduced batch. Settle it; for a stale
+                    // reduce also drop any orphaned gradients (they linger
+                    // if the original reducer died between publishing the
+                    // model and ACKing its gradient messages).
+                    if let Task::Reduce { batch_ref, .. } = task {
+                        self.queue.purge(&queues::map_results(batch_ref))?;
+                    }
+                    self.queue.ack(queues::TASKS, delivery.tag)?;
+                    report.stale_skipped += 1;
+                    return Ok(());
+                }
+            }
+        };
+        match task {
+            Task::Map { batch_ref, minibatch, .. } => {
+                let (x, y) = spec.schedule.minibatch(
+                    corpus,
+                    batch_ref.epoch as usize,
+                    batch_ref.batch as usize,
+                    minibatch as usize,
+                );
+                let (grads, loss) = self
+                    .engine
+                    .grad_step(GRAD_STEP_B8, &snapshot.params, &x, &y)
+                    .context("map grad_step")?;
+                self.throttle(start);
+                let result = GradResult { batch_ref, minibatch, loss, grads };
+                self.queue
+                    .publish(&queues::map_results(batch_ref), &result.encode())?;
+                self.queue.ack(queues::TASKS, delivery.tag)?;
+                report.maps_done += 1;
+                self.record(SpanKind::Compute, start);
+            }
+            Task::Reduce { batch_ref, num_minibatches, model_version } => {
+                let rq = queues::map_results(batch_ref);
+                let mut acc = GradAccumulator::new(num_minibatches as usize);
+                let mut pending_acks = Vec::new();
+                let mut last_progress = std::time::Instant::now();
+                while !acc.is_complete() {
+                    if quit.load(Ordering::Relaxed) {
+                        // Tab closed mid-reduce: hand everything back.
+                        // NACKing the collected gradients (not dropping
+                        // them) lets the next reducer find them instantly.
+                        for tag in pending_acks {
+                            self.queue.nack(&rq, tag)?;
+                        }
+                        self.queue.nack(queues::TASKS, delivery.tag)?;
+                        report.tasks_nacked += 1;
+                        return Ok(());
+                    }
+                    if last_progress.elapsed() > self.opts.version_wait {
+                        // Gradients stalled: their producer may have died
+                        // (the map task will redeliver to the TASKS head) —
+                        // steal our own batch's map and run it inline.
+                        if let Some(d2) = self.queue.consume(queues::TASKS, Duration::ZERO)? {
+                            match Task::decode(&d2.payload) {
+                                Ok(t2 @ Task::Map { .. })
+                                    if t2.model_version() == model_version =>
+                                {
+                                    report.tasks_swapped += 1;
+                                    self.handle(spec, corpus, t2, &d2, quit, report)?;
+                                }
+                                Ok(_) => self.queue.nack(queues::TASKS, d2.tag)?,
+                                Err(_) => self.queue.ack(queues::TASKS, d2.tag)?,
+                            }
+                        }
+                        last_progress = std::time::Instant::now();
+                    }
+                    match self.queue.consume(&rq, self.opts.poll)? {
+                        Some(d) => {
+                            let g = GradResult::decode(&d.payload)
+                                .map_err(|e| anyhow!("corrupt gradient: {e}"))?;
+                            acc.insert(g.minibatch as usize, g.grads)?;
+                            pending_acks.push(d.tag);
+                            last_progress = std::time::Instant::now();
+                        }
+                        None => continue, // map stragglers / redeliveries
+                    }
+                }
+                let folded = acc.fold()?;
+                let (params, ms) = self
+                    .engine
+                    .rmsprop_update(&snapshot.params, &snapshot.ms, &folded, spec.learning_rate)
+                    .context("reduce rmsprop")?;
+                self.throttle(start);
+                publish_model(
+                    self.data,
+                    &ModelSnapshot { version: model_version + 1, params, ms },
+                )?;
+                // Settle gradients only after the model is durably
+                // published: a crash before this line redelivers them to
+                // the next reduce attempt.
+                for tag in pending_acks {
+                    self.queue.ack(&rq, tag)?;
+                }
+                self.queue.ack(queues::TASKS, delivery.tag)?;
+                self.data.incr(keys::REDUCES_DONE)?;
+                report.reduces_done += 1;
+                self.record(SpanKind::Accumulate, start);
+            }
+        }
+        Ok(())
+    }
+
+    /// Heterogeneity emulation: stretch the task to `elapsed / speed`.
+    fn throttle(&self, start: f64) {
+        if self.opts.speed >= 1.0 {
+            return;
+        }
+        let elapsed = self.now() - start;
+        let target = elapsed / self.opts.speed.max(1e-3);
+        let pad = target - elapsed;
+        if pad > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(pad.min(30.0)));
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Volunteers (S6-S8): the agent task loop ([`agent`]), the real threaded
+//! fleet ([`pool`]), the cache service-time model ([`cache`]), and the
+//! discrete-event protocol simulator ([`sim`]).
+
+pub mod agent;
+pub mod cache;
+pub mod pool;
+pub mod sim;

@@ -1,0 +1,115 @@
+//! Real threaded volunteer fleet (S7): one OS thread per volunteer running
+//! the [`Agent`] task loop against a broker/store, scripted by a
+//! [`FaultPlan`] (join late, leave early, heterogeneous speeds). This is
+//! the wall-clock twin of `volunteer::sim` — same protocol, real PJRT
+//! compute — used by the e2e examples, the integration tests, and the
+//! loss column of Table 4.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::DataApi;
+use crate::faults::FaultPlan;
+use crate::metrics::Timeline;
+use crate::queue::QueueApi;
+use crate::runtime::Engine;
+use crate::volunteer::agent::{Agent, AgentOptions, AgentReport};
+
+/// Connection factory: worker index -> (queue, data) handles. In-process
+/// fleets clone Arcs; classroom fleets dial TCP.
+pub type ConnFactory<'a> =
+    dyn Fn(usize) -> Result<(Arc<dyn QueueApi>, Arc<dyn DataApi>)> + Sync + 'a;
+
+/// Fleet outcome.
+#[derive(Debug)]
+pub struct PoolOutcome {
+    pub reports: Vec<AgentReport>,
+    pub runtime: Duration,
+}
+
+/// Run `plan.n_workers()` volunteer threads until every agent exits
+/// (problem solved, stop requested, or scripted departure).
+///
+/// `speeds[i] <= 1.0` throttles worker i (heterogeneity); the timeline
+/// collects Fig-7 spans across the fleet.
+pub fn run_pool(
+    engine: &Arc<Engine>,
+    conns: &ConnFactory<'_>,
+    plan: &FaultPlan,
+    speeds: &[f64],
+    timeline: Option<&Timeline>,
+    base_opts: &AgentOptions,
+) -> Result<PoolOutcome> {
+    let n = plan.n_workers();
+    if speeds.len() != n {
+        return Err(anyhow!("speeds length {} != workers {}", speeds.len(), n));
+    }
+    let t0 = Instant::now();
+    let quits: Vec<Arc<AtomicBool>> = (0..n).map(|_| Arc::new(AtomicBool::new(false))).collect();
+
+    let outcome = std::thread::scope(|scope| -> Result<Vec<AgentReport>> {
+        let mut handles = Vec::with_capacity(n);
+        for (i, script) in plan.workers.iter().enumerate() {
+            let quit = quits[i].clone();
+            let (queue, data) = conns(i)?;
+            let engine = engine.clone();
+            let opts = AgentOptions {
+                speed: speeds[i],
+                t0: base_opts.t0,
+                poll: base_opts.poll,
+                version_wait: base_opts.version_wait,
+            };
+            let join_at = script.join_at;
+            let handle = scope.spawn(move || -> Result<AgentReport> {
+                if join_at > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(join_at));
+                }
+                let agent = Agent {
+                    id: i,
+                    engine: &engine,
+                    queue: queue.as_ref(),
+                    data: data.as_ref(),
+                    timeline: None, // set below via run wrapper
+                    opts,
+                };
+                // Timeline is shared by reference across scoped threads.
+                let agent = Agent { timeline, ..agent };
+                agent.run(&quit)
+            });
+            handles.push(handle);
+        }
+
+        // Churn controller: flip quit flags at scripted departure times.
+        let departures: Vec<(usize, f64)> = plan
+            .workers
+            .iter()
+            .enumerate()
+            .filter_map(|(i, w)| w.leave_at.map(|t| (i, t)))
+            .collect();
+        if !departures.is_empty() {
+            let quits_ref = &quits;
+            scope.spawn(move || {
+                let mut pending = departures.clone();
+                pending.sort_by(|a, b| a.1.total_cmp(&b.1));
+                for (i, t) in pending {
+                    let now = t0.elapsed().as_secs_f64();
+                    if t > now {
+                        std::thread::sleep(Duration::from_secs_f64(t - now));
+                    }
+                    quits_ref[i].store(true, Ordering::Relaxed);
+                }
+            });
+        }
+
+        let mut reports = Vec::with_capacity(n);
+        for h in handles {
+            reports.push(h.join().map_err(|_| anyhow!("agent thread panicked"))??);
+        }
+        Ok(reports)
+    })?;
+
+    Ok(PoolOutcome { reports: outcome, runtime: t0.elapsed() })
+}

@@ -1,0 +1,809 @@
+//! Discrete-event simulation of the full JSDoop protocol (S7-S9).
+//!
+//! Runs the *same* protocol state machine as the real threaded agents —
+//! FIFO InitialQueue of interleaved map/reduce tasks, model-version
+//! parking, gradient collection, ACK/visibility-timeout redelivery, churn
+//! — but on the virtual clock, with task durations drawn from a calibrated
+//! service-time model instead of executing PJRT. This regenerates the
+//! paper's minute-scale experiments (Figs 4-8, Table 4 runtimes)
+//! deterministically in milliseconds; the real agents regenerate the loss
+//! column and validate the protocol end-to-end.
+//!
+//! Time parameters are seconds; see `benches/` for the cluster/classroom
+//! calibrations.
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{bail, Result};
+
+use crate::faults::FaultPlan;
+use crate::metrics::{Span, SpanKind, Timeline};
+use crate::simclock::SimClock;
+use crate::util::prng::Rng;
+use crate::volunteer::cache::{cache_factor, WorkerCache};
+
+/// Service-time model for one experiment environment.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    /// Base seconds of compute for one minibatch gradient at speed 1.0.
+    pub t_map: f64,
+    /// Base seconds for fold + RMSprop update at speed 1.0.
+    pub t_reduce: f64,
+    /// Queue operation round-trip (consume/publish/ack amortized).
+    pub rtt: f64,
+    /// Seconds to fetch the model snapshot from the DataServer.
+    pub model_fetch: f64,
+    /// Seconds to push the updated model.
+    pub model_push: f64,
+    /// Seconds to publish one gradient result.
+    pub grad_push: f64,
+    /// Seconds for the reducer to collect one gradient.
+    pub grad_collect: f64,
+    /// Worker-local fast-memory capacity in minibatch working sets.
+    pub cache_capacity: usize,
+    /// Extra compute fraction on a cache miss (Foster's effect).
+    pub cache_miss_penalty: f64,
+    /// Multiplicative lognormal jitter sigma on compute times (0 = none).
+    pub jitter_sigma: f64,
+    /// Visibility timeout for unACKed tasks (paper: max time per task).
+    pub visibility_timeout: f64,
+    /// True: a disconnect requeues the held task immediately (AMQP channel
+    /// close). False: the task waits out the visibility timeout.
+    pub requeue_on_disconnect: bool,
+    /// Idle re-poll interval when the task queue is momentarily empty.
+    pub poll: f64,
+    /// Parked-worker probe interval: every `version_wait` seconds a parked
+    /// worker peeks the queue head and, if the head task PRECEDES its held
+    /// task (earlier model version, or the same batch's map while it holds
+    /// the reduce), swaps — returning its held task to the front. This
+    /// priority-swap is what makes the protocol deadlock-free under churn
+    /// without ever scrambling the batch order.
+    pub version_wait: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            t_map: 1.0,
+            t_reduce: 0.5,
+            rtt: 0.02,
+            model_fetch: 0.15,
+            model_push: 0.15,
+            grad_push: 0.1,
+            grad_collect: 0.05,
+            cache_capacity: 64,
+            cache_miss_penalty: 0.3,
+            jitter_sigma: 0.0,
+            visibility_timeout: 120.0,
+            requeue_on_disconnect: true,
+            poll: 0.5,
+            version_wait: 10.0,
+        }
+    }
+}
+
+/// Training structure (mirrors `textdata::Schedule` without data).
+#[derive(Debug, Clone, Copy)]
+pub struct SimWorkload {
+    pub total_batches: u64,
+    pub minibatches_per_batch: u32,
+    /// Cache keys recur across epochs: the working set of batch b of any
+    /// epoch occupies the same fast-memory footprint (corpus windows,
+    /// one-hot buffers), so the cache is keyed by b mod batches_per_epoch.
+    pub batches_per_epoch: u32,
+}
+
+impl SimWorkload {
+    pub fn paper() -> Self {
+        SimWorkload { total_batches: 80, minibatches_per_batch: 16, batches_per_epoch: 16 }
+    }
+}
+
+/// Simulated task (version doubles as batch id).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum STask {
+    Map { version: u64, minibatch: u32 },
+    Reduce { version: u64 },
+}
+
+impl STask {
+    fn version(&self) -> u64 {
+        match self {
+            STask::Map { version, .. } | STask::Reduce { version } => *version,
+        }
+    }
+
+    /// Queue priority: batch order, maps before their reduce (exactly the
+    /// real Initiator's publish_pri scheme).
+    fn priority(&self) -> u64 {
+        match self {
+            STask::Map { version, .. } => version * 2,
+            STask::Reduce { version } => version * 2 + 1,
+        }
+    }
+}
+
+/// Priority-ordered task queue mirroring the real broker (see
+/// queue/broker.rs): tasks are served in (priority, seq) order, so a
+/// requeued old task is always ahead of every later batch's work.
+#[derive(Default)]
+struct TaskQueue {
+    ready: BTreeMap<(u64, u64), STask>,
+    next_seq: u64,
+}
+
+impl TaskQueue {
+    fn push(&mut self, t: STask) {
+        let key = (t.priority(), self.next_seq);
+        self.next_seq += 1;
+        self.ready.insert(key, t);
+    }
+
+    fn pop(&mut self) -> Option<STask> {
+        let (&key, _) = self.ready.iter().next()?;
+        self.ready.remove(&key)
+    }
+
+    fn front(&self) -> Option<STask> {
+        self.ready.values().next().copied()
+    }
+
+    fn len(&self) -> usize {
+        self.ready.len()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WState {
+    NotJoined,
+    Idle,
+    /// Holding a task, waiting on a model version (or reduce grads).
+    Parked,
+    Busy,
+    Dead,
+}
+
+#[derive(Debug)]
+enum Ev {
+    Join(usize),
+    Leave(usize),
+    FreezeStart(usize),
+    FreezeEnd(usize),
+    /// Pull attempt resolves (after rtt / poll delay). gen guards staleness.
+    Pull { w: usize, gen: u64 },
+    MapDone { w: usize, gen: u64, version: u64, minibatch: u32, started: f64 },
+    ReduceDone { w: usize, gen: u64, version: u64, started: f64 },
+    /// Visibility timeout for a task abandoned by a dead/frozen worker.
+    Requeue(STask),
+    /// Parked worker probes the head for earlier work (priority-swap).
+    SwapTick { w: usize, gen: u64 },
+}
+
+struct Worker {
+    state: WState,
+    speed: f64,
+    gen: u64,
+    /// Task held while Parked (map/reduce waiting for version or grads).
+    held: Option<(STask, f64)>,
+    cache: WorkerCache,
+    rng: Rng,
+    frozen: bool,
+}
+
+/// Aggregate outcome of one simulated experiment.
+#[derive(Debug)]
+pub struct SimResult {
+    /// Makespan in virtual seconds (first task start is t=0+).
+    pub runtime: f64,
+    pub timeline: Timeline,
+    pub maps_done: u64,
+    pub reduces_done: u64,
+    pub requeues: u64,
+    pub events: u64,
+    /// Mean cache hit rate over workers that did work.
+    pub cache_hit_rate: f64,
+}
+
+/// Run one experiment.
+pub fn simulate(
+    workload: SimWorkload,
+    params: &SimParams,
+    plan: &FaultPlan,
+    speeds: &[f64],
+    seed: u64,
+) -> Result<SimResult> {
+    let n = plan.n_workers();
+    if speeds.len() != n {
+        bail!("speeds length {} != plan workers {}", speeds.len(), n);
+    }
+    if n == 0 {
+        bail!("need at least one worker");
+    }
+    let mut rng = Rng::new(seed);
+
+    // The InitialQueue: priority-ordered by batch (see TaskQueue docs).
+    let mut queue = TaskQueue::default();
+    for v in 0..workload.total_batches {
+        for m in 0..workload.minibatches_per_batch {
+            queue.push(STask::Map { version: v, minibatch: m });
+        }
+        queue.push(STask::Reduce { version: v });
+    }
+
+    let mut clock: SimClock<Ev> = SimClock::new();
+    let mut workers: Vec<Worker> = (0..n)
+        .map(|i| Worker {
+            state: WState::NotJoined,
+            speed: speeds[i],
+            gen: 0,
+            held: None,
+            cache: WorkerCache::new(params.cache_capacity),
+            rng: rng.fork(i as u64),
+            frozen: false,
+        })
+        .collect();
+
+    for (i, ws) in plan.workers.iter().enumerate() {
+        clock.schedule_at(ws.join_at, Ev::Join(i));
+        if let Some(l) = ws.leave_at {
+            clock.schedule_at(l, Ev::Leave(i));
+        }
+        if let Some((f0, dur)) = ws.freeze {
+            clock.schedule_at(f0, Ev::FreezeStart(i));
+            clock.schedule_at(f0 + dur, Ev::FreezeEnd(i));
+        }
+    }
+
+    let mut model_version: u64 = 0;
+    let mut grads_done: HashMap<u64, u32> = HashMap::new();
+    // Completed minibatches — deduplicates straggler redeliveries ("first
+    // result wins", the broker's at-least-once semantics).
+    let mut map_done: std::collections::HashSet<(u64, u32)> = std::collections::HashSet::new();
+    // Reduce holder waiting for its batch's gradients: (worker, started).
+    let mut reduce_waiting: HashMap<u64, (usize, f64)> = HashMap::new();
+    let timeline = Timeline::new();
+    let mut maps_done = 0u64;
+    let mut reduces_done = 0u64;
+    let mut requeues = 0u64;
+    let mut finish_time = 0.0f64;
+
+    // -- helpers as closures are awkward with borrows; use macros. --------
+    macro_rules! pull_later {
+        ($clock:expr, $w:expr, $delay:expr, $workers:expr) => {{
+            $workers[$w].gen += 1;
+            let gen = $workers[$w].gen;
+            $clock.schedule_in($delay, Ev::Pull { w: $w, gen });
+        }};
+    }
+
+    let jitter = |wk: &mut Worker, p: &SimParams| -> f64 {
+        if p.jitter_sigma > 0.0 {
+            wk.rng.lognormal(1.0, p.jitter_sigma)
+        } else {
+            1.0
+        }
+    };
+
+    // Start a map's compute phase (model version is available).
+    macro_rules! start_map {
+        ($clock:expr, $workers:expr, $w:expr, $version:expr, $mb:expr, $started:expr) => {{
+            let wk = &mut $workers[$w];
+            wk.state = WState::Busy;
+            wk.held = Some((STask::Map { version: $version, minibatch: $mb }, $started));
+            let batch_in_epoch = ($version % workload.batches_per_epoch as u64) as u32;
+            let hit = wk.cache.access(batch_in_epoch, $mb);
+            let j = jitter(wk, params);
+            let dur = params.model_fetch
+                + (params.t_map * cache_factor(hit, params.cache_miss_penalty) * j) / wk.speed
+                + params.grad_push;
+            wk.gen += 1;
+            let gen = wk.gen;
+            $clock.schedule_in(
+                dur,
+                Ev::MapDone { w: $w, gen, version: $version, minibatch: $mb, started: $started },
+            );
+            // Straggler insurance: if this map is not done when its
+            // visibility window closes, the broker redelivers it (the
+            // original keeps running; first result wins). This is what
+            // lets a large volunteer fleet absorb slow machines.
+            $clock.schedule_in(
+                params.visibility_timeout,
+                Ev::Requeue(STask::Map { version: $version, minibatch: $mb }),
+            );
+        }};
+    }
+
+    // Reduce holder proceeds to its update phase once grads are complete.
+    macro_rules! start_reduce_update {
+        ($clock:expr, $workers:expr, $w:expr, $version:expr, $started:expr) => {{
+            let wk = &mut $workers[$w];
+            wk.state = WState::Busy;
+            wk.held = Some((STask::Reduce { version: $version }, $started));
+            let j = jitter(wk, params);
+            let dur = params.model_fetch
+                + workload.minibatches_per_batch as f64 * params.grad_collect
+                + (params.t_reduce * j) / wk.speed
+                + params.model_push;
+            wk.gen += 1;
+            let gen = wk.gen;
+            $clock.schedule_in(dur, Ev::ReduceDone { w: $w, gen, version: $version, started: $started });
+        }};
+    }
+
+    // Dispatch a freshly received task.
+    macro_rules! dispatch {
+        ($clock:expr, $workers:expr, $w:expr, $task:expr, $now:expr) => {{
+            let task = $task;
+            let started = $now;
+            match task {
+                STask::Map { version, minibatch } => {
+                    if version < model_version || map_done.contains(&(version, minibatch)) {
+                        // Stale duplicate (batch already reduced, or a
+                        // straggler redelivery whose original finished).
+                        pull_later!($clock, $w, params.rtt, $workers);
+                    } else if version == model_version {
+                        start_map!($clock, $workers, $w, version, minibatch, started);
+                    } else {
+                        // §IV.G: wait for the model version; bounded by
+                        // version_wait (agent NACK-to-back equivalent).
+                        let wk = &mut $workers[$w];
+                        wk.state = WState::Parked;
+                        wk.held = Some((task, started));
+                        let gen = wk.gen;
+                        $clock.schedule_in(params.version_wait, Ev::SwapTick { w: $w, gen });
+                    }
+                }
+                STask::Reduce { version } => {
+                    if version < model_version {
+                        pull_later!($clock, $w, params.rtt, $workers); // stale duplicate
+                    } else if version == model_version
+                        && grads_done.get(&version).copied().unwrap_or(0)
+                            == workload.minibatches_per_batch
+                    {
+                        start_reduce_update!($clock, $workers, $w, version, started);
+                    } else {
+                        // Wait for version and/or gradients (also bounded).
+                        let wk = &mut $workers[$w];
+                        wk.state = WState::Parked;
+                        wk.held = Some((task, started));
+                        reduce_waiting.insert(version, ($w, started));
+                        let gen = wk.gen;
+                        $clock.schedule_in(params.version_wait, Ev::SwapTick { w: $w, gen });
+                    }
+                }
+            }
+        }};
+    }
+
+    // Wake parked workers after a model publish.
+    macro_rules! wake_parked {
+        ($clock:expr, $workers:expr) => {{
+            for w in 0..n {
+                if $workers[w].state != WState::Parked || $workers[w].frozen {
+                    continue;
+                }
+                let Some((task, started)) = $workers[w].held else { continue };
+                match task {
+                    STask::Map { version, minibatch } => {
+                        if version < model_version {
+                            // Batch finished while parked: discard duplicate.
+                            $workers[w].held = None;
+                            pull_later!($clock, w, params.rtt, $workers);
+                        } else if version == model_version {
+                            start_map!($clock, $workers, w, version, minibatch, started);
+                        }
+                    }
+                    STask::Reduce { version } => {
+                        if version < model_version {
+                            $workers[w].held = None;
+                            reduce_waiting.remove(&version);
+                            pull_later!($clock, w, params.rtt, $workers);
+                        } else if version == model_version
+                            && grads_done.get(&version).copied().unwrap_or(0)
+                                == workload.minibatches_per_batch
+                        {
+                            reduce_waiting.remove(&version);
+                            start_reduce_update!($clock, $workers, w, version, started);
+                        }
+                    }
+                }
+            }
+        }};
+    }
+
+    // Abandon a held/running task (death or freeze).
+    macro_rules! abandon {
+        ($clock:expr, $workers:expr, $w:expr) => {{
+            $workers[$w].gen += 1; // cancel in-flight completion events
+            if let Some((task, _)) = $workers[$w].held.take() {
+                if let STask::Reduce { version } = task {
+                    reduce_waiting.remove(&version);
+                }
+                requeues += 1;
+                if params.requeue_on_disconnect {
+                    queue.push(task);
+                } else {
+                    $clock.schedule_in(params.visibility_timeout, Ev::Requeue(task));
+                }
+            }
+        }};
+    }
+
+    // Livelock guard: a protocol stall would otherwise spin forever on
+    // idle poll events (pollers reschedule while any worker is alive).
+    let mut last_progress_events: u64 = 0;
+    const STALL_EVENT_BUDGET: u64 = 2_000_000;
+
+    while let Some((now, ev)) = clock.next() {
+        if model_version >= workload.total_batches {
+            break;
+        }
+        if clock.processed() - last_progress_events > STALL_EVENT_BUDGET {
+            let states: Vec<String> = workers
+                .iter()
+                .enumerate()
+                .map(|(i, w)| format!("w{i}:{:?}:{:?}", w.state, w.held.map(|(t, _)| t)))
+                .collect();
+            let head: Vec<STask> = queue.ready.values().take(4).copied().collect();
+            bail!(
+                "livelock: {} events with no reduce progress (version {}/{}, queue {}, t={:.1}s)\nhead: {:?}\nworkers: {}",
+                STALL_EVENT_BUDGET,
+                model_version,
+                workload.total_batches,
+                queue.len(),
+                now,
+                head,
+                states.join(" ")
+            );
+        }
+        match ev {
+            Ev::Join(w) => {
+                if workers[w].state == WState::NotJoined {
+                    workers[w].state = WState::Idle;
+                    pull_later!(clock, w, params.rtt, workers);
+                }
+            }
+            Ev::Leave(w) => {
+                if workers[w].state != WState::Dead {
+                    abandon!(clock, workers, w);
+                    workers[w].state = WState::Dead;
+                }
+            }
+            Ev::FreezeStart(w) => {
+                if workers[w].state != WState::Dead {
+                    workers[w].frozen = true;
+                    abandon!(clock, workers, w);
+                }
+            }
+            Ev::FreezeEnd(w) => {
+                if workers[w].state != WState::Dead {
+                    workers[w].frozen = false;
+                    workers[w].state = WState::Idle;
+                    pull_later!(clock, w, params.rtt, workers);
+                }
+            }
+            Ev::Pull { w, gen } => {
+                if workers[w].gen != gen
+                    || workers[w].frozen
+                    || matches!(workers[w].state, WState::Dead | WState::NotJoined)
+                {
+                    continue;
+                }
+                match queue.pop() {
+                    Some(task) => {
+                        dispatch!(clock, workers, w, task, now);
+                    }
+                    None => {
+                        workers[w].state = WState::Idle;
+                        pull_later!(clock, w, params.poll, workers);
+                    }
+                }
+            }
+            Ev::MapDone { w, gen, version, minibatch, started } => {
+                if workers[w].gen != gen {
+                    continue; // cancelled (death/freeze)
+                }
+                workers[w].held = None;
+                timeline.record(Span { worker: w, kind: SpanKind::Compute, start: started, end: now });
+                maps_done += 1;
+                if !map_done.insert((version, minibatch)) {
+                    // A straggler's duplicate finished after the original:
+                    // its gradient is ignored (first result wins).
+                    pull_later!(clock, w, params.rtt, workers);
+                    continue;
+                }
+                *grads_done.entry(version).or_insert(0) += 1;
+                // If the reduce holder was waiting on grads, release it.
+                if grads_done[&version] == workload.minibatches_per_batch {
+                    if let Some((rw, rstarted)) = reduce_waiting.remove(&version) {
+                        if workers[rw].state == WState::Parked && !workers[rw].frozen {
+                            start_reduce_update!(clock, workers, rw, version, rstarted);
+                        } else {
+                            reduce_waiting.insert(version, (rw, rstarted));
+                        }
+                    }
+                }
+                pull_later!(clock, w, params.rtt, workers);
+            }
+            Ev::ReduceDone { w, gen, version, started } => {
+                if workers[w].gen != gen {
+                    continue;
+                }
+                workers[w].held = None;
+                model_version = version + 1;
+                last_progress_events = clock.processed();
+                timeline.record(Span { worker: w, kind: SpanKind::Accumulate, start: started, end: now });
+                reduces_done += 1;
+                finish_time = now;
+                if model_version >= workload.total_batches {
+                    break;
+                }
+                wake_parked!(clock, workers);
+                pull_later!(clock, w, params.rtt, workers);
+            }
+            Ev::Requeue(task) => {
+                let still_needed = task.version() >= model_version
+                    && match task {
+                        STask::Map { version, minibatch } => {
+                            !map_done.contains(&(version, minibatch))
+                        }
+                        STask::Reduce { .. } => true,
+                    };
+                if still_needed {
+                    queue.push(task);
+                    // Idle pollers will find it on their next poll tick.
+                }
+            }
+            Ev::SwapTick { w, gen } => {
+                if workers[w].gen != gen
+                    || workers[w].state != WState::Parked
+                    || workers[w].frozen
+                {
+                    continue; // already woken / dead / frozen
+                }
+                let Some((held, _started)) = workers[w].held else { continue };
+                let swap = match (queue.front(), held) {
+                    (Some(front), held) => {
+                        // Strictly-earlier version always precedes; a map
+                        // of the SAME batch precedes the batch's reduce
+                        // (the reducer steals its own missing minibatch).
+                        front.version() < held.version()
+                            || (front.version() == held.version()
+                                && matches!(front, STask::Map { .. })
+                                && matches!(held, STask::Reduce { .. }))
+                    }
+                    (None, _) => false,
+                };
+                if swap {
+                    let t = queue.pop().unwrap();
+                    // Held task returns to its priority slot.
+                    queue.push(held);
+                    workers[w].held = None;
+                    if let STask::Reduce { version } = held {
+                        reduce_waiting.remove(&version);
+                    }
+                    dispatch!(clock, workers, w, t, now);
+                } else {
+                    // Keep parking; probe again later.
+                    clock.schedule_in(params.version_wait, Ev::SwapTick { w, gen });
+                }
+            }
+        }
+    }
+
+    if model_version < workload.total_batches {
+        bail!(
+            "simulation stalled at version {model_version}/{} (all volunteers gone?)",
+            workload.total_batches
+        );
+    }
+
+    let mut rates = Vec::new();
+    for w in &workers {
+        if w.cache.hits + w.cache.misses > 0 {
+            rates.push(w.cache.hit_rate());
+        }
+    }
+    let cache_hit_rate = if rates.is_empty() {
+        0.0
+    } else {
+        rates.iter().sum::<f64>() / rates.len() as f64
+    };
+
+    Ok(SimResult {
+        runtime: finish_time,
+        timeline,
+        maps_done,
+        reduces_done,
+        requeues,
+        events: clock.processed(),
+        cache_hit_rate,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(n: usize) -> SimResult {
+        let plan = FaultPlan::sync_start(n);
+        let speeds = vec![1.0; n];
+        simulate(
+            SimWorkload { total_batches: 10, minibatches_per_batch: 4, batches_per_epoch: 5 },
+            &SimParams::default(),
+            &plan,
+            &speeds,
+            7,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn completes_all_batches() {
+        let r = quick(4);
+        assert_eq!(r.reduces_done, 10);
+        assert_eq!(r.maps_done, 40);
+        assert!(r.runtime > 0.0);
+    }
+
+    #[test]
+    fn single_worker_completes() {
+        let r = quick(1);
+        assert_eq!(r.reduces_done, 10);
+        assert_eq!(r.maps_done, 40);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = quick(8);
+        let b = quick(8);
+        assert_eq!(a.runtime, b.runtime);
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn more_workers_is_faster_up_to_parallelism() {
+        let t1 = quick(1).runtime;
+        let t2 = quick(2).runtime;
+        let t4 = quick(4).runtime;
+        assert!(t2 < t1, "2 workers ({t2}) should beat 1 ({t1})");
+        assert!(t4 < t2, "4 workers ({t4}) should beat 2 ({t2})");
+    }
+
+    #[test]
+    fn parallelism_caps_at_minibatch_count() {
+        // 4 minibatches/batch + 1 reduce: ~5-way max parallelism. 16
+        // workers should barely beat 8.
+        let t8 = quick(8).runtime;
+        let t16 = quick(16).runtime;
+        assert!(t16 <= t8 * 1.02);
+        assert!(t16 > t8 * 0.7, "t16={t16} suspiciously better than t8={t8}");
+    }
+
+    #[test]
+    fn churn_leaves_work_recoverable() {
+        let n = 6;
+        let plan = FaultPlan::departure(n, 3, 5.0);
+        let speeds = vec![1.0; n];
+        let r = simulate(
+            SimWorkload { total_batches: 10, minibatches_per_batch: 4, batches_per_epoch: 5 },
+            &SimParams::default(),
+            &plan,
+            &speeds,
+            11,
+        )
+        .unwrap();
+        assert_eq!(r.reduces_done, 10);
+    }
+
+    #[test]
+    fn all_leave_stalls_with_error() {
+        let plan = FaultPlan::departure(2, 2, 1.0);
+        let r = simulate(
+            SimWorkload { total_batches: 50, minibatches_per_batch: 4, batches_per_epoch: 5 },
+            &SimParams::default(),
+            &plan,
+            &[1.0, 1.0],
+            3,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn visibility_timeout_requeue_path() {
+        // Disconnect without immediate requeue: recovery must go through
+        // the visibility timeout.
+        let mut params = SimParams::default();
+        params.requeue_on_disconnect = false;
+        params.visibility_timeout = 3.0;
+        let plan = FaultPlan::departure(3, 1, 2.0);
+        let r = simulate(
+            SimWorkload { total_batches: 6, minibatches_per_batch: 4, batches_per_epoch: 3 },
+            &params,
+            &plan,
+            &[1.0; 3],
+            5,
+        )
+        .unwrap();
+        assert_eq!(r.reduces_done, 6);
+    }
+
+    #[test]
+    fn freeze_requeues_and_resumes() {
+        let plan = FaultPlan::sync_start(3).with_freeze(0, 1.0, 4.0);
+        let r = simulate(
+            SimWorkload { total_batches: 8, minibatches_per_batch: 4, batches_per_epoch: 4 },
+            &SimParams::default(),
+            &plan,
+            &[1.0; 3],
+            5,
+        )
+        .unwrap();
+        assert_eq!(r.reduces_done, 8);
+    }
+
+    #[test]
+    fn async_start_completes() {
+        let mut rng = Rng::new(2);
+        let plan = FaultPlan::async_start(8, 10.0, &mut rng);
+        let r = simulate(
+            SimWorkload { total_batches: 10, minibatches_per_batch: 4, batches_per_epoch: 5 },
+            &SimParams::default(),
+            &plan,
+            &vec![1.0; 8],
+            2,
+        )
+        .unwrap();
+        assert_eq!(r.reduces_done, 10);
+        let sync = quick(8);
+        assert!(r.runtime >= sync.runtime, "async start can't beat sync start");
+    }
+
+    #[test]
+    fn timeline_spans_cover_all_tasks() {
+        let r = quick(4);
+        let spans = r.timeline.spans();
+        let computes = spans.iter().filter(|s| s.kind == SpanKind::Compute).count();
+        let accs = spans.iter().filter(|s| s.kind == SpanKind::Accumulate).count();
+        assert_eq!(computes as u64, r.maps_done);
+        assert_eq!(accs as u64, r.reduces_done);
+        assert!((r.timeline.makespan() - r.runtime).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cache_effect_helps_many_workers_more() {
+        // With a small cache and a large miss penalty, per-worker sharding
+        // should give >2x speedup from 1 -> 2 workers somewhere in the
+        // regime (superlinearity driver; full calibration in benches).
+        let mut params = SimParams::default();
+        // Capacity below the full key space (128) so a lone worker cycling
+        // through every minibatch always misses (cyclic LRU worst case),
+        // while a 16-way fleet's per-worker working set drifts slowly
+        // enough to stay resident.
+        params.cache_capacity = 64;
+        params.cache_miss_penalty = 1.0;
+        params.rtt = 0.0;
+        params.model_fetch = 0.0;
+        params.model_push = 0.0;
+        params.grad_push = 0.0;
+        params.grad_collect = 0.0;
+        params.t_reduce = 0.0;
+        let wl = SimWorkload { total_batches: 64, minibatches_per_batch: 16, batches_per_epoch: 8 };
+        let r1 = simulate(wl, &params, &FaultPlan::sync_start(1), &[1.0], 1).unwrap();
+        let r16 = simulate(wl, &params, &FaultPlan::sync_start(16), &vec![1.0; 16], 1).unwrap();
+        let speedup_cached = r1.runtime / r16.runtime;
+        // Same topology without the cache effect.
+        params.cache_miss_penalty = 0.0;
+        let f1 = simulate(wl, &params, &FaultPlan::sync_start(1), &[1.0], 1).unwrap();
+        let f16 = simulate(wl, &params, &FaultPlan::sync_start(16), &vec![1.0; 16], 1).unwrap();
+        let speedup_flat = f1.runtime / f16.runtime;
+        // The 1-worker run thrashes (128 distinct minibatch sets, cache 8)
+        // while 16 workers mostly run hot — the cache effect must amplify
+        // the measured speedup (the paper's superlinearity mechanism).
+        assert!(
+            speedup_cached > speedup_flat * 1.2,
+            "cache effect should amplify speedup: cached {speedup_cached} vs flat {speedup_flat}"
+        );
+        assert!(r16.cache_hit_rate > r1.cache_hit_rate);
+    }
+}

@@ -1,0 +1,41 @@
+//! Shared helpers for integration tests: artifact location + a
+//! process-wide Engine (PJRT compilation is expensive; share it).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use once_cell::sync::OnceCell;
+
+use jsdoop::runtime::Engine;
+
+pub fn artifact_dir() -> PathBuf {
+    let dir = jsdoop::runtime::default_artifact_dir();
+    assert!(
+        dir.join("model_meta.json").exists(),
+        "artifacts missing at {dir:?} — run `make artifacts` first"
+    );
+    dir
+}
+
+static ENGINE: OnceCell<Arc<Engine>> = OnceCell::new();
+
+pub fn shared_engine() -> Arc<Engine> {
+    ENGINE
+        .get_or_init(|| Engine::load_shared(&artifact_dir()).expect("engine load"))
+        .clone()
+}
+
+/// A config scaled down for fast real-compute tests (seq_len/minibatch are
+/// pinned by the AOT artifacts; everything else shrinks).
+pub fn tiny_config() -> jsdoop::config::Config {
+    let mut cfg = jsdoop::config::Config::default();
+    cfg.batch_size = 16;
+    cfg.examples_per_epoch = 32;
+    cfg.epochs = 1;
+    cfg.corpus_len = 20_000;
+    cfg.artifact_dir = artifact_dir();
+    cfg.task_poll_timeout_secs = 0.1;
+    cfg.visibility_timeout_secs = 30.0;
+    cfg.validate().unwrap();
+    cfg
+}

@@ -1,0 +1,113 @@
+//! Fault tolerance at the real-stack level (paper §II.E, §VI): volunteers
+//! leaving mid-run, late joiners, frozen workers — training must still
+//! complete with the correct final model.
+
+mod common;
+
+use std::time::Duration;
+
+use jsdoop::baseline;
+use jsdoop::coordinator::ProblemSpec;
+use jsdoop::driver;
+use jsdoop::faults::{FaultPlan, WorkerScript};
+
+fn oracle_params(cfg: &jsdoop::config::Config) -> Vec<f32> {
+    let engine = common::shared_engine();
+    let corpus = driver::load_corpus(cfg).unwrap();
+    let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
+    let init = engine.meta().load_init_params(&cfg.artifact_dir).unwrap();
+    baseline::train_accumulated(&engine, &corpus, &spec, init)
+        .unwrap()
+        .snapshot
+        .params
+}
+
+#[test]
+fn half_the_fleet_leaves_midway() {
+    // Paper classroom scenario 3, compressed: 4 workers, 2 close their
+    // tab almost immediately; the rest must finish, and the final model
+    // must STILL equal the serial oracle (tasks redeliver, order holds).
+    let mut cfg = common::tiny_config();
+    cfg.visibility_timeout_secs = 2.0; // fast redelivery of orphaned tasks
+    let plan = FaultPlan::departure(4, 2, 0.3);
+    let engine = common::shared_engine();
+    let out = driver::run_local(&cfg, &engine, &plan, &[1.0; 4]).unwrap();
+    assert_eq!(out.final_model.version, cfg.schedule().total_batches() as u64);
+    assert_eq!(out.final_model.params, oracle_params(&cfg));
+}
+
+#[test]
+fn late_joiners_still_converge_identically() {
+    let cfg = common::tiny_config();
+    let plan = FaultPlan {
+        workers: vec![
+            WorkerScript::steady(),
+            WorkerScript { join_at: 0.2, leave_at: None, freeze: None },
+            WorkerScript { join_at: 0.5, leave_at: None, freeze: None },
+        ],
+    };
+    let engine = common::shared_engine();
+    let out = driver::run_local(&cfg, &engine, &plan, &[1.0; 3]).unwrap();
+    assert_eq!(out.final_model.params, oracle_params(&cfg));
+}
+
+#[test]
+fn lone_survivor_finishes_alone() {
+    // Everyone except one worker leaves immediately after start.
+    let mut cfg = common::tiny_config();
+    cfg.visibility_timeout_secs = 1.5;
+    let plan = FaultPlan::departure(3, 2, 0.1);
+    let engine = common::shared_engine();
+    let out = driver::run_local(&cfg, &engine, &plan, &[1.0; 3]).unwrap();
+    assert_eq!(out.final_model.params, oracle_params(&cfg));
+    // The survivor did (at least) the lion's share.
+    let maps: u64 = out.pool.reports.iter().map(|r| r.maps_done).sum();
+    assert!(maps >= cfg.schedule().total_map_tasks() as u64);
+}
+
+#[test]
+fn heterogeneous_speeds_same_model() {
+    // Throttled workers change the schedule, never the result.
+    let cfg = common::tiny_config();
+    let plan = FaultPlan::sync_start(3);
+    let engine = common::shared_engine();
+    let out = driver::run_local(&cfg, &engine, &plan, &[1.0, 0.3, 0.6]).unwrap();
+    assert_eq!(out.final_model.params, oracle_params(&cfg));
+}
+
+#[test]
+fn stop_flag_dismisses_the_fleet() {
+    // request_stop() makes agents exit between tasks even with work left.
+    use jsdoop::coordinator::initiator::setup_problem;
+    use jsdoop::coordinator::version::request_stop;
+    use jsdoop::data::Store;
+    use jsdoop::queue::broker::Broker;
+    use jsdoop::textdata::Corpus;
+    use jsdoop::volunteer::agent::{Agent, AgentOptions};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    let cfg = common::tiny_config();
+    let engine = common::shared_engine();
+    let broker = Arc::new(Broker::new(Duration::from_secs(30)));
+    let store = Arc::new(Store::new());
+    let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
+    let corpus = Corpus::synthetic_js(cfg.corpus_seed, cfg.corpus_len);
+    let init = engine.meta().load_init_params(&cfg.artifact_dir).unwrap();
+    setup_problem(broker.as_ref(), store.as_ref(), &spec, &corpus, init).unwrap();
+
+    // Stop immediately: the agent must exit quickly without finishing.
+    request_stop(store.as_ref()).unwrap();
+    let agent = Agent {
+        id: 0,
+        engine: &engine,
+        queue: broker.as_ref(),
+        data: store.as_ref(),
+        timeline: None,
+        opts: AgentOptions { poll: Duration::from_millis(50), ..Default::default() },
+    };
+    let report = agent.run(&AtomicBool::new(false)).unwrap();
+    assert_eq!(report.maps_done + report.reduces_done, 0);
+    let v = jsdoop::coordinator::version::current_version(store.as_ref()).unwrap();
+    assert_eq!(v, Some(0));
+}

@@ -1,0 +1,244 @@
+//! Property tests (testutil::prop, the offline proptest stand-in) over the
+//! coordination invariants DESIGN.md E9 calls out:
+//!  - routing/batching: minibatch tiling is a partition for random schedules
+//!  - broker: no message loss or duplication under random op sequences
+//!  - sim protocol: completion + schedule-independence under random
+//!    worker counts, speeds, and churn
+//!  - accumulator: fold order-independence of *insertion* order
+
+use jsdoop::faults::FaultPlan;
+use jsdoop::model::GradAccumulator;
+use jsdoop::queue::broker::Broker;
+use jsdoop::queue::QueueApi;
+use jsdoop::testutil::prop::check;
+use jsdoop::textdata::{Corpus, Schedule};
+use jsdoop::util::prng::Rng;
+use jsdoop::volunteer::sim::{simulate, SimParams, SimWorkload};
+use std::time::Duration;
+
+#[test]
+fn prop_minibatches_partition_batches() {
+    check("minibatch-tiling", 24, |rng| {
+        let minibatch = 1 + rng.below(8) as usize;
+        let per_batch = 1 + rng.below(6) as usize;
+        let batches = 1 + rng.below(4) as usize;
+        let s = Schedule {
+            seq_len: 5 + rng.below(50) as usize,
+            batch_size: minibatch * per_batch,
+            minibatch_size: minibatch,
+            examples_per_epoch: minibatch * per_batch * batches,
+            epochs: 1 + rng.below(3) as usize,
+        };
+        s.validate().map_err(|e| e.to_string())?;
+        let corpus = Corpus::synthetic_js(rng.next_u64(), 3000 + rng.below(5000) as usize);
+        for epoch in 0..s.epochs {
+            for b in 0..s.batches_per_epoch() {
+                let (bx, by) = s.batch(&corpus, epoch, b);
+                let mut mx = Vec::new();
+                let mut my = Vec::new();
+                for m in 0..s.minibatches_per_batch() {
+                    let (x, y) = s.minibatch(&corpus, epoch, b, m);
+                    mx.extend(x);
+                    my.extend(y);
+                }
+                if mx != bx || my != by {
+                    return Err(format!("tiling mismatch epoch {epoch} batch {b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_broker_conserves_messages() {
+    // Random interleavings of publish/consume/ack/nack never lose or
+    // duplicate a message: every published payload is eventually consumed
+    // + acked exactly once (tracking by unique payload).
+    check("broker-conservation", 24, |rng| {
+        let broker = Broker::new(Duration::from_millis(10_000));
+        broker.declare("q").map_err(|e| e.to_string())?;
+        let n = 5 + rng.below(40) as u32;
+        let mut next_payload = 0u32;
+        let mut outstanding: Vec<(u64, u32)> = Vec::new();
+        let mut settled = std::collections::HashSet::new();
+        while (settled.len() as u32) < n {
+            match rng.below(4) {
+                0 if next_payload < n => {
+                    broker
+                        .publish("q", &next_payload.to_le_bytes())
+                        .map_err(|e| e.to_string())?;
+                    next_payload += 1;
+                }
+                1 => {
+                    if let Some(d) = broker
+                        .consume("q", Duration::from_millis(0))
+                        .map_err(|e| e.to_string())?
+                    {
+                        let v = u32::from_le_bytes(d.payload[..4].try_into().unwrap());
+                        outstanding.push((d.tag, v));
+                    }
+                }
+                2 => {
+                    if !outstanding.is_empty() {
+                        let i = rng.below(outstanding.len() as u64) as usize;
+                        let (tag, v) = outstanding.swap_remove(i);
+                        broker.ack("q", tag).map_err(|e| e.to_string())?;
+                        if !settled.insert(v) {
+                            return Err(format!("payload {v} settled twice"));
+                        }
+                    }
+                }
+                _ => {
+                    if !outstanding.is_empty() {
+                        let i = rng.below(outstanding.len() as u64) as usize;
+                        let (tag, _) = outstanding.swap_remove(i);
+                        broker.nack("q", tag).map_err(|e| e.to_string())?;
+                    }
+                }
+            }
+            // Liveness fallback: if everything is published and nothing is
+            // outstanding or ready, we already settled them all.
+            if next_payload == n
+                && outstanding.is_empty()
+                && broker.len("q").map_err(|e| e.to_string())? == 0
+                && (settled.len() as u32) < n
+            {
+                return Err("messages vanished".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_completes_under_random_topology() {
+    check("sim-completion", 24, |rng| {
+        let workers = 1 + rng.below(12) as usize;
+        let wl = SimWorkload {
+            total_batches: 3 + rng.below(12),
+            minibatches_per_batch: 2 + rng.below(6) as u32,
+            batches_per_epoch: 3,
+        };
+        let mut params = SimParams::default();
+        params.jitter_sigma = rng.f64() * 0.6;
+        params.version_wait = 0.5 + rng.f64() * 5.0;
+        params.visibility_timeout = 5.0 + rng.f64() * 50.0;
+        let speeds: Vec<f64> = (0..workers).map(|_| 0.3 + rng.f64() * 2.0).collect();
+        let plan = FaultPlan::sync_start(workers);
+        let r = simulate(wl, &params, &plan, &speeds, rng.next_u64())
+            .map_err(|e| format!("sim failed: {e}"))?;
+        if r.reduces_done != wl.total_batches {
+            return Err(format!("only {}/{} reduces", r.reduces_done, wl.total_batches));
+        }
+        // At-least-once: every minibatch completed at least once.
+        if r.maps_done < wl.total_batches * wl.minibatches_per_batch as u64 {
+            return Err("missing map completions".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_survives_churn_when_one_worker_stays() {
+    check("sim-churn", 16, |rng| {
+        let workers = 2 + rng.below(10) as usize;
+        let wl = SimWorkload {
+            total_batches: 4 + rng.below(8),
+            minibatches_per_batch: 2 + rng.below(5) as u32,
+            batches_per_epoch: 4,
+        };
+        let mut plan = FaultPlan::random_churn(workers, 0.6, 60.0, rng);
+        // Guarantee a survivor (the paper's "if no one is collaborating,
+        // the problem simply stops" — we want completion here).
+        plan.workers[0].leave_at = None;
+        let mut params = SimParams::default();
+        params.requeue_on_disconnect = rng.f64() < 0.5;
+        params.visibility_timeout = 4.0;
+        params.version_wait = 1.0;
+        let speeds: Vec<f64> = (0..workers).map(|_| 0.5 + rng.f64()).collect();
+        let r = simulate(wl, &params, &plan, &speeds, rng.next_u64())
+            .map_err(|e| format!("sim failed under churn: {e}"))?;
+        if r.reduces_done != wl.total_batches {
+            return Err(format!("only {}/{} reduces", r.reduces_done, wl.total_batches));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_deterministic_given_seed() {
+    check("sim-determinism", 12, |rng| {
+        let workers = 1 + rng.below(8) as usize;
+        let wl = SimWorkload {
+            total_batches: 6,
+            minibatches_per_batch: 4,
+            batches_per_epoch: 3,
+        };
+        let mut params = SimParams::default();
+        params.jitter_sigma = 0.4;
+        let speeds: Vec<f64> = (0..workers).map(|_| 0.5 + rng.f64()).collect();
+        let seed = rng.next_u64();
+        let plan = FaultPlan::sync_start(workers);
+        let a = simulate(wl, &params, &plan, &speeds, seed).map_err(|e| e.to_string())?;
+        let b = simulate(wl, &params, &plan, &speeds, seed).map_err(|e| e.to_string())?;
+        if a.runtime != b.runtime || a.events != b.events {
+            return Err(format!("nondeterministic: {} vs {}", a.runtime, b.runtime));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_accumulator_insertion_order_irrelevant() {
+    // fold() must depend only on minibatch indices, not arrival order —
+    // THE invariant behind "same loss for any worker count".
+    check("accumulator-order", 32, |rng| {
+        let k = 2 + rng.below(16) as usize;
+        let n = 1 + rng.below(32) as usize;
+        let grads: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n).map(|_| (rng.f64() as f32) * 2.0 - 1.0).collect())
+            .collect();
+        let mut order: Vec<usize> = (0..k).collect();
+
+        let mut acc1 = GradAccumulator::new(k);
+        for &i in &order {
+            acc1.insert(i, grads[i].clone()).unwrap();
+        }
+        let base = acc1.fold().unwrap();
+
+        rng.shuffle(&mut order);
+        let mut acc2 = GradAccumulator::new(k);
+        for &i in &order {
+            acc2.insert(i, grads[i].clone()).unwrap();
+        }
+        let shuffled = acc2.fold().unwrap();
+        if base != shuffled {
+            return Err("fold depends on insertion order".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corpus_samples_always_in_bounds() {
+    check("sample-bounds", 24, |rng| {
+        let s = Schedule {
+            seq_len: 10 + rng.below(60) as usize,
+            batch_size: 8,
+            minibatch_size: 8,
+            examples_per_epoch: 16,
+            epochs: 2,
+        };
+        let len = s.seq_len + 2 + rng.below(10_000) as usize;
+        for epoch in 0..40 {
+            for idx in 0..50 {
+                let st = s.sample_start(len, epoch, idx);
+                if st + s.seq_len + 1 > len {
+                    return Err(format!("start {st} out of bounds for len {len}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,191 @@
+//! QueueServer + DataServer over real TCP: remote clients must behave
+//! exactly like the in-process broker/store, including blocking consume,
+//! redelivery, and versioned waits — and a full distributed training run
+//! must work across the wire (the paper's browser <-> RabbitMQ/Redis path).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use jsdoop::coordinator::initiator::setup_problem;
+use jsdoop::coordinator::ProblemSpec;
+use jsdoop::data::{DataApi, Store};
+use jsdoop::queue::broker::Broker;
+use jsdoop::queue::client::{RemoteData, RemoteQueue};
+use jsdoop::queue::server::serve;
+use jsdoop::queue::QueueApi;
+use jsdoop::volunteer::agent::{Agent, AgentOptions};
+
+fn start_server(visibility_ms: u64) -> jsdoop::queue::server::ServerHandle {
+    let broker = Arc::new(Broker::new(Duration::from_millis(visibility_ms)));
+    let store = Arc::new(Store::new());
+    serve("127.0.0.1:0", broker, store).unwrap()
+}
+
+#[test]
+fn remote_queue_basics() {
+    let h = start_server(5_000);
+    let addr = h.addr.to_string();
+    let q = RemoteQueue::connect(&addr).unwrap();
+    q.ping().unwrap();
+    q.declare("jobs").unwrap();
+    q.publish("jobs", b"one").unwrap();
+    q.publish("jobs", b"two").unwrap();
+    assert_eq!(q.len("jobs").unwrap(), 2);
+
+    let d = q.consume("jobs", Duration::from_millis(100)).unwrap().unwrap();
+    assert_eq!(d.payload, b"one");
+    q.ack("jobs", d.tag).unwrap();
+
+    let d2 = q.consume("jobs", Duration::from_millis(100)).unwrap().unwrap();
+    q.nack("jobs", d2.tag).unwrap();
+    let d3 = q.consume("jobs", Duration::from_millis(100)).unwrap().unwrap();
+    assert_eq!(d3.payload, b"two");
+    assert!(d3.redelivered);
+
+    let stats = q.stats("jobs").unwrap();
+    assert_eq!(stats.published, 2);
+    assert_eq!(stats.acked, 1);
+    assert_eq!(stats.nacked, 1);
+    h.shutdown();
+}
+
+#[test]
+fn remote_consume_blocks_until_publish() {
+    let h = start_server(5_000);
+    let addr = h.addr.to_string();
+    let q1 = RemoteQueue::connect(&addr).unwrap();
+    q1.declare("slow").unwrap();
+    let addr2 = addr.clone();
+    let waiter = std::thread::spawn(move || {
+        let q2 = RemoteQueue::connect(&addr2).unwrap();
+        q2.consume("slow", Duration::from_secs(5)).unwrap().unwrap().payload
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    q1.publish("slow", b"late").unwrap();
+    assert_eq!(waiter.join().unwrap(), b"late");
+    h.shutdown();
+}
+
+#[test]
+fn remote_visibility_redelivery() {
+    let h = start_server(80);
+    let addr = h.addr.to_string();
+    let q = RemoteQueue::connect(&addr).unwrap();
+    q.declare("v").unwrap();
+    q.publish("v", b"task").unwrap();
+    let _d = q.consume("v", Duration::from_millis(50)).unwrap().unwrap();
+    // No ACK; the server-side sweeper must requeue after ~80ms.
+    let d2 = q.consume("v", Duration::from_secs(2)).unwrap().unwrap();
+    assert!(d2.redelivered);
+    assert_eq!(d2.payload, b"task");
+    h.shutdown();
+}
+
+#[test]
+fn remote_data_roundtrip_and_wait() {
+    let h = start_server(5_000);
+    let addr = h.addr.to_string();
+    let d = RemoteData::connect(&addr).unwrap();
+    assert_eq!(d.get("nope").unwrap(), None);
+    d.put("k", b"value").unwrap();
+    assert_eq!(d.get("k").unwrap().unwrap(), b"value");
+    assert!(d.del("k").unwrap());
+    assert!(!d.del("k").unwrap());
+
+    d.put_versioned("m", 1, b"v1").unwrap();
+    d.put_versioned("m", 0, b"v0-stale").unwrap();
+    let v = d.get_versioned("m").unwrap().unwrap();
+    assert_eq!((v.version, v.bytes.as_slice()), (1, b"v1".as_slice()));
+
+    // wait_version across the wire, woken by a second client.
+    let addr2 = addr.clone();
+    let waiter = std::thread::spawn(move || {
+        let d2 = RemoteData::connect(&addr2).unwrap();
+        d2.wait_version("m", 2, Duration::from_secs(5)).unwrap().unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    d.put_versioned("m", 2, b"v2").unwrap();
+    assert_eq!(waiter.join().unwrap().bytes, b"v2");
+
+    assert_eq!(d.incr("c").unwrap(), 1);
+    assert_eq!(d.incr("c").unwrap(), 2);
+    h.shutdown();
+}
+
+#[test]
+fn distributed_training_over_tcp() {
+    // Full e2e across the wire: initiator + 2 remote volunteers.
+    let cfg = common::tiny_config();
+    let engine = common::shared_engine();
+    let h = start_server(30_000);
+    let addr = h.addr.to_string();
+
+    let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
+    let corpus = jsdoop::driver::load_corpus(&cfg).unwrap();
+    let init = engine.meta().load_init_params(&cfg.artifact_dir).unwrap();
+    {
+        let q = RemoteQueue::connect(&addr).unwrap();
+        let d = RemoteData::connect(&addr).unwrap();
+        setup_problem(&q, &d, &spec, &corpus, init).unwrap();
+    }
+
+    let mut handles = Vec::new();
+    for id in 0..2 {
+        let addr = addr.clone();
+        let engine = engine.clone();
+        handles.push(std::thread::spawn(move || {
+            let q = RemoteQueue::connect(&addr).unwrap();
+            let d = RemoteData::connect(&addr).unwrap();
+            let agent = Agent {
+                id,
+                engine: &engine,
+                queue: &q,
+                data: &d,
+                timeline: None,
+                opts: AgentOptions {
+                    poll: Duration::from_millis(100),
+                    version_wait: Duration::from_secs(2),
+                    ..Default::default()
+                },
+            };
+            agent.run(&std::sync::atomic::AtomicBool::new(false)).unwrap()
+        }));
+    }
+    let reports: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let total_maps: u64 = reports.iter().map(|r| r.maps_done).sum();
+    assert!(total_maps >= cfg.schedule().total_map_tasks() as u64);
+
+    // Final model reached over the wire.
+    let d = RemoteData::connect(&addr).unwrap();
+    let snap = jsdoop::coordinator::version::get_model(&d).unwrap().unwrap();
+    assert_eq!(snap.version, spec.total_versions());
+    h.shutdown();
+}
+
+#[test]
+fn broker_survives_snapshot_restore_mid_run() {
+    // Paper: "the QueueServer is able to recover from failures without
+    // losing execution status."
+    let broker = Broker::new(Duration::from_secs(5));
+    broker.declare("t").unwrap();
+    for i in 0..10u8 {
+        broker.publish("t", &[i]).unwrap();
+    }
+    // Two in flight, one acked.
+    let d1 = broker.consume("t", Duration::from_millis(10)).unwrap().unwrap();
+    let _d2 = broker.consume("t", Duration::from_millis(10)).unwrap().unwrap();
+    broker.ack("t", d1.tag).unwrap();
+
+    let snap = broker.snapshot();
+    let restored = Broker::restore(&snap, Duration::from_secs(5)).unwrap();
+    // 10 - 1 acked = 9 survive (the unacked one folds back in).
+    let mut seen = Vec::new();
+    while let Some(d) = restored.consume("t", Duration::from_millis(5)).unwrap() {
+        seen.push(d.payload[0]);
+        restored.ack("t", d.tag).unwrap();
+    }
+    assert_eq!(seen.len(), 9);
+    assert!(!seen.contains(&0)); // the acked message is gone
+}

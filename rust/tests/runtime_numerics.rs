@@ -1,0 +1,129 @@
+//! Cross-language numerics: the Rust PJRT execution of every artifact must
+//! match the JAX build that produced them (testvec.json written by aot.py)
+//! — the CORE correctness signal for the AOT bridge.
+
+mod common;
+
+use jsdoop::runtime::{GRAD_STEP_B128, GRAD_STEP_B8};
+use jsdoop::util::json::Json;
+
+fn testvec() -> Json {
+    let text = std::fs::read_to_string(common::artifact_dir().join("testvec.json"))
+        .expect("testvec.json (run make artifacts)");
+    Json::parse(&text).unwrap()
+}
+
+#[test]
+fn grad_step_matches_jax() {
+    let engine = common::shared_engine();
+    let dir = common::artifact_dir();
+    let tv = testvec();
+    let params = engine.meta().load_init_params(&dir).unwrap();
+    let x: Vec<i32> = tv.req("x").unwrap().as_f64_vec().unwrap().iter().map(|v| *v as i32).collect();
+    let y: Vec<i32> = tv.req("y").unwrap().as_f64_vec().unwrap().iter().map(|v| *v as i32).collect();
+
+    let (grads, loss) = engine.grad_step(GRAD_STEP_B8, &params, &x, &y).unwrap();
+    let want_loss = tv.req("loss").unwrap().as_f64().unwrap();
+    assert!(
+        (loss as f64 - want_loss).abs() < 1e-4,
+        "loss {loss} vs jax {want_loss}"
+    );
+
+    let head = tv.req("grads_head").unwrap().as_f64_vec().unwrap();
+    for (i, want) in head.iter().enumerate() {
+        assert!(
+            (grads[i] as f64 - want).abs() < 1e-6,
+            "grads[{i}] {} vs jax {want}",
+            grads[i]
+        );
+    }
+    let sum: f64 = grads.iter().map(|g| *g as f64).sum();
+    let want_sum = tv.req("grads_sum").unwrap().as_f64().unwrap();
+    assert!((sum - want_sum).abs() < 2e-3, "grad sum {sum} vs {want_sum}");
+}
+
+#[test]
+fn rmsprop_matches_jax() {
+    let engine = common::shared_engine();
+    let dir = common::artifact_dir();
+    let tv = testvec();
+    let params = engine.meta().load_init_params(&dir).unwrap();
+    let x: Vec<i32> = tv.req("x").unwrap().as_f64_vec().unwrap().iter().map(|v| *v as i32).collect();
+    let y: Vec<i32> = tv.req("y").unwrap().as_f64_vec().unwrap().iter().map(|v| *v as i32).collect();
+    let (grads, _) = engine.grad_step(GRAD_STEP_B8, &params, &x, &y).unwrap();
+    let (p2, ms2) = engine
+        .rmsprop_update(&params, &vec![0.0; params.len()], &grads, 0.1)
+        .unwrap();
+
+    let want_head = tv.req("updated_head").unwrap().as_f64_vec().unwrap();
+    for (i, want) in want_head.iter().enumerate() {
+        assert!(
+            (p2[i] as f64 - want).abs() < 1e-5,
+            "updated[{i}] {} vs jax {want}",
+            p2[i]
+        );
+    }
+    let ms_sum: f64 = ms2.iter().map(|v| *v as f64).sum();
+    let want_ms = tv.req("ms_sum").unwrap().as_f64().unwrap();
+    assert!(
+        (ms_sum - want_ms).abs() / want_ms.abs().max(1e-9) < 1e-3,
+        "ms sum {ms_sum} vs {want_ms}"
+    );
+}
+
+#[test]
+fn batch128_and_eval_consistent() {
+    // The B=128 gradient artifact must agree with eval_loss on the same
+    // batch, and with the mean of the 16 B=8 losses.
+    let engine = common::shared_engine();
+    let dir = common::artifact_dir();
+    let params = engine.meta().load_init_params(&dir).unwrap();
+    let m = engine.meta();
+    let seq = m.seq_len;
+    let vocab = m.vocab;
+    let x: Vec<i32> = (0..128 * seq).map(|k| (k % vocab) as i32).collect();
+    let y: Vec<i32> = (0..128).map(|i| ((i * 3) % vocab) as i32).collect();
+    let (_, loss128) = engine.grad_step(GRAD_STEP_B128, &params, &x, &y).unwrap();
+    let eval = engine.eval_loss(&params, &x, &y).unwrap();
+    assert!((loss128 - eval).abs() < 1e-5, "{loss128} vs {eval}");
+
+    let mut mini_mean = 0.0f64;
+    for mb in 0..16 {
+        let xs = &x[mb * 8 * seq..(mb + 1) * 8 * seq];
+        let ys = &y[mb * 8..(mb + 1) * 8];
+        let (_, l) = engine.grad_step(GRAD_STEP_B8, &params, xs, ys).unwrap();
+        mini_mean += l as f64 / 16.0;
+    }
+    assert!(
+        (mini_mean - eval as f64).abs() < 1e-4,
+        "minibatch mean {mini_mean} vs batch {eval}"
+    );
+}
+
+#[test]
+fn predict_is_a_distribution() {
+    let engine = common::shared_engine();
+    let dir = common::artifact_dir();
+    let params = engine.meta().load_init_params(&dir).unwrap();
+    let x: Vec<i32> = (0..engine.meta().seq_len).map(|i| (i % 90) as i32).collect();
+    let probs = engine.predict(&params, &x).unwrap();
+    assert_eq!(probs.len(), engine.meta().vocab);
+    let sum: f32 = probs.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-4, "probs sum {sum}");
+    assert!(probs.iter().all(|p| *p >= 0.0));
+}
+
+#[test]
+fn engine_rejects_bad_shapes() {
+    let engine = common::shared_engine();
+    let dir = common::artifact_dir();
+    let params = engine.meta().load_init_params(&dir).unwrap();
+    // Wrong x length.
+    assert!(engine.grad_step(GRAD_STEP_B8, &params, &[0; 10], &[0; 8]).is_err());
+    // Wrong params length.
+    assert!(engine
+        .grad_step(GRAD_STEP_B8, &params[..10], &vec![0; 8 * 40], &[0; 8])
+        .is_err());
+    // Unknown artifact.
+    assert!(engine.grad_step("nope", &params, &vec![0; 8 * 40], &[0; 8]).is_err());
+}

@@ -1,0 +1,97 @@
+//! End-to-end distributed training over the real stack (in-process broker
+//! + store, threaded volunteers, PJRT compute) — the E9 determinism
+//! property at integration scale: any worker count produces the exact
+//! model the serial accumulated baseline produces.
+
+mod common;
+
+use jsdoop::baseline;
+use jsdoop::coordinator::ProblemSpec;
+use jsdoop::driver;
+use jsdoop::faults::FaultPlan;
+
+#[test]
+fn distributed_equals_serial_accumulated_for_any_worker_count() {
+    let cfg = common::tiny_config();
+    let engine = common::shared_engine();
+    let corpus = driver::load_corpus(&cfg).unwrap();
+    let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
+    let init = engine.meta().load_init_params(&cfg.artifact_dir).unwrap();
+
+    let oracle = baseline::train_accumulated(&engine, &corpus, &spec, init).unwrap();
+    assert_eq!(oracle.updates, spec.total_versions());
+
+    for workers in [1usize, 3, 8] {
+        let plan = FaultPlan::sync_start(workers);
+        let speeds = vec![1.0; workers];
+        let out = driver::run_local(&cfg, &engine, &plan, &speeds).unwrap();
+        assert_eq!(out.final_model.version, spec.total_versions());
+        assert_eq!(
+            out.final_model.params, oracle.snapshot.params,
+            "params diverge from serial oracle at {workers} workers"
+        );
+        assert_eq!(
+            out.final_model.ms, oracle.snapshot.ms,
+            "optimizer state diverges at {workers} workers"
+        );
+    }
+}
+
+#[test]
+fn training_actually_reduces_loss() {
+    // A slightly longer run must show learning: final-epoch eval loss
+    // clearly below the ln(98) ~= 4.585 initial entropy.
+    let mut cfg = common::tiny_config();
+    cfg.epochs = 2;
+    cfg.examples_per_epoch = 64;
+    cfg.learning_rate = 0.05;
+    let engine = common::shared_engine();
+    let plan = FaultPlan::sync_start(4);
+    let out = driver::run_local(&cfg, &engine, &plan, &[1.0; 4]).unwrap();
+    assert!(
+        out.final_loss < 4.3,
+        "expected learning progress, got loss {}",
+        out.final_loss
+    );
+}
+
+#[test]
+fn timeline_covers_all_tasks() {
+    let cfg = common::tiny_config();
+    let engine = common::shared_engine();
+    let plan = FaultPlan::sync_start(2);
+    let out = driver::run_local(&cfg, &engine, &plan, &[1.0; 2]).unwrap();
+    let spans = out.timeline.spans();
+    let computes = spans
+        .iter()
+        .filter(|s| s.kind == jsdoop::metrics::SpanKind::Compute)
+        .count();
+    let accs = spans
+        .iter()
+        .filter(|s| s.kind == jsdoop::metrics::SpanKind::Accumulate)
+        .count();
+    let sched = cfg.schedule();
+    // At-least-once semantics: every task ran at least once.
+    assert!(computes >= sched.total_map_tasks(), "computes {computes}");
+    assert!(accs >= sched.total_batches(), "accumulates {accs}");
+}
+
+#[test]
+fn sequential_variants_differ_as_expected() {
+    // TFJS-Sequential-128 != TFJS-Sequential-8 (different optimization
+    // paths); accumulated == distributed handled above.
+    let cfg = common::tiny_config();
+    let engine = common::shared_engine();
+    let corpus = driver::load_corpus(&cfg).unwrap();
+    let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
+    let init = engine.meta().load_init_params(&cfg.artifact_dir).unwrap();
+
+    let full = baseline::train_sequential_full(&engine, &corpus, &spec, init.clone()).unwrap();
+    let mini = baseline::train_sequential_mini(&engine, &corpus, &spec, init).unwrap();
+    assert_ne!(full.snapshot.params, mini.snapshot.params);
+    // mini does minibatches_per_batch x more updates.
+    assert_eq!(
+        mini.updates,
+        full.updates * cfg.schedule().minibatches_per_batch() as u64
+    );
+}

@@ -1,0 +1,139 @@
+//! Wire-protocol robustness over a real socket: malformed frames, unknown
+//! opcodes, truncated bodies, oversized frames, and connection churn must
+//! never wedge the server.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use jsdoop::data::Store;
+use jsdoop::queue::broker::Broker;
+use jsdoop::queue::client::RemoteQueue;
+use jsdoop::queue::server::serve;
+use jsdoop::queue::wire::{read_frame, write_frame, Op, ST_ERR, ST_OK};
+use jsdoop::queue::QueueApi;
+
+fn start() -> jsdoop::queue::server::ServerHandle {
+    serve(
+        "127.0.0.1:0",
+        Arc::new(Broker::new(Duration::from_secs(5))),
+        Arc::new(Store::new()),
+    )
+    .unwrap()
+}
+
+#[test]
+fn unknown_opcode_gets_error_not_disconnect() {
+    let h = start();
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    write_frame(&mut s, 250, b"junk").unwrap();
+    let (st, body) = read_frame(&mut s).unwrap();
+    assert_eq!(st, ST_ERR);
+    assert!(String::from_utf8_lossy(&body).contains("unknown opcode"));
+    // The connection still works afterwards.
+    write_frame(&mut s, Op::Ping as u8, &[]).unwrap();
+    let (st, body) = read_frame(&mut s).unwrap();
+    assert_eq!(st, ST_OK);
+    assert_eq!(body, b"pong");
+    h.shutdown();
+}
+
+#[test]
+fn truncated_body_is_an_error_response() {
+    let h = start();
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    // Declare with a length-prefixed string claiming 100 bytes but 2 sent.
+    let mut body = vec![];
+    body.extend_from_slice(&100u16.to_le_bytes());
+    body.extend_from_slice(b"ab");
+    write_frame(&mut s, Op::Declare as u8, &body).unwrap();
+    let (st, _) = read_frame(&mut s).unwrap();
+    assert_eq!(st, ST_ERR);
+    h.shutdown();
+}
+
+#[test]
+fn zero_length_frame_drops_connection_only() {
+    let h = start();
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    s.write_all(&0u32.to_le_bytes()).unwrap();
+    s.flush().unwrap();
+    // Server closes this connection; a new one is unaffected.
+    let mut buf = [0u8; 1];
+    let n = s.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "server should close on bad frame");
+    let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
+    q.ping().unwrap();
+    h.shutdown();
+}
+
+#[test]
+fn abrupt_disconnect_mid_request_is_contained() {
+    let h = start();
+    for _ in 0..10 {
+        let mut s = TcpStream::connect(h.addr).unwrap();
+        // Half a frame header, then slam the door.
+        s.write_all(&[9]).unwrap();
+        drop(s);
+    }
+    let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
+    q.declare("still.alive").unwrap();
+    q.publish("still.alive", b"x").unwrap();
+    assert_eq!(q.len("still.alive").unwrap(), 1);
+    h.shutdown();
+}
+
+#[test]
+fn large_payload_roundtrips() {
+    // A model snapshot is ~440 KB; make sure MB-scale frames survive.
+    let h = start();
+    let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
+    q.declare("big").unwrap();
+    let payload: Vec<u8> = (0..1_000_000u32).map(|i| (i % 251) as u8).collect();
+    q.publish("big", &payload).unwrap();
+    let d = q.consume("big", Duration::from_secs(2)).unwrap().unwrap();
+    assert_eq!(d.payload, payload);
+    h.shutdown();
+}
+
+#[test]
+fn concurrent_clients_hammering_one_queue() {
+    let h = start();
+    let addr = h.addr.to_string();
+    {
+        let q = RemoteQueue::connect(&addr).unwrap();
+        q.declare("hammer").unwrap();
+    }
+    let producers: Vec<_> = (0..4)
+        .map(|p| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let q = RemoteQueue::connect(&addr).unwrap();
+                for i in 0..50u32 {
+                    q.publish("hammer", &(p * 1000 + i).to_le_bytes()).unwrap();
+                }
+            })
+        })
+        .collect();
+    let consumers: Vec<_> = (0..4)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let q = RemoteQueue::connect(&addr).unwrap();
+                let mut got = 0;
+                while let Some(d) = q.consume("hammer", Duration::from_millis(400)).unwrap() {
+                    q.ack("hammer", d.tag).unwrap();
+                    got += 1;
+                }
+                got
+            })
+        })
+        .collect();
+    for p in producers {
+        p.join().unwrap();
+    }
+    let total: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+    assert_eq!(total, 200);
+    h.shutdown();
+}
