@@ -26,8 +26,10 @@ fn main() {
     let (p_on, _, _) = cluster(1);
     let mut p_off = p_on.clone();
     p_off.cache_miss_penalty = 0.0;
-    let base_on = simulate(wl, &p_on, &FaultPlan::sync_start(1), &cluster(1).1, 42).unwrap().runtime;
-    let base_off = simulate(wl, &p_off, &FaultPlan::sync_start(1), &cluster(1).1, 42).unwrap().runtime;
+    let base_on =
+        simulate(wl, &p_on, &FaultPlan::sync_start(1), &cluster(1).1, 42).unwrap().runtime;
+    let base_off =
+        simulate(wl, &p_off, &FaultPlan::sync_start(1), &cluster(1).1, 42).unwrap().runtime;
     for w in [2usize, 4, 8, 16] {
         let (_, speeds, plan) = cluster(w);
         let t_on = simulate(wl, &p_on, &plan, &speeds, 42).unwrap().runtime;
@@ -52,7 +54,11 @@ fn main() {
         let (_, s32, plan32) = cluster(32);
         let t32 = simulate(wl_k, &p, &plan32, &s32, 42).unwrap().runtime;
         let gain = t16 / t32;
-        println!("  k={k:>2}: t16 {:.1} min, t32 {:.1} min, 32-over-16 gain {gain:.2}x", t16 / 60.0, t32 / 60.0);
+        println!(
+            "  k={k:>2}: t16 {:.1} min, t32 {:.1} min, 32-over-16 gain {gain:.2}x",
+            t16 / 60.0,
+            t32 / 60.0
+        );
         csv.push_str(&format!("{k},{t16:.1},{t32:.1},{gain:.3}\n"));
     }
     std::fs::write("bench_results/ablation_minibatch.csv", csv).unwrap();
@@ -73,7 +79,9 @@ fn main() {
         csv.push_str(&format!("{vis},{:.2},{dup}\n", r.runtime));
     }
     std::fs::write("bench_results/ablation_visibility.csv", csv).unwrap();
-    println!("  (expected: too-short = duplicate-work overhead; too-long = stragglers unmitigated)");
+    println!(
+        "  (expected: too-short = duplicate-work overhead; too-long = stragglers unmitigated)"
+    );
 
     // ---- A4: churn overhead ------------------------------------------
     println!("== A4: churn (fraction of 32 volunteers leaving mid-run) ==");
@@ -82,7 +90,10 @@ fn main() {
     for leavers in [0usize, 4, 8, 16, 24] {
         let plan = FaultPlan::departure(32, leavers, 120.0);
         let r = simulate(wl, &p, &plan, &speeds, 42).unwrap();
-        println!("  {leavers:>2} leave @120s: runtime {:>7.1}s  requeues {}", r.runtime, r.requeues);
+        println!(
+            "  {leavers:>2} leave @120s: runtime {:>7.1}s  requeues {}",
+            r.runtime, r.requeues
+        );
         csv.push_str(&format!("{leavers},{:.2}\n", r.runtime));
     }
     std::fs::write("bench_results/ablation_churn.csv", csv).unwrap();

@@ -1,13 +1,16 @@
 //! L3 micro-benchmarks — the coordinator hot path (criterion is
 //! unavailable offline; this is a hand-rolled timing harness with warmup
 //! + best-of-N, which is enough to steer the §Perf optimization loop):
-//!   B1 broker publish/consume/ack cycle (in-process)
+//!   B1 broker publish/consume/ack cycle (in-process), single vs batched
 //!   B2 wire frame encode/decode
 //!   B3 task + gradient codecs (55k-float payloads)
-//!   B4 TCP roundtrip (loopback)
+//!   B4 TCP roundtrip (loopback), single vs batched frames
 //!   B5 snapshot/restore of a loaded broker
 //!
 //! Run: cargo bench --bench broker_hotpath
+//! CI smoke: BENCH_ITERS=50 cargo bench --bench broker_hotpath
+//! (BENCH_ITERS caps every iteration count so regressions fail loudly
+//! without burning CI minutes.)
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -18,6 +21,17 @@ use jsdoop::queue::broker::Broker;
 use jsdoop::queue::client::RemoteQueue;
 use jsdoop::queue::server::serve;
 use jsdoop::queue::QueueApi;
+
+/// Iteration count for one bench, capped by $BENCH_ITERS (CI smoke mode).
+fn iters(default: u32) -> u32 {
+    match std::env::var("BENCH_ITERS") {
+        Ok(s) => match s.parse::<u32>() {
+            Ok(n) => n.clamp(1, default),
+            Err(_) => default,
+        },
+        Err(_) => default,
+    }
+}
 
 fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
     // Warmup.
@@ -44,32 +58,77 @@ fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
     best
 }
 
+/// One single-op publish/consume/ack cycle per message.
+fn single_cycle(q: &dyn QueueApi, name: &str, payload: &[u8], wait: Duration) {
+    q.publish(name, payload).unwrap();
+    let d = q.consume(name, wait).unwrap().unwrap();
+    q.ack(name, d.tag).unwrap();
+}
+
+/// One batched publish_many/consume_many/ack_many cycle for `refs`.
+fn batched_cycle(q: &dyn QueueApi, name: &str, refs: &[&[u8]], wait: Duration) {
+    q.publish_many(name, refs).unwrap();
+    let ds = q.consume_many(name, refs.len(), wait).unwrap();
+    assert_eq!(ds.len(), refs.len());
+    let tags: Vec<u64> = ds.iter().map(|d| d.tag).collect();
+    q.ack_many(name, &tags).unwrap();
+}
+
+/// Print the per-message speedup of a batched cycle over the single loop.
+fn report_speedup(label: &str, single_per_msg: f64, batch_per_op: f64, batch: usize) -> f64 {
+    let batched_per_msg = batch_per_op / batch as f64;
+    let speedup = single_per_msg / batched_per_msg;
+    println!("  -> {label}: {speedup:.2}x throughput per message at batch={batch}");
+    speedup
+}
+
+/// Regression gate: with $BENCH_MIN_SPEEDUP set (CI smoke), a batched
+/// path falling below the floor fails the bench loudly.
+fn require_speedup(label: &str, speedup: f64) {
+    if let Some(min) = std::env::var("BENCH_MIN_SPEEDUP")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+    {
+        assert!(
+            speedup >= min,
+            "{label}: batched speedup {speedup:.2}x regressed below the {min}x floor"
+        );
+    }
+}
+
 fn main() {
     println!("== B1: in-process broker cycle ==");
     let broker = Broker::new(Duration::from_secs(60));
     broker.declare("q").unwrap();
     let payload = vec![7u8; 21]; // task-sized
-    bench("publish+consume+ack (21 B)", 20_000, || {
-        broker.publish("q", &payload).unwrap();
-        let d = broker.consume("q", Duration::from_millis(1)).unwrap().unwrap();
-        broker.ack("q", d.tag).unwrap();
+    let wait = Duration::from_millis(1);
+    let s21 = bench("publish+consume+ack (21 B)", iters(20_000), || {
+        single_cycle(&broker, "q", &payload, wait);
     });
     let grad_payload = vec![0u8; 20 + 54998 * 4]; // gradient-sized
-    bench("publish+consume+ack (220 KB gradient)", 2_000, || {
-        broker.publish("q", &grad_payload).unwrap();
-        let d = broker.consume("q", Duration::from_millis(1)).unwrap().unwrap();
-        broker.ack("q", d.tag).unwrap();
+    let s220 = bench("publish+consume+ack (220 KB gradient)", iters(2_000), || {
+        single_cycle(&broker, "q", &grad_payload, wait);
     });
+    let refs21: Vec<&[u8]> = (0..64).map(|_| payload.as_slice()).collect();
+    let b21 = bench("batched x64 pub_many+cons_many+ack_many (21 B)", iters(600), || {
+        batched_cycle(&broker, "q", &refs21, wait);
+    });
+    require_speedup("B1 (21 B)", report_speedup("B1 batched (21 B)", s21, b21, 64));
+    let refs220: Vec<&[u8]> = (0..16).map(|_| grad_payload.as_slice()).collect();
+    let b220 = bench("batched x16 pub_many+cons_many+ack_many (220 KB)", iters(200), || {
+        batched_cycle(&broker, "q", &refs220, wait);
+    });
+    report_speedup("B1 batched (220 KB)", s220, b220, 16);
 
     println!("== B2: wire framing ==");
     let mut buf = Vec::with_capacity(grad_payload.len() + 16);
-    bench("write_frame (220 KB)", 5_000, || {
+    bench("write_frame (220 KB)", iters(5_000), || {
         buf.clear();
         jsdoop::queue::wire::write_frame(&mut buf, 2, &grad_payload).unwrap();
     });
     let mut frame = Vec::new();
     jsdoop::queue::wire::write_frame(&mut frame, 2, &grad_payload).unwrap();
-    bench("read_frame (220 KB)", 5_000, || {
+    bench("read_frame (220 KB)", iters(5_000), || {
         let (_, body) = jsdoop::queue::wire::read_frame(&mut &frame[..]).unwrap();
         std::hint::black_box(body.len());
     });
@@ -80,7 +139,7 @@ fn main() {
         minibatch: 7,
         model_version: 57,
     };
-    bench("task encode+decode", 200_000, || {
+    bench("task encode+decode", iters(200_000), || {
         let b = task.encode();
         std::hint::black_box(Task::decode(&b).unwrap());
     });
@@ -90,11 +149,11 @@ fn main() {
         loss: 4.58,
         grads: vec![0.001; 54_998],
     };
-    bench("gradient encode (55k f32)", 2_000, || {
+    bench("gradient encode (55k f32)", iters(2_000), || {
         std::hint::black_box(grad.encode().len());
     });
     let gbytes = grad.encode();
-    bench("gradient decode (55k f32)", 2_000, || {
+    bench("gradient decode (55k f32)", iters(2_000), || {
         std::hint::black_box(GradResult::decode(&gbytes).unwrap().grads.len());
     });
 
@@ -107,16 +166,33 @@ fn main() {
     .unwrap();
     let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
     q.declare("r").unwrap();
-    bench("remote publish+consume+ack (21 B)", 3_000, || {
-        q.publish("r", &payload).unwrap();
-        let d = q.consume("r", Duration::from_millis(100)).unwrap().unwrap();
-        q.ack("r", d.tag).unwrap();
+    let rwait = Duration::from_millis(100);
+    let r21 = bench("remote publish+consume+ack (21 B)", iters(3_000), || {
+        single_cycle(&q, "r", &payload, rwait);
     });
-    bench("remote publish+consume+ack (220 KB)", 500, || {
-        q.publish("r", &grad_payload).unwrap();
-        let d = q.consume("r", Duration::from_millis(500)).unwrap().unwrap();
-        q.ack("r", d.tag).unwrap();
+    let r220 = bench("remote publish+consume+ack (220 KB)", iters(500), || {
+        single_cycle(&q, "r", &grad_payload, Duration::from_millis(500));
     });
+    let rb21 = bench("remote batched x64 cycle (21 B)", iters(200), || {
+        batched_cycle(&q, "r", &refs21, rwait);
+    });
+    report_speedup("B4 batched (21 B)", r21, rb21, 64);
+    let rb220 = bench("remote batched x16 cycle (220 KB)", iters(60), || {
+        batched_cycle(&q, "r", &refs220, Duration::from_millis(500));
+    });
+    report_speedup("B4 batched (220 KB)", r220, rb220, 16);
+    // Wire-frame economics: a single-op cycle costs 3 request + 3
+    // response frames PER MESSAGE; a batched cycle costs 6 frames PER
+    // BATCH regardless of size.
+    for (batch, label) in [(64usize, "21 B"), (16usize, "220 KB")] {
+        let single_frames = 6 * batch;
+        let fewer = single_frames as f64 / 6.0;
+        println!(
+            "  -> B4 frames per {batch} msgs ({label}): single={single_frames} \
+             batched=6 ({fewer:.0}x fewer)"
+        );
+        assert!(fewer >= 8.0, "batched wire path must move >= 8x fewer frames");
+    }
     h.shutdown();
 
     println!("== B5: broker snapshot/restore (1280 tasks + 80 grads) ==");
@@ -129,11 +205,11 @@ fn main() {
     for _ in 0..80 {
         b2.publish("grads", &grad_payload).unwrap();
     }
-    bench("snapshot (18 MB state)", 50, || {
+    bench("snapshot (18 MB state)", iters(50), || {
         std::hint::black_box(b2.snapshot().len());
     });
     let snap = b2.snapshot();
-    bench("restore (18 MB state)", 50, || {
+    bench("restore (18 MB state)", iters(50), || {
         std::hint::black_box(
             Broker::restore(&snap, Duration::from_secs(60)).unwrap().total_ready(),
         );

@@ -55,11 +55,21 @@ fn main() {
     let vs8: Vec<(usize, f64)> = cluster.iter().map(|(w, t)| (*w, speedup(seq8, *t))).collect();
     println!(
         "{}",
-        render_series("Fig 8a — absolute speedup vs TFJS-Sequential-128", "speedup", &vs128, |w| w as f64)
+        render_series(
+            "Fig 8a — absolute speedup vs TFJS-Sequential-128",
+            "speedup",
+            &vs128,
+            |w| w as f64
+        )
     );
     println!(
         "{}",
-        render_series("Fig 8b — absolute speedup vs TFJS-Sequential-8", "speedup", &vs8, |w| w as f64)
+        render_series(
+            "Fig 8b — absolute speedup vs TFJS-Sequential-8",
+            "speedup",
+            &vs8,
+            |w| w as f64
+        )
     );
 
     // Classroom points (paper overlays them).

@@ -153,7 +153,12 @@ fn main() {
         // small-batch updates at lr 0.1 diverge; our scaled bench does
         // 128) — the full-scale comparison lives in examples/e2e_train
         // and EXPERIMENTS.md E4.
-        assert!((l.distributed - l.seq128).abs() < 0.35, "{} vs {}", l.distributed, l.seq128);
+        assert!(
+            (l.distributed - l.seq128).abs() < 0.35,
+            "{} vs {}",
+            l.distributed,
+            l.seq128
+        );
         println!(
             "losses: distributed {:.3} == seq128 {:.3} (E9); seq8 {:.3} (scale-dependent, see EXPERIMENTS.md)",
             l.distributed, l.seq128, l.seq8

@@ -45,7 +45,12 @@ fn main() -> anyhow::Result<()> {
     let corpus = driver::load_corpus(&cfg)?;
 
     println!("training char-RNN with {} volunteers...", cfg.workers);
-    let out = driver::run_local(&cfg, &engine, &FaultPlan::sync_start(cfg.workers), &vec![1.0; cfg.workers])?;
+    let out = driver::run_local(
+        &cfg,
+        &engine,
+        &FaultPlan::sync_start(cfg.workers),
+        &vec![1.0; cfg.workers],
+    )?;
     println!(
         "trained to version {} (loss {:.3}) in {:.1}s",
         out.final_model.version,

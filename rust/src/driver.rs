@@ -115,6 +115,10 @@ pub fn run_with(
         version_wait: Duration::from_secs_f64(cfg.visibility_timeout_secs / 4.0),
         speed: 1.0,
         t0: std::time::Instant::now(),
+        // One task at a time preserves the paper's scheduling behaviour
+        // for the determinism tests; classroom-mode processes opt into
+        // prefetch explicitly (see AgentOptions::prefetch).
+        prefetch: 1,
     };
     let broker_c = broker.clone();
     let store_c = store.clone();

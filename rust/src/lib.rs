@@ -13,8 +13,9 @@
 //!   Pallas LSTM kernels, AOT-lowered to the HLO artifacts executed by
 //!   [`runtime`].
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index
-//! mapping every figure/table of the paper to a bench target.
+//! See `README.md` for the build/test/bench quickstart and the three-layer
+//! architecture sketch; `rust/benches/` maps every figure/table of the
+//! paper to a bench target.
 
 pub mod baseline;
 pub mod config;

@@ -154,8 +154,19 @@ pub fn efficiency(t_ref: f64, t: f64, workers: usize) -> f64 {
 /// Render Table 4: System | Workers | Runtime (min) | Loss.
 pub fn render_table4(rows: &[RunResult]) -> String {
     let mut out = String::new();
-    let _ = writeln!(out, "| {:<30} | {:>7} | {:>13} | {:>5} |", "System", "Workers", "Runtime (min)", "Loss");
-    let _ = writeln!(out, "|{}|{}|{}|{}|", "-".repeat(32), "-".repeat(9), "-".repeat(15), "-".repeat(7));
+    let _ = writeln!(
+        out,
+        "| {:<30} | {:>7} | {:>13} | {:>5} |",
+        "System", "Workers", "Runtime (min)", "Loss"
+    );
+    let _ = writeln!(
+        out,
+        "|{}|{}|{}|{}|",
+        "-".repeat(32),
+        "-".repeat(9),
+        "-".repeat(15),
+        "-".repeat(7)
+    );
     for r in rows {
         let loss = r
             .final_loss
@@ -268,8 +279,18 @@ mod tests {
     #[test]
     fn table_renders() {
         let rows = vec![
-            RunResult { system: "JSDoop-cluster".into(), workers: 1, runtime_secs: 10626.0, final_loss: Some(4.6) },
-            RunResult { system: "TFJS-Sequential-128".into(), workers: 1, runtime_secs: 54.0, final_loss: None },
+            RunResult {
+                system: "JSDoop-cluster".into(),
+                workers: 1,
+                runtime_secs: 10626.0,
+                final_loss: Some(4.6),
+            },
+            RunResult {
+                system: "TFJS-Sequential-128".into(),
+                workers: 1,
+                runtime_secs: 54.0,
+                final_loss: None,
+            },
         ];
         let t = render_table4(&rows);
         assert!(t.contains("JSDoop-cluster"));

@@ -62,7 +62,12 @@ impl ModelMeta {
             .context("param_layout")?
         {
             param_layout.push(ParamEntry {
-                name: e.req("name").map_err(|e| anyhow::anyhow!(e))?.as_str().unwrap_or("").to_string(),
+                name: e
+                    .req("name")
+                    .map_err(|e| anyhow::anyhow!(e))?
+                    .as_str()
+                    .unwrap_or("")
+                    .to_string(),
                 shape: e
                     .req("shape")
                     .map_err(|e| anyhow::anyhow!(e))?
@@ -78,7 +83,12 @@ impl ModelMeta {
         let mut artifacts = Vec::new();
         if let Some(m) = j.req("artifacts").map_err(|e| anyhow::anyhow!(e))?.as_obj() {
             for (name, v) in m {
-                let file = v.req("file").map_err(|e| anyhow::anyhow!(e))?.as_str().unwrap_or("").to_string();
+                let file = v
+                    .req("file")
+                    .map_err(|e| anyhow::anyhow!(e))?
+                    .as_str()
+                    .unwrap_or("")
+                    .to_string();
                 artifacts.push((name.clone(), file));
             }
         }

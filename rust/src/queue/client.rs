@@ -15,7 +15,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::data::{DataApi, Versioned};
 use crate::queue::server::{body_with_name, roundtrip};
-use crate::queue::wire::{BodyReader, Op, ST_NONE, ST_OK};
+use crate::queue::wire::{put_bytes, put_u32, BodyReader, Op, ST_NONE, ST_OK};
 use crate::queue::{Delivery, QueueApi, QueueStats};
 
 /// Extra slack on the socket read deadline beyond protocol-level timeouts.
@@ -151,6 +151,81 @@ impl QueueApi for RemoteQueue {
             unacked: r.u64()? as usize,
         })
     }
+
+    // --- native batched ops: one wire frame per batch ----------------------
+
+    fn publish_many(&self, queue: &str, payloads: &[&[u8]]) -> Result<()> {
+        if payloads.is_empty() {
+            return Ok(());
+        }
+        let total: usize = payloads.iter().map(|p| p.len() + 4).sum();
+        let mut extra = Vec::with_capacity(4 + total);
+        put_u32(&mut extra, payloads.len() as u32);
+        for p in payloads {
+            put_bytes(&mut extra, p);
+        }
+        self.conn
+            .expect_ok(Op::PublishMany, &body_with_name(queue, &extra))?;
+        Ok(())
+    }
+
+    fn consume_many(&self, queue: &str, max: usize, timeout: Duration) -> Result<Vec<Delivery>> {
+        if max == 0 {
+            return Ok(Vec::new());
+        }
+        let mut extra = Vec::with_capacity(16);
+        extra.extend_from_slice(&(max as u64).to_le_bytes());
+        extra.extend_from_slice(&(timeout.as_millis() as u64).to_le_bytes());
+        let body = body_with_name(queue, &extra);
+        let (st, resp) = self.conn.call(Op::ConsumeMany, &body, Some(timeout))?;
+        match st {
+            ST_NONE => Ok(Vec::new()),
+            ST_OK => {
+                let mut r = BodyReader::new(&resp);
+                let n = r.u32()? as usize;
+                let mut out = Vec::with_capacity(n.min(resp.len())); // sanity bound
+                for _ in 0..n {
+                    let tag = r.u64()?;
+                    let redelivered = r.u8()? != 0;
+                    let payload = r.bytes()?.to_vec();
+                    out.push(Delivery { tag, payload, redelivered });
+                }
+                Ok(out)
+            }
+            _ => Err(anyhow!(
+                "consume_many failed: {}",
+                String::from_utf8_lossy(&resp)
+            )),
+        }
+    }
+
+    fn ack_many(&self, queue: &str, tags: &[u64]) -> Result<()> {
+        if tags.is_empty() {
+            return Ok(());
+        }
+        self.conn
+            .expect_ok(Op::AckMany, &body_with_name(queue, &tags_body(tags)))?;
+        Ok(())
+    }
+
+    fn nack_many(&self, queue: &str, tags: &[u64]) -> Result<()> {
+        if tags.is_empty() {
+            return Ok(());
+        }
+        self.conn
+            .expect_ok(Op::NackMany, &body_with_name(queue, &tags_body(tags)))?;
+        Ok(())
+    }
+}
+
+/// `[count u32][tag u64]*` — the AckMany/NackMany body tail.
+fn tags_body(tags: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + 8 * tags.len());
+    put_u32(&mut out, tags.len() as u32);
+    for t in tags {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+    out
 }
 
 /// Remote DataServer client.

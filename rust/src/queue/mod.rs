@@ -76,4 +76,62 @@ pub trait QueueApi: Send + Sync {
     fn purge(&self, queue: &str) -> Result<()>;
     /// Counters snapshot.
     fn stats(&self, queue: &str) -> Result<QueueStats>;
+
+    // --- batched operations ----------------------------------------------
+    //
+    // Gradient exchange arrives in bursts (16+ pushes per training batch),
+    // and one wire roundtrip per message is the scalability ceiling the
+    // paper's §II.E multi-QueueServer plan attacks. The batch entry points
+    // move one *batch* per lock acquisition / wire frame. Defaults fall
+    // back to loops of single ops, so every QueueApi impl keeps the exact
+    // same observable semantics (property-tested in
+    // rust/tests/prop_invariants.rs); Broker, RemoteQueue, and
+    // ShardedQueue override them natively.
+
+    /// Publish a batch at [`DEFAULT_PRIORITY`], in slice order.
+    fn publish_many(&self, queue: &str, payloads: &[&[u8]]) -> Result<()> {
+        for p in payloads {
+            self.publish(queue, p)?;
+        }
+        Ok(())
+    }
+
+    /// Pop up to `max` messages in (priority, seq) service order, each held
+    /// unACKed under its own visibility deadline. Blocks up to `timeout`
+    /// for the FIRST message only; whatever else is ready at that moment
+    /// rides along. Empty result on timeout.
+    fn consume_many(&self, queue: &str, max: usize, timeout: Duration) -> Result<Vec<Delivery>> {
+        let mut out = Vec::new();
+        if max == 0 {
+            return Ok(out);
+        }
+        match self.consume(queue, timeout)? {
+            Some(d) => out.push(d),
+            None => return Ok(out),
+        }
+        while out.len() < max {
+            match self.consume(queue, Duration::ZERO)? {
+                Some(d) => out.push(d),
+                None => break,
+            }
+        }
+        Ok(out)
+    }
+
+    /// Settle a batch of deliveries (each tag as [`QueueApi::ack`]).
+    fn ack_many(&self, queue: &str, tags: &[u64]) -> Result<()> {
+        for t in tags {
+            self.ack(queue, *t)?;
+        }
+        Ok(())
+    }
+
+    /// Return a batch of deliveries to their original positions (each tag
+    /// as [`QueueApi::nack`]).
+    fn nack_many(&self, queue: &str, tags: &[u64]) -> Result<()> {
+        for t in tags {
+            self.nack(queue, *t)?;
+        }
+        Ok(())
+    }
 }

@@ -16,7 +16,8 @@ use anyhow::Result;
 use crate::data::{DataApi, Store};
 use crate::queue::broker::Broker;
 use crate::queue::wire::{
-    put_str, read_frame, write_frame, BodyReader, Op, ST_ERR, ST_NONE, ST_OK,
+    put_bytes, put_str, put_u32, read_frame, write_frame, BodyReader, Op, MAX_FRAME, ST_ERR,
+    ST_NONE, ST_OK,
 };
 use crate::queue::QueueApi;
 
@@ -193,6 +194,75 @@ fn respond<W: Write>(
             }
             write_frame(stream, ST_OK, &out)?;
         }
+        Op::PublishMany => {
+            let q = r.str()?;
+            let n = r.u32()? as usize;
+            // Each message costs at least its 4-byte length prefix, so a
+            // count claiming more is corrupt — reject before allocating.
+            if n * 4 > body.len() {
+                anyhow::bail!("batch count {n} exceeds body size");
+            }
+            let mut payloads = Vec::with_capacity(n);
+            for _ in 0..n {
+                payloads.push(r.bytes()?);
+            }
+            broker.publish_many(q, &payloads)?;
+            write_frame(stream, ST_OK, &[])?;
+        }
+        Op::ConsumeMany => {
+            let q = r.str()?;
+            let max = r.u64()? as usize;
+            let timeout = Duration::from_millis(r.u64()?);
+            let mut batch = broker.consume_many(q, max, timeout)?;
+            // A batch of large payloads can overflow MAX_FRAME. Erroring
+            // after the pop would strand the deliveries in unacked until
+            // the visibility timeout — instead send the prefix that fits
+            // and NACK the rest straight back to their original slots
+            // (lossless: they lead the very next consume).
+            let mut body_len = 5; // status byte + count u32
+            let mut fits = 0;
+            while fits < batch.len() {
+                let need = 13 + batch[fits].payload.len();
+                if body_len + need > MAX_FRAME {
+                    break;
+                }
+                body_len += need;
+                fits += 1;
+            }
+            if fits == 0 && !batch.is_empty() {
+                fits = 1; // single oversized message: fail like Op::Consume would
+            }
+            if fits < batch.len() {
+                let tags: Vec<u64> = batch[fits..].iter().map(|d| d.tag).collect();
+                broker.nack_many(q, &tags)?;
+                batch.truncate(fits);
+            }
+            if batch.is_empty() {
+                write_frame(stream, ST_NONE, &[])?;
+            } else {
+                let size = 4 + batch.iter().map(|d| 13 + d.payload.len()).sum::<usize>();
+                let mut out = Vec::with_capacity(size);
+                put_u32(&mut out, batch.len() as u32);
+                for d in &batch {
+                    out.extend_from_slice(&d.tag.to_le_bytes());
+                    out.push(d.redelivered as u8);
+                    put_bytes(&mut out, &d.payload);
+                }
+                write_frame(stream, ST_OK, &out)?;
+            }
+        }
+        Op::AckMany => {
+            let q = r.str()?;
+            let tags = read_tags(&mut r, body.len())?;
+            broker.ack_many(q, &tags)?;
+            write_frame(stream, ST_OK, &[])?;
+        }
+        Op::NackMany => {
+            let q = r.str()?;
+            let tags = read_tags(&mut r, body.len())?;
+            broker.nack_many(q, &tags)?;
+            write_frame(stream, ST_OK, &[])?;
+        }
         Op::Put => {
             let k = r.str()?;
             store.put(k, r.rest())?;
@@ -241,6 +311,20 @@ fn respond<W: Write>(
         }
     }
     Ok(())
+}
+
+/// Parse a `[count u32][tag u64]*` tail (AckMany/NackMany bodies), with a
+/// sanity bound so a corrupt count cannot trigger a huge allocation.
+fn read_tags(r: &mut BodyReader<'_>, body_len: usize) -> Result<Vec<u64>> {
+    let n = r.u32()? as usize;
+    if n * 8 > body_len {
+        anyhow::bail!("tag count {n} exceeds body size");
+    }
+    let mut tags = Vec::with_capacity(n);
+    for _ in 0..n {
+        tags.push(r.u64()?);
+    }
+    Ok(tags)
 }
 
 /// Client-side helper shared with `client.rs`: send one request, read the

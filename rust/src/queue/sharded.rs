@@ -37,7 +37,7 @@ impl ShardedQueue {
     /// Rendezvous hash: shard with the highest weight(queue, shard) wins.
     pub fn shard_for(&self, queue: &str) -> usize {
         let mut best = (0usize, 0u64);
-        for i in 0..self.shards.len() {
+        for i in 0..self.num_shards() {
             let w = Self::weight(queue, i as u64);
             if w >= best.1 {
                 best = (i, w);
@@ -99,6 +99,27 @@ impl QueueApi for ShardedQueue {
 
     fn stats(&self, queue: &str) -> Result<QueueStats> {
         self.shard(queue).stats(queue)
+    }
+
+    // Batched ops: a batch addresses ONE queue name, and rendezvous
+    // routing is by queue name — so the whole batch lands on a single
+    // shard. Delegating (instead of inheriting the single-op fallback
+    // loop) preserves the backend's native batching through the balancer.
+
+    fn publish_many(&self, queue: &str, payloads: &[&[u8]]) -> Result<()> {
+        self.shard(queue).publish_many(queue, payloads)
+    }
+
+    fn consume_many(&self, queue: &str, max: usize, timeout: Duration) -> Result<Vec<Delivery>> {
+        self.shard(queue).consume_many(queue, max, timeout)
+    }
+
+    fn ack_many(&self, queue: &str, tags: &[u64]) -> Result<()> {
+        self.shard(queue).ack_many(queue, tags)
+    }
+
+    fn nack_many(&self, queue: &str, tags: &[u64]) -> Result<()> {
+        self.shard(queue).nack_many(queue, tags)
     }
 }
 
@@ -172,6 +193,28 @@ mod tests {
             s.ack(q, d.tag).unwrap();
             assert_eq!(s.len(q).unwrap(), 0);
         }
+    }
+
+    #[test]
+    fn batched_ops_ride_the_owning_shard() {
+        let s = sharded(3);
+        s.declare("grads").unwrap();
+        let payloads: Vec<Vec<u8>> = (0..10u8).map(|i| vec![i]).collect();
+        let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        s.publish_many("grads", &refs).unwrap();
+        assert_eq!(s.len("grads").unwrap(), 10);
+        let batch = s.consume_many("grads", 10, Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.len(), 10);
+        for (i, d) in batch.iter().enumerate() {
+            assert_eq!(d.payload, vec![i as u8]);
+        }
+        let tags: Vec<u64> = batch.iter().map(|d| d.tag).collect();
+        s.nack_many("grads", &tags).unwrap();
+        assert_eq!(s.len("grads").unwrap(), 10);
+        let again = s.consume_many("grads", 10, Duration::from_millis(10)).unwrap();
+        assert!(again.iter().all(|d| d.redelivered));
+        s.ack_many("grads", &again.iter().map(|d| d.tag).collect::<Vec<_>>()).unwrap();
+        assert_eq!(s.len("grads").unwrap(), 0);
     }
 
     #[test]

@@ -32,6 +32,13 @@ pub enum Op {
     Purge = 7,
     Stats = 8,
     PublishPri = 9,
+    // Batched queue ops: one frame moves a whole batch (see QueueApi's
+    // batched entry points). Multi-message bodies are length-prefixed per
+    // message ([`put_bytes`] / [`BodyReader::bytes`]).
+    PublishMany = 10,
+    ConsumeMany = 11,
+    AckMany = 12,
+    NackMany = 13,
     // Data ops
     Put = 16,
     Get = 17,
@@ -57,6 +64,10 @@ impl Op {
             7 => Op::Purge,
             8 => Op::Stats,
             9 => Op::PublishPri,
+            10 => Op::PublishMany,
+            11 => Op::ConsumeMany,
+            12 => Op::AckMany,
+            13 => Op::NackMany,
             16 => Op::Put,
             17 => Op::Get,
             18 => Op::Del,
@@ -116,6 +127,19 @@ pub fn put_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(b);
 }
 
+/// Append a little-endian u32 (batch counts, per-message lengths).
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a length-prefixed byte chunk (u32 length) — the per-message
+/// framing inside batched bodies.
+pub fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    assert!(b.len() <= u32::MAX as usize, "chunk too long");
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
 /// Sequential reader over a frame body.
 pub struct BodyReader<'a> {
     b: &'a [u8],
@@ -150,6 +174,15 @@ impl<'a> BodyReader<'a> {
         Ok(v)
     }
 
+    pub fn u32(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            bail!("body truncated (u32)");
+        }
+        let v = u32::from_le_bytes(self.b[self.i..self.i + 4].try_into().unwrap());
+        self.i += 4;
+        Ok(v)
+    }
+
     pub fn u8(&mut self) -> Result<u8> {
         if self.i >= self.b.len() {
             bail!("body truncated (u8)");
@@ -157,6 +190,17 @@ impl<'a> BodyReader<'a> {
         let v = self.b[self.i];
         self.i += 1;
         Ok(v)
+    }
+
+    /// A length-prefixed byte chunk ([`put_bytes`] counterpart).
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        if self.i + n > self.b.len() {
+            bail!("body truncated (chunk of {n} bytes)");
+        }
+        let r = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(r)
     }
 
     /// All remaining bytes.
@@ -215,9 +259,42 @@ mod tests {
 
     #[test]
     fn opcode_roundtrip() {
-        for op in [Op::Declare, Op::Consume, Op::WaitVersion, Op::Shutdown] {
+        for op in [
+            Op::Declare,
+            Op::Consume,
+            Op::PublishMany,
+            Op::ConsumeMany,
+            Op::AckMany,
+            Op::NackMany,
+            Op::WaitVersion,
+            Op::Shutdown,
+        ] {
             assert_eq!(Op::from_u8(op as u8).unwrap(), op);
         }
         assert!(Op::from_u8(99).is_err());
+    }
+
+    #[test]
+    fn chunked_body_roundtrip() {
+        let mut out = Vec::new();
+        put_u32(&mut out, 3);
+        put_bytes(&mut out, b"one");
+        put_bytes(&mut out, b"");
+        put_bytes(&mut out, b"three");
+        let mut r = BodyReader::new(&out);
+        let n = r.u32().unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(r.bytes().unwrap(), b"one");
+        assert_eq!(r.bytes().unwrap(), b"");
+        assert_eq!(r.bytes().unwrap(), b"three");
+        assert!(r.bytes().is_err());
+    }
+
+    #[test]
+    fn chunk_rejects_truncation() {
+        let mut out = Vec::new();
+        put_bytes(&mut out, b"hello");
+        let mut r = BodyReader::new(&out[..6]); // len says 5, only 2 present
+        assert!(r.bytes().is_err());
     }
 }

@@ -1,0 +1,181 @@
+//! Real PJRT backend (compiled only with `--features pjrt`).
+//!
+//! Requires the vendored `xla` bindings; see runtime/mod.rs for how the
+//! stub/real split works. The API surface here is the contract the stub
+//! mirrors — change both together.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{EVAL_LOSS_B128, PREDICT_B1, RMSPROP_UPDATE};
+use crate::model::ModelMeta;
+
+/// A compiled model runtime: one PJRT client + one loaded executable per
+/// artifact. Construction compiles everything up front (slow, once);
+/// execution is the request-path hot loop.
+pub struct Engine {
+    client: xla::PjRtClient,
+    meta: ModelMeta,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    artifact_dir: PathBuf,
+}
+
+// SAFETY: `PjRtClient`/`PjRtLoadedExecutable` wrap raw pointers to XLA's
+// C++ PJRT objects, which are documented thread-safe (PJRT executables
+// support concurrent Execute; the CPU client runs a thread pool). The Rust
+// wrapper types are !Send/!Sync only because they contain raw pointers.
+// We never mutate the maps after construction; all &self methods go
+// straight to thread-safe C++ entry points.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load + compile every artifact listed in `model_meta.json`.
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let meta = ModelMeta::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for (name, file) in &meta.artifacts {
+            let path = artifact_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Engine { client, meta, exes, artifact_dir: artifact_dir.to_path_buf() })
+    }
+
+    /// Shared handle for multi-threaded volunteers.
+    pub fn load_shared(artifact_dir: &Path) -> Result<Arc<Self>> {
+        Ok(Arc::new(Self::load(artifact_dir)?))
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded (stale artifacts/?)"))
+    }
+
+    fn lit_f32(vals: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(vals)
+    }
+
+    fn lit_i32(vals: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(vals)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self.exe(name)?;
+        let bufs = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))
+    }
+
+    /// Map task compute: minibatch gradient + loss.
+    /// `artifact` selects the B=8 (map task) or B=128 (sequential baseline)
+    /// entry point; x is row-major [B, seq_len], y is [B].
+    pub fn grad_step(
+        &self,
+        artifact: &str,
+        params: &[f32],
+        x: &[i32],
+        y: &[i32],
+    ) -> Result<(Vec<f32>, f32)> {
+        let b = y.len();
+        if x.len() != b * self.meta.seq_len {
+            bail!("x has {} elems, expected {}", x.len(), b * self.meta.seq_len);
+        }
+        if params.len() != self.meta.num_params {
+            bail!("params len {} != {}", params.len(), self.meta.num_params);
+        }
+        let args = [
+            Self::lit_f32(params),
+            Self::lit_i32(x, &[b as i64, self.meta.seq_len as i64])?,
+            Self::lit_i32(y, &[b as i64])?,
+        ];
+        let out = self.run(artifact, &args)?;
+        let (grads_l, loss_l) = out
+            .to_tuple2()
+            .map_err(|e| anyhow!("grad_step output tuple: {e:?}"))?;
+        let grads = grads_l.to_vec::<f32>().map_err(|e| anyhow!("grads: {e:?}"))?;
+        let loss = loss_l
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?;
+        Ok((grads, loss))
+    }
+
+    /// Reduce task compute: RMSprop update. Returns (params', ms').
+    pub fn rmsprop_update(
+        &self,
+        params: &[f32],
+        ms: &[f32],
+        grads: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = self.meta.num_params;
+        if params.len() != n || ms.len() != n || grads.len() != n {
+            bail!("rmsprop arg length mismatch");
+        }
+        let args = [
+            Self::lit_f32(params),
+            Self::lit_f32(ms),
+            Self::lit_f32(grads),
+            Self::lit_f32(&[lr]),
+        ];
+        let out = self.run(RMSPROP_UPDATE, &args)?;
+        let (p_l, ms_l) = out.to_tuple2().map_err(|e| anyhow!("rmsprop tuple: {e:?}"))?;
+        Ok((
+            p_l.to_vec::<f32>().map_err(|e| anyhow!("params': {e:?}"))?,
+            ms_l.to_vec::<f32>().map_err(|e| anyhow!("ms': {e:?}"))?,
+        ))
+    }
+
+    /// Evaluation loss over a full 128-batch.
+    pub fn eval_loss(&self, params: &[f32], x: &[i32], y: &[i32]) -> Result<f32> {
+        let args = [
+            Self::lit_f32(params),
+            Self::lit_i32(x, &[y.len() as i64, self.meta.seq_len as i64])?,
+            Self::lit_i32(y, &[y.len() as i64])?,
+        ];
+        let out = self.run(EVAL_LOSS_B128, &args)?;
+        let l = out.to_tuple1().map_err(|e| anyhow!("eval tuple: {e:?}"))?;
+        l.get_first_element::<f32>().map_err(|e| anyhow!("loss: {e:?}"))
+    }
+
+    /// Next-char probabilities for one sample (text-generation demo).
+    pub fn predict(&self, params: &[f32], x: &[i32]) -> Result<Vec<f32>> {
+        if x.len() != self.meta.seq_len {
+            bail!("predict expects one sample of seq_len");
+        }
+        let args = [
+            Self::lit_f32(params),
+            Self::lit_i32(x, &[1, self.meta.seq_len as i64])?,
+        ];
+        let out = self.run(PREDICT_B1, &args)?;
+        let p = out.to_tuple1().map_err(|e| anyhow!("predict tuple: {e:?}"))?;
+        p.to_vec::<f32>().map_err(|e| anyhow!("probs: {e:?}"))
+    }
+}

@@ -1,0 +1,88 @@
+//! Engine stand-in for builds without the PJRT backend.
+//!
+//! `load` always fails (no fake numerics can ever leak into a run), and
+//! every compute method errors at runtime. The full signature surface of
+//! the pjrt backend's `Engine` is mirrored so agents, drivers, benches,
+//! and tests compile identically against either backend.
+//!
+//! [`Engine::protocol_only_for_tests`] constructs a compute-less engine
+//! so queue/agent *protocol* paths (stale settlement, batched NACK
+//! hand-back, prefetch grouping) can be integration-tested without AOT
+//! artifacts — any accidental compute call fails the test loudly.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelMeta;
+
+/// Compute-less placeholder for the PJRT engine (see module docs).
+pub struct Engine {
+    _priv: (),
+}
+
+impl Engine {
+    /// Always fails: the PJRT backend is not compiled in.
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        bail!(
+            "PJRT backend not compiled in (artifacts at {artifact_dir:?}); \
+             rebuild with --features pjrt and the vendored xla bindings"
+        )
+    }
+
+    /// Shared handle for multi-threaded volunteers.
+    pub fn load_shared(artifact_dir: &Path) -> Result<Arc<Self>> {
+        Ok(Arc::new(Self::load(artifact_dir)?))
+    }
+
+    /// An engine whose every compute method errors: for tests that
+    /// exercise the coordination protocol only (see module docs).
+    pub fn protocol_only_for_tests() -> Self {
+        Engine { _priv: () }
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        panic!("stub engine has no model metadata (build with --features pjrt)")
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        panic!("stub engine has no artifact dir (build with --features pjrt)")
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (no PJRT)".to_string()
+    }
+
+    /// Map task compute: minibatch gradient + loss.
+    pub fn grad_step(
+        &self,
+        _artifact: &str,
+        _params: &[f32],
+        _x: &[i32],
+        _y: &[i32],
+    ) -> Result<(Vec<f32>, f32)> {
+        bail!("stub engine cannot execute grad_step (build with --features pjrt)")
+    }
+
+    /// Reduce task compute: RMSprop update. Returns (params', ms').
+    pub fn rmsprop_update(
+        &self,
+        _params: &[f32],
+        _ms: &[f32],
+        _grads: &[f32],
+        _lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        bail!("stub engine cannot execute rmsprop_update (build with --features pjrt)")
+    }
+
+    /// Evaluation loss over a full 128-batch.
+    pub fn eval_loss(&self, _params: &[f32], _x: &[i32], _y: &[i32]) -> Result<f32> {
+        bail!("stub engine cannot execute eval_loss (build with --features pjrt)")
+    }
+
+    /// Next-char probabilities for one sample (text-generation demo).
+    pub fn predict(&self, _params: &[f32], _x: &[i32]) -> Result<Vec<f32>> {
+        bail!("stub engine cannot execute predict (build with --features pjrt)")
+    }
+}

@@ -7,6 +7,14 @@
 //! The agent only sees trait objects ([`QueueApi`], [`DataApi`]) so the
 //! same code runs against the in-process broker (cluster mode) or TCP
 //! clients (classroom mode) — the paper's NodeJS-console vs browser split.
+//!
+//! Batching: the agent exchanges queue messages in batches wherever the
+//! protocol allows — reduce collects gradients via `consume_many` and
+//! settles them via `ack_many`/`nack_many`, and with
+//! [`AgentOptions::prefetch`] > 1 it pulls several tasks per roundtrip,
+//! resolving runs of same-batch maps with ONE model wait, ONE
+//! `publish_many` of gradients, and ONE `ack_many` (the classroom-mode
+//! wire win measured in benches/broker_hotpath.rs B4).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
@@ -37,6 +45,12 @@ pub struct AgentOptions {
     pub speed: f64,
     /// Experiment start for timeline spans.
     pub t0: std::time::Instant,
+    /// Tasks pulled per queue roundtrip (>= 1). With 1 the agent runs the
+    /// paper's one-task-at-a-time loop; larger values amortize the wire
+    /// roundtrip and let runs of same-batch maps share one model wait and
+    /// one batched gradient publish. Held prefetched tasks stay covered
+    /// by the visibility timeout like any other unACKed delivery.
+    pub prefetch: usize,
 }
 
 impl Default for AgentOptions {
@@ -46,6 +60,7 @@ impl Default for AgentOptions {
             version_wait: Duration::from_secs(20),
             speed: 1.0,
             t0: std::time::Instant::now(),
+            prefetch: 1,
         }
     }
 }
@@ -75,6 +90,20 @@ fn precedes(a: &Task, b: &Task) -> bool {
             && matches!(b, Task::Reduce { .. }))
 }
 
+/// Outcome of waiting for a task's pinned model version.
+enum VersionWait {
+    /// Version live: run the held task(s) against this snapshot.
+    Ready(ModelSnapshot),
+    /// The queue head held strictly-earlier work; the held task(s) were
+    /// NACKed back to their original slots — run the swapped task instead.
+    Swapped(Task, Delivery),
+    /// The model advanced past the pinned version (duplicate of an
+    /// already-reduced batch).
+    Stale,
+    /// The volunteer closed the tab; held task(s) were NACKed back.
+    Quit,
+}
+
 /// A volunteer: wraps the engine + connections and runs the task loop.
 pub struct Agent<'a> {
     pub id: usize,
@@ -91,6 +120,7 @@ impl<'a> Agent<'a> {
     pub fn run(&self, quit: &AtomicBool) -> Result<AgentReport> {
         let (spec, corpus) = fetch_problem(self.data)?;
         let mut report = AgentReport::default();
+        let prefetch = self.opts.prefetch.max(1);
         loop {
             if quit.load(Ordering::Relaxed) || stop_requested(self.data)? {
                 return Ok(report);
@@ -98,19 +128,52 @@ impl<'a> Agent<'a> {
             if self.finished(&spec)? {
                 return Ok(report);
             }
-            let Some(delivery) = self.queue.consume(queues::TASKS, self.opts.poll)? else {
+            let deliveries = self.queue.consume_many(queues::TASKS, prefetch, self.opts.poll)?;
+            if deliveries.is_empty() {
                 continue;
-            };
-            let task = match Task::decode(&delivery.payload) {
-                Ok(t) => t,
-                Err(e) => {
-                    // Poison message: drop it (ACK) and keep serving.
-                    self.queue.ack(queues::TASKS, delivery.tag)?;
-                    eprintln!("agent {}: dropping malformed task: {e}", self.id);
-                    continue;
+            }
+            // Decode up front; poison messages are dropped (ACK) here.
+            let mut held: Vec<(Task, Delivery)> = Vec::with_capacity(deliveries.len());
+            for d in deliveries {
+                match Task::decode(&d.payload) {
+                    Ok(t) => held.push((t, d)),
+                    Err(e) => {
+                        self.queue.ack(queues::TASKS, d.tag)?;
+                        eprintln!("agent {}: dropping malformed task: {e}", self.id);
+                    }
                 }
-            };
-            self.handle(&spec, &corpus, task, &delivery, quit, &mut report)?;
+            }
+            let mut i = 0;
+            while i < held.len() {
+                if quit.load(Ordering::Relaxed) || stop_requested(self.data)? {
+                    // Hand the unprocessed tail back before leaving.
+                    let rest: Vec<u64> = held[i..].iter().map(|(_, d)| d.tag).collect();
+                    self.queue.nack_many(queues::TASKS, &rest)?;
+                    report.tasks_nacked += rest.len() as u64;
+                    return Ok(report);
+                }
+                // A run of consecutive maps of the same batch resolves
+                // with one model wait + one batched gradient publish.
+                let mut j = i + 1;
+                if matches!(held[i].0, Task::Map { .. }) {
+                    let bref = held[i].0.batch_ref();
+                    let ver = held[i].0.model_version();
+                    while j < held.len()
+                        && matches!(held[j].0, Task::Map { .. })
+                        && held[j].0.batch_ref() == bref
+                        && held[j].0.model_version() == ver
+                    {
+                        j += 1;
+                    }
+                }
+                if j - i > 1 {
+                    self.handle_map_run(&spec, &corpus, &held[i..j], quit, &mut report)?;
+                } else {
+                    let (task, delivery) = &held[i];
+                    self.handle(&spec, &corpus, task.clone(), delivery, quit, &mut report)?;
+                }
+                i = j;
+            }
         }
     }
 
@@ -129,6 +192,106 @@ impl<'a> Agent<'a> {
         }
     }
 
+    /// §IV.G: block until the model version `pinned` needs is live,
+    /// probing the queue head between waits for earlier work
+    /// (priority-swap). `tags` are ALL deliveries the caller holds for
+    /// this wait; on swap/quit they are NACKed back as one batch.
+    fn await_version(
+        &self,
+        pinned: &Task,
+        tags: &[u64],
+        quit: &AtomicBool,
+        report: &mut AgentReport,
+    ) -> Result<VersionWait> {
+        loop {
+            match wait_exact_model(self.data, pinned.model_version(), self.opts.version_wait) {
+                Ok(Some(s)) => return Ok(VersionWait::Ready(s)),
+                Ok(None) => {
+                    if quit.load(Ordering::Relaxed) {
+                        self.queue.nack_many(queues::TASKS, tags)?;
+                        report.tasks_nacked += tags.len() as u64;
+                        return Ok(VersionWait::Quit);
+                    }
+                    if let Some(d2) = self.queue.consume(queues::TASKS, Duration::ZERO)? {
+                        match Task::decode(&d2.payload) {
+                            Ok(t2) if precedes(&t2, pinned) => {
+                                // Swap: our task(s) return to their
+                                // original slots; the earlier one runs.
+                                self.queue.nack_many(queues::TASKS, tags)?;
+                                report.tasks_swapped += 1;
+                                return Ok(VersionWait::Swapped(t2, d2));
+                            }
+                            Ok(_) => self.queue.nack(queues::TASKS, d2.tag)?,
+                            Err(_) => self.queue.ack(queues::TASKS, d2.tag)?, // poison
+                        }
+                    }
+                }
+                Err(_) => return Ok(VersionWait::Stale),
+            }
+        }
+    }
+
+    /// Resolve a run of >= 2 consecutive Map tasks pinned to the same
+    /// (batch, model version): one model wait, one `publish_many` of all
+    /// gradients, one `ack_many` of all task deliveries.
+    fn handle_map_run(
+        &self,
+        spec: &ProblemSpec,
+        corpus: &Corpus,
+        run: &[(Task, Delivery)],
+        quit: &AtomicBool,
+        report: &mut AgentReport,
+    ) -> Result<()> {
+        let start = self.now();
+        let tags: Vec<u64> = run.iter().map(|(_, d)| d.tag).collect();
+        let pinned = run[0].0.clone();
+        let snapshot = match self.await_version(&pinned, &tags, quit, report)? {
+            VersionWait::Ready(s) => s,
+            VersionWait::Quit => return Ok(()),
+            VersionWait::Swapped(t2, d2) => {
+                return self.handle(spec, corpus, t2, &d2, quit, report);
+            }
+            VersionWait::Stale => {
+                // The whole batch was already reduced: settle every
+                // duplicate in one op.
+                self.queue.ack_many(queues::TASKS, &tags)?;
+                report.stale_skipped += tags.len() as u64;
+                return Ok(());
+            }
+        };
+        let rq = queues::map_results(pinned.batch_ref());
+        let mut encoded = Vec::with_capacity(run.len());
+        for (task, _) in run {
+            let Task::Map { batch_ref, minibatch, .. } = task else {
+                unreachable!("map run contains a non-map task");
+            };
+            let t0 = self.now();
+            let (x, y) = spec.schedule.minibatch(
+                corpus,
+                batch_ref.epoch as usize,
+                batch_ref.batch as usize,
+                *minibatch as usize,
+            );
+            let (grads, loss) = self
+                .engine
+                .grad_step(GRAD_STEP_B8, &snapshot.params, &x, &y)
+                .context("map grad_step")?;
+            let result =
+                GradResult { batch_ref: *batch_ref, minibatch: *minibatch, loss, grads };
+            encoded.push(result.encode());
+            self.record(SpanKind::Compute, t0);
+        }
+        self.throttle(start);
+        // Gradients first, then the task ACKs: a crash in between
+        // redelivers the maps and the duplicate results are deduplicated
+        // by the reducer's accumulator (at-least-once).
+        let refs: Vec<&[u8]> = encoded.iter().map(|e| e.as_slice()).collect();
+        self.queue.publish_many(&rq, &refs)?;
+        self.queue.ack_many(queues::TASKS, &tags)?;
+        report.maps_done += run.len() as u64;
+        Ok(())
+    }
+
     fn handle(
         &self,
         spec: &ProblemSpec,
@@ -139,45 +302,24 @@ impl<'a> Agent<'a> {
         report: &mut AgentReport,
     ) -> Result<()> {
         let start = self.now();
-        // §IV.G: wait for the model version this task pins, probing the
-        // queue head between waits for earlier work (priority-swap).
-        let snapshot = loop {
-            match wait_exact_model(self.data, task.model_version(), self.opts.version_wait) {
-                Ok(Some(s)) => break s,
-                Ok(None) => {
-                    if quit.load(Ordering::Relaxed) {
-                        self.queue.nack(queues::TASKS, delivery.tag)?;
-                        report.tasks_nacked += 1;
-                        return Ok(());
-                    }
-                    if let Some(d2) = self.queue.consume(queues::TASKS, Duration::ZERO)? {
-                        match Task::decode(&d2.payload) {
-                            Ok(t2) if precedes(&t2, &task) => {
-                                // Swap: our task returns to the front; the
-                                // earlier task runs now.
-                                self.queue.nack(queues::TASKS, delivery.tag)?;
-                                report.tasks_swapped += 1;
-                                return self.handle(spec, corpus, t2, &d2, quit, report);
-                            }
-                            Ok(_) => self.queue.nack(queues::TASKS, d2.tag)?,
-                            Err(_) => self.queue.ack(queues::TASKS, d2.tag)?, // poison
-                        }
-                    }
-                    continue;
+        let snapshot = match self.await_version(&task, &[delivery.tag], quit, report)? {
+            VersionWait::Ready(s) => s,
+            VersionWait::Quit => return Ok(()),
+            VersionWait::Swapped(t2, d2) => {
+                return self.handle(spec, corpus, t2, &d2, quit, report);
+            }
+            VersionWait::Stale => {
+                // Model advanced past the pinned version: a duplicate of
+                // an already-reduced batch. Settle it; for a stale reduce
+                // also drop any orphaned gradients (they linger if the
+                // original reducer died between publishing the model and
+                // ACKing its gradient messages).
+                if let Task::Reduce { batch_ref, .. } = task {
+                    self.queue.purge(&queues::map_results(batch_ref))?;
                 }
-                    Err(_) => {
-                    // Model advanced past the pinned version: a duplicate
-                    // of an already-reduced batch. Settle it; for a stale
-                    // reduce also drop any orphaned gradients (they linger
-                    // if the original reducer died between publishing the
-                    // model and ACKing its gradient messages).
-                    if let Task::Reduce { batch_ref, .. } = task {
-                        self.queue.purge(&queues::map_results(batch_ref))?;
-                    }
-                    self.queue.ack(queues::TASKS, delivery.tag)?;
-                    report.stale_skipped += 1;
-                    return Ok(());
-                }
+                self.queue.ack(queues::TASKS, delivery.tag)?;
+                report.stale_skipped += 1;
+                return Ok(());
             }
         };
         match task {
@@ -210,9 +352,7 @@ impl<'a> Agent<'a> {
                         // Tab closed mid-reduce: hand everything back.
                         // NACKing the collected gradients (not dropping
                         // them) lets the next reducer find them instantly.
-                        for tag in pending_acks {
-                            self.queue.nack(&rq, tag)?;
-                        }
+                        self.queue.nack_many(&rq, &pending_acks)?;
                         self.queue.nack(queues::TASKS, delivery.tag)?;
                         report.tasks_nacked += 1;
                         return Ok(());
@@ -235,15 +375,21 @@ impl<'a> Agent<'a> {
                         }
                         last_progress = std::time::Instant::now();
                     }
-                    match self.queue.consume(&rq, self.opts.poll)? {
-                        Some(d) => {
-                            let g = GradResult::decode(&d.payload)
-                                .map_err(|e| anyhow!("corrupt gradient: {e}"))?;
-                            acc.insert(g.minibatch as usize, g.grads)?;
-                            pending_acks.push(d.tag);
-                            last_progress = std::time::Instant::now();
-                        }
-                        None => continue, // map stragglers / redeliveries
+                    // Batched collect: grab every gradient already pushed
+                    // (bounded by the slots still missing) in ONE queue
+                    // op — the 16-pushes-per-batch burst the batch API
+                    // exists for.
+                    let want = acc.missing().len();
+                    let got = self.queue.consume_many(&rq, want, self.opts.poll)?;
+                    if got.is_empty() {
+                        continue; // map stragglers / redeliveries
+                    }
+                    for d in got {
+                        let g = GradResult::decode(&d.payload)
+                            .map_err(|e| anyhow!("corrupt gradient: {e}"))?;
+                        acc.insert(g.minibatch as usize, g.grads)?;
+                        pending_acks.push(d.tag);
+                        last_progress = std::time::Instant::now();
                     }
                 }
                 let folded = acc.fold()?;
@@ -258,10 +404,9 @@ impl<'a> Agent<'a> {
                 )?;
                 // Settle gradients only after the model is durably
                 // published: a crash before this line redelivers them to
-                // the next reduce attempt.
-                for tag in pending_acks {
-                    self.queue.ack(&rq, tag)?;
-                }
+                // the next reduce attempt. One batched ACK settles the
+                // whole collection.
+                self.queue.ack_many(&rq, &pending_acks)?;
                 self.queue.ack(queues::TASKS, delivery.tag)?;
                 self.data.incr(keys::REDUCES_DONE)?;
                 report.reduces_done += 1;

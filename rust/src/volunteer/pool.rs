@@ -61,6 +61,7 @@ pub fn run_pool(
                 t0: base_opts.t0,
                 poll: base_opts.poll,
                 version_wait: base_opts.version_wait,
+                prefetch: base_opts.prefetch,
             };
             let join_at = script.join_at;
             let handle = scope.spawn(move || -> Result<AgentReport> {

@@ -1,0 +1,117 @@
+//! Agent protocol paths that need NO compute: prefetch batching, batched
+//! stale settlement, orphaned-gradient purging. These run against the
+//! stub engine's `protocol_only_for_tests` (any accidental compute call
+//! errors loudly), so CI exercises them without AOT artifacts — the
+//! coverage the real-compute e2e tests cannot give when they skip.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use jsdoop::coordinator::task::{BatchRef, Task};
+use jsdoop::coordinator::version::publish_model;
+use jsdoop::coordinator::{keys, queues, ProblemSpec};
+use jsdoop::data::{DataApi, Store};
+use jsdoop::model::ModelSnapshot;
+use jsdoop::queue::broker::Broker;
+use jsdoop::queue::QueueApi;
+use jsdoop::runtime::Engine;
+use jsdoop::textdata::{Corpus, Schedule};
+use jsdoop::volunteer::agent::{Agent, AgentOptions, AgentReport};
+
+fn batch0() -> BatchRef {
+    BatchRef { epoch: 0, batch: 0 }
+}
+
+/// A world where the model has ALREADY advanced past batch 0 (to v1 of
+/// 2), plus batch-0 tasks: everything the agent pulls is a stale
+/// duplicate and must be settled without ever invoking compute.
+fn stale_batch0_world() -> (Broker, Store) {
+    let broker = Broker::new(Duration::from_secs(30));
+    let store = Store::new();
+    let spec = ProblemSpec { schedule: Schedule::tiny(), learning_rate: 0.1 };
+    let corpus = Corpus::synthetic_js(1, 2000);
+    store.put(keys::PROBLEM, &spec.encode()).unwrap();
+    store.put(keys::CORPUS, &corpus.to_bytes()).unwrap();
+    let snap = ModelSnapshot { version: 1, params: vec![0.0; 16], ms: vec![0.0; 16] };
+    publish_model(&store, &snap).unwrap();
+    broker.declare(queues::TASKS).unwrap();
+    broker.declare(&queues::map_results(batch0())).unwrap();
+    for m in 0..2u32 {
+        let t = Task::Map { batch_ref: batch0(), minibatch: m, model_version: 0 };
+        broker.publish_pri(queues::TASKS, &t.encode(), 0).unwrap();
+    }
+    let t = Task::Reduce { batch_ref: batch0(), num_minibatches: 2, model_version: 0 };
+    broker.publish_pri(queues::TASKS, &t.encode(), 1).unwrap();
+    // An orphaned gradient a dead reducer left behind: the stale reduce
+    // must purge it along with the duplicate task.
+    broker.publish(&queues::map_results(batch0()), b"orphan").unwrap();
+    (broker, store)
+}
+
+/// Run one agent until all three batch-0 tasks are settled, then quit it.
+fn run_until_settled(broker: &Broker, store: &Store, prefetch: usize) -> AgentReport {
+    let engine = Engine::protocol_only_for_tests();
+    let quit = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        let quit2 = quit.clone();
+        let handle = scope.spawn(move || {
+            let agent = Agent {
+                id: 0,
+                engine: &engine,
+                queue: broker,
+                data: store,
+                timeline: None,
+                opts: AgentOptions {
+                    poll: Duration::from_millis(20),
+                    version_wait: Duration::from_millis(50),
+                    prefetch,
+                    ..Default::default()
+                },
+            };
+            agent.run(&quit2).unwrap()
+        });
+        let t0 = std::time::Instant::now();
+        while broker.stats(queues::TASKS).unwrap().acked < 3 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "agent failed to settle the stale tasks"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        quit.store(true, Ordering::Relaxed);
+        handle.join().unwrap()
+    })
+}
+
+fn assert_settled(broker: &Broker, report: &AgentReport) {
+    // All three stale duplicates settled, nothing computed.
+    assert_eq!(report.stale_skipped, 3, "report: {report:?}");
+    assert_eq!(report.maps_done, 0);
+    assert_eq!(report.reduces_done, 0);
+    let s = broker.stats(queues::TASKS).unwrap();
+    assert_eq!(s.acked, 3);
+    assert_eq!(s.ready, 0);
+    assert_eq!(s.unacked, 0);
+    // The stale reduce purged the orphaned gradient.
+    assert_eq!(broker.len(&queues::map_results(batch0())).unwrap(), 0);
+}
+
+#[test]
+fn prefetched_agent_settles_stale_batch_via_batched_path() {
+    // prefetch > 1: the two stale maps arrive as one run and settle via
+    // ONE ack_many (handle_map_run's Stale arm); the reduce follows.
+    let (broker, store) = stale_batch0_world();
+    let report = run_until_settled(&broker, &store, 8);
+    assert_settled(&broker, &report);
+}
+
+#[test]
+fn single_op_agent_settles_stale_batch_identically() {
+    // prefetch = 1 (the paper's loop) must produce the same outcome.
+    let (broker, store) = stale_batch0_world();
+    let report = run_until_settled(&broker, &store, 1);
+    assert_settled(&broker, &report);
+}

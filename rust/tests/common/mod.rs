@@ -1,5 +1,13 @@
 //! Shared helpers for integration tests: artifact location + a
 //! process-wide Engine (PJRT compilation is expensive; share it).
+//!
+//! Real-compute tests SKIP themselves (early return after
+//! [`skip`]-logging) when the AOT artifacts or the PJRT backend are
+//! unavailable: tier-1 CI builds the coordination stack without the XLA
+//! toolchain (see rust/src/runtime/mod.rs), while a host that ran
+//! `make artifacts` with `--features pjrt` exercises the full suite.
+
+#![allow(dead_code)] // not every test binary uses every helper
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -8,34 +16,49 @@ use once_cell::sync::OnceCell;
 
 use jsdoop::runtime::Engine;
 
-pub fn artifact_dir() -> PathBuf {
+/// The artifact directory, if `make artifacts` has populated one.
+pub fn try_artifact_dir() -> Option<PathBuf> {
     let dir = jsdoop::runtime::default_artifact_dir();
-    assert!(
-        dir.join("model_meta.json").exists(),
-        "artifacts missing at {dir:?} — run `make artifacts` first"
-    );
-    dir
+    dir.join("model_meta.json").exists().then_some(dir)
 }
 
-static ENGINE: OnceCell<Arc<Engine>> = OnceCell::new();
+static ENGINE: OnceCell<Option<Arc<Engine>>> = OnceCell::new();
 
-pub fn shared_engine() -> Arc<Engine> {
+/// The shared engine, or `None` when artifacts or the PJRT backend are
+/// unavailable (the caller skips its test body).
+pub fn try_shared_engine() -> Option<Arc<Engine>> {
     ENGINE
-        .get_or_init(|| Engine::load_shared(&artifact_dir()).expect("engine load"))
+        .get_or_init(|| {
+            let dir = try_artifact_dir()?;
+            match Engine::load_shared(&dir) {
+                Ok(e) => Some(e),
+                Err(e) => {
+                    eprintln!("engine unavailable: {e:#}");
+                    None
+                }
+            }
+        })
         .clone()
 }
 
-/// A config scaled down for fast real-compute tests (seq_len/minibatch are
-/// pinned by the AOT artifacts; everything else shrinks).
-pub fn tiny_config() -> jsdoop::config::Config {
+/// Engine + a config scaled down for fast real-compute tests (seq_len /
+/// minibatch are pinned by the AOT artifacts; everything else shrinks).
+/// `None` = skip (see module docs).
+pub fn engine_and_tiny_config() -> Option<(Arc<Engine>, jsdoop::config::Config)> {
+    let engine = try_shared_engine()?;
     let mut cfg = jsdoop::config::Config::default();
     cfg.batch_size = 16;
     cfg.examples_per_epoch = 32;
     cfg.epochs = 1;
     cfg.corpus_len = 20_000;
-    cfg.artifact_dir = artifact_dir();
+    cfg.artifact_dir = try_artifact_dir()?;
     cfg.task_poll_timeout_secs = 0.1;
     cfg.visibility_timeout_secs = 30.0;
     cfg.validate().unwrap();
-    cfg
+    Some((engine, cfg))
+}
+
+/// Log a skipped real-compute test (shows up with `cargo test -- --nocapture`).
+pub fn skip(test: &str) {
+    eprintln!("SKIP {test}: PJRT backend / AOT artifacts unavailable");
 }

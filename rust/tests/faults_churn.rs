@@ -11,12 +11,11 @@ use jsdoop::coordinator::ProblemSpec;
 use jsdoop::driver;
 use jsdoop::faults::{FaultPlan, WorkerScript};
 
-fn oracle_params(cfg: &jsdoop::config::Config) -> Vec<f32> {
-    let engine = common::shared_engine();
+fn oracle_params(engine: &jsdoop::runtime::Engine, cfg: &jsdoop::config::Config) -> Vec<f32> {
     let corpus = driver::load_corpus(cfg).unwrap();
     let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
     let init = engine.meta().load_init_params(&cfg.artifact_dir).unwrap();
-    baseline::train_accumulated(&engine, &corpus, &spec, init)
+    baseline::train_accumulated(engine, &corpus, &spec, init)
         .unwrap()
         .snapshot
         .params
@@ -27,18 +26,23 @@ fn half_the_fleet_leaves_midway() {
     // Paper classroom scenario 3, compressed: 4 workers, 2 close their
     // tab almost immediately; the rest must finish, and the final model
     // must STILL equal the serial oracle (tasks redeliver, order holds).
-    let mut cfg = common::tiny_config();
+    let Some((engine, mut cfg)) = common::engine_and_tiny_config() else {
+        common::skip("half_the_fleet_leaves_midway");
+        return;
+    };
     cfg.visibility_timeout_secs = 2.0; // fast redelivery of orphaned tasks
     let plan = FaultPlan::departure(4, 2, 0.3);
-    let engine = common::shared_engine();
     let out = driver::run_local(&cfg, &engine, &plan, &[1.0; 4]).unwrap();
     assert_eq!(out.final_model.version, cfg.schedule().total_batches() as u64);
-    assert_eq!(out.final_model.params, oracle_params(&cfg));
+    assert_eq!(out.final_model.params, oracle_params(&engine, &cfg));
 }
 
 #[test]
 fn late_joiners_still_converge_identically() {
-    let cfg = common::tiny_config();
+    let Some((engine, cfg)) = common::engine_and_tiny_config() else {
+        common::skip("late_joiners_still_converge_identically");
+        return;
+    };
     let plan = FaultPlan {
         workers: vec![
             WorkerScript::steady(),
@@ -46,20 +50,21 @@ fn late_joiners_still_converge_identically() {
             WorkerScript { join_at: 0.5, leave_at: None, freeze: None },
         ],
     };
-    let engine = common::shared_engine();
     let out = driver::run_local(&cfg, &engine, &plan, &[1.0; 3]).unwrap();
-    assert_eq!(out.final_model.params, oracle_params(&cfg));
+    assert_eq!(out.final_model.params, oracle_params(&engine, &cfg));
 }
 
 #[test]
 fn lone_survivor_finishes_alone() {
     // Everyone except one worker leaves immediately after start.
-    let mut cfg = common::tiny_config();
+    let Some((engine, mut cfg)) = common::engine_and_tiny_config() else {
+        common::skip("lone_survivor_finishes_alone");
+        return;
+    };
     cfg.visibility_timeout_secs = 1.5;
     let plan = FaultPlan::departure(3, 2, 0.1);
-    let engine = common::shared_engine();
     let out = driver::run_local(&cfg, &engine, &plan, &[1.0; 3]).unwrap();
-    assert_eq!(out.final_model.params, oracle_params(&cfg));
+    assert_eq!(out.final_model.params, oracle_params(&engine, &cfg));
     // The survivor did (at least) the lion's share.
     let maps: u64 = out.pool.reports.iter().map(|r| r.maps_done).sum();
     assert!(maps >= cfg.schedule().total_map_tasks() as u64);
@@ -68,11 +73,13 @@ fn lone_survivor_finishes_alone() {
 #[test]
 fn heterogeneous_speeds_same_model() {
     // Throttled workers change the schedule, never the result.
-    let cfg = common::tiny_config();
+    let Some((engine, cfg)) = common::engine_and_tiny_config() else {
+        common::skip("heterogeneous_speeds_same_model");
+        return;
+    };
     let plan = FaultPlan::sync_start(3);
-    let engine = common::shared_engine();
     let out = driver::run_local(&cfg, &engine, &plan, &[1.0, 0.3, 0.6]).unwrap();
-    assert_eq!(out.final_model.params, oracle_params(&cfg));
+    assert_eq!(out.final_model.params, oracle_params(&engine, &cfg));
 }
 
 #[test]
@@ -87,8 +94,10 @@ fn stop_flag_dismisses_the_fleet() {
     use std::sync::atomic::AtomicBool;
     use std::sync::Arc;
 
-    let cfg = common::tiny_config();
-    let engine = common::shared_engine();
+    let Some((engine, cfg)) = common::engine_and_tiny_config() else {
+        common::skip("stop_flag_dismisses_the_fleet");
+        return;
+    };
     let broker = Arc::new(Broker::new(Duration::from_secs(30)));
     let store = Arc::new(Store::new());
     let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };

@@ -242,3 +242,106 @@ fn prop_corpus_samples_always_in_bounds() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_batch_ops_equal_single_op_loops() {
+    // Observational equivalence: a broker driven by the batched entry
+    // points (publish_many / consume_many / ack_many / nack_many) is
+    // indistinguishable from one driven by the equivalent loops of
+    // single ops — same service order, same redelivery flags, same
+    // ready counts, same final drain.
+    use jsdoop::queue::Delivery;
+
+    check("batch-vs-single", 16, |rng| {
+        let batched = Broker::new(Duration::from_secs(60));
+        let single = Broker::new(Duration::from_secs(60));
+        batched.declare("q").map_err(|e| e.to_string())?;
+        single.declare("q").map_err(|e| e.to_string())?;
+        let poll = Duration::from_millis(1);
+        let mut next_payload = 0u32;
+        // Held (unACKed) deliveries, kept in matching order on each side.
+        let mut held_b: Vec<Delivery> = Vec::new();
+        let mut held_s: Vec<Delivery> = Vec::new();
+        for step in 0..20 {
+            match rng.below(4) {
+                0 => {
+                    let n = rng.below(6) as usize;
+                    let payloads: Vec<Vec<u8>> = (0..n)
+                        .map(|k| (next_payload + k as u32).to_le_bytes().to_vec())
+                        .collect();
+                    next_payload += n as u32;
+                    let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+                    batched.publish_many("q", &refs).map_err(|e| e.to_string())?;
+                    for p in &payloads {
+                        single.publish("q", p).map_err(|e| e.to_string())?;
+                    }
+                }
+                1 => {
+                    let max = 1 + rng.below(5) as usize;
+                    let db = batched
+                        .consume_many("q", max, poll)
+                        .map_err(|e| e.to_string())?;
+                    let mut ds = Vec::new();
+                    for _ in 0..max {
+                        match single.consume("q", poll).map_err(|e| e.to_string())? {
+                            Some(d) => ds.push(d),
+                            None => break,
+                        }
+                    }
+                    let pb: Vec<(&Vec<u8>, bool)> =
+                        db.iter().map(|d| (&d.payload, d.redelivered)).collect();
+                    let ps: Vec<(&Vec<u8>, bool)> =
+                        ds.iter().map(|d| (&d.payload, d.redelivered)).collect();
+                    if pb != ps {
+                        return Err(format!("step {step}: consume {pb:?} != {ps:?}"));
+                    }
+                    held_b.extend(db);
+                    held_s.extend(ds);
+                }
+                2 => {
+                    let k = rng.below(held_b.len() as u64 + 1) as usize;
+                    let tags: Vec<u64> = held_b.drain(..k).map(|d| d.tag).collect();
+                    batched.ack_many("q", &tags).map_err(|e| e.to_string())?;
+                    for d in held_s.drain(..k) {
+                        single.ack("q", d.tag).map_err(|e| e.to_string())?;
+                    }
+                }
+                _ => {
+                    let k = rng.below(held_b.len() as u64 + 1) as usize;
+                    let tags: Vec<u64> = held_b.drain(..k).map(|d| d.tag).collect();
+                    batched.nack_many("q", &tags).map_err(|e| e.to_string())?;
+                    for d in held_s.drain(..k) {
+                        single.nack("q", d.tag).map_err(|e| e.to_string())?;
+                    }
+                }
+            }
+            let (lb, ls) = (
+                batched.len("q").map_err(|e| e.to_string())?,
+                single.len("q").map_err(|e| e.to_string())?,
+            );
+            if lb != ls {
+                return Err(format!("step {step}: ready {lb} != {ls}"));
+            }
+        }
+        // Final drain must be identical message-for-message.
+        loop {
+            let db = batched.consume("q", poll).map_err(|e| e.to_string())?;
+            let ds = single.consume("q", poll).map_err(|e| e.to_string())?;
+            match (db, ds) {
+                (None, None) => break,
+                (Some(a), Some(b)) => {
+                    if a.payload != b.payload || a.redelivered != b.redelivered {
+                        return Err(format!(
+                            "drain mismatch: {:?}/{} vs {:?}/{}",
+                            a.payload, a.redelivered, b.payload, b.redelivered
+                        ));
+                    }
+                    batched.ack("q", a.tag).map_err(|e| e.to_string())?;
+                    single.ack("q", b.tag).map_err(|e| e.to_string())?;
+                }
+                (a, b) => return Err(format!("drain length mismatch: {a:?} vs {b:?}")),
+            }
+        }
+        Ok(())
+    });
+}

@@ -117,8 +117,10 @@ fn remote_data_roundtrip_and_wait() {
 #[test]
 fn distributed_training_over_tcp() {
     // Full e2e across the wire: initiator + 2 remote volunteers.
-    let cfg = common::tiny_config();
-    let engine = common::shared_engine();
+    let Some((engine, cfg)) = common::engine_and_tiny_config() else {
+        common::skip("distributed_training_over_tcp");
+        return;
+    };
     let h = start_server(30_000);
     let addr = h.addr.to_string();
 
@@ -161,6 +163,88 @@ fn distributed_training_over_tcp() {
     let d = RemoteData::connect(&addr).unwrap();
     let snap = jsdoop::coordinator::version::get_model(&d).unwrap().unwrap();
     assert_eq!(snap.version, spec.total_versions());
+    h.shutdown();
+}
+
+#[test]
+fn remote_batched_cycle_matches_single_op_semantics() {
+    // publish_many/consume_many/ack_many over the wire behave exactly
+    // like loops of single ops: same order, same redelivery contract.
+    let h = start_server(5_000);
+    let addr = h.addr.to_string();
+    let q = RemoteQueue::connect(&addr).unwrap();
+    q.declare("batch").unwrap();
+
+    let payloads: Vec<Vec<u8>> = (0..20u8).map(|i| vec![i, i + 1]).collect();
+    let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+    q.publish_many("batch", &refs).unwrap();
+    assert_eq!(q.len("batch").unwrap(), 20);
+
+    // One frame grabs the first 8, in publish order.
+    let first = q.consume_many("batch", 8, Duration::from_millis(100)).unwrap();
+    assert_eq!(first.len(), 8);
+    for (i, d) in first.iter().enumerate() {
+        assert_eq!(d.payload, payloads[i]);
+        assert!(!d.redelivered);
+    }
+    // NACK them back as one frame: they return to the queue head.
+    let tags: Vec<u64> = first.iter().map(|d| d.tag).collect();
+    q.nack_many("batch", &tags).unwrap();
+    let again = q.consume_many("batch", 20, Duration::from_millis(100)).unwrap();
+    assert_eq!(again.len(), 20);
+    for (i, d) in again.iter().enumerate() {
+        assert_eq!(d.payload, payloads[i]);
+        assert_eq!(d.redelivered, i < 8, "only the nacked head is redelivered");
+    }
+    // ACK everything in one frame; the queue drains.
+    let tags: Vec<u64> = again.iter().map(|d| d.tag).collect();
+    q.ack_many("batch", &tags).unwrap();
+    assert_eq!(q.len("batch").unwrap(), 0);
+    assert!(q.consume_many("batch", 4, Duration::from_millis(20)).unwrap().is_empty());
+
+    let s = q.stats("batch").unwrap();
+    assert_eq!(s.published, 20);
+    assert_eq!(s.acked, 20);
+    assert_eq!(s.nacked, 8);
+    h.shutdown();
+}
+
+#[test]
+fn remote_consume_many_blocks_for_first_message() {
+    let h = start_server(5_000);
+    let addr = h.addr.to_string();
+    let q1 = RemoteQueue::connect(&addr).unwrap();
+    q1.declare("lazy").unwrap();
+    let addr2 = addr.clone();
+    let waiter = std::thread::spawn(move || {
+        let q2 = RemoteQueue::connect(&addr2).unwrap();
+        q2.consume_many("lazy", 8, Duration::from_secs(5)).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    let refs: [&[u8]; 3] = [b"a", b"b", b"c"];
+    q1.publish_many("lazy", &refs).unwrap();
+    let got = waiter.join().unwrap();
+    assert!(!got.is_empty());
+    assert_eq!(got[0].payload, b"a");
+    h.shutdown();
+}
+
+#[test]
+fn remote_batched_visibility_redelivery() {
+    // consume_many holds each message under its own visibility deadline.
+    let h = start_server(80);
+    let addr = h.addr.to_string();
+    let q = RemoteQueue::connect(&addr).unwrap();
+    q.declare("vb").unwrap();
+    let refs: [&[u8]; 2] = [b"x", b"y"];
+    q.publish_many("vb", &refs).unwrap();
+    let batch = q.consume_many("vb", 2, Duration::from_millis(50)).unwrap();
+    assert_eq!(batch.len(), 2);
+    q.ack("vb", batch[0].tag).unwrap();
+    // No ACK for the second; the server-side sweeper requeues it.
+    let d = q.consume("vb", Duration::from_secs(2)).unwrap().unwrap();
+    assert!(d.redelivered);
+    assert_eq!(d.payload, b"y");
     h.shutdown();
 }
 

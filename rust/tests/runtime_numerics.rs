@@ -7,20 +7,34 @@ mod common;
 use jsdoop::runtime::{GRAD_STEP_B128, GRAD_STEP_B8};
 use jsdoop::util::json::Json;
 
-fn testvec() -> Json {
-    let text = std::fs::read_to_string(common::artifact_dir().join("testvec.json"))
+/// Engine + artifact dir, or None to skip (CI has no PJRT backend).
+fn setup(test: &str) -> Option<(std::sync::Arc<jsdoop::runtime::Engine>, std::path::PathBuf)> {
+    let engine = common::try_shared_engine();
+    let dir = common::try_artifact_dir();
+    match (engine, dir) {
+        (Some(e), Some(d)) => Some((e, d)),
+        _ => {
+            common::skip(test);
+            None
+        }
+    }
+}
+
+fn testvec(dir: &std::path::Path) -> Json {
+    let text = std::fs::read_to_string(dir.join("testvec.json"))
         .expect("testvec.json (run make artifacts)");
     Json::parse(&text).unwrap()
 }
 
 #[test]
 fn grad_step_matches_jax() {
-    let engine = common::shared_engine();
-    let dir = common::artifact_dir();
-    let tv = testvec();
+    let Some((engine, dir)) = setup("grad_step_matches_jax") else { return };
+    let tv = testvec(&dir);
     let params = engine.meta().load_init_params(&dir).unwrap();
-    let x: Vec<i32> = tv.req("x").unwrap().as_f64_vec().unwrap().iter().map(|v| *v as i32).collect();
-    let y: Vec<i32> = tv.req("y").unwrap().as_f64_vec().unwrap().iter().map(|v| *v as i32).collect();
+    let x: Vec<i32> =
+        tv.req("x").unwrap().as_f64_vec().unwrap().iter().map(|v| *v as i32).collect();
+    let y: Vec<i32> =
+        tv.req("y").unwrap().as_f64_vec().unwrap().iter().map(|v| *v as i32).collect();
 
     let (grads, loss) = engine.grad_step(GRAD_STEP_B8, &params, &x, &y).unwrap();
     let want_loss = tv.req("loss").unwrap().as_f64().unwrap();
@@ -44,12 +58,13 @@ fn grad_step_matches_jax() {
 
 #[test]
 fn rmsprop_matches_jax() {
-    let engine = common::shared_engine();
-    let dir = common::artifact_dir();
-    let tv = testvec();
+    let Some((engine, dir)) = setup("rmsprop_matches_jax") else { return };
+    let tv = testvec(&dir);
     let params = engine.meta().load_init_params(&dir).unwrap();
-    let x: Vec<i32> = tv.req("x").unwrap().as_f64_vec().unwrap().iter().map(|v| *v as i32).collect();
-    let y: Vec<i32> = tv.req("y").unwrap().as_f64_vec().unwrap().iter().map(|v| *v as i32).collect();
+    let x: Vec<i32> =
+        tv.req("x").unwrap().as_f64_vec().unwrap().iter().map(|v| *v as i32).collect();
+    let y: Vec<i32> =
+        tv.req("y").unwrap().as_f64_vec().unwrap().iter().map(|v| *v as i32).collect();
     let (grads, _) = engine.grad_step(GRAD_STEP_B8, &params, &x, &y).unwrap();
     let (p2, ms2) = engine
         .rmsprop_update(&params, &vec![0.0; params.len()], &grads, 0.1)
@@ -73,10 +88,9 @@ fn rmsprop_matches_jax() {
 
 #[test]
 fn batch128_and_eval_consistent() {
+    let Some((engine, dir)) = setup("batch128_and_eval_consistent") else { return };
     // The B=128 gradient artifact must agree with eval_loss on the same
     // batch, and with the mean of the 16 B=8 losses.
-    let engine = common::shared_engine();
-    let dir = common::artifact_dir();
     let params = engine.meta().load_init_params(&dir).unwrap();
     let m = engine.meta();
     let seq = m.seq_len;
@@ -102,8 +116,7 @@ fn batch128_and_eval_consistent() {
 
 #[test]
 fn predict_is_a_distribution() {
-    let engine = common::shared_engine();
-    let dir = common::artifact_dir();
+    let Some((engine, dir)) = setup("predict_is_a_distribution") else { return };
     let params = engine.meta().load_init_params(&dir).unwrap();
     let x: Vec<i32> = (0..engine.meta().seq_len).map(|i| (i % 90) as i32).collect();
     let probs = engine.predict(&params, &x).unwrap();
@@ -115,8 +128,7 @@ fn predict_is_a_distribution() {
 
 #[test]
 fn engine_rejects_bad_shapes() {
-    let engine = common::shared_engine();
-    let dir = common::artifact_dir();
+    let Some((engine, dir)) = setup("engine_rejects_bad_shapes") else { return };
     let params = engine.meta().load_init_params(&dir).unwrap();
     // Wrong x length.
     assert!(engine.grad_step(GRAD_STEP_B8, &params, &[0; 10], &[0; 8]).is_err());

@@ -12,8 +12,10 @@ use jsdoop::faults::FaultPlan;
 
 #[test]
 fn distributed_equals_serial_accumulated_for_any_worker_count() {
-    let cfg = common::tiny_config();
-    let engine = common::shared_engine();
+    let Some((engine, cfg)) = common::engine_and_tiny_config() else {
+        common::skip("distributed_equals_serial_accumulated_for_any_worker_count");
+        return;
+    };
     let corpus = driver::load_corpus(&cfg).unwrap();
     let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
     let init = engine.meta().load_init_params(&cfg.artifact_dir).unwrap();
@@ -41,11 +43,13 @@ fn distributed_equals_serial_accumulated_for_any_worker_count() {
 fn training_actually_reduces_loss() {
     // A slightly longer run must show learning: final-epoch eval loss
     // clearly below the ln(98) ~= 4.585 initial entropy.
-    let mut cfg = common::tiny_config();
+    let Some((engine, mut cfg)) = common::engine_and_tiny_config() else {
+        common::skip("training_actually_reduces_loss");
+        return;
+    };
     cfg.epochs = 2;
     cfg.examples_per_epoch = 64;
     cfg.learning_rate = 0.05;
-    let engine = common::shared_engine();
     let plan = FaultPlan::sync_start(4);
     let out = driver::run_local(&cfg, &engine, &plan, &[1.0; 4]).unwrap();
     assert!(
@@ -57,8 +61,10 @@ fn training_actually_reduces_loss() {
 
 #[test]
 fn timeline_covers_all_tasks() {
-    let cfg = common::tiny_config();
-    let engine = common::shared_engine();
+    let Some((engine, cfg)) = common::engine_and_tiny_config() else {
+        common::skip("timeline_covers_all_tasks");
+        return;
+    };
     let plan = FaultPlan::sync_start(2);
     let out = driver::run_local(&cfg, &engine, &plan, &[1.0; 2]).unwrap();
     let spans = out.timeline.spans();
@@ -80,8 +86,10 @@ fn timeline_covers_all_tasks() {
 fn sequential_variants_differ_as_expected() {
     // TFJS-Sequential-128 != TFJS-Sequential-8 (different optimization
     // paths); accumulated == distributed handled above.
-    let cfg = common::tiny_config();
-    let engine = common::shared_engine();
+    let Some((engine, cfg)) = common::engine_and_tiny_config() else {
+        common::skip("sequential_variants_differ_as_expected");
+        return;
+    };
     let corpus = driver::load_corpus(&cfg).unwrap();
     let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
     let init = engine.meta().load_init_params(&cfg.artifact_dir).unwrap();

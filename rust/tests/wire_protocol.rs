@@ -137,3 +137,74 @@ fn concurrent_clients_hammering_one_queue() {
     assert_eq!(total, 200);
     h.shutdown();
 }
+
+#[test]
+fn malformed_batch_bodies_are_error_responses() {
+    // Corrupt PublishMany/AckMany frames must produce ST_ERR, not a
+    // wedged server or a giant allocation.
+    let h = start();
+    let mut s = TcpStream::connect(h.addr).unwrap();
+
+    // PublishMany claiming u32::MAX messages with an empty tail.
+    let mut body = vec![];
+    body.extend_from_slice(&1u16.to_le_bytes());
+    body.push(b'q');
+    body.extend_from_slice(&u32::MAX.to_le_bytes());
+    write_frame(&mut s, Op::PublishMany as u8, &body).unwrap();
+    let (st, _) = read_frame(&mut s).unwrap();
+    assert_eq!(st, ST_ERR);
+
+    // AckMany with a count that exceeds the body.
+    let mut body = vec![];
+    body.extend_from_slice(&1u16.to_le_bytes());
+    body.push(b'q');
+    body.extend_from_slice(&1000u32.to_le_bytes());
+    body.extend_from_slice(&7u64.to_le_bytes()); // only one tag present
+    write_frame(&mut s, Op::AckMany as u8, &body).unwrap();
+    let (st, _) = read_frame(&mut s).unwrap();
+    assert_eq!(st, ST_ERR);
+
+    // A PublishMany whose chunk length overruns the body.
+    let mut body = vec![];
+    body.extend_from_slice(&1u16.to_le_bytes());
+    body.push(b'q');
+    body.extend_from_slice(&1u32.to_le_bytes());
+    body.extend_from_slice(&500u32.to_le_bytes());
+    body.extend_from_slice(b"abc"); // chunk claims 500 bytes, has 3
+    write_frame(&mut s, Op::PublishMany as u8, &body).unwrap();
+    let (st, _) = read_frame(&mut s).unwrap();
+    assert_eq!(st, ST_ERR);
+
+    // The connection still works afterwards.
+    write_frame(&mut s, Op::Ping as u8, &[]).unwrap();
+    let (st, body) = read_frame(&mut s).unwrap();
+    assert_eq!(st, ST_OK);
+    assert_eq!(body, b"pong");
+    h.shutdown();
+}
+
+#[test]
+fn batched_gradient_burst_roundtrips() {
+    // 16 gradient-sized messages in one frame each way (the per-batch
+    // burst the reduce path moves), well under MAX_FRAME.
+    let h = start();
+    let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
+    q.declare("burst").unwrap();
+    let payloads: Vec<Vec<u8>> = (0..16u32)
+        .map(|i| {
+            let mut p = vec![(i % 251) as u8; 220_012];
+            p[0] = i as u8; // distinguishable heads
+            p
+        })
+        .collect();
+    let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+    q.publish_many("burst", &refs).unwrap();
+    let got = q.consume_many("burst", 16, Duration::from_secs(2)).unwrap();
+    assert_eq!(got.len(), 16);
+    for (i, d) in got.iter().enumerate() {
+        assert_eq!(d.payload, payloads[i]);
+    }
+    q.ack_many("burst", &got.iter().map(|d| d.tag).collect::<Vec<_>>()).unwrap();
+    assert_eq!(q.len("burst").unwrap(), 0);
+    h.shutdown();
+}
