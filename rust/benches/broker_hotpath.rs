@@ -12,73 +12,38 @@
 //! (BENCH_ITERS caps every iteration count so regressions fail loudly
 //! without burning CI minutes.)
 
+mod common;
+
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use jsdoop::coordinator::task::{BatchRef, GradResult, Task};
 use jsdoop::data::Store;
+use jsdoop::metrics::{write_bench_json, BenchRow};
 use jsdoop::queue::broker::Broker;
 use jsdoop::queue::client::RemoteQueue;
 use jsdoop::queue::server::serve;
 use jsdoop::queue::QueueApi;
 
-/// Iteration count for one bench, capped by $BENCH_ITERS (CI smoke mode).
-fn iters(default: u32) -> u32 {
-    match std::env::var("BENCH_ITERS") {
-        Ok(s) => match s.parse::<u32>() {
-            Ok(n) => n.clamp(1, default),
-            Err(_) => default,
-        },
-        Err(_) => default,
-    }
-}
-
-fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
-    // Warmup.
-    for _ in 0..iters / 10 + 1 {
-        f();
-    }
-    let mut best = f64::MAX;
-    for _ in 0..5 {
-        let t0 = Instant::now();
-        for _ in 0..iters {
-            f();
-        }
-        let per = t0.elapsed().as_secs_f64() / iters as f64;
-        best = best.min(per);
-    }
-    let (v, unit) = if best < 1e-6 {
-        (best * 1e9, "ns")
-    } else if best < 1e-3 {
-        (best * 1e6, "us")
-    } else {
-        (best * 1e3, "ms")
-    };
-    println!("  {name:<44} {v:>9.2} {unit}/op");
-    best
-}
-
-/// One single-op publish/consume/ack cycle per message.
-fn single_cycle(q: &dyn QueueApi, name: &str, payload: &[u8], wait: Duration) {
-    q.publish(name, payload).unwrap();
-    let d = q.consume(name, wait).unwrap().unwrap();
-    q.ack(name, d.tag).unwrap();
-}
-
-/// One batched publish_many/consume_many/ack_many cycle for `refs`.
-fn batched_cycle(q: &dyn QueueApi, name: &str, refs: &[&[u8]], wait: Duration) {
-    q.publish_many(name, refs).unwrap();
-    let ds = q.consume_many(name, refs.len(), wait).unwrap();
-    assert_eq!(ds.len(), refs.len());
-    let tags: Vec<u64> = ds.iter().map(|d| d.tag).collect();
-    q.ack_many(name, &tags).unwrap();
-}
+use common::{batched_cycle, bench, iters, single_cycle};
 
 /// Print the per-message speedup of a batched cycle over the single loop.
-fn report_speedup(label: &str, single_per_msg: f64, batch_per_op: f64, batch: usize) -> f64 {
+fn report_speedup(
+    rows: &mut Vec<BenchRow>,
+    label: &str,
+    single_per_msg: f64,
+    batch_per_op: f64,
+    batch: usize,
+) -> f64 {
     let batched_per_msg = batch_per_op / batch as f64;
     let speedup = single_per_msg / batched_per_msg;
     println!("  -> {label}: {speedup:.2}x throughput per message at batch={batch}");
+    rows.push(BenchRow {
+        op: label.to_string(),
+        iters: batch as u32,
+        ns_per_op: batched_per_msg * 1e9,
+        speedup: Some(speedup),
+    });
     speedup
 }
 
@@ -97,38 +62,39 @@ fn require_speedup(label: &str, speedup: f64) {
 }
 
 fn main() {
+    let mut rows: Vec<BenchRow> = Vec::new();
     println!("== B1: in-process broker cycle ==");
     let broker = Broker::new(Duration::from_secs(60));
     broker.declare("q").unwrap();
     let payload = vec![7u8; 21]; // task-sized
     let wait = Duration::from_millis(1);
-    let s21 = bench("publish+consume+ack (21 B)", iters(20_000), || {
+    let s21 = bench(&mut rows, "publish+consume+ack (21 B)", iters(20_000), || {
         single_cycle(&broker, "q", &payload, wait);
     });
     let grad_payload = vec![0u8; 20 + 54998 * 4]; // gradient-sized
-    let s220 = bench("publish+consume+ack (220 KB gradient)", iters(2_000), || {
+    let s220 = bench(&mut rows, "publish+consume+ack (220 KB gradient)", iters(2_000), || {
         single_cycle(&broker, "q", &grad_payload, wait);
     });
     let refs21: Vec<&[u8]> = (0..64).map(|_| payload.as_slice()).collect();
-    let b21 = bench("batched x64 pub_many+cons_many+ack_many (21 B)", iters(600), || {
+    let b21 = bench(&mut rows, "batched x64 pub_many+cons_many+ack_many (21 B)", iters(600), || {
         batched_cycle(&broker, "q", &refs21, wait);
     });
-    require_speedup("B1 (21 B)", report_speedup("B1 batched (21 B)", s21, b21, 64));
+    require_speedup("B1 (21 B)", report_speedup(&mut rows, "B1 batched (21 B)", s21, b21, 64));
     let refs220: Vec<&[u8]> = (0..16).map(|_| grad_payload.as_slice()).collect();
-    let b220 = bench("batched x16 pub_many+cons_many+ack_many (220 KB)", iters(200), || {
+    let b220 = bench(&mut rows, "batched x16 pub_many+cons_many+ack_many (220 KB)", iters(200), || {
         batched_cycle(&broker, "q", &refs220, wait);
     });
-    report_speedup("B1 batched (220 KB)", s220, b220, 16);
+    report_speedup(&mut rows, "B1 batched (220 KB)", s220, b220, 16);
 
     println!("== B2: wire framing ==");
     let mut buf = Vec::with_capacity(grad_payload.len() + 16);
-    bench("write_frame (220 KB)", iters(5_000), || {
+    bench(&mut rows, "write_frame (220 KB)", iters(5_000), || {
         buf.clear();
         jsdoop::queue::wire::write_frame(&mut buf, 2, &grad_payload).unwrap();
     });
     let mut frame = Vec::new();
     jsdoop::queue::wire::write_frame(&mut frame, 2, &grad_payload).unwrap();
-    bench("read_frame (220 KB)", iters(5_000), || {
+    bench(&mut rows, "read_frame (220 KB)", iters(5_000), || {
         let (_, body) = jsdoop::queue::wire::read_frame(&mut &frame[..]).unwrap();
         std::hint::black_box(body.len());
     });
@@ -139,7 +105,7 @@ fn main() {
         minibatch: 7,
         model_version: 57,
     };
-    bench("task encode+decode", iters(200_000), || {
+    bench(&mut rows, "task encode+decode", iters(200_000), || {
         let b = task.encode();
         std::hint::black_box(Task::decode(&b).unwrap());
     });
@@ -149,11 +115,11 @@ fn main() {
         loss: 4.58,
         grads: vec![0.001; 54_998],
     };
-    bench("gradient encode (55k f32)", iters(2_000), || {
+    bench(&mut rows, "gradient encode (55k f32)", iters(2_000), || {
         std::hint::black_box(grad.encode().len());
     });
     let gbytes = grad.encode();
-    bench("gradient decode (55k f32)", iters(2_000), || {
+    bench(&mut rows, "gradient decode (55k f32)", iters(2_000), || {
         std::hint::black_box(GradResult::decode(&gbytes).unwrap().grads.len());
     });
 
@@ -167,20 +133,20 @@ fn main() {
     let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
     q.declare("r").unwrap();
     let rwait = Duration::from_millis(100);
-    let r21 = bench("remote publish+consume+ack (21 B)", iters(3_000), || {
+    let r21 = bench(&mut rows, "remote publish+consume+ack (21 B)", iters(3_000), || {
         single_cycle(&q, "r", &payload, rwait);
     });
-    let r220 = bench("remote publish+consume+ack (220 KB)", iters(500), || {
+    let r220 = bench(&mut rows, "remote publish+consume+ack (220 KB)", iters(500), || {
         single_cycle(&q, "r", &grad_payload, Duration::from_millis(500));
     });
-    let rb21 = bench("remote batched x64 cycle (21 B)", iters(200), || {
+    let rb21 = bench(&mut rows, "remote batched x64 cycle (21 B)", iters(200), || {
         batched_cycle(&q, "r", &refs21, rwait);
     });
-    report_speedup("B4 batched (21 B)", r21, rb21, 64);
-    let rb220 = bench("remote batched x16 cycle (220 KB)", iters(60), || {
+    report_speedup(&mut rows, "B4 batched (21 B)", r21, rb21, 64);
+    let rb220 = bench(&mut rows, "remote batched x16 cycle (220 KB)", iters(60), || {
         batched_cycle(&q, "r", &refs220, Duration::from_millis(500));
     });
-    report_speedup("B4 batched (220 KB)", r220, rb220, 16);
+    report_speedup(&mut rows, "B4 batched (220 KB)", r220, rb220, 16);
     // Wire-frame economics: a single-op cycle costs 3 request + 3
     // response frames PER MESSAGE; a batched cycle costs 6 frames PER
     // BATCH regardless of size.
@@ -205,13 +171,18 @@ fn main() {
     for _ in 0..80 {
         b2.publish("grads", &grad_payload).unwrap();
     }
-    bench("snapshot (18 MB state)", iters(50), || {
+    bench(&mut rows, "snapshot (18 MB state)", iters(50), || {
         std::hint::black_box(b2.snapshot().len());
     });
     let snap = b2.snapshot();
-    bench("restore (18 MB state)", iters(50), || {
+    bench(&mut rows, "restore (18 MB state)", iters(50), || {
         std::hint::black_box(
             Broker::restore(&snap, Duration::from_secs(60)).unwrap().total_ready(),
         );
     });
+
+    match write_bench_json("broker", &rows) {
+        Ok(path) => println!("bench json -> {path:?}"),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
 }

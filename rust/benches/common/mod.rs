@@ -1,0 +1,73 @@
+//! Shared measurement harness for the hand-rolled bench targets
+//! (criterion is unavailable offline): warmup + best-of-5 timing with a
+//! `$BENCH_ITERS` cap for CI smoke mode, machine-readable row collection
+//! ([`BenchRow`] -> BENCH_<target>.json), and the broker cycle drivers
+//! used by both `broker_hotpath` and `durability`. Lives in a
+//! subdirectory so cargo does not auto-discover it as a bench target;
+//! each bench pulls it in with `mod common;`.
+
+#![allow(dead_code)] // not every bench target uses every helper
+
+use std::time::{Duration, Instant};
+
+use jsdoop::metrics::BenchRow;
+use jsdoop::queue::QueueApi;
+
+/// Iteration count for one bench, capped by $BENCH_ITERS (CI smoke mode).
+pub fn iters(default: u32) -> u32 {
+    match std::env::var("BENCH_ITERS") {
+        Ok(s) => match s.parse::<u32>() {
+            Ok(n) => n.clamp(1, default),
+            Err(_) => default,
+        },
+        Err(_) => default,
+    }
+}
+
+/// Time `f` (warmup, then best of 5 runs of `iters` calls), print the
+/// per-op figure, and record it as a [`BenchRow`]. Returns secs/op.
+pub fn bench<F: FnMut()>(rows: &mut Vec<BenchRow>, name: &str, iters: u32, mut f: F) -> f64 {
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let mut best = f64::MAX;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        best = best.min(per);
+    }
+    let (v, unit) = if best < 1e-6 {
+        (best * 1e9, "ns")
+    } else if best < 1e-3 {
+        (best * 1e6, "us")
+    } else {
+        (best * 1e3, "ms")
+    };
+    println!("  {name:<52} {v:>9.2} {unit}/op");
+    rows.push(BenchRow {
+        op: name.to_string(),
+        iters,
+        ns_per_op: best * 1e9,
+        speedup: None,
+    });
+    best
+}
+
+/// One single-op publish/consume/ack cycle per message.
+pub fn single_cycle(q: &dyn QueueApi, name: &str, payload: &[u8], wait: Duration) {
+    q.publish(name, payload).unwrap();
+    let d = q.consume(name, wait).unwrap().unwrap();
+    q.ack(name, d.tag).unwrap();
+}
+
+/// One batched publish_many/consume_many/ack_many cycle for `refs`.
+pub fn batched_cycle(q: &dyn QueueApi, name: &str, refs: &[&[u8]], wait: Duration) {
+    q.publish_many(name, refs).unwrap();
+    let ds = q.consume_many(name, refs.len(), wait).unwrap();
+    assert_eq!(ds.len(), refs.len());
+    let tags: Vec<u64> = ds.iter().map(|d| d.tag).collect();
+    q.ack_many(name, &tags).unwrap();
+}

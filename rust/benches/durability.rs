@@ -1,0 +1,181 @@
+//! Durability micro-benchmarks (hand-rolled harness, like broker_hotpath):
+//!   D1 WAL append throughput by sync policy (every=N buffered, fsync'd)
+//!   D2 recovery time vs log length (cold DurableBroker::open)
+//!   D3 durability-off guard: DurableBroker(SyncPolicy::Never) must stay
+//!      within $DURABILITY_MAX_OVERHEAD_PCT (CI: 5%) of the plain Broker
+//!      on the broker_hotpath B1 cycles — the in-memory hot path does not
+//!      pay for the subsystem it isn't using.
+//!
+//! Run: cargo bench --bench durability
+//! CI smoke: BENCH_ITERS=50 DURABILITY_MAX_OVERHEAD_PCT=5 \
+//!             cargo bench --bench durability
+//!
+//! Results are also emitted as BENCH_durability.json (op, iters, ns/op,
+//! speedup) — see metrics::write_bench_json.
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use jsdoop::metrics::{write_bench_json, BenchRow};
+use jsdoop::queue::broker::Broker;
+use jsdoop::queue::durability::{DurabilityOptions, DurableBroker, SyncPolicy};
+use jsdoop::queue::QueueApi;
+
+use common::{batched_cycle, bench, iters, single_cycle};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("jsdoop-dbench-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn opts(sync: SyncPolicy) -> DurabilityOptions {
+    DurabilityOptions {
+        sync,
+        compact_after_bytes: u64::MAX, // keep the whole run in one segment
+        visibility_timeout: Duration::from_secs(60),
+    }
+}
+
+fn main() {
+    let mut rows: Vec<BenchRow> = Vec::new();
+    let wait = Duration::from_millis(50);
+    let payload = vec![7u8; 21]; // task-sized
+    let grad_payload = vec![0u8; 20 + 54998 * 4]; // gradient-sized
+
+    println!("== D1: WAL append throughput (publish+consume+ack cycle) ==");
+    // Each cycle journals three records (publish / delivered / acked);
+    // Always additionally pays one fsync per record.
+    let d1: &[(&str, &str, SyncPolicy, u32)] = &[
+        ("every64", "sync every=64", SyncPolicy::EveryN(64), 10_000),
+        ("every1", "sync every=1", SyncPolicy::EveryN(1), 2_000),
+        ("always", "sync always (fsync/record)", SyncPolicy::Always, 100),
+    ];
+    for &(tag, label, sync, n) in d1 {
+        let dir = tmpdir(tag);
+        let b = DurableBroker::open(&dir, opts(sync)).unwrap();
+        b.declare("q").unwrap();
+        let per = bench(&mut rows, &format!("cycle 21 B, {label}"), iters(n), || {
+            single_cycle(&b, "q", &payload, wait);
+        });
+        println!("     ({:.0} journaled records/s)", 3.0 / per);
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    {
+        let dir = tmpdir("big");
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::EveryN(64))).unwrap();
+        b.declare("q").unwrap();
+        let per = bench(
+            &mut rows,
+            "cycle 220 KB gradient, sync every=64",
+            iters(500),
+            || single_cycle(&b, "q", &grad_payload, wait),
+        );
+        let mbs = grad_payload.len() as f64 / per / 1e6;
+        println!("     ({mbs:.0} MB/s through the log)");
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    println!("== D2: recovery time vs log length ==");
+    for n in [1_000u32, 10_000] {
+        let n = iters(n); // BENCH_ITERS shrinks CI cost
+        let dir = tmpdir(&format!("recover{n}"));
+        let survivors;
+        {
+            let b = DurableBroker::open(&dir, opts(SyncPolicy::EveryN(1 << 20))).unwrap();
+            b.declare("q").unwrap();
+            for i in 0..n {
+                b.publish("q", &i.to_le_bytes()).unwrap();
+            }
+            // Mixed history: half delivered, a quarter settled.
+            let held = b.consume_many("q", n as usize / 2, wait).unwrap();
+            let acked: Vec<u64> = held.iter().take(n as usize / 4).map(|d| d.tag).collect();
+            b.ack_many("q", &acked).unwrap();
+            survivors = n as usize - acked.len();
+        } // graceful drop syncs the log; open() below replays it cold
+        let t0 = Instant::now();
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::EveryN(1 << 20))).unwrap();
+        let dt = t0.elapsed();
+        assert_eq!(b.recovered_messages(), survivors, "recovery dropped messages");
+        println!(
+            "  recover {n} publishes (+{} deliveries, {} acks): {:8.2} ms",
+            n / 2,
+            n / 4,
+            dt.as_secs_f64() * 1e3
+        );
+        rows.push(BenchRow {
+            op: format!("recovery after {n} publishes"),
+            iters: 1,
+            ns_per_op: dt.as_secs_f64() * 1e9,
+            speedup: None,
+        });
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    println!("== D3: durability-off guard (SyncPolicy::Never vs plain Broker) ==");
+    // NOTE: deliberately NOT capped by $BENCH_ITERS — these are pure
+    // in-memory cycles (<1s total even at full count), and the 5% gate
+    // needs multi-millisecond timing windows to be stable on shared CI
+    // runners; 50-iteration windows would flake it.
+    let plain = Broker::new(Duration::from_secs(60));
+    plain.declare("q").unwrap();
+    let dir = tmpdir("never");
+    let never = DurableBroker::open(&dir, opts(SyncPolicy::Never)).unwrap();
+    never.declare("q").unwrap();
+    let refs21: Vec<&[u8]> = (0..64).map(|_| payload.as_slice()).collect();
+    let s_plain = bench(&mut rows, "plain broker single cycle (21 B)", 20_000, || {
+        single_cycle(&plain, "q", &payload, wait);
+    });
+    let s_never = bench(&mut rows, "durable(Never) single cycle (21 B)", 20_000, || {
+        single_cycle(&never, "q", &payload, wait);
+    });
+    let b_plain = bench(&mut rows, "plain broker batched x64 cycle (21 B)", 600, || {
+        batched_cycle(&plain, "q", &refs21, wait);
+    });
+    let b_never = bench(&mut rows, "durable(Never) batched x64 cycle (21 B)", 600, || {
+        batched_cycle(&never, "q", &refs21, wait);
+    });
+    assert_eq!(never.wal_bytes(), 0, "SyncPolicy::Never journaled the hot path");
+    let single_pct = (s_never / s_plain - 1.0) * 100.0;
+    let batched_pct = (b_never / b_plain - 1.0) * 100.0;
+    println!("  -> single-op overhead:  {single_pct:+.2}%");
+    println!("  -> batched x64 overhead: {batched_pct:+.2}%");
+    rows.push(BenchRow {
+        op: "durability-off overhead single (pct)".into(),
+        iters: 20_000,
+        ns_per_op: (s_never - s_plain) * 1e9,
+        speedup: Some(s_plain / s_never),
+    });
+    rows.push(BenchRow {
+        op: "durability-off overhead batched (pct)".into(),
+        iters: 600,
+        ns_per_op: (b_never - b_plain) * 1e9,
+        speedup: Some(b_plain / b_never),
+    });
+    if let Some(max_pct) = std::env::var("DURABILITY_MAX_OVERHEAD_PCT")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+    {
+        assert!(
+            single_pct <= max_pct,
+            "durability-off single-op overhead {single_pct:.2}% exceeds {max_pct}% floor"
+        );
+        assert!(
+            batched_pct <= max_pct,
+            "durability-off batched overhead {batched_pct:.2}% exceeds {max_pct}% floor"
+        );
+        println!("  -> guard OK (max {max_pct}%)");
+    }
+    drop(never);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    match write_bench_json("durability", &rows) {
+        Ok(path) => println!("bench json -> {path:?}"),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
+}

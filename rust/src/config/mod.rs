@@ -36,6 +36,12 @@ pub struct Config {
     pub artifact_dir: PathBuf,
     pub visibility_timeout_secs: f64,
     pub task_poll_timeout_secs: f64,
+    // Durability (queue/durability): None = plain in-memory broker.
+    pub durability_dir: Option<PathBuf>,
+    /// WAL sync cadence: "never" | "every=N" | "always".
+    pub sync_policy: String,
+    /// Snapshot-compact the WAL once a segment passes this many bytes.
+    pub wal_compact_bytes: u64,
     // Corpus
     pub corpus_file: Option<PathBuf>,
     pub corpus_seed: u64,
@@ -60,6 +66,9 @@ impl Default for Config {
             artifact_dir: crate::runtime::default_artifact_dir(),
             visibility_timeout_secs: 120.0,
             task_poll_timeout_secs: 5.0,
+            durability_dir: None,
+            sync_policy: "every=64".to_string(),
+            wal_compact_bytes: 64 << 20,
             corpus_file: None,
             corpus_seed: 1234,
             corpus_len: 200_000,
@@ -90,6 +99,14 @@ impl Config {
         }
         if self.visibility_timeout_secs <= 0.0 {
             bail!("visibility_timeout_secs must be positive");
+        }
+        self.sync_policy
+            .parse::<crate::queue::durability::SyncPolicy>()
+            .context("bad sync_policy")?;
+        if self.wal_compact_bytes < 4096 {
+            // A tiny threshold would snapshot-rewrite + fsync the whole
+            // broker on every journaled op (0 would do it per record).
+            bail!("wal_compact_bytes must be >= 4096");
         }
         Ok(())
     }
@@ -149,6 +166,9 @@ impl Config {
             "artifact_dir" => self.artifact_dir = PathBuf::from(val),
             "visibility_timeout_secs" => self.visibility_timeout_secs = p(key, val)?,
             "task_poll_timeout_secs" => self.task_poll_timeout_secs = p(key, val)?,
+            "durability_dir" => self.durability_dir = Some(PathBuf::from(val)),
+            "sync_policy" => self.sync_policy = val.to_string(),
+            "wal_compact_bytes" => self.wal_compact_bytes = p(key, val)?,
             "corpus_file" => self.corpus_file = Some(PathBuf::from(val)),
             "corpus_seed" => self.corpus_seed = p(key, val)?,
             "corpus_len" => self.corpus_len = p(key, val)?,
@@ -221,5 +241,25 @@ mod tests {
         let mut c2 = Config::default();
         c2.learning_rate = -1.0;
         assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn durability_keys_parse_and_validate() {
+        let mut c = Config::default();
+        c.apply_cli(&[
+            "--durability_dir=/tmp/wal".into(),
+            "--sync-policy=always".into(),
+            "--wal_compact_bytes=1048576".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.durability_dir, Some(PathBuf::from("/tmp/wal")));
+        assert_eq!(c.sync_policy, "always");
+        assert_eq!(c.wal_compact_bytes, 1 << 20);
+        c.validate().unwrap();
+        c.sync_policy = "whenever".into();
+        assert!(c.validate().is_err());
+        c.sync_policy = "never".into();
+        c.wal_compact_bytes = 0; // would compact per record
+        assert!(c.validate().is_err());
     }
 }

@@ -28,16 +28,29 @@ impl WorkerScript {
     }
 }
 
+/// Coordinator-side fault: the broker (QueueServer) process dies at `at`
+/// and comes back `downtime` seconds later — recovered from its WAL when
+/// durability is on, empty when it is off (see volunteer::sim's
+/// `durable_broker` parameter and queue/durability for the real stack).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BrokerCrash {
+    pub at: f64,
+    pub downtime: f64,
+}
+
 /// The whole fleet's script.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct FaultPlan {
     pub workers: Vec<WorkerScript>,
+    /// Broker kill/restart windows (sorted or not; each schedules its own
+    /// crash + recovery pair).
+    pub broker_crashes: Vec<BrokerCrash>,
 }
 
 impl FaultPlan {
     /// All workers present from t=0 to the end (paper: sync-start).
     pub fn sync_start(n: usize) -> Self {
-        FaultPlan { workers: vec![WorkerScript::steady(); n] }
+        FaultPlan { workers: vec![WorkerScript::steady(); n], broker_crashes: Vec::new() }
     }
 
     /// Volunteers trickle in (paper classroom scenario 1: "volunteers were
@@ -55,7 +68,7 @@ impl FaultPlan {
         if let Some(first) = workers.iter_mut().min_by(|a, b| a.join_at.total_cmp(&b.join_at)) {
             first.join_at = 0.0;
         }
-        FaultPlan { workers }
+        FaultPlan { workers, broker_crashes: Vec::new() }
     }
 
     /// `leavers` workers close their tab at `at` (classroom scenario 3:
@@ -78,7 +91,7 @@ impl FaultPlan {
                 freeze: None,
             })
             .collect();
-        FaultPlan { workers }
+        FaultPlan { workers, broker_crashes: Vec::new() }
     }
 
     /// Inject a freeze into worker `w`.
@@ -87,6 +100,19 @@ impl FaultPlan {
             ws.freeze = Some((at, dur));
         }
         self
+    }
+
+    /// Kill the broker at `at`, restarting it `downtime` seconds later.
+    pub fn with_broker_crash(mut self, at: f64, downtime: f64) -> Self {
+        self.broker_crashes.push(BrokerCrash { at, downtime });
+        self
+    }
+
+    /// Is the broker down at time t?
+    pub fn broker_down_at(&self, t: f64) -> bool {
+        self.broker_crashes
+            .iter()
+            .any(|c| c.at <= t && t < c.at + c.downtime)
     }
 
     pub fn n_workers(&self) -> usize {
@@ -143,5 +169,20 @@ mod tests {
         let p = FaultPlan::sync_start(2).with_freeze(1, 5.0, 10.0);
         assert_eq!(p.workers[1].freeze, Some((5.0, 10.0)));
         assert_eq!(p.workers[0].freeze, None);
+    }
+
+    #[test]
+    fn broker_crash_windows() {
+        let p = FaultPlan::sync_start(2)
+            .with_broker_crash(10.0, 5.0)
+            .with_broker_crash(30.0, 1.0);
+        assert_eq!(p.broker_crashes.len(), 2);
+        assert!(!p.broker_down_at(9.9));
+        assert!(p.broker_down_at(10.0));
+        assert!(p.broker_down_at(14.9));
+        assert!(!p.broker_down_at(15.0));
+        assert!(p.broker_down_at(30.5));
+        // Worker lifecycles are orthogonal to broker faults.
+        assert_eq!(p.alive_at(12.0), 2);
     }
 }

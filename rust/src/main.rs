@@ -5,7 +5,10 @@
 //!   train [--workers=N ...]       distributed training, in-process fleet
 //!   seq [--variant=...]           sequential baselines (TFJS-Sequential-*)
 //!   sim [--profile=... --workers=N]  discrete-event experiment
-//!   serve [--addr=H:P]            host QueueServer + DataServer over TCP
+//!   serve [addr] [--durability_dir=D --sync_policy=P --wal_compact_bytes=N]
+//!                                 host QueueServer + DataServer over TCP;
+//!                                 with a durability dir the broker recovers
+//!                                 its queues from WAL + snapshot on restart
 //!   init [--queue-addr --data-addr]  publish the problem to remote servers
 //!   volunteer [--queue-addr --data-addr --id=N]  remote volunteer process
 //!   generate [--model=path --chars=N --seed-text=...]  text-gen demo
@@ -28,6 +31,7 @@ use jsdoop::faults::FaultPlan;
 use jsdoop::metrics::{render_table4, RunResult};
 use jsdoop::queue::broker::Broker;
 use jsdoop::queue::client::{RemoteData, RemoteQueue};
+use jsdoop::queue::durability::{DurabilityOptions, DurableBroker};
 use jsdoop::runtime::Engine;
 use jsdoop::textdata::id_to_char;
 use jsdoop::util::prng::Rng;
@@ -182,14 +186,66 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
         .cloned()
         .or_else(|| cfg.queue_addr.clone())
         .unwrap_or_else(|| "127.0.0.1:7333".to_string());
-    let broker = Arc::new(Broker::new(Duration::from_secs_f64(cfg.visibility_timeout_secs)));
+    let visibility = Duration::from_secs_f64(cfg.visibility_timeout_secs);
     let store = Arc::new(jsdoop::data::Store::new());
-    let handle = jsdoop::queue::server::serve(&addr, broker, store)?;
+    let mut durable: Option<Arc<DurableBroker>> = None;
+    let handle = match &cfg.durability_dir {
+        Some(dir) => {
+            // WAL-backed broker: survives a SIGKILL'd coordinator (see
+            // queue/durability and tests/crash_recovery.rs).
+            let opts = DurabilityOptions {
+                sync: cfg.sync_policy.parse()?,
+                compact_after_bytes: cfg.wal_compact_bytes,
+                visibility_timeout: visibility,
+            };
+            let broker = Arc::new(DurableBroker::open(dir, opts)?);
+            println!(
+                "durability: dir {dir:?}, sync {}, recovered {} messages in {} queues",
+                cfg.sync_policy,
+                broker.recovered_messages(),
+                broker.recovered_queues()
+            );
+            durable = Some(broker.clone());
+            jsdoop::queue::server::serve(&addr, broker, store)?
+        }
+        None => {
+            jsdoop::queue::server::serve(&addr, Arc::new(Broker::new(visibility)), store)?
+        }
+    };
     println!("QueueServer+DataServer listening on {}", handle.addr);
-    println!("(send the Shutdown op or Ctrl-C to stop)");
-    loop {
-        std::thread::sleep(Duration::from_secs(3600));
+    if durable.is_some() {
+        // Ctrl-C is an abrupt kill (no signal handler): what survives it
+        // is exactly the sync policy's guarantee plus the periodic
+        // checkpoint below. The Shutdown op is the clean path.
+        println!("(send the Shutdown op to stop cleanly; Ctrl-C recovers per sync policy)");
+    } else {
+        println!("(send the Shutdown op or Ctrl-C to stop)");
     }
+    // Periodic checkpoint: bounds what an abrupt kill can lose under
+    // SyncPolicy::Never (snapshot-only durability) to ~30s, and is a
+    // cheap log sync under the journaling policies.
+    let mut ticks = 0u64;
+    while !handle.stopped() {
+        std::thread::sleep(Duration::from_millis(200));
+        ticks += 1;
+        if ticks % 150 == 0 {
+            if let Some(broker) = &durable {
+                if let Err(e) = broker.checkpoint() {
+                    eprintln!("warning: periodic WAL checkpoint failed: {e:#}");
+                }
+            }
+        }
+    }
+    handle.shutdown(); // joins the accept loop
+    // Checkpoint explicitly: idle client connections may still hold Arc
+    // clones of the broker in their conn threads, so Drop (and its sync /
+    // Never-policy compaction) is not guaranteed to run before exit.
+    if let Some(broker) = &durable {
+        if let Err(e) = broker.checkpoint() {
+            eprintln!("warning: final WAL checkpoint failed: {e:#}");
+        }
+    }
+    Ok(())
 }
 
 fn init_remote(cfg: &Config) -> Result<()> {

@@ -230,6 +230,59 @@ pub fn series_csv(points: &[(usize, f64)], ideal: impl Fn(usize) -> f64) -> Stri
     out
 }
 
+// --- machine-readable bench results (BENCH_<target>.json) -------------------
+
+/// One measured operation from a bench target. Collected alongside the
+/// human-readable prints and emitted as `BENCH_<target>.json` so CI can
+/// archive a perf trajectory across commits.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub op: String,
+    pub iters: u32,
+    pub ns_per_op: f64,
+    /// Throughput ratio vs. a named baseline in the same run (e.g. the
+    /// batched path vs. the single-op loop), when one applies.
+    pub speedup: Option<f64>,
+}
+
+/// Serialize rows as a JSON array (one object per measured op).
+pub fn bench_json_string(rows: &[BenchRow]) -> String {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+
+    let entries: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("op".to_string(), Json::Str(r.op.clone()));
+            m.insert("iters".to_string(), Json::Num(r.iters as f64));
+            m.insert("ns_per_op".to_string(), Json::Num(r.ns_per_op));
+            m.insert(
+                "speedup".to_string(),
+                match r.speedup {
+                    Some(s) => Json::Num(s),
+                    None => Json::Null,
+                },
+            );
+            Json::Obj(m)
+        })
+        .collect();
+    format!("{}\n", Json::Arr(entries))
+}
+
+/// Serialize rows as `BENCH_<target>.json` into `$BENCH_JSON_DIR` (or the
+/// working directory) and return the path written. The env lookup happens
+/// here, in the bench binaries' single-threaded context — library tests
+/// use [`bench_json_string`] directly.
+pub fn write_bench_json(target: &str, rows: &[BenchRow]) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::env::var("BENCH_JSON_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    let path = dir.join(format!("BENCH_{target}.json"));
+    std::fs::write(&path, bench_json_string(rows))?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +349,22 @@ mod tests {
         assert!(t.contains("JSDoop-cluster"));
         assert!(t.contains("177.1"));
         assert!(t.contains("4.6"));
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let rows = vec![
+            BenchRow { op: "publish".into(), iters: 100, ns_per_op: 412.5, speedup: None },
+            BenchRow { op: "batched".into(), iters: 50, ns_per_op: 40.0, speedup: Some(10.3) },
+        ];
+        let text = bench_json_string(&rows);
+        let v = crate::util::json::Json::parse(text.trim()).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].req("op").unwrap().as_str().unwrap(), "publish");
+        assert_eq!(arr[0].req("iters").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(arr[1].req("speedup").unwrap().as_f64().unwrap(), 10.3);
+        assert_eq!(arr[0].req("speedup").unwrap(), &crate::util::json::Json::Null);
     }
 
     #[test]

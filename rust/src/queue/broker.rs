@@ -25,7 +25,13 @@
 //!
 //! Snapshot/restore gives the paper's "QueueServer is able to recover
 //! from failures without losing execution status": unACKed messages fold
-//! back into ready on restore (never ACKed => redelivery is correct).
+//! back into ready on restore, marked `redelivered = true` (never ACKed
+//! => redelivery is correct). The snapshot codec doubles as the base
+//! format for the durability subsystem (queue/durability), which layers a
+//! write-ahead log of mutations on top; the `*_ids` variants of the queue
+//! operations exist so that layer can record each mutation by message
+//! identity ([`MsgId`] = (priority, seq), globally unique for the life of
+//! a durability directory).
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -35,6 +41,12 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use super::{Delivery, QueueApi, QueueStats, DEFAULT_PRIORITY};
+
+/// Durable identity of a message: (priority, seq). Seqs come from a
+/// process-wide counter (bumped above any recovered seq on restore), so an
+/// id is never reused — the property the WAL replay in queue/durability
+/// relies on to make ACK records unambiguous.
+pub type MsgId = (u64, u64);
 
 #[derive(Debug, Clone)]
 struct Msg {
@@ -53,6 +65,13 @@ struct QueueState {
     /// tag -> (message, visibility deadline)
     unacked: HashMap<u64, (Msg, Instant)>,
     stats: QueueStats,
+    /// Purge generation: bumped by every purge. Publishes report the
+    /// epoch they were applied in (see `publish_seq`), so the durability
+    /// layer's replay can decide "was this message published before or
+    /// after that purge?" without relying on WAL append order — appends
+    /// happen after the queue lock is released and can interleave
+    /// differently than the applies did.
+    epoch: u64,
 }
 
 /// One queue's lock + wakeup channel. Consumers of queue A park on A's
@@ -143,7 +162,7 @@ impl Broker {
     }
 
     /// Pop the head ready message into unacked under a fresh tag.
-    fn deliver_head(&self, st: &mut QueueState, now: Instant) -> Option<Delivery> {
+    fn deliver_head(&self, st: &mut QueueState, now: Instant) -> Option<(Delivery, MsgId)> {
         let (&key, _) = st.ready.iter().next()?;
         let msg = st.ready.remove(&key).unwrap();
         let tag = self.next_tag.fetch_add(1, Ordering::Relaxed);
@@ -151,7 +170,7 @@ impl Broker {
         let payload = msg.payload.clone();
         st.unacked.insert(tag, (msg, now + self.visibility_timeout));
         st.stats.delivered += 1;
-        Some(Delivery { tag, payload, redelivered })
+        Some((Delivery { tag, payload, redelivered }, key))
     }
 
     /// How long a consumer may sleep: bounded by the caller deadline and
@@ -183,121 +202,16 @@ impl Broker {
         map.values().map(|e| e.state.lock().unwrap().ready.len()).sum()
     }
 
-    // --- persistence ------------------------------------------------------
+    // --- identity-returning variants (durability layer) -------------------
+    //
+    // Same semantics as the QueueApi entry points, but they report the
+    // [`MsgId`] of every message touched so queue/durability can journal
+    // the mutation. The QueueApi impls below delegate here where that
+    // costs nothing; ack/nack keep their id-free fast paths.
 
-    /// Serialize all queues. UnACKed messages are folded into ready (they
-    /// will redeliver after recovery — at-least-once). Queues are locked
-    /// one at a time, so the snapshot is per-queue (not cross-queue)
-    /// atomic — quiesce the broker for a consistent global cut.
-    /// Format: [n u32][ per queue: name_len u32, name, count u32,
-    ///                  per msg: redelivered u8, len u32, bytes ]
-    pub fn snapshot(&self) -> Vec<u8> {
-        let map = self.queues.read().unwrap();
-        let mut out = Vec::new();
-        out.extend_from_slice(&(map.len() as u32).to_le_bytes());
-        let mut names: Vec<&String> = map.keys().collect();
-        names.sort();
-        for name in names {
-            let st = map[name.as_str()].state.lock().unwrap();
-            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
-            out.extend_from_slice(name.as_bytes());
-            let count = st.ready.len() + st.unacked.len();
-            out.extend_from_slice(&(count as u32).to_le_bytes());
-            let mut emit = |m: &Msg| {
-                out.push(m.redelivered as u8);
-                out.extend_from_slice(&m.priority.to_le_bytes());
-                out.extend_from_slice(&m.seq.to_le_bytes());
-                out.extend_from_slice(&(m.payload.len() as u32).to_le_bytes());
-                out.extend_from_slice(&m.payload);
-            };
-            for m in st.ready.values() {
-                emit(m);
-            }
-            // Deterministic order for unacked: by tag.
-            let mut tags: Vec<&u64> = st.unacked.keys().collect();
-            tags.sort();
-            for t in tags {
-                emit(&st.unacked[t].0);
-            }
-        }
-        out
-    }
-
-    pub fn restore(bytes: &[u8], visibility_timeout: Duration) -> Result<Broker> {
-        let mut i = 0usize;
-        let rd_u32 = |b: &[u8], i: &mut usize| -> Result<u32> {
-            if *i + 4 > b.len() {
-                bail!("snapshot truncated");
-            }
-            let v = u32::from_le_bytes(b[*i..*i + 4].try_into().unwrap());
-            *i += 4;
-            Ok(v)
-        };
-        let nqueues = rd_u32(bytes, &mut i)?;
-        let mut queues = HashMap::new();
-        let mut max_seq = 0u64;
-        for _ in 0..nqueues {
-            let nlen = rd_u32(bytes, &mut i)? as usize;
-            if i + nlen > bytes.len() {
-                bail!("snapshot truncated (name)");
-            }
-            let name = String::from_utf8(bytes[i..i + nlen].to_vec())?;
-            i += nlen;
-            let count = rd_u32(bytes, &mut i)?;
-            let mut q = QueueState::default();
-            for _ in 0..count {
-                if i >= bytes.len() {
-                    bail!("snapshot truncated (msg header)");
-                }
-                let redelivered = bytes[i] != 0;
-                i += 1;
-                if i + 16 > bytes.len() {
-                    bail!("snapshot truncated (priority/seq)");
-                }
-                let priority = u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
-                i += 8;
-                let seq = u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
-                i += 8;
-                max_seq = max_seq.max(seq);
-                let mlen = rd_u32(bytes, &mut i)? as usize;
-                if i + mlen > bytes.len() {
-                    bail!("snapshot truncated (msg body)");
-                }
-                q.ready.insert(
-                    (priority, seq),
-                    Msg { payload: bytes[i..i + mlen].to_vec(), redelivered, priority, seq },
-                );
-                i += mlen;
-            }
-            queues.insert(
-                name,
-                Arc::new(QueueEntry { state: Mutex::new(q), readable: Condvar::new() }),
-            );
-        }
-        if i != bytes.len() {
-            bail!("snapshot has {} trailing bytes", bytes.len() - i);
-        }
-        Ok(Broker {
-            queues: RwLock::new(queues),
-            next_tag: AtomicU64::new(1),
-            next_seq: AtomicU64::new(max_seq + 1),
-            visibility_timeout,
-        })
-    }
-}
-
-impl QueueApi for Broker {
-    fn declare(&self, queue: &str) -> Result<()> {
-        let mut map = self.queues.write().unwrap();
-        map.entry(queue.to_string()).or_default();
-        Ok(())
-    }
-
-    fn publish(&self, queue: &str, payload: &[u8]) -> Result<()> {
-        self.publish_pri(queue, payload, DEFAULT_PRIORITY)
-    }
-
-    fn publish_pri(&self, queue: &str, payload: &[u8], priority: u64) -> Result<()> {
+    /// [`QueueApi::publish_pri`], returning the (seq, purge epoch) the
+    /// message was applied under.
+    pub fn publish_seq(&self, queue: &str, payload: &[u8], priority: u64) -> Result<(u64, u64)> {
         let entry = self.entry(queue)?;
         let mut st = entry.state.lock().unwrap();
         Self::sweep_locked(&mut st, Instant::now());
@@ -307,12 +221,56 @@ impl QueueApi for Broker {
             Msg { payload: payload.to_vec(), redelivered: false, priority, seq },
         );
         st.stats.published += 1;
+        let epoch = st.epoch;
         drop(st);
         entry.readable.notify_all();
-        Ok(())
+        Ok((seq, epoch))
     }
 
-    fn consume(&self, queue: &str, timeout: Duration) -> Result<Option<Delivery>> {
+    /// [`QueueApi::publish_many`], returning (first seq, purge epoch).
+    /// The batch takes a CONTIGUOUS seq block (one atomic bump), so
+    /// `first..first+n` identifies every message — the compact WAL record.
+    /// Must not be called with an empty slice.
+    pub fn publish_many_seq(&self, queue: &str, payloads: &[&[u8]]) -> Result<(u64, u64)> {
+        let entry = self.entry(queue)?;
+        let mut st = entry.state.lock().unwrap();
+        Self::sweep_locked(&mut st, Instant::now());
+        let first = self.next_seq.fetch_add(payloads.len() as u64, Ordering::Relaxed);
+        for (k, payload) in payloads.iter().enumerate() {
+            let seq = first + k as u64;
+            let msg = Msg {
+                payload: payload.to_vec(),
+                redelivered: false,
+                priority: DEFAULT_PRIORITY,
+                seq,
+            };
+            st.ready.insert((DEFAULT_PRIORITY, seq), msg);
+            st.stats.published += 1;
+        }
+        let epoch = st.epoch;
+        drop(st);
+        entry.readable.notify_all();
+        Ok((first, epoch))
+    }
+
+    /// [`QueueApi::purge`], returning the queue's new purge epoch. Every
+    /// purge bumps the epoch; a publish's recorded epoch then tells
+    /// replay whether the purge covered it (epoch < purge epoch) or not.
+    pub fn purge_epoch(&self, queue: &str) -> Result<u64> {
+        let entry = self.entry(queue)?;
+        let mut st = entry.state.lock().unwrap();
+        st.ready.clear();
+        st.unacked.clear();
+        st.epoch += 1;
+        Ok(st.epoch)
+    }
+
+    /// [`QueueApi::consume`] with the delivered message's id.
+    pub fn consume_ids(
+        &self,
+        queue: &str,
+        timeout: Duration,
+    ) -> Result<Option<(Delivery, MsgId)>> {
         let entry = self.entry(queue)?;
         let deadline = Instant::now() + timeout;
         let mut st = entry.state.lock().unwrap();
@@ -330,6 +288,267 @@ impl QueueApi for Broker {
             let (guard, _res) = entry.readable.wait_timeout(st, wait).unwrap();
             st = guard;
         }
+    }
+
+    /// [`QueueApi::consume_many`] with each delivered message's id.
+    pub fn consume_many_ids(
+        &self,
+        queue: &str,
+        max: usize,
+        timeout: Duration,
+    ) -> Result<Vec<(Delivery, MsgId)>> {
+        if max == 0 {
+            return Ok(Vec::new());
+        }
+        let entry = self.entry(queue)?;
+        let deadline = Instant::now() + timeout;
+        let mut st = entry.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            Self::sweep_locked(&mut st, now);
+            if !st.ready.is_empty() {
+                let n = max.min(st.ready.len());
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    out.push(self.deliver_head(&mut st, now).unwrap());
+                }
+                return Ok(out);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(Vec::new());
+            }
+            let wait = Self::wait_bound(&st, deadline, now);
+            let (guard, _res) = entry.readable.wait_timeout(st, wait).unwrap();
+            st = guard;
+        }
+    }
+
+    /// ACK a batch of tags, returning the ids actually settled (expired /
+    /// unknown tags are skipped, as in [`QueueApi::ack`]).
+    pub fn ack_ids(&self, queue: &str, tags: &[u64]) -> Result<Vec<MsgId>> {
+        let entry = self.entry(queue)?;
+        let mut st = entry.state.lock().unwrap();
+        let mut ids = Vec::with_capacity(tags.len());
+        for tag in tags {
+            if let Some((msg, _)) = st.unacked.remove(tag) {
+                st.stats.acked += 1;
+                ids.push((msg.priority, msg.seq));
+            }
+        }
+        Ok(ids)
+    }
+
+    /// NACK a batch of tags, returning the ids actually requeued.
+    pub fn nack_ids(&self, queue: &str, tags: &[u64]) -> Result<Vec<MsgId>> {
+        let entry = self.entry(queue)?;
+        let mut st = entry.state.lock().unwrap();
+        let mut ids = Vec::with_capacity(tags.len());
+        for tag in tags {
+            if let Some((mut msg, _)) = st.unacked.remove(tag) {
+                msg.redelivered = true;
+                st.stats.nacked += 1;
+                ids.push((msg.priority, msg.seq));
+                st.ready.insert((msg.priority, msg.seq), msg);
+            }
+        }
+        drop(st);
+        if !ids.is_empty() {
+            entry.readable.notify_all();
+        }
+        Ok(ids)
+    }
+
+    /// Insert a recovered message at an EXPLICIT id (queue/durability
+    /// replay only — bypasses the published counter so recovered brokers
+    /// start with clean stats). Call [`Broker::ensure_seq_above`] with the
+    /// max recovered seq afterwards.
+    pub fn insert_raw(
+        &self,
+        queue: &str,
+        payload: Vec<u8>,
+        priority: u64,
+        seq: u64,
+        redelivered: bool,
+    ) -> Result<()> {
+        let entry = self.entry(queue)?;
+        let mut st = entry.state.lock().unwrap();
+        st.ready.insert((priority, seq), Msg { payload, redelivered, priority, seq });
+        drop(st);
+        entry.readable.notify_all();
+        Ok(())
+    }
+
+    /// Bump the seq counter above `seq` so future publishes never reuse a
+    /// recovered message's id.
+    pub fn ensure_seq_above(&self, seq: u64) {
+        self.next_seq.fetch_max(seq.saturating_add(1), Ordering::Relaxed);
+    }
+
+    // --- persistence ------------------------------------------------------
+
+    /// Serialize all queues. UnACKed messages are folded into ready with
+    /// `redelivered = true` (they will redeliver after recovery —
+    /// at-least-once). Queues are locked one at a time, so the snapshot is
+    /// per-queue (not cross-queue) atomic — quiesce the broker for a
+    /// consistent global cut, or rely on the durability layer's idempotent
+    /// WAL replay to absorb the skew.
+    /// Format: [n u32][ per queue: name_len u32, name, epoch u64,
+    ///                  count u32, per msg: redelivered u8, priority u64,
+    ///                  seq u64, len u32, bytes ]
+    pub fn snapshot(&self) -> Vec<u8> {
+        let map = self.queues.read().unwrap();
+        let mut out = Vec::new();
+        out.extend_from_slice(&(map.len() as u32).to_le_bytes());
+        let mut names: Vec<&String> = map.keys().collect();
+        names.sort();
+        for name in names {
+            let st = map[name.as_str()].state.lock().unwrap();
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&st.epoch.to_le_bytes());
+            let count = st.ready.len() + st.unacked.len();
+            out.extend_from_slice(&(count as u32).to_le_bytes());
+            let mut emit = |m: &Msg, redelivered: bool| {
+                out.push(redelivered as u8);
+                out.extend_from_slice(&m.priority.to_le_bytes());
+                out.extend_from_slice(&m.seq.to_le_bytes());
+                out.extend_from_slice(&(m.payload.len() as u32).to_le_bytes());
+                out.extend_from_slice(&m.payload);
+            };
+            for m in st.ready.values() {
+                emit(m, m.redelivered);
+            }
+            // Deterministic order for unacked: by tag.
+            let mut tags: Vec<&u64> = st.unacked.keys().collect();
+            tags.sort();
+            for t in tags {
+                emit(&st.unacked[t].0, true);
+            }
+        }
+        out
+    }
+
+    pub fn restore(bytes: &[u8], visibility_timeout: Duration) -> Result<Broker> {
+        let decoded = decode_snapshot(bytes)?;
+        let mut queues = HashMap::new();
+        let mut max_seq = 0u64;
+        for (name, epoch, msgs) in decoded {
+            let mut q = QueueState { epoch, ..QueueState::default() };
+            for m in msgs {
+                max_seq = max_seq.max(m.seq);
+                q.ready.insert(
+                    (m.priority, m.seq),
+                    Msg {
+                        payload: m.payload,
+                        redelivered: m.redelivered,
+                        priority: m.priority,
+                        seq: m.seq,
+                    },
+                );
+            }
+            queues.insert(
+                name,
+                Arc::new(QueueEntry { state: Mutex::new(q), readable: Condvar::new() }),
+            );
+        }
+        Ok(Broker {
+            queues: RwLock::new(queues),
+            next_tag: AtomicU64::new(1),
+            next_seq: AtomicU64::new(max_seq + 1),
+            visibility_timeout,
+        })
+    }
+}
+
+/// One message as decoded from a [`Broker::snapshot`] byte stream.
+pub struct SnapMsg {
+    pub payload: Vec<u8>,
+    pub redelivered: bool,
+    pub priority: u64,
+    pub seq: u64,
+}
+
+/// Decode a [`Broker::snapshot`] byte stream into per-queue
+/// (name, purge epoch, messages) lists (shared by [`Broker::restore`] and
+/// the durability recovery path, which replays a WAL tail on top of the
+/// decoded base state).
+pub fn decode_snapshot(bytes: &[u8]) -> Result<Vec<(String, u64, Vec<SnapMsg>)>> {
+    let mut i = 0usize;
+    let rd_u32 = |b: &[u8], i: &mut usize| -> Result<u32> {
+        if *i + 4 > b.len() {
+            bail!("snapshot truncated");
+        }
+        let v = u32::from_le_bytes(b[*i..*i + 4].try_into().unwrap());
+        *i += 4;
+        Ok(v)
+    };
+    let nqueues = rd_u32(bytes, &mut i)?;
+    let mut out = Vec::new();
+    for _ in 0..nqueues {
+        let nlen = rd_u32(bytes, &mut i)? as usize;
+        if i + nlen > bytes.len() {
+            bail!("snapshot truncated (name)");
+        }
+        let name = String::from_utf8(bytes[i..i + nlen].to_vec())?;
+        i += nlen;
+        if i + 8 > bytes.len() {
+            bail!("snapshot truncated (epoch)");
+        }
+        let epoch = u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
+        i += 8;
+        let count = rd_u32(bytes, &mut i)?;
+        let mut msgs = Vec::new();
+        for _ in 0..count {
+            if i >= bytes.len() {
+                bail!("snapshot truncated (msg header)");
+            }
+            let redelivered = bytes[i] != 0;
+            i += 1;
+            if i + 16 > bytes.len() {
+                bail!("snapshot truncated (priority/seq)");
+            }
+            let priority = u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
+            i += 8;
+            let seq = u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
+            i += 8;
+            let mlen = rd_u32(bytes, &mut i)? as usize;
+            if i + mlen > bytes.len() {
+                bail!("snapshot truncated (msg body)");
+            }
+            msgs.push(SnapMsg {
+                payload: bytes[i..i + mlen].to_vec(),
+                redelivered,
+                priority,
+                seq,
+            });
+            i += mlen;
+        }
+        out.push((name, epoch, msgs));
+    }
+    if i != bytes.len() {
+        bail!("snapshot has {} trailing bytes", bytes.len() - i);
+    }
+    Ok(out)
+}
+
+impl QueueApi for Broker {
+    fn declare(&self, queue: &str) -> Result<()> {
+        let mut map = self.queues.write().unwrap();
+        map.entry(queue.to_string()).or_default();
+        Ok(())
+    }
+
+    fn publish(&self, queue: &str, payload: &[u8]) -> Result<()> {
+        self.publish_pri(queue, payload, DEFAULT_PRIORITY)
+    }
+
+    fn publish_pri(&self, queue: &str, payload: &[u8], priority: u64) -> Result<()> {
+        self.publish_seq(queue, payload, priority).map(|_| ())
+    }
+
+    fn consume(&self, queue: &str, timeout: Duration) -> Result<Option<Delivery>> {
+        Ok(self.consume_ids(queue, timeout)?.map(|(d, _)| d))
     }
 
     fn ack(&self, queue: &str, tag: u64) -> Result<()> {
@@ -368,11 +587,7 @@ impl QueueApi for Broker {
     }
 
     fn purge(&self, queue: &str) -> Result<()> {
-        let entry = self.entry(queue)?;
-        let mut st = entry.state.lock().unwrap();
-        st.ready.clear();
-        st.unacked.clear();
-        Ok(())
+        self.purge_epoch(queue).map(|_| ())
     }
 
     fn stats(&self, queue: &str) -> Result<QueueStats> {
@@ -391,53 +606,14 @@ impl QueueApi for Broker {
         if payloads.is_empty() {
             return Ok(());
         }
-        let entry = self.entry(queue)?;
-        let mut st = entry.state.lock().unwrap();
-        Self::sweep_locked(&mut st, Instant::now());
-        for payload in payloads {
-            // Seq allocation under the queue lock keeps (priority, seq)
-            // order == slice order for the whole batch.
-            let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-            let msg = Msg {
-                payload: payload.to_vec(),
-                redelivered: false,
-                priority: DEFAULT_PRIORITY,
-                seq,
-            };
-            st.ready.insert((DEFAULT_PRIORITY, seq), msg);
-            st.stats.published += 1;
-        }
-        drop(st);
-        entry.readable.notify_all();
-        Ok(())
+        // Seq allocation under the queue lock keeps (priority, seq) order
+        // == slice order for the whole batch (see publish_many_seq).
+        self.publish_many_seq(queue, payloads).map(|_| ())
     }
 
     fn consume_many(&self, queue: &str, max: usize, timeout: Duration) -> Result<Vec<Delivery>> {
-        if max == 0 {
-            return Ok(Vec::new());
-        }
-        let entry = self.entry(queue)?;
-        let deadline = Instant::now() + timeout;
-        let mut st = entry.state.lock().unwrap();
-        loop {
-            let now = Instant::now();
-            Self::sweep_locked(&mut st, now);
-            if !st.ready.is_empty() {
-                let n = max.min(st.ready.len());
-                let mut out = Vec::with_capacity(n);
-                for _ in 0..n {
-                    out.push(self.deliver_head(&mut st, now).unwrap());
-                }
-                return Ok(out);
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return Ok(Vec::new());
-            }
-            let wait = Self::wait_bound(&st, deadline, now);
-            let (guard, _res) = entry.readable.wait_timeout(st, wait).unwrap();
-            st = guard;
-        }
+        let with_ids = self.consume_many_ids(queue, max, timeout)?;
+        Ok(with_ids.into_iter().map(|(d, _)| d).collect())
     }
 
     fn ack_many(&self, queue: &str, tags: &[u64]) -> Result<()> {
@@ -605,6 +781,49 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_marks_inflight_as_redelivered() {
+        let b = broker_ms(1000);
+        b.declare("q").unwrap();
+        b.publish("q", b"held").unwrap();
+        b.publish("q", b"fresh").unwrap();
+        let _d = b.consume("q", Duration::from_millis(5)).unwrap().unwrap(); // "held" in flight
+        let r = Broker::restore(&b.snapshot(), Duration::from_secs(1)).unwrap();
+        let d1 = r.consume("q", Duration::from_millis(5)).unwrap().unwrap();
+        assert_eq!(d1.payload, b"held");
+        assert!(d1.redelivered, "folded unACKed message must flag redelivery");
+        let d2 = r.consume("q", Duration::from_millis(5)).unwrap().unwrap();
+        assert_eq!(d2.payload, b"fresh");
+        assert!(!d2.redelivered);
+    }
+
+    #[test]
+    fn insert_raw_respects_explicit_identity() {
+        let b = broker_ms(1000);
+        b.declare("q").unwrap();
+        b.insert_raw("q", b"recovered".to_vec(), 5, 100, true).unwrap();
+        b.ensure_seq_above(100);
+        let (seq, _epoch) = b.publish_seq("q", b"new", 5).unwrap();
+        assert!(seq > 100, "seq counter must move past recovered ids (got {seq})");
+        let d = b.consume("q", Duration::from_millis(5)).unwrap().unwrap();
+        assert_eq!(d.payload, b"recovered");
+        assert!(d.redelivered);
+    }
+
+    #[test]
+    fn publish_many_takes_contiguous_seq_block() {
+        let b = broker_ms(1000);
+        b.declare("q").unwrap();
+        let payloads: Vec<Vec<u8>> = (0..4u8).map(|i| vec![i]).collect();
+        let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        let (first, _epoch) = b.publish_many_seq("q", &refs).unwrap();
+        let batch = b.consume_many_ids("q", 4, Duration::from_millis(5)).unwrap();
+        for (k, (d, (_pri, seq))) in batch.iter().enumerate() {
+            assert_eq!(d.payload, vec![k as u8]);
+            assert_eq!(*seq, first + k as u64);
+        }
+    }
+
+    #[test]
     fn restore_rejects_corrupt() {
         assert!(Broker::restore(&[1, 2], Duration::from_secs(1)).is_err());
         let b = broker_ms(10);
@@ -622,6 +841,20 @@ mod tests {
         b.publish("q", b"x").unwrap();
         b.purge("q").unwrap();
         assert_eq!(b.len("q").unwrap(), 0);
+    }
+
+    #[test]
+    fn purge_bumps_epoch_and_publishes_report_it() {
+        let b = broker_ms(1000);
+        b.declare("q").unwrap();
+        let (_, e0) = b.publish_seq("q", b"old", 1).unwrap();
+        assert_eq!(e0, 0);
+        assert_eq!(b.purge_epoch("q").unwrap(), 1);
+        let (_, e1) = b.publish_seq("q", b"new", 1).unwrap();
+        assert_eq!(e1, 1);
+        // The epoch survives the snapshot codec.
+        let r = Broker::restore(&b.snapshot(), Duration::from_secs(1)).unwrap();
+        assert_eq!(r.purge_epoch("q").unwrap(), 2);
     }
 
     // --- batched operations ------------------------------------------------

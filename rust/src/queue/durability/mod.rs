@@ -1,0 +1,825 @@
+//! Durable broker (S17, paper §II.E *Adaptability*): RabbitMQ-grade crash
+//! tolerance for the in-process [`Broker`].
+//!
+//! The paper's recovery story — "tasks are not removed from the queue
+//! until an ACK is received", surviving a QueueServer restart — rests on
+//! RabbitMQ's durable queues. [`DurableBroker`] reproduces it with two
+//! files in a durability directory:
+//!
+//! - `wal.log` — a write-ahead log of broker mutations ([`wal`] records:
+//!   declare / publish / publish_many / delivered / ack / nack / purge,
+//!   carrying priorities, seqs, and enough to reconstruct redelivery
+//!   flags).
+//! - `snapshot.bin` — a periodic compaction of the whole broker in the
+//!   [`Broker::snapshot`] codec. Compaction rewrites the snapshot and
+//!   starts a fresh log segment whenever the segment passes
+//!   [`DurabilityOptions::compact_after_bytes`], so recovery time is
+//!   bounded by snapshot size + one segment, not total history.
+//!
+//! [`DurableBroker::open`] recovers snapshot + log tail into a fresh
+//! broker: acked messages never reappear, every surviving message comes
+//! back exactly once at its original (priority, seq) slot, and messages
+//! that had been delivered (or NACKed) before the crash come back with
+//! `redelivered = true`. Replay is *idempotent by identity* — message ids
+//! are never reused — so compaction runs concurrently with live traffic:
+//! a record landing in the new segment whose effect already made the
+//! snapshot replays as a no-op.
+//!
+//! Write path: each operation applies to the inner broker first, then
+//! appends under the WAL mutex, then applies the [`SyncPolicy`]. An op
+//! whose confirmation the client has seen is therefore durable to the
+//! policy's guarantee; an op torn between apply and append is simply a
+//! delivery the client never heard about (at-least-once either way).
+//! Blocking consumes wait inside the inner broker and only take the WAL
+//! mutex once they hold a delivery.
+//!
+//! Known limitation: the WAL is one file behind one mutex, and the sync
+//! policies fsync while holding it — so with journaling ON, mutations
+//! across ALL queues serialize at the log (the broker's per-queue
+//! parallelism still applies to consumes/waits, and fully under
+//! `SyncPolicy::Never`). The classic fix is group commit — append under
+//! the mutex, fsync outside it, batch the waiters — and is on the
+//! roadmap; `benches/durability.rs` D1 measures today's honest cost.
+
+pub mod wal;
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use self::wal::{read_wal, Record, WalWriter};
+use super::broker::{decode_snapshot, Broker, MsgId};
+use super::{Delivery, QueueApi, QueueService, QueueStats, DEFAULT_PRIORITY};
+
+/// When WAL records reach the disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncPolicy {
+    /// Durability off: no WAL records are written at all — state persists
+    /// only through snapshot compaction (explicit [`DurableBroker::compact`]
+    /// or graceful drop, which compacts). A crash loses everything since
+    /// the last compaction. In exchange the hot path pays only wrapper
+    /// dispatch — bench-enforced to stay within 5% of the plain broker
+    /// (benches/durability.rs).
+    Never,
+    /// Flush + fsync once per N records (bounded loss window).
+    EveryN(u64),
+    /// Flush + fsync before every operation returns.
+    Always,
+}
+
+impl Default for SyncPolicy {
+    fn default() -> Self {
+        SyncPolicy::EveryN(64)
+    }
+}
+
+impl std::str::FromStr for SyncPolicy {
+    type Err = anyhow::Error;
+
+    /// `never` | `always` | `every=N`.
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "never" => Ok(SyncPolicy::Never),
+            "always" => Ok(SyncPolicy::Always),
+            _ => match s.strip_prefix("every=") {
+                Some(n) => {
+                    let n: u64 = n.parse().context("bad every=N sync policy")?;
+                    if n == 0 {
+                        bail!("sync policy every=N needs N >= 1");
+                    }
+                    Ok(SyncPolicy::EveryN(n))
+                }
+                None => bail!("unknown sync policy '{s}' (never|every=N|always)"),
+            },
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DurabilityOptions {
+    pub sync: SyncPolicy,
+    /// Rewrite the snapshot and start a fresh log segment once the
+    /// current segment passes this many bytes.
+    pub compact_after_bytes: u64,
+    /// Visibility timeout of the recovered/inner broker.
+    pub visibility_timeout: Duration,
+}
+
+impl Default for DurabilityOptions {
+    fn default() -> Self {
+        DurabilityOptions {
+            sync: SyncPolicy::default(),
+            compact_after_bytes: 64 << 20,
+            visibility_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Per-queue recovered state: id -> (payload, redelivered, purge epoch
+/// the message was published/snapshotted under).
+type RecoveredQueues = BTreeMap<String, BTreeMap<MsgId, (Vec<u8>, bool, u64)>>;
+
+/// A [`QueueApi`] broker whose state survives process death. See the
+/// module docs for the file layout and guarantees.
+pub struct DurableBroker {
+    inner: Broker,
+    wal: Mutex<WalWriter>,
+    opts: DurabilityOptions,
+    dir: PathBuf,
+    recovered_messages: usize,
+    recovered_queues: usize,
+}
+
+impl DurableBroker {
+    /// Open (or create) a durability directory, recovering any prior
+    /// state from snapshot + WAL, then compacting so the new process
+    /// starts from a fresh snapshot and an empty segment.
+    pub fn open(dir: impl AsRef<Path>, opts: DurabilityOptions) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating durability dir {dir:?}"))?;
+        let snap_path = dir.join("snapshot.bin");
+        let wal_path = dir.join("wal.log");
+
+        // --- recover: snapshot base ... -----------------------------------
+        let mut state: RecoveredQueues = BTreeMap::new();
+        let mut max_seq = 0u64;
+        if snap_path.exists() {
+            let bytes = std::fs::read(&snap_path)
+                .with_context(|| format!("reading {snap_path:?}"))?;
+            for (name, epoch, msgs) in decode_snapshot(&bytes).context("decoding snapshot.bin")? {
+                let q = state.entry(name).or_default();
+                for m in msgs {
+                    max_seq = max_seq.max(m.seq);
+                    q.insert((m.priority, m.seq), (m.payload, m.redelivered, epoch));
+                }
+            }
+        }
+
+        // --- ... plus the log tail. ---------------------------------------
+        if wal_path.exists() {
+            let bytes =
+                std::fs::read(&wal_path).with_context(|| format!("reading {wal_path:?}"))?;
+            let (records, _clean_prefix) = read_wal(&bytes);
+            replay(&mut state, &mut max_seq, &records)?;
+        }
+
+        // --- build the broker. --------------------------------------------
+        let inner = Broker::new(opts.visibility_timeout);
+        let mut recovered_messages = 0usize;
+        let recovered_queues = state.len();
+        for (name, msgs) in state {
+            inner.declare(&name)?;
+            for ((priority, seq), (payload, redelivered, _epoch)) in msgs {
+                inner.insert_raw(&name, payload, priority, seq, redelivered)?;
+                recovered_messages += 1;
+            }
+        }
+        inner.ensure_seq_above(max_seq);
+
+        // --- compact: fresh snapshot, fresh segment. ----------------------
+        write_snapshot(&dir, &inner)?;
+        let writer = fresh_segment(&wal_path, &inner.queue_names())?;
+
+        Ok(DurableBroker {
+            inner,
+            wal: Mutex::new(writer),
+            opts,
+            dir,
+            recovered_messages,
+            recovered_queues,
+        })
+    }
+
+    /// Messages recovered from disk at [`DurableBroker::open`].
+    pub fn recovered_messages(&self) -> usize {
+        self.recovered_messages
+    }
+
+    /// Queues recovered from disk at [`DurableBroker::open`].
+    pub fn recovered_queues(&self) -> usize {
+        self.recovered_queues
+    }
+
+    /// The wrapped in-memory broker (admin/metrics — going around the
+    /// wrapper for *mutations* would skip the log).
+    pub fn inner(&self) -> &Broker {
+        &self.inner
+    }
+
+    /// False under [`SyncPolicy::Never`]: every operation takes the plain
+    /// broker's path untouched (no id bookkeeping, no WAL lock) — the
+    /// durability-off hot-path guarantee benches/durability.rs enforces.
+    fn journaling(&self) -> bool {
+        !matches!(self.opts.sync, SyncPolicy::Never)
+    }
+
+    /// Bytes appended to the current log segment.
+    pub fn wal_bytes(&self) -> u64 {
+        self.wal.lock().unwrap().bytes_written
+    }
+
+    /// Push buffered records to the OS (tests / graceful shutdown).
+    pub fn flush(&self) -> Result<()> {
+        self.wal.lock().unwrap().flush()
+    }
+
+    /// Rewrite the snapshot from live state and start a fresh segment.
+    pub fn compact(&self) -> Result<()> {
+        let mut w = self.wal.lock().unwrap();
+        self.compact_locked(&mut w)
+    }
+
+    /// Make the current state durable to the policy's strongest point:
+    /// sync the log (journaling policies) or write a snapshot (`Never`).
+    /// Call this on graceful shutdown paths that cannot rely on `Drop`
+    /// running — e.g. a server process exiting while idle client
+    /// connections still hold `Arc` clones of the broker.
+    pub fn checkpoint(&self) -> Result<()> {
+        match self.opts.sync {
+            SyncPolicy::Never => self.compact(),
+            _ => {
+                let mut w = self.wal.lock().unwrap();
+                w.sync()
+            }
+        }
+    }
+
+    fn compact_locked(&self, w: &mut WalWriter) -> Result<()> {
+        // Order matters for crash safety: the new snapshot lands (atomic
+        // rename) BEFORE the old segment is truncated. A crash between the
+        // two leaves snapshot + full old segment — idempotent replay makes
+        // that merely redundant, never lossy.
+        write_snapshot(&self.dir, &self.inner)?;
+        *w = fresh_segment(&self.dir.join("wal.log"), &self.inner.queue_names())?;
+        Ok(())
+    }
+
+    /// Append one mutation under the WAL mutex, then apply the sync
+    /// policy and (rarely) compaction. With [`SyncPolicy::Never`] this is
+    /// a no-op — durability-off mode journals nothing between
+    /// compactions, which is what keeps the hot path at plain-broker
+    /// speed.
+    fn log<F>(&self, append: F) -> Result<()>
+    where
+        F: FnOnce(&mut WalWriter) -> Result<()>,
+    {
+        if matches!(self.opts.sync, SyncPolicy::Never) {
+            return Ok(());
+        }
+        let mut w = self.wal.lock().unwrap();
+        append(&mut w)?;
+        match self.opts.sync {
+            SyncPolicy::Never => unreachable!(),
+            SyncPolicy::Always => w.sync()?,
+            SyncPolicy::EveryN(n) => {
+                if w.unsynced_records() >= n {
+                    w.sync()?;
+                }
+            }
+        }
+        if w.bytes_written >= self.opts.compact_after_bytes {
+            self.compact_locked(&mut w)?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for DurableBroker {
+    fn drop(&mut self) {
+        // Graceful shutdown. (A crash, by definition, skips this.)
+        let _ = self.checkpoint();
+    }
+}
+
+impl QueueApi for DurableBroker {
+    fn declare(&self, queue: &str) -> Result<()> {
+        self.inner.declare(queue)?;
+        if !self.journaling() {
+            return Ok(());
+        }
+        self.log(|w| w.declare(queue).map(|_| ()))
+    }
+
+    fn publish(&self, queue: &str, payload: &[u8]) -> Result<()> {
+        self.publish_pri(queue, payload, DEFAULT_PRIORITY)
+    }
+
+    fn publish_pri(&self, queue: &str, payload: &[u8], priority: u64) -> Result<()> {
+        if !self.journaling() {
+            return self.inner.publish_pri(queue, payload, priority);
+        }
+        let (seq, epoch) = self.inner.publish_seq(queue, payload, priority)?;
+        self.log(|w| w.publish(queue, priority, seq, epoch, payload))
+    }
+
+    fn consume(&self, queue: &str, timeout: Duration) -> Result<Option<Delivery>> {
+        if !self.journaling() {
+            return self.inner.consume(queue, timeout);
+        }
+        match self.inner.consume_ids(queue, timeout)? {
+            None => Ok(None),
+            Some((d, id)) => {
+                self.log(|w| w.delivered(queue, &[id]))?;
+                Ok(Some(d))
+            }
+        }
+    }
+
+    fn ack(&self, queue: &str, tag: u64) -> Result<()> {
+        if !self.journaling() {
+            return self.inner.ack(queue, tag);
+        }
+        let ids = self.inner.ack_ids(queue, &[tag])?;
+        if ids.is_empty() {
+            return Ok(()); // expired tag: no state change to log
+        }
+        self.log(|w| w.acked(queue, &ids))
+    }
+
+    fn nack(&self, queue: &str, tag: u64) -> Result<()> {
+        if !self.journaling() {
+            return self.inner.nack(queue, tag);
+        }
+        let ids = self.inner.nack_ids(queue, &[tag])?;
+        if ids.is_empty() {
+            return Ok(());
+        }
+        self.log(|w| w.nacked(queue, &ids))
+    }
+
+    fn len(&self, queue: &str) -> Result<usize> {
+        self.inner.len(queue)
+    }
+
+    fn purge(&self, queue: &str) -> Result<()> {
+        if !self.journaling() {
+            return self.inner.purge(queue);
+        }
+        let epoch = self.inner.purge_epoch(queue)?;
+        self.log(|w| w.purge(queue, epoch))
+    }
+
+    fn stats(&self, queue: &str) -> Result<QueueStats> {
+        self.inner.stats(queue)
+    }
+
+    fn publish_many(&self, queue: &str, payloads: &[&[u8]]) -> Result<()> {
+        if payloads.is_empty() {
+            return Ok(());
+        }
+        if !self.journaling() {
+            return self.inner.publish_many(queue, payloads);
+        }
+        let (first_seq, epoch) = self.inner.publish_many_seq(queue, payloads)?;
+        self.log(|w| w.publish_many(queue, DEFAULT_PRIORITY, first_seq, epoch, payloads))
+    }
+
+    fn consume_many(&self, queue: &str, max: usize, timeout: Duration) -> Result<Vec<Delivery>> {
+        if !self.journaling() {
+            return self.inner.consume_many(queue, max, timeout);
+        }
+        let with_ids = self.inner.consume_many_ids(queue, max, timeout)?;
+        if with_ids.is_empty() {
+            return Ok(Vec::new());
+        }
+        let ids: Vec<MsgId> = with_ids.iter().map(|(_, id)| *id).collect();
+        self.log(|w| w.delivered(queue, &ids))?;
+        Ok(with_ids.into_iter().map(|(d, _)| d).collect())
+    }
+
+    fn ack_many(&self, queue: &str, tags: &[u64]) -> Result<()> {
+        if tags.is_empty() {
+            return Ok(());
+        }
+        if !self.journaling() {
+            return self.inner.ack_many(queue, tags);
+        }
+        let ids = self.inner.ack_ids(queue, tags)?;
+        if ids.is_empty() {
+            return Ok(());
+        }
+        self.log(|w| w.acked(queue, &ids))
+    }
+
+    fn nack_many(&self, queue: &str, tags: &[u64]) -> Result<()> {
+        if tags.is_empty() {
+            return Ok(());
+        }
+        if !self.journaling() {
+            return self.inner.nack_many(queue, tags);
+        }
+        let ids = self.inner.nack_ids(queue, tags)?;
+        if ids.is_empty() {
+            return Ok(());
+        }
+        self.log(|w| w.nacked(queue, &ids))
+    }
+}
+
+impl QueueService for DurableBroker {
+    fn sweep(&self) {
+        // Expiry redelivery needs no log record: the affected messages
+        // already carry `Delivered` records, which is exactly the fact
+        // recovery uses to set their redelivered flag.
+        self.inner.sweep();
+    }
+}
+
+/// Apply a WAL record stream on top of (possibly snapshot-seeded) state.
+///
+/// Replay is independent of cross-thread append ordering — records can
+/// land in the log in a different order than their effects were applied
+/// to the broker (appends happen after the queue lock is released):
+///
+/// - ids are globally unique, so "was ever acked" / "was ever delivered"
+///   are position-independent sets (pass 1);
+/// - purges are resolved by PURGE EPOCH, not log position: a publish is
+///   kept only if the epoch it was applied under is >= every purge epoch
+///   recorded for its queue, which reconstructs apply order exactly even
+///   when a racing purge/publish pair hit the log inverted.
+fn replay(state: &mut RecoveredQueues, max_seq: &mut u64, records: &[Record]) -> Result<()> {
+    // Pass 1: position-independent facts (+ the qid -> name table; a
+    // Declare always precedes its qid's first use, both frames being
+    // written under one WAL-mutex hold).
+    let mut acked: HashSet<MsgId> = HashSet::new();
+    let mut redelivered: HashSet<MsgId> = HashSet::new();
+    let mut purge_epochs: HashMap<String, u64> = HashMap::new();
+    let mut names: HashMap<u32, String> = HashMap::new();
+    let queue_of = |names: &HashMap<u32, String>, qid: u32| -> Result<String> {
+        match names.get(&qid) {
+            Some(n) => Ok(n.clone()),
+            None => bail!("WAL references undeclared queue id {qid}"),
+        }
+    };
+    for rec in records {
+        match rec {
+            Record::Declare { qid, name } => {
+                names.insert(*qid, name.clone());
+            }
+            Record::Acked { ids, .. } => {
+                for id in ids {
+                    *max_seq = (*max_seq).max(id.1);
+                    acked.insert(*id);
+                }
+            }
+            Record::Delivered { ids, .. } | Record::Nacked { ids, .. } => {
+                for id in ids {
+                    *max_seq = (*max_seq).max(id.1);
+                    redelivered.insert(*id);
+                }
+            }
+            Record::Publish { seq, .. } => *max_seq = (*max_seq).max(*seq),
+            Record::PublishMany { first_seq, payloads, .. } => {
+                *max_seq = (*max_seq).max(first_seq + payloads.len() as u64)
+            }
+            Record::Purge { qid, epoch } => {
+                let name = queue_of(&names, *qid)?;
+                let e = purge_epochs.entry(name).or_insert(0);
+                *e = (*e).max(*epoch);
+            }
+        }
+    }
+
+    // Pass 2: rebuild the message set.
+    for rec in records {
+        match rec {
+            Record::Declare { qid, .. } => {
+                state.entry(queue_of(&names, *qid)?).or_default();
+            }
+            Record::Publish { qid, priority, seq, epoch, payload } => {
+                let id = (*priority, *seq);
+                if !acked.contains(&id) {
+                    let q = state.entry(queue_of(&names, *qid)?).or_default();
+                    q.insert(id, (payload.clone(), redelivered.contains(&id), *epoch));
+                }
+            }
+            Record::PublishMany { qid, priority, first_seq, epoch, payloads } => {
+                let q = state.entry(queue_of(&names, *qid)?).or_default();
+                for (k, payload) in payloads.iter().enumerate() {
+                    let id = (*priority, first_seq + k as u64);
+                    if !acked.contains(&id) {
+                        q.insert(id, (payload.clone(), redelivered.contains(&id), *epoch));
+                    }
+                }
+            }
+            Record::Delivered { qid, ids } | Record::Nacked { qid, ids } => {
+                // Mark snapshot-seeded survivors; ids already folded into
+                // `redelivered` cover publishes later in the log.
+                let q = state.entry(queue_of(&names, *qid)?).or_default();
+                for id in ids {
+                    if let Some(entry) = q.get_mut(id) {
+                        entry.1 = true;
+                    }
+                }
+            }
+            Record::Acked { qid, ids } => {
+                let q = state.entry(queue_of(&names, *qid)?).or_default();
+                for id in ids {
+                    q.remove(id);
+                }
+            }
+            Record::Purge { .. } => {} // resolved by epoch below
+        }
+    }
+
+    // Purge resolution: drop everything applied before the last purge.
+    for (name, purge_epoch) in &purge_epochs {
+        if let Some(q) = state.get_mut(name) {
+            q.retain(|_, (_, _, epoch)| *epoch >= *purge_epoch);
+        }
+    }
+    Ok(())
+}
+
+/// Atomically replace `dir/snapshot.bin` with the broker's current state.
+/// The directory itself is fsynced after the rename: without it, a power
+/// loss could persist the NEXT step of compaction (truncating wal.log)
+/// while losing the rename, leaving an old snapshot with an empty log —
+/// exactly the confirmed-loss the Always policy promises away.
+fn write_snapshot(dir: &Path, broker: &Broker) -> Result<()> {
+    let tmp = dir.join("snapshot.tmp");
+    let dst = dir.join("snapshot.bin");
+    let bytes = broker.snapshot();
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        use std::io::Write;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, &dst).with_context(|| format!("renaming {tmp:?} -> {dst:?}"))?;
+    sync_dir(dir)?;
+    Ok(())
+}
+
+/// Start a fresh log segment whose preamble re-declares every live queue
+/// (segments are self-contained: a record never references a queue id
+/// declared only in a compacted-away segment).
+fn fresh_segment(path: &Path, queue_names: &[String]) -> Result<WalWriter> {
+    let mut w = WalWriter::create(path)?;
+    for name in queue_names {
+        w.declare(name)?;
+    }
+    w.sync()?;
+    if let Some(dir) = path.parent() {
+        sync_dir(dir)?; // make the (re)created segment's dir entry durable
+    }
+    Ok(w)
+}
+
+/// fsync a directory so renames/creates inside it survive power loss
+/// (no-op where directories cannot be opened for sync, e.g. Windows).
+fn sync_dir(dir: &Path) -> Result<()> {
+    #[cfg(unix)]
+    {
+        let d = std::fs::File::open(dir).with_context(|| format!("opening dir {dir:?}"))?;
+        d.sync_all().with_context(|| format!("fsyncing dir {dir:?}"))?;
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static TEST_DIR_N: AtomicUsize = AtomicUsize::new(0);
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let n = TEST_DIR_N.fetch_add(1, Ordering::Relaxed);
+        let d = std::env::temp_dir()
+            .join(format!("jsdoop-dur-{tag}-{}-{n}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn opts(sync: SyncPolicy) -> DurabilityOptions {
+        DurabilityOptions {
+            sync,
+            compact_after_bytes: u64::MAX,
+            visibility_timeout: Duration::from_secs(60),
+        }
+    }
+
+    const POLL: Duration = Duration::from_millis(10);
+
+    #[test]
+    fn sync_policy_parses() {
+        assert_eq!("never".parse::<SyncPolicy>().unwrap(), SyncPolicy::Never);
+        assert_eq!("always".parse::<SyncPolicy>().unwrap(), SyncPolicy::Always);
+        assert_eq!("every=8".parse::<SyncPolicy>().unwrap(), SyncPolicy::EveryN(8));
+        assert!("every=0".parse::<SyncPolicy>().is_err());
+        assert!("sometimes".parse::<SyncPolicy>().is_err());
+    }
+
+    #[test]
+    fn reopen_recovers_ready_and_unacked_not_acked() {
+        let dir = tmpdir("basic");
+        {
+            let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+            b.declare("q").unwrap();
+            for i in 0..4u8 {
+                b.publish("q", &[i]).unwrap();
+            }
+            let d0 = b.consume("q", POLL).unwrap().unwrap(); // [0]
+            let _d1 = b.consume("q", POLL).unwrap().unwrap(); // [1] stays unacked
+            b.ack("q", d0.tag).unwrap();
+        } // drop = process death for in-memory state
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+        assert_eq!(b.recovered_queues(), 1);
+        assert_eq!(b.recovered_messages(), 3);
+        let mut got = Vec::new();
+        while let Some(d) = b.consume("q", POLL).unwrap() {
+            b.ack("q", d.tag).unwrap();
+            got.push((d.payload[0], d.redelivered));
+        }
+        // Acked [0] gone; unacked [1] back first (original slot) and
+        // flagged; never-delivered [2], [3] back unflagged.
+        assert_eq!(got, vec![(1, true), (2, false), (3, false)]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_preserves_fifo_per_priority() {
+        let dir = tmpdir("pri");
+        {
+            let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+            b.declare("t").unwrap();
+            // Interleave publishes across priorities.
+            b.publish_pri("t", b"b0", 1).unwrap();
+            b.publish_pri("t", b"a0", 0).unwrap();
+            b.publish_pri("t", b"b1", 1).unwrap();
+            b.publish_pri("t", b"a1", 0).unwrap();
+        }
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+        let mut got = Vec::new();
+        while let Some(d) = b.consume("t", POLL).unwrap() {
+            b.ack("t", d.tag).unwrap();
+            got.push(d.payload.clone());
+        }
+        let want: Vec<Vec<u8>> =
+            [b"a0", b"a1", b"b0", b"b1"].iter().map(|s| s.to_vec()).collect();
+        assert_eq!(got, want);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn batched_ops_recover() {
+        let dir = tmpdir("batch");
+        {
+            let b = DurableBroker::open(&dir, opts(SyncPolicy::EveryN(1))).unwrap();
+            b.declare("g").unwrap();
+            let payloads: Vec<Vec<u8>> = (0..6u8).map(|i| vec![i]).collect();
+            let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+            b.publish_many("g", &refs).unwrap();
+            let batch = b.consume_many("g", 4, POLL).unwrap();
+            assert_eq!(batch.len(), 4);
+            // Settle the first two, hand one back, leave one in flight.
+            b.ack_many("g", &[batch[0].tag, batch[1].tag]).unwrap();
+            b.nack("g", batch[2].tag).unwrap();
+        }
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::EveryN(1))).unwrap();
+        assert_eq!(b.recovered_messages(), 4);
+        let drained = b.consume_many("g", 10, POLL).unwrap();
+        let got: Vec<(u8, bool)> =
+            drained.iter().map(|d| (d.payload[0], d.redelivered)).collect();
+        assert_eq!(got, vec![(2, true), (3, true), (4, false), (5, false)]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn purge_is_durable() {
+        let dir = tmpdir("purge");
+        {
+            let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+            b.declare("q").unwrap();
+            b.publish("q", b"gone").unwrap();
+            b.purge("q").unwrap();
+            b.publish("q", b"kept").unwrap();
+        }
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+        assert_eq!(b.recovered_messages(), 1);
+        let d = b.consume("q", POLL).unwrap().unwrap();
+        assert_eq!(d.payload, b"kept");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_preserves_state_and_resets_segment() {
+        let dir = tmpdir("compact");
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+        b.declare("q").unwrap();
+        for i in 0..10u8 {
+            b.publish("q", &[i]).unwrap();
+        }
+        let before = b.wal_bytes();
+        assert!(before > 0);
+        b.compact().unwrap();
+        // Post-compaction segment holds only the declare preamble.
+        assert!(b.wal_bytes() < before);
+        // Ops after compaction land in the new segment and still recover.
+        let d = b.consume("q", POLL).unwrap().unwrap();
+        b.ack("q", d.tag).unwrap();
+        drop(b);
+        let r = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+        assert_eq!(r.recovered_messages(), 9);
+        let first = r.consume("q", POLL).unwrap().unwrap();
+        assert_eq!(first.payload, vec![1u8]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn automatic_compaction_triggers_on_segment_size() {
+        let dir = tmpdir("autocompact");
+        let o = DurabilityOptions {
+            sync: SyncPolicy::EveryN(4),
+            compact_after_bytes: 4 << 10,
+            visibility_timeout: Duration::from_secs(60),
+        };
+        let b = DurableBroker::open(&dir, o.clone()).unwrap();
+        b.declare("q").unwrap();
+        let payload = vec![7u8; 256];
+        for _ in 0..200 {
+            b.publish("q", &payload).unwrap();
+        }
+        // 200 * ~280B >> 4KB: at least one compaction must have run, so
+        // the live segment stays well under the total appended volume.
+        assert!(b.wal_bytes() < 8 << 10, "segment {} never compacted", b.wal_bytes());
+        drop(b);
+        let r = DurableBroker::open(&dir, o).unwrap();
+        assert_eq!(r.recovered_messages(), 200);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn never_policy_survives_graceful_drop_via_snapshot() {
+        // Durability-off journals nothing, but a graceful drop compacts —
+        // only a hard crash between compactions loses state.
+        let dir = tmpdir("never");
+        {
+            let b = DurableBroker::open(&dir, opts(SyncPolicy::Never)).unwrap();
+            b.declare("q").unwrap();
+            b.publish("q", b"kept-by-snapshot").unwrap();
+            assert_eq!(b.wal_bytes(), 0, "Never must not journal the hot path");
+        }
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::Never)).unwrap();
+        assert_eq!(b.recovered_messages(), 1);
+        // Explicit compaction is the mid-run durability point for Never.
+        b.publish("q", b"second").unwrap();
+        b.compact().unwrap();
+        std::mem::forget(b); // hard crash: Drop (and its compaction) skipped
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::Never)).unwrap();
+        assert_eq!(b.recovered_messages(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_wal_tail_recovers_clean_prefix() {
+        let dir = tmpdir("torn");
+        {
+            let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+            b.declare("q").unwrap();
+            b.publish("q", b"one").unwrap();
+            b.publish("q", b"two").unwrap();
+        }
+        // Tear the last record (crash mid-write).
+        let wal_path = dir.join("wal.log");
+        let bytes = std::fs::read(&wal_path).unwrap();
+        std::fs::write(&wal_path, &bytes[..bytes.len() - 2]).unwrap();
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+        assert_eq!(b.recovered_messages(), 1);
+        let d = b.consume("q", POLL).unwrap().unwrap();
+        assert_eq!(d.payload, b"one");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn double_recovery_is_stable() {
+        // Recover, mutate, recover again: acks recorded in the
+        // post-recovery segment must stick.
+        let dir = tmpdir("double");
+        {
+            let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+            b.declare("q").unwrap();
+            b.publish("q", b"x").unwrap();
+            b.publish("q", b"y").unwrap();
+        }
+        {
+            let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+            let d = b.consume("q", POLL).unwrap().unwrap();
+            assert_eq!(d.payload, b"x");
+            b.ack("q", d.tag).unwrap();
+        }
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+        assert_eq!(b.recovered_messages(), 1);
+        let d = b.consume("q", POLL).unwrap().unwrap();
+        assert_eq!(d.payload, b"y");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -10,9 +10,44 @@
 //! ([`wire`] frames — the STOMP-over-WebSocket stand-in) so volunteers can
 //! run as separate OS processes, and [`QueueApi`] makes the two
 //! interchangeable to the agents.
+//!
+//! # Durability & recovery
+//!
+//! JSDoop inherits crash tolerance from RabbitMQ's durable queues: "tasks
+//! are not removed from the queue until an ACK is received" holds *across
+//! a broker restart* there. [`durability::DurableBroker`] closes that gap
+//! for the in-process broker: every mutation (declare / publish /
+//! publish_many / delivery / ack / nack / purge) is appended to a
+//! length-prefixed, CRC-checked write-ahead log, and the log is
+//! periodically compacted into a [`broker::Broker::snapshot`]-format base
+//! file. Recovery replays snapshot + log tail into a fresh broker:
+//! acknowledged messages never reappear, every unACKed or ready message
+//! survives exactly once in FIFO-per-priority order, and messages that
+//! had been delivered before the crash come back with
+//! `redelivered = true`.
+//!
+//! What is and isn't synced to disk is governed by
+//! [`durability::SyncPolicy`]:
+//!
+//! - `Always` — flush + fsync before every operation returns. An op the
+//!   client saw succeed survives both process SIGKILL and power loss.
+//! - `EveryN(n)` — flush + fsync once per n records. SIGKILL can lose at
+//!   most the records since the last sync (bounded, documented window).
+//! - `Never` — durability off: nothing is journaled; state persists only
+//!   through snapshot compaction (explicit, or on graceful shutdown). In
+//!   exchange the hot path is required (and bench-enforced, see
+//!   `benches/durability.rs`) to stay within 5% of the plain
+//!   [`broker::Broker`].
+//!
+//! Recovery is idempotent by construction — WAL records carry message
+//! *identities* ((priority, seq), never reused), so replaying a record
+//! whose effect is already captured in the snapshot is a no-op. That is
+//! what lets compaction run concurrently with live traffic without
+//! quiescing the broker.
 
 pub mod broker;
 pub mod client;
+pub mod durability;
 pub mod server;
 pub mod sharded;
 pub mod wire;
@@ -45,6 +80,22 @@ pub struct QueueStats {
 /// Priority used by plain [`QueueApi::publish`]: queues where every
 /// message has this priority behave exactly FIFO.
 pub const DEFAULT_PRIORITY: u64 = 1 << 62;
+
+/// What the TCP [`server`] hosts: the queue operations plus the periodic
+/// visibility sweep. Implemented by the plain in-process
+/// [`broker::Broker`] and the WAL-backed [`durability::DurableBroker`],
+/// so one `serve` call hosts either.
+pub trait QueueService: QueueApi {
+    /// Requeue expired unACKed messages (no-op default for backends that
+    /// sweep internally).
+    fn sweep(&self) {}
+}
+
+impl QueueService for broker::Broker {
+    fn sweep(&self) {
+        broker::Broker::sweep(self)
+    }
+}
 
 /// The queue operations JSDoop needs, implemented by both the in-process
 /// [`broker::Broker`] and the TCP [`client::RemoteQueue`].

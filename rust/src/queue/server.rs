@@ -14,19 +14,20 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::data::{DataApi, Store};
-use crate::queue::broker::Broker;
 use crate::queue::wire::{
     put_bytes, put_str, put_u32, read_frame, write_frame, BodyReader, Op, MAX_FRAME, ST_ERR,
     ST_NONE, ST_OK,
 };
-use crate::queue::QueueApi;
+use crate::queue::{QueueApi, QueueService};
 
 /// A running server; dropping does NOT stop it — call [`ServerHandle::shutdown`].
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
-    pub broker: Arc<Broker>,
+    /// The hosted queue backend (plain [`crate::queue::broker::Broker`] or
+    /// [`crate::queue::durability::DurableBroker`]).
+    pub broker: Arc<dyn QueueService>,
     pub store: Arc<Store>,
 }
 
@@ -39,10 +40,16 @@ impl ServerHandle {
             let _ = h.join();
         }
     }
+
+    /// True once a Shutdown op (or [`ServerHandle::shutdown`]) stopped the
+    /// accept loop — lets a CLI host block until remotely shut down.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
 }
 
 /// Serve `broker` + `store` on `addr` (use port 0 for an ephemeral port).
-pub fn serve(addr: &str, broker: Arc<Broker>, store: Arc<Store>) -> Result<ServerHandle> {
+pub fn serve(addr: &str, broker: Arc<dyn QueueService>, store: Arc<Store>) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
@@ -80,7 +87,7 @@ pub fn serve(addr: &str, broker: Arc<Broker>, store: Arc<Store>) -> Result<Serve
                     let _ = std::thread::Builder::new()
                         .name("jsdoop-conn".into())
                         .spawn(move || {
-                            let _ = handle_conn(stream, &broker, &store, &stop);
+                            let _ = handle_conn(stream, broker.as_ref(), &store, &stop);
                         });
                 }
             })?
@@ -91,7 +98,7 @@ pub fn serve(addr: &str, broker: Arc<Broker>, store: Arc<Store>) -> Result<Serve
 
 fn handle_conn(
     mut stream: TcpStream,
-    broker: &Broker,
+    broker: &dyn QueueService,
     store: &Store,
     stop: &AtomicBool,
 ) -> Result<()> {
@@ -123,7 +130,7 @@ fn handle_conn(
 fn respond<W: Write>(
     op: Op,
     body: &[u8],
-    broker: &Broker,
+    broker: &dyn QueueService,
     store: &Store,
     stream: &mut W,
 ) -> Result<()> {

@@ -11,10 +11,12 @@
 //! mix), so the training run's heavy per-batch gradient queues can live
 //! on different servers than the task queue.
 
+use std::path::Path;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use super::durability::{DurabilityOptions, DurableBroker};
 use super::{Delivery, QueueApi, QueueStats};
 
 /// Stateless queue-name -> shard router + fan-out for the QueueApi.
@@ -28,6 +30,24 @@ impl ShardedQueue {
             bail!("need at least one shard");
         }
         Ok(ShardedQueue { shards })
+    }
+
+    /// A balancer over `n` [`DurableBroker`] shards, one WAL + snapshot
+    /// pair per shard under `base_dir/shard-<i>/`. Because rendezvous
+    /// routing is by queue name, every queue's history lives in exactly
+    /// one shard directory — reopening with the same `n` recovers the
+    /// whole keyspace, and each shard's log can sync/compact on its own
+    /// cadence without cross-shard coordination.
+    pub fn durable(base_dir: &Path, n: usize, opts: &DurabilityOptions) -> Result<Self> {
+        if n == 0 {
+            bail!("need at least one shard");
+        }
+        let mut shards: Vec<Box<dyn QueueApi>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let dir = base_dir.join(format!("shard-{i}"));
+            shards.push(Box::new(DurableBroker::open(&dir, opts.clone())?));
+        }
+        ShardedQueue::new(shards)
     }
 
     pub fn num_shards(&self) -> usize {
@@ -215,6 +235,48 @@ mod tests {
         assert!(again.iter().all(|d| d.redelivered));
         s.ack_many("grads", &again.iter().map(|d| d.tag).collect::<Vec<_>>()).unwrap();
         assert_eq!(s.len("grads").unwrap(), 0);
+    }
+
+    #[test]
+    fn durable_shards_recover_across_reopen() {
+        use crate::queue::durability::SyncPolicy;
+        use std::time::Duration as D;
+
+        let base = std::env::temp_dir()
+            .join(format!("jsdoop-shard-dur-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let opts = crate::queue::durability::DurabilityOptions {
+            sync: SyncPolicy::EveryN(1),
+            compact_after_bytes: u64::MAX,
+            visibility_timeout: D::from_secs(60),
+        };
+        let queues = ["tasks", "results.map.e0.b0", "results.map.e0.b1", "grads"];
+        {
+            let s = ShardedQueue::durable(&base, 3, &opts).unwrap();
+            for q in queues {
+                s.declare(q).unwrap();
+                s.publish(q, q.as_bytes()).unwrap();
+                s.publish(q, b"second").unwrap();
+            }
+            // One in-flight delivery + one settled on "tasks".
+            let d = s.consume("tasks", D::from_millis(10)).unwrap().unwrap();
+            s.ack("tasks", d.tag).unwrap();
+            let _held = s.consume("tasks", D::from_millis(10)).unwrap().unwrap();
+        }
+        // Same shard count => same rendezvous placement => full recovery.
+        let s = ShardedQueue::durable(&base, 3, &opts).unwrap();
+        for q in &queues[1..] {
+            assert_eq!(s.len(q).unwrap(), 2, "queue {q} lost messages");
+            let d = s.consume(q, D::from_millis(10)).unwrap().unwrap();
+            assert_eq!(d.payload, q.as_bytes());
+            s.ack(q, d.tag).unwrap();
+        }
+        // "tasks": acked head gone, in-flight "second" back and flagged.
+        assert_eq!(s.len("tasks").unwrap(), 1);
+        let d = s.consume("tasks", D::from_millis(10)).unwrap().unwrap();
+        assert_eq!(d.payload, b"second");
+        assert!(d.redelivered);
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

@@ -58,6 +58,12 @@ pub struct SimParams {
     /// True: a disconnect requeues the held task immediately (AMQP channel
     /// close). False: the task waits out the visibility timeout.
     pub requeue_on_disconnect: bool,
+    /// True: the broker is WAL-backed (queue/durability) — a broker crash
+    /// in the FaultPlan recovers with ready + unACKed tasks intact
+    /// (unACKed fold back to ready, the redelivery contract). False: a
+    /// crash loses the InitialQueue and the run fails, which is exactly
+    /// the pre-durability behaviour the subsystem exists to fix.
+    pub durable_broker: bool,
     /// Idle re-poll interval when the task queue is momentarily empty.
     pub poll: f64,
     /// Parked-worker probe interval: every `version_wait` seconds a parked
@@ -85,6 +91,7 @@ impl Default for SimParams {
             jitter_sigma: 0.0,
             visibility_timeout: 120.0,
             requeue_on_disconnect: true,
+            durable_broker: true,
             poll: 0.5,
             version_wait: 10.0,
         }
@@ -193,6 +200,10 @@ enum Ev {
     Requeue(STask),
     /// Parked worker probes the head for earlier work (priority-swap).
     SwapTick { w: usize, gen: u64 },
+    /// Broker process dies (FaultPlan::broker_crashes).
+    BrokerCrash,
+    /// Broker restarts (WAL recovery under `durable_broker`).
+    BrokerUp,
 }
 
 struct Worker {
@@ -269,6 +280,11 @@ pub fn simulate(
             clock.schedule_at(f0 + dur, Ev::FreezeEnd(i));
         }
     }
+    for c in &plan.broker_crashes {
+        clock.schedule_at(c.at, Ev::BrokerCrash);
+        clock.schedule_at(c.at + c.downtime, Ev::BrokerUp);
+    }
+    let mut broker_up = true;
 
     let mut model_version: u64 = 0;
     let mut grads_done: HashMap<u64, u32> = HashMap::new();
@@ -506,6 +522,13 @@ pub fn simulate(
                 {
                     continue;
                 }
+                if !broker_up {
+                    // Connection refused: back off one poll interval and
+                    // retry (the real agent's reconnect loop).
+                    workers[w].state = WState::Idle;
+                    pull_later!(clock, w, params.poll, workers);
+                    continue;
+                }
                 match queue.pop() {
                     Some(task) => {
                         dispatch!(clock, workers, w, task, now);
@@ -580,6 +603,48 @@ pub fn simulate(
                     queue.push(task);
                     // Idle pollers will find it on their next poll tick.
                 }
+            }
+            Ev::BrokerCrash => {
+                broker_up = false;
+                if !params.durable_broker {
+                    // No WAL: the InitialQueue and every unACKed task die
+                    // with the process. Report the loss instead of
+                    // spinning to the livelock budget.
+                    let lost = queue.len()
+                        + workers.iter().filter(|wk| wk.held.is_some()).count();
+                    bail!(
+                        "broker crashed at t={now:.1}s with durability disabled: \
+                         {lost} tasks lost at version {model_version}/{} — training \
+                         cannot complete (enable durable_broker)",
+                        workload.total_batches
+                    );
+                }
+                // WAL recovery contract (queue/durability): ready tasks
+                // survive; unACKed (held) tasks fold back to ready. The
+                // volunteers' in-flight results can no longer be ACKed or
+                // published, so their completions are cancelled and the
+                // work redelivers — at-least-once, first result wins.
+                for w in 0..n {
+                    if matches!(workers[w].state, WState::Dead | WState::NotJoined) {
+                        continue;
+                    }
+                    workers[w].gen += 1; // cancel MapDone/ReduceDone/SwapTick
+                    if let Some((task, _)) = workers[w].held.take() {
+                        if let STask::Reduce { version } = task {
+                            reduce_waiting.remove(&version);
+                        }
+                        requeues += 1;
+                        queue.push(task);
+                    }
+                    if !workers[w].frozen {
+                        workers[w].state = WState::Idle;
+                        pull_later!(clock, w, params.poll, workers);
+                    }
+                }
+            }
+            Ev::BrokerUp => {
+                broker_up = true;
+                // Idle pollers reconnect on their next poll tick.
             }
             Ev::SwapTick { w, gen } => {
                 if workers[w].gen != gen
@@ -788,6 +853,58 @@ mod tests {
             5,
         )
         .unwrap();
+        assert_eq!(r.reduces_done, 8);
+    }
+
+    #[test]
+    fn broker_crash_with_durability_completes_all_batches() {
+        let wl = SimWorkload { total_batches: 10, minibatches_per_batch: 4, batches_per_epoch: 5 };
+        let plan = FaultPlan::sync_start(4).with_broker_crash(3.0, 2.0);
+        let r = simulate(wl, &SimParams::default(), &plan, &[1.0; 4], 7).unwrap();
+        assert_eq!(r.reduces_done, 10);
+        assert!(r.maps_done >= 40, "at-least-once: every minibatch done");
+        // Mid-flight tasks were folded back by recovery.
+        assert!(r.requeues > 0, "a crash at t=3 must catch in-flight tasks");
+        // Downtime + redone work costs wall-clock vs the clean run.
+        let clean = quick(4);
+        assert!(
+            r.runtime > clean.runtime,
+            "crash run {} should be slower than clean {}",
+            r.runtime,
+            clean.runtime
+        );
+    }
+
+    #[test]
+    fn broker_crash_without_durability_fails_loudly() {
+        let wl = SimWorkload { total_batches: 10, minibatches_per_batch: 4, batches_per_epoch: 5 };
+        let plan = FaultPlan::sync_start(4).with_broker_crash(3.0, 2.0);
+        let mut params = SimParams::default();
+        params.durable_broker = false;
+        let err = simulate(wl, &params, &plan, &[1.0; 4], 7).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("durability disabled"), "got: {msg}");
+        assert!(msg.contains("tasks lost"), "got: {msg}");
+    }
+
+    #[test]
+    fn repeated_broker_crashes_still_converge() {
+        let wl = SimWorkload { total_batches: 8, minibatches_per_batch: 4, batches_per_epoch: 4 };
+        let plan = FaultPlan::sync_start(3)
+            .with_broker_crash(2.0, 1.0)
+            .with_broker_crash(6.0, 1.5)
+            .with_broker_crash(11.0, 0.5);
+        let r = simulate(wl, &SimParams::default(), &plan, &[1.0; 3], 9).unwrap();
+        assert_eq!(r.reduces_done, 8);
+    }
+
+    #[test]
+    fn broker_crash_composes_with_worker_churn() {
+        // Half the fleet leaves AND the coordinator dies mid-epoch: the
+        // survivors must still finish off the recovered queue.
+        let wl = SimWorkload { total_batches: 8, minibatches_per_batch: 4, batches_per_epoch: 4 };
+        let plan = FaultPlan::departure(4, 2, 4.0).with_broker_crash(5.0, 2.0);
+        let r = simulate(wl, &SimParams::default(), &plan, &[1.0; 4], 13).unwrap();
         assert_eq!(r.reduces_done, 8);
     }
 

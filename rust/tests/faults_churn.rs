@@ -49,6 +49,7 @@ fn late_joiners_still_converge_identically() {
             WorkerScript { join_at: 0.2, leave_at: None, freeze: None },
             WorkerScript { join_at: 0.5, leave_at: None, freeze: None },
         ],
+        broker_crashes: vec![],
     };
     let out = driver::run_local(&cfg, &engine, &plan, &[1.0; 3]).unwrap();
     assert_eq!(out.final_model.params, oracle_params(&engine, &cfg));
@@ -80,6 +81,130 @@ fn heterogeneous_speeds_same_model() {
     let plan = FaultPlan::sync_start(3);
     let out = driver::run_local(&cfg, &engine, &plan, &[1.0, 0.3, 0.6]).unwrap();
     assert_eq!(out.final_model.params, oracle_params(&engine, &cfg));
+}
+
+#[test]
+fn coordinator_crash_mid_epoch_recovers_and_finishes() {
+    // The broker-crash scenario the durability subsystem exists for: a
+    // WAL-backed broker dies mid-epoch (half the batches reduced, tasks
+    // in flight), a fresh process recovers its queues from disk, and a
+    // new fleet finishes training — with the final model still equal to
+    // the serial oracle (redelivered tasks are dededuplicated by the
+    // protocol's first-result-wins rule, order by the priority scheme).
+    use jsdoop::coordinator::initiator::setup_problem;
+    use jsdoop::coordinator::version::current_version;
+    use jsdoop::data::Store;
+    use jsdoop::queue::durability::{DurabilityOptions, DurableBroker, SyncPolicy};
+    use jsdoop::textdata::Corpus;
+    use jsdoop::volunteer::agent::{Agent, AgentOptions};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let Some((engine, mut cfg)) = common::engine_and_tiny_config() else {
+        common::skip("coordinator_crash_mid_epoch_recovers_and_finishes");
+        return;
+    };
+    // 4 batches: the crash lands at v=2 with two whole batches (plus the
+    // in-flight one's tail) left to recover.
+    cfg.examples_per_epoch = 64;
+    cfg.validate().unwrap();
+    let dir = std::env::temp_dir()
+        .join(format!("jsdoop-coord-crash-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // every=1: each record hits the OS before the op returns, so dropping
+    // the broker without ceremony below is as good as a SIGKILL.
+    let opts = DurabilityOptions {
+        sync: SyncPolicy::EveryN(1),
+        compact_after_bytes: u64::MAX,
+        visibility_timeout: Duration::from_secs(2),
+    };
+    let store = Arc::new(Store::new());
+    let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
+    let corpus = Corpus::synthetic_js(cfg.corpus_seed, cfg.corpus_len);
+    let init = engine.meta().load_init_params(&cfg.artifact_dir).unwrap();
+    let total = spec.total_versions();
+    let agent_opts = AgentOptions {
+        poll: Duration::from_millis(50),
+        version_wait: Duration::from_millis(250),
+        ..Default::default()
+    };
+
+    // --- phase 1: train until mid-epoch, then "crash" the broker. --------
+    {
+        let broker = Arc::new(DurableBroker::open(&dir, opts.clone()).unwrap());
+        setup_problem(broker.as_ref(), store.as_ref(), &spec, &corpus, init).unwrap();
+        let quit = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for id in 0..2usize {
+                let broker = broker.clone();
+                let store = store.clone();
+                let engine = engine.clone();
+                let quit = &quit;
+                let agent_opts = agent_opts.clone();
+                s.spawn(move || {
+                    let agent = Agent {
+                        id,
+                        engine: engine.as_ref(),
+                        queue: broker.as_ref(),
+                        data: store.as_ref(),
+                        timeline: None,
+                        opts: agent_opts,
+                    };
+                    let _ = agent.run(quit);
+                });
+            }
+            // Kill the coordinator once at least one batch (and at most
+            // about half) has been reduced — mid-epoch by construction.
+            // The deadline bounds the test if the fleet wedges: quit is
+            // still set, the scope joins, and the assertions report.
+            let t0 = std::time::Instant::now();
+            loop {
+                let v = current_version(store.as_ref()).unwrap().unwrap_or(0);
+                if v >= (total / 2).max(1) || t0.elapsed() > Duration::from_secs(120) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            quit.store(true, Ordering::SeqCst);
+        });
+        let v = current_version(store.as_ref()).unwrap().unwrap_or(0);
+        assert!(v < total, "fleet finished before the crash; nothing recovered");
+        drop(broker); // the crash: in-memory queue state is gone
+    }
+
+    // --- phase 2: recover from the WAL, finish with a fresh fleet. -------
+    let broker = Arc::new(DurableBroker::open(&dir, opts).unwrap());
+    assert!(
+        broker.recovered_messages() > 0,
+        "mid-epoch crash must leave tasks to recover"
+    );
+    let quit = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for id in 0..2usize {
+            let broker = broker.clone();
+            let store = store.clone();
+            let engine = engine.clone();
+            let quit = &quit;
+            let agent_opts = agent_opts.clone();
+            s.spawn(move || {
+                let agent = Agent {
+                    id: 10 + id,
+                    engine: engine.as_ref(),
+                    queue: broker.as_ref(),
+                    data: store.as_ref(),
+                    timeline: None,
+                    opts: agent_opts,
+                };
+                agent.run(quit).unwrap();
+            });
+        }
+    });
+    let final_model = jsdoop::coordinator::version::get_model(store.as_ref())
+        .unwrap()
+        .expect("model after recovery");
+    assert_eq!(final_model.version, total, "training must complete after recovery");
+    assert_eq!(final_model.params, oracle_params(&engine, &cfg));
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

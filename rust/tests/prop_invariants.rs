@@ -244,6 +244,99 @@ fn prop_corpus_samples_always_in_bounds() {
 }
 
 #[test]
+fn prop_snapshot_restore_observationally_equivalent() {
+    // restore(snapshot(b)) must be indistinguishable from b-after-folding:
+    // same ready+unacked census, and the same drain sequence (payload +
+    // redelivered flag per message) as the source broker once its
+    // outstanding deliveries are NACKed back (the fold snapshot performs).
+    // Exercised under batched ops, random priorities, and in-flight
+    // unACKed deliveries — the broker states durability recovery sees.
+    use jsdoop::queue::Delivery;
+
+    check("snapshot-restore", 24, |rng| {
+        let b = Broker::new(Duration::from_secs(60));
+        b.declare("q").map_err(|e| e.to_string())?;
+        let poll = Duration::from_millis(1);
+        let mut held: Vec<Delivery> = Vec::new();
+        let mut next_payload = 0u32;
+        for _ in 0..24 {
+            match rng.below(5) {
+                0 => {
+                    // publish_pri with a random small priority.
+                    let pri = rng.below(4);
+                    b.publish_pri("q", &next_payload.to_le_bytes(), pri)
+                        .map_err(|e| e.to_string())?;
+                    next_payload += 1;
+                }
+                1 => {
+                    let n = rng.below(5) as usize;
+                    let payloads: Vec<Vec<u8>> = (0..n)
+                        .map(|k| (next_payload + k as u32).to_le_bytes().to_vec())
+                        .collect();
+                    next_payload += n as u32;
+                    let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+                    b.publish_many("q", &refs).map_err(|e| e.to_string())?;
+                }
+                2 => {
+                    let max = 1 + rng.below(4) as usize;
+                    held.extend(
+                        b.consume_many("q", max, poll).map_err(|e| e.to_string())?,
+                    );
+                }
+                3 => {
+                    let k = rng.below(held.len() as u64 + 1) as usize;
+                    let tags: Vec<u64> = held.drain(..k).map(|d| d.tag).collect();
+                    b.ack_many("q", &tags).map_err(|e| e.to_string())?;
+                }
+                _ => {
+                    if !held.is_empty() {
+                        let i = rng.below(held.len() as u64) as usize;
+                        let d = held.swap_remove(i);
+                        b.nack("q", d.tag).map_err(|e| e.to_string())?;
+                    }
+                }
+            }
+        }
+
+        let stats = b.stats("q").map_err(|e| e.to_string())?;
+        let snap = b.snapshot();
+        let r = Broker::restore(&snap, Duration::from_secs(60)).map_err(|e| e.to_string())?;
+        // Census: everything unsettled (ready + in-flight) survives.
+        if r.len("q").map_err(|e| e.to_string())? != stats.ready + stats.unacked {
+            return Err(format!(
+                "restored census {} != ready {} + unacked {}",
+                r.len("q").unwrap_or(0),
+                stats.ready,
+                stats.unacked
+            ));
+        }
+        // Fold the source the way the snapshot folds: NACK what's held.
+        let tags: Vec<u64> = held.drain(..).map(|d| d.tag).collect();
+        b.nack_many("q", &tags).map_err(|e| e.to_string())?;
+        // Drain both; sequences must match message-for-message.
+        loop {
+            let ds = b.consume("q", poll).map_err(|e| e.to_string())?;
+            let dr = r.consume("q", poll).map_err(|e| e.to_string())?;
+            match (ds, dr) {
+                (None, None) => break,
+                (Some(a), Some(c)) => {
+                    if a.payload != c.payload || a.redelivered != c.redelivered {
+                        return Err(format!(
+                            "drain mismatch: source {:?}/{} vs restored {:?}/{}",
+                            a.payload, a.redelivered, c.payload, c.redelivered
+                        ));
+                    }
+                    b.ack("q", a.tag).map_err(|e| e.to_string())?;
+                    r.ack("q", c.tag).map_err(|e| e.to_string())?;
+                }
+                (a, c) => return Err(format!("drain length mismatch: {a:?} vs {c:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_batch_ops_equal_single_op_loops() {
     // Observational equivalence: a broker driven by the batched entry
     // points (publish_many / consume_many / ack_many / nack_many) is

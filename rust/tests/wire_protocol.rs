@@ -184,6 +184,36 @@ fn malformed_batch_bodies_are_error_responses() {
 }
 
 #[test]
+fn stats_op_observes_lifecycle_over_tcp() {
+    // The recovery observer: QueueStats must be fetchable over the wire
+    // (crash_recovery.rs relies on this to check a restarted server from
+    // the client side), with the error path contained like any other op.
+    let h = start();
+    let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
+    // Error path: stats on an undeclared queue is ST_ERR, not a wedge.
+    assert!(q.stats("ghost").is_err());
+    q.ping().unwrap();
+
+    q.declare("s").unwrap();
+    q.publish("s", b"a").unwrap();
+    q.publish("s", b"b").unwrap();
+    let d = q.consume("s", Duration::from_millis(100)).unwrap().unwrap();
+    q.nack("s", d.tag).unwrap();
+    let d = q.consume("s", Duration::from_millis(100)).unwrap().unwrap();
+    assert!(d.redelivered);
+    q.ack("s", d.tag).unwrap();
+    let _held = q.consume("s", Duration::from_millis(100)).unwrap().unwrap();
+    let s = q.stats("s").unwrap();
+    assert_eq!(s.published, 2);
+    assert_eq!(s.delivered, 3);
+    assert_eq!(s.acked, 1);
+    assert_eq!(s.nacked, 1);
+    assert_eq!(s.ready, 0);
+    assert_eq!(s.unacked, 1);
+    h.shutdown();
+}
+
+#[test]
 fn batched_gradient_burst_roundtrips() {
     // 16 gradient-sized messages in one frame each way (the per-batch
     // burst the reduce path moves), well under MAX_FRAME.
