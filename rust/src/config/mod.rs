@@ -42,6 +42,10 @@ pub struct Config {
     pub sync_policy: String,
     /// Snapshot-compact the WAL once a segment passes this many bytes.
     pub wal_compact_bytes: u64,
+    /// Group-commit window in microseconds: how long the elected WAL
+    /// sync leader waits before fsyncing so more committers batch into
+    /// the same sync. 0 (default) = sync immediately.
+    pub wal_group_window_us: u64,
     // Corpus
     pub corpus_file: Option<PathBuf>,
     pub corpus_seed: u64,
@@ -69,6 +73,7 @@ impl Default for Config {
             durability_dir: None,
             sync_policy: "every=64".to_string(),
             wal_compact_bytes: 64 << 20,
+            wal_group_window_us: 0,
             corpus_file: None,
             corpus_seed: 1234,
             corpus_len: 200_000,
@@ -107,6 +112,11 @@ impl Config {
             // A tiny threshold would snapshot-rewrite + fsync the whole
             // broker on every journaled op (0 would do it per record).
             bail!("wal_compact_bytes must be >= 4096");
+        }
+        if self.wal_group_window_us > 1_000_000 {
+            // The window delays every waiting committer by up to its full
+            // length; beyond a second it is certainly a typo'd unit.
+            bail!("wal_group_window_us must be <= 1000000 (1s)");
         }
         Ok(())
     }
@@ -169,6 +179,7 @@ impl Config {
             "durability_dir" => self.durability_dir = Some(PathBuf::from(val)),
             "sync_policy" => self.sync_policy = val.to_string(),
             "wal_compact_bytes" => self.wal_compact_bytes = p(key, val)?,
+            "wal_group_window_us" => self.wal_group_window_us = p(key, val)?,
             "corpus_file" => self.corpus_file = Some(PathBuf::from(val)),
             "corpus_seed" => self.corpus_seed = p(key, val)?,
             "corpus_len" => self.corpus_len = p(key, val)?,
@@ -250,12 +261,17 @@ mod tests {
             "--durability_dir=/tmp/wal".into(),
             "--sync-policy=always".into(),
             "--wal_compact_bytes=1048576".into(),
+            "--wal_group_window_us=250".into(),
         ])
         .unwrap();
         assert_eq!(c.durability_dir, Some(PathBuf::from("/tmp/wal")));
         assert_eq!(c.sync_policy, "always");
         assert_eq!(c.wal_compact_bytes, 1 << 20);
+        assert_eq!(c.wal_group_window_us, 250);
         c.validate().unwrap();
+        c.wal_group_window_us = 2_000_000; // 2s: typo'd unit
+        assert!(c.validate().is_err());
+        c.wal_group_window_us = 0;
         c.sync_policy = "whenever".into();
         assert!(c.validate().is_err());
         c.sync_policy = "never".into();

@@ -5,7 +5,8 @@
 //!   train [--workers=N ...]       distributed training, in-process fleet
 //!   seq [--variant=...]           sequential baselines (TFJS-Sequential-*)
 //!   sim [--profile=... --workers=N]  discrete-event experiment
-//!   serve [addr] [--durability_dir=D --sync_policy=P --wal_compact_bytes=N]
+//!   serve [addr] [--durability_dir=D --sync_policy=P --wal_compact_bytes=N
+//!                 --wal_group_window_us=U]
 //!                                 host QueueServer + DataServer over TCP;
 //!                                 with a durability dir the broker recovers
 //!                                 its queues from WAL + snapshot on restart
@@ -181,6 +182,10 @@ fn sim(cfg: &Config, rest: &[String]) -> Result<()> {
 }
 
 fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
+    // The durability knobs (sync_policy, wal_compact_bytes,
+    // wal_group_window_us) are consumed HERE — without this, their
+    // validate() guards would be dead code on the serving path.
+    cfg.validate()?;
     let addr = rest
         .first()
         .cloned()
@@ -196,6 +201,7 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
             let opts = DurabilityOptions {
                 sync: cfg.sync_policy.parse()?,
                 compact_after_bytes: cfg.wal_compact_bytes,
+                group_window: Duration::from_micros(cfg.wal_group_window_us),
                 visibility_timeout: visibility,
             };
             let broker = Arc::new(DurableBroker::open(dir, opts)?);

@@ -38,8 +38,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
+use super::wire::BodyReader;
 use super::{Delivery, QueueApi, QueueStats, DEFAULT_PRIORITY};
 
 /// Durable identity of a message: (priority, seq). Seqs come from a
@@ -393,12 +394,28 @@ impl Broker {
     /// per-queue (not cross-queue) atomic — quiesce the broker for a
     /// consistent global cut, or rely on the durability layer's idempotent
     /// WAL replay to absorb the skew.
-    /// Format: [n u32][ per queue: name_len u32, name, epoch u64,
+    /// Format: [magic u32 = u32::MAX][version u32 = 1][next_seq u64]
+    ///         [n u32][ per queue: name_len u32, name, epoch u64,
     ///                  count u32, per msg: redelivered u8, priority u64,
     ///                  seq u64, len u32, bytes ]
+    /// The header carries the seq high-water mark: surviving messages
+    /// alone cannot reconstruct it (acked messages leave no trace in a
+    /// compacted snapshot), and ids must never be reused for the life of
+    /// a durability directory — WAL replay idempotency rests on it.
+    /// Legacy (v0) snapshots have no header and start at the queue count;
+    /// [`decode_snapshot`] accepts both.
     pub fn snapshot(&self) -> Vec<u8> {
         let map = self.queues.read().unwrap();
         let mut out = Vec::new();
+        out.extend_from_slice(&SNAPSHOT_MAGIC.to_le_bytes());
+        out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        // Seqs may still be allocated while the snapshot is cut, so no
+        // single source is complete: recovery folds the MAX of this
+        // header, the seqs of surviving messages below, and the seqs in
+        // WAL records replayed on top. The header's job is the case the
+        // others cannot see — acked-and-compacted messages, which leave
+        // no surviving message and no record in the fresh segment.
+        out.extend_from_slice(&self.next_seq.load(Ordering::Relaxed).to_le_bytes());
         out.extend_from_slice(&(map.len() as u32).to_le_bytes());
         let mut names: Vec<&String> = map.keys().collect();
         names.sort();
@@ -433,7 +450,7 @@ impl Broker {
         let decoded = decode_snapshot(bytes)?;
         let mut queues = HashMap::new();
         let mut max_seq = 0u64;
-        for (name, epoch, msgs) in decoded {
+        for (name, epoch, msgs) in decoded.queues {
             let mut q = QueueState { epoch, ..QueueState::default() };
             for m in msgs {
                 max_seq = max_seq.max(m.seq);
@@ -452,14 +469,26 @@ impl Broker {
                 Arc::new(QueueEntry { state: Mutex::new(q), readable: Condvar::new() }),
             );
         }
+        // v1+ snapshots carry the true high-water mark; a legacy (v0)
+        // snapshot can only offer the max surviving seq, which undercounts
+        // when acked messages were compacted away.
+        let next_seq = decoded.next_seq.unwrap_or(0).max(max_seq + 1);
         Ok(Broker {
             queues: RwLock::new(queues),
             next_tag: AtomicU64::new(1),
-            next_seq: AtomicU64::new(max_seq + 1),
+            next_seq: AtomicU64::new(next_seq),
             visibility_timeout,
         })
     }
 }
+
+/// Snapshot header sentinel. A legacy (v0) snapshot starts directly with
+/// its queue count, so `u32::MAX` — four billion queues — marks a
+/// versioned header unambiguously.
+const SNAPSHOT_MAGIC: u32 = u32::MAX;
+/// Current snapshot codec version. Bump when the header grows; decode
+/// rejects versions from the future instead of misreading them.
+const SNAPSHOT_VERSION: u32 = 1;
 
 /// One message as decoded from a [`Broker::snapshot`] byte stream.
 pub struct SnapMsg {
@@ -469,67 +498,56 @@ pub struct SnapMsg {
     pub seq: u64,
 }
 
-/// Decode a [`Broker::snapshot`] byte stream into per-queue
-/// (name, purge epoch, messages) lists (shared by [`Broker::restore`] and
-/// the durability recovery path, which replays a WAL tail on top of the
-/// decoded base state).
-pub fn decode_snapshot(bytes: &[u8]) -> Result<Vec<(String, u64, Vec<SnapMsg>)>> {
-    let mut i = 0usize;
-    let rd_u32 = |b: &[u8], i: &mut usize| -> Result<u32> {
-        if *i + 4 > b.len() {
-            bail!("snapshot truncated");
+/// A decoded [`Broker::snapshot`]: the header's seq high-water mark plus
+/// per-queue (name, purge epoch, messages) lists.
+pub struct SnapshotContents {
+    /// `next_seq` at snapshot time — `None` for legacy (v0) snapshots,
+    /// which predate the header; recovery then falls back to the max seq
+    /// of surviving messages, the best a v0 snapshot can offer.
+    pub next_seq: Option<u64>,
+    pub queues: Vec<(String, u64, Vec<SnapMsg>)>,
+}
+
+/// Decode a [`Broker::snapshot`] byte stream (shared by
+/// [`Broker::restore`] and the durability recovery path, which replays a
+/// WAL tail on top of the decoded base state). Accepts both the current
+/// versioned format and headerless v0 snapshots. Parsing rides
+/// [`BodyReader`] — the snapshot codec shares the wire module's field
+/// conventions (u32-length-prefixed chunks, little-endian integers), so
+/// there is exactly one bounds-audited reader for all framed decoding.
+pub fn decode_snapshot(bytes: &[u8]) -> Result<SnapshotContents> {
+    let mut r = BodyReader::new(bytes);
+    let first = r.u32().context("snapshot truncated")?;
+    let (next_seq, nqueues) = if first == SNAPSHOT_MAGIC {
+        let version = r.u32()?;
+        if version == 0 || version > SNAPSHOT_VERSION {
+            bail!("snapshot version {version} is newer than this binary (max {SNAPSHOT_VERSION})");
         }
-        let v = u32::from_le_bytes(b[*i..*i + 4].try_into().unwrap());
-        *i += 4;
-        Ok(v)
+        let next_seq = r.u64()?;
+        (Some(next_seq), r.u32()?)
+    } else {
+        (None, first) // v0: no header, `first` is the queue count
     };
-    let nqueues = rd_u32(bytes, &mut i)?;
     let mut out = Vec::new();
     for _ in 0..nqueues {
-        let nlen = rd_u32(bytes, &mut i)? as usize;
-        if i + nlen > bytes.len() {
-            bail!("snapshot truncated (name)");
-        }
-        let name = String::from_utf8(bytes[i..i + nlen].to_vec())?;
-        i += nlen;
-        if i + 8 > bytes.len() {
-            bail!("snapshot truncated (epoch)");
-        }
-        let epoch = u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
-        i += 8;
-        let count = rd_u32(bytes, &mut i)?;
+        let name = String::from_utf8(r.bytes().context("snapshot truncated (name)")?.to_vec())?;
+        let epoch = r.u64()?;
+        let count = r.u32()?;
         let mut msgs = Vec::new();
         for _ in 0..count {
-            if i >= bytes.len() {
-                bail!("snapshot truncated (msg header)");
-            }
-            let redelivered = bytes[i] != 0;
-            i += 1;
-            if i + 16 > bytes.len() {
-                bail!("snapshot truncated (priority/seq)");
-            }
-            let priority = u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
-            i += 8;
-            let seq = u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
-            i += 8;
-            let mlen = rd_u32(bytes, &mut i)? as usize;
-            if i + mlen > bytes.len() {
-                bail!("snapshot truncated (msg body)");
-            }
-            msgs.push(SnapMsg {
-                payload: bytes[i..i + mlen].to_vec(),
-                redelivered,
-                priority,
-                seq,
-            });
-            i += mlen;
+            let redelivered = r.u8()? != 0;
+            let priority = r.u64()?;
+            let seq = r.u64()?;
+            let payload = r.bytes().context("snapshot truncated (msg body)")?.to_vec();
+            msgs.push(SnapMsg { payload, redelivered, priority, seq });
         }
         out.push((name, epoch, msgs));
     }
-    if i != bytes.len() {
-        bail!("snapshot has {} trailing bytes", bytes.len() - i);
+    let trailing = r.rest();
+    if !trailing.is_empty() {
+        bail!("snapshot has {} trailing bytes", trailing.len());
     }
-    Ok(out)
+    Ok(SnapshotContents { next_seq, queues: out })
 }
 
 impl QueueApi for Broker {
@@ -855,6 +873,67 @@ mod tests {
         // The epoch survives the snapshot codec.
         let r = Broker::restore(&b.snapshot(), Duration::from_secs(1)).unwrap();
         assert_eq!(r.purge_epoch("q").unwrap(), 2);
+    }
+
+    #[test]
+    fn snapshot_header_carries_seq_high_water() {
+        let b = broker_ms(1000);
+        b.declare("q").unwrap();
+        for i in 0..3u8 {
+            b.publish("q", &[i]).unwrap();
+        }
+        // Settle everything: surviving messages alone now say nothing
+        // about the ids already issued.
+        while let Some(d) = b.consume("q", Duration::from_millis(5)).unwrap() {
+            b.ack("q", d.tag).unwrap();
+        }
+        let snap = b.snapshot();
+        let decoded = decode_snapshot(&snap).unwrap();
+        assert_eq!(decoded.next_seq, Some(3));
+        assert!(decoded.queues[0].2.is_empty());
+        // Restore resumes ABOVE the burned ids even with an empty queue.
+        let r = Broker::restore(&snap, Duration::from_secs(1)).unwrap();
+        let (seq, _) = r.publish_seq("q", b"fresh", DEFAULT_PRIORITY).unwrap();
+        assert!(seq >= 3, "restored broker reused seq {seq}");
+    }
+
+    #[test]
+    fn legacy_v0_snapshot_still_decodes() {
+        // Hand-built v0 bytes: no header, the stream starts directly with
+        // the queue count.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // 1 queue
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name len
+        bytes.push(b'q');
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // purge epoch
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // 1 message
+        bytes.push(1); // redelivered
+        bytes.extend_from_slice(&4u64.to_le_bytes()); // priority
+        bytes.extend_from_slice(&7u64.to_le_bytes()); // seq
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // payload len
+        bytes.extend_from_slice(b"abc");
+        let decoded = decode_snapshot(&bytes).unwrap();
+        assert_eq!(decoded.next_seq, None);
+        let (name, epoch, msgs) = &decoded.queues[0];
+        assert_eq!((name.as_str(), *epoch, msgs.len()), ("q", 2, 1));
+        assert_eq!(msgs[0].payload, b"abc");
+        assert!(msgs[0].redelivered);
+        assert_eq!((msgs[0].priority, msgs[0].seq), (4, 7));
+        // Restore falls back to max surviving seq + 1.
+        let r = Broker::restore(&bytes, Duration::from_secs(1)).unwrap();
+        let (seq, _) = r.publish_seq("q", b"x", 0).unwrap();
+        assert_eq!(seq, 8);
+    }
+
+    #[test]
+    fn snapshot_from_the_future_is_rejected() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // magic
+        bytes.extend_from_slice(&99u32.to_le_bytes()); // unknown version
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        let err = decode_snapshot(&bytes).unwrap_err().to_string();
+        assert!(err.contains("newer"), "unexpected error: {err}");
     }
 
     // --- batched operations ------------------------------------------------

@@ -28,6 +28,7 @@ use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -92,9 +93,17 @@ pub enum Record {
 }
 
 /// Append-side of the log. All methods assume the caller serializes
-/// access (DurableBroker holds it behind a mutex).
+/// access (DurableBroker holds it behind a mutex); the one exception is
+/// [`WalWriter::sync_handle`], whose returned descriptor is fsynced by
+/// the group-commit leader AFTER that mutex is released.
 pub struct WalWriter {
     out: BufWriter<File>,
+    /// Dup'd descriptor of the segment file: `sync_data` on it syncs the
+    /// same underlying file, so the elected group-commit leader can fsync
+    /// without holding the writer mutex. Every append is flushed to the
+    /// OS before the mutex is released (see [`WalWriter::frame`]), so a
+    /// later fsync through this handle always covers it.
+    sync_fd: Arc<File>,
     /// Reused body-encoding buffer (no per-record allocation).
     scratch: Vec<u8>,
     qids: HashMap<String, u32>,
@@ -102,7 +111,6 @@ pub struct WalWriter {
     /// Frame bytes appended to this segment (compaction trigger).
     pub bytes_written: u64,
     pub records_written: u64,
-    unsynced_records: u64,
 }
 
 impl WalWriter {
@@ -114,15 +122,24 @@ impl WalWriter {
             .truncate(true)
             .open(path)
             .with_context(|| format!("creating WAL segment {path:?}"))?;
+        let sync_fd = Arc::new(
+            file.try_clone()
+                .with_context(|| format!("duplicating WAL fd for {path:?}"))?,
+        );
         Ok(WalWriter {
             out: BufWriter::with_capacity(256 << 10, file),
+            sync_fd,
             scratch: Vec::with_capacity(256),
             qids: HashMap::new(),
             next_qid: 0,
             bytes_written: 0,
             records_written: 0,
-            unsynced_records: 0,
         })
+    }
+
+    /// The segment file handle for an out-of-mutex fsync (group commit).
+    pub fn sync_handle(&self) -> Arc<File> {
+        self.sync_fd.clone()
     }
 
     /// Intern `queue`, appending a `Declare` record the first time a name
@@ -221,34 +238,40 @@ impl WalWriter {
         self.frame()
     }
 
-    /// Write the scratch body as one framed record.
+    /// Write the scratch body as one framed record and flush it to the
+    /// OS. The flush is load-bearing for the durability contract: once a
+    /// journaled operation returns, SIGKILL must not lose its record (the
+    /// fsync cadence is only the POWER-LOSS window) — and it is what lets
+    /// the group-commit leader fsync through [`WalWriter::sync_handle`]
+    /// after the writer mutex is released, knowing every appended record
+    /// is already past user space. BufWriter still earns its keep by
+    /// coalescing the three header/body writes into one syscall.
     fn frame(&mut self) -> Result<()> {
         let len = self.scratch.len() as u32;
         let crc = crc32(&self.scratch);
         self.out.write_all(&len.to_le_bytes())?;
         self.out.write_all(&crc.to_le_bytes())?;
         self.out.write_all(&self.scratch)?;
+        self.out.flush()?;
         self.bytes_written += 8 + self.scratch.len() as u64;
         self.records_written += 1;
-        self.unsynced_records += 1;
         Ok(())
     }
 
-    pub fn unsynced_records(&self) -> u64 {
-        self.unsynced_records
-    }
-
     /// Push buffered records into the OS (survives process SIGKILL).
+    /// Every append already flushes (see [`WalWriter::frame`]); this is a
+    /// belt-and-braces no-op kept for explicit shutdown paths.
     pub fn flush(&mut self) -> Result<()> {
         self.out.flush()?;
         Ok(())
     }
 
-    /// Flush + fsync (survives power loss too).
+    /// Flush + fsync (survives power loss too). Used for segment
+    /// preambles and tests; live traffic syncs through the group-commit
+    /// leader in queue/durability instead.
     pub fn sync(&mut self) -> Result<()> {
         self.out.flush()?;
         self.out.get_ref().sync_data()?;
-        self.unsynced_records = 0;
         Ok(())
     }
 }
@@ -271,7 +294,9 @@ fn decode_record(body: &[u8]) -> Result<Record> {
             let epoch = r.u64()?;
             let n = r.u32()? as usize;
             // Each payload costs at least its 4-byte length prefix.
-            if n * 4 > body.len() {
+            // Division form: `n * 4` overflows usize on 32-bit targets
+            // for a corrupt count, waving it through to with_capacity.
+            if n > body.len() / 4 {
                 bail!("publish_many count {n} exceeds record size");
             }
             let mut payloads = Vec::with_capacity(n);
@@ -282,7 +307,8 @@ fn decode_record(body: &[u8]) -> Result<Record> {
         }
         REC_DELIVERED | REC_NACKED | REC_ACKED => {
             let n = r.u32()? as usize;
-            if n * 16 > body.len() {
+            // 16 bytes per id; division avoids 32-bit usize overflow.
+            if n > body.len() / 16 {
                 bail!("id count {n} exceeds record size");
             }
             let mut ids = Vec::with_capacity(n);
@@ -427,6 +453,12 @@ mod tests {
         body.extend_from_slice(&0u64.to_le_bytes()); // epoch
         body.extend_from_slice(&u32::MAX.to_le_bytes()); // count
         assert!(decode_record(&body).is_err());
+        // Id-record variant, with a count whose `n * 16` wraps a 32-bit
+        // usize to a tiny number (the overflow the guard must not trust).
+        let mut ids = vec![REC_DELIVERED];
+        ids.extend_from_slice(&0u32.to_le_bytes()); // qid
+        ids.extend_from_slice(&0x1000_0001u32.to_le_bytes()); // count
+        assert!(decode_record(&ids).is_err());
         // Framed with a valid CRC, it still just ends the clean prefix.
         let mut framed = Vec::new();
         framed.extend_from_slice(&(body.len() as u32).to_le_bytes());

@@ -29,10 +29,13 @@
 //! What is and isn't synced to disk is governed by
 //! [`durability::SyncPolicy`]:
 //!
-//! - `Always` — flush + fsync before every operation returns. An op the
-//!   client saw succeed survives both process SIGKILL and power loss.
-//! - `EveryN(n)` — flush + fsync once per n records. SIGKILL can lose at
-//!   most the records since the last sync (bounded, documented window).
+//! - `Always` — an operation returns only once the durable watermark
+//!   covers its record: it survives both process SIGKILL and power loss.
+//!   Commits are group committed (an elected leader fsyncs outside the
+//!   log mutex), so concurrent committers share one fsync.
+//! - `EveryN(n)` — fsync roughly once per n records. Every append is
+//!   still flushed to the OS before the op returns, so SIGKILL loses
+//!   nothing confirmed; only power loss can take the unsynced window.
 //! - `Never` — durability off: nothing is journaled; state persists only
 //!   through snapshot compaction (explicit, or on graceful shutdown). In
 //!   exchange the hot path is required (and bench-enforced, see

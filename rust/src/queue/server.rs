@@ -206,7 +206,8 @@ fn respond<W: Write>(
             let n = r.u32()? as usize;
             // Each message costs at least its 4-byte length prefix, so a
             // count claiming more is corrupt — reject before allocating.
-            if n * 4 > body.len() {
+            // Division form: `n * 4` wraps usize on 32-bit targets.
+            if n > body.len() / 4 {
                 anyhow::bail!("batch count {n} exceeds body size");
             }
             let mut payloads = Vec::with_capacity(n);
@@ -324,7 +325,8 @@ fn respond<W: Write>(
 /// sanity bound so a corrupt count cannot trigger a huge allocation.
 fn read_tags(r: &mut BodyReader<'_>, body_len: usize) -> Result<Vec<u64>> {
     let n = r.u32()? as usize;
-    if n * 8 > body_len {
+    // Division form: `n * 8` wraps usize on 32-bit targets.
+    if n > body_len / 8 {
         anyhow::bail!("tag count {n} exceeds body size");
     }
     let mut tags = Vec::with_capacity(n);

@@ -37,7 +37,10 @@ impl ShardedQueue {
     /// routing is by queue name, every queue's history lives in exactly
     /// one shard directory — reopening with the same `n` recovers the
     /// whole keyspace, and each shard's log can sync/compact on its own
-    /// cadence without cross-shard coordination.
+    /// cadence without cross-shard coordination. `opts` (sync policy,
+    /// group-commit window, compaction threshold) applies per shard, so
+    /// every shard gets its own group-commit leader: committers only ever
+    /// share an fsync with traffic routed to the same shard.
     pub fn durable(base_dir: &Path, n: usize, opts: &DurabilityOptions) -> Result<Self> {
         if n == 0 {
             bail!("need at least one shard");
@@ -248,7 +251,7 @@ mod tests {
         let opts = crate::queue::durability::DurabilityOptions {
             sync: SyncPolicy::EveryN(1),
             compact_after_bytes: u64::MAX,
-            visibility_timeout: D::from_secs(60),
+            ..Default::default()
         };
         let queues = ["tasks", "results.map.e0.b0", "results.map.e0.b1", "grads"];
         {

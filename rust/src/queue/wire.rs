@@ -157,7 +157,7 @@ impl<'a> BodyReader<'a> {
         }
         let n = u16::from_le_bytes(self.b[self.i..self.i + 2].try_into().unwrap()) as usize;
         self.i += 2;
-        if self.i + n > self.b.len() {
+        if n > self.b.len() - self.i {
             bail!("body truncated (str)");
         }
         let s = std::str::from_utf8(&self.b[self.i..self.i + n])?;
@@ -195,7 +195,9 @@ impl<'a> BodyReader<'a> {
     /// A length-prefixed byte chunk ([`put_bytes`] counterpart).
     pub fn bytes(&mut self) -> Result<&'a [u8]> {
         let n = self.u32()? as usize;
-        if self.i + n > self.b.len() {
+        // Subtraction form (i <= len always): `self.i + n` would wrap a
+        // 32-bit usize for a corrupt length and dodge the bound check.
+        if n > self.b.len() - self.i {
             bail!("body truncated (chunk of {n} bytes)");
         }
         let r = &self.b[self.i..self.i + n];

@@ -28,12 +28,16 @@ const CONSUME_WAIT: Duration = Duration::from_millis(300);
 /// Spawn `jsdoop serve 127.0.0.1:0 --durability_dir=...` and parse the
 /// bound address off its stdout.
 fn spawn_server(dir: &Path) -> (Child, String) {
+    spawn_server_with(dir, "always")
+}
+
+fn spawn_server_with(dir: &Path, sync_policy: &str) -> (Child, String) {
     let mut child = Command::new(env!("CARGO_BIN_EXE_jsdoop"))
         .args([
             "serve",
             "127.0.0.1:0",
             &format!("--durability_dir={}", dir.display()),
-            "--sync_policy=always",
+            &format!("--sync_policy={sync_policy}"),
         ])
         .stdout(Stdio::piped())
         .stderr(Stdio::inherit())
@@ -125,6 +129,42 @@ fn sigkill_mid_run_loses_no_acked_no_ready() {
     // Graceful shutdown this time (also exercises serve's stopped() path).
     q.shutdown_server().unwrap();
     wait_with_timeout(child3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sigkill_under_every_n_loses_no_confirmed_ops() {
+    // SIGKILL is not power loss. The fsync cadence (`every=N`) bounds
+    // only the POWER-LOSS window: every append is flushed to the OS
+    // before the operation is confirmed, so records between fsyncs live
+    // in the page cache, not user-space buffers. A SIGKILL therefore
+    // loses nothing confirmed over TCP even at an absurd cadence — the
+    // distinction the WAL's flush contract promises.
+    let dir = tmpdir("sigkill-everyn");
+    let (mut child, addr) = spawn_server_with(&dir, "every=100000");
+    {
+        let q = RemoteQueue::connect(&addr).unwrap();
+        q.declare("t").unwrap();
+        for i in 0..20u8 {
+            q.publish("t", &[i]).unwrap(); // confirmed once it returns
+        }
+        let d = q.consume("t", CONSUME_WAIT).unwrap().unwrap();
+        q.ack("t", d.tag).unwrap(); // the ack record is confirmed too
+    }
+    child.kill().unwrap();
+    child.wait().unwrap();
+
+    let (child2, addr2) = spawn_server_with(&dir, "every=100000");
+    let q = RemoteQueue::connect(&addr2).unwrap();
+    let s = q.stats("t").unwrap();
+    assert_eq!(
+        s.ready, 19,
+        "SIGKILL between fsyncs must lose nothing confirmed (acked head gone, rest back)"
+    );
+    let d = q.consume("t", CONSUME_WAIT).unwrap().unwrap();
+    assert_eq!(d.payload, vec![1], "acked message 0 must not reappear");
+    q.shutdown_server().unwrap();
+    wait_with_timeout(child2);
     let _ = std::fs::remove_dir_all(&dir);
 }
 

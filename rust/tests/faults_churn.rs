@@ -117,6 +117,7 @@ fn coordinator_crash_mid_epoch_recovers_and_finishes() {
         sync: SyncPolicy::EveryN(1),
         compact_after_bytes: u64::MAX,
         visibility_timeout: Duration::from_secs(2),
+        ..Default::default()
     };
     let store = Arc::new(Store::new());
     let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };

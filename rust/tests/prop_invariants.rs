@@ -51,6 +51,139 @@ fn prop_minibatches_partition_batches() {
 }
 
 #[test]
+fn prop_concurrent_publishers_replay_to_oracle() {
+    // Group commit releases the WAL mutex for the fsync, so records from
+    // concurrent committers land in the log in an order that need not
+    // match broker apply order. Replay must be order-independent: after a
+    // reopen, every queue holds exactly the oracle state (published minus
+    // acked, FIFO per publisher, redelivery flags for consumed-unacked).
+    use jsdoop::queue::durability::{DurabilityOptions, DurableBroker, SyncPolicy};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static DIR_N: AtomicUsize = AtomicUsize::new(0);
+    let wait = Duration::from_millis(200);
+    check("wal-concurrent-replay", 6, |rng| {
+        let n_threads = 2 + rng.below(3) as usize; // 2..=4 committers
+        let per = 5 + rng.below(16) as usize; // 5..=20 publishes each
+        let sync = match rng.below(3) {
+            0 => SyncPolicy::Always,
+            1 => SyncPolicy::EveryN(1),
+            _ => SyncPolicy::EveryN(7),
+        };
+        let dir = std::env::temp_dir().join(format!(
+            "jsdoop-prop-wal-{}-{}",
+            std::process::id(),
+            DIR_N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = DurabilityOptions {
+            sync,
+            compact_after_bytes: u64::MAX,
+            ..Default::default()
+        };
+        // Each thread consumes a random count from its own queue and acks
+        // a random prefix of that — decided up front so the oracle knows.
+        let plan: Vec<(usize, usize)> = (0..n_threads)
+            .map(|_| {
+                let consumed = rng.below(per as u64 + 1) as usize;
+                let acked = rng.below(consumed as u64 + 1) as usize;
+                (consumed, acked)
+            })
+            .collect();
+        {
+            let b = DurableBroker::open(&dir, opts.clone()).map_err(|e| e.to_string())?;
+            b.declare("shared").map_err(|e| e.to_string())?;
+            for t in 0..n_threads {
+                b.declare(&format!("own{t}")).map_err(|e| e.to_string())?;
+            }
+            let results: Vec<Result<(), String>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..n_threads)
+                    .map(|t| {
+                        let b = &b;
+                        let (consumed, acked) = plan[t];
+                        s.spawn(move || -> Result<(), String> {
+                            let own = format!("own{t}");
+                            for k in 0..per {
+                                let payload = [t as u8, k as u8];
+                                b.publish(&own, &payload).map_err(|e| e.to_string())?;
+                                b.publish("shared", &payload).map_err(|e| e.to_string())?;
+                            }
+                            let ds = b
+                                .consume_many(&own, consumed, wait)
+                                .map_err(|e| e.to_string())?;
+                            if ds.len() != consumed {
+                                return Err(format!(
+                                    "own{t}: consumed {} of {consumed}",
+                                    ds.len()
+                                ));
+                            }
+                            let tags: Vec<u64> =
+                                ds[..acked].iter().map(|d| d.tag).collect();
+                            b.ack_many(&own, &tags).map_err(|e| e.to_string())
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for r in results {
+                r?;
+            }
+        } // graceful drop checkpoints; the log keeps its interleaved order
+
+        let b = DurableBroker::open(&dir, opts).map_err(|e| e.to_string())?;
+        for (t, &(consumed, acked)) in plan.iter().enumerate() {
+            let own = format!("own{t}");
+            let ds = b.consume_many(&own, per + 1, wait).map_err(|e| e.to_string())?;
+            if ds.len() != per - acked {
+                return Err(format!(
+                    "own{t}: recovered {} messages, oracle says {}",
+                    ds.len(),
+                    per - acked
+                ));
+            }
+            for (j, d) in ds.iter().enumerate() {
+                let k = acked + j;
+                if d.payload != [t as u8, k as u8] {
+                    return Err(format!("own{t}: slot {j} holds {:?}", d.payload));
+                }
+                if d.redelivered != (k < consumed) {
+                    return Err(format!(
+                        "own{t} msg {k}: redelivered={} want {}",
+                        d.redelivered,
+                        k < consumed
+                    ));
+                }
+            }
+        }
+        // Shared queue: full multiset survives (nothing acked there), and
+        // each publisher's messages stay in its publish order.
+        let shared = b
+            .consume_many("shared", n_threads * per + 1, wait)
+            .map_err(|e| e.to_string())?;
+        if shared.len() != n_threads * per {
+            return Err(format!(
+                "shared: recovered {} of {}",
+                shared.len(),
+                n_threads * per
+            ));
+        }
+        let mut next_k = vec![0usize; n_threads];
+        for d in &shared {
+            let (t, k) = (d.payload[0] as usize, d.payload[1] as usize);
+            if t >= n_threads || k != next_k[t] {
+                return Err(format!(
+                    "shared order broken for publisher {t}: got {k}, want {}",
+                    next_k.get(t).copied().unwrap_or(0)
+                ));
+            }
+            next_k[t] += 1;
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_broker_conserves_messages() {
     // Random interleavings of publish/consume/ack/nack never lose or
     // duplicate a message: every published payload is eventually consumed
