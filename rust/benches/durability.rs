@@ -25,8 +25,11 @@ mod common;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use std::sync::Arc;
+
 use jsdoop::metrics::{write_bench_json, BenchRow};
 use jsdoop::queue::broker::Broker;
+use jsdoop::queue::durability::replication::{FollowerCore, ReplicaBroker};
 use jsdoop::queue::durability::{DurabilityOptions, DurableBroker, SyncPolicy};
 use jsdoop::queue::QueueApi;
 
@@ -284,6 +287,88 @@ fn main() {
             "every=64 8-thread throughput is only {got:.2}x single-thread (floor {min})"
         );
         println!("  -> every=64 scaling guard OK ({got:.2}x >= {min}x)");
+    }
+
+    println!("== D5: replication lag — follower vs publish storm ==");
+    // A follower (the same FollowerCore `--replicate-from` runs, driven
+    // in-process against the primary's repl API) mirrors while committers
+    // storm the log. Metrics: publish rate during the storm, how many
+    // bytes the mirror trailed the durable watermark when the storm
+    // ended (the replication-lag headline), and how long catch-up took.
+    {
+        let n = iters(5_000);
+        let pdir = tmpdir("d5-primary");
+        let fdir = tmpdir("d5-follower");
+        let primary = Arc::new(DurableBroker::open(&pdir, opts(SyncPolicy::EveryN(64))).unwrap());
+        primary.declare("q").unwrap();
+        let replica = Arc::new(ReplicaBroker::new());
+        let mut core =
+            FollowerCore::new(&fdir, "bench-primary", replica.clone(), 256 << 10).unwrap();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let storm = {
+            let primary = primary.clone();
+            let payload = payload.clone();
+            std::thread::spawn(move || {
+                let t0 = Instant::now();
+                for _ in 0..n {
+                    primary.publish("q", &payload).unwrap();
+                }
+                primary.checkpoint().unwrap(); // settle the fsync tail
+                t0.elapsed().as_secs_f64()
+            })
+        };
+        let puller = {
+            let primary = primary.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut src = primary.as_ref();
+                while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                    if core.step(&mut src).unwrap() == 0 {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                // Drain whatever the storm left behind and time it.
+                let t0 = Instant::now();
+                while core.step(&mut src).unwrap() > 0 {}
+                t0.elapsed().as_secs_f64()
+            })
+        };
+        let storm_secs = storm.join().unwrap();
+        let lag = replica.lag();
+        let behind = lag.bytes_behind_durable();
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        let catchup_secs = puller.join().unwrap();
+        let rate = n as f64 / storm_secs;
+        println!(
+            "  {rate:>10.0} journaled publishes/s during storm; mirror {behind} B behind \
+             durable at storm end; caught up in {:.2} ms ({} chunks, {} baselines)",
+            catchup_secs * 1e3,
+            replica.lag().chunks_applied,
+            replica.lag().baselines,
+        );
+        assert_eq!(replica.lag().bytes_behind_durable(), 0, "follower never caught up");
+        assert_eq!(replica.message_count(), n as usize, "mirror lost publishes");
+        rows.push(BenchRow {
+            op: "D5 replication publish rate during storm".into(),
+            iters: n,
+            ns_per_op: 1e9 / rate,
+            speedup: None,
+        });
+        rows.push(BenchRow {
+            op: "D5 replication lag at storm end (bytes behind durable)".into(),
+            iters: 1,
+            ns_per_op: behind as f64,
+            speedup: None,
+        });
+        rows.push(BenchRow {
+            op: "D5 replication catch-up after storm".into(),
+            iters: 1,
+            ns_per_op: catchup_secs * 1e9,
+            speedup: None,
+        });
+        drop(primary);
+        let _ = std::fs::remove_dir_all(&pdir);
+        let _ = std::fs::remove_dir_all(&fdir);
     }
 
     match write_bench_json("durability", &rows) {

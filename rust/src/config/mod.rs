@@ -46,6 +46,18 @@ pub struct Config {
     /// sync leader waits before fsyncing so more committers batch into
     /// the same sync. 0 (default) = sync immediately.
     pub wal_group_window_us: u64,
+    // Replication (queue/durability/replication).
+    /// Primary address to mirror: `jsdoop serve --replicate-from=ADDR`
+    /// runs as a READ-ONLY follower pulling the primary's WAL into
+    /// `durability_dir` (required). Mutating ops are rejected until the
+    /// mirror is promoted.
+    pub replicate_from: Option<String>,
+    /// Promote a follower's mirror directory: clears its replica marker
+    /// so `durability_dir` recovers and serves as a primary. Bare flag
+    /// form `--promote` works (it parses as `--promote=true`).
+    pub promote: bool,
+    /// Follower poll interval (ms) when caught up with the primary.
+    pub repl_poll_ms: u64,
     // Corpus
     pub corpus_file: Option<PathBuf>,
     pub corpus_seed: u64,
@@ -74,6 +86,9 @@ impl Default for Config {
             sync_policy: "every=64".to_string(),
             wal_compact_bytes: 64 << 20,
             wal_group_window_us: 0,
+            replicate_from: None,
+            promote: false,
+            repl_poll_ms: 50,
             corpus_file: None,
             corpus_seed: 1234,
             corpus_len: 200_000,
@@ -82,6 +97,9 @@ impl Default for Config {
         }
     }
 }
+
+/// Keys whose bare `--flag` CLI form means `--flag=true`.
+const BOOL_KEYS: &[&str] = &["promote"];
 
 impl Config {
     pub fn schedule(&self) -> Schedule {
@@ -118,6 +136,23 @@ impl Config {
             // length; beyond a second it is certainly a typo'd unit.
             bail!("wal_group_window_us must be <= 1000000 (1s)");
         }
+        if self.replicate_from.is_some() && self.durability_dir.is_none() {
+            bail!("--replicate_from needs --durability_dir (the follower mirrors into it)");
+        }
+        if self.replicate_from.is_some() && self.promote {
+            bail!(
+                "--promote and --replicate_from are mutually exclusive: stop the \
+                 follower, then restart with --promote only"
+            );
+        }
+        if self.promote && self.durability_dir.is_none() {
+            // Silently ignoring this would bring up an EMPTY in-memory
+            // broker on the failover port — the worst possible surprise.
+            bail!("--promote needs --durability_dir (the mirror to promote)");
+        }
+        if self.repl_poll_ms == 0 || self.repl_poll_ms > 60_000 {
+            bail!("repl_poll_ms must be in 1..=60000");
+        }
         Ok(())
     }
 
@@ -140,7 +175,19 @@ impl Config {
                     Some((k, v)) => {
                         pairs.insert(k.replace('-', "_"), v.to_string());
                     }
-                    None => bail!("flag '{a}' needs =value"),
+                    // Bare `--flag` means `--flag=true` — but ONLY for
+                    // boolean keys. For string keys the bare form would
+                    // silently store the literal "true" (`--replicate-from
+                    // 127.0.0.1:7333` with a space would follow host
+                    // "true" forever), so everything else stays the loud
+                    // error it always was.
+                    None => {
+                        let key = kv.replace('-', "_");
+                        if !BOOL_KEYS.contains(&key.as_str()) {
+                            bail!("flag '{a}' needs =value");
+                        }
+                        pairs.insert(key, "true".to_string());
+                    }
                 }
             } else {
                 rest.push(a.clone());
@@ -180,6 +227,9 @@ impl Config {
             "sync_policy" => self.sync_policy = val.to_string(),
             "wal_compact_bytes" => self.wal_compact_bytes = p(key, val)?,
             "wal_group_window_us" => self.wal_group_window_us = p(key, val)?,
+            "replicate_from" => self.replicate_from = Some(val.to_string()),
+            "promote" => self.promote = p(key, val)?,
+            "repl_poll_ms" => self.repl_poll_ms = p(key, val)?,
             "corpus_file" => self.corpus_file = Some(PathBuf::from(val)),
             "corpus_seed" => self.corpus_seed = p(key, val)?,
             "corpus_len" => self.corpus_len = p(key, val)?,
@@ -252,6 +302,42 @@ mod tests {
         let mut c2 = Config::default();
         c2.learning_rate = -1.0;
         assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn replication_keys_parse_and_validate() {
+        let mut c = Config::default();
+        c.apply_cli(&[
+            "--durability_dir=/tmp/mirror".into(),
+            "--replicate-from=127.0.0.1:7333".into(),
+            "--repl_poll_ms=20".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.replicate_from.as_deref(), Some("127.0.0.1:7333"));
+        assert_eq!(c.repl_poll_ms, 20);
+        c.validate().unwrap();
+        // A follower needs somewhere to mirror into.
+        c.durability_dir = None;
+        assert!(c.validate().is_err());
+        c.durability_dir = Some(PathBuf::from("/tmp/mirror"));
+        // Promote-while-following is contradictory.
+        c.apply_cli(&["--promote".into()]).unwrap(); // bare flag = true
+        assert!(c.promote);
+        assert!(c.validate().is_err());
+        c.replicate_from = None;
+        c.validate().unwrap();
+        // Promoting nothing must be an error, not an empty broker.
+        c.durability_dir = None;
+        assert!(c.validate().is_err());
+        c.durability_dir = Some(PathBuf::from("/tmp/mirror"));
+        c.repl_poll_ms = 0;
+        assert!(c.validate().is_err());
+        // Bare non-boolean flags still fail loudly — a space instead of
+        // `=` must never silently store the literal "true".
+        let mut c2 = Config::default();
+        assert!(c2.apply_cli(&["--workers".into()]).is_err());
+        assert!(c2.apply_cli(&["--replicate-from".into()]).is_err());
+        assert!(c2.apply_cli(&["--durability_dir".into()]).is_err());
     }
 
     #[test]

@@ -15,7 +15,7 @@ use std::collections::HashMap;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Versioned value: plain KV entries have version 0; `put_versioned`
 /// stores (version, bytes) and only moves forward.
@@ -53,11 +53,31 @@ struct StoreState {
 pub struct Store {
     state: Mutex<StoreState>,
     changed: Condvar,
+    /// Reject every mutation (replica mode: a follower's DataServer must
+    /// not silently accept writes that diverge from the primary).
+    read_only: bool,
 }
 
 impl Store {
     pub fn new() -> Self {
         Store::default()
+    }
+
+    /// A store that refuses all mutations — hosted by a replication
+    /// follower so a misdirected client gets an error, not silent
+    /// divergence from the primary.
+    pub fn read_only() -> Self {
+        Store { read_only: true, ..Store::default() }
+    }
+
+    fn check_writable(&self, op: &str) -> Result<()> {
+        if self.read_only {
+            bail!(
+                "data store is read-only: {op} rejected (this server mirrors \
+                 a primary; promote it to serve writes)"
+            );
+        }
+        Ok(())
     }
 
     /// Number of keys (admin).
@@ -68,6 +88,7 @@ impl Store {
 
 impl DataApi for Store {
     fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.check_writable("put")?;
         let mut st = self.state.lock().unwrap();
         st.kv.insert(key.to_string(), Versioned { version: 0, bytes: bytes.to_vec() });
         drop(st);
@@ -81,11 +102,13 @@ impl DataApi for Store {
     }
 
     fn del(&self, key: &str) -> Result<bool> {
+        self.check_writable("del")?;
         let mut st = self.state.lock().unwrap();
         Ok(st.kv.remove(key).is_some())
     }
 
     fn put_versioned(&self, key: &str, version: u64, bytes: &[u8]) -> Result<()> {
+        self.check_writable("put_versioned")?;
         let mut st = self.state.lock().unwrap();
         let advance = match st.kv.get(key) {
             Some(v) => version > v.version,
@@ -128,6 +151,7 @@ impl DataApi for Store {
     }
 
     fn incr(&self, key: &str) -> Result<u64> {
+        self.check_writable("incr")?;
         let mut st = self.state.lock().unwrap();
         let c = st.counters.entry(key.to_string()).or_insert(0);
         *c += 1;
@@ -187,6 +211,22 @@ mod tests {
         s.put_versioned("m", 1, b"ready").unwrap();
         let v = h.join().unwrap();
         assert_eq!(v.bytes, b"ready");
+    }
+
+    #[test]
+    fn read_only_store_rejects_mutations_serves_reads() {
+        let s = Store::read_only();
+        assert!(s.put("k", b"v").is_err());
+        assert!(s.del("k").is_err());
+        assert!(s.put_versioned("m", 1, b"v").is_err());
+        assert!(s.incr("c").is_err());
+        // Reads stay functional (and honest: nothing was written).
+        assert_eq!(s.get("k").unwrap(), None);
+        assert_eq!(s.get_versioned("m").unwrap(), None);
+        assert!(s
+            .wait_version("m", 1, Duration::from_millis(5))
+            .unwrap()
+            .is_none());
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //!                                 host QueueServer + DataServer over TCP;
 //!                                 with a durability dir the broker recovers
 //!                                 its queues from WAL + snapshot on restart
+//!   serve [addr] --durability_dir=D --replicate-from=PRIMARY [--repl_poll_ms=MS]
+//!                                 follow a primary: mirror its WAL into D and
+//!                                 serve READ-ONLY (Stats/Len) while it lives
+//!   serve [addr] --durability_dir=D --promote
+//!                                 promote a follower's mirror: clear its
+//!                                 replica marker, recover, serve as primary
 //!   init [--queue-addr --data-addr]  publish the problem to remote servers
 //!   volunteer [--queue-addr --data-addr --id=N]  remote volunteer process
 //!   generate [--model=path --chars=N --seed-text=...]  text-gen demo
@@ -32,6 +38,7 @@ use jsdoop::faults::FaultPlan;
 use jsdoop::metrics::{render_table4, RunResult};
 use jsdoop::queue::broker::Broker;
 use jsdoop::queue::client::{RemoteData, RemoteQueue};
+use jsdoop::queue::durability::replication;
 use jsdoop::queue::durability::{DurabilityOptions, DurableBroker};
 use jsdoop::runtime::Engine;
 use jsdoop::textdata::id_to_char;
@@ -192,7 +199,76 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
         .or_else(|| cfg.queue_addr.clone())
         .unwrap_or_else(|| "127.0.0.1:7333".to_string());
     let visibility = Duration::from_secs_f64(cfg.visibility_timeout_secs);
+
+    // --- follower mode: mirror a primary, serve read-only. ---------------
+    if let Some(primary) = &cfg.replicate_from {
+        let dir = cfg.durability_dir.as_ref().expect("validate() checked");
+        let follower = replication::start_follower(
+            dir,
+            primary,
+            replication::FollowerOptions {
+                poll: Duration::from_millis(cfg.repl_poll_ms),
+                ..Default::default()
+            },
+        )?;
+        // The DataServer side is read-only too: a misdirected client must
+        // get an error, not writes that silently diverge from the primary
+        // (the data store is not replicated in v0).
+        let store = Arc::new(jsdoop::data::Store::read_only());
+        let handle = jsdoop::queue::server::serve(&addr, follower.broker.clone(), store)?;
+        println!("replica: following {primary}, mirroring into {dir:?}");
+        println!("QueueServer+DataServer listening on {}", handle.addr);
+        println!(
+            "(read-only until promoted: stop it, then `jsdoop serve --durability_dir={} --promote`)",
+            dir.display()
+        );
+        while !handle.stopped() {
+            std::thread::sleep(Duration::from_millis(200));
+        }
+        handle.shutdown();
+        follower.stop(); // join the pull loop; the mirror stays promotable
+        return Ok(());
+    }
+
+    // --- primary / standalone mode. ---------------------------------------
     let store = Arc::new(jsdoop::data::Store::new());
+    if let Some(dir) = &cfg.durability_dir {
+        if cfg.promote {
+            let has_history =
+                dir.join("snapshot.bin").exists() || dir.join("wal.log").exists();
+            if replication::is_replica_dir(dir) {
+                if !has_history {
+                    // Marker but no baseline: the follower never reached
+                    // its primary (typo'd --replicate-from address, say).
+                    // There is NOTHING mirrored to promote.
+                    bail!(
+                        "--promote: {dir:?} is a replica mirror that never received a \
+                         baseline from its primary — promoting it would serve an empty \
+                         broker (check the --replicate-from address it was following)"
+                    );
+                }
+                replication::promote_dir(dir)?;
+                println!("promoted: {dir:?} is no longer a replica mirror");
+            } else if has_history {
+                // Marker already cleared by an earlier --promote: serving
+                // the promoted history again is the restart case.
+                println!("note: {dir:?} was already promoted; serving its history");
+            } else {
+                // A typo'd path would otherwise be CREATED as a fresh
+                // empty broker on the failover port — the silent-failure
+                // class validate() already closes for a missing dir flag.
+                bail!(
+                    "--promote: {dir:?} holds neither a replica mirror nor a \
+                     durability history — check the path"
+                );
+            }
+        } else {
+            // A mirror must not serve writes while it still follows a
+            // primary — that forks history. --promote is the explicit
+            // operator decision that the primary is gone.
+            replication::guard_not_replica(dir)?;
+        }
+    }
     let mut durable: Option<Arc<DurableBroker>> = None;
     let handle = match &cfg.durability_dir {
         Some(dir) => {

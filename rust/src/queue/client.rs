@@ -11,9 +11,11 @@ use std::net::TcpStream;
 use std::sync::Mutex;
 use std::time::Duration;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::{DataApi, Versioned};
+use crate::queue::durability::replication::ReplSource;
+use crate::queue::durability::ReplStatus;
 use crate::queue::server::{body_with_name, roundtrip};
 use crate::queue::wire::{put_bytes, put_u32, BodyReader, Op, ST_NONE, ST_OK};
 use crate::queue::{Delivery, QueueApi, QueueStats};
@@ -21,28 +23,78 @@ use crate::queue::{Delivery, QueueApi, QueueStats};
 /// Extra slack on the socket read deadline beyond protocol-level timeouts.
 const SOCKET_SLACK: Duration = Duration::from_secs(30);
 
+/// One request/response connection. The protocol is strictly
+/// synchronous, which makes a HALF-CONSUMED response fatal: after a read
+/// timeout or partial read, the rest of the old response is still in the
+/// socket, and the next call would misparse those stale bytes as ITS
+/// response — silently returning another call's data. So any transport
+/// error POISONS the stream (drops it on the spot); the next call
+/// reconnects and starts from a clean frame boundary. The in-flight
+/// operation itself is still reported failed to its caller — redelivery
+/// semantics (visibility timeout) cover whatever it had in flight.
 struct Conn {
-    stream: Mutex<TcpStream>,
+    addr: String,
+    slack: Duration,
+    /// `None` between a transport error and the next (re)connect.
+    stream: Mutex<Option<TcpStream>>,
 }
 
 impl Conn {
     fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr)?;
+        Self::connect_with_slack(addr, SOCKET_SLACK)
+    }
+
+    /// `slack` is the socket read deadline added on top of protocol-level
+    /// timeouts (tests tighten it to exercise the timeout paths quickly).
+    fn connect_with_slack(addr: &str, slack: Duration) -> Result<Self> {
+        let conn = Conn {
+            addr: addr.to_string(),
+            slack,
+            stream: Mutex::new(None),
+        };
+        // Connect eagerly so an unreachable server fails at construction,
+        // like it always did.
+        *conn.stream.lock().unwrap() = Some(conn.open()?);
+        Ok(conn)
+    }
+
+    fn open(&self) -> Result<TcpStream> {
+        let stream = TcpStream::connect(&self.addr)?;
         stream.set_nodelay(true)?;
-        stream.set_read_timeout(Some(SOCKET_SLACK))?;
-        Ok(Conn { stream: Mutex::new(stream) })
+        stream.set_read_timeout(Some(self.slack))?;
+        Ok(stream)
     }
 
     fn call(&self, op: Op, body: &[u8], wait: Option<Duration>) -> Result<(u8, Vec<u8>)> {
-        let mut s = self.stream.lock().unwrap();
-        if let Some(w) = wait {
-            s.set_read_timeout(Some(w + SOCKET_SLACK))?;
+        let mut guard = self.stream.lock().unwrap();
+        if guard.is_none() {
+            // Poisoned by an earlier mid-frame failure: reconnect rather
+            // than read stale bytes as this call's response.
+            *guard = Some(self.open().with_context(|| {
+                format!("reconnecting to {} after a poisoned connection", self.addr)
+            })?);
         }
-        let out = roundtrip(&mut s, op, body);
-        if wait.is_some() {
-            s.set_read_timeout(Some(SOCKET_SLACK))?;
+        let s = guard.as_mut().expect("connected above");
+        let run = |s: &mut TcpStream| -> Result<(u8, Vec<u8>)> {
+            if let Some(w) = wait {
+                s.set_read_timeout(Some(w + self.slack))?;
+            }
+            let out = roundtrip(s, op, body);
+            if wait.is_some() && out.is_ok() {
+                s.set_read_timeout(Some(self.slack))?;
+            }
+            out
+        };
+        match run(s) {
+            Ok(resp) => Ok(resp),
+            Err(e) => {
+                // The stream may hold a partial frame; never reuse it.
+                *guard = None;
+                Err(e.context(format!(
+                    "transport error on {op:?} (connection poisoned; next call reconnects)"
+                )))
+            }
         }
-        out
     }
 
     fn expect_ok(&self, op: Op, body: &[u8]) -> Result<Vec<u8>> {
@@ -62,6 +114,12 @@ pub struct RemoteQueue {
 impl RemoteQueue {
     pub fn connect(addr: &str) -> Result<Self> {
         Ok(RemoteQueue { conn: Conn::connect(addr)? })
+    }
+
+    /// Connect with an explicit socket-read slack (tests use a tight one
+    /// to exercise the timeout/poison/reconnect path in milliseconds).
+    pub fn connect_with_slack(addr: &str, slack: Duration) -> Result<Self> {
+        Ok(RemoteQueue { conn: Conn::connect_with_slack(addr, slack)? })
     }
 
     pub fn ping(&self) -> Result<()> {
@@ -237,6 +295,11 @@ impl RemoteData {
     pub fn connect(addr: &str) -> Result<Self> {
         Ok(RemoteData { conn: Conn::connect(addr)? })
     }
+
+    /// See [`RemoteQueue::connect_with_slack`].
+    pub fn connect_with_slack(addr: &str, slack: Duration) -> Result<Self> {
+        Ok(RemoteData { conn: Conn::connect_with_slack(addr, slack)? })
+    }
 }
 
 impl DataApi for RemoteData {
@@ -310,5 +373,57 @@ impl DataApi for RemoteData {
         let resp = self.conn.expect_ok(Op::Incr, &body_with_name(key, &[]))?;
         let mut r = BodyReader::new(&resp);
         r.u64()
+    }
+}
+
+/// Replication client: a follower's view of a primary QueueServer
+/// (`ReplHandshake` / `ReplSnapshot` / `ReplPull` — see
+/// `queue/durability/replication`). Rides the same poisoning [`Conn`] as
+/// the other clients, so a half-shipped chunk can never be misparsed as
+/// the next one.
+pub struct ReplicaClient {
+    conn: Conn,
+}
+
+impl ReplicaClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        Ok(ReplicaClient { conn: Conn::connect(addr)? })
+    }
+
+    pub fn connect_with_slack(addr: &str, slack: Duration) -> Result<Self> {
+        Ok(ReplicaClient { conn: Conn::connect_with_slack(addr, slack)? })
+    }
+
+    fn decode_status(r: &mut BodyReader<'_>) -> Result<ReplStatus> {
+        Ok(ReplStatus {
+            gen: r.u64()?,
+            durable_bytes: r.u64()?,
+            appended_bytes: r.u64()?,
+        })
+    }
+}
+
+impl ReplSource for ReplicaClient {
+    fn handshake(&mut self) -> Result<ReplStatus> {
+        let resp = self.conn.expect_ok(Op::ReplHandshake, &[])?;
+        Self::decode_status(&mut BodyReader::new(&resp))
+    }
+
+    fn fetch_snapshot(&mut self) -> Result<(u64, Vec<u8>)> {
+        let resp = self.conn.expect_ok(Op::ReplSnapshot, &[])?;
+        let mut r = BodyReader::new(&resp);
+        let gen = r.u64()?;
+        Ok((gen, r.rest().to_vec()))
+    }
+
+    fn pull(&mut self, gen: u64, from: u64, max: usize) -> Result<(ReplStatus, Vec<u8>)> {
+        let mut body = Vec::with_capacity(20);
+        body.extend_from_slice(&gen.to_le_bytes());
+        body.extend_from_slice(&from.to_le_bytes());
+        put_u32(&mut body, max.min(u32::MAX as usize) as u32);
+        let resp = self.conn.expect_ok(Op::ReplPull, &body)?;
+        let mut r = BodyReader::new(&resp);
+        let status = Self::decode_status(&mut r)?;
+        Ok((status, r.rest().to_vec()))
     }
 }

@@ -67,9 +67,11 @@
 //! identifies messages by id. `benches/durability.rs` D1/D4 measure the
 //! append path and the group-commit scaling.
 
+pub mod replication;
 pub mod wal;
 
 use std::collections::{BTreeMap, HashMap, HashSet};
+use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::Duration;
@@ -77,7 +79,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use self::wal::{read_wal, Record, WalWriter};
-use super::broker::{decode_snapshot, Broker, MsgId};
+use super::broker::{decode_snapshot, Broker, MsgId, SnapshotContents};
 use super::{Delivery, QueueApi, QueueService, QueueStats, DEFAULT_PRIORITY};
 
 /// When WAL records reach the disk.
@@ -161,6 +163,172 @@ impl Default for DurabilityOptions {
 /// the message was published/snapshotted under).
 type RecoveredQueues = BTreeMap<String, BTreeMap<MsgId, (Vec<u8>, bool, u64)>>;
 
+/// Incremental, append-order-independent replay of snapshot + WAL
+/// records. This is the recovery engine behind [`DurableBroker::open`]
+/// AND the apply engine a replication follower runs record stream
+/// chunks through ([`replication`]): because the sets it keeps (`acked`,
+/// `redelivered`, per-queue purge epochs) are persistent across `apply`
+/// calls, feeding it records one chunk at a time reaches exactly the
+/// state the old two-pass whole-log replay did — an `Acked` landing in
+/// an earlier chunk than its `Publish` (cross-thread append inversion)
+/// still suppresses the message, a `Purge` still drops exactly the
+/// publishes applied under older epochs, and re-applying a record whose
+/// effect is already present is a no-op (ids are never reused).
+pub(crate) struct ReplayState {
+    queues: RecoveredQueues,
+    /// Ids ever acked: a publish record for one of these never revives.
+    acked: HashSet<MsgId>,
+    /// Ids ever delivered/nacked: survivors redeliver flagged.
+    redelivered: HashSet<MsgId>,
+    /// Purge high-water mark per queue; publishes applied under an older
+    /// epoch are covered by the purge regardless of append order.
+    purge_epochs: HashMap<String, u64>,
+    /// Segment-local qid -> name table (a Declare always precedes its
+    /// qid's first use; both frames are written under one mutex hold).
+    names: HashMap<u32, String>,
+    max_seq: u64,
+}
+
+impl ReplayState {
+    pub(crate) fn new() -> Self {
+        ReplayState {
+            queues: BTreeMap::new(),
+            acked: HashSet::new(),
+            redelivered: HashSet::new(),
+            purge_epochs: HashMap::new(),
+            names: HashMap::new(),
+            max_seq: 0,
+        }
+    }
+
+    /// Seed from a decoded snapshot base. The queue's snapshot epoch also
+    /// seeds its PURGE high-water mark: apply and append are not atomic,
+    /// so a publish applied (and purged, and snapshotted away) before a
+    /// compaction can land its record in the post-compaction segment —
+    /// without the seeded epoch, replay would resurrect it. (The purge's
+    /// own record may sit only in the compacted-away segment, so the
+    /// snapshot header is the one place this fact survives.)
+    pub(crate) fn seed_snapshot(&mut self, snap: SnapshotContents) {
+        self.max_seq = self.max_seq.max(snap.next_seq.unwrap_or(1).saturating_sub(1));
+        for (name, epoch, msgs) in snap.queues {
+            let e = self.purge_epochs.entry(name.clone()).or_insert(0);
+            *e = (*e).max(epoch);
+            let q = self.queues.entry(name).or_default();
+            for m in msgs {
+                self.max_seq = self.max_seq.max(m.seq);
+                q.insert((m.priority, m.seq), (m.payload, m.redelivered, epoch));
+            }
+        }
+    }
+
+    fn queue_of(&self, qid: u32) -> Result<String> {
+        match self.names.get(&qid) {
+            Some(n) => Ok(n.clone()),
+            None => bail!("WAL references undeclared queue id {qid}"),
+        }
+    }
+
+    fn insert(&mut self, name: String, id: MsgId, payload: Vec<u8>, epoch: u64) {
+        if self.acked.contains(&id) {
+            return; // settled somewhere in the stream; never revives
+        }
+        if epoch < self.purge_epochs.get(&name).copied().unwrap_or(0) {
+            return; // applied before a purge that covered it
+        }
+        let redelivered = self.redelivered.contains(&id);
+        self.queues.entry(name).or_default().insert(id, (payload, redelivered, epoch));
+    }
+
+    /// Apply one record. Records may arrive in a different order than
+    /// their effects were applied to the live broker — see the type docs.
+    pub(crate) fn apply(&mut self, rec: &Record) -> Result<()> {
+        match rec {
+            Record::Declare { qid, name } => {
+                self.names.insert(*qid, name.clone());
+                self.queues.entry(name.clone()).or_default();
+            }
+            Record::Publish { qid, priority, seq, epoch, payload } => {
+                self.max_seq = self.max_seq.max(*seq);
+                let name = self.queue_of(*qid)?;
+                self.insert(name, (*priority, *seq), payload.clone(), *epoch);
+            }
+            Record::PublishMany { qid, priority, first_seq, epoch, payloads } => {
+                self.max_seq = self.max_seq.max(first_seq + payloads.len() as u64);
+                let name = self.queue_of(*qid)?;
+                for (k, payload) in payloads.iter().enumerate() {
+                    let id = (*priority, first_seq + k as u64);
+                    self.insert(name.clone(), id, payload.clone(), *epoch);
+                }
+            }
+            Record::Delivered { qid, ids } | Record::Nacked { qid, ids } => {
+                let name = self.queue_of(*qid)?;
+                let q = self.queues.entry(name).or_default();
+                for id in ids {
+                    self.max_seq = self.max_seq.max(id.1);
+                    self.redelivered.insert(*id);
+                    if let Some(entry) = q.get_mut(id) {
+                        entry.1 = true;
+                    }
+                }
+            }
+            Record::Acked { qid, ids } => {
+                let name = self.queue_of(*qid)?;
+                let q = self.queues.entry(name).or_default();
+                for id in ids {
+                    self.max_seq = self.max_seq.max(id.1);
+                    self.acked.insert(*id);
+                    q.remove(id);
+                }
+            }
+            Record::Purge { qid, epoch } => {
+                let name = self.queue_of(*qid)?;
+                let e = self.purge_epochs.entry(name.clone()).or_insert(0);
+                *e = (*e).max(*epoch);
+                let cut = *e;
+                if let Some(q) = self.queues.get_mut(&name) {
+                    q.retain(|_, (_, _, ep)| *ep >= cut);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Surviving messages across all queues.
+    pub(crate) fn message_count(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Surviving messages in one queue; `None` if it was never declared.
+    pub(crate) fn queue_len(&self, queue: &str) -> Option<usize> {
+        self.queues.get(queue).map(|q| q.len())
+    }
+
+    pub(crate) fn queue_names(&self) -> Vec<String> {
+        self.queues.keys().cloned().collect()
+    }
+
+    /// Materialize a live broker from the replayed state (recovery /
+    /// follower promotion): every survivor at its original id, the seq
+    /// counter bumped past everything ever issued.
+    pub(crate) fn into_broker(
+        self,
+        visibility_timeout: Duration,
+    ) -> Result<(Broker, usize, usize)> {
+        let inner = Broker::new(visibility_timeout);
+        let mut messages = 0usize;
+        let queues = self.queues.len();
+        for (name, msgs) in self.queues {
+            inner.declare(&name)?;
+            for ((priority, seq), (payload, redelivered, _epoch)) in msgs {
+                inner.insert_raw(&name, payload, priority, seq, redelivered)?;
+                messages += 1;
+            }
+        }
+        inner.ensure_seq_above(self.max_seq);
+        Ok((inner, messages, queues))
+    }
+}
+
 /// Mutable log state behind [`DurableBroker`]'s WAL mutex. The critical
 /// section is append-only; fsync runs outside it via an elected leader
 /// (see the module docs' group-commit protocol).
@@ -173,6 +341,19 @@ struct WalInner {
     /// Records covered by a completed fsync or by snapshot compaction.
     /// Invariant: `durable <= appended`.
     durable: u64,
+    /// SEGMENT BYTES covered by a completed fsync or by compaction — the
+    /// byte-level twin of `durable`, tracked because replication ships
+    /// byte ranges, not record counts. Advances only past complete
+    /// frames (appends flush whole records under this mutex before the
+    /// watermarks move), so `[shipped, durable_bytes)` always decodes
+    /// cleanly on the follower. Resets with each segment.
+    durable_bytes: u64,
+    /// Segment generation: which `wal.log` incarnation byte offsets refer
+    /// to. Seeded from the wall clock at open and bumped by every
+    /// rotation, so a follower can detect both compaction and a primary
+    /// restart as "your offset is for a segment that no longer exists"
+    /// and re-baseline from the snapshot.
+    gen: u64,
     /// True while an elected leader fsyncs outside this mutex. At most
     /// one leader at a time; compaction excludes itself against it.
     syncing: bool,
@@ -219,60 +400,54 @@ impl DurableBroker {
         let snap_path = dir.join("snapshot.bin");
         let wal_path = dir.join("wal.log");
 
-        // --- recover: snapshot base ... -----------------------------------
-        let mut state: RecoveredQueues = BTreeMap::new();
-        let mut max_seq = 0u64;
+        // --- recover: snapshot base + log tail, through ReplayState. ------
+        // The snapshot header's seq high-water mark covers ids with NO
+        // surviving trace — acked then compacted away. Without it, a
+        // crash after compacting drained queues (the common shape between
+        // training epochs) would re-issue already-acked ids and break
+        // replay idempotency. Legacy v0 snapshots lack it; surviving seqs
+        // + log records are then the only source.
+        let mut rs = ReplayState::new();
         if snap_path.exists() {
             let bytes = std::fs::read(&snap_path)
                 .with_context(|| format!("reading {snap_path:?}"))?;
-            let snap = decode_snapshot(&bytes).context("decoding snapshot.bin")?;
-            // The header's high-water mark covers ids with NO surviving
-            // trace — acked then compacted away. Without it, a crash
-            // after compacting drained queues (the common shape between
-            // training epochs) would re-issue already-acked ids and
-            // break replay idempotency. Legacy v0 snapshots lack it;
-            // surviving seqs + log records are then the only source.
-            max_seq = snap.next_seq.unwrap_or(1).saturating_sub(1);
-            for (name, epoch, msgs) in snap.queues {
-                let q = state.entry(name).or_default();
-                for m in msgs {
-                    max_seq = max_seq.max(m.seq);
-                    q.insert((m.priority, m.seq), (m.payload, m.redelivered, epoch));
-                }
-            }
+            rs.seed_snapshot(decode_snapshot(&bytes).context("decoding snapshot.bin")?);
         }
-
-        // --- ... plus the log tail. ---------------------------------------
         if wal_path.exists() {
             let bytes =
                 std::fs::read(&wal_path).with_context(|| format!("reading {wal_path:?}"))?;
             let (records, _clean_prefix) = read_wal(&bytes);
-            replay(&mut state, &mut max_seq, &records)?;
+            for rec in &records {
+                rs.apply(rec)?;
+            }
         }
 
         // --- build the broker. --------------------------------------------
-        let inner = Broker::new(opts.visibility_timeout);
-        let mut recovered_messages = 0usize;
-        let recovered_queues = state.len();
-        for (name, msgs) in state {
-            inner.declare(&name)?;
-            for ((priority, seq), (payload, redelivered, _epoch)) in msgs {
-                inner.insert_raw(&name, payload, priority, seq, redelivered)?;
-                recovered_messages += 1;
-            }
-        }
-        inner.ensure_seq_above(max_seq);
+        let (inner, recovered_messages, recovered_queues) =
+            rs.into_broker(opts.visibility_timeout)?;
 
         // --- compact: fresh snapshot, fresh segment. ----------------------
         write_snapshot(&dir, &inner)?;
         let writer = fresh_segment(&wal_path, &inner.queue_names())?;
 
+        // Wall-clock generation seed: a restarted primary must not hand a
+        // follower the same (gen, offset) space its previous incarnation
+        // used, or the follower would splice two unrelated segments.
+        let gen = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(1);
+        let preamble_bytes = writer.bytes_written;
         Ok(DurableBroker {
             inner,
             wal: Mutex::new(WalInner {
                 writer,
                 appended: 0,
                 durable: 0,
+                // fresh_segment fsyncs the preamble, so it is durable (and
+                // shippable) from byte zero.
+                durable_bytes: preamble_bytes,
+                gen,
                 syncing: false,
                 waiters: 0,
                 syncs: 0,
@@ -410,6 +585,11 @@ impl DurableBroker {
         // doomed segment may have dropped is re-persisted from the
         // in-memory broker through a brand-new snapshot + descriptor.
         w.durable = w.appended;
+        // New segment, new byte space: followers pulling against the old
+        // generation see the bump and re-baseline from the snapshot just
+        // written (which covers everything the old segment held).
+        w.gen = w.gen.wrapping_add(1);
+        w.durable_bytes = w.writer.bytes_written; // fsynced preamble
         w.poisoned = false;
         self.synced.notify_all();
         Ok(())
@@ -455,6 +635,7 @@ impl DurableBroker {
             w = self.wal.lock().unwrap();
         }
         let cover = w.appended;
+        let cover_bytes = w.writer.bytes_written;
         // Every appended record is already flushed to the OS (the append
         // path flushes per record), so syncing the dup'd descriptor
         // without the lock covers all of them.
@@ -473,6 +654,7 @@ impl DurableBroker {
         self.synced.notify_all();
         sync_res.context("fsyncing WAL segment")?;
         w.durable = w.durable.max(cover);
+        w.durable_bytes = w.durable_bytes.max(cover_bytes);
         w.syncs += 1;
         Ok(w)
     }
@@ -555,6 +737,7 @@ impl QueueApi for DurableBroker {
         if !self.journaling() {
             return self.inner.publish_pri(queue, payload, priority);
         }
+        check_journalable(payload.len())?;
         let (seq, epoch) = self.inner.publish_seq(queue, payload, priority)?;
         self.log(|w| w.publish(queue, priority, seq, epoch, payload))
     }
@@ -617,8 +800,31 @@ impl QueueApi for DurableBroker {
         if !self.journaling() {
             return self.inner.publish_many(queue, payloads);
         }
+        for p in payloads {
+            check_journalable(p.len())?; // reject BEFORE any state changes
+        }
         let (first_seq, epoch) = self.inner.publish_many_seq(queue, payloads)?;
-        self.log(|w| w.publish_many(queue, DEFAULT_PRIORITY, first_seq, epoch, payloads))
+        // Journal in record-sized chunks over adjacent seq ranges: replay
+        // rebuilds the identical batch (seqs are what order it), and no
+        // single record can outgrow the recovery or replication frames.
+        let mut start = 0usize;
+        while start < payloads.len() {
+            let mut end = start;
+            let mut bytes = 0usize;
+            while end < payloads.len() {
+                let item = payloads[end].len() + 4;
+                if end > start && bytes + item > MAX_PUBLISH_MANY_RECORD {
+                    break;
+                }
+                bytes += item;
+                end += 1;
+            }
+            let chunk = &payloads[start..end];
+            let seq = first_seq + start as u64;
+            self.log(|w| w.publish_many(queue, DEFAULT_PRIORITY, seq, epoch, chunk))?;
+            start = end;
+        }
+        Ok(())
     }
 
     fn consume_many(&self, queue: &str, max: usize, timeout: Duration) -> Result<Vec<Delivery>> {
@@ -670,110 +876,188 @@ impl QueueService for DurableBroker {
         // recovery uses to set their redelivered flag.
         self.inner.sweep();
     }
+
+    fn replication(&self) -> Option<&DurableBroker> {
+        Some(self)
+    }
 }
 
-/// Apply a WAL record stream on top of (possibly snapshot-seeded) state.
-///
-/// Replay is independent of cross-thread append ordering — records can
-/// land in the log in a different order than their effects were applied
-/// to the broker (appends happen after the queue lock is released):
-///
-/// - ids are globally unique, so "was ever acked" / "was ever delivered"
-///   are position-independent sets (pass 1);
-/// - purges are resolved by PURGE EPOCH, not log position: a publish is
-///   kept only if the epoch it was applied under is >= every purge epoch
-///   recorded for its queue, which reconstructs apply order exactly even
-///   when a racing purge/publish pair hit the log inverted.
-fn replay(state: &mut RecoveredQueues, max_seq: &mut u64, records: &[Record]) -> Result<()> {
-    // Pass 1: position-independent facts (+ the qid -> name table; a
-    // Declare always precedes its qid's first use, both frames being
-    // written under one WAL-mutex hold).
-    let mut acked: HashSet<MsgId> = HashSet::new();
-    let mut redelivered: HashSet<MsgId> = HashSet::new();
-    let mut purge_epochs: HashMap<String, u64> = HashMap::new();
-    let mut names: HashMap<u32, String> = HashMap::new();
-    let queue_of = |names: &HashMap<u32, String>, qid: u32| -> Result<String> {
-        match names.get(&qid) {
-            Some(n) => Ok(n.clone()),
-            None => bail!("WAL references undeclared queue id {qid}"),
+/// The primary's replication watermarks at one instant: which segment
+/// generation byte offsets refer to, how many of its bytes are durable
+/// (fsync-covered — the only bytes that ship), and how many exist at all
+/// (the follower's lag denominator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplStatus {
+    pub gen: u64,
+    pub durable_bytes: u64,
+    pub appended_bytes: u64,
+}
+
+/// Largest chunk one `repl_read` returns, whatever the caller asks for —
+/// bounds the response frame and the per-pull memory, and keeps the
+/// optimistic out-of-mutex file read short enough that a racing rotation
+/// (detected by the generation re-check) wastes little work.
+pub const REPL_MAX_CHUNK: usize = 1 << 20;
+
+/// Largest payload a JOURNALED publish accepts. A payload within a few
+/// hundred bytes of [`crate::queue::wire::MAX_FRAME`] would produce a
+/// WAL record that (a) exceeds [`wal::MAX_RECORD`], silently ending the
+/// recovery replay prefix at it, and (b) can never fit a replication
+/// response frame, wedging every follower on it until compaction.
+/// Rejecting at publish time turns both into a loud client error; the
+/// margin also covers record framing + per-payload overhead. Durability
+/// off ([`SyncPolicy::Never`]) journals nothing and keeps the plain
+/// broker's limits.
+pub const MAX_JOURNALED_PAYLOAD: usize = crate::queue::wire::MAX_FRAME - 4096;
+
+/// Split cap for one `PublishMany` WAL record: big batches journal as
+/// several records over adjacent seq ranges (replay is identical), so a
+/// batch near the wire frame cap never creates an unshippable record.
+const MAX_PUBLISH_MANY_RECORD: usize = 8 << 20;
+
+impl DurableBroker {
+    fn repl_inner(&self) -> Result<MutexGuard<'_, WalInner>> {
+        if !self.journaling() {
+            bail!("replication requires a journaling sync policy (sync_policy is 'never')");
         }
-    };
-    for rec in records {
-        match rec {
-            Record::Declare { qid, name } => {
-                names.insert(*qid, name.clone());
-            }
-            Record::Acked { ids, .. } => {
-                for id in ids {
-                    *max_seq = (*max_seq).max(id.1);
-                    acked.insert(*id);
-                }
-            }
-            Record::Delivered { ids, .. } | Record::Nacked { ids, .. } => {
-                for id in ids {
-                    *max_seq = (*max_seq).max(id.1);
-                    redelivered.insert(*id);
-                }
-            }
-            Record::Publish { seq, .. } => *max_seq = (*max_seq).max(*seq),
-            Record::PublishMany { first_seq, payloads, .. } => {
-                *max_seq = (*max_seq).max(first_seq + payloads.len() as u64)
-            }
-            Record::Purge { qid, epoch } => {
-                let name = queue_of(&names, *qid)?;
-                let e = purge_epochs.entry(name).or_insert(0);
-                *e = (*e).max(*epoch);
-            }
+        let w = self.wal.lock().unwrap();
+        if w.poisoned {
+            // A failed rotation can leave a truncated segment behind the
+            // still-unbumped gen/durable watermarks — serving them would
+            // point followers past the tear. Pause (they retry with
+            // backoff) until a successful compact() heals the log, whose
+            // gen bump then re-baselines them.
+            bail!(
+                "WAL poisoned by an earlier write/fsync failure; replication \
+                 is paused until a successful compact() heals the log"
+            );
         }
+        Ok(w)
     }
 
-    // Pass 2: rebuild the message set.
-    for rec in records {
-        match rec {
-            Record::Declare { qid, .. } => {
-                state.entry(queue_of(&names, *qid)?).or_default();
-            }
-            Record::Publish { qid, priority, seq, epoch, payload } => {
-                let id = (*priority, *seq);
-                if !acked.contains(&id) {
-                    let q = state.entry(queue_of(&names, *qid)?).or_default();
-                    q.insert(id, (payload.clone(), redelivered.contains(&id), *epoch));
-                }
-            }
-            Record::PublishMany { qid, priority, first_seq, epoch, payloads } => {
-                let q = state.entry(queue_of(&names, *qid)?).or_default();
-                for (k, payload) in payloads.iter().enumerate() {
-                    let id = (*priority, first_seq + k as u64);
-                    if !acked.contains(&id) {
-                        q.insert(id, (payload.clone(), redelivered.contains(&id), *epoch));
-                    }
-                }
-            }
-            Record::Delivered { qid, ids } | Record::Nacked { qid, ids } => {
-                // Mark snapshot-seeded survivors; ids already folded into
-                // `redelivered` cover publishes later in the log.
-                let q = state.entry(queue_of(&names, *qid)?).or_default();
-                for id in ids {
-                    if let Some(entry) = q.get_mut(id) {
-                        entry.1 = true;
-                    }
-                }
-            }
-            Record::Acked { qid, ids } => {
-                let q = state.entry(queue_of(&names, *qid)?).or_default();
-                for id in ids {
-                    q.remove(id);
-                }
-            }
-            Record::Purge { .. } => {} // resolved by epoch below
-        }
+    /// Replication watermarks (primary side of `ReplHandshake`).
+    pub fn repl_status(&self) -> Result<ReplStatus> {
+        let w = self.repl_inner()?;
+        Ok(ReplStatus {
+            gen: w.gen,
+            durable_bytes: w.durable_bytes,
+            appended_bytes: w.writer.bytes_written,
+        })
     }
 
-    // Purge resolution: drop everything applied before the last purge.
-    for (name, purge_epoch) in &purge_epochs {
-        if let Some(q) = state.get_mut(name) {
-            q.retain(|_, (_, _, epoch)| *epoch >= *purge_epoch);
+    /// The current snapshot baseline: `(gen, snapshot.bin bytes)`. The
+    /// WAL mutex is held across the file read so a concurrent rotation
+    /// cannot swap the snapshot out from under the generation stamp —
+    /// baselines are rare (follower start + one per rotation), so the
+    /// stall is acceptable.
+    pub fn repl_snapshot(&self) -> Result<(u64, Vec<u8>)> {
+        let w = self.repl_inner()?;
+        let path = self.dir.join("snapshot.bin");
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {path:?} for replication"))?;
+        Ok((w.gen, bytes))
+    }
+
+    /// Read up to ~`max` DURABLE segment bytes starting at `from`
+    /// (primary side of `ReplPull`). Returns the instantaneous
+    /// [`ReplStatus`] and the chunk; the chunk is empty when the follower
+    /// is caught up OR when `gen` no longer matches (the status tells it
+    /// which). Two invariants the follower's strict decoder relies on:
+    ///
+    /// - only fsync-covered bytes ship — a promoted follower must never
+    ///   hold state the primary could still lose;
+    /// - chunks end on RECORD boundaries: the durable watermark is
+    ///   record-aligned, and the size cap is aligned down to the largest
+    ///   clean record prefix (growing past the cap only when a single
+    ///   record alone exceeds it).
+    pub fn repl_read(&self, gen: u64, from: u64, max: usize) -> Result<(ReplStatus, Vec<u8>)> {
+        // Phase 1 (mutex): watermarks + bounds only.
+        let status = self.repl_status()?;
+        if gen != status.gen {
+            return Ok((status, Vec::new())); // re-baseline, says the status
         }
+        if from > status.durable_bytes {
+            bail!(
+                "replica offset {from} is past the durable watermark {}",
+                status.durable_bytes
+            );
+        }
+        let avail = (status.durable_bytes - from) as usize;
+        let want = avail.min(max.max(8)).min(REPL_MAX_CHUNK);
+        if want == 0 {
+            return Ok((status, Vec::new()));
+        }
+        // Phase 2 (NO mutex): disk read + record alignment + CRC.
+        // Committers keep appending; the one writer that could invalidate
+        // these bytes is a rotation truncating the segment, and that
+        // bumps the generation.
+        let aligned = self.read_aligned(from, want, avail);
+        // Phase 3 (mutex): did the segment survive the read?
+        let after = self.repl_status()?;
+        if after.gen != gen {
+            // Rotated mid-read: whatever we read may be torn/zeroed.
+            // Not an error — the new status sends the follower to its
+            // re-baseline path.
+            return Ok((after, Vec::new()));
+        }
+        // Same generation: appends only ever extend the file, so the
+        // range was stable and any failure is a REAL one.
+        Ok((status, aligned?))
+    }
+
+    /// Read `[from, from+want)` of the live segment and align it down to
+    /// whole CRC-clean records, growing past `want` only when the first
+    /// record alone exceeds it. Runs WITHOUT the WAL mutex — the caller
+    /// re-checks the segment generation before trusting the result.
+    fn read_aligned(&self, from: u64, want: usize, avail: usize) -> Result<Vec<u8>> {
+        let path = self.dir.join("wal.log");
+        let mut f = std::fs::File::open(&path)
+            .with_context(|| format!("opening {path:?} for replication"))?;
+        let read_range = |f: &mut std::fs::File, n: usize| -> Result<Vec<u8>> {
+            f.seek(SeekFrom::Start(from))?;
+            let mut buf = vec![0u8; n];
+            f.read_exact(&mut buf)
+                .with_context(|| format!("reading WAL bytes [{from}, {})", from + n as u64))?;
+            Ok(buf)
+        };
+        let mut buf = read_range(&mut f, want)?;
+        // Allocation-free boundary walk (CRC-checks what ships without
+        // materializing records).
+        let clean = wal::clean_frame_prefix(&buf);
+        if clean > 0 {
+            buf.truncate(clean);
+            return Ok(buf);
+        }
+        // The first record alone is bigger than the cap: ship exactly it.
+        // (With MAX_JOURNALED_PAYLOAD bounding journaled records this
+        // stays well under the frame cap; the checks are defense.)
+        if buf.len() < 8 {
+            bail!("durable watermark is not record-aligned ({avail} trailing bytes)");
+        }
+        let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+        let need = 8 + len;
+        if need > avail {
+            bail!("durable watermark is not record-aligned (record of {need} bytes, {avail} durable)");
+        }
+        if need > crate::queue::wire::MAX_FRAME - 64 {
+            bail!("WAL record of {need} bytes exceeds the replication frame cap");
+        }
+        let buf = read_range(&mut f, need)?;
+        if wal::clean_frame_prefix(&buf) != need {
+            bail!("durable WAL range [{from}, {}) fails its CRC", from + need as u64);
+        }
+        Ok(buf)
+    }
+}
+
+/// See [`MAX_JOURNALED_PAYLOAD`].
+fn check_journalable(len: usize) -> Result<()> {
+    if len > MAX_JOURNALED_PAYLOAD {
+        bail!(
+            "payload of {len} bytes exceeds the journaled-payload cap \
+             {MAX_JOURNALED_PAYLOAD}: its WAL record would not fit recovery \
+             (MAX_RECORD) or replication frames"
+        );
     }
     Ok(())
 }
@@ -784,14 +1068,21 @@ fn replay(state: &mut RecoveredQueues, max_seq: &mut u64, records: &[Record]) ->
 /// while losing the rename, leaving an old snapshot with an empty log —
 /// exactly the confirmed-loss the Always policy promises away.
 fn write_snapshot(dir: &Path, broker: &Broker) -> Result<()> {
+    write_snapshot_bytes(dir, &broker.snapshot())
+}
+
+/// The atomic snapshot-replace dance, shared with the replication
+/// follower (which installs a primary's snapshot bytes verbatim): tmp
+/// write + data fsync + rename + directory fsync, so the dir always
+/// holds exactly one complete snapshot.
+pub(crate) fn write_snapshot_bytes(dir: &Path, bytes: &[u8]) -> Result<()> {
     let tmp = dir.join("snapshot.tmp");
     let dst = dir.join("snapshot.bin");
-    let bytes = broker.snapshot();
     {
         let mut f = std::fs::File::create(&tmp)
             .with_context(|| format!("creating {tmp:?}"))?;
         use std::io::Write;
-        f.write_all(&bytes)?;
+        f.write_all(bytes)?;
         f.sync_all()?;
     }
     std::fs::rename(&tmp, &dst).with_context(|| format!("renaming {tmp:?} -> {dst:?}"))?;
@@ -1215,6 +1506,189 @@ mod tests {
         assert_eq!(b.recovered_messages(), 1);
         let d = b.consume("q", POLL).unwrap().unwrap();
         assert_eq!(d.payload, b"one");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_epoch_seeds_purge_high_water() {
+        // The apply/append race across a compaction boundary: a publish
+        // applied (epoch 0), purged (epoch 1), and compacted away can
+        // still land its RECORD in the post-compaction segment while the
+        // purge's record died with the old one. The snapshot's queue
+        // epoch must seed the purge high-water mark or replay resurrects
+        // the purged message.
+        let b = Broker::new(Duration::from_secs(1));
+        b.declare("q").unwrap();
+        b.publish("q", b"purged-away").unwrap();
+        assert_eq!(b.purge_epoch("q").unwrap(), 1);
+        let snap = decode_snapshot(&b.snapshot()).unwrap();
+
+        let mut rs = ReplayState::new();
+        rs.seed_snapshot(snap);
+        // The stray record: published under epoch 0, i.e. before the
+        // purge the snapshot already reflects.
+        rs.apply(&Record::Declare { qid: 0, name: "q".into() }).unwrap();
+        rs.apply(&Record::Publish {
+            qid: 0,
+            priority: 1,
+            seq: 0,
+            epoch: 0,
+            payload: b"purged-away".to_vec(),
+        })
+        .unwrap();
+        assert_eq!(rs.queue_len("q"), Some(0), "pre-purge publish resurrected");
+        // An epoch-1 publish (applied after the purge) still lands.
+        rs.apply(&Record::Publish {
+            qid: 0,
+            priority: 1,
+            seq: 1,
+            epoch: 1,
+            payload: b"kept".to_vec(),
+        })
+        .unwrap();
+        assert_eq!(rs.queue_len("q"), Some(1));
+    }
+
+    #[test]
+    fn replay_state_is_append_order_independent_incrementally() {
+        // The follower feeds records chunk by chunk; settle/deliver
+        // records may arrive BEFORE the publish they refer to. The
+        // persistent sets must reach the same state as whole-log replay.
+        let mk = |recs: &[Record]| {
+            let mut rs = ReplayState::new();
+            for r in recs {
+                rs.apply(r).unwrap();
+            }
+            rs
+        };
+        let decl = Record::Declare { qid: 0, name: "q".into() };
+        let p0 = Record::Publish { qid: 0, priority: 1, seq: 0, epoch: 0, payload: vec![0] };
+        let p1 = Record::Publish { qid: 0, priority: 1, seq: 1, epoch: 0, payload: vec![1] };
+        let ack0 = Record::Acked { qid: 0, ids: vec![(1, 0)] };
+        let del1 = Record::Delivered { qid: 0, ids: vec![(1, 1)] };
+        // Inverted: the ack and delivery land before their publishes.
+        let rs = mk(&[decl, ack0, del1, p0, p1]);
+        assert_eq!(rs.queue_len("q"), Some(1), "acked publish must not revive");
+        let (broker, msgs, queues) = rs.into_broker(Duration::from_secs(1)).unwrap();
+        assert_eq!((msgs, queues), (1, 1));
+        let d = broker.consume("q", POLL).unwrap().unwrap();
+        assert_eq!(d.payload, vec![1]);
+        assert!(d.redelivered, "delivered-before-crash must come back flagged");
+        // Ids burned by the settle records alone push the seq counter.
+        let (seq, _) = broker.publish_seq("q", b"fresh", 1).unwrap();
+        assert!(seq >= 2, "seq {seq} reuses a replayed id");
+    }
+
+    #[test]
+    fn repl_watermarks_track_durable_bytes_and_gen() {
+        let dir = tmpdir("replwm");
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::EveryN(1_000_000))).unwrap();
+        let s0 = b.repl_status().unwrap();
+        // Preamble of the fresh segment is durable from the start.
+        assert_eq!(s0.durable_bytes, s0.appended_bytes);
+        b.declare("q").unwrap();
+        for i in 0..5u8 {
+            b.publish("q", &[i]).unwrap();
+        }
+        let s1 = b.repl_status().unwrap();
+        assert_eq!(s1.gen, s0.gen);
+        assert!(s1.appended_bytes > s0.appended_bytes);
+        assert_eq!(s1.durable_bytes, s0.durable_bytes, "no fsync ran at this cadence");
+        // Only durable bytes ship; the unsynced tail stays on the primary.
+        let (st, chunk) = b.repl_read(s1.gen, s0.durable_bytes, usize::MAX).unwrap();
+        assert!(chunk.is_empty());
+        assert_eq!(st.durable_bytes, s1.durable_bytes);
+        // A checkpoint is a durability point: now the tail ships, and it
+        // decodes as exactly the five publishes (strict — no tears).
+        b.checkpoint().unwrap();
+        let s2 = b.repl_status().unwrap();
+        assert_eq!(s2.durable_bytes, s2.appended_bytes);
+        let (_, chunk) = b.repl_read(s2.gen, s0.durable_bytes, usize::MAX).unwrap();
+        let records = wal::read_wal_strict(&chunk).unwrap();
+        let published = records
+            .iter()
+            .filter(|r| matches!(r, Record::Publish { .. }))
+            .count();
+        assert_eq!(published, 5);
+        // Rotation bumps the generation and resets the byte space.
+        b.compact().unwrap();
+        let s3 = b.repl_status().unwrap();
+        assert_eq!(s3.gen, s2.gen.wrapping_add(1));
+        assert_eq!(s3.durable_bytes, s3.appended_bytes);
+        // A pull against the dead generation returns no bytes + the new
+        // status, which is the follower's cue to re-baseline.
+        let (st, chunk) = b.repl_read(s2.gen, s0.durable_bytes, usize::MAX).unwrap();
+        assert!(chunk.is_empty());
+        assert_eq!(st.gen, s3.gen);
+        // The snapshot baseline decodes and carries the seq high water.
+        let (snap_gen, snap_bytes) = b.repl_snapshot().unwrap();
+        assert_eq!(snap_gen, s3.gen);
+        let snap = decode_snapshot(&snap_bytes).unwrap();
+        assert_eq!(snap.next_seq, Some(5));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversized_payloads_rejected_only_when_journaled() {
+        // A near-MAX_FRAME payload would journal as a record that ends
+        // the recovery replay prefix and wedges replication — reject it
+        // loudly at publish time instead. Durability-off keeps the plain
+        // broker's limits (nothing is journaled).
+        let dir = tmpdir("oversize");
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::EveryN(8))).unwrap();
+        b.declare("q").unwrap();
+        // Probe the boundary without allocating 64 MB: a zeroed Vec of
+        // cap+1 is cheap (one untouched mapping) and checked before any
+        // state changes.
+        let too_big = vec![0u8; MAX_JOURNALED_PAYLOAD + 1];
+        let err = b.publish("q", &too_big).unwrap_err().to_string();
+        assert!(err.contains("journaled-payload cap"), "unexpected: {err}");
+        assert!(b.publish_many("q", &[b"ok".as_slice(), too_big.as_slice()]).is_err());
+        // Nothing leaked into the broker or the log from the rejections.
+        assert_eq!(b.len("q").unwrap(), 0);
+        drop(b);
+        let never_dir = tmpdir("oversize-never");
+        let never = DurableBroker::open(&never_dir, opts(SyncPolicy::Never)).unwrap();
+        never.declare("q").unwrap();
+        never.publish("q", &too_big).unwrap(); // plain-broker limits apply
+        assert_eq!(never.len("q").unwrap(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&never_dir);
+    }
+
+    #[test]
+    fn big_publish_many_splits_into_multiple_records() {
+        // A batch over MAX_PUBLISH_MANY_RECORD journals as several
+        // adjacent-seq records; replay rebuilds the identical batch.
+        let dir = tmpdir("split");
+        let payload = vec![3u8; 3 << 20]; // 3 MB x 4 > the 8 MB record cap
+        {
+            let b = DurableBroker::open(&dir, opts(SyncPolicy::EveryN(1))).unwrap();
+            b.declare("q").unwrap();
+            let refs: Vec<&[u8]> = (0..4).map(|_| payload.as_slice()).collect();
+            b.publish_many("q", &refs).unwrap();
+            let (records, _) = read_wal(&std::fs::read(dir.join("wal.log")).unwrap());
+            let batches = records
+                .iter()
+                .filter(|r| matches!(r, Record::PublishMany { .. }))
+                .count();
+            assert!(batches >= 2, "batch should have split, got {batches} record(s)");
+        }
+        let r = DurableBroker::open(&dir, opts(SyncPolicy::EveryN(1))).unwrap();
+        assert_eq!(r.recovered_messages(), 4);
+        let drained = r.consume_many("q", 8, POLL).unwrap();
+        assert_eq!(drained.len(), 4);
+        assert!(drained.iter().all(|d| d.payload == payload));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn repl_requires_journaling() {
+        let dir = tmpdir("replnever");
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::Never)).unwrap();
+        assert!(b.repl_status().is_err());
+        assert!(b.repl_snapshot().is_err());
+        assert!(b.repl_read(0, 0, 1024).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,734 @@
+//! Replication v0: ship the primary's WAL to a live follower.
+//!
+//! The paper's broker survives node loss because RabbitMQ itself can be
+//! clustered; our durable broker (WAL + snapshot, PRs 2-3) so far only
+//! survived restarts of the SAME node. This module layers a
+//! primary/follower pair on top of the existing log:
+//!
+//! ```text
+//!   primary (jsdoop serve --durability_dir=P)
+//!      │  ReplSnapshot        snapshot.bin, stamped with the segment gen
+//!      │  ReplPull/segment    DURABLE wal.log bytes [offset, durable)
+//!      ▼
+//!   follower (jsdoop serve --durability_dir=F --replicate-from=ADDR)
+//!      ├── mirrors the bytes VERBATIM into F/snapshot.bin + F/wal.log
+//!      └── applies each chunk to an in-memory [`ReplayState`] so its
+//!          read-only server answers Stats/Len while following
+//! ```
+//!
+//! What ships, and when:
+//!
+//! - Only FSYNC-COVERED bytes ship ([`DurableBroker`] tracks a byte-level
+//!   `durable` watermark next to the record-level one group commit
+//!   introduced). A promoted follower therefore never holds state the
+//!   primary could still lose — follower state is always a prefix of
+//!   confirmed history, so "no acked message reappears" and "no
+//!   (priority, seq) is reused" carry over from the recovery proofs.
+//! - The durable watermark only advances past whole records, so every
+//!   chunk decodes cleanly ([`wal::read_wal_strict`]).
+//! - Segment rotation (compaction) bumps the primary's GENERATION; a
+//!   follower pulling a dead generation gets the new one in the status
+//!   and re-baselines: fetch the snapshot (which covers everything the
+//!   old segment held), reset the mirror, restart at offset 0. The same
+//!   mechanism covers a primary restart (generations are seeded from the
+//!   wall clock, so incarnations never collide in practice).
+//!
+//! The mirror directory is byte-for-byte a durability directory, plus a
+//! [`REPLICA_MARKER`] file naming the primary. PROMOTION is therefore
+//! just recovery: remove the marker ([`promote_dir`], or `jsdoop serve
+//! --durability_dir=F --promote`) and open it with
+//! [`DurableBroker::open`] — the idempotent, append-order-independent
+//! replay from the crash-recovery path rebuilds the broker. The marker
+//! exists so a mirror cannot be served as a primary by accident (that
+//! would fork history the moment the real primary commits again); while
+//! it is present, `jsdoop serve` refuses the directory and the follower
+//! process serves READ-ONLY (Stats/Len/Ping — mutations are rejected).
+//!
+//! v0 limits, deliberately: one follower per pull loop (nothing stops N
+//! followers pulling the same primary — state is never consumed), manual
+//! promotion (no failure detector), snapshot baselines must fit one wire
+//! frame, and replication is asynchronous — a follower promoted after a
+//! primary death serves the durable prefix, not unshipped tail records.
+//! Individual WAL records are always shippable: journaled publishes cap
+//! their payloads ([`super::MAX_JOURNALED_PAYLOAD`]) and big batches
+//! split into multiple records, so no single record can outgrow a
+//! replication frame and wedge the stream. Multi-follower fan-out and
+//! automatic failover build on exactly these ops (see ROADMAP).
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::wal::read_wal_strict;
+use super::{sync_dir, DurableBroker, ReplStatus, ReplayState};
+use crate::queue::broker::decode_snapshot;
+use crate::queue::client::ReplicaClient;
+use crate::queue::{Delivery, QueueApi, QueueService, QueueStats};
+
+/// Marker file a mirror directory carries while it follows a primary.
+/// Its presence makes `jsdoop serve` refuse to host the directory as a
+/// primary; [`promote_dir`] removes it.
+pub const REPLICA_MARKER: &str = "replica.lock";
+
+/// True if `dir` is (still) a replica mirror.
+pub fn is_replica_dir(dir: &Path) -> bool {
+    dir.join(REPLICA_MARKER).exists()
+}
+
+/// Refuse to serve a mirror as a primary (the operator's guard rail —
+/// serving it would fork history against the real primary).
+pub fn guard_not_replica(dir: &Path) -> Result<()> {
+    if is_replica_dir(dir) {
+        bail!(
+            "{dir:?} is a replica mirror (contains {REPLICA_MARKER}); \
+             it follows a primary and must not serve writes. If the \
+             primary is gone, promote it: jsdoop serve --durability_dir=... --promote"
+        );
+    }
+    Ok(())
+}
+
+/// Promote a mirror: remove the marker (idempotent) so the directory can
+/// be opened as a primary. The caller then recovers it with
+/// [`DurableBroker::open`] like any durability directory.
+pub fn promote_dir(dir: &Path) -> Result<()> {
+    let marker = dir.join(REPLICA_MARKER);
+    if marker.exists() {
+        std::fs::remove_file(&marker)
+            .with_context(|| format!("removing replica marker {marker:?}"))?;
+        sync_dir(dir)?;
+    }
+    Ok(())
+}
+
+/// Where a follower reads the primary's log from. Implemented by
+/// [`ReplicaClient`] (TCP — the production path) and by
+/// `&DurableBroker` (in-process — unit tests and the replication-lag
+/// bench exercise the exact same [`FollowerCore`] against it).
+pub trait ReplSource {
+    fn handshake(&mut self) -> Result<ReplStatus>;
+    /// `(gen, snapshot.bin bytes)` — the baseline for that generation.
+    fn fetch_snapshot(&mut self) -> Result<(u64, Vec<u8>)>;
+    /// Durable segment bytes `[from, from + max)` of generation `gen`;
+    /// empty chunk = caught up, or (if the returned status carries a
+    /// different gen) the segment rotated and the follower re-baselines.
+    fn pull(&mut self, gen: u64, from: u64, max: usize) -> Result<(ReplStatus, Vec<u8>)>;
+}
+
+impl ReplSource for &DurableBroker {
+    fn handshake(&mut self) -> Result<ReplStatus> {
+        self.repl_status()
+    }
+
+    fn fetch_snapshot(&mut self) -> Result<(u64, Vec<u8>)> {
+        self.repl_snapshot()
+    }
+
+    fn pull(&mut self, gen: u64, from: u64, max: usize) -> Result<(ReplStatus, Vec<u8>)> {
+        self.repl_read(gen, from, max)
+    }
+}
+
+/// Follower-side replication progress, for observers (`benches` report
+/// `bytes_behind_durable` as the replication-lag metric).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicaLag {
+    /// Segment generation the follower is mirroring.
+    pub gen: u64,
+    /// Mirror offset: segment bytes fetched, persisted, and applied.
+    pub offset: u64,
+    /// The primary's durable watermark at the last exchange.
+    pub primary_durable_bytes: u64,
+    /// The primary's append watermark at the last exchange (the part
+    /// past `primary_durable_bytes` cannot ship until an fsync).
+    pub primary_appended_bytes: u64,
+    pub chunks_applied: u64,
+    pub baselines: u64,
+}
+
+impl ReplicaLag {
+    /// How far the mirror trails what it COULD have: durable bytes not
+    /// yet shipped. Zero = caught up to every confirmed byte.
+    pub fn bytes_behind_durable(&self) -> u64 {
+        self.primary_durable_bytes.saturating_sub(self.offset)
+    }
+}
+
+/// The queue service a follower process hosts while mirroring: Stats /
+/// Len answered from the replayed state (ready = survivors; unACKed
+/// messages fold back to ready on any recovery, so that is also what a
+/// promotion would serve), every mutation rejected. Counters other than
+/// `ready` read zero — they are not part of replicated state.
+pub struct ReplicaBroker {
+    state: Mutex<ReplayState>,
+    lag: Mutex<ReplicaLag>,
+}
+
+impl ReplicaBroker {
+    /// An empty replica (no mirrored state yet). Pair it with a
+    /// [`FollowerCore`] — alone it is just an empty read-only broker.
+    pub fn new() -> Self {
+        ReplicaBroker {
+            state: Mutex::new(ReplayState::new()),
+            lag: Mutex::new(ReplicaLag::default()),
+        }
+    }
+
+    pub fn lag(&self) -> ReplicaLag {
+        *self.lag.lock().unwrap()
+    }
+
+    /// Surviving messages across all mirrored queues.
+    pub fn message_count(&self) -> usize {
+        self.state.lock().unwrap().message_count()
+    }
+
+    pub fn queue_names(&self) -> Vec<String> {
+        self.state.lock().unwrap().queue_names()
+    }
+
+    fn queue_len(&self, queue: &str) -> Result<usize> {
+        match self.state.lock().unwrap().queue_len(queue) {
+            Some(n) => Ok(n),
+            None => bail!("queue '{queue}' does not exist (not mirrored yet)"),
+        }
+    }
+
+    fn read_only<T>(&self, op: &str) -> Result<T> {
+        bail!(
+            "replica is read-only: {op} rejected (this broker mirrors a \
+             primary; promote it to serve writes)"
+        )
+    }
+}
+
+impl QueueApi for ReplicaBroker {
+    fn declare(&self, _queue: &str) -> Result<()> {
+        self.read_only("declare")
+    }
+
+    fn publish(&self, _queue: &str, _payload: &[u8]) -> Result<()> {
+        self.read_only("publish")
+    }
+
+    fn publish_pri(&self, _queue: &str, _payload: &[u8], _priority: u64) -> Result<()> {
+        self.read_only("publish")
+    }
+
+    fn consume(&self, _queue: &str, _timeout: Duration) -> Result<Option<Delivery>> {
+        self.read_only("consume")
+    }
+
+    fn ack(&self, _queue: &str, _tag: u64) -> Result<()> {
+        self.read_only("ack")
+    }
+
+    fn nack(&self, _queue: &str, _tag: u64) -> Result<()> {
+        self.read_only("nack")
+    }
+
+    fn len(&self, queue: &str) -> Result<usize> {
+        self.queue_len(queue)
+    }
+
+    fn purge(&self, _queue: &str) -> Result<()> {
+        self.read_only("purge")
+    }
+
+    fn stats(&self, queue: &str) -> Result<QueueStats> {
+        let ready = self.queue_len(queue)?;
+        Ok(QueueStats { ready, ..QueueStats::default() })
+    }
+}
+
+impl Default for ReplicaBroker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QueueService for ReplicaBroker {}
+
+/// The deterministic follower state machine: baseline + pull/persist/
+/// apply steps against any [`ReplSource`]. [`start_follower`] drives it
+/// on a thread over TCP; tests and the lag bench drive it directly.
+pub struct FollowerCore {
+    dir: PathBuf,
+    broker: Arc<ReplicaBroker>,
+    /// Generation the mirror is tracking; `None` forces a baseline.
+    gen: Option<u64>,
+    /// Byte offset into the mirrored segment (== mirror wal.log length).
+    offset: u64,
+    /// Append handle for the mirror segment.
+    wal: Option<File>,
+    chunk: usize,
+}
+
+impl FollowerCore {
+    /// Prepare `dir` as a mirror of `primary`: create it and drop the
+    /// replica marker so it cannot be served as a primary mid-follow.
+    pub fn new(
+        dir: impl AsRef<Path>,
+        primary: &str,
+        broker: Arc<ReplicaBroker>,
+        chunk: usize,
+    ) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating mirror dir {dir:?}"))?;
+        let marker = dir.join(REPLICA_MARKER);
+        // Demoting a directory into a mirror is as destructive as serving
+        // a mirror as a primary, just in the other direction: the first
+        // baseline replaces snapshot.bin and truncates wal.log. Refuse a
+        // directory that holds a durability history it did not mirror —
+        // a transposed flag must not erase a primary's unreplicated log.
+        let has_history = dir.join("snapshot.bin").exists() || dir.join("wal.log").exists();
+        if has_history && !marker.exists() {
+            bail!(
+                "{dir:?} already holds a durability history that is not a replica \
+                 mirror; refusing to overwrite it — point --replicate-from at a \
+                 fresh --durability_dir"
+            );
+        }
+        std::fs::write(&marker, format!("replica mirror of {primary}\n"))
+            .with_context(|| format!("writing {marker:?}"))?;
+        sync_dir(&dir)?;
+        Ok(FollowerCore { dir, broker, gen: None, offset: 0, wal: None, chunk })
+    }
+
+    /// Forget the tracked generation so the next [`FollowerCore::step`]
+    /// re-baselines from the snapshot. Called by the pull loop after ANY
+    /// error — a full re-baseline is always correct, and errors here are
+    /// rare enough that simplicity beats resumption cleverness.
+    pub fn invalidate(&mut self) {
+        self.gen = None;
+    }
+
+    /// Fetch the snapshot baseline and reset the mirror to it. Order
+    /// matters, and it is the OPPOSITE of primary-side compaction: the
+    /// stale segment is truncated BEFORE the new snapshot is installed.
+    /// The mirror's old segment is only a PREFIX of the primary's — a
+    /// stale `Publish` can sit in it while its `Acked` died in the
+    /// unshipped suffix — so snapshot-first would leave a crash window
+    /// (new snapshot + stale partial segment) whose promotion resurrects
+    /// an acked message. Truncate-first's crash window is old snapshot +
+    /// empty segment: exactly the PREVIOUS baseline, a consistent (if
+    /// older) durable prefix — regression a restarted follower repairs
+    /// on its next baseline, and the async-replication contract already
+    /// allows.
+    fn baseline(&mut self, src: &mut dyn ReplSource) -> Result<()> {
+        let status = src.handshake()?;
+        let (gen, snap_bytes) = src.fetch_snapshot()?;
+        // Validate BEFORE persisting: a snapshot that does not decode
+        // must not replace a mirror that does.
+        let contents = decode_snapshot(&snap_bytes).context("decoding replicated snapshot")?;
+
+        let wal_path = self.dir.join("wal.log");
+        self.wal = None; // close the old append handle first
+        let f = File::create(&wal_path)
+            .with_context(|| format!("truncating mirror segment {wal_path:?}"))?;
+        f.sync_all()?;
+        sync_dir(&self.dir)?;
+
+        super::write_snapshot_bytes(&self.dir, &snap_bytes)?;
+
+        let mut state = ReplayState::new();
+        state.seed_snapshot(contents);
+        *self.broker.state.lock().unwrap() = state;
+        {
+            let mut lag = self.broker.lag.lock().unwrap();
+            lag.gen = gen;
+            lag.offset = 0;
+            lag.primary_durable_bytes = status.durable_bytes;
+            lag.primary_appended_bytes = status.appended_bytes;
+            lag.baselines += 1;
+        }
+        self.wal = Some(f);
+        self.offset = 0;
+        self.gen = Some(gen);
+        Ok(())
+    }
+
+    /// One replication step: pull a durable chunk, persist it to the
+    /// mirror segment, apply it to the live replay state. Returns the
+    /// bytes applied (a re-baseline counts as 1 so callers looping
+    /// `while step()? > 0` drain across rotations); 0 = caught up with
+    /// the primary's durable watermark.
+    pub fn step(&mut self, src: &mut dyn ReplSource) -> Result<u64> {
+        if self.gen.is_none() {
+            self.baseline(src)?;
+        }
+        let gen = self.gen.expect("baselined above");
+        let (status, bytes) = src.pull(gen, self.offset, self.chunk)?;
+        if status.gen != gen {
+            // Rotation (or primary restart): the old byte space is gone,
+            // the snapshot we are about to fetch covers all of it.
+            self.baseline(src)?;
+            return Ok(1);
+        }
+        {
+            let mut lag = self.broker.lag.lock().unwrap();
+            lag.primary_durable_bytes = status.durable_bytes;
+            lag.primary_appended_bytes = status.appended_bytes;
+        }
+        if bytes.is_empty() {
+            return Ok(0);
+        }
+        // Whole records or nothing: the primary only ships fsync-covered
+        // prefixes, so a tear here means a broken primary or mirror.
+        let records = read_wal_strict(&bytes)?;
+        let wal = self.wal.as_mut().expect("baseline opened the mirror segment");
+        // Persist-then-apply, fsynced per chunk: outside the baseline
+        // window, a promoted mirror holds everything the replica ever
+        // answered Stats for (a crash DURING a re-baseline can regress
+        // the mirror to the previous baseline — see baseline()).
+        wal.write_all(&bytes)?;
+        wal.sync_data()?;
+        {
+            let mut state = self.broker.state.lock().unwrap();
+            for rec in &records {
+                state.apply(rec)?;
+            }
+        }
+        self.offset += bytes.len() as u64;
+        {
+            let mut lag = self.broker.lag.lock().unwrap();
+            lag.offset = self.offset;
+            lag.chunks_applied += 1;
+        }
+        Ok(bytes.len() as u64)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FollowerOptions {
+    /// How long to sleep when caught up before polling again.
+    pub poll: Duration,
+    /// Max bytes per pull (also capped server-side at
+    /// [`super::REPL_MAX_CHUNK`]).
+    pub chunk: usize,
+    /// Socket read deadline for the replication connection.
+    pub socket_slack: Duration,
+}
+
+impl Default for FollowerOptions {
+    fn default() -> Self {
+        FollowerOptions {
+            poll: Duration::from_millis(50),
+            chunk: 256 << 10,
+            socket_slack: Duration::from_secs(5),
+        }
+    }
+}
+
+/// A running follower pull loop; the embedded [`ReplicaBroker`] is what
+/// the follower's TCP server hosts.
+pub struct FollowerHandle {
+    pub broker: Arc<ReplicaBroker>,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FollowerHandle {
+    /// Stop pulling and join the loop. The mirror directory stays as-is,
+    /// ready for promotion.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start mirroring `primary_addr` into `dir` on a background thread.
+/// Connection loss, primary restarts, and rotations are absorbed by
+/// reconnect + re-baseline; the loop only ends via
+/// [`FollowerHandle::stop`].
+pub fn start_follower(
+    dir: impl AsRef<Path>,
+    primary_addr: &str,
+    opts: FollowerOptions,
+) -> Result<FollowerHandle> {
+    let broker = Arc::new(ReplicaBroker::new());
+    // Fail fast on an unusable mirror dir; connectivity, by contrast, is
+    // retried forever (a follower outliving a dead primary is the point).
+    let mut core = FollowerCore::new(&dir, primary_addr, broker.clone(), opts.chunk)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = primary_addr.to_string();
+    let stop2 = stop.clone();
+    let thread = std::thread::Builder::new()
+        .name("jsdoop-replica".into())
+        .spawn(move || {
+            let retry = opts.poll.max(Duration::from_millis(100));
+            let mut client: Option<ReplicaClient> = None;
+            // One warning per outage, not one per 100ms retry — but an
+            // unreachable primary must be VISIBLE (a mirror that never
+            // baselined holds nothing to promote).
+            let mut warned_unreachable = false;
+            // Escalating backoff for repeated step failures: a poisoned
+            // record (or a broken primary) must not hammer re-baselines —
+            // each one reads the full snapshot under the primary's WAL
+            // mutex — every retry tick.
+            let mut consecutive_errors = 0u32;
+            while !stop2.load(Ordering::SeqCst) {
+                let Some(src) = client.as_mut() else {
+                    match ReplicaClient::connect_with_slack(&addr, opts.socket_slack) {
+                        Ok(c) => {
+                            if warned_unreachable {
+                                eprintln!("replica: primary {addr} reachable again");
+                            }
+                            warned_unreachable = false;
+                            client = Some(c);
+                        }
+                        Err(e) => {
+                            if !warned_unreachable {
+                                eprintln!(
+                                    "replica: cannot reach primary {addr}: {e:#} (retrying; \
+                                     nothing is mirrored until the first baseline)"
+                                );
+                                warned_unreachable = true;
+                            }
+                            std::thread::sleep(retry);
+                        }
+                    }
+                    continue;
+                };
+                match core.step(src) {
+                    Ok(0) => {
+                        consecutive_errors = 0;
+                        std::thread::sleep(opts.poll);
+                    }
+                    Ok(_) => consecutive_errors = 0, // keep draining
+                    Err(e) => {
+                        eprintln!(
+                            "replica: replication error (reconnecting, will re-baseline): {e:#}"
+                        );
+                        client = None;
+                        core.invalidate();
+                        consecutive_errors = consecutive_errors.saturating_add(1);
+                        std::thread::sleep(retry * consecutive_errors.min(20));
+                    }
+                }
+            }
+        })?;
+    Ok(FollowerHandle { broker, stop, thread: Some(thread) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::durability::{DurabilityOptions, SyncPolicy};
+    use crate::queue::DEFAULT_PRIORITY;
+    use std::sync::atomic::AtomicUsize;
+
+    static TEST_DIR_N: AtomicUsize = AtomicUsize::new(0);
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let n = TEST_DIR_N.fetch_add(1, Ordering::Relaxed);
+        let d = std::env::temp_dir()
+            .join(format!("jsdoop-repl-{tag}-{}-{n}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn opts(sync: SyncPolicy) -> DurabilityOptions {
+        DurabilityOptions {
+            sync,
+            compact_after_bytes: u64::MAX,
+            ..DurabilityOptions::default()
+        }
+    }
+
+    const POLL: Duration = Duration::from_millis(10);
+
+    fn drain_core(core: &mut FollowerCore, primary: &DurableBroker) {
+        let mut src = primary;
+        while core.step(&mut src).unwrap() > 0 {}
+    }
+
+    #[test]
+    fn follower_mirrors_live_state_and_promotes() {
+        let pdir = tmpdir("mirror-p");
+        let fdir = tmpdir("mirror-f");
+        let primary = DurableBroker::open(&pdir, opts(SyncPolicy::Always)).unwrap();
+        primary.declare("t").unwrap();
+        for i in 0..6u8 {
+            primary.publish("t", &[i]).unwrap();
+        }
+        // Deliver three; settle one, hand one back, leave one in flight.
+        let d0 = primary.consume("t", POLL).unwrap().unwrap();
+        let d1 = primary.consume("t", POLL).unwrap().unwrap();
+        let _d2 = primary.consume("t", POLL).unwrap().unwrap();
+        primary.ack("t", d0.tag).unwrap();
+        primary.nack("t", d1.tag).unwrap();
+
+        let replica = Arc::new(ReplicaBroker::new());
+        let mut core = FollowerCore::new(&fdir, "test-primary", replica.clone(), 64).unwrap();
+        drain_core(&mut core, &primary);
+
+        // Converged, observed through the replica's read-only service:
+        // ready = survivors (unacked folds back on any recovery).
+        assert_eq!(replica.len("t").unwrap(), 5);
+        assert_eq!(replica.stats("t").unwrap().ready, 5);
+        assert_eq!(replica.message_count(), 5);
+        assert_eq!(replica.lag().bytes_behind_durable(), 0);
+        assert!(replica.lag().chunks_applied >= 1);
+        // Mutations are refused while following.
+        assert!(replica.publish("t", b"nope").is_err());
+        assert!(replica.consume("t", POLL).is_err());
+        assert!(replica.ack("t", 0).is_err());
+        assert!(replica.len("ghost").is_err());
+
+        // Promote the mirror and verify recovery-grade semantics.
+        assert!(is_replica_dir(&fdir));
+        assert!(guard_not_replica(&fdir).is_err());
+        promote_dir(&fdir).unwrap();
+        guard_not_replica(&fdir).unwrap();
+        promote_dir(&fdir).unwrap(); // idempotent
+        drop(core);
+        let promoted = DurableBroker::open(&fdir, opts(SyncPolicy::Always)).unwrap();
+        assert_eq!(promoted.recovered_messages(), 5);
+        let mut got = Vec::new();
+        while let Some(d) = promoted.consume("t", POLL).unwrap() {
+            promoted.ack("t", d.tag).unwrap();
+            got.push((d.payload[0], d.redelivered));
+        }
+        // Acked [0] never reappears; delivered/nacked [1], [2] come back
+        // flagged at their original slots; [3..6] clean, FIFO preserved.
+        assert_eq!(
+            got,
+            vec![(1, true), (2, true), (3, false), (4, false), (5, false)]
+        );
+        let _ = std::fs::remove_dir_all(&pdir);
+        let _ = std::fs::remove_dir_all(&fdir);
+    }
+
+    #[test]
+    fn promoted_follower_never_reuses_seqs() {
+        // The sharp edge: every message acked AND compacted away on the
+        // primary, so the ids survive ONLY in the snapshot header the
+        // follower mirrors. A promoted follower re-issuing one would
+        // break replay idempotency for everything downstream of it.
+        let pdir = tmpdir("seq-p");
+        let fdir = tmpdir("seq-f");
+        let primary = DurableBroker::open(&pdir, opts(SyncPolicy::Always)).unwrap();
+        primary.declare("q").unwrap();
+        for i in 0..4u8 {
+            primary.publish("q", &[i]).unwrap();
+        }
+        let batch = primary.consume_many("q", 4, POLL).unwrap();
+        primary.ack_many("q", &batch.iter().map(|d| d.tag).collect::<Vec<_>>()).unwrap();
+        primary.compact().unwrap();
+
+        let replica = Arc::new(ReplicaBroker::new());
+        let mut core = FollowerCore::new(&fdir, "p", replica.clone(), 1 << 16).unwrap();
+        drain_core(&mut core, &primary);
+        assert_eq!(replica.message_count(), 0);
+        drop(core);
+
+        promote_dir(&fdir).unwrap();
+        let promoted = DurableBroker::open(&fdir, opts(SyncPolicy::Always)).unwrap();
+        assert_eq!(promoted.recovered_messages(), 0);
+        let (seq, _) = promoted.inner().publish_seq("q", b"fresh", DEFAULT_PRIORITY).unwrap();
+        assert!(seq >= 4, "promoted follower reused seq {seq}");
+        let _ = std::fs::remove_dir_all(&pdir);
+        let _ = std::fs::remove_dir_all(&fdir);
+    }
+
+    #[test]
+    fn follower_rebaselines_across_rotation() {
+        let pdir = tmpdir("rot-p");
+        let fdir = tmpdir("rot-f");
+        let primary = DurableBroker::open(&pdir, opts(SyncPolicy::Always)).unwrap();
+        primary.declare("q").unwrap();
+        primary.publish("q", b"before").unwrap();
+
+        let replica = Arc::new(ReplicaBroker::new());
+        let mut core = FollowerCore::new(&fdir, "p", replica.clone(), 1 << 16).unwrap();
+        drain_core(&mut core, &primary);
+        assert_eq!(replica.message_count(), 1);
+        let gen_before = replica.lag().gen;
+
+        // Rotate the primary's segment out from under the follower, then
+        // keep committing.
+        primary.compact().unwrap();
+        primary.publish("q", b"after").unwrap();
+        drain_core(&mut core, &primary);
+        assert_eq!(replica.message_count(), 2);
+        assert_ne!(replica.lag().gen, gen_before);
+        assert!(replica.lag().baselines >= 2, "rotation must force a re-baseline");
+        assert_eq!(replica.lag().bytes_behind_durable(), 0);
+
+        // And the re-baselined mirror still promotes to the full state.
+        drop(core);
+        promote_dir(&fdir).unwrap();
+        let promoted = DurableBroker::open(&fdir, opts(SyncPolicy::Always)).unwrap();
+        assert_eq!(promoted.recovered_messages(), 2);
+        let _ = std::fs::remove_dir_all(&pdir);
+        let _ = std::fs::remove_dir_all(&fdir);
+    }
+
+    #[test]
+    fn follower_refuses_to_demote_a_primary_dir() {
+        // A transposed flag must not turn a primary's durability dir into
+        // a mirror — the first baseline would erase its history.
+        let pdir = tmpdir("demote-p");
+        {
+            let primary = DurableBroker::open(&pdir, opts(SyncPolicy::Always)).unwrap();
+            primary.declare("q").unwrap();
+            primary.publish("q", b"precious").unwrap();
+        }
+        let replica = Arc::new(ReplicaBroker::new());
+        let err = FollowerCore::new(&pdir, "p", replica.clone(), 64)
+            .err()
+            .expect("must refuse a non-mirror durability dir");
+        assert!(err.to_string().contains("refusing to overwrite"), "unhelpful: {err:#}");
+        assert!(!is_replica_dir(&pdir), "refusal must not leave a marker behind");
+        // The history is intact and still recovers.
+        let b = DurableBroker::open(&pdir, opts(SyncPolicy::Always)).unwrap();
+        assert_eq!(b.recovered_messages(), 1);
+        // An EXISTING mirror re-opens fine (follower restart).
+        let fdir = tmpdir("demote-f");
+        let _core = FollowerCore::new(&fdir, "p", replica.clone(), 64).unwrap();
+        let _core2 = FollowerCore::new(&fdir, "p", replica, 64).unwrap();
+        let _ = std::fs::remove_dir_all(&pdir);
+        let _ = std::fs::remove_dir_all(&fdir);
+    }
+
+    #[test]
+    fn follower_ships_only_durable_bytes() {
+        // Under every=N the unsynced tail must NOT reach the mirror: a
+        // promoted follower may only ever hold fsync-confirmed history.
+        let pdir = tmpdir("dur-p");
+        let fdir = tmpdir("dur-f");
+        let primary =
+            DurableBroker::open(&pdir, opts(SyncPolicy::EveryN(1_000_000))).unwrap();
+        primary.declare("q").unwrap();
+
+        let replica = Arc::new(ReplicaBroker::new());
+        let mut core = FollowerCore::new(&fdir, "p", replica.clone(), 1 << 16).unwrap();
+        drain_core(&mut core, &primary);
+
+        for i in 0..8u8 {
+            primary.publish("q", &[i]).unwrap();
+        }
+        drain_core(&mut core, &primary);
+        // Nothing fsynced yet: the mirror stays at the baseline while the
+        // lag metric reports exactly zero durable bytes behind (the tail
+        // is visible only through appended_bytes).
+        assert_eq!(replica.message_count(), 0);
+        let lag = replica.lag();
+        assert_eq!(lag.bytes_behind_durable(), 0);
+        assert!(lag.primary_appended_bytes > lag.primary_durable_bytes);
+
+        primary.checkpoint().unwrap(); // durability point: now it ships
+        drain_core(&mut core, &primary);
+        assert_eq!(replica.message_count(), 8);
+        let _ = std::fs::remove_dir_all(&pdir);
+        let _ = std::fs::remove_dir_all(&fdir);
+    }
+}

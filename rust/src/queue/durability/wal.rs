@@ -356,6 +356,46 @@ pub fn read_wal(bytes: &[u8]) -> (Vec<Record>, usize) {
     }
 }
 
+/// Length of the longest whole-frame, CRC-clean prefix of `bytes` — the
+/// boundary [`read_wal`] would stop at, computed WITHOUT materializing
+/// any [`Record`] (no payload clones): replication uses it to align ship
+/// chunks, where decoding just to find a byte offset would be pure
+/// waste. (A frame that CRCs but fails record decode — impossible from
+/// our own writer — is counted here and rejected by the follower's
+/// strict decode instead.)
+pub fn clean_frame_prefix(bytes: &[u8]) -> usize {
+    let mut i = 0usize;
+    loop {
+        if i + 8 > bytes.len() {
+            return i;
+        }
+        let len = u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[i + 4..i + 8].try_into().unwrap());
+        if len == 0 || len > MAX_RECORD || i + 8 + len > bytes.len() {
+            return i;
+        }
+        if crc32(&bytes[i + 8..i + 8 + len]) != crc {
+            return i;
+        }
+        i += 8 + len;
+    }
+}
+
+/// Decode a byte range that MUST be whole records — the replication path
+/// ships only fsync-covered bytes, and the durable watermark only ever
+/// advances past complete frames, so a tear here is a protocol bug (or a
+/// corrupted mirror), not a crash artifact to tolerate.
+pub fn read_wal_strict(bytes: &[u8]) -> Result<Vec<Record>> {
+    let (records, clean) = read_wal(bytes);
+    if clean != bytes.len() {
+        bail!(
+            "WAL chunk is torn: {clean} of {} bytes decode cleanly",
+            bytes.len()
+        );
+    }
+    Ok(records)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -439,6 +479,16 @@ mod tests {
         corrupt[last] ^= 0xFF;
         let (records2, _) = read_wal(&corrupt);
         assert_eq!(records2.len(), 2);
+        // The strict reader (replication chunks) refuses the tear the
+        // lenient one tolerates.
+        assert!(read_wal_strict(&bytes).is_err());
+        let full_bytes = std::fs::read(&path).unwrap();
+        assert_eq!(read_wal_strict(&full_bytes).unwrap().len(), 3);
+        // The allocation-free boundary walk agrees with read_wal on
+        // clean, truncated, and corrupted inputs.
+        assert_eq!(clean_frame_prefix(&full_bytes), full_bytes.len());
+        assert_eq!(clean_frame_prefix(&bytes), read_wal(&bytes).1);
+        assert_eq!(clean_frame_prefix(&corrupt), read_wal(&corrupt).1);
         let _ = std::fs::remove_file(&path);
     }
 

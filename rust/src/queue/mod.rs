@@ -47,6 +47,48 @@
 //! whose effect is already captured in the snapshot is a no-op. That is
 //! what lets compaction run concurrently with live traffic without
 //! quiescing the broker.
+//!
+//! # Replication
+//!
+//! The paper's broker also survives NODE loss, because RabbitMQ itself
+//! can be clustered. [`durability::replication`] closes that half:
+//! a follower (`jsdoop serve --durability_dir=F --replicate-from=ADDR`)
+//! pulls the primary's log over the ordinary wire protocol
+//! (`ReplHandshake` / `ReplSnapshot` / `ReplPull` ops) and mirrors it
+//! byte-for-byte into its own durability directory.
+//!
+//! Topology and what ships when:
+//!
+//! - Only **fsync-covered** WAL bytes ship (the primary tracks a
+//!   byte-level durable watermark next to the record-level one group
+//!   commit introduced), so a follower only ever holds a prefix of
+//!   CONFIRMED history — under `sync_policy=always` that prefix covers
+//!   every acknowledged operation; under `every=N` it trails by at most
+//!   the fsync window.
+//! - Snapshot compaction bumps a segment *generation*; the follower
+//!   detects it (or a primary restart) on its next pull and re-baselines
+//!   from the new snapshot, which covers everything the old segment
+//!   held. Replay is idempotent and append-order-independent, so a chunk
+//!   applied twice is harmless.
+//! - While following, the replica's server is READ-ONLY: `Stats`/`Len`
+//!   answer from the live mirrored state (ready = survivors; unACKed
+//!   messages fold back to ready, which is also what a promotion
+//!   serves); every mutating op — queue AND data-store (the DataServer
+//!   is not replicated in v0) — is rejected. The mirror directory
+//!   carries a `replica.lock` marker so it cannot be served as a primary
+//!   by accident, and a directory already holding a non-mirror
+//!   durability history refuses to become one.
+//!
+//! Promotion (`jsdoop serve --durability_dir=F --promote`) clears the
+//! marker and recovers the mirror exactly like a crashed primary: acked
+//! messages never reappear, no (priority, seq) is ever re-issued
+//! (the mirrored snapshot header carries the seq high-water mark), and
+//! previously delivered messages redeliver flagged. Because replication
+//! is asynchronous, a follower promoted after a primary death serves the
+//! durable REPLICATED prefix — operations confirmed by the primary but
+//! not yet shipped are lost with it, the standard async-replication
+//! trade. Multi-follower fan-out and automatic failover are follow-ons
+//! (ROADMAP); both build on these same three ops.
 
 pub mod broker;
 pub mod client;
@@ -92,6 +134,14 @@ pub trait QueueService: QueueApi {
     /// Requeue expired unACKed messages (no-op default for backends that
     /// sweep internally).
     fn sweep(&self) {}
+
+    /// The WAL-backed broker behind this service, if replication can be
+    /// served from it ([`durability::DurableBroker`] overrides). The TCP
+    /// server answers `ReplHandshake`/`ReplSnapshot`/`ReplPull` through
+    /// this; `None` (plain broker, replica) rejects those ops.
+    fn replication(&self) -> Option<&durability::DurableBroker> {
+        None
+    }
 }
 
 impl QueueService for broker::Broker {

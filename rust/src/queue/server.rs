@@ -25,18 +25,41 @@ pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    sweeper_thread: Option<std::thread::JoinHandle<()>>,
     /// The hosted queue backend (plain [`crate::queue::broker::Broker`] or
     /// [`crate::queue::durability::DurableBroker`]).
     pub broker: Arc<dyn QueueService>,
     pub store: Arc<Store>,
 }
 
+/// Where a self-poke connects: a wildcard bind address (0.0.0.0 / ::) is
+/// not connectable on every platform (Windows refuses it), so rewrite an
+/// unspecified IP to the loopback of the same family.
+fn poke_addr(mut addr: std::net::SocketAddr) -> std::net::SocketAddr {
+    if addr.ip().is_unspecified() {
+        addr.set_ip(if addr.is_ipv4() {
+            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+        } else {
+            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+        });
+    }
+    addr
+}
+
 impl ServerHandle {
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // Poke the accept loop with a throwaway connection.
-        let _ = TcpStream::connect(self.addr);
+        // Poke the accept loop with a throwaway connection (a remote
+        // Shutdown op already poked it from handle_conn; a second poke
+        // against a closed listener is just a failed connect).
+        let _ = TcpStream::connect(poke_addr(self.addr));
         if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        // Stop-and-join the sweeper too: leaving it running after
+        // "shutdown" kept a broker Arc alive and a stray thread sweeping
+        // a server the caller believes is gone.
+        if let Some(h) = self.sweeper_thread.take() {
             let _ = h.join();
         }
     }
@@ -56,7 +79,7 @@ pub fn serve(addr: &str, broker: Arc<dyn QueueService>, store: Arc<Store>) -> Re
 
     // Visibility sweeper: the lazy in-op sweep covers active brokers; this
     // timer covers idle periods (all volunteers gone mid-batch).
-    {
+    let sweeper_thread = {
         let broker = broker.clone();
         let stop = stop.clone();
         std::thread::Builder::new()
@@ -66,8 +89,8 @@ pub fn serve(addr: &str, broker: Arc<dyn QueueService>, store: Arc<Store>) -> Re
                     std::thread::sleep(Duration::from_millis(100));
                     broker.sweep();
                 }
-            })?;
-    }
+            })?
+    };
 
     let accept_thread = {
         let broker = broker.clone();
@@ -87,17 +110,25 @@ pub fn serve(addr: &str, broker: Arc<dyn QueueService>, store: Arc<Store>) -> Re
                     let _ = std::thread::Builder::new()
                         .name("jsdoop-conn".into())
                         .spawn(move || {
-                            let _ = handle_conn(stream, broker.as_ref(), &store, &stop);
+                            let _ = handle_conn(stream, local, broker.as_ref(), &store, &stop);
                         });
                 }
             })?
     };
 
-    Ok(ServerHandle { addr: local, stop, accept_thread: Some(accept_thread), broker, store })
+    Ok(ServerHandle {
+        addr: local,
+        stop,
+        accept_thread: Some(accept_thread),
+        sweeper_thread: Some(sweeper_thread),
+        broker,
+        store,
+    })
 }
 
 fn handle_conn(
     mut stream: TcpStream,
+    local: std::net::SocketAddr,
     broker: &dyn QueueService,
     store: &Store,
     stop: &AtomicBool,
@@ -117,6 +148,13 @@ fn handle_conn(
         };
         if matches!(op, Op::Shutdown) {
             stop.store(true, Ordering::SeqCst);
+            // Setting the flag is not enough: the accept thread is parked
+            // in listener.incoming() and would stay there until some
+            // FUTURE connection arrived — `jsdoop serve` would hang after
+            // a remote shutdown. Poke it with a throwaway self-connection
+            // exactly like ServerHandle::shutdown does; the accept loop
+            // re-checks the flag and exits without serving it.
+            let _ = TcpStream::connect(poke_addr(local));
             write_frame(&mut stream, ST_OK, &[])?;
             return Ok(());
         }
@@ -317,8 +355,58 @@ fn respond<W: Write>(
             let v = store.incr(r.str()?)?;
             write_frame(stream, ST_OK, &v.to_le_bytes())?;
         }
+        // --- replication (queue/durability/replication) --------------------
+        // All three answer from the WAL-backed broker behind this service;
+        // a plain in-memory broker (or a replica) has no log to ship.
+        Op::ReplHandshake => {
+            let db = repl_source(broker)?;
+            let status = db.repl_status()?;
+            write_frame(stream, ST_OK, &status_body(&status, 0))?;
+        }
+        Op::ReplSnapshot => {
+            let db = repl_source(broker)?;
+            let (gen, bytes) = db.repl_snapshot()?;
+            if 9 + bytes.len() > MAX_FRAME {
+                // v0 limitation: a baseline must fit one frame. Chunked
+                // snapshot shipping rides the same ops later if needed.
+                anyhow::bail!(
+                    "snapshot of {} bytes exceeds the replication frame cap",
+                    bytes.len()
+                );
+            }
+            let mut out = Vec::with_capacity(8 + bytes.len());
+            out.extend_from_slice(&gen.to_le_bytes());
+            out.extend_from_slice(&bytes);
+            write_frame(stream, ST_OK, &out)?;
+        }
+        Op::ReplPull => {
+            let db = repl_source(broker)?;
+            let gen = r.u64()?;
+            let from = r.u64()?;
+            let max = r.u32()? as usize;
+            let (status, chunk) = db.repl_read(gen, from, max)?;
+            let mut out = status_body(&status, chunk.len());
+            out.extend_from_slice(&chunk);
+            write_frame(stream, ST_OK, &out)?;
+        }
     }
     Ok(())
+}
+
+fn repl_source(broker: &dyn QueueService) -> Result<&crate::queue::durability::DurableBroker> {
+    broker.replication().ok_or_else(|| {
+        anyhow::anyhow!("replication unavailable: this server is not backed by a durable (WAL) broker")
+    })
+}
+
+/// `[gen u64][durable_bytes u64][appended_bytes u64]` — the watermark
+/// prefix of ReplHandshake/ReplPull responses.
+fn status_body(status: &crate::queue::durability::ReplStatus, chunk_len: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24 + chunk_len);
+    out.extend_from_slice(&status.gen.to_le_bytes());
+    out.extend_from_slice(&status.durable_bytes.to_le_bytes());
+    out.extend_from_slice(&status.appended_bytes.to_le_bytes());
+    out
 }
 
 /// Parse a `[count u32][tag u64]*` tail (AckMany/NackMany bodies), with a

@@ -50,6 +50,13 @@ pub enum Op {
     // Admin
     Ping = 32,
     Shutdown = 33,
+    // Replication (queue/durability/replication): a follower pulls the
+    // primary's durable WAL bytes + snapshot baselines over the same
+    // framing as everything else. `ReplPull` responses carry a
+    // [`crate::queue::durability::replication`] segment chunk.
+    ReplHandshake = 40,
+    ReplSnapshot = 41,
+    ReplPull = 42,
 }
 
 impl Op {
@@ -77,6 +84,9 @@ impl Op {
             22 => Op::Incr,
             32 => Op::Ping,
             33 => Op::Shutdown,
+            40 => Op::ReplHandshake,
+            41 => Op::ReplSnapshot,
+            42 => Op::ReplPull,
             _ => bail!("unknown opcode {v}"),
         })
     }
@@ -90,6 +100,13 @@ pub const ST_NONE: u8 = 2;
 
 /// Hard cap on frame size: a model snapshot is ~440 KB; corpus ~1 MB.
 pub const MAX_FRAME: usize = 64 << 20;
+
+/// Initial buffer capacity for an incoming frame. The length prefix is
+/// UNTRUSTED until the payload actually arrives: allocating the claimed
+/// length up front would let one malformed/hostile frame per connection
+/// thread pin [`MAX_FRAME`] (64 MB) of memory without sending a single
+/// payload byte. [`read_frame`] starts here and grows as bytes land.
+const FRAME_ALLOC_START: usize = 64 << 10;
 
 pub fn write_frame<W: Write>(w: &mut W, head: u8, body: &[u8]) -> Result<()> {
     let len = 1 + body.len();
@@ -110,8 +127,16 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>)> {
     if len == 0 || len > MAX_FRAME {
         bail!("bad frame length {len}");
     }
-    let mut buf = vec![0u8; len];
-    r.read_exact(&mut buf)?;
+    // Read incrementally: capacity follows the bytes that actually
+    // arrive, so a frame CLAIMING 64 MB costs at most FRAME_ALLOC_START
+    // until the sender backs the claim with data. `take` bounds the read
+    // at the declared length; a short stream (peer hung up mid-frame) is
+    // a truncation error, exactly like read_exact reported before.
+    let mut buf = Vec::with_capacity(len.min(FRAME_ALLOC_START));
+    let got = (&mut *r).take(len as u64).read_to_end(&mut buf)?;
+    if got < len {
+        bail!("frame truncated: {got} of {len} bytes");
+    }
     let head = buf[0];
     buf.drain(..1);
     Ok((head, buf))
@@ -270,10 +295,63 @@ mod tests {
             Op::NackMany,
             Op::WaitVersion,
             Op::Shutdown,
+            Op::ReplHandshake,
+            Op::ReplSnapshot,
+            Op::ReplPull,
         ] {
             assert_eq!(Op::from_u8(op as u8).unwrap(), op);
         }
         assert!(Op::from_u8(99).is_err());
+    }
+
+    /// A Read that reports the largest buffer slice it was ever handed —
+    /// the observable difference between "allocate the claimed length up
+    /// front" (read_exact into a 64 MB vec hands the transport a 64 MB
+    /// slice) and the incremental read path.
+    struct TrackingReader<'a> {
+        data: &'a [u8],
+        max_slice: usize,
+    }
+
+    impl Read for TrackingReader<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.max_slice = self.max_slice.max(buf.len());
+            let n = buf.len().min(self.data.len());
+            buf[..n].copy_from_slice(&self.data[..n]);
+            self.data = &self.data[n..];
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn hostile_length_prefix_does_not_allocate_max_frame() {
+        // Frame header claims the full MAX_FRAME, backs it with 3 bytes,
+        // then EOF. The read must fail as a truncation AND never have
+        // asked the transport to fill a frame-sized buffer — the pre-fix
+        // code allocated (and handed read()) all 64 MB before reading a
+        // single payload byte.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(MAX_FRAME as u32).to_le_bytes());
+        bytes.extend_from_slice(&[1, 2, 3]);
+        let mut r = TrackingReader { data: &bytes, max_slice: 0 };
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+        assert!(
+            r.max_slice < 1 << 20,
+            "read_frame requested a {}-byte read for an unbacked length claim",
+            r.max_slice
+        );
+    }
+
+    #[test]
+    fn large_backed_frame_still_roundtrips() {
+        // The incremental path must not break real MB-scale frames.
+        let payload = vec![7u8; 3 << 20];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Op::Publish as u8, &payload).unwrap();
+        let (op, body) = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(op, Op::Publish as u8);
+        assert_eq!(body, payload);
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Failure-path regressions in the client/server layer: connection
+//! desync after a read timeout, a remote Shutdown leaving the accept
+//! loop parked, and unbacked giant length claims. Each of these fails
+//! against the pre-fix code.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jsdoop::data::Store;
+use jsdoop::queue::broker::Broker;
+use jsdoop::queue::client::RemoteQueue;
+use jsdoop::queue::server::serve;
+use jsdoop::queue::wire::{read_frame, write_frame, ST_OK};
+use jsdoop::queue::QueueApi;
+
+fn start() -> jsdoop::queue::server::ServerHandle {
+    serve(
+        "127.0.0.1:0",
+        Arc::new(Broker::new(Duration::from_secs(5))),
+        Arc::new(Store::new()),
+    )
+    .unwrap()
+}
+
+/// A scripted server for the desync regression: the FIRST request is
+/// answered only after `stall` (far past the client's read deadline),
+/// with a recognizable "stale" consume response. Whatever request
+/// arrives next — on the same connection (pre-fix clients never left
+/// it) or on a fresh one (the fix reconnects) — is answered with the
+/// "fresh" response the caller actually wants.
+fn stall_server(stall: Duration) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let consume_resp = |payload: &[u8]| {
+            let mut body = Vec::new();
+            body.extend_from_slice(&0xDEAD_BEEFu64.to_le_bytes()); // tag
+            body.push(0); // redelivered
+            body.extend_from_slice(payload);
+            body
+        };
+        let (mut s1, _) = listener.accept().unwrap();
+        let _ = read_frame(&mut s1); // request 1 (times out client-side)
+        std::thread::sleep(stall);
+        let _ = write_frame(&mut s1, ST_OK, &consume_resp(b"stale"));
+        // Pre-fix path: request 2 arrives HERE, after the stale bytes.
+        if read_frame(&mut s1).is_ok() {
+            let _ = write_frame(&mut s1, ST_OK, &consume_resp(b"fresh"));
+        }
+        // Post-fix path: request 2 arrives on a fresh connection.
+        if let Ok((mut s2, _)) = listener.accept() {
+            if read_frame(&mut s2).is_ok() {
+                let _ = write_frame(&mut s2, ST_OK, &consume_resp(b"fresh"));
+            }
+        }
+    });
+    (addr, handle)
+}
+
+#[test]
+fn read_timeout_poisons_conn_instead_of_desyncing() {
+    // Request 1 times out with its response still unread in the socket.
+    // Pre-fix, request 2 read THAT stale frame as its own response and
+    // silently returned another call's data; the fix poisons the
+    // connection on the transport error and reconnects.
+    let (addr, server) = stall_server(Duration::from_millis(400));
+    let q = RemoteQueue::connect_with_slack(&addr, Duration::from_millis(100)).unwrap();
+    let err = q
+        .consume("q", Duration::from_millis(50))
+        .expect_err("first consume must fail: server stalls past the read deadline");
+    assert!(
+        err.to_string().contains("poisoned"),
+        "timeout error should say the connection was poisoned: {err:#}"
+    );
+    // Request 2 must get ITS response, not request 1's stale bytes.
+    let d = q
+        .consume("q", Duration::from_secs(5))
+        .expect("second consume should succeed over a fresh connection")
+        .expect("scripted server always returns a delivery");
+    assert_eq!(
+        d.payload, b"fresh",
+        "second call read the first call's stale response (connection desync)"
+    );
+    server.join().unwrap();
+}
+
+#[test]
+fn reconnect_failure_is_a_clear_error_not_a_hang() {
+    // If the server is GONE after poisoning, the next call must fail
+    // fast with the reconnect context, not wedge or misparse.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        // Accept one connection, stall it past the client deadline, then
+        // vanish (listener and conn both drop).
+        let (mut s1, _) = listener.accept().unwrap();
+        let _ = read_frame(&mut s1);
+        std::thread::sleep(Duration::from_millis(200));
+    });
+    let q = RemoteQueue::connect_with_slack(&addr, Duration::from_millis(50)).unwrap();
+    let _ = q.consume("q", Duration::from_millis(20)).unwrap_err();
+    server.join().unwrap(); // listener dropped: nothing is listening now
+    let err = q.len("q").expect_err("no server to reconnect to");
+    assert!(
+        err.to_string().contains("reconnecting"),
+        "error should name the reconnect attempt: {err:#}"
+    );
+}
+
+#[test]
+fn remote_shutdown_unparks_accept_loop() {
+    // Op::Shutdown sets the stop flag; pre-fix nothing woke the accept
+    // thread out of listener.incoming(), so the listener stayed open
+    // (and `jsdoop serve` hung) until some future connection arrived.
+    // Post-fix handle_conn pokes the listener itself, so shortly after
+    // the op returns, the port must be CLOSED without our help.
+    let h = start();
+    let addr = h.addr;
+    let q = RemoteQueue::connect(&addr.to_string()).unwrap();
+    q.shutdown_server().unwrap();
+    std::thread::sleep(Duration::from_millis(500)); // generous grace
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "accept loop still parked after a remote Shutdown (listener open)"
+    );
+    // shutdown() now also joins the sweeper; bound it with a deadline so
+    // a join regression fails instead of hanging the suite.
+    let t0 = Instant::now();
+    h.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown() took {:?} joining accept/sweeper threads",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn unbacked_giant_length_claims_are_contained() {
+    // Eight connections each claim a MAX_FRAME-sized frame and back it
+    // with 3 bytes. Pre-fix each conn thread allocated 64 MB up front
+    // (512 MB across the batch); post-fix the buffer tracks arriving
+    // bytes (see wire.rs unit test for the allocation assertion) and the
+    // server just drops each connection as truncated. Either way the
+    // server must stay healthy for well-formed clients.
+    let h = start();
+    let mut conns = Vec::new();
+    for _ in 0..8 {
+        let mut s = TcpStream::connect(h.addr).unwrap();
+        s.write_all(&(jsdoop::queue::wire::MAX_FRAME as u32).to_le_bytes())
+            .unwrap();
+        s.write_all(&[1, 2, 3]).unwrap();
+        s.flush().unwrap();
+        conns.push(s); // keep them open: the claim stays pending
+    }
+    let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
+    q.declare("alive").unwrap();
+    q.publish("alive", b"x").unwrap();
+    assert_eq!(q.len("alive").unwrap(), 1);
+    drop(conns); // now the truncation is observed and the conns unwind
+    q.ping().unwrap();
+    h.shutdown();
+}

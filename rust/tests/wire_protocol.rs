@@ -214,6 +214,75 @@ fn stats_op_observes_lifecycle_over_tcp() {
 }
 
 #[test]
+fn replication_ops_roundtrip_over_tcp() {
+    use jsdoop::queue::client::ReplicaClient;
+    use jsdoop::queue::durability::replication::{FollowerCore, ReplSource, ReplicaBroker};
+    use jsdoop::queue::durability::{DurabilityOptions, DurableBroker, SyncPolicy};
+
+    let pdir = std::env::temp_dir().join(format!("jsdoop-wire-repl-{}", std::process::id()));
+    let fdir = std::env::temp_dir().join(format!("jsdoop-wire-repl-f-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&pdir);
+    let _ = std::fs::remove_dir_all(&fdir);
+    let opts = DurabilityOptions {
+        sync: SyncPolicy::Always,
+        compact_after_bytes: u64::MAX,
+        ..DurabilityOptions::default()
+    };
+    let broker = Arc::new(DurableBroker::open(&pdir, opts).unwrap());
+    let h = serve("127.0.0.1:0", broker.clone(), Arc::new(Store::new())).unwrap();
+    let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
+    q.declare("r").unwrap();
+    for i in 0..5u8 {
+        q.publish("r", &[i]).unwrap();
+    }
+    let d = q.consume("r", Duration::from_millis(200)).unwrap().unwrap();
+    q.ack("r", d.tag).unwrap();
+
+    // Drive the exact follower state machine over the real socket.
+    let mut client = ReplicaClient::connect(&h.addr.to_string()).unwrap();
+    let status = client.handshake().unwrap();
+    assert!(status.durable_bytes > 0, "always-policy ops must be durable");
+    assert_eq!(status.durable_bytes, status.appended_bytes);
+    let replica = Arc::new(ReplicaBroker::new());
+    let mut core = FollowerCore::new(&fdir, "wire-primary", replica.clone(), 128).unwrap();
+    while core.step(&mut client).unwrap() > 0 {}
+    // Converged: 4 ready on the primary, the acked head gone for good.
+    assert_eq!(replica.len("r").unwrap(), 4);
+    assert_eq!(replica.stats("r").unwrap().ready, 4);
+    assert_eq!(replica.lag().bytes_behind_durable(), 0);
+    h.shutdown();
+    let _ = std::fs::remove_dir_all(&pdir);
+    let _ = std::fs::remove_dir_all(&fdir);
+}
+
+#[test]
+fn replication_ops_rejected_without_wal_backing() {
+    // A plain in-memory broker has no log to ship: every repl op must be
+    // a contained ST_ERR, not a wedge.
+    let h = start();
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    for op in [Op::ReplHandshake, Op::ReplSnapshot] {
+        write_frame(&mut s, op as u8, &[]).unwrap();
+        let (st, body) = read_frame(&mut s).unwrap();
+        assert_eq!(st, ST_ERR);
+        assert!(String::from_utf8_lossy(&body).contains("replication unavailable"));
+    }
+    let mut pull = Vec::new();
+    pull.extend_from_slice(&0u64.to_le_bytes());
+    pull.extend_from_slice(&0u64.to_le_bytes());
+    pull.extend_from_slice(&0u32.to_le_bytes());
+    write_frame(&mut s, Op::ReplPull as u8, &pull).unwrap();
+    let (st, _) = read_frame(&mut s).unwrap();
+    assert_eq!(st, ST_ERR);
+    // Connection unharmed.
+    write_frame(&mut s, Op::Ping as u8, &[]).unwrap();
+    let (st, body) = read_frame(&mut s).unwrap();
+    assert_eq!(st, ST_OK);
+    assert_eq!(body, b"pong");
+    h.shutdown();
+}
+
+#[test]
 fn batched_gradient_burst_roundtrips() {
     // 16 gradient-sized messages in one frame each way (the per-batch
     // burst the reduce path moves), well under MAX_FRAME.
