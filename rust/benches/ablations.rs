@@ -7,6 +7,7 @@
 //! Run: cargo bench --bench ablations
 
 use jsdoop::faults::FaultPlan;
+use jsdoop::metrics::{write_bench_json, BenchRow};
 use jsdoop::profiles;
 use jsdoop::util::prng::Rng;
 use jsdoop::volunteer::sim::{simulate, SimParams, SimWorkload};
@@ -18,6 +19,7 @@ fn cluster(w: usize) -> (SimParams, Vec<f64>, FaultPlan) {
 
 fn main() {
     std::fs::create_dir_all("bench_results").unwrap();
+    let mut rows: Vec<BenchRow> = Vec::new();
     let wl = SimWorkload::paper();
 
     // ---- A1: cache effect on/off ------------------------------------
@@ -37,6 +39,12 @@ fn main() {
         let (s_on, s_off) = (base_on / t_on, base_off / t_off);
         println!("  {w:>2} workers: speedup cached {s_on:>6.2} vs flat {s_off:>6.2}");
         csv.push_str(&format!("{w},{s_on:.4},{s_off:.4}\n"));
+        rows.push(BenchRow {
+            op: format!("a1_cache/runtime_w{w}"),
+            iters: 1,
+            ns_per_op: t_on * 1e9,
+            speedup: Some(s_on / s_off),
+        });
     }
     std::fs::write("bench_results/ablation_cache.csv", csv).unwrap();
 
@@ -60,6 +68,12 @@ fn main() {
             t32 / 60.0
         );
         csv.push_str(&format!("{k},{t16:.1},{t32:.1},{gain:.3}\n"));
+        rows.push(BenchRow {
+            op: format!("a2_minibatch/t32_k{k}"),
+            iters: 1,
+            ns_per_op: t32 * 1e9,
+            speedup: Some(gain),
+        });
     }
     std::fs::write("bench_results/ablation_minibatch.csv", csv).unwrap();
     println!("  (expected: larger k moves the wall right: bigger 32-worker gain)");
@@ -77,6 +91,12 @@ fn main() {
             r.runtime
         );
         csv.push_str(&format!("{vis},{:.2},{dup}\n", r.runtime));
+        rows.push(BenchRow {
+            op: format!("a3_visibility/runtime_vis{vis}"),
+            iters: 1,
+            ns_per_op: r.runtime * 1e9,
+            speedup: None,
+        });
     }
     std::fs::write("bench_results/ablation_visibility.csv", csv).unwrap();
     println!(
@@ -95,7 +115,17 @@ fn main() {
             r.runtime, r.requeues
         );
         csv.push_str(&format!("{leavers},{:.2}\n", r.runtime));
+        rows.push(BenchRow {
+            op: format!("a4_churn/runtime_leavers{leavers}"),
+            iters: 1,
+            ns_per_op: r.runtime * 1e9,
+            speedup: None,
+        });
     }
     std::fs::write("bench_results/ablation_churn.csv", csv).unwrap();
     println!("csvs -> bench_results/ablation_*.csv");
+    match write_bench_json("ablations", &rows) {
+        Ok(path) => println!("bench json -> {}", path.display()),
+        Err(e) => eprintln!("warning: could not write BENCH_ablations.json: {e}"),
+    }
 }

@@ -1,0 +1,125 @@
+//! E10 — aggregation topologies: flat (the paper's single reducer) vs
+//! tree:<fanin> (hierarchical partial sums, coordinator/agg.rs) on the
+//! paper workload at 16 simulated volunteers.
+//!
+//! The headline metric is the **per-step critical path** through the
+//! busiest single agent — queue operations and gradient bytes — which is
+//! exactly what gates the paper's version barrier (Fig. 6's efficiency
+//! collapse). The simulation is deterministic, so the numbers are
+//! reproducible bit-for-bit; CI pins the tree figure with the
+//! `AGG_TREE_MAX_CRITICAL_OPS` env floor (same anti-flake style as
+//! `WAL_GROUP_MIN_SPEEDUP`).
+//!
+//! Run: cargo bench --bench agg_topology
+//! Output: BENCH_agg.json (machine-readable trajectory, uploaded by CI).
+
+use jsdoop::faults::FaultPlan;
+use jsdoop::metrics::{write_bench_json, BenchRow};
+use jsdoop::volunteer::sim::{simulate, AggregationPlan, SimParams, SimResult, SimWorkload};
+
+/// Nominal gradient-vector size for the bytes column: the reproduction's
+/// char-RNN parameter count is in the tens of thousands of f32s; the
+/// RATIO between plans is what matters, the absolute scale just makes
+/// the number readable.
+const NOMINAL_GRAD_BYTES: f64 = 50_000.0 * 4.0;
+
+const WORKERS: usize = 16;
+
+fn run(agg: AggregationPlan) -> SimResult {
+    let params = SimParams { agg, ..SimParams::default() };
+    let plan = FaultPlan::sync_start(WORKERS);
+    let speeds = vec![1.0; WORKERS];
+    simulate(SimWorkload::paper(), &params, &plan, &speeds, 42).unwrap()
+}
+
+fn main() {
+    let mut rows: Vec<BenchRow> = Vec::new();
+    let flat = run(AggregationPlan::Flat);
+    println!("== E10: aggregation topology, {WORKERS} volunteers, paper workload (k=16) ==");
+    println!(
+        "{:<10} {:>14} {:>16} {:>16} {:>12}",
+        "plan", "runtime (s)", "crit ops/step", "crit vecs/step", "crit KB/step"
+    );
+    let mut report = |name: &str, r: &SimResult, speedup_vs_flat: Option<f64>| {
+        println!(
+            "{:<10} {:>14.1} {:>16.2} {:>16.2} {:>12.0}",
+            name,
+            r.runtime,
+            r.critical_ops_per_step,
+            r.critical_grad_vecs_per_step,
+            r.critical_grad_vecs_per_step * NOMINAL_GRAD_BYTES / 1024.0
+        );
+        for (metric, value) in [
+            // Runtime in ns, matching every other BENCH_*.json's
+            // ns_per_op convention; the remaining rows are per-step
+            // COUNTS (named so), riding the same loose value field.
+            ("runtime", r.runtime * 1e9),
+            ("critical_ops_per_step", r.critical_ops_per_step),
+            ("critical_grad_vecs_per_step", r.critical_grad_vecs_per_step),
+            (
+                "critical_grad_bytes_per_step",
+                r.critical_grad_vecs_per_step * NOMINAL_GRAD_BYTES,
+            ),
+        ] {
+            rows.push(BenchRow {
+                op: format!("{name}/{metric}"),
+                iters: 1,
+                ns_per_op: value,
+                speedup: speedup_vs_flat,
+            });
+        }
+    };
+    report("flat", &flat, None);
+
+    let mut tree4 = None;
+    for fanin in [2u32, 4, 8] {
+        let r = run(AggregationPlan::Tree { fanin });
+        assert_eq!(
+            r.reduces_done, flat.reduces_done,
+            "every plan must complete the identical workload"
+        );
+        let ratio = flat.critical_ops_per_step / r.critical_ops_per_step;
+        report(&format!("tree:{fanin}"), &r, Some(ratio));
+        if fanin == 4 {
+            tree4 = Some(r);
+        }
+    }
+    let tree4 = tree4.unwrap();
+
+    // Acceptance shape: tree:4 must measurably cut BOTH critical-path
+    // dimensions vs the paper-faithful flat plan.
+    assert!(
+        tree4.critical_ops_per_step < flat.critical_ops_per_step,
+        "tree:4 ops/step {} must beat flat {}",
+        tree4.critical_ops_per_step,
+        flat.critical_ops_per_step
+    );
+    assert!(
+        tree4.critical_grad_vecs_per_step < flat.critical_grad_vecs_per_step,
+        "tree:4 vecs/step {} must beat flat {}",
+        tree4.critical_grad_vecs_per_step,
+        flat.critical_grad_vecs_per_step
+    );
+
+    // CI env floor (deterministic sim, so this is a hard regression pin,
+    // not a timing gate): the tree:4 critical ops per step must stay at
+    // or below the configured ceiling.
+    if let Ok(s) = std::env::var("AGG_TREE_MAX_CRITICAL_OPS") {
+        let ceiling: f64 = s.parse().expect("AGG_TREE_MAX_CRITICAL_OPS must be a number");
+        assert!(
+            tree4.critical_ops_per_step <= ceiling,
+            "tree:4 critical ops/step {} exceeds AGG_TREE_MAX_CRITICAL_OPS={}",
+            tree4.critical_ops_per_step,
+            ceiling
+        );
+        println!(
+            "  gate: tree:4 critical ops/step {:.2} <= {} OK",
+            tree4.critical_ops_per_step, ceiling
+        );
+    }
+
+    match write_bench_json("agg", &rows) {
+        Ok(path) => println!("bench json -> {}", path.display()),
+        Err(e) => eprintln!("warning: could not write BENCH_agg.json: {e}"),
+    }
+}

@@ -109,12 +109,12 @@ fn main() {
         let b = task.encode();
         std::hint::black_box(Task::decode(&b).unwrap());
     });
-    let grad = GradResult {
-        batch_ref: BatchRef { epoch: 1, batch: 2 },
-        minibatch: 3,
-        loss: 4.58,
-        grads: vec![0.001; 54_998],
-    };
+    let grad = GradResult::leaf(
+        BatchRef { epoch: 1, batch: 2 },
+        3,
+        4.58,
+        vec![0.001; 54_998],
+    );
     bench(&mut rows, "gradient encode (55k f32)", iters(2_000), || {
         std::hint::black_box(grad.encode().len());
     });

@@ -6,7 +6,7 @@
 //!
 //! Run: cargo bench --bench fig5_speedup
 
-use jsdoop::metrics::{render_series, series_csv, speedup};
+use jsdoop::metrics::{render_series, series_csv, speedup, write_bench_json, BenchRow};
 use jsdoop::profiles;
 use jsdoop::util::prng::Rng;
 use jsdoop::volunteer::sim::{simulate, SimWorkload};
@@ -36,6 +36,23 @@ fn main() {
     )
     .unwrap();
     println!("csv -> bench_results/fig5_speedup.csv");
+
+    // Machine-readable trajectory (BENCH_fig5.json): runtime per worker
+    // count in ns_per_op, the relative speedup in `speedup`.
+    let rows: Vec<BenchRow> = runtimes
+        .iter()
+        .zip(&points)
+        .map(|((w, t), (_, s))| BenchRow {
+            op: format!("cluster/speedup_w{w}"),
+            iters: 1,
+            ns_per_op: t * 1e9,
+            speedup: Some(*s),
+        })
+        .collect();
+    match write_bench_json("fig5", &rows) {
+        Ok(path) => println!("bench json -> {}", path.display()),
+        Err(e) => eprintln!("warning: could not write BENCH_fig5.json: {e}"),
+    }
 
     // Paper shape assertions.
     let s = |w: usize| points.iter().find(|(x, _)| *x == w).unwrap().1;

@@ -4,7 +4,7 @@
 //!
 //! Run: cargo bench --bench fig6_efficiency
 
-use jsdoop::metrics::{efficiency, render_series, series_csv};
+use jsdoop::metrics::{efficiency, render_series, series_csv, write_bench_json, BenchRow};
 use jsdoop::profiles;
 use jsdoop::util::prng::Rng;
 use jsdoop::volunteer::sim::{simulate, SimWorkload};
@@ -33,6 +33,23 @@ fn main() {
     std::fs::create_dir_all("bench_results").unwrap();
     std::fs::write("bench_results/fig6_efficiency.csv", series_csv(&points, |_| 1.0)).unwrap();
     println!("csv -> bench_results/fig6_efficiency.csv");
+
+    // Machine-readable trajectory (BENCH_fig6.json): runtime per worker
+    // count in ns_per_op, the efficiency ratio in `speedup`.
+    let rows: Vec<BenchRow> = runtimes
+        .iter()
+        .zip(&points)
+        .map(|((w, t), (_, eff))| BenchRow {
+            op: format!("cluster/efficiency_w{w}"),
+            iters: 1,
+            ns_per_op: t * 1e9,
+            speedup: Some(*eff),
+        })
+        .collect();
+    match write_bench_json("fig6", &rows) {
+        Ok(path) => println!("bench json -> {}", path.display()),
+        Err(e) => eprintln!("warning: could not write BENCH_fig6.json: {e}"),
+    }
 
     let e = |w: usize| points.iter().find(|(x, _)| *x == w).unwrap().1;
     let above_one = [2usize, 4, 8, 16].iter().all(|&w| e(w) > 1.0);

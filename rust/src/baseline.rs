@@ -14,6 +14,7 @@
 
 use anyhow::Result;
 
+use crate::coordinator::agg::AggregationPlan;
 use crate::coordinator::ProblemSpec;
 use crate::model::{GradAccumulator, ModelSnapshot};
 use crate::runtime::{Engine, GRAD_STEP_B128, GRAD_STEP_B8};
@@ -109,21 +110,49 @@ pub fn train_accumulated(
     spec: &ProblemSpec,
     init_params: Vec<f32>,
 ) -> Result<SeqOutcome> {
+    train_accumulated_with_plan(engine, corpus, spec, init_params, AggregationPlan::Flat)
+}
+
+/// [`train_accumulated`] generalized to an aggregation plan: the fold of
+/// each batch follows the plan's exact shape
+/// ([`AggregationPlan::oracle_fold`] — partial sums in slot-index order
+/// at every tree node), so a distributed run under `--agg=tree:<fanin>`
+/// with ANY worker count must produce bit-identical parameters to this
+/// serial loop — the tree twin of the E9 determinism oracle.
+pub fn train_accumulated_with_plan(
+    engine: &Engine,
+    corpus: &Corpus,
+    spec: &ProblemSpec,
+    init_params: Vec<f32>,
+    plan: AggregationPlan,
+) -> Result<SeqOutcome> {
     let s = &spec.schedule;
     let k = s.minibatches_per_batch();
     let mut snap = ModelSnapshot::initial(init_params);
     let mut losses = Vec::new();
     for epoch in 0..s.epochs {
         for b in 0..s.batches_per_epoch() {
-            let mut acc = GradAccumulator::new(k);
+            let mut grads_by_slot = Vec::with_capacity(k);
             let mut batch_loss = 0.0f32;
             for m in 0..k {
                 let (x, y) = s.minibatch(corpus, epoch, b, m);
                 let (grads, loss) = engine.grad_step(GRAD_STEP_B8, &snap.params, &x, &y)?;
-                acc.insert(m, grads)?;
+                grads_by_slot.push(grads);
                 batch_loss += loss / k as f32;
             }
-            let folded = acc.fold()?;
+            let folded = match plan {
+                // Flat keeps the historical accumulator path (bitwise
+                // identical; oracle_fold matches it, but the original
+                // code stays the reference).
+                AggregationPlan::Flat => {
+                    let mut acc = GradAccumulator::new(k);
+                    for (m, g) in grads_by_slot.into_iter().enumerate() {
+                        acc.insert(m, g)?;
+                    }
+                    acc.fold()?
+                }
+                AggregationPlan::Tree { .. } => plan.oracle_fold(&grads_by_slot)?,
+            };
             let (p, ms) =
                 engine.rmsprop_update(&snap.params, &snap.ms, &folded, spec.learning_rate)?;
             snap.params = p;

@@ -30,6 +30,10 @@ pub struct Config {
     // Table 3
     pub minibatch_size: usize,
     // Topology / runtime
+    /// Aggregation topology: "flat" (paper-faithful single reducer,
+    /// default) or "tree:<fanin>" (hierarchical partial sums — see
+    /// coordinator/agg.rs). Applies to `train`, `init`, and `sim`.
+    pub agg: String,
     pub workers: usize,
     pub queue_addr: Option<String>, // None = in-process broker
     pub data_addr: Option<String>,  // None = in-process store
@@ -76,6 +80,7 @@ impl Default for Config {
             epochs: 5,
             seq_len: 40,
             minibatch_size: 8,
+            agg: "flat".to_string(),
             workers: 4,
             queue_addr: None,
             data_addr: None,
@@ -112,8 +117,14 @@ impl Config {
         }
     }
 
+    /// The aggregation plan `agg` names (validated).
+    pub fn agg_plan(&self) -> Result<crate::coordinator::agg::AggregationPlan> {
+        self.agg.parse().context("bad agg")
+    }
+
     pub fn validate(&self) -> Result<()> {
         self.schedule().validate()?;
+        self.agg_plan()?;
         if self.workers == 0 {
             bail!("workers must be >= 1");
         }
@@ -217,6 +228,7 @@ impl Config {
             "epochs" => self.epochs = p(key, val)?,
             "seq_len" => self.seq_len = p(key, val)?,
             "minibatch_size" => self.minibatch_size = p(key, val)?,
+            "agg" => self.agg = val.to_string(),
             "workers" => self.workers = p(key, val)?,
             "queue_addr" => self.queue_addr = Some(val.to_string()),
             "data_addr" => self.data_addr = Some(val.to_string()),
@@ -302,6 +314,20 @@ mod tests {
         let mut c2 = Config::default();
         c2.learning_rate = -1.0;
         assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn agg_key_parses_and_validates() {
+        use crate::coordinator::agg::AggregationPlan;
+        let mut c = Config::default();
+        assert_eq!(c.agg_plan().unwrap(), AggregationPlan::Flat);
+        c.apply_cli(&["--agg=tree:4".into()]).unwrap();
+        assert_eq!(c.agg_plan().unwrap(), AggregationPlan::Tree { fanin: 4 });
+        c.validate().unwrap();
+        c.agg = "tree:1".into();
+        assert!(c.validate().is_err());
+        c.agg = "ring".into();
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! Aggregation topologies: how a batch's minibatch gradients are folded
+//! into one model update.
+//!
+//! The paper's protocol is `flat`: one Reduce task serially pulls all k
+//! full gradient vectors through one queue and applies the update alone —
+//! which is exactly why its own Fig. 6 shows relative efficiency falling
+//! below 1 at 32 volunteers (the version barrier is gated on a single
+//! volunteer's bandwidth). [`AggregationPlan`] makes the reduction path
+//! pluggable:
+//!
+//! - [`AggregationPlan::Flat`] — the paper-faithful default. The task
+//!   stream, priorities, and queue layout are byte-identical to the
+//!   original map→single-reduce pipeline (golden-tested in
+//!   rust/tests/agg_topology.rs).
+//! - [`AggregationPlan::Tree`] — `tree:<fanin>`: `Combine` tasks fold
+//!   disjoint slot-ranges of the batch's gradients into partial-sum
+//!   [`GradResult`](crate::coordinator::task::GradResult)s on per-level
+//!   queues (`results.map.e<e>.b<b>.l<level>`), and the final Reduce
+//!   folds only ≤ fanin partials. The busiest single volunteer moves
+//!   O(fanin) gradient vectors per step instead of O(k).
+//!
+//! # Tree shape
+//!
+//! Deterministic and compiled by the Initiator, never negotiated at run
+//! time: the node at level `l` with index `j` covers leaf slots
+//! `[j·fanin^l, min((j+1)·fanin^l, k))`. Combine levels run `1..=levels`,
+//! where [`AggregationPlan::levels`] is the smallest `L` with
+//! `ceil(k / fanin^L) <= fanin`; the Reduce folds the level-`L` nodes.
+//! `k <= fanin` degenerates to flat (no combine levels).
+//!
+//! Fold order is part of the contract: every node folds its children in
+//! slot-index order, so a run's final model depends only on the plan
+//! shape, never on volunteer scheduling — [`AggregationPlan::oracle_fold`]
+//! is the serial oracle of the same shape the property tests compare
+//! against.
+//!
+//! A third variant (asynchronous / bounded-staleness aggregation) slots
+//! in behind the same type — see ROADMAP.md.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, Result};
+
+/// How a batch's gradients are aggregated into one update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AggregationPlan {
+    /// Paper layout: one Reduce folds all k minibatch gradients.
+    Flat,
+    /// Hierarchical partial sums: Combine nodes with `fanin` children per
+    /// level, final Reduce folds ≤ `fanin` partials. `fanin >= 2`.
+    Tree { fanin: u32 },
+}
+
+impl Default for AggregationPlan {
+    fn default() -> Self {
+        AggregationPlan::Flat
+    }
+}
+
+impl fmt::Display for AggregationPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AggregationPlan::Flat => write!(f, "flat"),
+            AggregationPlan::Tree { fanin } => write!(f, "tree:{fanin}"),
+        }
+    }
+}
+
+impl FromStr for AggregationPlan {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        if s == "flat" {
+            return Ok(AggregationPlan::Flat);
+        }
+        if let Some(n) = s.strip_prefix("tree:") {
+            let fanin: u32 = n
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad tree fanin '{n}' in agg plan '{s}'"))?;
+            if fanin < 2 {
+                bail!("tree fanin must be >= 2, got {fanin}");
+            }
+            return Ok(AggregationPlan::Tree { fanin });
+        }
+        bail!("unknown aggregation plan '{s}' (flat | tree:<fanin>)")
+    }
+}
+
+/// Priority stride reserved per batch under a tree plan: room for stage
+/// 0 (maps), combine levels 1..=62, and the reduce at 63. With fanin 2 a
+/// u32 slot count needs at most 32 levels, so the stride never truncates
+/// a real schedule. Flat keeps the historical stride of 2 (maps at
+/// `version*2`, reduce at `version*2 + 1`) so the task stream is
+/// byte-identical to the original pipeline.
+pub const TREE_PRIORITY_STRIDE: u64 = 64;
+
+impl AggregationPlan {
+    /// Number of combine levels for a batch of `k` minibatch slots
+    /// (0 = the Reduce folds the leaves directly).
+    pub fn levels(&self, k: u32) -> u32 {
+        match self {
+            AggregationPlan::Flat => 0,
+            AggregationPlan::Tree { fanin } => {
+                let mut l = 0u32;
+                let mut count = k.max(1);
+                while count > *fanin {
+                    l += 1;
+                    count = count.div_ceil(*fanin);
+                }
+                l
+            }
+        }
+    }
+
+    /// Leaf slots covered by one node at `level` (`fanin^level`; 1 at the
+    /// leaves). Saturates, which is harmless: a saturated width covers
+    /// every slot of any u32-sized batch.
+    pub fn node_width(&self, level: u32) -> u64 {
+        match self {
+            AggregationPlan::Flat => 1,
+            AggregationPlan::Tree { fanin } => (*fanin as u64).saturating_pow(level),
+        }
+    }
+
+    /// The disjoint slot ranges `[lo, hi)` of the nodes at `level`, in
+    /// index order (level 0 = the k unit leaf ranges).
+    pub fn nodes_at(&self, k: u32, level: u32) -> Vec<(u32, u32)> {
+        let w = self.node_width(level);
+        let mut out = Vec::new();
+        let mut lo = 0u64;
+        while lo < k as u64 {
+            let hi = (lo + w).min(k as u64);
+            out.push((lo as u32, hi as u32));
+            lo = hi;
+        }
+        out
+    }
+
+    /// The child ranges (at `level - 1`) of the node covering `[lo, hi)`
+    /// at `level >= 1`, in index order. Each node has ≤ fanin children.
+    pub fn child_ranges(&self, level: u32, lo: u32, hi: u32) -> Vec<(u32, u32)> {
+        debug_assert!(level >= 1);
+        let w = self.node_width(level - 1);
+        let mut out = Vec::new();
+        let mut a = lo as u64;
+        while a < hi as u64 {
+            let b = (a + w).min(hi as u64);
+            out.push((a as u32, b as u32));
+            a = b;
+        }
+        out
+    }
+
+    /// Ranges the final Reduce of a k-slot batch folds (the top level's
+    /// nodes; for flat, the k unit leaf ranges).
+    pub fn reduce_ranges(&self, k: u32) -> Vec<(u32, u32)> {
+        self.nodes_at(k, self.levels(k))
+    }
+
+    /// Every node of the subtree rooted at the `level` node covering
+    /// `[lo, hi)`, as (level, lo, hi) triples — the leaves (level 0) and
+    /// the root included. This is the full set of tasks that can
+    /// regenerate the range's partial sum from the corpus: poison
+    /// recovery republishes all of them, because a combine ACKs its
+    /// inputs away once its output is published, so republishing the
+    /// root combine alone could never refill (agent.rs).
+    pub fn subtree(&self, level: u32, lo: u32, hi: u32) -> Vec<(u32, u32, u32)> {
+        let mut out = Vec::new();
+        for l in 0..=level {
+            let w = self.node_width(l);
+            let mut a = lo as u64;
+            while a < hi as u64 {
+                let b = (a + w).min(hi as u64);
+                out.push((l, a as u32, b as u32));
+                a = b;
+            }
+        }
+        out
+    }
+
+    /// Batch-priority stride: how many priority slots one batch occupies
+    /// in the task queue.
+    pub fn stride(&self) -> u64 {
+        match self {
+            AggregationPlan::Flat => 2,
+            AggregationPlan::Tree { .. } => TREE_PRIORITY_STRIDE,
+        }
+    }
+
+    /// Queue priority for a task of `version` at `stage` (0 = maps,
+    /// l = combine level l, `u32::MAX` = reduce): batch order first, then
+    /// stage order within the batch — level-l combines strictly precede
+    /// level-(l+1), and the reduce comes last. This is the total order
+    /// the deadlock-freedom argument in coordinator/mod.rs rests on.
+    pub fn task_priority(&self, version: u64, stage: u32) -> u64 {
+        let stride = self.stride();
+        version * stride + (stage as u64).min(stride - 1)
+    }
+
+    /// Serial oracle of this plan's fold shape: node sums computed in
+    /// slot-index order at every level, final mean over the top-level
+    /// partials. For [`AggregationPlan::Flat`] this is bit-identical to
+    /// [`GradAccumulator::fold`](crate::model::GradAccumulator::fold) —
+    /// sum the k leaves in index order, multiply by `1/k as f32`.
+    pub fn oracle_fold(&self, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let k = grads.len() as u32;
+        if k == 0 {
+            bail!("oracle_fold needs at least one gradient");
+        }
+        let n = grads[0].len();
+        for g in grads {
+            if g.len() != n {
+                bail!("gradient length mismatch");
+            }
+        }
+        // Sum of the node covering [lo, hi) at `level`, children folded
+        // in index order — the same add sequence every Combine performs
+        // (zero-initialized accumulator, exactly like
+        // `GradAccumulator::fold_sum`, so even signed zeros match).
+        fn node_sum(
+            plan: &AggregationPlan,
+            grads: &[Vec<f32>],
+            level: u32,
+            lo: u32,
+            hi: u32,
+        ) -> Vec<f32> {
+            if level == 0 {
+                return grads[lo as usize].clone();
+            }
+            let n = grads[0].len();
+            let mut acc = vec![0.0f32; n];
+            for (clo, chi) in plan.child_ranges(level, lo, hi) {
+                let child = node_sum(plan, grads, level - 1, clo, chi);
+                for (x, y) in acc.iter_mut().zip(child.iter()) {
+                    *x += y;
+                }
+            }
+            acc
+        }
+        let top = self.levels(k);
+        let mut acc = vec![0.0f32; n];
+        for (lo, hi) in self.nodes_at(k, top) {
+            let s = node_sum(self, grads, top, lo, hi);
+            for (a, b) in acc.iter_mut().zip(s.iter()) {
+                *a += b;
+            }
+        }
+        let inv = 1.0f32 / k as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        assert_eq!("flat".parse::<AggregationPlan>().unwrap(), AggregationPlan::Flat);
+        assert_eq!(
+            "tree:4".parse::<AggregationPlan>().unwrap(),
+            AggregationPlan::Tree { fanin: 4 }
+        );
+        assert_eq!(AggregationPlan::Tree { fanin: 3 }.to_string(), "tree:3");
+        assert_eq!(AggregationPlan::Flat.to_string(), "flat");
+        assert!("tree:1".parse::<AggregationPlan>().is_err());
+        assert!("tree:".parse::<AggregationPlan>().is_err());
+        assert!("ring".parse::<AggregationPlan>().is_err());
+    }
+
+    #[test]
+    fn levels_match_fanin() {
+        let t4 = AggregationPlan::Tree { fanin: 4 };
+        assert_eq!(t4.levels(16), 1); // 16 -> 4 nodes <= fanin
+        assert_eq!(t4.levels(4), 0); // k <= fanin: flat-degenerate
+        assert_eq!(t4.levels(17), 2); // 17 -> 5 -> 2
+        let t2 = AggregationPlan::Tree { fanin: 2 };
+        assert_eq!(t2.levels(16), 3); // 16 -> 8 -> 4 -> 2
+        assert_eq!(t2.levels(2), 0);
+        assert_eq!(AggregationPlan::Flat.levels(16), 0);
+    }
+
+    #[test]
+    fn nodes_and_children_partition() {
+        let t = AggregationPlan::Tree { fanin: 4 };
+        assert_eq!(t.nodes_at(16, 1), vec![(0, 4), (4, 8), (8, 12), (12, 16)]);
+        // Ragged tail: 10 slots, fanin 4.
+        assert_eq!(t.nodes_at(10, 1), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(t.child_ranges(1, 8, 10), vec![(8, 9), (9, 10)]);
+        let t2 = AggregationPlan::Tree { fanin: 2 };
+        assert_eq!(t2.nodes_at(16, 3), vec![(0, 8), (8, 16)]);
+        assert_eq!(t2.child_ranges(3, 8, 16), vec![(8, 12), (12, 16)]);
+        // Every level's nodes partition [0, k).
+        for k in [1u32, 2, 5, 16, 17, 33] {
+            for fanin in [2u32, 3, 4, 8] {
+                let p = AggregationPlan::Tree { fanin };
+                for level in 0..=p.levels(k) {
+                    let nodes = p.nodes_at(k, level);
+                    let mut expect = 0u32;
+                    for (lo, hi) in &nodes {
+                        assert_eq!(*lo, expect);
+                        assert!(hi > lo);
+                        expect = *hi;
+                    }
+                    assert_eq!(expect, k);
+                    if level >= 1 {
+                        for (lo, hi) in nodes {
+                            let kids = p.child_ranges(level, lo, hi);
+                            assert!(kids.len() <= fanin as usize);
+                            assert_eq!(kids.first().unwrap().0, lo);
+                            assert_eq!(kids.last().unwrap().1, hi);
+                        }
+                    }
+                }
+                // The reduce folds at most fanin partials.
+                assert!(p.reduce_ranges(k).len() <= fanin as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn subtree_reaches_the_leaves() {
+        let t2 = AggregationPlan::Tree { fanin: 2 };
+        // Root [4, 8) at level 2: its 2 level-1 children, its 4 leaves,
+        // and itself — every task poison recovery must republish.
+        assert_eq!(
+            t2.subtree(2, 4, 8),
+            vec![(0, 4, 5), (0, 5, 6), (0, 6, 7), (0, 7, 8), (1, 4, 6), (1, 6, 8), (2, 4, 8)]
+        );
+        // Level 0 root (flat reduce's missing leaf): just the map.
+        assert_eq!(t2.subtree(0, 3, 4), vec![(0, 3, 4)]);
+        // Ragged tail keeps its true bounds.
+        let t4 = AggregationPlan::Tree { fanin: 4 };
+        assert_eq!(t4.subtree(1, 8, 10), vec![(0, 8, 9), (0, 9, 10), (1, 8, 10)]);
+    }
+
+    #[test]
+    fn flat_priorities_are_the_historical_scheme() {
+        let p = AggregationPlan::Flat;
+        assert_eq!(p.task_priority(0, 0), 0);
+        assert_eq!(p.task_priority(0, u32::MAX), 1);
+        assert_eq!(p.task_priority(7, 0), 14);
+        assert_eq!(p.task_priority(7, u32::MAX), 15);
+    }
+
+    #[test]
+    fn tree_priorities_order_stages_within_a_batch() {
+        let p = AggregationPlan::Tree { fanin: 2 };
+        let v = 3u64;
+        let map = p.task_priority(v, 0);
+        let c1 = p.task_priority(v, 1);
+        let c2 = p.task_priority(v, 2);
+        let red = p.task_priority(v, u32::MAX);
+        assert!(map < c1 && c1 < c2 && c2 < red);
+        // Everything of batch v precedes everything of batch v+1.
+        assert!(red < p.task_priority(v + 1, 0));
+    }
+
+    #[test]
+    fn oracle_fold_flat_matches_accumulator() {
+        use crate::model::GradAccumulator;
+        let grads: Vec<Vec<f32>> =
+            (0..5).map(|i| vec![i as f32 * 0.3 + 0.1, -(i as f32) * 0.7]).collect();
+        let mut acc = GradAccumulator::new(5);
+        for (i, g) in grads.iter().enumerate() {
+            acc.insert(i, g.clone()).unwrap();
+        }
+        assert_eq!(
+            AggregationPlan::Flat.oracle_fold(&grads).unwrap(),
+            acc.fold().unwrap()
+        );
+    }
+
+    #[test]
+    fn oracle_fold_shapes_agree_on_exact_sums() {
+        // Integer-valued gradients sum exactly in any association, so
+        // every plan shape must produce the same mean.
+        let grads: Vec<Vec<f32>> = (0..16).map(|i| vec![(i % 7) as f32 - 3.0, i as f32]).collect();
+        let flat = AggregationPlan::Flat.oracle_fold(&grads).unwrap();
+        for fanin in [2u32, 3, 4, 8] {
+            let tree = AggregationPlan::Tree { fanin }.oracle_fold(&grads).unwrap();
+            assert_eq!(flat, tree, "fanin {fanin}");
+        }
+    }
+}

@@ -5,6 +5,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::agg::AggregationPlan;
 use crate::coordinator::task::{BatchRef, Task};
 use crate::coordinator::version::publish_model;
 use crate::coordinator::{keys, queues, ProblemSpec};
@@ -17,19 +18,36 @@ use crate::textdata::Corpus;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SetupSummary {
     pub map_tasks: usize,
+    pub combine_tasks: usize,
     pub reduce_tasks: usize,
     pub total_versions: u64,
 }
 
-/// Step 0-1: upload corpus + initial model + spec to the DataServer,
-/// declare all queues, enqueue every task in batch order (maps of batch k,
-/// then reduce of batch k — the paper's InitialQueue layout).
+/// [`setup_problem_with`] under the paper-faithful flat plan: the task
+/// stream, priorities, and queue layout this publishes are byte-identical
+/// to the original pipeline (golden-tested in rust/tests/agg_topology.rs).
 pub fn setup_problem(
     queue: &dyn QueueApi,
     data: &dyn DataApi,
     spec: &ProblemSpec,
     corpus: &Corpus,
     init_params: Vec<f32>,
+) -> Result<SetupSummary> {
+    setup_problem_with(queue, data, spec, corpus, init_params, AggregationPlan::Flat)
+}
+
+/// Step 0-1: upload corpus + initial model + spec to the DataServer,
+/// declare all queues, compile `plan` into the task stream, and enqueue
+/// every task in batch order — maps of batch k, then (tree plans) its
+/// combine levels bottom-up, then its reduce: the paper's InitialQueue
+/// layout, extended with the plan's combine stages.
+pub fn setup_problem_with(
+    queue: &dyn QueueApi,
+    data: &dyn DataApi,
+    spec: &ProblemSpec,
+    corpus: &Corpus,
+    init_params: Vec<f32>,
+    plan: AggregationPlan,
 ) -> Result<SetupSummary> {
     spec.schedule.validate()?;
     if corpus.len() < spec.schedule.seq_len + 2 {
@@ -42,34 +60,70 @@ pub fn setup_problem(
     data.del(keys::STOP)?;
     publish_model(data, &ModelSnapshot::initial(init_params))?;
 
-    // QueueServer: the InitialQueue + one results queue per batch.
+    // QueueServer: the InitialQueue + the per-level results queues of
+    // every batch (level 0 always; levels 1..=L under a tree plan).
     queue.declare(queues::TASKS)?;
 
     let s = &spec.schedule;
     let k = s.minibatches_per_batch() as u32;
+    let top = plan.levels(k);
     let mut map_tasks = 0usize;
+    let mut combine_tasks = 0usize;
     let mut reduce_tasks = 0usize;
     for epoch in 0..s.epochs as u32 {
         for batch in 0..s.batches_per_epoch() as u32 {
             let bref = BatchRef { epoch, batch };
             let version = bref.global_index(s.batches_per_epoch() as u32);
-            queue.declare(&queues::map_results(bref))?;
-            // Priority = batch order (maps before their reduce): the
-            // queue serves earliest-batch work first no matter how tasks
-            // re-enter it (redelivery, hand-back) — the deadlock-freedom
-            // backbone, see coordinator/mod.rs.
+            for level in 0..=top {
+                queue.declare(&queues::agg_results(bref, level))?;
+            }
+            // Priority = batch order, stage order within the batch (maps,
+            // then combine levels bottom-up, then the reduce): the queue
+            // serves the earliest outstanding work first no matter how
+            // tasks re-enter it (redelivery, hand-back) — the
+            // deadlock-freedom backbone, see coordinator/mod.rs.
             for minibatch in 0..k {
                 let t = Task::Map { batch_ref: bref, minibatch, model_version: version };
-                queue.publish_pri(queues::TASKS, &t.encode(), version * 2)?;
+                queue.publish_pri(queues::TASKS, &t.encode(), plan.task_priority(version, 0))?;
                 map_tasks += 1;
             }
-            let t = Task::Reduce { batch_ref: bref, num_minibatches: k, model_version: version };
-            queue.publish_pri(queues::TASKS, &t.encode(), version * 2 + 1)?;
+            if let AggregationPlan::Tree { fanin } = plan {
+                for level in 1..=top {
+                    for (slot_lo, slot_hi) in plan.nodes_at(k, level) {
+                        let t = Task::Combine {
+                            batch_ref: bref,
+                            level,
+                            slot_lo,
+                            slot_hi,
+                            fanin,
+                            model_version: version,
+                        };
+                        queue.publish_pri(
+                            queues::TASKS,
+                            &t.encode(),
+                            plan.task_priority(version, level),
+                        )?;
+                        combine_tasks += 1;
+                    }
+                }
+            }
+            let t = Task::Reduce {
+                batch_ref: bref,
+                num_minibatches: k,
+                model_version: version,
+                plan,
+            };
+            queue.publish_pri(
+                queues::TASKS,
+                &t.encode(),
+                plan.task_priority(version, u32::MAX),
+            )?;
             reduce_tasks += 1;
         }
     }
     Ok(SetupSummary {
         map_tasks,
+        combine_tasks,
         reduce_tasks,
         total_versions: spec.total_versions(),
     })
@@ -114,9 +168,65 @@ mod tests {
         // tiny: 32 examples / 16 batch = 2 batches/epoch, 1 epoch,
         // 16/8 = 2 minibatches per batch.
         assert_eq!(summary.map_tasks, 4);
+        assert_eq!(summary.combine_tasks, 0);
         assert_eq!(summary.reduce_tasks, 2);
         assert_eq!(summary.total_versions, 2);
         assert_eq!(broker.len(queues::TASKS).unwrap(), 6);
+    }
+
+    #[test]
+    fn tree_setup_emits_combine_stages_in_order() {
+        use crate::coordinator::agg::AggregationPlan;
+        let broker = Broker::with_default_timeout();
+        let store = Store::new();
+        // 64 examples / 32 batch = 2 batches, minibatch 8 -> k = 4.
+        let mut schedule = Schedule::tiny();
+        schedule.batch_size = 32;
+        schedule.examples_per_epoch = 64;
+        let spec = ProblemSpec { schedule, learning_rate: 0.1 };
+        let corpus = Corpus::synthetic_js(1, 2000);
+        let plan = AggregationPlan::Tree { fanin: 2 };
+        let summary =
+            setup_problem_with(&broker, &store, &spec, &corpus, vec![0.0; 16], plan).unwrap();
+        // k=4, fanin 2: one combine level with 2 nodes per batch.
+        assert_eq!(summary.map_tasks, 8);
+        assert_eq!(summary.combine_tasks, 4);
+        assert_eq!(summary.reduce_tasks, 2);
+        // Per-level queues exist for both batches.
+        for batch in 0..2u32 {
+            let b = BatchRef { epoch: 0, batch };
+            assert_eq!(broker.len(&queues::agg_results(b, 0)).unwrap(), 0);
+            assert_eq!(broker.len(&queues::agg_results(b, 1)).unwrap(), 0);
+        }
+        // Drain order: maps, combines (bottom-up), reduce — per batch.
+        let mut kinds = Vec::new();
+        while let Some(d) = broker
+            .consume(queues::TASKS, Duration::from_millis(1))
+            .unwrap()
+        {
+            let t = Task::decode(&d.payload).unwrap();
+            kinds.push((t.kind_str(), t.model_version()));
+            broker.ack(queues::TASKS, d.tag).unwrap();
+        }
+        assert_eq!(
+            kinds,
+            vec![
+                ("map", 0),
+                ("map", 0),
+                ("map", 0),
+                ("map", 0),
+                ("combine", 0),
+                ("combine", 0),
+                ("reduce", 0),
+                ("map", 1),
+                ("map", 1),
+                ("map", 1),
+                ("map", 1),
+                ("combine", 1),
+                ("combine", 1),
+                ("reduce", 1),
+            ]
+        );
     }
 
     #[test]

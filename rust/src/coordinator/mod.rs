@@ -2,7 +2,8 @@
 //! execution flow over queues, and the model-version synchronization
 //! protocol of paper §IV.G.
 //!
-//! Layout of the distributed training problem (paper Fig 3):
+//! Layout of the distributed training problem (paper Fig 3), under the
+//! default `flat` aggregation plan:
 //!
 //! ```text
 //!  tasks            = [ map(b0,0..16), reduce(b0), map(b1,0..16), ... ]   FIFO
@@ -10,12 +11,37 @@
 //!  DataServer: "problem" (spec), "corpus", "model" (versioned snapshot)
 //! ```
 //!
-//! Both task kinds share ONE FIFO queue, exactly like the paper's
-//! `InitialQueue`: with in-order consumption this guarantees the reduce of
-//! batch k is claimed before any map of batch k+1, which (together with
-//! redelivery-to-front) makes the protocol deadlock-free for any number of
-//! volunteers >= 1 (proved by the property tests).
+//! Under `tree:<fanin>` (see [`agg::AggregationPlan`]) each batch
+//! additionally gets one results queue per combine level, and the task
+//! stream interleaves the combine stages between the maps and the reduce:
+//!
+//! ```text
+//!  tasks                 = [ map(b0,0..16),
+//!                            combine(b0, l1, [0,4)) .. combine(b0, l1, [12,16)),
+//!                            reduce(b0),                      # folds 4 partials
+//!                            map(b1,0..16), ... ]
+//!  results.map.e<e>.b<b>      = leaf gradients (level 0; name unchanged)
+//!  results.map.e<e>.b<b>.l<k> = partial sums published by level-k combines
+//! ```
+//!
+//! All task kinds share ONE priority queue, exactly like the paper's
+//! `InitialQueue`. Priorities encode a TOTAL order — batch first, then
+//! stage within the batch (maps < level-1 combines < level-2 combines <
+//! ... < reduce; see [`agg::AggregationPlan::task_priority`]) — and
+//! NACK/redelivery returns a task to its original slot, so the queue head
+//! is always the globally earliest outstanding task. Deadlock freedom for
+//! any number of volunteers >= 1 follows by induction on that order: a
+//! task at stage s of batch v can only wait on results produced by tasks
+//! strictly earlier in the order (maps wait on version v, which batch
+//! v-1's reduce publishes; a level-k combine waits on level-(k-1) results
+//! of its own slot-range; the reduce waits on top-level partials), and a
+//! volunteer parked on a later task periodically probes the head and
+//! trades its held task for any strictly-earlier one (the priority-swap /
+//! inline-steal rule in volunteer/agent.rs) — so the earliest unfinished
+//! task always finds a runner, exactly as in the proved two-stage case
+//! (property-tested for both plans in rust/tests/).
 
+pub mod agg;
 pub mod initiator;
 pub mod task;
 pub mod version;
@@ -35,6 +61,18 @@ pub mod queues {
     /// can never contaminate batch k+1.
     pub fn map_results(b: BatchRef) -> String {
         format!("results.map.e{}.b{}", b.epoch, b.batch)
+    }
+
+    /// Results queue for aggregation `level` of a batch: level 0 is the
+    /// leaf queue ([`map_results`], name unchanged so the flat layout is
+    /// byte-identical to the paper's); level k >= 1 holds the partial
+    /// sums published by level-k combine tasks.
+    pub fn agg_results(b: BatchRef, level: u32) -> String {
+        if level == 0 {
+            map_results(b)
+        } else {
+            format!("results.map.e{}.b{}.l{}", b.epoch, b.batch, level)
+        }
     }
 }
 

@@ -4,9 +4,18 @@
 //! model v -> v+1). Tasks and results are plain byte payloads on the queue
 //! — volunteers need no a-priori knowledge beyond the task codec, exactly
 //! like the paper's browser workers downloading task code + params.
+//!
+//! Under a [`AggregationPlan::Tree`] plan the Initiator additionally
+//! emits *combine* tasks: fold a disjoint slot-range of the batch's
+//! gradients into one partial-sum [`GradResult`] on the next level's
+//! queue (see coordinator/agg.rs). The flat encodings are frozen — a tag-2
+//! Reduce payload is byte-for-byte what it always was, and legacy
+//! single-minibatch gradient payloads still decode — so mixed-version
+//! fleets and the golden flat task stream both keep working.
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::agg::AggregationPlan;
 use crate::util::{f32_from_le_bytes, f32_to_le_bytes};
 
 /// Position of a batch in the training run. `global_index = epoch * batches_per_epoch + batch`
@@ -33,28 +42,49 @@ pub enum Task {
         minibatch: u32,
         model_version: u64,
     },
-    /// Collect `num_minibatches` gradients for `batch_ref`, fold them in
-    /// index order, RMSprop-update model `model_version` -> `+1`.
+    /// Collect the batch's top-level partials (under `plan`; for
+    /// [`AggregationPlan::Flat`] that is all `num_minibatches` leaf
+    /// gradients), fold them in slot-index order, RMSprop-update model
+    /// `model_version` -> `+1`.
     Reduce {
         batch_ref: BatchRef,
         num_minibatches: u32,
+        model_version: u64,
+        plan: AggregationPlan,
+    },
+    /// Tree plans only: fold the level-(`level`-1) results covering leaf
+    /// slots `[slot_lo, slot_hi)` into one partial sum on the `level`
+    /// queue. `fanin` pins the plan so the combiner can derive its child
+    /// ranges (and the producer tasks to republish if a payload poisons).
+    Combine {
+        batch_ref: BatchRef,
+        level: u32,
+        slot_lo: u32,
+        slot_hi: u32,
+        fanin: u32,
         model_version: u64,
     },
 }
 
 const TAG_MAP: u8 = 1;
-const TAG_REDUCE: u8 = 2;
+const TAG_REDUCE: u8 = 2; // frozen flat layout (legacy wire format)
+const TAG_COMBINE: u8 = 3;
+const TAG_REDUCE_TREE: u8 = 4;
 
 impl Task {
     pub fn model_version(&self) -> u64 {
         match self {
-            Task::Map { model_version, .. } | Task::Reduce { model_version, .. } => *model_version,
+            Task::Map { model_version, .. }
+            | Task::Reduce { model_version, .. }
+            | Task::Combine { model_version, .. } => *model_version,
         }
     }
 
     pub fn batch_ref(&self) -> BatchRef {
         match self {
-            Task::Map { batch_ref, .. } | Task::Reduce { batch_ref, .. } => *batch_ref,
+            Task::Map { batch_ref, .. }
+            | Task::Reduce { batch_ref, .. }
+            | Task::Combine { batch_ref, .. } => *batch_ref,
         }
     }
 
@@ -62,12 +92,24 @@ impl Task {
         match self {
             Task::Map { .. } => "map",
             Task::Reduce { .. } => "reduce",
+            Task::Combine { .. } => "combine",
+        }
+    }
+
+    /// Within-batch stage for the priority order (and the priority-swap
+    /// `precedes` rule): maps at 0, a combine at its output level, the
+    /// reduce last. See [`AggregationPlan::task_priority`].
+    pub fn stage(&self) -> u32 {
+        match self {
+            Task::Map { .. } => 0,
+            Task::Combine { level, .. } => *level,
+            Task::Reduce { .. } => u32::MAX,
         }
     }
 
     /// Compact fixed-layout binary codec (wire + queue payload).
     pub fn encode(&self) -> Vec<u8> {
-        let mut b = Vec::with_capacity(25);
+        let mut b = Vec::with_capacity(33);
         match self {
             Task::Map { batch_ref, minibatch, model_version } => {
                 b.push(TAG_MAP);
@@ -76,57 +118,182 @@ impl Task {
                 b.extend_from_slice(&minibatch.to_le_bytes());
                 b.extend_from_slice(&model_version.to_le_bytes());
             }
-            Task::Reduce { batch_ref, num_minibatches, model_version } => {
-                b.push(TAG_REDUCE);
+            Task::Reduce { batch_ref, num_minibatches, model_version, plan } => match plan {
+                AggregationPlan::Flat => {
+                    b.push(TAG_REDUCE);
+                    b.extend_from_slice(&batch_ref.epoch.to_le_bytes());
+                    b.extend_from_slice(&batch_ref.batch.to_le_bytes());
+                    b.extend_from_slice(&num_minibatches.to_le_bytes());
+                    b.extend_from_slice(&model_version.to_le_bytes());
+                }
+                AggregationPlan::Tree { fanin } => {
+                    b.push(TAG_REDUCE_TREE);
+                    b.extend_from_slice(&batch_ref.epoch.to_le_bytes());
+                    b.extend_from_slice(&batch_ref.batch.to_le_bytes());
+                    b.extend_from_slice(&num_minibatches.to_le_bytes());
+                    b.extend_from_slice(&model_version.to_le_bytes());
+                    b.extend_from_slice(&fanin.to_le_bytes());
+                }
+            },
+            Task::Combine { batch_ref, level, slot_lo, slot_hi, fanin, model_version } => {
+                b.push(TAG_COMBINE);
                 b.extend_from_slice(&batch_ref.epoch.to_le_bytes());
                 b.extend_from_slice(&batch_ref.batch.to_le_bytes());
-                b.extend_from_slice(&num_minibatches.to_le_bytes());
+                b.extend_from_slice(&level.to_le_bytes());
                 b.extend_from_slice(&model_version.to_le_bytes());
+                b.extend_from_slice(&slot_lo.to_le_bytes());
+                b.extend_from_slice(&slot_hi.to_le_bytes());
+                b.extend_from_slice(&fanin.to_le_bytes());
             }
         }
         b
     }
 
     pub fn decode(b: &[u8]) -> Result<Task> {
-        if b.len() != 21 {
-            bail!("task payload must be 21 bytes, got {}", b.len());
+        // Every variant is a fixed layout; lengths are compared exactly
+        // (never computed by multiplying an attacker-controlled count —
+        // the overflow audit of decode_record/wire.rs applies here too).
+        if b.is_empty() {
+            bail!("empty task payload");
         }
         let u32at = |i: usize| u32::from_le_bytes(b[i..i + 4].try_into().unwrap());
         let u64at = |i: usize| u64::from_le_bytes(b[i..i + 8].try_into().unwrap());
-        let batch_ref = BatchRef { epoch: u32at(1), batch: u32at(5) };
         match b[0] {
-            TAG_MAP => Ok(Task::Map {
-                batch_ref,
-                minibatch: u32at(9),
-                model_version: u64at(13),
-            }),
-            TAG_REDUCE => Ok(Task::Reduce {
-                batch_ref,
-                num_minibatches: u32at(9),
-                model_version: u64at(13),
-            }),
+            TAG_MAP => {
+                if b.len() != 21 {
+                    bail!("map task payload must be 21 bytes, got {}", b.len());
+                }
+                let minibatch = u32at(9);
+                if minibatch == u32::MAX {
+                    // Its leaf GradResult covers [m, m+1): the slot bound
+                    // must not wrap (same guard as the gradient decoder).
+                    bail!("map task minibatch index out of range");
+                }
+                Ok(Task::Map {
+                    batch_ref: BatchRef { epoch: u32at(1), batch: u32at(5) },
+                    minibatch,
+                    model_version: u64at(13),
+                })
+            }
+            TAG_REDUCE => {
+                if b.len() != 21 {
+                    bail!("reduce task payload must be 21 bytes, got {}", b.len());
+                }
+                if u32at(9) == 0 {
+                    // A 0-minibatch reduce would panic the accumulator.
+                    bail!("reduce task with zero minibatches");
+                }
+                Ok(Task::Reduce {
+                    batch_ref: BatchRef { epoch: u32at(1), batch: u32at(5) },
+                    num_minibatches: u32at(9),
+                    model_version: u64at(13),
+                    plan: AggregationPlan::Flat,
+                })
+            }
+            TAG_REDUCE_TREE => {
+                if b.len() != 25 {
+                    bail!("tree reduce payload must be 25 bytes, got {}", b.len());
+                }
+                let fanin = u32at(21);
+                if fanin < 2 {
+                    bail!("tree reduce fanin must be >= 2, got {fanin}");
+                }
+                if u32at(9) == 0 {
+                    bail!("reduce task with zero minibatches");
+                }
+                Ok(Task::Reduce {
+                    batch_ref: BatchRef { epoch: u32at(1), batch: u32at(5) },
+                    num_minibatches: u32at(9),
+                    model_version: u64at(13),
+                    plan: AggregationPlan::Tree { fanin },
+                })
+            }
+            TAG_COMBINE => {
+                if b.len() != 33 {
+                    bail!("combine task payload must be 33 bytes, got {}", b.len());
+                }
+                let (level, slot_lo, slot_hi, fanin) = (u32at(9), u32at(21), u32at(25), u32at(29));
+                if level == 0 {
+                    bail!("combine level must be >= 1");
+                }
+                if slot_lo >= slot_hi {
+                    bail!("combine slot range [{slot_lo}, {slot_hi}) is empty");
+                }
+                if fanin < 2 {
+                    bail!("combine fanin must be >= 2, got {fanin}");
+                }
+                Ok(Task::Combine {
+                    batch_ref: BatchRef { epoch: u32at(1), batch: u32at(5) },
+                    level,
+                    slot_lo,
+                    slot_hi,
+                    fanin,
+                    model_version: u64at(13),
+                })
+            }
             t => bail!("unknown task tag {t}"),
         }
     }
 }
 
-/// Result of a map task, published to the batch's results queue.
+/// Magic first-u32 of the versioned [`GradResult`] layout. Legacy
+/// payloads start with the epoch, which never plausibly reaches
+/// `u32::MAX` (the same discriminator trick as the broker's snapshot
+/// header).
+const GRAD_MAGIC: u32 = u32::MAX;
+const GRAD_VERSION: u32 = 1;
+
+/// A gradient message on a batch's results queues: either a leaf (one
+/// minibatch gradient from a map task — the paper's wire format) or a
+/// partial SUM over the leaf slot-range `[slot_lo, slot_hi)` produced by
+/// a combine task.
+///
+/// `weight` is the number of leaf gradients folded into `grads` (always
+/// `slot_hi - slot_lo`; carried explicitly on the wire so a decoder never
+/// has to trust arithmetic on the range). `loss` is the weight-weighted
+/// mean of the covered leaves' losses (informational).
 #[derive(Debug, Clone, PartialEq)]
 pub struct GradResult {
     pub batch_ref: BatchRef,
-    pub minibatch: u32,
+    pub slot_lo: u32,
+    pub slot_hi: u32,
+    pub weight: u32,
     pub loss: f32,
     pub grads: Vec<f32>,
 }
 
 impl GradResult {
+    /// A map task's result: the raw gradient of one minibatch slot.
+    pub fn leaf(batch_ref: BatchRef, minibatch: u32, loss: f32, grads: Vec<f32>) -> Self {
+        GradResult { batch_ref, slot_lo: minibatch, slot_hi: minibatch + 1, weight: 1, loss, grads }
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        self.weight == 1 && self.slot_hi == self.slot_lo + 1
+    }
+
+    /// Leaves encode in the legacy layout (epoch, batch, minibatch, loss,
+    /// n, grads — byte-identical to the original protocol); partials use
+    /// the versioned layout behind [`GRAD_MAGIC`].
     pub fn encode(&self) -> Vec<u8> {
-        let mut b = Vec::with_capacity(20 + self.grads.len() * 4);
-        b.extend_from_slice(&self.batch_ref.epoch.to_le_bytes());
-        b.extend_from_slice(&self.batch_ref.batch.to_le_bytes());
-        b.extend_from_slice(&self.minibatch.to_le_bytes());
-        b.extend_from_slice(&self.loss.to_le_bytes());
-        b.extend_from_slice(&(self.grads.len() as u32).to_le_bytes());
+        let mut b = Vec::with_capacity(36 + self.grads.len() * 4);
+        if self.is_leaf() {
+            b.extend_from_slice(&self.batch_ref.epoch.to_le_bytes());
+            b.extend_from_slice(&self.batch_ref.batch.to_le_bytes());
+            b.extend_from_slice(&self.slot_lo.to_le_bytes());
+            b.extend_from_slice(&self.loss.to_le_bytes());
+            b.extend_from_slice(&(self.grads.len() as u32).to_le_bytes());
+        } else {
+            b.extend_from_slice(&GRAD_MAGIC.to_le_bytes());
+            b.extend_from_slice(&GRAD_VERSION.to_le_bytes());
+            b.extend_from_slice(&self.batch_ref.epoch.to_le_bytes());
+            b.extend_from_slice(&self.batch_ref.batch.to_le_bytes());
+            b.extend_from_slice(&self.slot_lo.to_le_bytes());
+            b.extend_from_slice(&self.slot_hi.to_le_bytes());
+            b.extend_from_slice(&self.weight.to_le_bytes());
+            b.extend_from_slice(&self.loss.to_le_bytes());
+            b.extend_from_slice(&(self.grads.len() as u32).to_le_bytes());
+        }
         b.extend_from_slice(&f32_to_le_bytes(&self.grads));
         b
     }
@@ -136,16 +303,52 @@ impl GradResult {
             bail!("grad result too short");
         }
         let u32at = |i: usize| u32::from_le_bytes(b[i..i + 4].try_into().unwrap());
-        let n = u32at(16) as usize;
-        if b.len() != 20 + n * 4 {
-            bail!("grad result length mismatch");
+        if u32at(0) == GRAD_MAGIC {
+            let version = u32at(4);
+            if version != GRAD_VERSION {
+                bail!("grad result version {version} is newer than this binary");
+            }
+            if b.len() < 36 {
+                bail!("versioned grad result too short");
+            }
+            let n = u32at(32) as usize;
+            // Division form: `n * 4` wraps a 32-bit usize for a corrupt
+            // count (same audit as decode_record / wire.rs).
+            if (b.len() - 36) / 4 != n || (b.len() - 36) % 4 != 0 {
+                bail!("grad result length mismatch");
+            }
+            let (slot_lo, slot_hi, weight) = (u32at(16), u32at(20), u32at(24));
+            if slot_lo >= slot_hi {
+                bail!("grad result slot range [{slot_lo}, {slot_hi}) is empty");
+            }
+            if weight != slot_hi - slot_lo {
+                bail!("grad result weight {weight} != covered slots {}", slot_hi - slot_lo);
+            }
+            Ok(GradResult {
+                batch_ref: BatchRef { epoch: u32at(8), batch: u32at(12) },
+                slot_lo,
+                slot_hi,
+                weight,
+                loss: f32::from_le_bytes(b[28..32].try_into().unwrap()),
+                grads: f32_from_le_bytes(&b[36..]),
+            })
+        } else {
+            // Legacy single-minibatch layout.
+            let n = u32at(16) as usize;
+            if (b.len() - 20) / 4 != n || (b.len() - 20) % 4 != 0 {
+                bail!("grad result length mismatch");
+            }
+            let minibatch = u32at(8);
+            if minibatch == u32::MAX {
+                bail!("grad result minibatch index out of range");
+            }
+            Ok(GradResult::leaf(
+                BatchRef { epoch: u32at(0), batch: u32at(4) },
+                minibatch,
+                f32::from_le_bytes(b[12..16].try_into().unwrap()),
+                f32_from_le_bytes(&b[20..]),
+            ))
         }
-        Ok(GradResult {
-            batch_ref: BatchRef { epoch: u32at(0), batch: u32at(4) },
-            minibatch: u32at(8),
-            loss: f32::from_le_bytes(b[12..16].try_into().unwrap()),
-            grads: f32_from_le_bytes(&b[20..]),
-        })
     }
 }
 
@@ -165,6 +368,21 @@ mod tests {
                 batch_ref: BatchRef { epoch: 0, batch: 0 },
                 num_minibatches: 16,
                 model_version: 0,
+                plan: AggregationPlan::Flat,
+            },
+            Task::Reduce {
+                batch_ref: BatchRef { epoch: 2, batch: 9 },
+                num_minibatches: 16,
+                model_version: 41,
+                plan: AggregationPlan::Tree { fanin: 4 },
+            },
+            Task::Combine {
+                batch_ref: BatchRef { epoch: 1, batch: 5 },
+                level: 2,
+                slot_lo: 8,
+                slot_hi: 16,
+                fanin: 2,
+                model_version: 21,
             },
         ];
         for t in tasks {
@@ -173,34 +391,201 @@ mod tests {
     }
 
     #[test]
+    fn flat_reduce_encoding_is_frozen() {
+        // The golden flat task stream depends on this exact layout.
+        let t = Task::Reduce {
+            batch_ref: BatchRef { epoch: 1, batch: 2 },
+            num_minibatches: 16,
+            model_version: 18,
+            plan: AggregationPlan::Flat,
+        };
+        let mut expect = vec![2u8]; // TAG_REDUCE
+        expect.extend_from_slice(&1u32.to_le_bytes());
+        expect.extend_from_slice(&2u32.to_le_bytes());
+        expect.extend_from_slice(&16u32.to_le_bytes());
+        expect.extend_from_slice(&18u64.to_le_bytes());
+        assert_eq!(t.encode(), expect);
+        assert_eq!(expect.len(), 21);
+    }
+
+    #[test]
     fn task_decode_rejects_garbage() {
         assert!(Task::decode(&[]).is_err());
         assert!(Task::decode(&[9; 21]).is_err());
         assert!(Task::decode(&[1; 20]).is_err());
+        // A map with minibatch u32::MAX would overflow its leaf's
+        // [m, m+1) slot bound — reject at decode, not panic later.
+        let mut m = Task::Map {
+            batch_ref: BatchRef { epoch: 0, batch: 0 },
+            minibatch: 0,
+            model_version: 0,
+        }
+        .encode();
+        m[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Task::decode(&m).is_err());
+        // A reduce claiming zero minibatches would panic the accumulator.
+        let mut r = Task::Reduce {
+            batch_ref: BatchRef { epoch: 0, batch: 0 },
+            num_minibatches: 1,
+            model_version: 0,
+            plan: AggregationPlan::Flat,
+        }
+        .encode();
+        r[9..13].copy_from_slice(&0u32.to_le_bytes());
+        assert!(Task::decode(&r).is_err());
+        // Per-tag length mismatches on the new variants.
+        assert!(Task::decode(&[3; 21]).is_err()); // combine needs 33
+        assert!(Task::decode(&[4; 21]).is_err()); // tree reduce needs 25
+        assert!(Task::decode(&[4; 26]).is_err());
+        // Structurally invalid combines/reduces.
+        let good = Task::Combine {
+            batch_ref: BatchRef { epoch: 0, batch: 0 },
+            level: 1,
+            slot_lo: 0,
+            slot_hi: 4,
+            fanin: 4,
+            model_version: 0,
+        };
+        let mut b = good.encode();
+        b[9..13].copy_from_slice(&0u32.to_le_bytes()); // level 0
+        assert!(Task::decode(&b).is_err());
+        let mut b = good.encode();
+        b[25..29].copy_from_slice(&0u32.to_le_bytes()); // slot_hi == 0 <= slot_lo
+        assert!(Task::decode(&b).is_err());
+        let mut b = good.encode();
+        b[29..33].copy_from_slice(&1u32.to_le_bytes()); // fanin 1
+        assert!(Task::decode(&b).is_err());
     }
 
     #[test]
     fn grad_result_roundtrip() {
-        let g = GradResult {
+        let leaf = GradResult::leaf(
+            BatchRef { epoch: 1, batch: 2 },
+            5,
+            4.58,
+            vec![0.25, -1.5, 3.0],
+        );
+        assert_eq!(GradResult::decode(&leaf.encode()).unwrap(), leaf);
+        // Leaves keep the 20 + 4n legacy layout on the wire.
+        assert_eq!(leaf.encode().len(), 20 + 3 * 4);
+        let partial = GradResult {
             batch_ref: BatchRef { epoch: 1, batch: 2 },
-            minibatch: 5,
-            loss: 4.58,
-            grads: vec![0.25, -1.5, 3.0],
+            slot_lo: 4,
+            slot_hi: 8,
+            weight: 4,
+            loss: 2.0,
+            grads: vec![1.0, 2.0],
         };
-        assert_eq!(GradResult::decode(&g.encode()).unwrap(), g);
+        assert_eq!(GradResult::decode(&partial.encode()).unwrap(), partial);
+        assert_eq!(partial.encode().len(), 36 + 2 * 4);
+    }
+
+    #[test]
+    fn grad_result_decodes_legacy_payload() {
+        // A payload hand-built in the pre-tree wire format must decode as
+        // a weight-1 leaf.
+        let mut b = Vec::new();
+        b.extend_from_slice(&0u32.to_le_bytes()); // epoch
+        b.extend_from_slice(&3u32.to_le_bytes()); // batch
+        b.extend_from_slice(&7u32.to_le_bytes()); // minibatch
+        b.extend_from_slice(&1.5f32.to_le_bytes()); // loss
+        b.extend_from_slice(&2u32.to_le_bytes()); // n
+        b.extend_from_slice(&0.5f32.to_le_bytes());
+        b.extend_from_slice(&(-0.25f32).to_le_bytes());
+        let g = GradResult::decode(&b).unwrap();
+        assert_eq!(g.batch_ref, BatchRef { epoch: 0, batch: 3 });
+        assert_eq!((g.slot_lo, g.slot_hi, g.weight), (7, 8, 1));
+        assert!(g.is_leaf());
+        assert_eq!(g.grads, vec![0.5, -0.25]);
     }
 
     #[test]
     fn grad_result_rejects_truncation() {
-        let g = GradResult {
-            batch_ref: BatchRef { epoch: 0, batch: 0 },
-            minibatch: 0,
-            loss: 0.0,
-            grads: vec![1.0],
-        };
+        let g = GradResult::leaf(BatchRef { epoch: 0, batch: 0 }, 0, 0.0, vec![1.0]);
         let mut b = g.encode();
         b.pop();
         assert!(GradResult::decode(&b).is_err());
+        let p = GradResult {
+            batch_ref: BatchRef { epoch: 0, batch: 0 },
+            slot_lo: 0,
+            slot_hi: 2,
+            weight: 2,
+            loss: 0.0,
+            grads: vec![1.0],
+        };
+        let mut b = p.encode();
+        b.pop();
+        assert!(GradResult::decode(&b).is_err());
+        // Versioned header shorter than its fixed part.
+        let mut short = GRAD_MAGIC.to_le_bytes().to_vec();
+        short.extend_from_slice(&[0u8; 20]);
+        assert!(GradResult::decode(&short).is_err());
+    }
+
+    #[test]
+    fn grad_result_rejects_adversarial_counts() {
+        // A length field claiming a huge element count must fail the
+        // division-form guard, not wrap `n * 4` (32-bit usize) into a
+        // bogus pass + oversized allocation.
+        let mut b = Vec::new();
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&0f32.to_le_bytes());
+        b.extend_from_slice(&u32::MAX.to_le_bytes()); // n = 2^32 - 1
+        b.extend_from_slice(&[0u8; 4]);
+        assert!(GradResult::decode(&b).is_err());
+        // Same claim through the versioned layout.
+        let mut v = Vec::new();
+        v.extend_from_slice(&GRAD_MAGIC.to_le_bytes());
+        v.extend_from_slice(&GRAD_VERSION.to_le_bytes());
+        v.extend_from_slice(&[0u8; 8]); // epoch, batch
+        v.extend_from_slice(&0u32.to_le_bytes()); // slot_lo
+        v.extend_from_slice(&2u32.to_le_bytes()); // slot_hi
+        v.extend_from_slice(&2u32.to_le_bytes()); // weight
+        v.extend_from_slice(&0f32.to_le_bytes()); // loss
+        v.extend_from_slice(&0x4000_0001u32.to_le_bytes()); // n * 4 wraps on 32-bit
+        v.extend_from_slice(&[0u8; 4]);
+        assert!(GradResult::decode(&v).is_err());
+        // Inconsistent weight / range claims.
+        let mut w = Vec::new();
+        w.extend_from_slice(&GRAD_MAGIC.to_le_bytes());
+        w.extend_from_slice(&GRAD_VERSION.to_le_bytes());
+        w.extend_from_slice(&[0u8; 8]);
+        w.extend_from_slice(&4u32.to_le_bytes()); // slot_lo
+        w.extend_from_slice(&8u32.to_le_bytes()); // slot_hi
+        w.extend_from_slice(&3u32.to_le_bytes()); // weight != 4
+        w.extend_from_slice(&0f32.to_le_bytes());
+        w.extend_from_slice(&0u32.to_le_bytes());
+        assert!(GradResult::decode(&w).is_err());
+        // Future versioned format is rejected, not misparsed.
+        let mut f = Vec::new();
+        f.extend_from_slice(&GRAD_MAGIC.to_le_bytes());
+        f.extend_from_slice(&2u32.to_le_bytes());
+        f.extend_from_slice(&[0u8; 28]);
+        assert!(GradResult::decode(&f).is_err());
+    }
+
+    #[test]
+    fn task_stage_order() {
+        let b = BatchRef { epoch: 0, batch: 0 };
+        let map = Task::Map { batch_ref: b, minibatch: 0, model_version: 0 };
+        let c1 = Task::Combine {
+            batch_ref: b,
+            level: 1,
+            slot_lo: 0,
+            slot_hi: 2,
+            fanin: 2,
+            model_version: 0,
+        };
+        let red = Task::Reduce {
+            batch_ref: b,
+            num_minibatches: 4,
+            model_version: 0,
+            plan: AggregationPlan::Tree { fanin: 2 },
+        };
+        assert!(map.stage() < c1.stage());
+        assert!(c1.stage() < red.stage());
     }
 
     #[test]

@@ -8,7 +8,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::Config;
-use crate::coordinator::initiator::{setup_problem, SetupSummary};
+use crate::coordinator::initiator::{setup_problem_with, SetupSummary};
 use crate::coordinator::version::{get_model, wait_model};
 use crate::coordinator::ProblemSpec;
 use crate::data::{DataApi, Store};
@@ -107,7 +107,8 @@ pub fn run_with(
     let corpus = load_corpus(cfg)?;
     let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
     let init = engine.meta().load_init_params(&cfg.artifact_dir)?;
-    let setup = setup_problem(broker.as_ref(), store.as_ref(), &spec, &corpus, init)?;
+    let setup =
+        setup_problem_with(broker.as_ref(), store.as_ref(), &spec, &corpus, init, cfg.agg_plan()?)?;
 
     let timeline = Timeline::new();
     let opts = AgentOptions {

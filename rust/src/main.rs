@@ -2,9 +2,13 @@
 //!
 //! Subcommands:
 //!   smoke                         verify the PJRT bridge + artifacts
-//!   train [--workers=N ...]       distributed training, in-process fleet
+//!   train [--workers=N --agg=flat|tree:F ...]
+//!                                 distributed training, in-process fleet
 //!   seq [--variant=...]           sequential baselines (TFJS-Sequential-*)
-//!   sim [--profile=... --workers=N]  discrete-event experiment
+//!   sim [--profile=... --workers=N --agg=flat|tree:F]
+//!                                 discrete-event experiment; --agg picks
+//!                                 the aggregation topology (tree-reduce
+//!                                 vs the paper's single reducer)
 //!   serve [addr] [--durability_dir=D --sync_policy=P --wal_compact_bytes=N
 //!                 --wal_group_window_us=U]
 //!                                 host QueueServer + DataServer over TCP;
@@ -30,7 +34,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Context, Result};
 
 use jsdoop::config::Config;
-use jsdoop::coordinator::initiator::setup_problem;
+use jsdoop::coordinator::initiator::setup_problem_with;
 use jsdoop::coordinator::ProblemSpec;
 use jsdoop::data::DataApi;
 use jsdoop::driver;
@@ -110,17 +114,19 @@ fn train(cfg: &Config) -> Result<()> {
     let plan = FaultPlan::sync_start(cfg.workers);
     let speeds = vec![1.0; cfg.workers];
     println!(
-        "distributed training: {} workers, {} epochs x {} batches, lr {}",
+        "distributed training: {} workers, {} epochs x {} batches, lr {}, agg {}",
         cfg.workers,
         cfg.epochs,
         cfg.schedule().batches_per_epoch(),
-        cfg.learning_rate
+        cfg.learning_rate,
+        cfg.agg
     );
     let out = driver::run_local(cfg, &engine, &plan, &speeds)?;
     println!(
-        "done in {:.1}s  (maps {}, reduces {})",
+        "done in {:.1}s  (maps {}, combines {}, reduces {})",
         out.pool.runtime.as_secs_f64(),
         out.pool.reports.iter().map(|r| r.maps_done).sum::<u64>(),
+        out.pool.reports.iter().map(|r| r.combines_done).sum::<u64>(),
         out.pool.reports.iter().map(|r| r.reduces_done).sum::<u64>(),
     );
     println!("final model version = {}", out.final_model.version);
@@ -163,16 +169,23 @@ fn sim(cfg: &Config, rest: &[String]) -> Result<()> {
         batches_per_epoch: cfg.schedule().batches_per_epoch() as u32,
     };
     let mut rng = Rng::new(cfg.seed);
-    let (params, speeds, plan) = profiles::build(profile, workers, &mut rng)?;
+    let (mut params, speeds, plan) = profiles::build(profile, workers, &mut rng)?;
+    params.agg = cfg.agg_plan()?;
     let r = simulate(workload, &params, &plan, &speeds, cfg.seed)?;
     println!(
-        "sim[{profile}] workers={workers}: runtime {:.1} min ({:.1} s), maps {}, reduces {}, requeues {}, cache hit {:.2}",
+        "sim[{profile}] workers={workers} agg={}: runtime {:.1} min ({:.1} s), maps {}, combines {}, reduces {}, requeues {}, cache hit {:.2}",
+        params.agg,
         r.runtime / 60.0,
         r.runtime,
         r.maps_done,
+        r.combines_done,
         r.reduces_done,
         r.requeues,
         r.cache_hit_rate
+    );
+    println!(
+        "per-step critical path: {:.1} queue ops, {:.1} gradient vectors through the busiest agent",
+        r.critical_ops_per_step, r.critical_grad_vecs_per_step
     );
     let rows = vec![RunResult {
         system: format!("JSDoop-sim-{profile}"),
@@ -340,10 +353,14 @@ fn init_remote(cfg: &Config) -> Result<()> {
     let init = engine_meta.load_init_params(&cfg.artifact_dir)?;
     let corpus = driver::load_corpus(cfg)?;
     let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
-    let summary = setup_problem(&queue, &data, &spec, &corpus, init)?;
+    let summary = setup_problem_with(&queue, &data, &spec, &corpus, init, cfg.agg_plan()?)?;
     println!(
-        "problem published: {} map + {} reduce tasks, {} model versions",
-        summary.map_tasks, summary.reduce_tasks, summary.total_versions
+        "problem published ({}): {} map + {} combine + {} reduce tasks, {} model versions",
+        cfg.agg,
+        summary.map_tasks,
+        summary.combine_tasks,
+        summary.reduce_tasks,
+        summary.total_versions
     );
     Ok(())
 }
@@ -371,8 +388,12 @@ fn volunteer(cfg: &Config, rest: &[String]) -> Result<()> {
     let quit = AtomicBool::new(false);
     let report = agent.run(&quit)?;
     println!(
-        "volunteer {id} done: maps {}, reduces {}, nacked {}, stale {}",
-        report.maps_done, report.reduces_done, report.tasks_nacked, report.stale_skipped
+        "volunteer {id} done: maps {}, combines {}, reduces {}, nacked {}, stale {}",
+        report.maps_done,
+        report.combines_done,
+        report.reduces_done,
+        report.tasks_nacked,
+        report.stale_skipped
     );
     Ok(())
 }

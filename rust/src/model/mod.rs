@@ -169,73 +169,137 @@ impl ModelSnapshot {
             bail!("snapshot too short");
         }
         let version = u64::from_le_bytes(bytes[0..8].try_into().unwrap());
-        let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
-        let need = 16 + n * 8;
-        if bytes.len() != need {
-            bail!("snapshot length {} != expected {}", bytes.len(), need);
+        let n64 = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        // Division form: `16 + n * 8` wraps for an adversarial count (a
+        // crafted n near 2^61 even wraps 64-bit usize into a bogus pass
+        // followed by an out-of-bounds slice) — same audit as the WAL's
+        // decode_record and the wire codecs.
+        if ((bytes.len() - 16) / 8) as u64 != n64 || (bytes.len() - 16) % 8 != 0 {
+            bail!("snapshot length {} inconsistent with element count {n64}", bytes.len());
         }
+        let n = n64 as usize; // == (len - 16) / 8, so it fits usize
         let params = f32_from_le_bytes(&bytes[16..16 + n * 4]);
         let ms = f32_from_le_bytes(&bytes[16 + n * 4..]);
         Ok(ModelSnapshot { version, params, ms })
     }
 }
 
-/// Deterministic gradient accumulator for the reduce task.
+/// Deterministic gradient accumulator for the reduce and combine tasks.
 ///
 /// The paper's reduce "downloads all calculated gradients ... accumulates
 /// gradients and updates the NN model". To make the final model independent
 /// of worker scheduling (Table 4: identical loss for every configuration)
-/// we accumulate strictly in minibatch-index order: slot i holds minibatch
-/// i's gradient, and `fold()` sums slots 0..k left-to-right — float addition
-/// is not associative, so the order is part of the contract (proptested in
+/// we accumulate strictly in slot-index order: float addition is not
+/// associative, so the order is part of the contract (proptested in
 /// rust/tests/prop_invariants.rs).
+///
+/// Generalized for tree aggregation (coordinator/agg.rs): each expected
+/// slot is a disjoint leaf slot-range `[lo, hi)` with a weight (the number
+/// of leaf gradients folded into it). The flat reduce uses k unit ranges
+/// — [`GradAccumulator::new`] — and behaves bit-identically to the
+/// original single-level accumulator. Duplicate deliveries for a range
+/// settle first-wins (at-least-once dedup by range); a range the plan
+/// does not expect is rejected, which is how a reducer tells its own
+/// inputs from a sibling combiner's.
 #[derive(Debug)]
 pub struct GradAccumulator {
-    slots: Vec<Option<Vec<f32>>>,
+    ranges: Vec<(u32, u32)>,
+    /// Per expected range: (weight, partial-sum gradient), once received.
+    slots: Vec<Option<(u32, Vec<f32>)>>,
 }
 
 impl GradAccumulator {
+    /// Flat layout: `num_minibatches` unit leaf ranges.
     pub fn new(num_minibatches: usize) -> Self {
-        GradAccumulator { slots: (0..num_minibatches).map(|_| None).collect() }
+        let ranges = (0..num_minibatches as u32).map(|i| (i, i + 1)).collect();
+        GradAccumulator::with_ranges(ranges).expect("unit ranges are always valid")
     }
 
-    pub fn insert(&mut self, minibatch_idx: usize, grad: Vec<f32>) -> Result<()> {
-        if minibatch_idx >= self.slots.len() {
-            bail!("minibatch index {minibatch_idx} out of range");
+    /// Expected input ranges in index order (must be non-empty, sorted,
+    /// disjoint, and contiguous — the shape coordinator/agg.rs compiles).
+    pub fn with_ranges(ranges: Vec<(u32, u32)>) -> Result<Self> {
+        if ranges.is_empty() {
+            bail!("accumulator needs at least one range");
         }
-        if self.slots[minibatch_idx].is_some() {
+        let mut expect = ranges[0].0;
+        for (lo, hi) in &ranges {
+            if *lo != expect || hi <= lo {
+                bail!("accumulator ranges must be contiguous and non-empty, got {ranges:?}");
+            }
+            expect = *hi;
+        }
+        let n = ranges.len();
+        Ok(GradAccumulator { ranges, slots: (0..n).map(|_| None).collect() })
+    }
+
+    /// Does this accumulator expect exactly the range `[lo, hi)`?
+    pub fn expects(&self, lo: u32, hi: u32) -> bool {
+        self.ranges.binary_search(&(lo, hi)).is_ok()
+    }
+
+    /// Leaf insert: minibatch `minibatch_idx`'s raw gradient (unit range,
+    /// weight 1) — the flat reduce's entry point.
+    pub fn insert(&mut self, minibatch_idx: usize, grad: Vec<f32>) -> Result<()> {
+        let i = minibatch_idx as u32;
+        self.insert_range(i, i + 1, 1, grad)
+    }
+
+    /// Insert the partial sum covering `[lo, hi)` with `weight` folded
+    /// leaves. Duplicates settle first-wins; unknown ranges and weight /
+    /// length inconsistencies are rejected (the caller treats those as
+    /// poison or foreign, never as fatal).
+    pub fn insert_range(&mut self, lo: u32, hi: u32, weight: u32, grads: Vec<f32>) -> Result<()> {
+        let Ok(i) = self.ranges.binary_search(&(lo, hi)) else {
+            bail!("range [{lo}, {hi}) is not an expected input of this fold");
+        };
+        if weight != hi - lo {
+            bail!("range [{lo}, {hi}) carries weight {weight}, expected {}", hi - lo);
+        }
+        if let Some(n) = self.slot_len() {
+            if grads.len() != n {
+                bail!("gradient length {} != {} of earlier inputs", grads.len(), n);
+            }
+        }
+        if self.slots[i].is_some() {
             // Duplicate delivery (at-least-once queue semantics) — first wins.
             return Ok(());
         }
-        self.slots[minibatch_idx] = Some(grad);
+        self.slots[i] = Some((weight, grads));
         Ok(())
+    }
+
+    fn slot_len(&self) -> Option<usize> {
+        self.slots.iter().flatten().map(|(_, g)| g.len()).next()
     }
 
     pub fn is_complete(&self) -> bool {
         self.slots.iter().all(|s| s.is_some())
     }
 
-    pub fn missing(&self) -> Vec<usize> {
-        self.slots
+    /// Expected ranges not yet received, in index order.
+    pub fn missing_ranges(&self) -> Vec<(u32, u32)> {
+        self.ranges
             .iter()
-            .enumerate()
-            .filter_map(|(i, s)| s.is_none().then_some(i))
+            .zip(&self.slots)
+            .filter_map(|(r, s)| s.is_none().then_some(*r))
             .collect()
     }
 
-    /// Mean of the k minibatch gradients, summed in index order.
-    /// (Mean — not sum — matches the sequential batch-128 gradient: each
-    /// minibatch gradient is already a mean over its 8 samples, and the
-    /// batch gradient is the mean of equal-sized minibatch means.)
-    pub fn fold(&self) -> Result<Vec<f32>> {
+    /// Total leaf gradients this fold covers once complete.
+    pub fn total_weight(&self) -> u32 {
+        self.ranges.iter().map(|(lo, hi)| hi - lo).sum()
+    }
+
+    /// Partial SUM over all inputs in range order plus the covered leaf
+    /// count — what a combine task publishes upward.
+    pub fn fold_sum(&self) -> Result<(Vec<f32>, u32)> {
         if !self.is_complete() {
-            bail!("accumulator incomplete: missing {:?}", self.missing());
+            bail!("accumulator incomplete: missing {:?}", self.missing_ranges());
         }
-        let k = self.slots.len();
-        let n = self.slots[0].as_ref().unwrap().len();
+        let n = self.slots[0].as_ref().unwrap().1.len();
         let mut acc = vec![0.0f32; n];
         for slot in &self.slots {
-            let g = slot.as_ref().unwrap();
+            let (_, g) = slot.as_ref().unwrap();
             if g.len() != n {
                 bail!("gradient length mismatch");
             }
@@ -243,7 +307,18 @@ impl GradAccumulator {
                 *a += b;
             }
         }
-        let inv = 1.0f32 / k as f32;
+        Ok((acc, self.total_weight()))
+    }
+
+    /// Mean of the covered leaf gradients, summed in range-index order.
+    /// (Mean — not sum — matches the sequential batch-128 gradient: each
+    /// minibatch gradient is already a mean over its 8 samples, and the
+    /// batch gradient is the mean of equal-sized minibatch means.) For
+    /// unit ranges this is bit-identical to the pre-tree accumulator:
+    /// sum slots 0..k left-to-right, multiply by `1/k as f32`.
+    pub fn fold(&self) -> Result<Vec<f32>> {
+        let (mut acc, weight) = self.fold_sum()?;
+        let inv = 1.0f32 / weight as f32;
         for a in acc.iter_mut() {
             *a *= inv;
         }
@@ -272,11 +347,29 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_rejects_adversarial_count() {
+        // n = 2^61 + 1 makes the old `16 + n * 8` wrap 64-bit usize to 24
+        // — the length guard "passed" and the params slice panicked out
+        // of bounds. The division-form guard must reject it as an error.
+        let mut b = Vec::new();
+        b.extend_from_slice(&0u64.to_le_bytes()); // version
+        b.extend_from_slice(&((1u64 << 61) + 1).to_le_bytes()); // n
+        b.extend_from_slice(&[0u8; 8]); // 8 payload bytes -> len 24
+        assert!(ModelSnapshot::from_bytes(&b).is_err());
+        // u32-scale overflow claim (wraps 32-bit usize).
+        let mut c = Vec::new();
+        c.extend_from_slice(&0u64.to_le_bytes());
+        c.extend_from_slice(&0x2000_0001u64.to_le_bytes());
+        c.extend_from_slice(&[0u8; 16]);
+        assert!(ModelSnapshot::from_bytes(&c).is_err());
+    }
+
+    #[test]
     fn accumulator_order_and_mean() {
         let mut acc = GradAccumulator::new(2);
         assert!(!acc.is_complete());
         acc.insert(1, vec![2.0, 4.0]).unwrap();
-        assert_eq!(acc.missing(), vec![0]);
+        assert_eq!(acc.missing_ranges(), vec![(0, 1)]);
         acc.insert(0, vec![0.0, 2.0]).unwrap();
         assert!(acc.is_complete());
         assert_eq!(acc.fold().unwrap(), vec![1.0, 3.0]);
@@ -295,5 +388,39 @@ mod tests {
         let mut acc = GradAccumulator::new(1);
         assert!(acc.insert(1, vec![]).is_err());
         assert!(acc.fold().is_err());
+    }
+
+    #[test]
+    fn accumulator_weighted_ranges() {
+        // A tree reduce folding two fanin-2 partials over k=4 leaves.
+        let mut acc = GradAccumulator::with_ranges(vec![(0, 2), (2, 4)]).unwrap();
+        assert!(acc.expects(0, 2));
+        assert!(!acc.expects(0, 1));
+        assert!(!acc.expects(1, 3));
+        // Foreign / malformed inputs are rejected, not folded.
+        assert!(acc.insert_range(0, 1, 1, vec![9.0]).is_err());
+        assert!(acc.insert_range(0, 2, 1, vec![9.0]).is_err()); // bad weight
+        acc.insert_range(2, 4, 2, vec![6.0, 2.0]).unwrap();
+        assert_eq!(acc.missing_ranges(), vec![(0, 2)]);
+        // Length mismatch against earlier inputs is rejected (poison).
+        assert!(acc.insert_range(0, 2, 2, vec![1.0]).is_err());
+        acc.insert_range(0, 2, 2, vec![2.0, 2.0]).unwrap();
+        // Duplicate partial: first wins.
+        acc.insert_range(0, 2, 2, vec![99.0, 99.0]).unwrap();
+        assert_eq!(acc.total_weight(), 4);
+        let (sum, w) = acc.fold_sum().unwrap();
+        assert_eq!((sum, w), (vec![8.0, 4.0], 4));
+        assert_eq!(acc.fold().unwrap(), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn accumulator_rejects_bad_range_sets() {
+        assert!(GradAccumulator::with_ranges(vec![]).is_err());
+        assert!(GradAccumulator::with_ranges(vec![(0, 2), (3, 4)]).is_err()); // gap
+        assert!(GradAccumulator::with_ranges(vec![(0, 2), (1, 3)]).is_err()); // overlap
+        assert!(GradAccumulator::with_ranges(vec![(2, 2)]).is_err()); // empty
+        // Non-zero start is fine: a combine node's children mid-batch.
+        let acc = GradAccumulator::with_ranges(vec![(4, 6), (6, 8)]).unwrap();
+        assert_eq!(acc.total_weight(), 4);
     }
 }

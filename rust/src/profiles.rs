@@ -46,6 +46,11 @@ pub fn cluster(workers: usize, rng: &mut Rng) -> (SimParams, Vec<f64>, FaultPlan
     let params = SimParams {
         t_map: 4.2,
         t_reduce: 4.0,
+        // Combine folds are pure vector adds over <= fanin inputs — far
+        // cheaper than the reduce's fold + RMSprop + model exchange.
+        // Only used when a run opts into --agg=tree:<fanin>; the default
+        // flat plan leaves the calibrated figures bit-identical.
+        t_combine: 1.0,
         rtt: 0.05,
         model_fetch: 0.35,
         model_push: 0.35,
@@ -73,6 +78,7 @@ fn classroom_params() -> SimParams {
     SimParams {
         t_map: 4.2,
         t_reduce: 2.4,
+        t_combine: 0.6,
         rtt: 0.01,
         model_fetch: 0.10,
         model_push: 0.10,
@@ -159,6 +165,28 @@ mod tests {
         // The 16-map lock-step wall: 32 volunteers no worse, not much
         // better (see module docs on the paper's Table 4 anomaly).
         assert!(cl32 < cl16 * 1.05, "cl32 {} vs cl16 {}", cl32, cl16);
+    }
+
+    #[test]
+    fn tree_aggregation_unclogs_the_calibrated_reducer() {
+        // On the calibrated cluster profile at 32 workers, tree:4 must
+        // cut the busiest agent's per-step gradient traffic vs the
+        // paper-faithful flat plan (the Fig-6 bottleneck this topology
+        // exists for) while completing the identical workload.
+        use crate::volunteer::sim::AggregationPlan;
+        let mut rng = Rng::new(42);
+        let (p_flat, s, plan) = cluster(32, &mut rng);
+        let flat = simulate(SimWorkload::paper(), &p_flat, &plan, &s, 42).unwrap();
+        let p_tree =
+            SimParams { agg: AggregationPlan::Tree { fanin: 4 }, ..p_flat.clone() };
+        let tree = simulate(SimWorkload::paper(), &p_tree, &plan, &s, 42).unwrap();
+        assert_eq!(tree.reduces_done, flat.reduces_done);
+        assert!(
+            tree.critical_grad_vecs_per_step < flat.critical_grad_vecs_per_step,
+            "tree {} vs flat {}",
+            tree.critical_grad_vecs_per_step,
+            flat.critical_grad_vecs_per_step
+        );
     }
 
     #[test]

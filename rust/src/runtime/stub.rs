@@ -5,10 +5,22 @@
 //! the pjrt backend's `Engine` is mirrored so agents, drivers, benches,
 //! and tests compile identically against either backend.
 //!
-//! [`Engine::protocol_only_for_tests`] constructs a compute-less engine
-//! so queue/agent *protocol* paths (stale settlement, batched NACK
-//! hand-back, prefetch grouping) can be integration-tested without AOT
-//! artifacts — any accidental compute call fails the test loudly.
+//! Two explicit test-only constructors exist (a test has to opt in by
+//! name; `load` still always fails):
+//!
+//! - [`Engine::protocol_only_for_tests`] — compute-less: queue/agent
+//!   *protocol* paths (stale settlement, batched NACK hand-back, prefetch
+//!   grouping) integration-test without AOT artifacts, and any accidental
+//!   compute call fails the test loudly.
+//! - [`Engine::exact_math_for_tests`] — a tiny deterministic "model"
+//!   whose arithmetic is EXACT in f32: gradients are integer-valued
+//!   (derived from the inputs plus the sign of each parameter, so model
+//!   divergence propagates), and the update is `p - lr * g`. With a
+//!   power-of-two minibatch count and a dyadic learning rate every fold
+//!   is exactly associative, so aggregation topologies (flat vs
+//!   tree:<fanin>, coordinator/agg.rs) must produce bit-identical final
+//!   models — the invariant rust/tests/prop_invariants.rs checks across
+//!   random volunteer interleavings without needing the PJRT toolchain.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -17,9 +29,17 @@ use anyhow::{bail, Result};
 
 use crate::model::ModelMeta;
 
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    /// Every compute method errors (protocol-only tests).
+    ProtocolOnly,
+    /// Exact integer-valued test numerics (see module docs).
+    ExactMath,
+}
+
 /// Compute-less placeholder for the PJRT engine (see module docs).
 pub struct Engine {
-    _priv: (),
+    mode: Mode,
 }
 
 impl Engine {
@@ -39,7 +59,15 @@ impl Engine {
     /// An engine whose every compute method errors: for tests that
     /// exercise the coordination protocol only (see module docs).
     pub fn protocol_only_for_tests() -> Self {
-        Engine { _priv: () }
+        Engine { mode: Mode::ProtocolOnly }
+    }
+
+    /// An engine with exact deterministic test numerics (see module
+    /// docs): f32-associative gradients so fold-topology equivalence can
+    /// be asserted bitwise. Never reachable from a real run — only tests
+    /// construct it.
+    pub fn exact_math_for_tests() -> Self {
+        Engine { mode: Mode::ExactMath }
     }
 
     pub fn meta(&self) -> &ModelMeta {
@@ -51,34 +79,85 @@ impl Engine {
     }
 
     pub fn platform(&self) -> String {
-        "stub (no PJRT)".to_string()
+        match self.mode {
+            Mode::ProtocolOnly => "stub (no PJRT)".to_string(),
+            Mode::ExactMath => "stub (exact test math)".to_string(),
+        }
     }
 
     /// Map task compute: minibatch gradient + loss.
     pub fn grad_step(
         &self,
         _artifact: &str,
-        _params: &[f32],
-        _x: &[i32],
-        _y: &[i32],
+        params: &[f32],
+        x: &[i32],
+        y: &[i32],
     ) -> Result<(Vec<f32>, f32)> {
-        bail!("stub engine cannot execute grad_step (build with --features pjrt)")
+        match self.mode {
+            Mode::ProtocolOnly => {
+                bail!("stub engine cannot execute grad_step (build with --features pjrt)")
+            }
+            Mode::ExactMath => {
+                // Integer-valued gradient in [-3, 3]: a data term from the
+                // sample plus sign(p) so parameter divergence feeds back.
+                let base = (x.first().copied().unwrap_or(0) as i64
+                    + y.first().copied().unwrap_or(0) as i64)
+                    .rem_euclid(5)
+                    - 2;
+                let grads = params
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        let c = ((base + i as i64).rem_euclid(5) - 2) as f32;
+                        // f32::signum maps 0.0 to 1.0; we want a true sign.
+                        let s = if *p > 0.0 {
+                            1.0
+                        } else if *p < 0.0 {
+                            -1.0
+                        } else {
+                            0.0
+                        };
+                        c + s
+                    })
+                    .collect();
+                Ok((grads, 1.0))
+            }
+        }
     }
 
     /// Reduce task compute: RMSprop update. Returns (params', ms').
     pub fn rmsprop_update(
         &self,
-        _params: &[f32],
-        _ms: &[f32],
-        _grads: &[f32],
-        _lr: f32,
+        params: &[f32],
+        ms: &[f32],
+        grads: &[f32],
+        lr: f32,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        bail!("stub engine cannot execute rmsprop_update (build with --features pjrt)")
+        match self.mode {
+            Mode::ProtocolOnly => {
+                bail!("stub engine cannot execute rmsprop_update (build with --features pjrt)")
+            }
+            Mode::ExactMath => {
+                if params.len() != grads.len() || ms.len() != params.len() {
+                    bail!("length mismatch in exact-math rmsprop_update");
+                }
+                // Plain SGD stands in for RMSprop: with dyadic lr and
+                // exact gradients the trajectory stays exactly
+                // representable, which is all these tests need.
+                let p2 = params.iter().zip(grads).map(|(p, g)| p - lr * g).collect();
+                Ok((p2, ms.to_vec()))
+            }
+        }
     }
 
     /// Evaluation loss over a full 128-batch.
     pub fn eval_loss(&self, _params: &[f32], _x: &[i32], _y: &[i32]) -> Result<f32> {
-        bail!("stub engine cannot execute eval_loss (build with --features pjrt)")
+        match self.mode {
+            Mode::ProtocolOnly => {
+                bail!("stub engine cannot execute eval_loss (build with --features pjrt)")
+            }
+            Mode::ExactMath => Ok(0.0),
+        }
     }
 
     /// Next-char probabilities for one sample (text-generation demo).

@@ -1,7 +1,8 @@
 //! Volunteer agent (S6, paper §IV.A + §IV.F steps 2-5): the task loop a
 //! browser runs. Pull a task from the InitialQueue, resolve it (map =
-//! minibatch gradient via the PJRT engine; reduce = collect + fold +
-//! RMSprop update), publish results, ACK. Synchronization is the §IV.G
+//! minibatch gradient via the PJRT engine; combine = fold a slot-range of
+//! gradients into a partial sum; reduce = collect + fold + RMSprop
+//! update), publish results, ACK. Synchronization is the §IV.G
 //! model-version wait; fault tolerance is ACK + visibility timeout.
 //!
 //! The agent only sees trait objects ([`QueueApi`], [`DataApi`]) so the
@@ -9,18 +10,27 @@
 //! clients (classroom mode) — the paper's NodeJS-console vs browser split.
 //!
 //! Batching: the agent exchanges queue messages in batches wherever the
-//! protocol allows — reduce collects gradients via `consume_many` and
-//! settles them via `ack_many`/`nack_many`, and with
+//! protocol allows — reduce/combine collect gradients via `consume_many`
+//! and settle them via `ack_many`/`nack_many`, and with
 //! [`AgentOptions::prefetch`] > 1 it pulls several tasks per roundtrip,
 //! resolving runs of same-batch maps with ONE model wait, ONE
 //! `publish_many` of gradients, and ONE `ack_many` (the classroom-mode
 //! wire win measured in benches/broker_hotpath.rs B4).
+//!
+//! Aggregation plans (coordinator/agg.rs): the reduce decodes its plan
+//! from the task payload; under `tree:<fanin>` it folds only the
+//! top-level partials, and `Combine` tasks do the per-level folding on
+//! the way up. A corrupt gradient payload is POISON, never fatal: it is
+//! ACKed away, logged, and the producer tasks of the still-missing
+//! slot-ranges are republished so the slots can refill (regression-tested
+//! in rust/tests/agg_topology.rs).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{Context, Result};
 
+use crate::coordinator::agg::AggregationPlan;
 use crate::coordinator::initiator::fetch_problem;
 use crate::coordinator::task::{GradResult, Task};
 use crate::coordinator::version::{publish_model, stop_requested, wait_exact_model};
@@ -69,25 +79,47 @@ impl Default for AgentOptions {
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct AgentReport {
     pub maps_done: u64,
+    pub combines_done: u64,
     pub reduces_done: u64,
     pub tasks_nacked: u64,
     pub stale_skipped: u64,
     /// Priority swaps: held task returned for an earlier one (see below).
     pub tasks_swapped: u64,
+    /// Corrupt gradient payloads ACKed away (poison, producer republished).
+    pub poison_dropped: u64,
 }
 
-/// Does `a` precede `b` in the batch order? Strictly-earlier model
-/// versions always precede; within a batch its maps precede its reduce.
+/// Does `a` precede `b` in the global task order? Strictly-earlier model
+/// versions always precede; within a batch the stage order holds (maps,
+/// then combine levels bottom-up, then the reduce — [`Task::stage`]).
 /// This is the priority-swap rule that keeps the protocol deadlock-free:
-/// a worker parked on a future version periodically probes the queue head
+/// a worker parked on a later task periodically probes the queue head
 /// and trades its held task (NACKed back to the front, i.e. its original
 /// position) for an earlier one — so redelivered tasks of the current
 /// batch can never be starved by parked workers.
 fn precedes(a: &Task, b: &Task) -> bool {
     a.model_version() < b.model_version()
-        || (a.model_version() == b.model_version()
-            && matches!(a, Task::Map { .. })
-            && matches!(b, Task::Reduce { .. }))
+        || (a.model_version() == b.model_version() && a.stage() < b.stage())
+}
+
+/// Is `g` (same batch as `holder`, already decoded) a SIBLING fold's
+/// input rather than ours? Under tree plans sibling combines share one
+/// queue per level, so a well-formed input covering another node of the
+/// input level is handed back (NACK) for its owner. Anything that
+/// overlaps our span without matching an expected child range — and
+/// everything unexpected a reduce sees, since a reduce owns its whole
+/// input queue — is poison instead.
+fn is_foreign(holder: &Task, g: &crate::coordinator::task::GradResult) -> bool {
+    let Task::Combine { level, slot_lo, slot_hi, fanin, .. } = holder else {
+        return false;
+    };
+    if g.slot_hi <= *slot_lo || g.slot_lo >= *slot_hi {
+        // Disjoint from our span: foreign if aligned to the input
+        // level's node grid (a plausible sibling child), poison if not.
+        let w = AggregationPlan::Tree { fanin: *fanin }.node_width(level - 1);
+        return (g.slot_lo as u64) % w == 0 && (g.slot_hi - g.slot_lo) as u64 <= w;
+    }
+    false
 }
 
 /// Outcome of waiting for a task's pinned model version.
@@ -102,6 +134,23 @@ enum VersionWait {
     Stale,
     /// The volunteer closed the tab; held task(s) were NACKed back.
     Quit,
+}
+
+/// Outcome of collecting a fold's inputs from a results queue.
+enum Collect {
+    /// All expected ranges arrived; `tags` are their unACKed deliveries
+    /// (settled by the caller AFTER its own output is published).
+    Done { tags: Vec<u64>, loss: f32 },
+    /// The volunteer quit (or stop was requested); inputs and the held
+    /// task were NACKed back.
+    Quit,
+    /// The model advanced past the holder's version mid-collect: a
+    /// visibility-timeout duplicate whose original already completed and
+    /// ACKed the inputs away. Everything was settled (consumed orphans
+    /// ACKed, stale-reduce queues purged, the task ACKed) — without this
+    /// exit the duplicate holder would wait for inputs that can never
+    /// arrive again and wedge the fleet's final join.
+    Stale,
 }
 
 /// A volunteer: wraps the engine + connections and runs the task loop.
@@ -276,8 +325,7 @@ impl<'a> Agent<'a> {
                 .engine
                 .grad_step(GRAD_STEP_B8, &snapshot.params, &x, &y)
                 .context("map grad_step")?;
-            let result =
-                GradResult { batch_ref: *batch_ref, minibatch: *minibatch, loss, grads };
+            let result = GradResult::leaf(*batch_ref, *minibatch, loss, grads);
             encoded.push(result.encode());
             self.record(SpanKind::Compute, t0);
         }
@@ -290,6 +338,270 @@ impl<'a> Agent<'a> {
         self.queue.ack_many(queues::TASKS, &tags)?;
         report.maps_done += run.len() as u64;
         Ok(())
+    }
+
+    /// The aggregation plan a fold-type task runs under.
+    fn task_plan(task: &Task) -> AggregationPlan {
+        match task {
+            Task::Map { .. } => AggregationPlan::Flat,
+            Task::Reduce { plan, .. } => *plan,
+            Task::Combine { fanin, .. } => AggregationPlan::Tree { fanin: *fanin },
+        }
+    }
+
+    /// The level `holder`'s fold reads its inputs from (0 = leaves).
+    fn input_level(holder: &Task) -> u32 {
+        match holder {
+            Task::Reduce { num_minibatches, plan, .. } => plan.levels(*num_minibatches),
+            Task::Combine { level, .. } => *level - 1,
+            Task::Map { .. } => unreachable!("maps have no fold inputs"),
+        }
+    }
+
+    /// Satellite of the poison rule: a corrupt payload may have been the
+    /// only copy of a slot whose producers already ACKed their tasks, so
+    /// the slot can never refill on its own. Republish the ENTIRE
+    /// producer subtree of every still-missing range — down to the Map
+    /// leaves, which are the only tasks that regenerate data from the
+    /// corpus (a republished Combine alone would wedge: its own inputs
+    /// were ACKed away when the corrupted output was first published).
+    /// Everything goes out at its original priority; duplicates are
+    /// harmless — the accumulators dedup first-wins and finished batches
+    /// settle via the stale path.
+    fn republish_producers(&self, holder: &Task, missing: &[(u32, u32)]) -> Result<()> {
+        let plan = Self::task_plan(holder);
+        let batch_ref = holder.batch_ref();
+        let model_version = holder.model_version();
+        let input_level = Self::input_level(holder);
+        for (lo, hi) in missing {
+            for (level, a, b) in plan.subtree(input_level, *lo, *hi) {
+                let task = match (level, plan) {
+                    (0, _) => Task::Map { batch_ref, minibatch: a, model_version },
+                    (_, AggregationPlan::Tree { fanin }) => Task::Combine {
+                        batch_ref,
+                        level,
+                        slot_lo: a,
+                        slot_hi: b,
+                        fanin,
+                        model_version,
+                    },
+                    (_, AggregationPlan::Flat) => {
+                        unreachable!("flat folds read level 0 directly")
+                    }
+                };
+                self.queue.publish_pri(
+                    queues::TASKS,
+                    &task.encode(),
+                    plan.task_priority(model_version, task.stage()),
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Collect every expected input range of `holder` (a Reduce or
+    /// Combine) from `input_queue` into `acc`. Shared fold-input loop:
+    /// batched collection, at-least-once dedup, poison tolerance, the
+    /// stalled-input steal of earlier same-batch work, and quit hand-back.
+    #[allow(clippy::too_many_arguments)]
+    fn collect_inputs(
+        &self,
+        spec: &ProblemSpec,
+        corpus: &Corpus,
+        holder: &Task,
+        delivery: &Delivery,
+        input_queue: &str,
+        acc: &mut GradAccumulator,
+        quit: &AtomicBool,
+        report: &mut AgentReport,
+    ) -> Result<Collect> {
+        let mut pending_acks: Vec<u64> = Vec::new();
+        // Weighted losses by range start, summed in key order at the end
+        // so the (informational) loss stays arrival-order independent.
+        let mut losses: std::collections::BTreeMap<u32, f32> = std::collections::BTreeMap::new();
+        let mut last_progress = std::time::Instant::now();
+        // Extra messages to pull past foreign inputs at the queue head
+        // (tree plans share one queue per level between sibling combines;
+        // a NACKed foreign message returns to the head, so consuming only
+        // `missing` per round could stare at an orphaned sibling
+        // duplicate forever). Escalates after an all-foreign round.
+        let mut foreign_slack = 0usize;
+        // Consecutive stall windows without an owned input. Resets on
+        // progress; at >= 2 the holder regenerates its own missing
+        // subtrees (see the stall branch below).
+        let mut stalled_windows = 0u32;
+        while !acc.is_complete() {
+            if quit.load(Ordering::Relaxed) {
+                // Tab closed mid-fold: hand everything back. NACKing the
+                // collected inputs (not dropping them) lets the next
+                // holder find them instantly.
+                self.queue.nack_many(input_queue, &pending_acks)?;
+                self.queue.nack(queues::TASKS, delivery.tag)?;
+                report.tasks_nacked += 1;
+                return Ok(Collect::Quit);
+            }
+            if last_progress.elapsed() > self.opts.version_wait {
+                // Stalled. First re-check the world: if the model moved
+                // past our pinned version, we are a visibility-timeout
+                // duplicate whose original completed and ACKed our inputs
+                // away — they can never arrive again, so settle and bail
+                // instead of waiting forever. A stop request likewise
+                // must reach a stalled holder.
+                if stop_requested(self.data)? {
+                    self.queue.nack_many(input_queue, &pending_acks)?;
+                    self.queue.nack(queues::TASKS, delivery.tag)?;
+                    report.tasks_nacked += 1;
+                    return Ok(Collect::Quit);
+                }
+                let current = crate::coordinator::version::current_version(self.data)?;
+                if current.unwrap_or(0) > holder.model_version() {
+                    // Settle the orphaned duplicates we consumed; a stale
+                    // reduce also purges every level queue (same as the
+                    // await_version stale path).
+                    self.queue.ack_many(input_queue, &pending_acks)?;
+                    if let Task::Reduce { batch_ref, num_minibatches, plan, .. } = holder {
+                        for level in 0..=plan.levels(*num_minibatches) {
+                            self.queue.purge(&queues::agg_results(*batch_ref, level))?;
+                        }
+                    }
+                    self.queue.ack(queues::TASKS, delivery.tag)?;
+                    report.stale_skipped += 1;
+                    return Ok(Collect::Stale);
+                }
+                // Self-healing: after a second barren window, assume our
+                // missing inputs are GONE — not merely slow. The poison
+                // republish above only helps when the consumer of a
+                // corrupt payload is also its victim; on a shared level
+                // queue a SIBLING may have ACKed away the only copy of
+                // our input (it cannot know whose slot the garbage held),
+                // and no version advance can ever free us because the
+                // batch cannot complete without us. Regenerating our own
+                // producer subtrees breaks that cycle; duplicates are
+                // first-wins-deduped as usual.
+                stalled_windows += 1;
+                if stalled_windows >= 2 {
+                    self.republish_producers(holder, &acc.missing_ranges())?;
+                    // Full grace period before regenerating again:
+                    // without the reset every further barren window
+                    // would re-flood the queue with the same subtree
+                    // while the first regeneration is still running.
+                    stalled_windows = 0;
+                }
+                // A producer may also simply have died (its task will
+                // redeliver to the TASKS head) — steal any same-batch
+                // earlier-stage task and run it inline. With tree plans
+                // that covers redelivered maps AND redelivered combines
+                // of the levels below us (including the tasks republished
+                // just above, when no other volunteer is left to claim
+                // them).
+                if let Some(d2) = self.queue.consume(queues::TASKS, Duration::ZERO)? {
+                    match Task::decode(&d2.payload) {
+                        Ok(t2)
+                            if t2.model_version() == holder.model_version()
+                                && precedes(&t2, holder) =>
+                        {
+                            report.tasks_swapped += 1;
+                            self.handle(spec, corpus, t2, &d2, quit, report)?;
+                        }
+                        Ok(_) => self.queue.nack(queues::TASKS, d2.tag)?,
+                        Err(_) => self.queue.ack(queues::TASKS, d2.tag)?,
+                    }
+                }
+                last_progress = std::time::Instant::now();
+            }
+            // Batched collect: grab every input already pushed (bounded
+            // by the ranges still missing, plus slack to see past foreign
+            // heads) in ONE queue op — the 16-pushes-per-batch burst the
+            // batch API exists for.
+            let want = acc.missing_ranges().len() + foreign_slack;
+            let got = self.queue.consume_many(input_queue, want, self.opts.poll)?;
+            if got.is_empty() {
+                continue; // stragglers / redeliveries
+            }
+            let mut owned_this_round = false;
+            let mut foreign_this_round = false;
+            let mut poisoned_this_round = false;
+            for d in got {
+                let poison = |e: &dyn std::fmt::Display| {
+                    eprintln!(
+                        "agent {}: dropping corrupt gradient on {input_queue}: {e}",
+                        self.id
+                    );
+                };
+                match GradResult::decode(&d.payload) {
+                    Err(e) => {
+                        // POISON: settle it so it can never wedge another
+                        // holder; the slots it may have held refill via
+                        // the once-per-round republish below.
+                        poison(&e);
+                        self.queue.ack(input_queue, d.tag)?;
+                        report.poison_dropped += 1;
+                        poisoned_this_round = true;
+                        last_progress = std::time::Instant::now();
+                    }
+                    Ok(g) if g.batch_ref != holder.batch_ref() => {
+                        // Queues are per-batch: a cross-batch payload is
+                        // garbage, not a sibling's input. Settle it.
+                        poison(&format!(
+                            "batch {:?} on queue of {:?}",
+                            g.batch_ref,
+                            holder.batch_ref()
+                        ));
+                        self.queue.ack(input_queue, d.tag)?;
+                        report.poison_dropped += 1;
+                    }
+                    Ok(g) if is_foreign(holder, &g) => {
+                        // A sibling fold's input sharing this level queue
+                        // (tree plans): hand it back to its original slot
+                        // for its owner.
+                        self.queue.nack(input_queue, d.tag)?;
+                        foreign_this_round = true;
+                    }
+                    Ok(g) => match acc.insert_range(g.slot_lo, g.slot_hi, g.weight, g.grads) {
+                        Ok(_) => {
+                            losses.entry(g.slot_lo).or_insert(g.loss * g.weight as f32);
+                            pending_acks.push(d.tag);
+                            owned_this_round = true;
+                            stalled_windows = 0;
+                            last_progress = std::time::Instant::now();
+                        }
+                        Err(e) => {
+                            // A range the plan never emits, or a
+                            // gradient-length mismatch: poison too.
+                            poison(&e);
+                            self.queue.ack(input_queue, d.tag)?;
+                            report.poison_dropped += 1;
+                            poisoned_this_round = true;
+                        }
+                    },
+                }
+            }
+            if poisoned_this_round && !acc.is_complete() {
+                // A corrupt payload may have been the only copy of a
+                // still-missing slot. ONE republish per round (not per
+                // poison message) covers every missing range without
+                // flooding the task queue with O(poison * missing)
+                // duplicate producers.
+                self.republish_producers(holder, &acc.missing_ranges())?;
+            }
+            if !owned_this_round && !acc.is_complete() {
+                if foreign_this_round {
+                    // Widen the next round so we can reach past parked
+                    // siblings' inputs at the head. The cap only needs to
+                    // exceed the input queue's worst-case depth (<= k
+                    // leaves plus straggler duplicates) for progress to
+                    // be guaranteed: once `want` covers the whole queue,
+                    // the holder always reaches its own inputs.
+                    foreign_slack = (foreign_slack * 2).clamp(1, 256);
+                }
+                // Back off briefly so we do not hot-spin re-consuming the
+                // same foreign head while its owner is parked elsewhere.
+                std::thread::sleep(self.opts.poll.min(Duration::from_millis(20)));
+            }
+        }
+        let total = acc.total_weight() as f32;
+        let loss = losses.values().sum::<f32>() / total;
+        Ok(Collect::Done { tags: pending_acks, loss })
     }
 
     fn handle(
@@ -311,11 +623,13 @@ impl<'a> Agent<'a> {
             VersionWait::Stale => {
                 // Model advanced past the pinned version: a duplicate of
                 // an already-reduced batch. Settle it; for a stale reduce
-                // also drop any orphaned gradients (they linger if the
-                // original reducer died between publishing the model and
-                // ACKing its gradient messages).
-                if let Task::Reduce { batch_ref, .. } = task {
-                    self.queue.purge(&queues::map_results(batch_ref))?;
+                // also drop any orphaned gradients on EVERY level queue
+                // (they linger if the original folder died between
+                // publishing its output and ACKing its input messages).
+                if let Task::Reduce { batch_ref, num_minibatches, plan, .. } = task {
+                    for level in 0..=plan.levels(num_minibatches) {
+                        self.queue.purge(&queues::agg_results(batch_ref, level))?;
+                    }
                 }
                 self.queue.ack(queues::TASKS, delivery.tag)?;
                 report.stale_skipped += 1;
@@ -335,63 +649,68 @@ impl<'a> Agent<'a> {
                     .grad_step(GRAD_STEP_B8, &snapshot.params, &x, &y)
                     .context("map grad_step")?;
                 self.throttle(start);
-                let result = GradResult { batch_ref, minibatch, loss, grads };
+                let result = GradResult::leaf(batch_ref, minibatch, loss, grads);
                 self.queue
                     .publish(&queues::map_results(batch_ref), &result.encode())?;
                 self.queue.ack(queues::TASKS, delivery.tag)?;
                 report.maps_done += 1;
                 self.record(SpanKind::Compute, start);
             }
-            Task::Reduce { batch_ref, num_minibatches, model_version } => {
-                let rq = queues::map_results(batch_ref);
-                let mut acc = GradAccumulator::new(num_minibatches as usize);
-                let mut pending_acks = Vec::new();
-                let mut last_progress = std::time::Instant::now();
-                while !acc.is_complete() {
-                    if quit.load(Ordering::Relaxed) {
-                        // Tab closed mid-reduce: hand everything back.
-                        // NACKing the collected gradients (not dropping
-                        // them) lets the next reducer find them instantly.
-                        self.queue.nack_many(&rq, &pending_acks)?;
-                        self.queue.nack(queues::TASKS, delivery.tag)?;
-                        report.tasks_nacked += 1;
-                        return Ok(());
-                    }
-                    if last_progress.elapsed() > self.opts.version_wait {
-                        // Gradients stalled: their producer may have died
-                        // (the map task will redeliver to the TASKS head) —
-                        // steal our own batch's map and run it inline.
-                        if let Some(d2) = self.queue.consume(queues::TASKS, Duration::ZERO)? {
-                            match Task::decode(&d2.payload) {
-                                Ok(t2 @ Task::Map { .. })
-                                    if t2.model_version() == model_version =>
-                                {
-                                    report.tasks_swapped += 1;
-                                    self.handle(spec, corpus, t2, &d2, quit, report)?;
-                                }
-                                Ok(_) => self.queue.nack(queues::TASKS, d2.tag)?,
-                                Err(_) => self.queue.ack(queues::TASKS, d2.tag)?,
-                            }
-                        }
-                        last_progress = std::time::Instant::now();
-                    }
-                    // Batched collect: grab every gradient already pushed
-                    // (bounded by the slots still missing) in ONE queue
-                    // op — the 16-pushes-per-batch burst the batch API
-                    // exists for.
-                    let want = acc.missing().len();
-                    let got = self.queue.consume_many(&rq, want, self.opts.poll)?;
-                    if got.is_empty() {
-                        continue; // map stragglers / redeliveries
-                    }
-                    for d in got {
-                        let g = GradResult::decode(&d.payload)
-                            .map_err(|e| anyhow!("corrupt gradient: {e}"))?;
-                        acc.insert(g.minibatch as usize, g.grads)?;
-                        pending_acks.push(d.tag);
-                        last_progress = std::time::Instant::now();
-                    }
-                }
+            Task::Combine { batch_ref, level, slot_lo, slot_hi, fanin, .. } => {
+                let plan = AggregationPlan::Tree { fanin };
+                let input_queue = queues::agg_results(batch_ref, level - 1);
+                let mut acc =
+                    GradAccumulator::with_ranges(plan.child_ranges(level, slot_lo, slot_hi))?;
+                let (tags, loss) = match self.collect_inputs(
+                    spec,
+                    corpus,
+                    &task,
+                    delivery,
+                    &input_queue,
+                    &mut acc,
+                    quit,
+                    report,
+                )? {
+                    Collect::Done { tags, loss } => (tags, loss),
+                    Collect::Quit | Collect::Stale => return Ok(()),
+                };
+                let (sum, weight) = acc.fold_sum()?;
+                self.throttle(start);
+                let partial = GradResult {
+                    batch_ref,
+                    slot_lo,
+                    slot_hi,
+                    weight,
+                    loss,
+                    grads: sum,
+                };
+                // Output first, then the input ACKs: a crash in between
+                // redelivers the inputs and the Combine task, and the
+                // parent dedups the duplicate partial (at-least-once).
+                self.queue
+                    .publish(&queues::agg_results(batch_ref, level), &partial.encode())?;
+                self.queue.ack_many(&input_queue, &tags)?;
+                self.queue.ack(queues::TASKS, delivery.tag)?;
+                report.combines_done += 1;
+                self.record(SpanKind::Accumulate, start);
+            }
+            Task::Reduce { batch_ref, num_minibatches, model_version, plan } => {
+                let top = plan.levels(num_minibatches);
+                let input_queue = queues::agg_results(batch_ref, top);
+                let mut acc = GradAccumulator::with_ranges(plan.reduce_ranges(num_minibatches))?;
+                let tags = match self.collect_inputs(
+                    spec,
+                    corpus,
+                    &task,
+                    delivery,
+                    &input_queue,
+                    &mut acc,
+                    quit,
+                    report,
+                )? {
+                    Collect::Done { tags, .. } => tags,
+                    Collect::Quit | Collect::Stale => return Ok(()),
+                };
                 let folded = acc.fold()?;
                 let (params, ms) = self
                     .engine
@@ -406,7 +725,7 @@ impl<'a> Agent<'a> {
                 // published: a crash before this line redelivers them to
                 // the next reduce attempt. One batched ACK settles the
                 // whole collection.
-                self.queue.ack_many(&rq, &pending_acks)?;
+                self.queue.ack_many(&input_queue, &tags)?;
                 self.queue.ack(queues::TASKS, delivery.tag)?;
                 self.data.incr(keys::REDUCES_DONE)?;
                 report.reduces_done += 1;

@@ -1,13 +1,21 @@
 //! Discrete-event simulation of the full JSDoop protocol (S7-S9).
 //!
 //! Runs the *same* protocol state machine as the real threaded agents —
-//! FIFO InitialQueue of interleaved map/reduce tasks, model-version
-//! parking, gradient collection, ACK/visibility-timeout redelivery, churn
-//! — but on the virtual clock, with task durations drawn from a calibrated
-//! service-time model instead of executing PJRT. This regenerates the
-//! paper's minute-scale experiments (Figs 4-8, Table 4 runtimes)
-//! deterministically in milliseconds; the real agents regenerate the loss
-//! column and validate the protocol end-to-end.
+//! priority InitialQueue of interleaved map/combine/reduce tasks,
+//! model-version parking, gradient collection, ACK/visibility-timeout
+//! redelivery, churn — but on the virtual clock, with task durations drawn
+//! from a calibrated service-time model instead of executing PJRT. This
+//! regenerates the paper's minute-scale experiments (Figs 4-8, Table 4
+//! runtimes) deterministically in milliseconds; the real agents regenerate
+//! the loss column and validate the protocol end-to-end.
+//!
+//! Aggregation plans (coordinator/agg.rs) are modelled one-to-one:
+//! `flat` is the paper's single-reducer pipeline, `tree:<fanin>` adds
+//! Combine tasks that fold slot-ranges level by level. The simulator also
+//! measures the **per-step critical path** — the queue operations and
+//! gradient vectors moved through the busiest single agent per model
+//! update — which is the number the tree topology exists to shrink
+//! (benches/agg_topology.rs gates it in CI).
 //!
 //! Time parameters are seconds; see `benches/` for the cluster/classroom
 //! calibrations.
@@ -16,6 +24,7 @@ use std::collections::{BTreeMap, HashMap};
 
 use anyhow::{bail, Result};
 
+pub use crate::coordinator::agg::AggregationPlan;
 use crate::faults::FaultPlan;
 use crate::metrics::{Span, SpanKind, Timeline};
 use crate::simclock::SimClock;
@@ -29,6 +38,9 @@ pub struct SimParams {
     pub t_map: f64,
     /// Base seconds for fold + RMSprop update at speed 1.0.
     pub t_reduce: f64,
+    /// Base seconds for one combine's partial-sum fold at speed 1.0
+    /// (tree plans only; pure vector adds, so cheaper than a reduce).
+    pub t_combine: f64,
     /// Queue operation round-trip (consume/publish/ack amortized).
     pub rtt: f64,
     /// Seconds to fetch the model snapshot from the DataServer.
@@ -37,16 +49,19 @@ pub struct SimParams {
     pub model_push: f64,
     /// Seconds to publish one gradient result.
     pub grad_push: f64,
-    /// Seconds for the reducer to collect one gradient ROUNDTRIP (see
+    /// Seconds for a folder to collect one gradient ROUNDTRIP (see
     /// `grad_batch`).
     pub grad_collect: f64,
-    /// Queue-op batch size for gradient collection (>= 1): the reducer
-    /// pays `grad_collect` once per roundtrip and needs
-    /// ceil(minibatches / grad_batch) roundtrips — the virtual-clock
+    /// Queue-op batch size for gradient collection (>= 1): a folder pays
+    /// `grad_collect` once per roundtrip and needs
+    /// ceil(inputs / grad_batch) roundtrips — the virtual-clock
     /// model of the real agent's `consume_many` batching. 1 reproduces
     /// the paper's one-message-per-roundtrip protocol (and is the
     /// default, so the calibrated profiles stay bit-identical).
     pub grad_batch: usize,
+    /// Aggregation topology (default [`AggregationPlan::Flat`], the
+    /// paper's layout — calibrated profiles are unchanged by default).
+    pub agg: AggregationPlan,
     /// Worker-local fast-memory capacity in minibatch working sets.
     pub cache_capacity: usize,
     /// Extra compute fraction on a cache miss (Foster's effect).
@@ -68,8 +83,8 @@ pub struct SimParams {
     pub poll: f64,
     /// Parked-worker probe interval: every `version_wait` seconds a parked
     /// worker peeks the queue head and, if the head task PRECEDES its held
-    /// task (earlier model version, or the same batch's map while it holds
-    /// the reduce), swaps — returning its held task to the front. This
+    /// task (earlier model version, or an earlier stage of the same
+    /// batch), swaps — returning its held task to the front. This
     /// priority-swap is what makes the protocol deadlock-free under churn
     /// without ever scrambling the batch order.
     pub version_wait: f64,
@@ -80,12 +95,14 @@ impl Default for SimParams {
         SimParams {
             t_map: 1.0,
             t_reduce: 0.5,
+            t_combine: 0.1,
             rtt: 0.02,
             model_fetch: 0.15,
             model_push: 0.15,
             grad_push: 0.1,
             grad_collect: 0.05,
             grad_batch: 1,
+            agg: AggregationPlan::Flat,
             cache_capacity: 64,
             cache_miss_penalty: 0.3,
             jitter_sigma: 0.0,
@@ -115,49 +132,63 @@ impl SimWorkload {
     }
 }
 
-/// Reducer roundtrips needed to collect `mb` gradients when each
+/// Folder roundtrips needed to collect `inputs` gradients when each
 /// roundtrip moves up to `batch` messages (`consume_many` in the real
 /// stack).
-fn grad_fetches(mb: u32, batch: usize) -> f64 {
-    (mb as u64).div_ceil(batch.max(1) as u64) as f64
+fn grad_fetches(inputs: u32, batch: usize) -> f64 {
+    (inputs as u64).div_ceil(batch.max(1) as u64) as f64
 }
 
 /// Simulated task (version doubles as batch id).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum STask {
     Map { version: u64, minibatch: u32 },
+    Combine { version: u64, level: u32, lo: u32, hi: u32 },
     Reduce { version: u64 },
 }
 
 impl STask {
     fn version(&self) -> u64 {
         match self {
-            STask::Map { version, .. } | STask::Reduce { version } => *version,
+            STask::Map { version, .. }
+            | STask::Combine { version, .. }
+            | STask::Reduce { version } => *version,
         }
     }
 
-    /// Queue priority: batch order, maps before their reduce (exactly the
-    /// real Initiator's publish_pri scheme).
-    fn priority(&self) -> u64 {
+    /// Within-batch stage: maps, then combine levels bottom-up, then the
+    /// reduce (mirrors `Task::stage` in the real stack).
+    fn stage(&self) -> u32 {
         match self {
-            STask::Map { version, .. } => version * 2,
-            STask::Reduce { version } => version * 2 + 1,
+            STask::Map { .. } => 0,
+            STask::Combine { level, .. } => *level,
+            STask::Reduce { .. } => u32::MAX,
         }
+    }
+
+    /// Queue priority: THE real Initiator's scheme, not a copy of it —
+    /// the sim's schedule can never drift from the compiled one.
+    fn priority(&self, plan: &AggregationPlan) -> u64 {
+        plan.task_priority(self.version(), self.stage())
     }
 }
 
 /// Priority-ordered task queue mirroring the real broker (see
 /// queue/broker.rs): tasks are served in (priority, seq) order, so a
 /// requeued old task is always ahead of every later batch's work.
-#[derive(Default)]
 struct TaskQueue {
     ready: BTreeMap<(u64, u64), STask>,
     next_seq: u64,
+    plan: AggregationPlan,
 }
 
 impl TaskQueue {
+    fn new(plan: AggregationPlan) -> Self {
+        TaskQueue { ready: BTreeMap::new(), next_seq: 0, plan }
+    }
+
     fn push(&mut self, t: STask) {
-        let key = (t.priority(), self.next_seq);
+        let key = (t.priority(&self.plan), self.next_seq);
         self.next_seq += 1;
         self.ready.insert(key, t);
     }
@@ -180,7 +211,7 @@ impl TaskQueue {
 enum WState {
     NotJoined,
     Idle,
-    /// Holding a task, waiting on a model version (or reduce grads).
+    /// Holding a task, waiting on a model version (or fold inputs).
     Parked,
     Busy,
     Dead,
@@ -195,6 +226,7 @@ enum Ev {
     /// Pull attempt resolves (after rtt / poll delay). gen guards staleness.
     Pull { w: usize, gen: u64 },
     MapDone { w: usize, gen: u64, version: u64, minibatch: u32, started: f64 },
+    CombineDone { w: usize, gen: u64, version: u64, level: u32, lo: u32, hi: u32, started: f64 },
     ReduceDone { w: usize, gen: u64, version: u64, started: f64 },
     /// Visibility timeout for a task abandoned by a dead/frozen worker.
     Requeue(STask),
@@ -210,7 +242,7 @@ struct Worker {
     state: WState,
     speed: f64,
     gen: u64,
-    /// Task held while Parked (map/reduce waiting for version or grads).
+    /// Task held while Parked (waiting for version or fold inputs).
     held: Option<(STask, f64)>,
     cache: WorkerCache,
     rng: Rng,
@@ -224,11 +256,22 @@ pub struct SimResult {
     pub runtime: f64,
     pub timeline: Timeline,
     pub maps_done: u64,
+    pub combines_done: u64,
     pub reduces_done: u64,
     pub requeues: u64,
     pub events: u64,
     /// Mean cache hit rate over workers that did work.
     pub cache_hit_rate: f64,
+    /// Per-step critical path, queue-op dimension: mean over model
+    /// updates of the max queue operations (task claim + gradient
+    /// collect roundtrips + result publish) any single agent performed
+    /// for that batch. Flat pins this on the lone reducer (~k + 1);
+    /// tree:<f> caps it near f + 2.
+    pub critical_ops_per_step: f64,
+    /// Per-step critical path, bandwidth dimension: mean over model
+    /// updates of the max full gradient vectors moved through any single
+    /// agent for that batch (in + out).
+    pub critical_grad_vecs_per_step: f64,
 }
 
 /// Run one experiment.
@@ -248,11 +291,22 @@ pub fn simulate(
     }
     let mut rng = Rng::new(seed);
 
-    // The InitialQueue: priority-ordered by batch (see TaskQueue docs).
-    let mut queue = TaskQueue::default();
+    let agg = params.agg;
+    let k = workload.minibatches_per_batch;
+    let top = agg.levels(k);
+    // Inputs the final reduce collects: top-level node count (k for flat).
+    let reduce_fan = agg.nodes_at(k, top).len() as u32;
+
+    // The InitialQueue: priority-ordered by (batch, stage), see TaskQueue.
+    let mut queue = TaskQueue::new(agg);
     for v in 0..workload.total_batches {
-        for m in 0..workload.minibatches_per_batch {
+        for m in 0..k {
             queue.push(STask::Map { version: v, minibatch: m });
+        }
+        for level in 1..=top {
+            for (lo, hi) in agg.nodes_at(k, level) {
+                queue.push(STask::Combine { version: v, level, lo, hi });
+            }
         }
         queue.push(STask::Reduce { version: v });
     }
@@ -291,10 +345,23 @@ pub fn simulate(
     // Completed minibatches — deduplicates straggler redeliveries ("first
     // result wins", the broker's at-least-once semantics).
     let mut map_done: std::collections::HashSet<(u64, u32)> = std::collections::HashSet::new();
-    // Reduce holder waiting for its batch's gradients: (worker, started).
+    // Completed combine nodes, by (version, level, lo) — same first-wins
+    // dedup for the tree stages — plus a per-(version, level) tally.
+    let mut node_done: std::collections::HashSet<(u64, u32, u32)> =
+        std::collections::HashSet::new();
+    let mut nodes_count: HashMap<(u64, u32), u32> = HashMap::new();
+    // Reduce holder waiting for its batch's inputs: (worker, started).
     let mut reduce_waiting: HashMap<u64, (usize, f64)> = HashMap::new();
+    // Combine holders waiting for their children, by (version, level, lo).
+    let mut combine_waiting: HashMap<(u64, u32, u32), (usize, f64)> = HashMap::new();
+    // Per-(version, worker) queue ops + gradient vectors, for the
+    // critical-path metric (drained at each ReduceDone).
+    let mut step_ops: HashMap<(u64, usize), (u64, u64)> = HashMap::new();
+    let mut crit_ops_sum = 0.0f64;
+    let mut crit_vecs_sum = 0.0f64;
     let timeline = Timeline::new();
     let mut maps_done = 0u64;
+    let mut combines_done = 0u64;
     let mut reduces_done = 0u64;
     let mut requeues = 0u64;
     let mut finish_time = 0.0f64;
@@ -315,6 +382,30 @@ pub fn simulate(
             1.0
         }
     };
+
+    // Is the combine node (version, level, [lo, hi)) ready to fold?
+    macro_rules! combine_ready {
+        ($version:expr, $level:expr, $lo:expr, $hi:expr) => {{
+            if $level == 1 {
+                ($lo..$hi).all(|m| map_done.contains(&($version, m)))
+            } else {
+                agg.child_ranges($level, $lo, $hi)
+                    .iter()
+                    .all(|(clo, _)| node_done.contains(&($version, $level - 1, *clo)))
+            }
+        }};
+    }
+
+    // Are the reduce's inputs (top-level partials, or all leaves) ready?
+    macro_rules! reduce_ready {
+        ($version:expr) => {{
+            if top == 0 {
+                grads_done.get(&$version).copied().unwrap_or(0) == k
+            } else {
+                nodes_count.get(&($version, top)).copied().unwrap_or(0) == reduce_fan
+            }
+        }};
+    }
 
     // Start a map's compute phase (model version is available).
     macro_rules! start_map {
@@ -345,7 +436,42 @@ pub fn simulate(
         }};
     }
 
-    // Reduce holder proceeds to its update phase once grads are complete.
+    // Start a combine's fold phase (children are complete).
+    macro_rules! start_combine {
+        ($clock:expr, $workers:expr, $w:expr, $version:expr, $level:expr, $lo:expr, $hi:expr, $started:expr) => {{
+            let children = agg.child_ranges($level, $lo, $hi).len() as u32;
+            let wk = &mut $workers[$w];
+            wk.state = WState::Busy;
+            wk.held =
+                Some((STask::Combine { version: $version, level: $level, lo: $lo, hi: $hi }, $started));
+            let j = jitter(wk, params);
+            let dur = params.model_fetch
+                + grad_fetches(children, params.grad_batch) * params.grad_collect
+                + (params.t_combine * j) / wk.speed
+                + params.grad_push;
+            wk.gen += 1;
+            let gen = wk.gen;
+            $clock.schedule_in(
+                dur,
+                Ev::CombineDone {
+                    w: $w,
+                    gen,
+                    version: $version,
+                    level: $level,
+                    lo: $lo,
+                    hi: $hi,
+                    started: $started,
+                },
+            );
+            // Same straggler insurance as maps: first result wins.
+            $clock.schedule_in(
+                params.visibility_timeout,
+                Ev::Requeue(STask::Combine { version: $version, level: $level, lo: $lo, hi: $hi }),
+            );
+        }};
+    }
+
+    // Reduce holder proceeds to its update phase once inputs are complete.
     macro_rules! start_reduce_update {
         ($clock:expr, $workers:expr, $w:expr, $version:expr, $started:expr) => {{
             let wk = &mut $workers[$w];
@@ -353,13 +479,24 @@ pub fn simulate(
             wk.held = Some((STask::Reduce { version: $version }, $started));
             let j = jitter(wk, params);
             let dur = params.model_fetch
-                + grad_fetches(workload.minibatches_per_batch, params.grad_batch)
-                    * params.grad_collect
+                + grad_fetches(reduce_fan, params.grad_batch) * params.grad_collect
                 + (params.t_reduce * j) / wk.speed
                 + params.model_push;
             wk.gen += 1;
             let gen = wk.gen;
             $clock.schedule_in(dur, Ev::ReduceDone { w: $w, gen, version: $version, started: $started });
+        }};
+    }
+
+    // Credit one completed task's queue ops + gradient-vector traffic to
+    // (version, worker) — the raw material of the critical-path metric.
+    macro_rules! credit {
+        ($version:expr, $w:expr, $ops:expr, $vecs:expr) => {{
+            if $version >= model_version {
+                let e = step_ops.entry(($version, $w)).or_insert((0, 0));
+                e.0 += $ops;
+                e.1 += $vecs;
+            }
         }};
     }
 
@@ -386,13 +523,25 @@ pub fn simulate(
                         $clock.schedule_in(params.version_wait, Ev::SwapTick { w: $w, gen });
                     }
                 }
+                STask::Combine { version, level, lo, hi } => {
+                    if version < model_version || node_done.contains(&(version, level, lo)) {
+                        pull_later!($clock, $w, params.rtt, $workers); // stale duplicate
+                    } else if version == model_version && combine_ready!(version, level, lo, hi) {
+                        start_combine!($clock, $workers, $w, version, level, lo, hi, started);
+                    } else {
+                        // Wait for version and/or children (also bounded).
+                        let wk = &mut $workers[$w];
+                        wk.state = WState::Parked;
+                        wk.held = Some((task, started));
+                        combine_waiting.insert((version, level, lo), ($w, started));
+                        let gen = wk.gen;
+                        $clock.schedule_in(params.version_wait, Ev::SwapTick { w: $w, gen });
+                    }
+                }
                 STask::Reduce { version } => {
                     if version < model_version {
                         pull_later!($clock, $w, params.rtt, $workers); // stale duplicate
-                    } else if version == model_version
-                        && grads_done.get(&version).copied().unwrap_or(0)
-                            == workload.minibatches_per_batch
-                    {
+                    } else if version == model_version && reduce_ready!(version) {
                         start_reduce_update!($clock, $workers, $w, version, started);
                     } else {
                         // Wait for version and/or gradients (also bounded).
@@ -426,15 +575,24 @@ pub fn simulate(
                             start_map!($clock, $workers, w, version, minibatch, started);
                         }
                     }
+                    STask::Combine { version, level, lo, hi } => {
+                        if version < model_version {
+                            $workers[w].held = None;
+                            combine_waiting.remove(&(version, level, lo));
+                            pull_later!($clock, w, params.rtt, $workers);
+                        } else if version == model_version
+                            && combine_ready!(version, level, lo, hi)
+                        {
+                            combine_waiting.remove(&(version, level, lo));
+                            start_combine!($clock, $workers, w, version, level, lo, hi, started);
+                        }
+                    }
                     STask::Reduce { version } => {
                         if version < model_version {
                             $workers[w].held = None;
                             reduce_waiting.remove(&version);
                             pull_later!($clock, w, params.rtt, $workers);
-                        } else if version == model_version
-                            && grads_done.get(&version).copied().unwrap_or(0)
-                                == workload.minibatches_per_batch
-                        {
+                        } else if version == model_version && reduce_ready!(version) {
                             reduce_waiting.remove(&version);
                             start_reduce_update!($clock, $workers, w, version, started);
                         }
@@ -444,19 +602,66 @@ pub fn simulate(
         }};
     }
 
+    // Forget a parked holder's wait registration (swap/abandon/crash).
+    macro_rules! unregister_wait {
+        ($task:expr) => {{
+            match $task {
+                STask::Reduce { version } => {
+                    reduce_waiting.remove(&version);
+                }
+                STask::Combine { version, level, lo, .. } => {
+                    combine_waiting.remove(&(version, level, lo));
+                }
+                STask::Map { .. } => {}
+            }
+        }};
+    }
+
     // Abandon a held/running task (death or freeze).
     macro_rules! abandon {
         ($clock:expr, $workers:expr, $w:expr) => {{
             $workers[$w].gen += 1; // cancel in-flight completion events
             if let Some((task, _)) = $workers[$w].held.take() {
-                if let STask::Reduce { version } = task {
-                    reduce_waiting.remove(&version);
-                }
+                unregister_wait!(task);
                 requeues += 1;
                 if params.requeue_on_disconnect {
                     queue.push(task);
                 } else {
                     $clock.schedule_in(params.visibility_timeout, Ev::Requeue(task));
+                }
+            }
+        }};
+    }
+
+    // A combine node finished: release whoever was parked on it.
+    macro_rules! release_parent {
+        ($clock:expr, $workers:expr, $version:expr, $level:expr, $lo:expr) => {{
+            if $level == top {
+                if reduce_ready!($version) {
+                    if let Some((rw, rstarted)) = reduce_waiting.remove(&$version) {
+                        if $workers[rw].state == WState::Parked && !$workers[rw].frozen {
+                            start_reduce_update!($clock, $workers, rw, $version, rstarted);
+                        } else {
+                            reduce_waiting.insert($version, (rw, rstarted));
+                        }
+                    }
+                }
+            } else {
+                let pw = agg.node_width($level + 1);
+                let p_lo = (($lo as u64 / pw) * pw) as u32;
+                let p_hi = ((p_lo as u64 + pw).min(k as u64)) as u32;
+                if combine_ready!($version, $level + 1, p_lo, p_hi) {
+                    if let Some((cw, cstarted)) =
+                        combine_waiting.remove(&($version, $level + 1, p_lo))
+                    {
+                        if $workers[cw].state == WState::Parked && !$workers[cw].frozen {
+                            start_combine!(
+                                $clock, $workers, cw, $version, $level + 1, p_lo, p_hi, cstarted
+                            );
+                        } else {
+                            combine_waiting.insert(($version, $level + 1, p_lo), (cw, cstarted));
+                        }
+                    }
                 }
             }
         }};
@@ -551,6 +756,8 @@ pub fn simulate(
                     end: now,
                 });
                 maps_done += 1;
+                // Task claim + gradient publish; one vector out.
+                credit!(version, w, 2, 1);
                 if !map_done.insert((version, minibatch)) {
                     // A straggler's duplicate finished after the original:
                     // its gradient is ignored (first result wins).
@@ -558,16 +765,51 @@ pub fn simulate(
                     continue;
                 }
                 *grads_done.entry(version).or_insert(0) += 1;
-                // If the reduce holder was waiting on grads, release it.
-                if grads_done[&version] == workload.minibatches_per_batch {
-                    if let Some((rw, rstarted)) = reduce_waiting.remove(&version) {
-                        if workers[rw].state == WState::Parked && !workers[rw].frozen {
-                            start_reduce_update!(clock, workers, rw, version, rstarted);
-                        } else {
-                            reduce_waiting.insert(version, (rw, rstarted));
+                if top == 0 {
+                    // Flat: if the reduce holder was waiting, release it.
+                    if grads_done[&version] == k {
+                        if let Some((rw, rstarted)) = reduce_waiting.remove(&version) {
+                            if workers[rw].state == WState::Parked && !workers[rw].frozen {
+                                start_reduce_update!(clock, workers, rw, version, rstarted);
+                            } else {
+                                reduce_waiting.insert(version, (rw, rstarted));
+                            }
                         }
                     }
+                } else {
+                    // Tree: this leaf may complete a level-1 combine
+                    // (leaves are the "nodes" of level 0).
+                    release_parent!(clock, workers, version, 0, minibatch);
                 }
+                pull_later!(clock, w, params.rtt, workers);
+            }
+            Ev::CombineDone { w, gen, version, level, lo, hi, started } => {
+                if workers[w].gen != gen {
+                    continue;
+                }
+                workers[w].held = None;
+                timeline.record(Span {
+                    worker: w,
+                    kind: SpanKind::Accumulate,
+                    start: started,
+                    end: now,
+                });
+                combines_done += 1;
+                let children = agg.child_ranges(level, lo, hi).len() as u64;
+                // Task claim + collect roundtrips + partial publish;
+                // children vectors in, one out.
+                credit!(
+                    version,
+                    w,
+                    1 + grad_fetches(children as u32, params.grad_batch) as u64 + 1,
+                    children + 1
+                );
+                if !node_done.insert((version, level, lo)) {
+                    pull_later!(clock, w, params.rtt, workers);
+                    continue; // straggler duplicate: first result wins
+                }
+                *nodes_count.entry((version, level)).or_insert(0) += 1;
+                release_parent!(clock, workers, version, level, lo);
                 pull_later!(clock, w, params.rtt, workers);
             }
             Ev::ReduceDone { w, gen, version, started } => {
@@ -575,6 +817,14 @@ pub fn simulate(
                     continue;
                 }
                 workers[w].held = None;
+                // Task claim + collect roundtrips (+ model push, not a
+                // gradient vector); reduce_fan vectors in.
+                credit!(
+                    version,
+                    w,
+                    1 + grad_fetches(reduce_fan, params.grad_batch) as u64,
+                    reduce_fan as u64
+                );
                 model_version = version + 1;
                 last_progress_events = clock.processed();
                 timeline.record(Span {
@@ -585,6 +835,17 @@ pub fn simulate(
                 });
                 reduces_done += 1;
                 finish_time = now;
+                // Critical path of this step: the busiest single agent.
+                let mut max_ops = 0u64;
+                let mut max_vecs = 0u64;
+                for wi in 0..n {
+                    if let Some((ops, vecs)) = step_ops.remove(&(version, wi)) {
+                        max_ops = max_ops.max(ops);
+                        max_vecs = max_vecs.max(vecs);
+                    }
+                }
+                crit_ops_sum += max_ops as f64;
+                crit_vecs_sum += max_vecs as f64;
                 if model_version >= workload.total_batches {
                     break;
                 }
@@ -596,6 +857,9 @@ pub fn simulate(
                     && match task {
                         STask::Map { version, minibatch } => {
                             !map_done.contains(&(version, minibatch))
+                        }
+                        STask::Combine { version, level, lo, .. } => {
+                            !node_done.contains(&(version, level, lo))
                         }
                         STask::Reduce { .. } => true,
                     };
@@ -628,11 +892,9 @@ pub fn simulate(
                     if matches!(workers[w].state, WState::Dead | WState::NotJoined) {
                         continue;
                     }
-                    workers[w].gen += 1; // cancel MapDone/ReduceDone/SwapTick
+                    workers[w].gen += 1; // cancel MapDone/CombineDone/ReduceDone/SwapTick
                     if let Some((task, _)) = workers[w].held.take() {
-                        if let STask::Reduce { version } = task {
-                            reduce_waiting.remove(&version);
-                        }
+                        unregister_wait!(task);
                         requeues += 1;
                         queue.push(task);
                     }
@@ -656,13 +918,13 @@ pub fn simulate(
                 let Some((held, _started)) = workers[w].held else { continue };
                 let swap = match (queue.front(), held) {
                     (Some(front), held) => {
-                        // Strictly-earlier version always precedes; a map
-                        // of the SAME batch precedes the batch's reduce
-                        // (the reducer steals its own missing minibatch).
+                        // Strictly-earlier version always precedes; within
+                        // a batch the stage order holds (maps < combine
+                        // levels bottom-up < reduce), so a holder can
+                        // always rescue redelivered work it depends on.
                         front.version() < held.version()
                             || (front.version() == held.version()
-                                && matches!(front, STask::Map { .. })
-                                && matches!(held, STask::Reduce { .. }))
+                                && front.stage() < held.stage())
                     }
                     (None, _) => false,
                 };
@@ -671,9 +933,7 @@ pub fn simulate(
                     // Held task returns to its priority slot.
                     queue.push(held);
                     workers[w].held = None;
-                    if let STask::Reduce { version } = held {
-                        reduce_waiting.remove(&version);
-                    }
+                    unregister_wait!(held);
                     dispatch!(clock, workers, w, t, now);
                 } else {
                     // Keep parking; probe again later.
@@ -702,14 +962,18 @@ pub fn simulate(
         rates.iter().sum::<f64>() / rates.len() as f64
     };
 
+    let steps = reduces_done.max(1) as f64;
     Ok(SimResult {
         runtime: finish_time,
         timeline,
         maps_done,
+        combines_done,
         reduces_done,
         requeues,
         events: clock.processed(),
         cache_hit_rate,
+        critical_ops_per_step: crit_ops_sum / steps,
+        critical_grad_vecs_per_step: crit_vecs_sum / steps,
     })
 }
 
@@ -730,11 +994,29 @@ mod tests {
         .unwrap()
     }
 
+    fn quick_tree(n: usize, fanin: u32) -> SimResult {
+        let plan = FaultPlan::sync_start(n);
+        let speeds = vec![1.0; n];
+        let params = SimParams {
+            agg: AggregationPlan::Tree { fanin },
+            ..SimParams::default()
+        };
+        simulate(
+            SimWorkload { total_batches: 10, minibatches_per_batch: 4, batches_per_epoch: 5 },
+            &params,
+            &plan,
+            &speeds,
+            7,
+        )
+        .unwrap()
+    }
+
     #[test]
     fn completes_all_batches() {
         let r = quick(4);
         assert_eq!(r.reduces_done, 10);
         assert_eq!(r.maps_done, 40);
+        assert_eq!(r.combines_done, 0);
         assert!(r.runtime > 0.0);
     }
 
@@ -792,6 +1074,99 @@ mod tests {
             batched.runtime,
             single.runtime
         );
+    }
+
+    #[test]
+    fn tree_plan_completes_with_expected_combines() {
+        // k=4, fanin 2: one combine level with 2 nodes per batch.
+        let r = quick_tree(4, 2);
+        assert_eq!(r.reduces_done, 10);
+        assert!(r.maps_done >= 40);
+        assert!(r.combines_done >= 20, "2 combines x 10 batches, got {}", r.combines_done);
+    }
+
+    #[test]
+    fn tree_single_worker_completes() {
+        // The degenerate fleet must fold the whole tree alone (stage
+        // priorities guarantee it claims maps, combines, reduce in order).
+        let r = quick_tree(1, 2);
+        assert_eq!(r.reduces_done, 10);
+    }
+
+    #[test]
+    fn tree_is_deterministic() {
+        let a = quick_tree(6, 2);
+        let b = quick_tree(6, 2);
+        assert_eq!(a.runtime, b.runtime);
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn tree_cuts_the_reducer_critical_path() {
+        // The acceptance shape: at 16 volunteers on the paper workload
+        // (k=16), tree:4 must cut both critical-path dimensions vs flat.
+        let wl = SimWorkload::paper();
+        let plan = FaultPlan::sync_start(16);
+        let speeds = vec![1.0; 16];
+        let flat = simulate(wl, &SimParams::default(), &plan, &speeds, 42).unwrap();
+        let p = SimParams { agg: AggregationPlan::Tree { fanin: 4 }, ..SimParams::default() };
+        let tree = simulate(wl, &p, &plan, &speeds, 42).unwrap();
+        assert_eq!(flat.reduces_done, tree.reduces_done);
+        // Flat: the lone reducer consumes all 16 vectors -> >= 17 ops.
+        assert!(
+            flat.critical_ops_per_step >= 17.0,
+            "flat critical ops {}",
+            flat.critical_ops_per_step
+        );
+        assert!(
+            tree.critical_ops_per_step < flat.critical_ops_per_step * 0.75,
+            "tree {} vs flat {}",
+            tree.critical_ops_per_step,
+            flat.critical_ops_per_step
+        );
+        assert!(
+            tree.critical_grad_vecs_per_step < flat.critical_grad_vecs_per_step * 0.75,
+            "tree {} vs flat {}",
+            tree.critical_grad_vecs_per_step,
+            flat.critical_grad_vecs_per_step
+        );
+    }
+
+    #[test]
+    fn tree_combiner_death_redelivers_and_completes() {
+        // A combiner dies mid-tree; recovery must go through the
+        // visibility timeout (requeue_on_disconnect = false) and the run
+        // still completes every batch.
+        let mut params = SimParams {
+            agg: AggregationPlan::Tree { fanin: 2 },
+            ..SimParams::default()
+        };
+        params.requeue_on_disconnect = false;
+        params.visibility_timeout = 3.0;
+        // Long combines so the t=4 departures land while the first
+        // batch's level-1 folds (started ~t=2.6 after two map rounds)
+        // are still in flight.
+        params.t_combine = 3.0;
+        let plan = FaultPlan::departure(4, 2, 4.0);
+        let r = simulate(
+            SimWorkload { total_batches: 6, minibatches_per_batch: 8, batches_per_epoch: 3 },
+            &params,
+            &plan,
+            &[1.0; 4],
+            11,
+        )
+        .unwrap();
+        assert_eq!(r.reduces_done, 6);
+        assert!(r.requeues > 0, "departures at t=4 must abandon held tasks");
+    }
+
+    #[test]
+    fn tree_survives_broker_crash() {
+        let wl = SimWorkload { total_batches: 8, minibatches_per_batch: 8, batches_per_epoch: 4 };
+        let plan = FaultPlan::sync_start(4).with_broker_crash(3.0, 2.0);
+        let p = SimParams { agg: AggregationPlan::Tree { fanin: 2 }, ..SimParams::default() };
+        let r = simulate(wl, &p, &plan, &[1.0; 4], 7).unwrap();
+        assert_eq!(r.reduces_done, 8);
     }
 
     #[test]

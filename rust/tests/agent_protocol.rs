@@ -43,7 +43,12 @@ fn stale_batch0_world() -> (Broker, Store) {
         let t = Task::Map { batch_ref: batch0(), minibatch: m, model_version: 0 };
         broker.publish_pri(queues::TASKS, &t.encode(), 0).unwrap();
     }
-    let t = Task::Reduce { batch_ref: batch0(), num_minibatches: 2, model_version: 0 };
+    let t = Task::Reduce {
+        batch_ref: batch0(),
+        num_minibatches: 2,
+        model_version: 0,
+        plan: jsdoop::coordinator::agg::AggregationPlan::Flat,
+    };
     broker.publish_pri(queues::TASKS, &t.encode(), 1).unwrap();
     // An orphaned gradient a dead reducer left behind: the stale reduce
     // must purge it along with the duplicate task.

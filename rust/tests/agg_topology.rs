@@ -1,0 +1,586 @@
+//! Aggregation-topology integration tests (coordinator/agg.rs):
+//!
+//! - GOLDEN: with `--agg=flat` the Initiator's task stream and queue
+//!   layout are byte-identical to the original pipeline — payloads AND
+//!   priorities are compared against hand-built expectations, via the
+//!   broker snapshot codec (which records (priority, seq, payload)).
+//! - Tree plans compile the documented per-level queues and stage
+//!   priorities.
+//! - Full-fleet runs on the exact-math stub engine (no PJRT needed):
+//!   flat and tree fleets must recover bit-identical final models equal
+//!   to their serial shape oracles; a poisoned results queue must heal
+//!   (ACK + republish) instead of killing every reducer; churn under a
+//!   tree plan must still converge to the oracle.
+
+use jsdoop::coordinator::agg::AggregationPlan;
+use jsdoop::coordinator::initiator::{setup_problem, setup_problem_with};
+use jsdoop::coordinator::task::{BatchRef, Task};
+use jsdoop::coordinator::ProblemSpec;
+use jsdoop::queue::broker::{decode_snapshot, Broker, SnapMsg};
+use jsdoop::textdata::{Corpus, Schedule};
+
+fn tiny_spec() -> ProblemSpec {
+    // tiny: 2 batches/epoch, 1 epoch, k = 2 minibatches per batch.
+    ProblemSpec { schedule: Schedule::tiny(), learning_rate: 0.1 }
+}
+
+fn setup(plan: Option<AggregationPlan>, spec: &ProblemSpec) -> Broker {
+    let broker = Broker::with_default_timeout();
+    let store = jsdoop::data::Store::new();
+    let corpus = Corpus::synthetic_js(1, 2000);
+    match plan {
+        None => setup_problem(&broker, &store, spec, &corpus, vec![0.0; 8]).unwrap(),
+        Some(p) => {
+            setup_problem_with(&broker, &store, spec, &corpus, vec![0.0; 8], p).unwrap()
+        }
+    };
+    broker
+}
+
+/// (queue name, [(priority, payload)]) for every queue in the broker, in
+/// snapshot (sorted-name) order.
+fn layout(broker: &Broker) -> Vec<(String, Vec<(u64, Vec<u8>)>)> {
+    decode_snapshot(&broker.snapshot())
+        .unwrap()
+        .queues
+        .into_iter()
+        .map(|(name, _epoch, msgs)| {
+            let msgs = msgs
+                .into_iter()
+                .map(|SnapMsg { payload, priority, .. }| (priority, payload))
+                .collect();
+            (name, msgs)
+        })
+        .collect()
+}
+
+/// Hand-built legacy map payload: [tag=1][epoch][batch][minibatch][version].
+fn legacy_map(epoch: u32, batch: u32, minibatch: u32, version: u64) -> Vec<u8> {
+    let mut b = vec![1u8];
+    b.extend_from_slice(&epoch.to_le_bytes());
+    b.extend_from_slice(&batch.to_le_bytes());
+    b.extend_from_slice(&minibatch.to_le_bytes());
+    b.extend_from_slice(&version.to_le_bytes());
+    b
+}
+
+/// Hand-built legacy reduce payload: [tag=2][epoch][batch][k][version].
+fn legacy_reduce(epoch: u32, batch: u32, k: u32, version: u64) -> Vec<u8> {
+    let mut b = vec![2u8];
+    b.extend_from_slice(&epoch.to_le_bytes());
+    b.extend_from_slice(&batch.to_le_bytes());
+    b.extend_from_slice(&k.to_le_bytes());
+    b.extend_from_slice(&version.to_le_bytes());
+    b
+}
+
+#[test]
+fn golden_flat_task_stream_is_byte_identical() {
+    // The paper-faithful default: payload bytes AND priorities must match
+    // the pre-AggregationPlan pipeline exactly. Expectations are built by
+    // hand (no Task::encode), so codec drift cannot hide here.
+    let spec = tiny_spec();
+    let broker = setup(None, &spec);
+    let got = layout(&broker);
+    let expected_tasks: Vec<(u64, Vec<u8>)> = vec![
+        (0, legacy_map(0, 0, 0, 0)),
+        (0, legacy_map(0, 0, 1, 0)),
+        (1, legacy_reduce(0, 0, 2, 0)),
+        (2, legacy_map(0, 1, 0, 1)),
+        (2, legacy_map(0, 1, 1, 1)),
+        (3, legacy_reduce(0, 1, 2, 1)),
+    ];
+    assert_eq!(
+        got,
+        vec![
+            ("results.map.e0.b0".to_string(), vec![]),
+            ("results.map.e0.b1".to_string(), vec![]),
+            ("tasks".to_string(), expected_tasks),
+        ]
+    );
+}
+
+#[test]
+fn flat_wrapper_and_flat_plan_produce_identical_brokers() {
+    let spec = tiny_spec();
+    let legacy = setup(None, &spec);
+    let planned = setup(Some(AggregationPlan::Flat), &spec);
+    // Snapshot bytes cover queue names, priorities, seqs, and payloads.
+    assert_eq!(legacy.snapshot(), planned.snapshot());
+}
+
+#[test]
+fn tree_stream_has_level_queues_and_stage_priorities() {
+    // k=4 (batch 32 / minibatch 8), fanin 2 => one combine level with two
+    // nodes per batch; stride 64 priorities: maps v*64, combines v*64+1,
+    // reduce v*64+63.
+    let mut spec = tiny_spec();
+    spec.schedule.batch_size = 32;
+    spec.schedule.examples_per_epoch = 64;
+    let broker = setup(Some(AggregationPlan::Tree { fanin: 2 }), &spec);
+    let got = layout(&broker);
+    let names: Vec<&str> = got.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(
+        names,
+        vec![
+            "results.map.e0.b0",
+            "results.map.e0.b0.l1",
+            "results.map.e0.b1",
+            "results.map.e0.b1.l1",
+            "tasks",
+        ]
+    );
+    let tasks = &got.last().unwrap().1;
+    let decoded: Vec<(u64, &'static str, u64)> = tasks
+        .iter()
+        .map(|(pri, payload)| {
+            let t = Task::decode(payload).unwrap();
+            (*pri, t.kind_str(), t.model_version())
+        })
+        .collect();
+    let per_batch = |v: u64| {
+        vec![
+            (v * 64, "map", v),
+            (v * 64, "map", v),
+            (v * 64, "map", v),
+            (v * 64, "map", v),
+            (v * 64 + 1, "combine", v),
+            (v * 64 + 1, "combine", v),
+            (v * 64 + 63, "reduce", v),
+        ]
+    };
+    let expected: Vec<(u64, &str, u64)> =
+        per_batch(0).into_iter().chain(per_batch(1)).collect();
+    assert_eq!(decoded, expected);
+    // The combines carry the right ranges and the reduce carries the plan.
+    let combines: Vec<Task> = tasks
+        .iter()
+        .map(|(_, p)| Task::decode(p).unwrap())
+        .filter(|t| matches!(t, Task::Combine { .. }))
+        .collect();
+    assert_eq!(combines.len(), 4);
+    if let Task::Combine { level, slot_lo, slot_hi, fanin, .. } = combines[0] {
+        assert_eq!((level, slot_lo, slot_hi, fanin), (1, 0, 2, 2));
+    }
+    let reduce = Task::decode(&tasks[6].1).unwrap();
+    assert_eq!(
+        reduce,
+        Task::Reduce {
+            batch_ref: BatchRef { epoch: 0, batch: 0 },
+            num_minibatches: 4,
+            model_version: 0,
+            plan: AggregationPlan::Tree { fanin: 2 },
+        }
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Full-fleet runs on the exact-math stub engine. The stub only exists in
+// non-pjrt builds (tier-1 CI); real-compute twins live in faults_churn.rs.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+mod fleet {
+    use super::*;
+    use jsdoop::coordinator::queues;
+    use jsdoop::coordinator::task::GradResult;
+    use jsdoop::coordinator::version::{current_version, get_model, publish_model};
+    use jsdoop::data::{DataApi, Store};
+    use jsdoop::model::ModelSnapshot;
+    use jsdoop::queue::QueueApi;
+    use jsdoop::runtime::{Engine, GRAD_STEP_B8};
+    use jsdoop::volunteer::agent::{Agent, AgentOptions, AgentReport};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    /// Schedule with `k` minibatches per batch and `batches` model
+    /// updates (1 epoch). Exactness needs k to be a power of two and a
+    /// dyadic learning rate — see runtime/stub.rs.
+    fn spec_k(k: usize, batches: usize) -> ProblemSpec {
+        let schedule = Schedule {
+            seq_len: 10,
+            batch_size: 4 * k,
+            minibatch_size: 4,
+            examples_per_epoch: 4 * k * batches,
+            epochs: 1,
+        };
+        ProblemSpec { schedule, learning_rate: 0.25 }
+    }
+
+    fn fleet_opts() -> AgentOptions {
+        AgentOptions {
+            poll: Duration::from_millis(20),
+            version_wait: Duration::from_millis(150),
+            ..Default::default()
+        }
+    }
+
+    /// Run `workers` exact-math agents over a freshly set-up problem and
+    /// return (final model, per-agent reports).
+    fn run_fleet(
+        spec: &ProblemSpec,
+        plan: AggregationPlan,
+        workers: usize,
+        prefetch: usize,
+        quit_one_early: bool,
+    ) -> (ModelSnapshot, Vec<AgentReport>) {
+        let broker = Arc::new(Broker::new(Duration::from_secs(5)));
+        let store = Arc::new(Store::new());
+        let corpus = Corpus::synthetic_js(7, 3000);
+        let init = vec![0.0f32; 6];
+        setup_problem_with(broker.as_ref(), store.as_ref(), spec, &corpus, init, plan).unwrap();
+        let engine = Engine::exact_math_for_tests();
+        let quits: Vec<AtomicBool> = (0..workers).map(|_| AtomicBool::new(false)).collect();
+        let reports = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|id| {
+                    let broker = broker.clone();
+                    let store = store.clone();
+                    let engine = &engine;
+                    let quit = &quits[id];
+                    let mut opts = fleet_opts();
+                    opts.prefetch = prefetch;
+                    s.spawn(move || {
+                        let agent = Agent {
+                            id,
+                            engine,
+                            queue: broker.as_ref(),
+                            data: store.as_ref(),
+                            timeline: None,
+                            opts,
+                        };
+                        agent.run(quit).unwrap()
+                    })
+                })
+                .collect();
+            if quit_one_early && workers > 1 {
+                // Churn: dismiss one volunteer once the first update
+                // lands; the rest must absorb its handed-back work.
+                let t0 = std::time::Instant::now();
+                while current_version(store.as_ref()).unwrap().unwrap_or(0) < 1
+                    && t0.elapsed() < Duration::from_secs(30)
+                {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                quits[0].store(true, Ordering::Relaxed);
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        });
+        let model = get_model(store.as_ref()).unwrap().expect("fleet produced a model");
+        (model, reports)
+    }
+
+    fn oracle(spec: &ProblemSpec, plan: AggregationPlan) -> Vec<f32> {
+        let engine = Engine::exact_math_for_tests();
+        let corpus = Corpus::synthetic_js(7, 3000);
+        jsdoop::baseline::train_accumulated_with_plan(
+            &engine,
+            &corpus,
+            spec,
+            vec![0.0f32; 6],
+            plan,
+        )
+        .unwrap()
+        .snapshot
+        .params
+    }
+
+    #[test]
+    fn flat_and_tree_fleets_recover_identical_models() {
+        // Exact-math arithmetic is associative, so every topology must
+        // land on the SAME bits — and each must equal its shape oracle.
+        let spec = spec_k(4, 3);
+        let o_flat = oracle(&spec, AggregationPlan::Flat);
+        let o_tree = oracle(&spec, AggregationPlan::Tree { fanin: 2 });
+        assert_eq!(o_flat, o_tree, "exact math must make shapes agree");
+        let (m_flat, _) = run_fleet(&spec, AggregationPlan::Flat, 2, 1, false);
+        assert_eq!(m_flat.version, spec.total_versions());
+        assert_eq!(m_flat.params, o_flat);
+        let (m_tree, reports) = run_fleet(&spec, AggregationPlan::Tree { fanin: 2 }, 3, 2, false);
+        assert_eq!(m_tree.version, spec.total_versions());
+        assert_eq!(m_tree.params, o_tree);
+        let combines: u64 = reports.iter().map(|r| r.combines_done).sum();
+        // k=4, fanin 2: 2 combine nodes x 3 batches, at least once each.
+        assert!(combines >= 6, "tree fleet must execute combines, did {combines}");
+    }
+
+    #[test]
+    fn tree_fleet_with_churn_matches_oracle() {
+        let spec = spec_k(8, 3);
+        let plan = AggregationPlan::Tree { fanin: 2 };
+        let (model, reports) = run_fleet(&spec, plan, 3, 1, true);
+        assert_eq!(model.version, spec.total_versions());
+        assert_eq!(model.params, oracle(&spec, plan));
+        let nacked: u64 = reports.iter().map(|r| r.tasks_nacked).sum();
+        let _ = nacked; // churn may or may not catch a held task; model equality is the invariant
+    }
+
+    #[test]
+    fn poisoned_results_queue_still_converges() {
+        // Regression for the fatal `?` on GradResult::decode: a corrupt
+        // payload on the results queue used to kill every volunteer that
+        // claimed the batch's Reduce. Now it must be ACKed away and the
+        // missing map republished — the run completes and matches the
+        // oracle. Construct the worst case: the maps are long gone
+        // (acked), slot 1's gradient was REPLACED by garbage, so only the
+        // poison path can refill it.
+        let spec = spec_k(2, 1);
+        let broker = Broker::new(Duration::from_secs(5));
+        let store = Store::new();
+        let corpus = Corpus::synthetic_js(7, 3000);
+        let init = vec![0.0f32; 6];
+        let engine = Engine::exact_math_for_tests();
+
+        // DataServer state as the Initiator leaves it.
+        store.put(jsdoop::coordinator::keys::PROBLEM, &spec.encode()).unwrap();
+        store.put(jsdoop::coordinator::keys::CORPUS, &corpus.to_bytes()).unwrap();
+        publish_model(&store, &ModelSnapshot::initial(init.clone())).unwrap();
+
+        // Queue state mid-batch: both maps acked; slot 0's gradient is
+        // live, slot 1's arrived corrupt; only the Reduce task remains.
+        let bref = BatchRef { epoch: 0, batch: 0 };
+        broker.declare(queues::TASKS).unwrap();
+        broker.declare(&queues::map_results(bref)).unwrap();
+        let (x0, y0) = spec.schedule.minibatch(&corpus, 0, 0, 0);
+        let (g0, l0) = engine.grad_step(GRAD_STEP_B8, &init, &x0, &y0).unwrap();
+        broker
+            .publish(&queues::map_results(bref), &GradResult::leaf(bref, 0, l0, g0).encode())
+            .unwrap();
+        broker
+            .publish(&queues::map_results(bref), b"\xde\xad\xbe\xef corrupt gradient")
+            .unwrap();
+        let reduce = Task::Reduce {
+            batch_ref: bref,
+            num_minibatches: 2,
+            model_version: 0,
+            plan: AggregationPlan::Flat,
+        };
+        broker.publish_pri(queues::TASKS, &reduce.encode(), 1).unwrap();
+
+        let quit = AtomicBool::new(false);
+        let agent = Agent {
+            id: 0,
+            engine: &engine,
+            queue: &broker,
+            data: &store,
+            timeline: None,
+            opts: fleet_opts(),
+        };
+        let report = agent.run(&quit).unwrap();
+        assert!(report.poison_dropped >= 1, "report: {report:?}");
+        assert_eq!(report.reduces_done, 1);
+        assert!(report.maps_done >= 1, "the republished map must refill slot 1");
+        let model = get_model(&store).unwrap().unwrap();
+        assert_eq!(model.version, 1);
+        assert_eq!(model.params, oracle(&spec, AggregationPlan::Flat));
+        // The poison is gone for good and the results queue is settled.
+        let stats = broker.stats(&queues::map_results(bref)).unwrap();
+        assert_eq!((stats.ready, stats.unacked), (0, 0));
+    }
+
+    #[test]
+    fn poisoned_partial_republishes_the_whole_subtree() {
+        // The non-transitive-recovery deadlock: a combine publishes its
+        // partial, ACKs its leaf inputs, and THEN the partial corrupts on
+        // the level-1 queue. Republishing only the Combine task could
+        // never heal (its inputs are gone); the poison path must
+        // republish the whole producer subtree down to the Map leaves so
+        // the range regenerates from the corpus.
+        let spec = spec_k(4, 1);
+        let plan = AggregationPlan::Tree { fanin: 2 };
+        let broker = Broker::new(Duration::from_secs(5));
+        let store = Store::new();
+        let corpus = Corpus::synthetic_js(7, 3000);
+        let init = vec![0.0f32; 6];
+        let engine = Engine::exact_math_for_tests();
+
+        store.put(jsdoop::coordinator::keys::PROBLEM, &spec.encode()).unwrap();
+        store.put(jsdoop::coordinator::keys::CORPUS, &corpus.to_bytes()).unwrap();
+        publish_model(&store, &ModelSnapshot::initial(init.clone())).unwrap();
+
+        // Mid-batch state: all maps and both combines ran and were ACKed.
+        // The [0,2) partial is live on l1; the [2,4) partial CORRUPTED.
+        // Only the Reduce task remains.
+        let bref = BatchRef { epoch: 0, batch: 0 };
+        broker.declare(queues::TASKS).unwrap();
+        broker.declare(&queues::agg_results(bref, 0)).unwrap();
+        broker.declare(&queues::agg_results(bref, 1)).unwrap();
+        let leaf = |m: u32| {
+            let (x, y) = spec.schedule.minibatch(&corpus, 0, 0, m as usize);
+            let (g, l) = engine.grad_step(GRAD_STEP_B8, &init, &x, &y).unwrap();
+            GradResult::leaf(bref, m, l, g)
+        };
+        let (g0, g1) = (leaf(0), leaf(1));
+        let sum: Vec<f32> = g0.grads.iter().zip(&g1.grads).map(|(a, b)| a + b).collect();
+        let partial02 = GradResult {
+            batch_ref: bref,
+            slot_lo: 0,
+            slot_hi: 2,
+            weight: 2,
+            loss: 1.0,
+            grads: sum,
+        };
+        broker
+            .publish(&queues::agg_results(bref, 1), &partial02.encode())
+            .unwrap();
+        broker
+            .publish(&queues::agg_results(bref, 1), b"corrupt partial sum")
+            .unwrap();
+        let reduce = Task::Reduce {
+            batch_ref: bref,
+            num_minibatches: 4,
+            model_version: 0,
+            plan,
+        };
+        broker
+            .publish_pri(queues::TASKS, &reduce.encode(), plan.task_priority(0, u32::MAX))
+            .unwrap();
+
+        let quit = AtomicBool::new(false);
+        let agent = Agent {
+            id: 0,
+            engine: &engine,
+            queue: &broker,
+            data: &store,
+            timeline: None,
+            opts: fleet_opts(),
+        };
+        let report = agent.run(&quit).unwrap();
+        assert!(report.poison_dropped >= 1, "report: {report:?}");
+        // Healing requires re-running the leaves AND the combine.
+        assert!(report.maps_done >= 2, "report: {report:?}");
+        assert!(report.combines_done >= 1, "report: {report:?}");
+        assert_eq!(report.reduces_done, 1);
+        let model = get_model(&store).unwrap().unwrap();
+        assert_eq!(model.version, 1);
+        assert_eq!(model.params, oracle(&spec, plan));
+    }
+
+    #[test]
+    fn combine_with_a_vanished_input_regenerates_it() {
+        // The sibling-victim hole: on a shared level queue, whoever
+        // consumes a corrupt payload ACKs it away but cannot know whose
+        // slot the garbage held — the true owner may be left waiting for
+        // an input that no longer exists anywhere (its Map was ACKed long
+        // ago). The stall-escalation path must regenerate the holder's
+        // own producer subtree after repeated barren windows. Model the
+        // aftermath directly: leaf 2 is simply GONE.
+        let spec = spec_k(4, 1);
+        let plan = AggregationPlan::Tree { fanin: 2 };
+        let broker = Broker::new(Duration::from_secs(60));
+        let store = Store::new();
+        let corpus = Corpus::synthetic_js(7, 3000);
+        let init = vec![0.0f32; 6];
+        let engine = Engine::exact_math_for_tests();
+
+        store.put(jsdoop::coordinator::keys::PROBLEM, &spec.encode()).unwrap();
+        store.put(jsdoop::coordinator::keys::CORPUS, &corpus.to_bytes()).unwrap();
+        publish_model(&store, &ModelSnapshot::initial(init.clone())).unwrap();
+
+        let bref = BatchRef { epoch: 0, batch: 0 };
+        broker.declare(queues::TASKS).unwrap();
+        broker.declare(&queues::agg_results(bref, 0)).unwrap();
+        broker.declare(&queues::agg_results(bref, 1)).unwrap();
+        // Combine [0,2) already done: its partial is live on l1. All maps
+        // are ACKed; leaf 3 survives on l0 but leaf 2 was destroyed.
+        let leaf = |m: u32| {
+            let (x, y) = spec.schedule.minibatch(&corpus, 0, 0, m as usize);
+            let (g, l) = engine.grad_step(GRAD_STEP_B8, &init, &x, &y).unwrap();
+            GradResult::leaf(bref, m, l, g)
+        };
+        let (g0, g1) = (leaf(0), leaf(1));
+        let sum: Vec<f32> = g0.grads.iter().zip(&g1.grads).map(|(a, b)| a + b).collect();
+        let partial02 = GradResult {
+            batch_ref: bref,
+            slot_lo: 0,
+            slot_hi: 2,
+            weight: 2,
+            loss: 1.0,
+            grads: sum,
+        };
+        broker
+            .publish(&queues::agg_results(bref, 1), &partial02.encode())
+            .unwrap();
+        broker
+            .publish(&queues::agg_results(bref, 0), &leaf(3).encode())
+            .unwrap();
+        let c24 = Task::Combine {
+            batch_ref: bref,
+            level: 1,
+            slot_lo: 2,
+            slot_hi: 4,
+            fanin: 2,
+            model_version: 0,
+        };
+        broker
+            .publish_pri(queues::TASKS, &c24.encode(), plan.task_priority(0, 1))
+            .unwrap();
+        let reduce = Task::Reduce {
+            batch_ref: bref,
+            num_minibatches: 4,
+            model_version: 0,
+            plan,
+        };
+        broker
+            .publish_pri(queues::TASKS, &reduce.encode(), plan.task_priority(0, u32::MAX))
+            .unwrap();
+
+        let quit = AtomicBool::new(false);
+        let agent = Agent {
+            id: 0,
+            engine: &engine,
+            queue: &broker,
+            data: &store,
+            timeline: None,
+            opts: fleet_opts(),
+        };
+        let report = agent.run(&quit).unwrap();
+        // Slot 2 regenerated via the escalation republish (a Map ran).
+        assert!(report.maps_done >= 1, "report: {report:?}");
+        assert!(report.combines_done >= 1, "report: {report:?}");
+        assert_eq!(report.reduces_done, 1);
+        let model = get_model(&store).unwrap().unwrap();
+        assert_eq!(model.version, 1);
+        assert_eq!(model.params, oracle(&spec, plan));
+    }
+
+    #[test]
+    fn poisoned_combine_input_heals_under_tree_plan() {
+        // Same poison rule one level up: a combiner's input queue holds
+        // garbage; the combine must drop it, republish its producer map,
+        // and the run still converges to the tree oracle.
+        let spec = spec_k(4, 1);
+        let plan = AggregationPlan::Tree { fanin: 2 };
+        let broker = Arc::new(Broker::new(Duration::from_secs(5)));
+        let store = Arc::new(Store::new());
+        let corpus = Corpus::synthetic_js(7, 3000);
+        setup_problem_with(
+            broker.as_ref(),
+            store.as_ref(),
+            &spec,
+            &corpus,
+            vec![0.0f32; 6],
+            plan,
+        )
+        .unwrap();
+        // Pre-poison the leaf results queue before any volunteer joins.
+        let bref = BatchRef { epoch: 0, batch: 0 };
+        broker.publish(&queues::agg_results(bref, 0), b"not a gradient").unwrap();
+        let engine = Engine::exact_math_for_tests();
+        let quit = AtomicBool::new(false);
+        let agent = Agent {
+            id: 0,
+            engine: &engine,
+            queue: broker.as_ref(),
+            data: store.as_ref(),
+            timeline: None,
+            opts: fleet_opts(),
+        };
+        let report = agent.run(&quit).unwrap();
+        assert!(report.poison_dropped >= 1, "report: {report:?}");
+        let model = get_model(store.as_ref()).unwrap().unwrap();
+        assert_eq!(model.version, spec.total_versions());
+        assert_eq!(model.params, oracle(&spec, plan));
+    }
+}

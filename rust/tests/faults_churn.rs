@@ -84,6 +84,43 @@ fn heterogeneous_speeds_same_model() {
 }
 
 #[test]
+fn tree_aggregation_with_churn_matches_tree_oracle() {
+    // Tree-reduce under churn (real PJRT compute): k=4 minibatches,
+    // fanin 2 => one combine level. A volunteer leaves almost
+    // immediately — whatever it held (map, combine, or the reduce)
+    // redelivers via NACK-back/visibility, and the survivors must land
+    // on the EXACT model of the serial tree-shaped oracle.
+    use jsdoop::coordinator::agg::AggregationPlan;
+
+    let Some((engine, mut cfg)) = common::engine_and_tiny_config() else {
+        common::skip("tree_aggregation_with_churn_matches_tree_oracle");
+        return;
+    };
+    cfg.batch_size = 32; // k = 32 / 8 = 4 (minibatch size pinned by AOT)
+    cfg.examples_per_epoch = 64; // 2 batches
+    cfg.agg = "tree:2".to_string();
+    cfg.visibility_timeout_secs = 2.0;
+    cfg.validate().unwrap();
+    let plan = FaultPlan::departure(3, 1, 0.3);
+    let out = driver::run_local(&cfg, &engine, &plan, &[1.0; 3]).unwrap();
+    assert_eq!(out.final_model.version, cfg.schedule().total_batches() as u64);
+    let corpus = driver::load_corpus(&cfg).unwrap();
+    let spec = ProblemSpec { schedule: cfg.schedule(), learning_rate: cfg.learning_rate };
+    let init = engine.meta().load_init_params(&cfg.artifact_dir).unwrap();
+    let oracle = baseline::train_accumulated_with_plan(
+        &engine,
+        &corpus,
+        &spec,
+        init,
+        AggregationPlan::Tree { fanin: 2 },
+    )
+    .unwrap();
+    assert_eq!(out.final_model.params, oracle.snapshot.params);
+    let combines: u64 = out.pool.reports.iter().map(|r| r.combines_done).sum();
+    assert!(combines >= 4, "2 combine nodes x 2 batches, at least once each");
+}
+
+#[test]
 fn coordinator_crash_mid_epoch_recovers_and_finishes() {
     // The broker-crash scenario the durability subsystem exists for: a
     // WAL-backed broker dies mid-epoch (half the batches reduced, tasks

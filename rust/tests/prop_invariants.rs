@@ -323,6 +323,180 @@ fn prop_sim_deterministic_given_seed() {
 }
 
 #[test]
+#[cfg(not(feature = "pjrt"))]
+fn prop_flat_and_tree_fleets_recover_identical_final_model() {
+    // The aggregation-topology invariant (coordinator/agg.rs): under the
+    // exact-math stub engine (integer-valued gradients, dyadic lr —
+    // every fold exactly associative) a `flat` fleet and a `tree:<fanin>`
+    // fleet must land on the BIT-IDENTICAL final model, equal to the
+    // serial shape oracle, for random worker counts, prefetch depths,
+    // volunteer churn, and WAL sync policies on a durable task broker.
+    use jsdoop::coordinator::agg::AggregationPlan;
+    use jsdoop::coordinator::initiator::setup_problem_with;
+    use jsdoop::coordinator::version::{current_version, get_model};
+    use jsdoop::coordinator::ProblemSpec;
+    use jsdoop::data::Store;
+    use jsdoop::queue::durability::{DurabilityOptions, DurableBroker, SyncPolicy};
+    use jsdoop::runtime::Engine;
+    use jsdoop::volunteer::agent::{Agent, AgentOptions};
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    static DIR_N: AtomicUsize = AtomicUsize::new(0);
+
+    fn run_fleet(
+        spec: &ProblemSpec,
+        corpus: &Corpus,
+        plan: AggregationPlan,
+        workers: usize,
+        prefetch: usize,
+        sync: SyncPolicy,
+        churn: bool,
+    ) -> Result<Vec<f32>, String> {
+        let dir = std::env::temp_dir().join(format!(
+            "jsdoop-prop-agg-{}-{}",
+            std::process::id(),
+            DIR_N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = DurabilityOptions {
+            sync,
+            compact_after_bytes: u64::MAX,
+            visibility_timeout: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let broker = Arc::new(DurableBroker::open(&dir, opts).map_err(|e| e.to_string())?);
+        let store = Arc::new(Store::new());
+        setup_problem_with(
+            broker.as_ref(),
+            store.as_ref(),
+            spec,
+            corpus,
+            vec![0.0f32; 5],
+            plan,
+        )
+        .map_err(|e| e.to_string())?;
+        let engine = Engine::exact_math_for_tests();
+        let quits: Vec<AtomicBool> = (0..workers).map(|_| AtomicBool::new(false)).collect();
+        let agent_opts = AgentOptions {
+            poll: Duration::from_millis(20),
+            version_wait: Duration::from_millis(150),
+            prefetch,
+            ..Default::default()
+        };
+        let results: Vec<Result<(), String>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|id| {
+                    let broker = broker.clone();
+                    let store = store.clone();
+                    let engine = &engine;
+                    let quit = &quits[id];
+                    let agent_opts = agent_opts.clone();
+                    s.spawn(move || -> Result<(), String> {
+                        let agent = Agent {
+                            id,
+                            engine,
+                            queue: broker.as_ref(),
+                            data: store.as_ref(),
+                            timeline: None,
+                            opts: agent_opts,
+                        };
+                        agent.run(quit).map_err(|e| e.to_string())?;
+                        Ok(())
+                    })
+                })
+                .collect();
+            if churn && workers > 1 {
+                // One volunteer closes its tab after the first update.
+                let t0 = std::time::Instant::now();
+                while current_version(store.as_ref()).unwrap().unwrap_or(0) < 1
+                    && t0.elapsed() < Duration::from_secs(60)
+                {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                quits[0].store(true, Ordering::Relaxed);
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in results {
+            r?;
+        }
+        let model = get_model(store.as_ref())
+            .map_err(|e| e.to_string())?
+            .ok_or("no model produced")?;
+        if model.version != spec.total_versions() {
+            return Err(format!(
+                "fleet stalled at {}/{}",
+                model.version,
+                spec.total_versions()
+            ));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(model.params)
+    }
+
+    check("flat-vs-tree-model", 5, |rng| {
+        let k = [2usize, 4, 8][rng.below(3) as usize];
+        let batches = 2 + rng.below(2) as usize;
+        let fanin = 2 + rng.below(2) as u32;
+        let workers = 1 + rng.below(3) as usize;
+        let prefetch = 1 + rng.below(3) as usize;
+        let sync = match rng.below(3) {
+            0 => SyncPolicy::Never,
+            1 => SyncPolicy::Always,
+            _ => SyncPolicy::EveryN(5),
+        };
+        let churn = rng.below(2) == 0;
+        let schedule = Schedule {
+            seq_len: 10,
+            batch_size: 2 * k,
+            minibatch_size: 2,
+            examples_per_epoch: 2 * k * batches,
+            epochs: 1,
+        };
+        let spec = ProblemSpec { schedule, learning_rate: 0.25 };
+        let corpus = Corpus::synthetic_js(rng.next_u64(), 3000);
+        let tree = AggregationPlan::Tree { fanin };
+
+        let engine = Engine::exact_math_for_tests();
+        let o_flat = jsdoop::baseline::train_accumulated_with_plan(
+            &engine,
+            &corpus,
+            &spec,
+            vec![0.0f32; 5],
+            AggregationPlan::Flat,
+        )
+        .map_err(|e| e.to_string())?
+        .snapshot
+        .params;
+        let o_tree = jsdoop::baseline::train_accumulated_with_plan(
+            &engine,
+            &corpus,
+            &spec,
+            vec![0.0f32; 5],
+            tree,
+        )
+        .map_err(|e| e.to_string())?
+        .snapshot
+        .params;
+        if o_flat != o_tree {
+            return Err("shape oracles disagree under exact math".into());
+        }
+
+        let flat_run =
+            run_fleet(&spec, &corpus, AggregationPlan::Flat, workers, prefetch, sync, churn)?;
+        if flat_run != o_flat {
+            return Err(format!("flat fleet diverged (k={k} w={workers})"));
+        }
+        let tree_run = run_fleet(&spec, &corpus, tree, workers, prefetch, sync, churn)?;
+        if tree_run != o_tree {
+            return Err(format!("tree fleet diverged (k={k} fanin={fanin} w={workers})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_accumulator_insertion_order_irrelevant() {
     // fold() must depend only on minibatch indices, not arrival order —
     // THE invariant behind "same loss for any worker count".
