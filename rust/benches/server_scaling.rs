@@ -1,0 +1,297 @@
+//! S-series bench — connection scaling of the TCP server's readiness
+//! event loop (queue/server.rs):
+//!   S1 resident memory per idle connection at 1k and 10k connections
+//!      (the event loop holds a ~few-hundred-byte state machine per conn;
+//!      the old design held a whole thread stack)
+//!   S2 the same figure for an in-bench thread-per-connection baseline
+//!      built over the very same `execute_op` implementations
+//!   S3 op throughput with 64 active connections, event loop vs baseline
+//!      (the loop must not tax the busy path to win the idle one)
+//!
+//! Run: cargo bench --bench server_scaling          (wants `ulimit -n` >= 25k)
+//! CI:  SERVER_MAX_RSS_PER_CONN=16384 caps S1 hard; the committed
+//!      bench_baselines/BENCH_server.json gates S1/S3 against regression
+//!      via `cargo run --bin bench_check`.
+//!
+//! Counts degrade gracefully under a low fd limit: a tier that cannot be
+//! reached is skipped (with a note) instead of emitting a bogus row.
+
+mod common;
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jsdoop::data::Store;
+use jsdoop::metrics::{write_bench_json, BenchRow};
+use jsdoop::queue::broker::Broker;
+use jsdoop::queue::client::RemoteQueue;
+use jsdoop::queue::server::{execute_op, serve};
+use jsdoop::queue::wire::{read_frame, write_frame, Op, ST_ERR};
+use jsdoop::queue::QueueApi;
+
+use common::iters;
+
+/// Resident set size from /proc/self/status (linux); `None` elsewhere —
+/// the RSS rows are skipped on such hosts.
+fn vm_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Open up to `want` idle connections, retrying briefly around backlog
+/// bursts; stops early at the fd limit and returns what it got.
+fn open_idle(addr: std::net::SocketAddr, want: usize) -> Vec<TcpStream> {
+    let mut conns = Vec::with_capacity(want);
+    'outer: while conns.len() < want {
+        let mut tries = 0;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    conns.push(s);
+                    break;
+                }
+                Err(_) => {
+                    tries += 1;
+                    if tries > 50 {
+                        break 'outer; // fd limit (or server gone): stop here
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }
+    }
+    // Let the server's accept loop catch up before anyone measures.
+    std::thread::sleep(Duration::from_millis(300));
+    conns
+}
+
+/// The pre-event-loop design, reconstructed in ~40 lines over the same
+/// public `execute_op`: one blocking thread per accepted connection.
+struct BaselineServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+fn serve_thread_per_conn(broker: Arc<Broker>, store: Arc<Store>) -> BaselineServer {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(mut s) = conn else { continue };
+                let broker = broker.clone();
+                let store = store.clone();
+                std::thread::spawn(move || {
+                    let _ = s.set_nodelay(true);
+                    while let Ok((op_byte, body)) = read_frame(&mut s) {
+                        let Ok(op) = Op::from_u8(op_byte) else {
+                            let _ = write_frame(&mut s, ST_ERR, b"unknown opcode");
+                            continue;
+                        };
+                        let ok = match execute_op(op, &body, broker.as_ref(), &store) {
+                            Ok((st, resp)) => write_frame(&mut s, st, &resp).is_ok(),
+                            Err(e) => {
+                                write_frame(&mut s, ST_ERR, e.to_string().as_bytes()).is_ok()
+                            }
+                        };
+                        if !ok {
+                            break;
+                        }
+                    }
+                });
+            }
+        })
+    };
+    BaselineServer { addr, stop, accept: Some(accept) }
+}
+
+impl BaselineServer {
+    fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Publish/consume/ack cycles from `threads` concurrent clients against a
+/// shared queue; returns cycles per second.
+fn measure_ops(addr: std::net::SocketAddr, threads: usize, cycles: u32) -> f64 {
+    {
+        let q = RemoteQueue::connect(&addr.to_string()).unwrap();
+        let _ = q.declare("bench");
+    }
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let q = RemoteQueue::connect(&addr.to_string()).unwrap();
+                for _ in 0..cycles {
+                    q.publish("bench", b"task-sized-payload-21").unwrap();
+                    let d = q.consume("bench", Duration::from_secs(5)).unwrap().unwrap();
+                    q.ack("bench", d.tag).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (threads as u64 * cycles as u64) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn per_conn_row(rows: &mut Vec<BenchRow>, name: &str, delta: u64, conns: usize) -> f64 {
+    let per = delta as f64 / conns as f64;
+    println!("  {name:<58} {:>9.0} B/conn", per);
+    // ns_per_op carries the byte figure: BENCH JSON rows are (name, value)
+    // pairs and the comparator treats these rows as lower-is-better.
+    rows.push(BenchRow {
+        op: name.to_string(),
+        iters: conns as u32,
+        ns_per_op: per,
+        speedup: None,
+    });
+    per
+}
+
+fn main() {
+    let mut rows: Vec<BenchRow> = Vec::new();
+
+    println!("== S1: idle-connection memory, event-loop server ==");
+    let evt = serve(
+        "127.0.0.1:0",
+        Arc::new(Broker::new(Duration::from_secs(60))),
+        Arc::new(Store::new()),
+    )
+    .unwrap();
+    let mut evt_per_conn_max: Option<f64> = None;
+    let mut evt_per_conn_10k: Option<f64> = None;
+    match vm_rss_bytes() {
+        Some(rss0) => {
+            let conns_1k = open_idle(evt.addr, 1_000);
+            if conns_1k.len() == 1_000 {
+                let d = vm_rss_bytes().unwrap_or(rss0).saturating_sub(rss0);
+                let name = "S1 rss_per_conn_bytes @1k idle (event loop)";
+                evt_per_conn_max = Some(per_conn_row(&mut rows, name, d, 1_000));
+            } else {
+                println!("  (fd limit: only {} conns; skipping the 1k row)", conns_1k.len());
+            }
+            let conns_9k = open_idle(evt.addr, 10_000 - conns_1k.len());
+            if conns_1k.len() + conns_9k.len() == 10_000 {
+                let d = vm_rss_bytes().unwrap_or(rss0).saturating_sub(rss0);
+                let name = "S1 rss_per_conn_bytes @10k idle (event loop)";
+                let per = per_conn_row(&mut rows, name, d, 10_000);
+                evt_per_conn_max = Some(per);
+                evt_per_conn_10k = Some(per);
+            } else {
+                println!(
+                    "  (fd limit: only {} conns; skipping the 10k row)",
+                    conns_1k.len() + conns_9k.len()
+                );
+            }
+            drop(conns_9k);
+            drop(conns_1k);
+        }
+        None => println!("  (no /proc/self/status on this host; RSS rows skipped)"),
+    }
+
+    println!("== S2: idle-connection memory, thread-per-conn baseline ==");
+    let base_broker = Arc::new(Broker::new(Duration::from_secs(60)));
+    base_broker.declare("bench").unwrap();
+    let base = serve_thread_per_conn(base_broker, Arc::new(Store::new()));
+    if let Some(rss0) = vm_rss_bytes() {
+        let conns = open_idle(base.addr, 1_000);
+        if conns.len() == 1_000 {
+            let d = vm_rss_bytes().unwrap_or(rss0).saturating_sub(rss0);
+            let per = per_conn_row(
+                &mut rows,
+                "S2 rss_per_conn_bytes @1k idle (thread-per-conn baseline)",
+                d,
+                1_000,
+            );
+            if let Some(evt_per) = evt_per_conn_10k {
+                let ratio = per / evt_per.max(1.0);
+                println!("  -> event loop holds {ratio:.1}x less memory per idle conn at 10k");
+                rows.push(BenchRow {
+                    op: "S2 idle-memory ratio, baseline/event-loop".to_string(),
+                    iters: 1_000,
+                    ns_per_op: 0.0,
+                    speedup: Some(ratio),
+                });
+            }
+        } else {
+            println!("  (fd limit: only {} conns; skipping the baseline row)", conns.len());
+        }
+        drop(conns);
+        std::thread::sleep(Duration::from_millis(200)); // let conn threads unwind
+    }
+
+    println!("== S3: 64 active connections, ops throughput ==");
+    let cycles = iters(300);
+    let evt_ops = measure_ops(evt.addr, 64, cycles);
+    println!("  event loop:      {evt_ops:>10.0} cycles/s (64 clients x {cycles})");
+    rows.push(BenchRow {
+        op: "S3 ops/sec @64 active (event loop)".to_string(),
+        iters: cycles,
+        ns_per_op: 1e9 / evt_ops,
+        speedup: None,
+    });
+    let base_ops = measure_ops(base.addr, 64, cycles);
+    println!("  thread-per-conn: {base_ops:>10.0} cycles/s (64 clients x {cycles})");
+    let ratio = evt_ops / base_ops;
+    println!("  -> event loop at {:.2}x the baseline's busy-path throughput", ratio);
+    rows.push(BenchRow {
+        op: "S3 throughput ratio vs thread-per-conn @64 active".to_string(),
+        iters: cycles,
+        ns_per_op: 1e9 / evt_ops,
+        speedup: Some(ratio),
+    });
+
+    base.shutdown();
+    evt.shutdown();
+
+    // Hard gates (CI sets these; locally they are off by default).
+    if let Some(cap) = std::env::var("SERVER_MAX_RSS_PER_CONN")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+    {
+        match evt_per_conn_max {
+            Some(per) => assert!(
+                per <= cap,
+                "event-loop RSS/conn {per:.0} B exceeds the {cap:.0} B cap"
+            ),
+            None => {
+                println!("(SERVER_MAX_RSS_PER_CONN set but no RSS tier ran — raise ulimit -n)")
+            }
+        }
+    }
+    if let Some(min) = std::env::var("SERVER_MIN_OPS_RATIO")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+    {
+        assert!(
+            ratio >= min,
+            "event-loop throughput ratio {ratio:.2} fell below the {min:.2} floor"
+        );
+    }
+
+    match write_bench_json("server", &rows) {
+        Ok(p) => println!("bench rows -> {}", p.display()),
+        Err(e) => println!("warning: could not write BENCH_server.json: {e}"),
+    }
+}

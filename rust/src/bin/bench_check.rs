@@ -1,0 +1,242 @@
+//! bench_check — gate CI on bench regressions.
+//!
+//! Compares fresh `BENCH_*.json` outputs (written by the bench targets via
+//! `metrics::write_bench_json`) against the committed floors in
+//! `bench_baselines/`, and fails when a gated metric regressed more than
+//! `BENCH_CHECK_TOLERANCE_PCT` percent (default 25).
+//!
+//! Row semantics follow the emitters:
+//!   - a row whose baseline carries a `speedup` is a ratio vs. an in-run
+//!     baseline (robust to runner speed) — fresh speedup must stay at or
+//!     above `baseline * (1 - tol)`;
+//!   - a row without one is compared on `ns_per_op` as a lower-is-better
+//!     value (only deterministic counts / byte figures are committed as
+//!     baselines; raw wall-clock rows are deliberately left out).
+//!
+//! Only ops present in a baseline file are gated; everything else in the
+//! fresh JSONs is informational. A baseline op missing from the fresh run
+//! warns but does not fail (degraded runners skip tiers).
+//!
+//! Usage: bench_check [FRESH_DIR] [--baselines DIR]
+//!   FRESH_DIR (default ".") is searched recursively — pointing it at a
+//!   directory of downloaded CI artifacts works as-is.
+//!
+//! Refreshing baselines after an intentional perf change:
+//!   cargo bench && cp rust/BENCH_*.json rust/bench_baselines/   (from the
+//!   repo root; commit the diff with a note on what moved and why).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use jsdoop::util::json::Json;
+
+struct Row {
+    ns_per_op: f64,
+    speedup: Option<f64>,
+}
+
+fn parse_rows(text: &str) -> Result<BTreeMap<String, Row>, String> {
+    let json = Json::parse(text)?;
+    let arr = json.as_arr().ok_or("top level is not an array")?;
+    let mut out = BTreeMap::new();
+    for item in arr {
+        let op = item.req("op")?.as_str().ok_or("'op' is not a string")?.to_string();
+        let ns_per_op = item.req("ns_per_op")?.as_f64().ok_or("'ns_per_op' is not a number")?;
+        let speedup = item.get("speedup").and_then(|v| v.as_f64());
+        out.insert(op, Row { ns_per_op, speedup });
+    }
+    Ok(out)
+}
+
+/// One gated row: `Ok(diagnostic)` when within tolerance, `Err(reason)`
+/// on regression.
+fn check_row(base: &Row, fresh: &Row, tol_pct: f64) -> Result<String, String> {
+    if let Some(bs) = base.speedup {
+        let floor = bs * (1.0 - tol_pct / 100.0);
+        match fresh.speedup {
+            Some(fs) if fs >= floor => {
+                Ok(format!("speedup {fs:.2} >= floor {floor:.2} (baseline {bs:.2})"))
+            }
+            Some(fs) => {
+                Err(format!("speedup regressed: {fs:.2} < floor {floor:.2} (baseline {bs:.2})"))
+            }
+            None => Err(format!("baseline gates a speedup ({bs:.2}) but the fresh row has none")),
+        }
+    } else {
+        let cap = base.ns_per_op * (1.0 + tol_pct / 100.0);
+        if fresh.ns_per_op <= cap {
+            Ok(format!(
+                "value {:.1} <= cap {:.1} (baseline {:.1})",
+                fresh.ns_per_op, cap, base.ns_per_op
+            ))
+        } else {
+            Err(format!(
+                "value regressed: {:.1} > cap {:.1} (baseline {:.1})",
+                fresh.ns_per_op, cap, base.ns_per_op
+            ))
+        }
+    }
+}
+
+fn find_bench_jsons(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            find_bench_jsons(&p, out);
+        } else if let Some(name) = p.file_name().and_then(|n| n.to_str()) {
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                out.push(p);
+            }
+        }
+    }
+}
+
+fn load(path: &Path) -> Result<BTreeMap<String, Row>, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    parse_rows(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn main() -> ExitCode {
+    let mut fresh_dir = PathBuf::from(".");
+    let mut baselines_dir = PathBuf::from("bench_baselines");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--baselines" {
+            match args.next() {
+                Some(d) => baselines_dir = PathBuf::from(d),
+                None => {
+                    eprintln!("--baselines needs a directory argument");
+                    return ExitCode::FAILURE;
+                }
+            }
+        } else {
+            fresh_dir = PathBuf::from(a);
+        }
+    }
+    let tol_pct = std::env::var("BENCH_CHECK_TOLERANCE_PCT")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(25.0);
+
+    let mut baseline_files = Vec::new();
+    find_bench_jsons(&baselines_dir, &mut baseline_files);
+    baseline_files.sort();
+    if baseline_files.is_empty() {
+        eprintln!(
+            "no BENCH_*.json baselines under {} — run from rust/ (or pass --baselines)",
+            baselines_dir.display()
+        );
+        return ExitCode::FAILURE;
+    }
+    let mut fresh_files = Vec::new();
+    find_bench_jsons(&fresh_dir, &mut fresh_files);
+    fresh_files.sort();
+
+    let mut failures: Vec<String> = Vec::new();
+    let mut gated = 0usize;
+    for base_path in &baseline_files {
+        let file_name = base_path.file_name().and_then(|n| n.to_str()).unwrap_or("?");
+        let base_rows = match load(base_path) {
+            Ok(r) => r,
+            Err(e) => {
+                failures.push(format!("unreadable baseline {e}"));
+                continue;
+            }
+        };
+        let fresh_path = fresh_files
+            .iter()
+            .find(|p| p.file_name().and_then(|n| n.to_str()) == Some(file_name));
+        let Some(fresh_path) = fresh_path else {
+            println!(
+                "WARN  {file_name}: no fresh copy under {} — skipped (bench not run?)",
+                fresh_dir.display()
+            );
+            continue;
+        };
+        let fresh_rows = match load(fresh_path) {
+            Ok(r) => r,
+            Err(e) => {
+                failures.push(format!("unreadable fresh {e}"));
+                continue;
+            }
+        };
+        for (op, base) in &base_rows {
+            match fresh_rows.get(op) {
+                Some(fresh) => {
+                    gated += 1;
+                    match check_row(base, fresh, tol_pct) {
+                        Ok(msg) => println!("ok    {file_name} / {op}: {msg}"),
+                        Err(msg) => {
+                            println!("FAIL  {file_name} / {op}: {msg}");
+                            failures.push(format!("{file_name} / {op}: {msg}"));
+                        }
+                    }
+                }
+                None => println!("WARN  {file_name} / {op}: missing from the fresh run — skipped"),
+            }
+        }
+    }
+
+    if failures.is_empty() {
+        println!("bench_check: {gated} gated rows within {tol_pct}% tolerance");
+        ExitCode::SUCCESS
+    } else {
+        println!("bench_check: {} regression(s) past {tol_pct}% tolerance:", failures.len());
+        for f in &failures {
+            println!("  - {f}");
+        }
+        println!(
+            "If the change is intentional, refresh the floors:\n  \
+             cargo bench && cp rust/BENCH_*.json rust/bench_baselines/\n\
+             then commit the updated baselines with a note on what moved and why."
+        );
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use jsdoop::metrics::{bench_json_string, BenchRow};
+
+    fn row(ns: f64, speedup: Option<f64>) -> Row {
+        Row { ns_per_op: ns, speedup }
+    }
+
+    #[test]
+    fn parses_rows_emitted_by_the_bench_serializer() {
+        let text = bench_json_string(&[
+            BenchRow { op: "a".into(), iters: 3, ns_per_op: 10.0, speedup: Some(2.5) },
+            BenchRow { op: "b".into(), iters: 1, ns_per_op: 7.0, speedup: None },
+        ]);
+        let rows = parse_rows(&text).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows["a"].speedup, Some(2.5));
+        assert_eq!(rows["b"].ns_per_op, 7.0);
+        assert_eq!(rows["b"].speedup, None);
+    }
+
+    #[test]
+    fn speedup_rows_gate_on_the_ratio_not_the_timing() {
+        // Timing got worse but the in-run ratio held: fine.
+        let base = row(10.0, Some(2.0));
+        assert!(check_row(&base, &row(500.0, Some(1.9)), 25.0).is_ok());
+        // Ratio collapsed past the tolerance: regression.
+        assert!(check_row(&base, &row(5.0, Some(1.4)), 25.0).is_err());
+        // Exactly at the floor passes.
+        assert!(check_row(&base, &row(5.0, Some(1.5)), 25.0).is_ok());
+        // A fresh row that lost its speedup field entirely fails loudly.
+        assert!(check_row(&base, &row(5.0, None), 25.0).is_err());
+    }
+
+    #[test]
+    fn value_rows_gate_lower_is_better() {
+        let base = row(100.0, None);
+        assert!(check_row(&base, &row(124.0, None), 25.0).is_ok());
+        assert!(check_row(&base, &row(126.0, None), 25.0).is_err());
+        assert!(check_row(&base, &row(1.0, None), 25.0).is_ok());
+    }
+}

@@ -62,6 +62,14 @@ pub struct Config {
     pub promote: bool,
     /// Follower poll interval (ms) when caught up with the primary.
     pub repl_poll_ms: u64,
+    // Server event loop (queue/server).
+    /// Worker threads executing decoded ops in the TCP server's event
+    /// loop (0 = one per CPU, capped at 8). Workers never block inside an
+    /// op, so a handful covers thousands of connections.
+    pub server_workers: usize,
+    /// Cap on concurrently accepted server connections; excess connects
+    /// wait in the OS backlog until a slot frees.
+    pub max_connections: usize,
     // Corpus
     pub corpus_file: Option<PathBuf>,
     pub corpus_seed: u64,
@@ -94,6 +102,8 @@ impl Default for Config {
             replicate_from: None,
             promote: false,
             repl_poll_ms: 50,
+            server_workers: 0,
+            max_connections: 16_384,
             corpus_file: None,
             corpus_seed: 1234,
             corpus_len: 200_000,
@@ -163,6 +173,14 @@ impl Config {
         }
         if self.repl_poll_ms == 0 || self.repl_poll_ms > 60_000 {
             bail!("repl_poll_ms must be in 1..=60000");
+        }
+        if self.server_workers > 1024 {
+            // The pool is meant to be small (ops are short and CPU-bound);
+            // three extra digits is certainly a typo.
+            bail!("server_workers must be <= 1024 (0 = auto)");
+        }
+        if self.max_connections == 0 {
+            bail!("max_connections must be >= 1");
         }
         Ok(())
     }
@@ -242,6 +260,8 @@ impl Config {
             "replicate_from" => self.replicate_from = Some(val.to_string()),
             "promote" => self.promote = p(key, val)?,
             "repl_poll_ms" => self.repl_poll_ms = p(key, val)?,
+            "server_workers" => self.server_workers = p(key, val)?,
+            "max_connections" => self.max_connections = p(key, val)?,
             "corpus_file" => self.corpus_file = Some(PathBuf::from(val)),
             "corpus_seed" => self.corpus_seed = p(key, val)?,
             "corpus_len" => self.corpus_len = p(key, val)?,
@@ -364,6 +384,22 @@ mod tests {
         assert!(c2.apply_cli(&["--workers".into()]).is_err());
         assert!(c2.apply_cli(&["--replicate-from".into()]).is_err());
         assert!(c2.apply_cli(&["--durability_dir".into()]).is_err());
+    }
+
+    #[test]
+    fn server_keys_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.server_workers, 0); // auto
+        assert_eq!(c.max_connections, 16_384);
+        c.apply_cli(&["--server-workers=2".into(), "--max-connections=512".into()]).unwrap();
+        assert_eq!(c.server_workers, 2);
+        assert_eq!(c.max_connections, 512);
+        c.validate().unwrap();
+        c.max_connections = 0;
+        assert!(c.validate().is_err());
+        c.max_connections = 512;
+        c.server_workers = 4096; // typo'd pool size
+        assert!(c.validate().is_err());
     }
 
     #[test]

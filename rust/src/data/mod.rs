@@ -12,10 +12,12 @@
 //! speaks the same API over TCP.
 
 use std::collections::HashMap;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+
+use crate::queue::ReadyWaker;
 
 /// Versioned value: plain KV entries have version 0; `put_versioned`
 /// stores (version, bytes) and only moves forward.
@@ -53,6 +55,13 @@ struct StoreState {
 pub struct Store {
     state: Mutex<StoreState>,
     changed: Condvar,
+    /// Parked remote `wait_version` callers (the TCP server's readiness
+    /// loop), woken one-shot on every store change — the event-loop
+    /// analogue of `changed`. Store-wide rather than per-key: version
+    /// waits are rare (one per parked volunteer) and a spurious wake just
+    /// re-checks cheaply. Kept outside `state` so wakers (foreign code)
+    /// never run under the data lock.
+    waiters: Mutex<HashMap<u64, Arc<dyn ReadyWaker>>>,
     /// Reject every mutation (replica mode: a follower's DataServer must
     /// not silently accept writes that diverge from the primary).
     read_only: bool,
@@ -84,6 +93,35 @@ impl Store {
     pub fn num_keys(&self) -> usize {
         self.state.lock().unwrap().kv.len()
     }
+
+    /// Register a one-shot waker fired on the next store change (put /
+    /// versioned advance / incr), keyed by `id` (re-registering replaces).
+    /// Same register-THEN-try protocol as the broker's
+    /// [`crate::queue::QueueService::register_waiter`]: register, then
+    /// check the version nonblockingly, so a write landing in between
+    /// still fires the waker.
+    pub fn register_waiter(&self, id: u64, waker: Arc<dyn ReadyWaker>) {
+        self.waiters.lock().unwrap().insert(id, waker);
+    }
+
+    /// Drop the waker registered under `id`, if any (racing a wake is ok).
+    pub fn cancel_waiter(&self, id: u64) {
+        self.waiters.lock().unwrap().remove(&id);
+    }
+
+    /// Fire-and-consume every registered waker (outside the state lock).
+    fn wake_waiters(&self) {
+        let drained: Vec<Arc<dyn ReadyWaker>> = {
+            let mut w = self.waiters.lock().unwrap();
+            if w.is_empty() {
+                return;
+            }
+            w.drain().map(|(_, x)| x).collect()
+        };
+        for w in drained {
+            w.wake();
+        }
+    }
 }
 
 impl DataApi for Store {
@@ -93,6 +131,7 @@ impl DataApi for Store {
         st.kv.insert(key.to_string(), Versioned { version: 0, bytes: bytes.to_vec() });
         drop(st);
         self.changed.notify_all();
+        self.wake_waiters();
         Ok(())
     }
 
@@ -118,6 +157,7 @@ impl DataApi for Store {
             st.kv.insert(key.to_string(), Versioned { version, bytes: bytes.to_vec() });
             drop(st);
             self.changed.notify_all();
+            self.wake_waiters();
         }
         Ok(())
     }
@@ -158,6 +198,7 @@ impl DataApi for Store {
         let v = *c;
         drop(st);
         self.changed.notify_all();
+        self.wake_waiters();
         Ok(v)
     }
 }
@@ -235,5 +276,42 @@ mod tests {
         assert_eq!(s.incr("c").unwrap(), 1);
         assert_eq!(s.incr("c").unwrap(), 2);
         assert_eq!(s.incr("d").unwrap(), 1);
+    }
+
+    #[derive(Default)]
+    struct CountWaker(std::sync::atomic::AtomicUsize);
+
+    impl ReadyWaker for CountWaker {
+        fn wake(&self) {
+            self.0.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn store_waiters_fire_once_per_registration() {
+        let s = Store::new();
+        let w = Arc::new(CountWaker::default());
+        let n = |w: &CountWaker| w.0.load(std::sync::atomic::Ordering::SeqCst);
+        s.register_waiter(1, w.clone());
+        s.put_versioned("m", 1, b"v1").unwrap();
+        assert_eq!(n(&w), 1);
+        // One-shot: consumed by the wake.
+        s.put_versioned("m", 2, b"v2").unwrap();
+        assert_eq!(n(&w), 1);
+        // A STALE versioned put changes nothing and must not wake.
+        s.register_waiter(1, w.clone());
+        s.put_versioned("m", 2, b"dup").unwrap();
+        assert_eq!(n(&w), 1);
+        // put / incr wake too (any change re-checks cheaply).
+        s.put("k", b"x").unwrap();
+        assert_eq!(n(&w), 2);
+        s.register_waiter(1, w.clone());
+        s.incr("c").unwrap();
+        assert_eq!(n(&w), 3);
+        // Cancelled registrations stay silent.
+        s.register_waiter(1, w.clone());
+        s.cancel_waiter(1);
+        s.put("k", b"y").unwrap();
+        assert_eq!(n(&w), 3);
     }
 }

@@ -10,10 +10,12 @@
 //!                                 the aggregation topology (tree-reduce
 //!                                 vs the paper's single reducer)
 //!   serve [addr] [--durability_dir=D --sync_policy=P --wal_compact_bytes=N
-//!                 --wal_group_window_us=U]
-//!                                 host QueueServer + DataServer over TCP;
-//!                                 with a durability dir the broker recovers
-//!                                 its queues from WAL + snapshot on restart
+//!                 --wal_group_window_us=U --server_workers=W --max_connections=C]
+//!                                 host QueueServer + DataServer over TCP
+//!                                 (poll(2) event loop + W op workers; see
+//!                                 queue/server.rs); with a durability dir
+//!                                 the broker recovers its queues from
+//!                                 WAL + snapshot on restart
 //!   serve [addr] --durability_dir=D --replicate-from=PRIMARY [--repl_poll_ms=MS]
 //!                                 follow a primary: mirror its WAL into D and
 //!                                 serve READ-ONLY (Stats/Len) while it lives
@@ -212,6 +214,11 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
         .or_else(|| cfg.queue_addr.clone())
         .unwrap_or_else(|| "127.0.0.1:7333".to_string());
     let visibility = Duration::from_secs_f64(cfg.visibility_timeout_secs);
+    let server_opts = jsdoop::queue::server::ServerOptions {
+        workers: cfg.server_workers,
+        max_connections: cfg.max_connections,
+        ..Default::default()
+    };
 
     // --- follower mode: mirror a primary, serve read-only. ---------------
     if let Some(primary) = &cfg.replicate_from {
@@ -228,7 +235,12 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
         // get an error, not writes that silently diverge from the primary
         // (the data store is not replicated in v0).
         let store = Arc::new(jsdoop::data::Store::read_only());
-        let handle = jsdoop::queue::server::serve(&addr, follower.broker.clone(), store)?;
+        let handle = jsdoop::queue::server::serve_with(
+            &addr,
+            follower.broker.clone(),
+            store,
+            server_opts,
+        )?;
         println!("replica: following {primary}, mirroring into {dir:?}");
         println!("QueueServer+DataServer listening on {}", handle.addr);
         println!(
@@ -301,11 +313,14 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
                 broker.recovered_queues()
             );
             durable = Some(broker.clone());
-            jsdoop::queue::server::serve(&addr, broker, store)?
+            jsdoop::queue::server::serve_with(&addr, broker, store, server_opts)?
         }
-        None => {
-            jsdoop::queue::server::serve(&addr, Arc::new(Broker::new(visibility)), store)?
-        }
+        None => jsdoop::queue::server::serve_with(
+            &addr,
+            Arc::new(Broker::new(visibility)),
+            store,
+            server_opts,
+        )?,
     };
     println!("QueueServer+DataServer listening on {}", handle.addr);
     if durable.is_some() {

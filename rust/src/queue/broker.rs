@@ -41,7 +41,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::wire::BodyReader;
-use super::{Delivery, QueueApi, QueueStats, DEFAULT_PRIORITY};
+use super::{Delivery, QueueApi, QueueStats, ReadyWaker, DEFAULT_PRIORITY};
 
 /// Durable identity of a message: (priority, seq). Seqs come from a
 /// process-wide counter (bumped above any recovered seq on restore), so an
@@ -59,12 +59,27 @@ struct Msg {
     seq: u64,
 }
 
+/// Registered [`ReadyWaker`]s keyed by waiter id (the TCP server uses its
+/// connection ids). A thin wrapper so `QueueState` keeps its derives —
+/// trait objects have no `Debug`.
+#[derive(Default)]
+struct WaiterSet(HashMap<u64, Arc<dyn ReadyWaker>>);
+
+impl std::fmt::Debug for WaiterSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WaiterSet({} waiters)", self.0.len())
+    }
+}
+
 #[derive(Debug, Default)]
 struct QueueState {
     /// Ready messages ordered by (priority, seq).
     ready: BTreeMap<(u64, u64), Msg>,
     /// tag -> (message, visibility deadline)
     unacked: HashMap<u64, (Msg, Instant)>,
+    /// Parked remote consumers, woken (one-shot) whenever messages become
+    /// ready — the readiness-loop analogue of `readable` below.
+    waiters: WaiterSet,
     stats: QueueStats,
     /// Purge generation: bumped by every purge. Publishes report the
     /// epoch they were applied in (see `publish_seq`), so the durability
@@ -121,6 +136,41 @@ impl Broker {
         }
     }
 
+    /// Drain a queue's registered waiters (one-shot semantics: a wake
+    /// consumes the registration). Invoke [`Broker::wake_all`] on the
+    /// result AFTER releasing the queue lock — wakers are foreign code.
+    fn take_waiters(st: &mut QueueState) -> Vec<Arc<dyn ReadyWaker>> {
+        if st.waiters.0.is_empty() {
+            return Vec::new();
+        }
+        st.waiters.0.drain().map(|(_, w)| w).collect()
+    }
+
+    fn wake_all(waiters: Vec<Arc<dyn ReadyWaker>>) {
+        for w in waiters {
+            w.wake();
+        }
+    }
+
+    /// Register a one-shot readiness waker for `queue` under `id`
+    /// (replacing any previous registration under the same id). See
+    /// [`crate::queue::QueueService::register_waiter`] for the
+    /// register-then-try protocol that makes this race-free.
+    pub fn register_waiter(&self, queue: &str, id: u64, waker: Arc<dyn ReadyWaker>) -> Result<()> {
+        let entry = self.entry(queue)?;
+        let mut st = entry.state.lock().unwrap();
+        st.waiters.0.insert(id, waker);
+        Ok(())
+    }
+
+    /// Drop the waiter registered under (`queue`, `id`), if any — a
+    /// cancel racing an in-flight wake is a no-op, not an error.
+    pub fn cancel_waiter(&self, queue: &str, id: u64) {
+        if let Ok(entry) = self.entry(queue) {
+            entry.state.lock().unwrap().waiters.0.remove(&id);
+        }
+    }
+
     /// Requeue every expired unACKed message (original slot,
     /// redelivered=true). Called lazily under each queue's lock by all
     /// operations; also public so the TCP server can run it on a timer.
@@ -133,9 +183,11 @@ impl Broker {
         for e in entries {
             let mut st = e.state.lock().unwrap();
             let moved = Self::sweep_locked(&mut st, now);
+            let waiters = if moved { Self::take_waiters(&mut st) } else { Vec::new() };
             drop(st);
             if moved {
                 e.readable.notify_all();
+                Self::wake_all(waiters);
             }
         }
     }
@@ -223,8 +275,10 @@ impl Broker {
         );
         st.stats.published += 1;
         let epoch = st.epoch;
+        let waiters = Self::take_waiters(&mut st);
         drop(st);
         entry.readable.notify_all();
+        Self::wake_all(waiters);
         Ok((seq, epoch))
     }
 
@@ -249,8 +303,10 @@ impl Broker {
             st.stats.published += 1;
         }
         let epoch = st.epoch;
+        let waiters = Self::take_waiters(&mut st);
         drop(st);
         entry.readable.notify_all();
+        Self::wake_all(waiters);
         Ok((first, epoch))
     }
 
@@ -353,9 +409,11 @@ impl Broker {
                 st.ready.insert((msg.priority, msg.seq), msg);
             }
         }
+        let waiters = if ids.is_empty() { Vec::new() } else { Self::take_waiters(&mut st) };
         drop(st);
         if !ids.is_empty() {
             entry.readable.notify_all();
+            Self::wake_all(waiters);
         }
         Ok(ids)
     }
@@ -375,8 +433,10 @@ impl Broker {
         let entry = self.entry(queue)?;
         let mut st = entry.state.lock().unwrap();
         st.ready.insert((priority, seq), Msg { payload, redelivered, priority, seq });
+        let waiters = Self::take_waiters(&mut st);
         drop(st);
         entry.readable.notify_all();
+        Self::wake_all(waiters);
         Ok(())
     }
 
@@ -592,8 +652,10 @@ impl QueueApi for Broker {
             // Original position — see QueueApi::nack for why.
             st.ready.insert((msg.priority, msg.seq), msg);
         }
+        let waiters = Self::take_waiters(&mut st);
         drop(st);
         entry.readable.notify_all();
+        Self::wake_all(waiters);
         Ok(())
     }
 
@@ -663,9 +725,11 @@ impl QueueApi for Broker {
                 moved = true;
             }
         }
+        let waiters = if moved { Self::take_waiters(&mut st) } else { Vec::new() };
         drop(st);
         if moved {
             entry.readable.notify_all();
+            Self::wake_all(waiters);
         }
         Ok(())
     }
@@ -1109,5 +1173,86 @@ mod tests {
             single.ack("q", d.tag).unwrap();
         }
         assert_eq!(drain(&batched, "q"), drain(&single, "q"));
+    }
+
+    // --- waiter registration (readiness-driven consumers) -------------------
+
+    use std::sync::atomic::{AtomicUsize, Ordering as AtOrd};
+
+    #[derive(Default)]
+    struct CountWaker(AtomicUsize);
+
+    impl ReadyWaker for CountWaker {
+        fn wake(&self) {
+            self.0.fetch_add(1, AtOrd::SeqCst);
+        }
+    }
+
+    #[test]
+    fn waiter_wakes_once_on_publish() {
+        let b = broker_ms(1000);
+        b.declare("q").unwrap();
+        let w = Arc::new(CountWaker::default());
+        b.register_waiter("q", 7, w.clone()).unwrap();
+        assert_eq!(w.0.load(AtOrd::SeqCst), 0);
+        b.publish("q", b"x").unwrap();
+        assert_eq!(w.0.load(AtOrd::SeqCst), 1);
+        // One-shot: the wake consumed the registration.
+        b.publish("q", b"y").unwrap();
+        assert_eq!(w.0.load(AtOrd::SeqCst), 1);
+        // Re-register, wake again.
+        b.register_waiter("q", 7, w.clone()).unwrap();
+        b.publish("q", b"z").unwrap();
+        assert_eq!(w.0.load(AtOrd::SeqCst), 2);
+    }
+
+    #[test]
+    fn waiter_registration_errors_on_unknown_queue() {
+        let b = broker_ms(1000);
+        let w = Arc::new(CountWaker::default());
+        assert!(b.register_waiter("nope", 1, w).is_err());
+        b.cancel_waiter("nope", 1); // unknown queue: silent no-op
+    }
+
+    #[test]
+    fn cancelled_waiter_stays_silent() {
+        let b = broker_ms(1000);
+        b.declare("q").unwrap();
+        let w = Arc::new(CountWaker::default());
+        b.register_waiter("q", 3, w.clone()).unwrap();
+        b.cancel_waiter("q", 3);
+        b.publish("q", b"x").unwrap();
+        assert_eq!(w.0.load(AtOrd::SeqCst), 0);
+    }
+
+    #[test]
+    fn reregistering_same_id_replaces() {
+        let b = broker_ms(1000);
+        b.declare("q").unwrap();
+        let old = Arc::new(CountWaker::default());
+        let new = Arc::new(CountWaker::default());
+        b.register_waiter("q", 3, old.clone()).unwrap();
+        b.register_waiter("q", 3, new.clone()).unwrap();
+        b.publish("q", b"x").unwrap();
+        assert_eq!(old.0.load(AtOrd::SeqCst), 0);
+        assert_eq!(new.0.load(AtOrd::SeqCst), 1);
+    }
+
+    #[test]
+    fn waiter_wakes_on_nack_and_sweep_expiry() {
+        let b = broker_ms(25);
+        b.declare("q").unwrap();
+        b.publish("q", b"x").unwrap();
+        let d = b.consume("q", Duration::from_millis(5)).unwrap().unwrap();
+        let w = Arc::new(CountWaker::default());
+        b.register_waiter("q", 1, w.clone()).unwrap();
+        b.nack("q", d.tag).unwrap();
+        assert_eq!(w.0.load(AtOrd::SeqCst), 1);
+        // Expiry path: consume again, let visibility lapse, sweep.
+        let _d2 = b.consume("q", Duration::from_millis(5)).unwrap().unwrap();
+        b.register_waiter("q", 1, w.clone()).unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        b.sweep();
+        assert_eq!(w.0.load(AtOrd::SeqCst), 2);
     }
 }

@@ -880,6 +880,23 @@ impl QueueService for DurableBroker {
     fn replication(&self) -> Option<&DurableBroker> {
         Some(self)
     }
+
+    // Waiter registration is pure in-memory readiness signalling — no
+    // journal record, so both delegate straight to the inner broker. The
+    // caller's follow-up "try" (a zero-timeout consume against THIS
+    // broker) is what journals the delivery.
+    fn register_waiter(
+        &self,
+        queue: &str,
+        id: u64,
+        waker: std::sync::Arc<dyn crate::queue::ReadyWaker>,
+    ) -> anyhow::Result<()> {
+        self.inner.register_waiter(queue, id, waker)
+    }
+
+    fn cancel_waiter(&self, queue: &str, id: u64) {
+        self.inner.cancel_waiter(queue, id)
+    }
 }
 
 /// The primary's replication watermarks at one instant: which segment

@@ -89,6 +89,24 @@
 //! not yet shipped are lost with it, the standard async-replication
 //! trade. Multi-follower fan-out and automatic failover are follow-ons
 //! (ROADMAP); both build on these same three ops.
+//!
+//! # Serving at volunteer scale
+//!
+//! The paper's deployments lean on the browser-facing middleware to fan
+//! thousands of volunteers into RabbitMQ; this reproduction's [`server`]
+//! carries that load directly, so it is readiness-driven rather than
+//! thread-per-connection: one event-loop thread multiplexes every socket
+//! through `poll(2)`, a fixed worker pool executes decoded ops, and a
+//! blocked consumer costs a parked *registration* — a [`ReadyWaker`]
+//! lodged with the broker ([`QueueService::register_waiter`]) or store —
+//! instead of a sleeping thread. Wakers follow a register-THEN-recheck
+//! protocol (register first, then try the op with a zero timeout) so a
+//! publish racing the park can never be a lost wakeup; wakes are
+//! one-shot and may be spurious, and every notify site in the broker
+//! (publish, nack, requeue sweep, purge…) fires them alongside its
+//! `Condvar` broadcast so in-process and remote waiters stay equivalent.
+//! Connection lifecycle, write backpressure, and shutdown-drain rules
+//! are documented at the top of [`server`].
 
 pub mod broker;
 pub mod client;
@@ -97,6 +115,7 @@ pub mod server;
 pub mod sharded;
 pub mod wire;
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
@@ -126,6 +145,17 @@ pub struct QueueStats {
 /// message has this priority behave exactly FIFO.
 pub const DEFAULT_PRIORITY: u64 = 1 << 62;
 
+/// Wakeup token for a readiness-driven consumer: the TCP server's event
+/// loop registers one per parked connection instead of a thread sleeping
+/// in [`QueueApi::consume`]'s condvar. `wake` must be cheap, non-blocking,
+/// and safe to call from any thread — the broker invokes it outside its
+/// queue locks whenever messages become ready (publish, NACK, visibility
+/// expiry). Wakeups are one-shot (registration is consumed by the wake)
+/// and may be spurious; waiters re-check readiness and re-register.
+pub trait ReadyWaker: Send + Sync {
+    fn wake(&self);
+}
+
 /// What the TCP [`server`] hosts: the queue operations plus the periodic
 /// visibility sweep. Implemented by the plain in-process
 /// [`broker::Broker`] and the WAL-backed [`durability::DurableBroker`],
@@ -142,11 +172,42 @@ pub trait QueueService: QueueApi {
     fn replication(&self) -> Option<&durability::DurableBroker> {
         None
     }
+
+    /// Register a one-shot [`ReadyWaker`] for `queue`, keyed by `id`
+    /// (re-registering under the same id replaces the previous waker).
+    /// Errors if the queue does not exist — same contract as `consume`.
+    ///
+    /// Callers follow register-THEN-try: register the waker first, then
+    /// attempt a nonblocking consume. A publish landing between the two
+    /// steps fires the (already visible) waker, so no wakeup is lost.
+    ///
+    /// The default is a no-op: backends that reject blocking consume
+    /// anyway (the read-only replica broker) never park a waiter, and a
+    /// no-op registration just means such a consumer would rely on its
+    /// deadline — which it never reaches, because the consume errors.
+    fn register_waiter(&self, queue: &str, id: u64, waker: Arc<dyn ReadyWaker>) -> Result<()> {
+        let _ = (queue, id, waker);
+        Ok(())
+    }
+
+    /// Drop the waiter registered under (`queue`, `id`), if any. Unknown
+    /// queues and ids are ignored — cancel races an in-flight wake.
+    fn cancel_waiter(&self, queue: &str, id: u64) {
+        let _ = (queue, id);
+    }
 }
 
 impl QueueService for broker::Broker {
     fn sweep(&self) {
         broker::Broker::sweep(self)
+    }
+
+    fn register_waiter(&self, queue: &str, id: u64, waker: Arc<dyn ReadyWaker>) -> Result<()> {
+        broker::Broker::register_waiter(self, queue, id, waker)
+    }
+
+    fn cancel_waiter(&self, queue: &str, id: u64) {
+        broker::Broker::cancel_waiter(self, queue, id)
     }
 }
 

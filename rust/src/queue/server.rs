@@ -1,11 +1,48 @@
 //! TCP server hosting the QueueServer and/or DataServer (paper Figure 2).
 //!
-//! One thread per connection (one volunteer = one connection = one
-//! synchronous request/response loop — the WebSocket analogue). A
-//! background sweeper requeues expired unACKed tasks. `Shutdown` stops the
-//! accept loop for clean test teardown.
+//! # Architecture: readiness-driven core (unix)
+//!
+//! One event-loop thread owns every accepted socket and multiplexes them
+//! through `poll(2)` (hand-rolled FFI: the crate's no-new-deps rule rules
+//! out `mio`/`libc`, and `std` exposes no readiness API). Decoded requests
+//! are executed by a small fixed pool of worker threads against the shared
+//! [`QueueService`] + [`Store`]; workers never sleep inside an op. A
+//! connection walks
+//!
+//! ```text
+//! assembling --frame--> executing --would-block--> parked --waker/deadline--+
+//!      ^                    |                                               |
+//!      +------(writing, while the response drains)<---final/ready-----------+
+//! ```
+//!
+//! * **assembling** — nonblocking reads feed a resumable
+//!   [`FrameAssembler`]; a stalled or hostile peer costs one idle fd, not
+//!   a pinned thread (slow-loris containment).
+//! * **executing** — the frame is in the worker pool; the socket is not
+//!   polled for reads meanwhile (the protocol is synchronous: one request
+//!   in flight per connection; pipelined bytes wait in the kernel buffer).
+//! * **parked** — a blocking op (Consume / ConsumeMany / WaitVersion)
+//!   found nothing. The worker registers a [`ReadyWaker`] with the broker
+//!   or store FIRST, then re-checks with a zero timeout, so a publish
+//!   landing in between cannot be a lost wakeup. A parked connection holds
+//!   no thread; a wake or the op's deadline re-dispatches it.
+//! * **writing** — responses are written nonblockingly; leftovers wait for
+//!   `POLLOUT`. While a response is draining the socket is not read, so a
+//!   slow reader backpressures itself to one buffered response (bounded
+//!   memory per connection).
+//!
+//! A background sweeper still requeues expired unACKed deliveries every
+//! 100 ms; its requeues fire the queue wakers, so parked consumers keep
+//! their at-most-100 ms-late redelivery semantics.
+//!
+//! `Shutdown` (op or [`ServerHandle::shutdown`]) closes the listener
+//! immediately, gives parked ops a final attempt, bound-waits for
+//! in-flight work and response flushes, then joins the loop, the workers,
+//! and the sweeper — no detached threads survive a shutdown.
+//!
+//! Non-unix targets keep the previous thread-per-connection loop as a
+//! degraded fallback: same wire semantics, none of the scaling.
 
-use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -20,12 +57,123 @@ use crate::queue::wire::{
 };
 use crate::queue::{QueueApi, QueueService};
 
+#[cfg(unix)]
+use std::cmp::Reverse;
+#[cfg(unix)]
+use std::collections::{BinaryHeap, HashMap};
+#[cfg(unix)]
+use std::io::{self, Read, Write};
+#[cfg(unix)]
+use std::os::unix::io::AsRawFd;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+#[cfg(unix)]
+use std::sync::{mpsc, Mutex};
+#[cfg(unix)]
+use std::time::Instant;
+
+#[cfg(unix)]
+use self::poll_sys::{PollFd, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
+#[cfg(unix)]
+use crate::queue::wire::FrameAssembler;
+#[cfg(unix)]
+use crate::queue::ReadyWaker;
+
+/// Minimal `poll(2)` FFI. The dependency budget (anyhow + once_cell only)
+/// rules out `libc`/`mio`, so the one syscall the event loop needs is
+/// declared by hand. Constants match every mainstream unix.
+#[cfg(unix)]
+mod poll_sys {
+    use std::io;
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    #[repr(C)]
+    #[derive(Clone, Copy, Debug)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    // nfds_t is unsigned long on linux, unsigned int on the BSDs/macOS.
+    #[cfg(target_os = "linux")]
+    type Nfds = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type Nfds = std::os::raw::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: Nfds, timeout: c_int) -> c_int;
+    }
+
+    /// Wait for readiness on `fds` (or `timeout`). EINTR reports as zero
+    /// events: the caller's loop re-runs housekeeping and polls again.
+    pub fn wait(fds: &mut [PollFd], timeout: Duration) -> io::Result<usize> {
+        let ms = timeout.as_millis().min(i32::MAX as u128) as c_int;
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, ms) };
+        if rc < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(err);
+        }
+        Ok(rc as usize)
+    }
+}
+
+/// Tuning for [`serve_with`]; `Default` matches [`serve`].
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Worker threads executing decoded ops (0 = one per CPU, capped at
+    /// 8). Workers never block inside an op, so a handful covers thousands
+    /// of connections.
+    pub workers: usize,
+    /// Cap on concurrently accepted connections. At the cap the listener
+    /// is simply not polled: excess connects wait in the OS backlog until
+    /// a slot frees (no accept-then-close churn).
+    pub max_connections: usize,
+    /// Shutdown bound-wait: how long the event loop waits for in-flight
+    /// ops to finish and response buffers to flush before closing.
+    pub drain_wait: Duration,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            workers: 0,
+            max_connections: 16_384,
+            drain_wait: Duration::from_secs(5),
+        }
+    }
+}
+
+#[cfg(unix)]
+impl ServerOptions {
+    fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+    }
+}
+
 /// A running server; dropping does NOT stop it — call [`ServerHandle::shutdown`].
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
-    sweeper_thread: Option<std::thread::JoinHandle<()>>,
+    #[cfg(unix)]
+    signal: Arc<LoopSignal>,
+    /// Event loop first, workers, then sweeper — join order matters: the
+    /// exiting loop drops the work channel, which releases the workers.
+    threads: Vec<std::thread::JoinHandle<()>>,
     /// The hosted queue backend (plain [`crate::queue::broker::Broker`] or
     /// [`crate::queue::durability::DurableBroker`]).
     pub broker: Arc<dyn QueueService>,
@@ -35,6 +183,7 @@ pub struct ServerHandle {
 /// Where a self-poke connects: a wildcard bind address (0.0.0.0 / ::) is
 /// not connectable on every platform (Windows refuses it), so rewrite an
 /// unspecified IP to the loopback of the same family.
+#[cfg(not(unix))]
 fn poke_addr(mut addr: std::net::SocketAddr) -> std::net::SocketAddr {
     if addr.ip().is_unspecified() {
         addr.set_ip(if addr.is_ipv4() {
@@ -49,84 +198,150 @@ fn poke_addr(mut addr: std::net::SocketAddr) -> std::net::SocketAddr {
 impl ServerHandle {
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // Poke the accept loop with a throwaway connection (a remote
-        // Shutdown op already poked it from handle_conn; a second poke
-        // against a closed listener is just a failed connect).
-        let _ = TcpStream::connect(poke_addr(self.addr));
-        if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
+        #[cfg(unix)]
+        self.signal.notify();
+        #[cfg(not(unix))]
+        {
+            // Unpark the blocking accept loop with a throwaway connection.
+            let _ = TcpStream::connect(poke_addr(self.addr));
         }
-        // Stop-and-join the sweeper too: leaving it running after
-        // "shutdown" kept a broker Arc alive and a stray thread sweeping
-        // a server the caller believes is gone.
-        if let Some(h) = self.sweeper_thread.take() {
+        for h in self.threads.drain(..) {
             let _ = h.join();
         }
     }
 
     /// True once a Shutdown op (or [`ServerHandle::shutdown`]) stopped the
-    /// accept loop — lets a CLI host block until remotely shut down.
+    /// server — lets a CLI host block until remotely shut down.
     pub fn stopped(&self) -> bool {
         self.stop.load(Ordering::SeqCst)
     }
 }
 
-/// Serve `broker` + `store` on `addr` (use port 0 for an ephemeral port).
+/// Serve `broker` + `store` on `addr` (use port 0 for an ephemeral port)
+/// with default [`ServerOptions`].
 pub fn serve(addr: &str, broker: Arc<dyn QueueService>, store: Arc<Store>) -> Result<ServerHandle> {
+    serve_with(addr, broker, store, ServerOptions::default())
+}
+
+/// Visibility sweeper: the lazy in-op sweep covers active brokers; this
+/// timer covers idle periods (all volunteers gone mid-batch). Its requeues
+/// fire queue wakers, so parked remote consumers re-check too.
+fn spawn_sweeper(
+    broker: Arc<dyn QueueService>,
+    stop: Arc<AtomicBool>,
+) -> Result<std::thread::JoinHandle<()>> {
+    Ok(std::thread::Builder::new().name("jsdoop-sweeper".into()).spawn(move || {
+        while !stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(100));
+            broker.sweep();
+        }
+    })?)
+}
+
+/// Serve with explicit tuning (`server_workers` / `max_connections` from
+/// the config land here via `jsdoop serve`).
+#[cfg(unix)]
+pub fn serve_with(
+    addr: &str,
+    broker: Arc<dyn QueueService>,
+    store: Arc<Store>,
+    opts: ServerOptions,
+) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Self-pipe (socketpair) waking the poll loop from workers and wakers.
+    let (pipe_rx, pipe_tx) = UnixStream::pair()?;
+    pipe_rx.set_nonblocking(true)?;
+    pipe_tx.set_nonblocking(true)?;
+    let signal = Arc::new(LoopSignal { woken: Mutex::new(Vec::new()), pipe_tx });
+
+    let (work_tx, work_rx) = mpsc::channel::<Work>();
+    let (done_tx, done_rx) = mpsc::channel::<Done>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
+
+    let workers = opts.effective_workers();
+    let mut threads = Vec::with_capacity(workers + 2);
+    for i in 0..workers {
+        let work_rx = work_rx.clone();
+        let done_tx = done_tx.clone();
+        let signal = signal.clone();
+        let broker = broker.clone();
+        let store = store.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("jsdoop-worker-{i}"))
+                .spawn(move || worker_loop(&work_rx, &done_tx, &signal, broker.as_ref(), &store))?,
+        );
+    }
+    drop(done_tx); // only workers signal completions
+
+    let ev = EventLoop {
+        listener: Some(listener),
+        stop: stop.clone(),
+        signal: signal.clone(),
+        pipe_rx,
+        work_tx,
+        done_rx,
+        broker: broker.clone(),
+        store: store.clone(),
+        opts,
+        conns: HashMap::new(),
+        timers: BinaryHeap::new(),
+        next_id: 0,
+        accept_backoff_until: None,
+        draining_since: None,
+    };
+    threads.insert(
+        0,
+        std::thread::Builder::new().name("jsdoop-eventloop".into()).spawn(move || ev.run())?,
+    );
+    threads.push(spawn_sweeper(broker.clone(), stop.clone())?);
+
+    Ok(ServerHandle { addr: local, stop, signal, threads, broker, store })
+}
+
+/// Degraded fallback for targets without `poll(2)`: the previous
+/// thread-per-connection loop. Same wire semantics; none of the scaling,
+/// and connection threads are detached (not joined by shutdown).
+#[cfg(not(unix))]
+pub fn serve_with(
+    addr: &str,
+    broker: Arc<dyn QueueService>,
+    store: Arc<Store>,
+    opts: ServerOptions,
+) -> Result<ServerHandle> {
+    let _ = &opts;
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
-
-    // Visibility sweeper: the lazy in-op sweep covers active brokers; this
-    // timer covers idle periods (all volunteers gone mid-batch).
-    let sweeper_thread = {
-        let broker = broker.clone();
-        let stop = stop.clone();
-        std::thread::Builder::new()
-            .name("jsdoop-sweeper".into())
-            .spawn(move || {
-                while !stop.load(Ordering::SeqCst) {
-                    std::thread::sleep(Duration::from_millis(100));
-                    broker.sweep();
-                }
-            })?
-    };
-
-    let accept_thread = {
+    let sweeper = spawn_sweeper(broker.clone(), stop.clone())?;
+    let accept = {
         let broker = broker.clone();
         let store = store.clone();
         let stop = stop.clone();
-        std::thread::Builder::new()
-            .name("jsdoop-accept".into())
-            .spawn(move || {
-                for conn in listener.incoming() {
-                    if stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let Ok(stream) = conn else { continue };
-                    let broker = broker.clone();
-                    let store = store.clone();
-                    let stop = stop.clone();
-                    let _ = std::thread::Builder::new()
-                        .name("jsdoop-conn".into())
-                        .spawn(move || {
-                            let _ = handle_conn(stream, local, broker.as_ref(), &store, &stop);
-                        });
+        std::thread::Builder::new().name("jsdoop-accept".into()).spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
                 }
-            })?
+                let Ok(stream) = conn else { continue };
+                let broker = broker.clone();
+                let store = store.clone();
+                let stop = stop.clone();
+                let _ = std::thread::Builder::new().name("jsdoop-conn".into()).spawn(move || {
+                    let _ = blocking_conn(stream, local, broker.as_ref(), &store, &stop);
+                });
+            }
+        })?
     };
-
-    Ok(ServerHandle {
-        addr: local,
-        stop,
-        accept_thread: Some(accept_thread),
-        sweeper_thread: Some(sweeper_thread),
-        broker,
-        store,
-    })
+    Ok(ServerHandle { addr: local, stop, threads: vec![accept, sweeper], broker, store })
 }
 
-fn handle_conn(
+#[cfg(not(unix))]
+fn blocking_conn(
     mut stream: TcpStream,
     local: std::net::SocketAddr,
     broker: &dyn QueueService,
@@ -135,9 +350,8 @@ fn handle_conn(
 ) -> Result<()> {
     stream.set_nodelay(true)?;
     loop {
-        let (op_byte, body) = match read_frame(&mut stream) {
-            Ok(f) => f,
-            Err(_) => return Ok(()), // client disconnected
+        let Ok((op_byte, body)) = read_frame(&mut stream) else {
+            return Ok(()); // client disconnected
         };
         let op = match Op::from_u8(op_byte) {
             Ok(op) => op,
@@ -148,80 +362,799 @@ fn handle_conn(
         };
         if matches!(op, Op::Shutdown) {
             stop.store(true, Ordering::SeqCst);
-            // Setting the flag is not enough: the accept thread is parked
-            // in listener.incoming() and would stay there until some
-            // FUTURE connection arrived — `jsdoop serve` would hang after
-            // a remote shutdown. Poke it with a throwaway self-connection
-            // exactly like ServerHandle::shutdown does; the accept loop
-            // re-checks the flag and exits without serving it.
+            // The accept thread is parked in listener.incoming(); poke it
+            // with a throwaway self-connection so it re-checks the flag.
             let _ = TcpStream::connect(poke_addr(local));
             write_frame(&mut stream, ST_OK, &[])?;
             return Ok(());
         }
-        match respond(op, &body, broker, store, &mut stream) {
-            Ok(()) => {}
+        match execute_op(op, &body, broker, store) {
+            Ok((st, resp)) => write_frame(&mut stream, st, &resp)?,
             Err(e) => write_frame(&mut stream, ST_ERR, e.to_string().as_bytes())?,
         }
     }
 }
 
-fn respond<W: Write>(
+// ---------------------------------------------------------------------------
+// Event loop internals (unix)
+// ---------------------------------------------------------------------------
+
+/// Per-connection read budget per poll round, so one firehose connection
+/// cannot starve the rest of the loop.
+#[cfg(unix)]
+const READ_BUDGET: usize = 1 << 20;
+
+/// Listener backoff after accept errors (EMFILE and friends): without it
+/// a level-triggered listener spins the loop hot.
+#[cfg(unix)]
+const ACCEPT_BACKOFF: Duration = Duration::from_millis(100);
+
+/// Upper bound on a poll sleep, so a stop request is noticed even if the
+/// wake-pipe byte were ever lost.
+#[cfg(unix)]
+const IDLE_POLL: Duration = Duration::from_millis(500);
+
+/// Cap on a blocking op's park. Protocol timeouts are client-controlled
+/// u64 millis; uncapped they overflow `Instant` arithmetic.
+#[cfg(unix)]
+const MAX_BLOCK: Duration = Duration::from_secs(24 * 60 * 60);
+
+/// Shared wake channel into the event loop: connection ids whose readiness
+/// changed, plus a self-pipe byte that interrupts `poll`.
+#[cfg(unix)]
+struct LoopSignal {
+    woken: Mutex<Vec<u64>>,
+    pipe_tx: UnixStream,
+}
+
+#[cfg(unix)]
+impl LoopSignal {
+    /// Interrupt the poll sleep. A full pipe already guarantees a pending
+    /// wakeup, so the write result is deliberately ignored.
+    fn notify(&self) {
+        let _ = (&self.pipe_tx).write(&[1]);
+    }
+
+    fn wake_conn(&self, id: u64) {
+        self.woken.lock().unwrap().push(id);
+        self.notify();
+    }
+
+    fn drain_woken(&self) -> Vec<u64> {
+        std::mem::take(&mut *self.woken.lock().unwrap())
+    }
+}
+
+/// The token a parked connection leaves with the broker/store: waking it
+/// re-dispatches the parked op on the event loop.
+#[cfg(unix)]
+struct ConnWaker {
+    conn: u64,
+    signal: Arc<LoopSignal>,
+}
+
+#[cfg(unix)]
+impl ReadyWaker for ConnWaker {
+    fn wake(&self) {
+        self.signal.wake_conn(self.conn);
+    }
+}
+
+#[cfg(unix)]
+struct Work {
+    conn: u64,
+    op: Op,
+    body: Vec<u8>,
+    /// Deadline of a blocking op. `None` on the first attempt (the worker
+    /// derives it from the body's timeout field); carried through
+    /// park/retry cycles so a retry never extends the client's timeout.
+    deadline: Option<Instant>,
+    waker: Arc<ConnWaker>,
+}
+
+#[cfg(unix)]
+enum Verdict {
+    /// A complete response frame, ready to write.
+    Respond(Vec<u8>),
+    /// The op would block: park the connection until waker or deadline.
+    Park { op: Op, body: Vec<u8>, deadline: Instant, site: WaitSite },
+}
+
+#[cfg(unix)]
+struct Done {
+    conn: u64,
+    verdict: Verdict,
+}
+
+/// What a parked op waits on (and where to cancel its registration).
+#[cfg(unix)]
+#[derive(Debug, Clone)]
+enum WaitSite {
+    Queue(String),
+    Version,
+}
+
+#[cfg(unix)]
+enum Phase {
+    /// Assembling the next request frame.
+    Reading,
+    /// A frame is in the worker pool; the socket is not read meanwhile.
+    Executing,
+    /// A blocking op came up empty; waiting for a waker or the deadline.
+    Parked(ParkedOp),
+}
+
+#[cfg(unix)]
+struct ParkedOp {
+    op: Op,
+    body: Vec<u8>,
+    deadline: Instant,
+    site: WaitSite,
+}
+
+#[cfg(unix)]
+struct Conn {
+    stream: TcpStream,
+    asm: FrameAssembler,
+    phase: Phase,
+    out: Vec<u8>,
+    out_pos: usize,
+    /// A waker fired while the op was still executing: re-dispatch instead
+    /// of parking when the Park verdict lands.
+    wake_pending: bool,
+    close_after_write: bool,
+    waker: Arc<ConnWaker>,
+}
+
+#[cfg(unix)]
+impl Conn {
+    fn has_output(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+
+    fn queue_response(&mut self, frame: Vec<u8>) {
+        self.out = frame;
+        self.out_pos = 0;
+    }
+
+    /// Push buffered output until the socket blocks. `false` = fatal.
+    fn flush_output(&mut self) -> bool {
+        while self.has_output() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => return false,
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        self.out.clear();
+        self.out_pos = 0;
+        true
+    }
+}
+
+#[cfg(unix)]
+enum Next {
+    Keep,
+    Close,
+    Dispatch(Op, Vec<u8>),
+    Shutdown,
+}
+
+#[cfg(unix)]
+struct EventLoop {
+    /// `None` once draining: dropping the listener closes the port
+    /// immediately, which remote-Shutdown semantics require.
+    listener: Option<TcpListener>,
+    stop: Arc<AtomicBool>,
+    signal: Arc<LoopSignal>,
+    pipe_rx: UnixStream,
+    work_tx: mpsc::Sender<Work>,
+    done_rx: mpsc::Receiver<Done>,
+    broker: Arc<dyn QueueService>,
+    store: Arc<Store>,
+    opts: ServerOptions,
+    conns: HashMap<u64, Conn>,
+    /// Park deadlines (min-heap, lazily invalidated: a connection may
+    /// respond and re-park before an old entry pops).
+    timers: BinaryHeap<Reverse<(Instant, u64)>>,
+    next_id: u64,
+    accept_backoff_until: Option<Instant>,
+    draining_since: Option<Instant>,
+}
+
+#[cfg(unix)]
+impl EventLoop {
+    fn run(mut self) {
+        loop {
+            if self.stop.load(Ordering::SeqCst) && self.draining_since.is_none() {
+                self.begin_drain();
+            }
+            self.drain_done();
+            self.drain_woken();
+            self.fire_timers();
+            if let Some(t0) = self.draining_since {
+                if self.drained() || Instant::now() >= t0 + self.opts.drain_wait {
+                    // Conns and the work channel drop here; workers see
+                    // the closed channel and unwind.
+                    return;
+                }
+            }
+            self.poll_once();
+        }
+    }
+
+    /// Stop accepting (close the listener NOW — remote Shutdown promises
+    /// the port is closed shortly after the op returns), then give every
+    /// parked op a final attempt so its client gets a legal empty answer
+    /// instead of a cut connection.
+    fn begin_drain(&mut self) {
+        self.draining_since = Some(Instant::now());
+        self.listener = None;
+        let parked: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| matches!(c.phase, Phase::Parked(_)))
+            .map(|(&id, _)| id)
+            .collect();
+        let now = Instant::now();
+        for id in parked {
+            self.resume_parked(id, Some(now));
+        }
+    }
+
+    /// Drain complete: nothing executing in a worker and every response
+    /// buffer flushed (reading/parked conns hold no server-side work).
+    fn drained(&self) -> bool {
+        self.conns.values().all(|c| !matches!(c.phase, Phase::Executing) && !c.has_output())
+    }
+
+    /// Move a parked connection back to executing and re-dispatch its op.
+    /// A `forced_deadline` (drain or timer expiry) makes the attempt
+    /// final: the worker sees it as expired and responds with what's
+    /// there, mirroring the blocking loop's deliver-then-check-deadline.
+    fn resume_parked(&mut self, id: u64, forced_deadline: Option<Instant>) {
+        let Some(conn) = self.conns.get_mut(&id) else { return };
+        if !matches!(conn.phase, Phase::Parked(_)) {
+            return;
+        }
+        let Phase::Parked(p) = std::mem::replace(&mut conn.phase, Phase::Executing) else {
+            unreachable!()
+        };
+        conn.wake_pending = false;
+        let work = Work {
+            conn: id,
+            op: p.op,
+            body: p.body,
+            deadline: Some(forced_deadline.unwrap_or(p.deadline)),
+            waker: conn.waker.clone(),
+        };
+        // Drop the previous attempt's registration; the retry re-registers
+        // if it parks again. (Wakes already consumed it in the common
+        // case — cancelling is cheap and keeps the maps tidy.)
+        cancel_site(&p.site, id, self.broker.as_ref(), &self.store);
+        let _ = self.work_tx.send(work);
+    }
+
+    fn drain_done(&mut self) {
+        while let Ok(done) = self.done_rx.try_recv() {
+            let draining = self.draining_since.is_some();
+            let mut close = false;
+            {
+                let Some(conn) = self.conns.get_mut(&done.conn) else { continue };
+                match done.verdict {
+                    Verdict::Respond(frame) => {
+                        conn.phase = Phase::Reading;
+                        conn.queue_response(frame);
+                        let ok = conn.flush_output();
+                        close = !ok || (conn.close_after_write && !conn.has_output());
+                    }
+                    Verdict::Park { op, body, deadline, site } => {
+                        if conn.wake_pending || draining {
+                            // A waker fired mid-execution (or we are
+                            // draining): retry immediately. Drain retries
+                            // carry an expired deadline, making them final.
+                            conn.wake_pending = false;
+                            conn.phase = Phase::Executing;
+                            let dl = if draining { Instant::now() } else { deadline };
+                            cancel_site(&site, done.conn, self.broker.as_ref(), &self.store);
+                            let work = Work {
+                                conn: done.conn,
+                                op,
+                                body,
+                                deadline: Some(dl),
+                                waker: conn.waker.clone(),
+                            };
+                            let _ = self.work_tx.send(work);
+                        } else {
+                            self.timers.push(Reverse((deadline, done.conn)));
+                            conn.phase = Phase::Parked(ParkedOp { op, body, deadline, site });
+                        }
+                    }
+                }
+            }
+            if close {
+                self.close_conn(done.conn);
+            }
+        }
+    }
+
+    fn drain_woken(&mut self) {
+        for id in self.signal.drain_woken() {
+            let resume = match self.conns.get_mut(&id) {
+                Some(conn) => match conn.phase {
+                    Phase::Parked(_) => true,
+                    Phase::Executing => {
+                        conn.wake_pending = true;
+                        false
+                    }
+                    // Response already sent; the wake was consumed by a
+                    // finished attempt. Nothing to re-check.
+                    Phase::Reading => false,
+                },
+                // Closed since the wake was queued (ids are never reused).
+                None => false,
+            };
+            if resume {
+                self.resume_parked(id, None);
+            }
+        }
+    }
+
+    fn fire_timers(&mut self) {
+        let now = Instant::now();
+        while let Some(&Reverse((t, id))) = self.timers.peek() {
+            if t > now {
+                break;
+            }
+            self.timers.pop();
+            let due = match self.conns.get(&id) {
+                Some(c) => match &c.phase {
+                    Phase::Parked(p) => p.deadline <= now,
+                    _ => false,
+                },
+                None => false,
+            };
+            if due {
+                self.resume_parked(id, Some(now));
+            }
+        }
+    }
+
+    fn poll_timeout(&self, now: Instant) -> Duration {
+        let mut t = IDLE_POLL;
+        if let Some(&Reverse((dl, _))) = self.timers.peek() {
+            t = t.min(dl.saturating_duration_since(now));
+        }
+        if let Some(b) = self.accept_backoff_until {
+            t = t.min(b.saturating_duration_since(now));
+        }
+        if let Some(t0) = self.draining_since {
+            t = t.min((t0 + self.opts.drain_wait).saturating_duration_since(now));
+        }
+        t.max(Duration::from_millis(1))
+    }
+
+    fn poll_once(&mut self) {
+        let now = Instant::now();
+        let draining = self.draining_since.is_some();
+
+        let mut fds = Vec::with_capacity(self.conns.len() + 2);
+        fds.push(PollFd { fd: self.pipe_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+
+        let backoff_over = match self.accept_backoff_until {
+            Some(t) => t <= now,
+            None => true,
+        };
+        if backoff_over {
+            self.accept_backoff_until = None;
+        }
+        let mut listener_slot = None;
+        if let Some(listener) = &self.listener {
+            if backoff_over && self.conns.len() < self.opts.max_connections {
+                listener_slot = Some(fds.len());
+                fds.push(PollFd { fd: listener.as_raw_fd(), events: POLLIN, revents: 0 });
+            }
+        }
+
+        let base = fds.len();
+        let mut ids = Vec::with_capacity(self.conns.len());
+        for (&id, c) in &self.conns {
+            let ev = if c.has_output() {
+                POLLOUT
+            } else if matches!(c.phase, Phase::Reading) && !draining {
+                POLLIN
+            } else {
+                0
+            };
+            if ev != 0 {
+                ids.push(id);
+                fds.push(PollFd { fd: c.stream.as_raw_fd(), events: ev, revents: 0 });
+            }
+        }
+
+        if poll_sys::wait(&mut fds, self.poll_timeout(now)).is_err() {
+            // Transient poll failure: don't spin.
+            std::thread::sleep(Duration::from_millis(5));
+            return;
+        }
+
+        if fds[0].revents != 0 {
+            self.drain_pipe();
+        }
+        if let Some(slot) = listener_slot {
+            if fds[slot].revents != 0 {
+                self.accept_ready();
+            }
+        }
+        for (k, &id) in ids.iter().enumerate() {
+            let re = fds[base + k].revents;
+            if re != 0 {
+                self.handle_conn_event(id, re);
+            }
+        }
+    }
+
+    fn drain_pipe(&mut self) {
+        let mut buf = [0u8; 256];
+        loop {
+            match self.pipe_rx.read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => {}
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            if self.conns.len() >= self.opts.max_connections {
+                return;
+            }
+            let Some(listener) = &self.listener else { return };
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    let waker = Arc::new(ConnWaker { conn: id, signal: self.signal.clone() });
+                    self.conns.insert(
+                        id,
+                        Conn {
+                            stream,
+                            asm: FrameAssembler::new(),
+                            phase: Phase::Reading,
+                            out: Vec::new(),
+                            out_pos: 0,
+                            wake_pending: false,
+                            close_after_write: false,
+                            waker,
+                        },
+                    );
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    // EMFILE and friends: pause accepting briefly.
+                    self.accept_backoff_until = Some(Instant::now() + ACCEPT_BACKOFF);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn handle_conn_event(&mut self, id: u64, revents: i16) {
+        let next = {
+            let Some(conn) = self.conns.get_mut(&id) else { return };
+            if conn.has_output() {
+                // Writable (or the error surfaces on write): keep flushing.
+                if revents & (POLLOUT | POLLERR | POLLHUP | POLLNVAL) != 0 {
+                    if !conn.flush_output() {
+                        Next::Close
+                    } else if !conn.has_output() && conn.close_after_write {
+                        Next::Close
+                    } else {
+                        Next::Keep
+                    }
+                } else {
+                    Next::Keep
+                }
+            } else if revents & POLLNVAL != 0 {
+                Next::Close
+            } else if revents & (POLLIN | POLLHUP | POLLERR) != 0 {
+                // POLLHUP/POLLERR still go through read(): the peer may
+                // have sent a final request, and read() reports the error.
+                Self::read_next(conn)
+            } else {
+                Next::Keep
+            }
+        };
+        match next {
+            Next::Keep => {}
+            Next::Close => self.close_conn(id),
+            Next::Dispatch(op, body) => self.dispatch(id, op, body),
+            Next::Shutdown => self.remote_shutdown(id),
+        }
+    }
+
+    /// Drive the frame assembler; at most one decoded frame per call (the
+    /// protocol is synchronous — the next frame is read after responding).
+    fn read_next(conn: &mut Conn) -> Next {
+        match conn.asm.poll_read(&mut conn.stream, READ_BUDGET) {
+            Ok(Some((op_byte, body))) => match Op::from_u8(op_byte) {
+                Ok(Op::Shutdown) => Next::Shutdown,
+                Ok(op) => Next::Dispatch(op, body),
+                Err(e) => {
+                    // Unknown opcode: error response, connection lives on.
+                    conn.queue_response(frame_bytes(ST_ERR, e.to_string().as_bytes()));
+                    if conn.flush_output() {
+                        Next::Keep
+                    } else {
+                        Next::Close
+                    }
+                }
+            },
+            Ok(None) => Next::Keep, // mid-frame; resume on next readiness
+            Err(_) => Next::Close,  // disconnect, truncation, bad length
+        }
+    }
+
+    fn dispatch(&mut self, id: u64, op: Op, body: Vec<u8>) {
+        let Some(conn) = self.conns.get_mut(&id) else { return };
+        conn.phase = Phase::Executing;
+        // A wake left over from the previous (already answered) op must
+        // not count against this one.
+        conn.wake_pending = false;
+        let work = Work { conn: id, op, body, deadline: None, waker: conn.waker.clone() };
+        let _ = self.work_tx.send(work);
+    }
+
+    /// Remote Shutdown: set the stop flag (the next loop turn closes the
+    /// listener and starts the drain), acknowledge with ST_OK, and close
+    /// this connection once the acknowledgment is flushed.
+    fn remote_shutdown(&mut self, id: u64) {
+        self.stop.store(true, Ordering::SeqCst);
+        let mut close = false;
+        if let Some(conn) = self.conns.get_mut(&id) {
+            conn.queue_response(frame_bytes(ST_OK, &[]));
+            conn.close_after_write = true;
+            close = !conn.flush_output() || !conn.has_output();
+        }
+        if close {
+            self.close_conn(id);
+        }
+    }
+
+    fn close_conn(&mut self, id: u64) {
+        if let Some(conn) = self.conns.remove(&id) {
+            if let Phase::Parked(p) = &conn.phase {
+                cancel_site(&p.site, id, self.broker.as_ref(), &self.store);
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+fn worker_loop(
+    work_rx: &Mutex<mpsc::Receiver<Work>>,
+    done_tx: &mpsc::Sender<Done>,
+    signal: &LoopSignal,
+    broker: &dyn QueueService,
+    store: &Store,
+) {
+    loop {
+        // Standard shared-receiver pool: the lock is held only while
+        // waiting for/taking an item, never while executing it.
+        let msg = { work_rx.lock().unwrap().recv() };
+        let Ok(work) = msg else { return }; // server shut down
+        let conn = work.conn;
+        // A panicking op (poisoned lock, arithmetic bug) must not shrink
+        // the pool: convert it to an in-band error response.
+        let verdict = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_work(work, broker, store)
+        }))
+        .unwrap_or_else(|_| Verdict::Respond(frame_bytes(ST_ERR, b"internal server error")));
+        if done_tx.send(Done { conn, verdict }).is_err() {
+            return;
+        }
+        signal.notify();
+    }
+}
+
+/// Execute one decoded request. Blocking ops (Consume / ConsumeMany /
+/// WaitVersion) run the register-then-try protocol: register a waker,
+/// re-check with a zero timeout, park on empty — the worker never sleeps.
+#[cfg(unix)]
+fn run_work(work: Work, broker: &dyn QueueService, store: &Store) -> Verdict {
+    let Work { conn, op, body, deadline, waker } = work;
+    let now = Instant::now();
+    let (site, deadline, expired) = match blocking_site(op, &body) {
+        Some((site, timeout)) => {
+            let dl = deadline.unwrap_or_else(|| now + timeout.min(MAX_BLOCK));
+            (Some(site), dl, now >= dl)
+        }
+        None => (None, now, false),
+    };
+    if !expired {
+        if let Some(site) = &site {
+            let registered = match site {
+                WaitSite::Queue(q) => broker.register_waiter(q, conn, waker.clone()),
+                WaitSite::Version => {
+                    store.register_waiter(conn, waker.clone());
+                    Ok(())
+                }
+            };
+            if let Err(e) = registered {
+                // e.g. consume on an undeclared queue — the same error
+                // the op itself would report.
+                return Verdict::Respond(frame_bytes(ST_ERR, e.to_string().as_bytes()));
+            }
+        }
+    }
+    match execute_op_with(op, &body, broker, store, TimeoutMode::Immediate) {
+        Ok((st, resp)) => match site {
+            Some(site) if st == ST_NONE && !expired => {
+                Verdict::Park { op, body, deadline, site }
+            }
+            Some(site) => {
+                cancel_site(&site, conn, broker, store);
+                Verdict::Respond(frame_bytes(st, &resp))
+            }
+            None => Verdict::Respond(frame_bytes(st, &resp)),
+        },
+        Err(e) => {
+            if let Some(site) = &site {
+                cancel_site(site, conn, broker, store);
+            }
+            Verdict::Respond(frame_bytes(ST_ERR, e.to_string().as_bytes()))
+        }
+    }
+}
+
+/// `(wait site, protocol timeout)` for ops that may block; `None` for
+/// everything else — including malformed bodies, which fall through to
+/// [`execute_op_with`] for the verbatim parse error.
+#[cfg(unix)]
+fn blocking_site(op: Op, body: &[u8]) -> Option<(WaitSite, Duration)> {
+    let mut r = BodyReader::new(body);
+    match op {
+        Op::Consume => {
+            let q = r.str().ok()?.to_string();
+            Some((WaitSite::Queue(q), Duration::from_millis(r.u64().ok()?)))
+        }
+        Op::ConsumeMany => {
+            let q = r.str().ok()?.to_string();
+            r.u64().ok()?; // max batch size
+            Some((WaitSite::Queue(q), Duration::from_millis(r.u64().ok()?)))
+        }
+        Op::WaitVersion => {
+            r.str().ok()?;
+            r.u64().ok()?; // min version
+            Some((WaitSite::Version, Duration::from_millis(r.u64().ok()?)))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(unix)]
+fn cancel_site(site: &WaitSite, conn: u64, broker: &dyn QueueService, store: &Store) {
+    match site {
+        WaitSite::Queue(q) => broker.cancel_waiter(q, conn),
+        WaitSite::Version => store.cancel_waiter(conn),
+    }
+}
+
+/// Frame a response the way the client reads it: `[len u32][status][body]`.
+#[cfg(unix)]
+fn frame_bytes(status: u8, body: &[u8]) -> Vec<u8> {
+    if 1 + body.len() > MAX_FRAME {
+        // Mirror write_frame's cap: answer with the error instead of
+        // emitting a frame the client would reject as corrupt.
+        let msg = format!("frame too large: {} bytes", 1 + body.len());
+        return frame_bytes(ST_ERR, msg.as_bytes());
+    }
+    let mut out = Vec::with_capacity(5 + body.len());
+    out.extend_from_slice(&((1 + body.len()) as u32).to_le_bytes());
+    out.push(status);
+    out.extend_from_slice(body);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Op execution (shared by the worker pool, the non-unix fallback, and the
+// bench baseline)
+// ---------------------------------------------------------------------------
+
+/// How [`execute_op_with`] treats the timeout field of blocking ops.
+#[cfg_attr(not(unix), allow(dead_code))]
+enum TimeoutMode {
+    /// Honor it in place, sleeping inside the broker/store — for
+    /// thread-per-connection callers (non-unix fallback, bench baseline).
+    Block,
+    /// Replace it with zero: the event loop parks the connection instead
+    /// of blocking a worker; retries arrive via wakers.
+    Immediate,
+}
+
+/// Execute one request against `broker`/`store`, honoring blocking
+/// timeouts in place; returns `(status, response body)`. Public so the
+/// scaling bench can drive a thread-per-connection baseline over the very
+/// same op implementations. `Op::Shutdown` only acknowledges — stopping
+/// the server is the hosting loop's job.
+pub fn execute_op(
     op: Op,
     body: &[u8],
     broker: &dyn QueueService,
     store: &Store,
-    stream: &mut W,
-) -> Result<()> {
+) -> Result<(u8, Vec<u8>)> {
+    execute_op_with(op, body, broker, store, TimeoutMode::Block)
+}
+
+fn execute_op_with(
+    op: Op,
+    body: &[u8],
+    broker: &dyn QueueService,
+    store: &Store,
+    mode: TimeoutMode,
+) -> Result<(u8, Vec<u8>)> {
     let mut r = BodyReader::new(body);
-    match op {
-        Op::Ping => write_frame(stream, ST_OK, b"pong")?,
-        Op::Shutdown => unreachable!("handled by caller"),
+    let op_timeout = |t: Duration| match mode {
+        TimeoutMode::Block => t,
+        TimeoutMode::Immediate => Duration::ZERO,
+    };
+    Ok(match op {
+        Op::Ping => (ST_OK, b"pong".to_vec()),
+        Op::Shutdown => (ST_OK, Vec::new()),
         Op::Declare => {
             broker.declare(r.str()?)?;
-            write_frame(stream, ST_OK, &[])?;
+            (ST_OK, Vec::new())
         }
         Op::Publish => {
             let q = r.str()?;
             broker.publish(q, r.rest())?;
-            write_frame(stream, ST_OK, &[])?;
+            (ST_OK, Vec::new())
         }
         Op::PublishPri => {
             let q = r.str()?;
             let pri = r.u64()?;
             broker.publish_pri(q, r.rest(), pri)?;
-            write_frame(stream, ST_OK, &[])?;
+            (ST_OK, Vec::new())
         }
         Op::Consume => {
             let q = r.str()?;
-            let timeout = Duration::from_millis(r.u64()?);
+            let timeout = op_timeout(Duration::from_millis(r.u64()?));
             match broker.consume(q, timeout)? {
                 Some(d) => {
                     let mut out = Vec::with_capacity(9 + d.payload.len());
                     out.extend_from_slice(&d.tag.to_le_bytes());
                     out.push(d.redelivered as u8);
                     out.extend_from_slice(&d.payload);
-                    write_frame(stream, ST_OK, &out)?;
+                    (ST_OK, out)
                 }
-                None => write_frame(stream, ST_NONE, &[])?,
+                None => (ST_NONE, Vec::new()),
             }
         }
         Op::Ack => {
             let q = r.str()?;
             broker.ack(q, r.u64()?)?;
-            write_frame(stream, ST_OK, &[])?;
+            (ST_OK, Vec::new())
         }
         Op::Nack => {
             let q = r.str()?;
             broker.nack(q, r.u64()?)?;
-            write_frame(stream, ST_OK, &[])?;
+            (ST_OK, Vec::new())
         }
         Op::Len => {
             let n = broker.len(r.str()?)? as u64;
-            write_frame(stream, ST_OK, &n.to_le_bytes())?;
+            (ST_OK, n.to_le_bytes().to_vec())
         }
         Op::Purge => {
             broker.purge(r.str()?)?;
-            write_frame(stream, ST_OK, &[])?;
+            (ST_OK, Vec::new())
         }
         Op::Stats => {
             let s = broker.stats(r.str()?)?;
@@ -237,7 +1170,7 @@ fn respond<W: Write>(
             ] {
                 out.extend_from_slice(&v.to_le_bytes());
             }
-            write_frame(stream, ST_OK, &out)?;
+            (ST_OK, out)
         }
         Op::PublishMany => {
             let q = r.str()?;
@@ -253,12 +1186,12 @@ fn respond<W: Write>(
                 payloads.push(r.bytes()?);
             }
             broker.publish_many(q, &payloads)?;
-            write_frame(stream, ST_OK, &[])?;
+            (ST_OK, Vec::new())
         }
         Op::ConsumeMany => {
             let q = r.str()?;
             let max = r.u64()? as usize;
-            let timeout = Duration::from_millis(r.u64()?);
+            let timeout = op_timeout(Duration::from_millis(r.u64()?));
             let mut batch = broker.consume_many(q, max, timeout)?;
             // A batch of large payloads can overflow MAX_FRAME. Erroring
             // after the pop would strand the deliveries in unacked until
@@ -276,7 +1209,7 @@ fn respond<W: Write>(
                 fits += 1;
             }
             if fits == 0 && !batch.is_empty() {
-                fits = 1; // single oversized message: fail like Op::Consume would
+                fits = 1; // single oversized message: fail like Op::Consume
             }
             if fits < batch.len() {
                 let tags: Vec<u64> = batch[fits..].iter().map(|d| d.tag).collect();
@@ -284,7 +1217,7 @@ fn respond<W: Write>(
                 batch.truncate(fits);
             }
             if batch.is_empty() {
-                write_frame(stream, ST_NONE, &[])?;
+                (ST_NONE, Vec::new())
             } else {
                 let size = 4 + batch.iter().map(|d| 13 + d.payload.len()).sum::<usize>();
                 let mut out = Vec::with_capacity(size);
@@ -294,66 +1227,66 @@ fn respond<W: Write>(
                     out.push(d.redelivered as u8);
                     put_bytes(&mut out, &d.payload);
                 }
-                write_frame(stream, ST_OK, &out)?;
+                (ST_OK, out)
             }
         }
         Op::AckMany => {
             let q = r.str()?;
             let tags = read_tags(&mut r, body.len())?;
             broker.ack_many(q, &tags)?;
-            write_frame(stream, ST_OK, &[])?;
+            (ST_OK, Vec::new())
         }
         Op::NackMany => {
             let q = r.str()?;
             let tags = read_tags(&mut r, body.len())?;
             broker.nack_many(q, &tags)?;
-            write_frame(stream, ST_OK, &[])?;
+            (ST_OK, Vec::new())
         }
         Op::Put => {
             let k = r.str()?;
             store.put(k, r.rest())?;
-            write_frame(stream, ST_OK, &[])?;
+            (ST_OK, Vec::new())
         }
         Op::Get => match store.get(r.str()?)? {
-            Some(v) => write_frame(stream, ST_OK, &v)?,
-            None => write_frame(stream, ST_NONE, &[])?,
+            Some(v) => (ST_OK, v),
+            None => (ST_NONE, Vec::new()),
         },
         Op::Del => {
             let existed = store.del(r.str()?)?;
-            write_frame(stream, ST_OK, &[existed as u8])?;
+            (ST_OK, vec![existed as u8])
         }
         Op::PutVersioned => {
             let k = r.str()?;
             let ver = r.u64()?;
             store.put_versioned(k, ver, r.rest())?;
-            write_frame(stream, ST_OK, &[])?;
+            (ST_OK, Vec::new())
         }
         Op::GetVersioned => match store.get_versioned(r.str()?)? {
             Some(v) => {
                 let mut out = Vec::with_capacity(8 + v.bytes.len());
                 out.extend_from_slice(&v.version.to_le_bytes());
                 out.extend_from_slice(&v.bytes);
-                write_frame(stream, ST_OK, &out)?;
+                (ST_OK, out)
             }
-            None => write_frame(stream, ST_NONE, &[])?,
+            None => (ST_NONE, Vec::new()),
         },
         Op::WaitVersion => {
             let k = r.str()?;
             let min = r.u64()?;
-            let timeout = Duration::from_millis(r.u64()?);
+            let timeout = op_timeout(Duration::from_millis(r.u64()?));
             match store.wait_version(k, min, timeout)? {
                 Some(v) => {
                     let mut out = Vec::with_capacity(8 + v.bytes.len());
                     out.extend_from_slice(&v.version.to_le_bytes());
                     out.extend_from_slice(&v.bytes);
-                    write_frame(stream, ST_OK, &out)?;
+                    (ST_OK, out)
                 }
-                None => write_frame(stream, ST_NONE, &[])?,
+                None => (ST_NONE, Vec::new()),
             }
         }
         Op::Incr => {
             let v = store.incr(r.str()?)?;
-            write_frame(stream, ST_OK, &v.to_le_bytes())?;
+            (ST_OK, v.to_le_bytes().to_vec())
         }
         // --- replication (queue/durability/replication) --------------------
         // All three answer from the WAL-backed broker behind this service;
@@ -361,7 +1294,7 @@ fn respond<W: Write>(
         Op::ReplHandshake => {
             let db = repl_source(broker)?;
             let status = db.repl_status()?;
-            write_frame(stream, ST_OK, &status_body(&status, 0))?;
+            (ST_OK, status_body(&status, 0))
         }
         Op::ReplSnapshot => {
             let db = repl_source(broker)?;
@@ -377,7 +1310,7 @@ fn respond<W: Write>(
             let mut out = Vec::with_capacity(8 + bytes.len());
             out.extend_from_slice(&gen.to_le_bytes());
             out.extend_from_slice(&bytes);
-            write_frame(stream, ST_OK, &out)?;
+            (ST_OK, out)
         }
         Op::ReplPull => {
             let db = repl_source(broker)?;
@@ -387,10 +1320,9 @@ fn respond<W: Write>(
             let (status, chunk) = db.repl_read(gen, from, max)?;
             let mut out = status_body(&status, chunk.len());
             out.extend_from_slice(&chunk);
-            write_frame(stream, ST_OK, &out)?;
+            (ST_OK, out)
         }
-    }
-    Ok(())
+    })
 }
 
 fn repl_source(broker: &dyn QueueService) -> Result<&crate::queue::durability::DurableBroker> {
@@ -441,4 +1373,55 @@ pub(crate) fn body_with_name(name: &str, extra: &[u8]) -> Vec<u8> {
     put_str(&mut out, name);
     out.extend_from_slice(extra);
     out
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use crate::queue::broker::Broker;
+
+    #[test]
+    fn execute_op_matches_wire_shapes() {
+        let broker = Broker::new(Duration::from_secs(5));
+        let store = Store::new();
+        let (st, body) = execute_op(Op::Ping, &[], &broker, &store).unwrap();
+        assert_eq!((st, body.as_slice()), (ST_OK, b"pong".as_slice()));
+        let (st, _) =
+            execute_op(Op::Declare, &body_with_name("q", &[]), &broker, &store).unwrap();
+        assert_eq!(st, ST_OK);
+        // Immediate mode turns a long blocking consume into a fast try.
+        let mut c = body_with_name("q", &[]);
+        c.extend_from_slice(&10_000u64.to_le_bytes());
+        let t0 = std::time::Instant::now();
+        let (st, _) =
+            execute_op_with(Op::Consume, &c, &broker, &store, TimeoutMode::Immediate).unwrap();
+        assert_eq!(st, ST_NONE);
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn frame_bytes_caps_oversize_responses() {
+        let f = frame_bytes(ST_OK, &vec![0u8; MAX_FRAME]);
+        // Replaced by an in-band error frame the client can parse.
+        assert_eq!(f[4], ST_ERR);
+        let len = u32::from_le_bytes(f[0..4].try_into().unwrap()) as usize;
+        assert_eq!(len, f.len() - 4);
+        assert!(len <= MAX_FRAME);
+    }
+
+    #[test]
+    fn blocking_site_parses_only_blocking_ops() {
+        let mut c = body_with_name("jobs", &[]);
+        c.extend_from_slice(&250u64.to_le_bytes());
+        match blocking_site(Op::Consume, &c) {
+            Some((WaitSite::Queue(q), t)) => {
+                assert_eq!(q, "jobs");
+                assert_eq!(t, Duration::from_millis(250));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert!(blocking_site(Op::Publish, &c).is_none());
+        // Malformed body: not a blocking site; the executor reports it.
+        assert!(blocking_site(Op::Consume, &[1, 2]).is_none());
+    }
 }

@@ -142,6 +142,132 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>)> {
     Ok((head, buf))
 }
 
+/// How many bytes [`FrameAssembler::poll_read`] asks the transport for at
+/// a time: capacity keeps following the bytes that actually arrive
+/// (hostile length claims stay cheap), and one slow peer can never make a
+/// single `read` call pin a frame-sized buffer.
+const READ_CHUNK: usize = 64 << 10;
+
+/// Resumable frame reader for NONBLOCKING streams — the event-loop
+/// counterpart of [`read_frame`] (which stays the blocking-client path).
+///
+/// The server's readiness loop calls [`FrameAssembler::poll_read`] every
+/// time a connection polls readable; the assembler consumes whatever bytes
+/// are available (up to a fairness budget), remembers where it stopped,
+/// and yields a complete `(op, body)` frame once the declared length is
+/// fully backed by data. `Ok(None)` means "no complete frame yet, wait
+/// for more readiness" — the caller keeps the assembler and re-polls.
+///
+/// Same hostile-input posture as [`read_frame`]: the length prefix is
+/// untrusted until backed (buffer capacity follows arrival, bounded by
+/// `READ_CHUNK` growth steps), zero/oversized lengths are protocol errors,
+/// and EOF mid-frame is a truncation error. Errors are fatal to the
+/// connection, exactly like the blocking path.
+#[derive(Debug, Default)]
+pub struct FrameAssembler {
+    head: [u8; 4],
+    head_got: usize,
+    /// Body bytes still owed once the header is complete (`len`, counting
+    /// the op byte). 0 while the header itself is incomplete.
+    want: usize,
+    buf: Vec<u8>,
+}
+
+impl FrameAssembler {
+    pub fn new() -> Self {
+        FrameAssembler::default()
+    }
+
+    /// True if a frame is partially assembled (header or body mid-flight)
+    /// — lets the server distinguish "idle peer hung up" from "peer hung
+    /// up mid-request" when a connection closes.
+    pub fn mid_frame(&self) -> bool {
+        self.head_got > 0
+    }
+
+    /// Consume available bytes from `r` (a nonblocking reader), at most
+    /// `budget` per call so one firehosing connection cannot starve the
+    /// rest of the event loop. Returns a complete frame, `Ok(None)` if the
+    /// stream ran dry (`WouldBlock`) or the budget ran out first, and an
+    /// error on EOF mid-stream, a bad length prefix, or transport failure.
+    pub fn poll_read<R: Read>(
+        &mut self,
+        r: &mut R,
+        mut budget: usize,
+    ) -> Result<Option<(u8, Vec<u8>)>> {
+        // Header: 4-byte little-endian length, assembled byte by byte.
+        while self.head_got < 4 {
+            if budget == 0 {
+                return Ok(None);
+            }
+            let take = (4 - self.head_got).min(budget);
+            match r.read(&mut self.head[self.head_got..self.head_got + take]) {
+                Ok(0) => {
+                    if self.head_got == 0 {
+                        bail!("connection closed");
+                    }
+                    bail!("frame truncated: EOF inside length prefix");
+                }
+                Ok(n) => {
+                    self.head_got += n;
+                    budget -= n;
+                    if self.head_got == 4 {
+                        let len = u32::from_le_bytes(self.head) as usize;
+                        if len == 0 || len > MAX_FRAME {
+                            bail!("bad frame length {len}");
+                        }
+                        self.want = len;
+                        self.buf.clear();
+                        self.buf.reserve(len.min(FRAME_ALLOC_START));
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(None),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        // Body: grow-as-bytes-arrive, READ_CHUNK at a time.
+        while self.buf.len() < self.want {
+            if budget == 0 {
+                return Ok(None);
+            }
+            let remaining = self.want - self.buf.len();
+            let take = remaining.min(READ_CHUNK).min(budget);
+            let old = self.buf.len();
+            self.buf.resize(old + take, 0);
+            match r.read(&mut self.buf[old..]) {
+                Ok(0) => {
+                    self.buf.truncate(old);
+                    bail!("frame truncated: {old} of {} bytes", self.want);
+                }
+                Ok(n) => {
+                    self.buf.truncate(old + n);
+                    budget -= n;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    self.buf.truncate(old);
+                    return Ok(None);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                    self.buf.truncate(old);
+                    continue;
+                }
+                Err(e) => {
+                    self.buf.truncate(old);
+                    return Err(e.into());
+                }
+            }
+        }
+        // Complete frame: hand it out and reset for the next one.
+        let mut body = std::mem::take(&mut self.buf);
+        let head = body[0];
+        body.drain(..1);
+        self.head_got = 0;
+        self.want = 0;
+        Ok(Some((head, body)))
+    }
+}
+
 // --- body building / parsing ------------------------------------------------
 
 /// Append a length-prefixed string (u16 length).
@@ -376,5 +502,121 @@ mod tests {
         put_bytes(&mut out, b"hello");
         let mut r = BodyReader::new(&out[..6]); // len says 5, only 2 present
         assert!(r.bytes().is_err());
+    }
+
+    /// A Read that yields `data` in dribbles of at most `chunk` bytes,
+    /// interleaving a WouldBlock after every successful read — the shape
+    /// of a nonblocking socket under a slow (or hostile) peer.
+    struct DribbleReader<'a> {
+        data: &'a [u8],
+        chunk: usize,
+        ready: bool,
+    }
+
+    impl Read for DribbleReader<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if !self.ready {
+                self.ready = true;
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            self.ready = false;
+            let n = buf.len().min(self.chunk).min(self.data.len());
+            if n == 0 {
+                return Ok(0); // EOF
+            }
+            buf[..n].copy_from_slice(&self.data[..n]);
+            self.data = &self.data[n..];
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn assembler_reassembles_across_would_blocks() {
+        let mut frame = Vec::new();
+        write_frame(&mut frame, Op::Publish as u8, b"payload-bytes").unwrap();
+        let mut r = DribbleReader { data: &frame, chunk: 3, ready: false };
+        let mut asm = FrameAssembler::new();
+        let mut polls = 0;
+        let got = loop {
+            polls += 1;
+            assert!(polls < 100, "assembler never completed");
+            if let Some(f) = asm.poll_read(&mut r, usize::MAX).unwrap() {
+                break f;
+            }
+        };
+        assert_eq!(got.0, Op::Publish as u8);
+        assert_eq!(got.1, b"payload-bytes");
+        assert!(!asm.mid_frame());
+    }
+
+    #[test]
+    fn assembler_parses_back_to_back_frames() {
+        let mut bytes = Vec::new();
+        write_frame(&mut bytes, Op::Ping as u8, b"").unwrap();
+        write_frame(&mut bytes, Op::Publish as u8, b"two").unwrap();
+        let mut r = &bytes[..];
+        let mut asm = FrameAssembler::new();
+        let f1 = asm.poll_read(&mut r, usize::MAX).unwrap().unwrap();
+        assert_eq!((f1.0, f1.1.as_slice()), (Op::Ping as u8, &b""[..]));
+        let f2 = asm.poll_read(&mut r, usize::MAX).unwrap().unwrap();
+        assert_eq!((f2.0, f2.1.as_slice()), (Op::Publish as u8, &b"two"[..]));
+    }
+
+    #[test]
+    fn assembler_rejects_bad_lengths() {
+        let mut asm = FrameAssembler::new();
+        let zero = 0u32.to_le_bytes();
+        assert!(asm.poll_read(&mut &zero[..], usize::MAX).is_err());
+        let mut asm = FrameAssembler::new();
+        let huge = ((MAX_FRAME + 2) as u32).to_le_bytes();
+        assert!(asm.poll_read(&mut &huge[..], usize::MAX).is_err());
+    }
+
+    #[test]
+    fn assembler_reports_truncation_on_eof() {
+        // 2 bytes of a 4-byte length prefix, then EOF: the slow-loris
+        // shape. WouldBlock keeps the frame pending; EOF is an error.
+        let mut asm = FrameAssembler::new();
+        let mut r = DribbleReader { data: &[9, 0], chunk: 2, ready: true };
+        assert!(asm.poll_read(&mut r, usize::MAX).unwrap().is_none());
+        assert!(asm.mid_frame());
+        r.ready = true; // next read returns Ok(0): peer hung up
+        let err = asm.poll_read(&mut r, usize::MAX).unwrap_err().to_string();
+        assert!(err.contains("length prefix"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn assembler_hostile_length_claim_stays_cheap() {
+        // Claim MAX_FRAME, back it with 3 bytes: the assembler must
+        // neither allocate the claim nor hand the transport a frame-sized
+        // buffer (same posture as read_frame, resumable edition).
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(MAX_FRAME as u32).to_le_bytes());
+        bytes.extend_from_slice(&[1, 2, 3]);
+        let mut r = TrackingReader { data: &bytes, max_slice: 0 };
+        let mut asm = FrameAssembler::new();
+        let err = asm.poll_read(&mut r, usize::MAX).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+        assert!(r.max_slice <= READ_CHUNK, "oversized read of {} bytes", r.max_slice);
+        assert!(asm.buf.capacity() <= 2 * FRAME_ALLOC_START);
+    }
+
+    #[test]
+    fn assembler_respects_read_budget() {
+        let payload = vec![5u8; 512 << 10]; // 512 KB, > one READ_CHUNK
+        let mut frame = Vec::new();
+        write_frame(&mut frame, Op::Put as u8, &payload).unwrap();
+        let mut r = &frame[..];
+        let mut asm = FrameAssembler::new();
+        // A 64 KB budget cannot finish a 512 KB frame in one poll.
+        assert!(asm.poll_read(&mut r, READ_CHUNK).unwrap().is_none());
+        assert!(asm.mid_frame());
+        let got = loop {
+            if let Some(f) = asm.poll_read(&mut r, READ_CHUNK).unwrap() {
+                break f;
+            }
+        };
+        assert_eq!(got.0, Op::Put as u8);
+        assert_eq!(got.1, payload);
     }
 }
