@@ -7,11 +7,17 @@
 //!      built over the very same `execute_op` implementations
 //!   S3 op throughput with 64 active connections, event loop vs baseline
 //!      (the loop must not tax the busy path to win the idle one)
+//!   S4 observability: Op::Metrics round-trip latency against the live
+//!      server, counter conservation across the S3 workload (published ==
+//!      acked + unacked + ready, gated at exactly zero violations), and
+//!      the obs-probe-vs-broker-op headroom ratio that bounds the flight
+//!      recorder's hot-path overhead
 //!
 //! Run: cargo bench --bench server_scaling          (wants `ulimit -n` >= 25k)
-//! CI:  SERVER_MAX_RSS_PER_CONN=16384 caps S1 hard; the committed
-//!      bench_baselines/BENCH_server.json gates S1/S3 against regression
-//!      via `cargo run --bin bench_check`.
+//! CI:  SERVER_MAX_RSS_PER_CONN=16384 caps S1 hard; OBS_MAX_OVERHEAD_PCT=5
+//!      caps the registry probe at 5% of a broker op; the committed
+//!      bench_baselines/BENCH_server.json and BENCH_obs.json gate S1/S3/S4
+//!      against regression via `cargo run --bin bench_check`.
 //!
 //! Counts degrade gracefully under a low fd limit: a tier that cannot be
 //! reached is skipped (with a note) instead of emitting a bogus row.
@@ -25,6 +31,7 @@ use std::time::{Duration, Instant};
 
 use jsdoop::data::Store;
 use jsdoop::metrics::{write_bench_json, BenchRow};
+use jsdoop::obs;
 use jsdoop::queue::broker::Broker;
 use jsdoop::queue::client::RemoteQueue;
 use jsdoop::queue::server::{execute_op, serve};
@@ -262,6 +269,100 @@ fn main() {
         speedup: Some(ratio),
     });
 
+    println!("== S4: observability (flight recorder) ==");
+    let mut obs_rows: Vec<BenchRow> = Vec::new();
+
+    // Metrics-op round-trip: snapshot + encode server-side, wire both
+    // ways, decode client-side. Machine-dependent, so this row ships in
+    // the fresh BENCH_obs.json for trend-watching but is not committed to
+    // the baselines.
+    let q = RemoteQueue::connect(&evt.addr.to_string()).unwrap();
+    let met_iters = iters(200);
+    let t0 = Instant::now();
+    let mut snap = q.metrics().unwrap();
+    for _ in 1..met_iters {
+        snap = q.metrics().unwrap();
+    }
+    let met_ns = t0.elapsed().as_nanos() as f64 / met_iters as f64;
+    println!("  metrics op round-trip: {met_ns:>10.0} ns/op ({met_iters} iters)");
+    obs_rows.push(BenchRow {
+        op: "S4 metrics op round-trip".to_string(),
+        iters: met_iters,
+        ns_per_op: met_ns,
+        speedup: None,
+    });
+
+    // Counter conservation over the S3 workload (now quiescent): every
+    // published message is acked, in flight, or still ready. The broker
+    // reads stats and depths under the same per-queue lock, so a nonzero
+    // count here is a real miscounted increment, not a race — gated at
+    // exactly zero by the committed baseline row and asserted in-run.
+    let mut violations = 0u64;
+    for row in &snap.queues {
+        if row.published != row.acked + row.unacked + row.ready {
+            println!(
+                "  CONSERVATION VIOLATION {}: published {} != acked {} + unacked {} + ready {}",
+                row.name, row.published, row.acked, row.unacked, row.ready
+            );
+            violations += 1;
+        }
+    }
+    println!(
+        "  counter conservation: {violations} violation(s) across {} queue(s)",
+        snap.queues.len()
+    );
+    obs_rows.push(BenchRow {
+        op: "counter_conservation_violations".to_string(),
+        iters: snap.queues.len() as u32,
+        ns_per_op: violations as f64,
+        speedup: None,
+    });
+    assert_eq!(violations, 0, "metric counter conservation violated");
+
+    // Registry overhead headroom: one hot-path probe (a counter inc plus
+    // a histogram observe — what an instrumented broker op pays) against
+    // one in-process publish/consume/ack cycle. Headroom H means the
+    // probe costs 1/H of a broker op; >= 20x keeps the flight recorder
+    // under 5% on the busiest path.
+    let probe_iters = 200_000u32;
+    let t0 = Instant::now();
+    for i in 0..probe_iters {
+        obs::inc(obs::Counter::ServerOps);
+        obs::observe(obs::Hist::ServerOpExecuteNs, i as u64);
+    }
+    let probe_ns = t0.elapsed().as_nanos() as f64 / probe_iters as f64;
+    let hot = Broker::new(Duration::from_secs(60));
+    hot.declare("obs-hot").unwrap();
+    // Fixed, uncapped count: this ratio feeds a hard gate, and the D3/D4
+    // lesson is that BENCH_ITERS-capped timing windows flake gates.
+    let hot_iters = 20_000u32;
+    let t0 = Instant::now();
+    for _ in 0..hot_iters {
+        hot.publish("obs-hot", b"task-sized-payload-21").unwrap();
+        let d = hot.consume("obs-hot", Duration::from_millis(10)).unwrap().unwrap();
+        hot.ack("obs-hot", d.tag).unwrap();
+    }
+    let hot_ns = t0.elapsed().as_nanos() as f64 / (hot_iters as f64 * 3.0);
+    let headroom = hot_ns / probe_ns.max(0.01);
+    println!(
+        "  obs probe {probe_ns:.1} ns vs broker op {hot_ns:.0} ns -> {headroom:.0}x headroom"
+    );
+    obs_rows.push(BenchRow {
+        op: "obs_vs_broker_headroom".to_string(),
+        iters: probe_iters,
+        ns_per_op: probe_ns,
+        speedup: Some(headroom),
+    });
+    if let Some(cap) =
+        std::env::var("OBS_MAX_OVERHEAD_PCT").ok().and_then(|s| s.parse::<f64>().ok())
+    {
+        let overhead_pct = 100.0 * probe_ns / hot_ns.max(1.0);
+        assert!(
+            overhead_pct <= cap,
+            "obs probe costs {overhead_pct:.2}% of a broker op (cap {cap}%)"
+        );
+    }
+
     base.shutdown();
     evt.shutdown();
 
@@ -293,5 +394,9 @@ fn main() {
     match write_bench_json("server", &rows) {
         Ok(p) => println!("bench rows -> {}", p.display()),
         Err(e) => println!("warning: could not write BENCH_server.json: {e}"),
+    }
+    match write_bench_json("obs", &obs_rows) {
+        Ok(p) => println!("obs rows -> {}", p.display()),
+        Err(e) => println!("warning: could not write BENCH_obs.json: {e}"),
     }
 }

@@ -70,6 +70,18 @@ pub struct Config {
     /// Cap on concurrently accepted server connections; excess connects
     /// wait in the OS backlog until a slot frees.
     pub max_connections: usize,
+    /// Reap server connections with no frame activity for this many
+    /// seconds (0 = never). Parked consumers (blocked Consume /
+    /// WaitVersion) are exempt.
+    pub idle_timeout: u64,
+    // Observability (obs + `jsdoop metrics`).
+    /// `serve` emits a JSON metrics line every N seconds (0 = off).
+    pub metrics_every: u64,
+    /// `jsdoop metrics --watch=N` re-renders every N seconds (0 = one
+    /// shot).
+    pub watch: u64,
+    /// `jsdoop metrics --json` prints a JSON line instead of tables.
+    pub json: bool,
     // Corpus
     pub corpus_file: Option<PathBuf>,
     pub corpus_seed: u64,
@@ -104,6 +116,10 @@ impl Default for Config {
             repl_poll_ms: 50,
             server_workers: 0,
             max_connections: 16_384,
+            idle_timeout: 0,
+            metrics_every: 0,
+            watch: 0,
+            json: false,
             corpus_file: None,
             corpus_seed: 1234,
             corpus_len: 200_000,
@@ -114,7 +130,7 @@ impl Default for Config {
 }
 
 /// Keys whose bare `--flag` CLI form means `--flag=true`.
-const BOOL_KEYS: &[&str] = &["promote"];
+const BOOL_KEYS: &[&str] = &["promote", "json"];
 
 impl Config {
     pub fn schedule(&self) -> Schedule {
@@ -181,6 +197,16 @@ impl Config {
         }
         if self.max_connections == 0 {
             bail!("max_connections must be >= 1");
+        }
+        if self.idle_timeout > 86_400 {
+            // A day-long "idle" cutoff is certainly a typo'd unit (ms?).
+            bail!("idle_timeout must be <= 86400 seconds (0 = never reap)");
+        }
+        if self.metrics_every > 86_400 {
+            bail!("metrics_every must be <= 86400 seconds (0 = off)");
+        }
+        if self.watch > 86_400 {
+            bail!("watch must be <= 86400 seconds (0 = one shot)");
         }
         Ok(())
     }
@@ -262,6 +288,10 @@ impl Config {
             "repl_poll_ms" => self.repl_poll_ms = p(key, val)?,
             "server_workers" => self.server_workers = p(key, val)?,
             "max_connections" => self.max_connections = p(key, val)?,
+            "idle_timeout" => self.idle_timeout = p(key, val)?,
+            "metrics_every" => self.metrics_every = p(key, val)?,
+            "watch" => self.watch = p(key, val)?,
+            "json" => self.json = p(key, val)?,
             "corpus_file" => self.corpus_file = Some(PathBuf::from(val)),
             "corpus_seed" => self.corpus_seed = p(key, val)?,
             "corpus_len" => self.corpus_len = p(key, val)?,
@@ -399,6 +429,34 @@ mod tests {
         assert!(c.validate().is_err());
         c.max_connections = 512;
         c.server_workers = 4096; // typo'd pool size
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn observability_keys_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.idle_timeout, 0); // never reap
+        assert_eq!(c.metrics_every, 0); // off
+        c.apply_cli(&[
+            "--idle-timeout=30".into(),
+            "--metrics-every=5".into(),
+            "--watch=2".into(),
+            "--json".into(), // bare boolean flag
+        ])
+        .unwrap();
+        assert_eq!(c.idle_timeout, 30);
+        assert_eq!(c.metrics_every, 5);
+        assert_eq!(c.watch, 2);
+        assert!(c.json);
+        c.validate().unwrap();
+        // A day-plus cutoff is a typo'd unit, not a policy.
+        c.idle_timeout = 100_000;
+        assert!(c.validate().is_err());
+        c.idle_timeout = 0;
+        c.metrics_every = 100_000;
+        assert!(c.validate().is_err());
+        c.metrics_every = 0;
+        c.watch = 100_000;
         assert!(c.validate().is_err());
     }
 

@@ -109,6 +109,13 @@ impl Store {
         self.waiters.lock().unwrap().remove(&id);
     }
 
+    /// Currently-registered waiter count (the `store.waiters` gauge in
+    /// the `Op::Metrics` snapshot — dead-consumer cancellation must drive
+    /// this back to zero).
+    pub fn waiter_count(&self) -> usize {
+        self.waiters.lock().unwrap().len()
+    }
+
     /// Fire-and-consume every registered waker (outside the state lock).
     fn wake_waiters(&self) {
         let drained: Vec<Arc<dyn ReadyWaker>> = {

@@ -7,8 +7,8 @@
 //! - **L3 (this crate)** — the JSDoop coordination system: queue broker
 //!   ([`queue`]), data server ([`data`]), initiator + execution flow
 //!   ([`coordinator`]), volunteer agents ([`volunteer`]), discrete-event
-//!   simulator ([`simclock`]), fault injection ([`faults`]), metrics
-//!   ([`metrics`]).
+//!   simulator ([`simclock`]), fault injection ([`faults`]), bench
+//!   metrics ([`metrics`]), live observability ([`obs`]).
 //! - **L2/L1 (build-time Python)** — the char-RNN model (JAX) over fused
 //!   Pallas LSTM kernels, AOT-lowered to the HLO artifacts executed by
 //!   [`runtime`].
@@ -25,6 +25,7 @@ pub mod driver;
 pub mod faults;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod profiles;
 pub mod queue;
 pub mod runtime;

@@ -10,18 +10,26 @@
 //!                                 the aggregation topology (tree-reduce
 //!                                 vs the paper's single reducer)
 //!   serve [addr] [--durability_dir=D --sync_policy=P --wal_compact_bytes=N
-//!                 --wal_group_window_us=U --server_workers=W --max_connections=C]
+//!                 --wal_group_window_us=U --server_workers=W --max_connections=C
+//!                 --idle_timeout=SECS --metrics_every=SECS]
 //!                                 host QueueServer + DataServer over TCP
 //!                                 (poll(2) event loop + W op workers; see
 //!                                 queue/server.rs); with a durability dir
 //!                                 the broker recovers its queues from
-//!                                 WAL + snapshot on restart
+//!                                 WAL + snapshot on restart; idle_timeout
+//!                                 reaps dead connections, metrics_every
+//!                                 emits a JSON metrics line periodically
 //!   serve [addr] --durability_dir=D --replicate-from=PRIMARY [--repl_poll_ms=MS]
 //!                                 follow a primary: mirror its WAL into D and
 //!                                 serve READ-ONLY (Stats/Len) while it lives
 //!   serve [addr] --durability_dir=D --promote
 //!                                 promote a follower's mirror: clear its
 //!                                 replica marker, recover, serve as primary
+//!   metrics [addr] [--watch=SECS --json]
+//!                                 live introspection of a running server
+//!                                 (Op::Metrics): op latency histograms,
+//!                                 queue depths, WAL/replication gauges,
+//!                                 recent trace events
 //!   init [--queue-addr --data-addr]  publish the problem to remote servers
 //!   volunteer [--queue-addr --data-addr --id=N]  remote volunteer process
 //!   generate [--model=path --chars=N --seed-text=...]  text-gen demo
@@ -46,6 +54,7 @@ use jsdoop::queue::broker::Broker;
 use jsdoop::queue::client::{RemoteData, RemoteQueue};
 use jsdoop::queue::durability::replication;
 use jsdoop::queue::durability::{DurabilityOptions, DurableBroker};
+use jsdoop::queue::QueueService;
 use jsdoop::runtime::Engine;
 use jsdoop::textdata::id_to_char;
 use jsdoop::util::prng::Rng;
@@ -73,6 +82,7 @@ fn run() -> Result<()> {
         "seq" => seq(&cfg, &rest),
         "sim" => sim(&cfg, &rest),
         "serve" => serve(&cfg, &rest),
+        "metrics" => metrics_cmd(&cfg, &rest),
         "init" => init_remote(&cfg),
         "volunteer" => volunteer(&cfg, &rest),
         "generate" => generate(&cfg, &rest),
@@ -87,7 +97,7 @@ fn run() -> Result<()> {
 fn print_usage() {
     eprintln!(
         "jsdoop — volunteer distributed NN training (JSDoop reproduction)\n\
-         usage: jsdoop <smoke|train|seq|sim|serve|init|volunteer|generate> [--key=value ...]\n\
+         usage: jsdoop <smoke|train|seq|sim|serve|metrics|init|volunteer|generate> [--key=value ...]\n\
          see rust/src/main.rs header and config/mod.rs for the flag set"
     );
 }
@@ -217,8 +227,11 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
     let server_opts = jsdoop::queue::server::ServerOptions {
         workers: cfg.server_workers,
         max_connections: cfg.max_connections,
+        idle_timeout: (cfg.idle_timeout > 0).then(|| Duration::from_secs(cfg.idle_timeout)),
         ..Default::default()
     };
+    // The wait loops below tick every 200 ms; metrics_every is seconds.
+    let metrics_ticks = cfg.metrics_every * 5;
 
     // --- follower mode: mirror a primary, serve read-only. ---------------
     if let Some(primary) = &cfg.replicate_from {
@@ -247,8 +260,13 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
             "(read-only until promoted: stop it, then `jsdoop serve --durability_dir={} --promote`)",
             dir.display()
         );
+        let mut ticks = 0u64;
         while !handle.stopped() {
             std::thread::sleep(Duration::from_millis(200));
+            ticks += 1;
+            if metrics_ticks > 0 && ticks % metrics_ticks == 0 {
+                emit_metrics_line(&handle);
+            }
         }
         handle.shutdown();
         follower.stop(); // join the pull loop; the mirror stays promotable
@@ -345,6 +363,9 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
                 }
             }
         }
+        if metrics_ticks > 0 && ticks % metrics_ticks == 0 {
+            emit_metrics_line(&handle);
+        }
     }
     handle.shutdown(); // joins the accept loop
     // Checkpoint explicitly: idle client connections may still hold Arc
@@ -356,6 +377,41 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// One JSON metrics line on stdout (`serve --metrics_every=N`): the same
+/// snapshot `Op::Metrics` serves, taken in-process.
+fn emit_metrics_line(handle: &jsdoop::queue::server::ServerHandle) {
+    jsdoop::obs::gauge_set(
+        jsdoop::obs::Gauge::StoreWaiters,
+        handle.store.waiter_count() as i64,
+    );
+    let snap = jsdoop::obs::snapshot(handle.broker.metrics_queues());
+    println!("{}", snap.to_json_line());
+}
+
+/// `jsdoop metrics [addr] [--watch=SECS --json]`: fetch the live
+/// [`jsdoop::obs`] snapshot from a running server and render it.
+fn metrics_cmd(cfg: &Config, rest: &[String]) -> Result<()> {
+    cfg.validate()?;
+    let addr = rest
+        .first()
+        .cloned()
+        .or_else(|| cfg.queue_addr.clone())
+        .unwrap_or_else(|| "127.0.0.1:7333".to_string());
+    let queue = RemoteQueue::connect(&addr)?;
+    loop {
+        let snap = queue.metrics()?;
+        if cfg.json {
+            println!("{}", snap.to_json_line());
+        } else {
+            println!("{}", snap.render_table());
+        }
+        if cfg.watch == 0 {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_secs(cfg.watch));
+    }
 }
 
 fn init_remote(cfg: &Config) -> Result<()> {

@@ -1,0 +1,914 @@
+//! Flight recorder (S18): a zero-dependency metrics + tracing registry
+//! shared by every hot layer — server event loop, broker, WAL,
+//! replication follower, and volunteer agents — and exposed live over the
+//! wire as `Op::Metrics` (see `queue/server.rs`) and on the CLI as
+//! `jsdoop metrics [--watch=N]` / `jsdoop serve --metrics_every=N`.
+//!
+//! # Overhead contract
+//!
+//! Hot paths touch ONLY process-global atomics with relaxed ordering:
+//! - **counters** — monotonic `AtomicU64`s ([`inc`] / [`add`]);
+//! - **gauges** — signed levels ([`gauge_add`] / [`gauge_set`]);
+//! - **histograms** — fixed log2-bucket latency/size histograms
+//!   ([`observe`]): bucket `b` holds values in `[2^(b-1), 2^b)` (bucket 0
+//!   holds exactly 0), [`HIST_BUCKETS`] buckets total, so one observation
+//!   is a `leading_zeros` + three relaxed `fetch_add`s — no locks, no
+//!   allocation, no clock reads beyond what the caller already took.
+//!
+//! Memory is statically bounded: the whole registry is a few KB of
+//! statics plus one mutex-guarded trace ring capped at [`TRACE_CAP`]
+//! entries. The trace ring ([`trace`]) is for RARE structural events only
+//! (WAL poison/rotation, replication re-baselines, connection reaps) —
+//! never per-op paths; it takes a mutex and allocates.
+//!
+//! The registry is process-global because the op executor
+//! (`server::execute_op`) has a fixed public signature and the layers it
+//! calls into (broker, WAL, store) are shared `Arc`s — threading a
+//! registry handle through every call would churn every API for no
+//! isolation win (one process == one server == one registry). Tests
+//! therefore assert DELTAS, not absolutes; [`reset`] exists for
+//! single-threaded bench harnesses.
+//!
+//! # Snapshot codec
+//!
+//! [`snapshot`] folds the registry (plus caller-supplied per-queue rows —
+//! live depth/inflight/waiter state belongs to the broker, not the
+//! registry) into a [`MetricsSnapshot`], encoded as a versioned frame
+//! ([`encode`] / [`decode`]) that rides `Op::Metrics`. The decoder is
+//! [`BodyReader`]-audited like every other frame: all counts are bounded
+//! against the input length in division form before any allocation.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use once_cell::sync::Lazy;
+
+use crate::queue::wire::{put_str, put_u32, BodyReader};
+
+// ---------------------------------------------------------------------------
+// Registry schema
+// ---------------------------------------------------------------------------
+
+/// Monotonic counters. Names (see [`COUNTER_NAMES`]) are dot-scoped by
+/// layer; the enum is the hot-path handle (index into a static array).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Requests executed by the server's worker pool (all ops).
+    ServerOps,
+    ServerConnsAccepted,
+    ServerConnsClosed,
+    /// Idle connections closed by the reaper (`--idle_timeout`).
+    ServerConnsReaped,
+    /// Poll rounds where one connection exhausted its READ_BUDGET.
+    ServerReadBudgetExhausted,
+    /// Response flushes that left bytes buffered (peer slower than us).
+    ServerBackpressureStalls,
+    /// Blocking ops parked (waiter registered, no thread held).
+    ServerParks,
+    /// Waiter registrations fired by broker notify sites.
+    BrokerWaiterFires,
+    BrokerPurges,
+    WalAppends,
+    WalSyncs,
+    WalRotations,
+    /// Transitions INTO the poisoned state (fsync/append/rotate failure).
+    WalPoisons,
+    ReplPulls,
+    ReplRebaselines,
+    AgentMapTasks,
+    AgentCombineTasks,
+    AgentReduceTasks,
+    /// Stale tasks handed back / swapped for the current version's work.
+    AgentStaleSwaps,
+    /// Corrupt (poison) payloads dropped from gradient folds.
+    AgentPoisonDropped,
+    /// Producer-subtree republish rounds triggered by poison/stalls.
+    AgentPoisonRepublish,
+}
+
+pub const NUM_COUNTERS: usize = 21;
+
+pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
+    "server.ops",
+    "server.conns_accepted",
+    "server.conns_closed",
+    "server.conns_reaped",
+    "server.read_budget_exhausted",
+    "server.backpressure_stalls",
+    "server.parks",
+    "broker.waiter_fires",
+    "broker.purges",
+    "wal.appends",
+    "wal.syncs",
+    "wal.rotations",
+    "wal.poisons",
+    "repl.pulls",
+    "repl.rebaselines",
+    "agent.map_tasks",
+    "agent.combine_tasks",
+    "agent.reduce_tasks",
+    "agent.stale_swaps",
+    "agent.poison_dropped",
+    "agent.poison_republish",
+];
+
+/// Signed level gauges (current state, not totals).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    ServerConnsLive,
+    ServerConnsParked,
+    /// Store-side waiter registrations (WaitVersion parks), set at
+    /// snapshot time by the metrics op handler.
+    StoreWaiters,
+    /// WAL records appended but not yet fsync-covered.
+    WalUnsyncedRecords,
+    /// Follower only: primary durable bytes minus applied offset.
+    ReplBytesBehind,
+}
+
+pub const NUM_GAUGES: usize = 5;
+
+pub const GAUGE_NAMES: [&str; NUM_GAUGES] = [
+    "server.conns_live",
+    "server.conns_parked",
+    "store.waiters",
+    "wal.unsynced_records",
+    "repl.bytes_behind_durable",
+];
+
+/// Log2-bucket histograms. `_ns` names hold nanoseconds; the rest hold
+/// plain counts (e.g. records per fsync batch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hist {
+    /// Dispatch-to-worker-pickup latency (queue wait in the pool).
+    ServerOpQueueWaitNs,
+    /// Worker execute time (excludes queue wait and response write).
+    ServerOpExecuteNs,
+    /// One full event-loop round (poll + housekeeping).
+    ServerPollRoundNs,
+    WalAppendNs,
+    WalFsyncNs,
+    /// Records settled per completed fsync (group-commit batch size).
+    WalSyncBatchRecords,
+    ReplPullNs,
+    AgentMapServiceNs,
+    AgentCombineServiceNs,
+    AgentReduceServiceNs,
+}
+
+pub const NUM_HISTS: usize = 10;
+
+pub const HIST_NAMES: [&str; NUM_HISTS] = [
+    "server.op_queue_wait_ns",
+    "server.op_execute_ns",
+    "server.poll_round_ns",
+    "wal.append_ns",
+    "wal.fsync_ns",
+    "wal.sync_batch_records",
+    "repl.pull_ns",
+    "agent.map_service_ns",
+    "agent.combine_service_ns",
+    "agent.reduce_service_ns",
+];
+
+/// Buckets per histogram. Bucket 0 holds exactly 0; bucket `b` holds
+/// `[2^(b-1), 2^b)`; the last bucket absorbs everything above (for ns
+/// that is >= ~0.54 s — beyond any latency this stack should see).
+pub const HIST_BUCKETS: usize = 32;
+
+/// Trace ring capacity (oldest entries overwritten).
+pub const TRACE_CAP: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Storage
+// ---------------------------------------------------------------------------
+
+static COUNTERS: [AtomicU64; NUM_COUNTERS] =
+    [const { AtomicU64::new(0) }; NUM_COUNTERS];
+static GAUGES: [AtomicI64; NUM_GAUGES] = [const { AtomicI64::new(0) }; NUM_GAUGES];
+static HIST_COUNT: [AtomicU64; NUM_HISTS] = [const { AtomicU64::new(0) }; NUM_HISTS];
+static HIST_SUM: [AtomicU64; NUM_HISTS] = [const { AtomicU64::new(0) }; NUM_HISTS];
+static HIST_BUCKET: [AtomicU64; NUM_HISTS * HIST_BUCKETS] =
+    [const { AtomicU64::new(0) }; NUM_HISTS * HIST_BUCKETS];
+
+/// Registry birth: trace timestamps and snapshot uptime are relative to
+/// this (monotonic, process-local — wall clocks are someone else's job).
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+static TRACES: Lazy<Mutex<VecDeque<TraceEvent>>> =
+    Lazy::new(|| Mutex::new(VecDeque::with_capacity(TRACE_CAP)));
+
+// ---------------------------------------------------------------------------
+// Hot-path API (lock-free, relaxed atomics)
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn inc(c: Counter) {
+    add(c, 1);
+}
+
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    COUNTERS[c as usize].fetch_add(n, Ordering::Relaxed);
+}
+
+pub fn counter_value(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+#[inline]
+pub fn gauge_add(g: Gauge, delta: i64) {
+    GAUGES[g as usize].fetch_add(delta, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn gauge_set(g: Gauge, v: i64) {
+    GAUGES[g as usize].store(v, Ordering::Relaxed);
+}
+
+pub fn gauge_value(g: Gauge) -> i64 {
+    GAUGES[g as usize].load(Ordering::Relaxed)
+}
+
+/// Which bucket `v` lands in: 0 for 0, else `floor(log2 v) + 1`, capped.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Lower bound of bucket `b` (inclusive).
+pub fn bucket_floor(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        1u64 << (b - 1)
+    }
+}
+
+/// Record one observation (latency in ns, or a plain count).
+#[inline]
+pub fn observe(h: Hist, v: u64) {
+    let i = h as usize;
+    HIST_COUNT[i].fetch_add(1, Ordering::Relaxed);
+    HIST_SUM[i].fetch_add(v, Ordering::Relaxed);
+    HIST_BUCKET[i * HIST_BUCKETS + bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record the ns elapsed since `t0` (the common latency-hook shape).
+#[inline]
+pub fn observe_since(h: Hist, t0: Instant) {
+    observe(h, t0.elapsed().as_nanos().min(u64::MAX as u128) as u64);
+}
+
+/// `(count, sum)` of a histogram — delta-based test/bench assertions.
+pub fn hist_stats(h: Hist) -> (u64, u64) {
+    let i = h as usize;
+    (HIST_COUNT[i].load(Ordering::Relaxed), HIST_SUM[i].load(Ordering::Relaxed))
+}
+
+/// Append a structural trace event (RARE paths only — takes a mutex).
+pub fn trace(kind: &'static str, detail: impl Into<String>) {
+    let ev = TraceEvent {
+        at_ms: START.elapsed().as_millis().min(u64::MAX as u128) as u64,
+        kind: kind.to_string(),
+        detail: detail.into(),
+    };
+    let mut ring = TRACES.lock().unwrap();
+    if ring.len() == TRACE_CAP {
+        ring.pop_front();
+    }
+    ring.push_back(ev);
+}
+
+/// Zero every counter/gauge/histogram and clear the trace ring. For
+/// single-threaded bench/test harness setup only — concurrent writers
+/// racing a reset see no tearing (each cell is atomic) but deltas across
+/// it are meaningless.
+pub fn reset() {
+    for c in &COUNTERS {
+        c.store(0, Ordering::Relaxed);
+    }
+    for g in &GAUGES {
+        g.store(0, Ordering::Relaxed);
+    }
+    for h in HIST_COUNT.iter().chain(HIST_SUM.iter()).chain(HIST_BUCKET.iter()) {
+        h.store(0, Ordering::Relaxed);
+    }
+    TRACES.lock().unwrap().clear();
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot
+// ---------------------------------------------------------------------------
+
+/// One queue's live state at snapshot time. Filled by the metrics op
+/// handler from the broker (the registry holds no per-queue state — a
+/// dynamic-keyed hot-path map would need a lock the overhead contract
+/// forbids).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueueMetrics {
+    pub name: String,
+    pub published: u64,
+    pub delivered: u64,
+    pub acked: u64,
+    pub nacked: u64,
+    pub redelivered: u64,
+    /// Ready depth.
+    pub ready: u64,
+    /// In-flight (delivered, unACKed).
+    pub unacked: u64,
+    /// Parked consumer waiter registrations.
+    pub waiters: u64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub name: String,
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (bucket lower bound at the cumulative cut).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let cut = (self.count as f64 * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (b, n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= cut {
+                return bucket_floor(b);
+            }
+        }
+        bucket_floor(self.buckets.len().saturating_sub(1))
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Milliseconds since registry start (process-local monotonic).
+    pub at_ms: u64,
+    pub kind: String,
+    pub detail: String,
+}
+
+/// Everything `Op::Metrics` returns. Decoded schema-independently: names
+/// ride the wire, so old clients render new servers' metrics verbatim.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub uptime_ms: u64,
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub hists: Vec<HistSnapshot>,
+    pub queues: Vec<QueueMetrics>,
+    pub events: Vec<TraceEvent>,
+}
+
+impl MetricsSnapshot {
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<i64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+
+    pub fn queue(&self, name: &str) -> Option<&QueueMetrics> {
+        self.queues.iter().find(|q| q.name == name)
+    }
+
+    /// Total parked consumer waiters across queues (satellite-2 gauge:
+    /// must return to zero after abrupt client disconnects).
+    pub fn total_queue_waiters(&self) -> u64 {
+        self.queues.iter().map(|q| q.waiters).sum()
+    }
+
+    /// Human table for `jsdoop metrics`.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("uptime: {:.1}s\n", self.uptime_ms as f64 / 1000.0));
+        out.push_str("-- counters --\n");
+        for (name, v) in &self.counters {
+            if *v != 0 {
+                out.push_str(&format!("  {name:<32} {v}\n"));
+            }
+        }
+        out.push_str("-- gauges --\n");
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("  {name:<32} {v}\n"));
+        }
+        out.push_str("-- histograms (count / mean / ~p50 / ~p99) --\n");
+        for h in &self.hists {
+            if h.count == 0 {
+                continue;
+            }
+            let ns = h.name.ends_with("_ns");
+            out.push_str(&format!(
+                "  {:<32} {:>8}  {}  {}  {}\n",
+                h.name,
+                h.count,
+                fmt_val(h.mean() as u64, ns),
+                fmt_val(h.quantile(0.50), ns),
+                fmt_val(h.quantile(0.99), ns),
+            ));
+        }
+        out.push_str("-- queues (ready / unacked / waiters | pub / deliv / ack / nack / redeliv) --\n");
+        for q in &self.queues {
+            out.push_str(&format!(
+                "  {:<24} {:>6} {:>6} {:>4} | {} / {} / {} / {} / {}\n",
+                q.name,
+                q.ready,
+                q.unacked,
+                q.waiters,
+                q.published,
+                q.delivered,
+                q.acked,
+                q.nacked,
+                q.redelivered,
+            ));
+        }
+        if !self.events.is_empty() {
+            out.push_str("-- recent events --\n");
+            for e in &self.events {
+                out.push_str(&format!(
+                    "  +{:.1}s {} {}\n",
+                    e.at_ms as f64 / 1000.0,
+                    e.kind,
+                    e.detail
+                ));
+            }
+        }
+        out
+    }
+
+    /// One JSON object per call (the `--metrics_every=N` stream format).
+    /// Hand-rolled — the dependency budget has no serde.
+    pub fn to_json_line(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push_str(&format!("{{\"uptime_ms\":{}", self.uptime_ms));
+        s.push_str(",\"counters\":{");
+        for (i, (name, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("{}:{v}", json_str(name)));
+        }
+        s.push_str("},\"gauges\":{");
+        for (i, (name, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("{}:{v}", json_str(name)));
+        }
+        s.push_str("},\"hists\":{");
+        for (i, h) in self.hists.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{}:{{\"count\":{},\"sum\":{},\"p50\":{},\"p99\":{}}}",
+                json_str(&h.name),
+                h.count,
+                h.sum,
+                h.quantile(0.50),
+                h.quantile(0.99),
+            ));
+        }
+        s.push_str("},\"queues\":{");
+        for (i, q) in self.queues.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{}:{{\"ready\":{},\"unacked\":{},\"waiters\":{},\"published\":{},\
+                 \"delivered\":{},\"acked\":{},\"nacked\":{},\"redelivered\":{}}}",
+                json_str(&q.name),
+                q.ready,
+                q.unacked,
+                q.waiters,
+                q.published,
+                q.delivered,
+                q.acked,
+                q.nacked,
+                q.redelivered,
+            ));
+        }
+        s.push_str("}}");
+        s
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn fmt_val(v: u64, ns: bool) -> String {
+    if !ns {
+        return format!("{v:>9}");
+    }
+    if v >= 1_000_000_000 {
+        format!("{:>8.2}s", v as f64 / 1e9)
+    } else if v >= 1_000_000 {
+        format!("{:>7.2}ms", v as f64 / 1e6)
+    } else if v >= 1_000 {
+        format!("{:>7.2}us", v as f64 / 1e3)
+    } else {
+        format!("{v:>7}ns")
+    }
+}
+
+/// Fold the registry plus caller-supplied per-queue rows into a snapshot.
+pub fn snapshot(queues: Vec<QueueMetrics>) -> MetricsSnapshot {
+    let counters = COUNTER_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (n.to_string(), COUNTERS[i].load(Ordering::Relaxed)))
+        .collect();
+    let gauges = GAUGE_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (n.to_string(), GAUGES[i].load(Ordering::Relaxed)))
+        .collect();
+    let hists = HIST_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, n)| HistSnapshot {
+            name: n.to_string(),
+            count: HIST_COUNT[i].load(Ordering::Relaxed),
+            sum: HIST_SUM[i].load(Ordering::Relaxed),
+            buckets: (0..HIST_BUCKETS)
+                .map(|b| HIST_BUCKET[i * HIST_BUCKETS + b].load(Ordering::Relaxed))
+                .collect(),
+        })
+        .collect();
+    let events = TRACES.lock().unwrap().iter().cloned().collect();
+    MetricsSnapshot {
+        uptime_ms: START.elapsed().as_millis().min(u64::MAX as u128) as u64,
+        counters,
+        gauges,
+        hists,
+        queues,
+        events,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire codec (versioned; BodyReader-audited)
+// ---------------------------------------------------------------------------
+
+/// Snapshot frame magic — `u32::MAX` marks a versioned header, like the
+/// broker snapshot codec.
+const MET_MAGIC: u32 = u32::MAX;
+/// Current codec version; decode rejects versions from the future.
+const MET_VERSION: u32 = 1;
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Encode for the `Op::Metrics` response body.
+/// Format: `[magic u32 = MAX][version u32][uptime_ms u64]`
+/// then four counted sections (`[n u32]` + per-item fields):
+/// counters `[name str][v u64]`, gauges `[name str][v i64]`, histograms
+/// `[name str][count u64][sum u64][nb u32][bucket u64]*`, queues
+/// `[name str][8 x u64]`, events `[at_ms u64][kind str][detail str]`.
+pub fn encode(snap: &MetricsSnapshot) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4096);
+    out.extend_from_slice(&MET_MAGIC.to_le_bytes());
+    out.extend_from_slice(&MET_VERSION.to_le_bytes());
+    put_u64(&mut out, snap.uptime_ms);
+    put_u32(&mut out, snap.counters.len() as u32);
+    for (name, v) in &snap.counters {
+        put_str(&mut out, name);
+        put_u64(&mut out, *v);
+    }
+    put_u32(&mut out, snap.gauges.len() as u32);
+    for (name, v) in &snap.gauges {
+        put_str(&mut out, name);
+        put_u64(&mut out, *v as u64);
+    }
+    put_u32(&mut out, snap.hists.len() as u32);
+    for h in &snap.hists {
+        put_str(&mut out, &h.name);
+        put_u64(&mut out, h.count);
+        put_u64(&mut out, h.sum);
+        put_u32(&mut out, h.buckets.len() as u32);
+        for b in &h.buckets {
+            put_u64(&mut out, *b);
+        }
+    }
+    put_u32(&mut out, snap.queues.len() as u32);
+    for q in &snap.queues {
+        put_str(&mut out, &q.name);
+        for v in [
+            q.published,
+            q.delivered,
+            q.acked,
+            q.nacked,
+            q.redelivered,
+            q.ready,
+            q.unacked,
+            q.waiters,
+        ] {
+            put_u64(&mut out, v);
+        }
+    }
+    put_u32(&mut out, snap.events.len() as u32);
+    for e in &snap.events {
+        put_u64(&mut out, e.at_ms);
+        put_str(&mut out, &e.kind);
+        put_str(&mut out, &e.detail);
+    }
+    out
+}
+
+/// Bound a claimed item count against the input size (division form —
+/// `n * per_item` wraps usize on 32-bit targets; see the PR-3 audit).
+fn check_count(n: usize, total: usize, per_item: usize, what: &str) -> Result<()> {
+    if n > total / per_item {
+        bail!("metrics snapshot {what} count {n} exceeds frame size");
+    }
+    Ok(())
+}
+
+/// Decode an `Op::Metrics` response body.
+pub fn decode(bytes: &[u8]) -> Result<MetricsSnapshot> {
+    let total = bytes.len();
+    let mut r = BodyReader::new(bytes);
+    let magic = r.u32().context("metrics snapshot truncated")?;
+    if magic != MET_MAGIC {
+        bail!("bad metrics snapshot magic {magic:#x}");
+    }
+    let version = r.u32()?;
+    if version == 0 || version > MET_VERSION {
+        bail!("metrics snapshot version {version} is newer than this binary (max {MET_VERSION})");
+    }
+    let uptime_ms = r.u64()?;
+
+    let n = r.u32()? as usize;
+    check_count(n, total, 2 + 8, "counter")?;
+    let mut counters = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = r.str().context("metrics counter truncated")?.to_string();
+        counters.push((name, r.u64()?));
+    }
+
+    let n = r.u32()? as usize;
+    check_count(n, total, 2 + 8, "gauge")?;
+    let mut gauges = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = r.str().context("metrics gauge truncated")?.to_string();
+        gauges.push((name, r.u64()? as i64));
+    }
+
+    let n = r.u32()? as usize;
+    check_count(n, total, 2 + 8 + 8 + 4, "histogram")?;
+    let mut hists = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = r.str().context("metrics histogram truncated")?.to_string();
+        let count = r.u64()?;
+        let sum = r.u64()?;
+        let nb = r.u32()? as usize;
+        check_count(nb, total, 8, "bucket")?;
+        let mut buckets = Vec::with_capacity(nb);
+        for _ in 0..nb {
+            buckets.push(r.u64()?);
+        }
+        hists.push(HistSnapshot { name, count, sum, buckets });
+    }
+
+    let n = r.u32()? as usize;
+    check_count(n, total, 2 + 8 * 8, "queue")?;
+    let mut queues = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = r.str().context("metrics queue truncated")?.to_string();
+        queues.push(QueueMetrics {
+            name,
+            published: r.u64()?,
+            delivered: r.u64()?,
+            acked: r.u64()?,
+            nacked: r.u64()?,
+            redelivered: r.u64()?,
+            ready: r.u64()?,
+            unacked: r.u64()?,
+            waiters: r.u64()?,
+        });
+    }
+
+    let n = r.u32()? as usize;
+    check_count(n, total, 8 + 2 + 2, "event")?;
+    let mut events = Vec::with_capacity(n);
+    for _ in 0..n {
+        let at_ms = r.u64()?;
+        let kind = r.str().context("metrics event truncated")?.to_string();
+        let detail = r.str().context("metrics event truncated")?.to_string();
+        events.push(TraceEvent { at_ms, kind, detail });
+    }
+
+    if !r.rest().is_empty() {
+        bail!("metrics snapshot has trailing bytes");
+    }
+    Ok(MetricsSnapshot { uptime_ms, counters, gauges, hists, queues, events })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(7), 3);
+        assert_eq!(bucket_of(8), 4);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        // The last bucket absorbs everything above its floor.
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_of(1u64 << 62), HIST_BUCKETS - 1);
+        // Floors invert bucket_of at the boundary.
+        for b in 1..HIST_BUCKETS - 1 {
+            let lo = bucket_floor(b);
+            assert_eq!(bucket_of(lo), b, "floor of bucket {b}");
+            assert_eq!(bucket_of(lo * 2 - 1), b, "ceiling of bucket {b}");
+        }
+    }
+
+    #[test]
+    fn concurrent_increments_are_conserved() {
+        // The registry is process-global and other tests may touch other
+        // cells concurrently, so assert a DELTA on cells only this test
+        // uses with this magnitude.
+        const THREADS: usize = 8;
+        const PER: u64 = 10_000;
+        let c0 = counter_value(Counter::AgentStaleSwaps);
+        let (h0_count, h0_sum) = hist_stats(Hist::AgentReduceServiceNs);
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    for i in 0..PER {
+                        inc(Counter::AgentStaleSwaps);
+                        observe(Hist::AgentReduceServiceNs, i % 7);
+                        gauge_add(Gauge::ReplBytesBehind, 1);
+                        gauge_add(Gauge::ReplBytesBehind, -1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let n = THREADS as u64 * PER;
+        assert_eq!(counter_value(Counter::AgentStaleSwaps) - c0, n);
+        let (h1_count, h1_sum) = hist_stats(Hist::AgentReduceServiceNs);
+        assert_eq!(h1_count - h0_count, n);
+        // sum of (i % 7) over 0..10_000 per thread.
+        let per_thread: u64 = (0..PER).map(|i| i % 7).sum();
+        assert_eq!(h1_sum - h0_sum, THREADS as u64 * per_thread);
+    }
+
+    #[test]
+    fn snapshot_codec_round_trips() {
+        observe(Hist::WalFsyncNs, 1500);
+        inc(Counter::WalSyncs);
+        trace("test.event", "hello \"world\"\n");
+        let queues = vec![QueueMetrics {
+            name: "tasks.q".into(),
+            published: 10,
+            delivered: 8,
+            acked: 5,
+            nacked: 1,
+            redelivered: 2,
+            ready: 4,
+            unacked: 3,
+            waiters: 2,
+        }];
+        let snap = snapshot(queues);
+        let bytes = encode(&snap);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(snap, back);
+        assert!(back.counter("wal.syncs").unwrap() >= 1);
+        assert_eq!(back.queue("tasks.q").unwrap().ready, 4);
+        assert_eq!(back.total_queue_waiters(), 2);
+        assert!(back.hist("wal.fsync_ns").unwrap().count >= 1);
+        // Renderers don't panic and carry the load-bearing names.
+        assert!(back.render_table().contains("tasks.q"));
+        let json = back.to_json_line();
+        assert!(json.contains("\"tasks.q\""));
+        assert!(json.starts_with('{') && json.ends_with('}'));
+    }
+
+    #[test]
+    fn decode_rejects_adversarial_lengths() {
+        // Truncations at every prefix must error, never panic.
+        let snap = snapshot(vec![QueueMetrics {
+            name: "q".into(),
+            published: 1,
+            delivered: 1,
+            acked: 1,
+            nacked: 0,
+            redelivered: 0,
+            ready: 0,
+            unacked: 0,
+            waiters: 0,
+        }]);
+        let good = encode(&snap);
+        for cut in 0..good.len().min(64) {
+            assert!(decode(&good[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        assert!(decode(&good[..good.len() - 1]).is_err());
+        // Trailing garbage is rejected.
+        let mut long = good.clone();
+        long.push(0);
+        assert!(decode(&long).is_err());
+        // A hostile count claiming more items than the frame could hold
+        // must be rejected BEFORE allocation (division form: a count near
+        // u32::MAX would overflow `n * per_item` on 32-bit).
+        let mut hostile = Vec::new();
+        hostile.extend_from_slice(&MET_MAGIC.to_le_bytes());
+        hostile.extend_from_slice(&MET_VERSION.to_le_bytes());
+        hostile.extend_from_slice(&0u64.to_le_bytes());
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes()); // counter count
+        let err = decode(&hostile).unwrap_err().to_string();
+        assert!(err.contains("exceeds frame size"), "unexpected: {err}");
+        // Future versions are rejected loudly.
+        let mut future = good.clone();
+        future[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let err = decode(&future).unwrap_err().to_string();
+        assert!(err.contains("newer"), "unexpected: {err}");
+        // Bad magic (a legacy/foreign frame) is rejected.
+        let mut bad = good;
+        bad[0..4].copy_from_slice(&7u32.to_le_bytes());
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn quantiles_walk_buckets() {
+        let h = HistSnapshot {
+            name: "t".into(),
+            count: 100,
+            sum: 0,
+            buckets: {
+                let mut b = vec![0u64; HIST_BUCKETS];
+                b[5] = 60; // [16, 32)
+                b[10] = 40; // [512, 1024)
+                b
+            },
+        };
+        assert_eq!(h.quantile(0.5), bucket_floor(5));
+        assert_eq!(h.quantile(0.99), bucket_floor(10));
+        let empty = HistSnapshot { name: "e".into(), count: 0, sum: 0, buckets: vec![] };
+        assert_eq!(empty.quantile(0.5), 0);
+        assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn trace_ring_is_bounded() {
+        for i in 0..TRACE_CAP + 10 {
+            trace("ring.test", format!("ev{i}"));
+        }
+        let snap = snapshot(Vec::new());
+        assert!(snap.events.len() <= TRACE_CAP);
+        // The newest event survived; the oldest were dropped.
+        assert!(snap.events.iter().any(|e| e.detail == format!("ev{}", TRACE_CAP + 9)));
+    }
+}

@@ -42,6 +42,7 @@ use anyhow::{bail, Context, Result};
 
 use super::wire::BodyReader;
 use super::{Delivery, QueueApi, QueueStats, ReadyWaker, DEFAULT_PRIORITY};
+use crate::obs;
 
 /// Durable identity of a message: (priority, seq). Seqs come from a
 /// process-wide counter (bumped above any recovered seq on restore), so an
@@ -147,6 +148,9 @@ impl Broker {
     }
 
     fn wake_all(waiters: Vec<Arc<dyn ReadyWaker>>) {
+        if !waiters.is_empty() {
+            obs::add(obs::Counter::BrokerWaiterFires, waiters.len() as u64);
+        }
         for w in waiters {
             w.wake();
         }
@@ -255,6 +259,35 @@ impl Broker {
         map.values().map(|e| e.state.lock().unwrap().ready.len()).sum()
     }
 
+    /// Per-queue rows for the `Op::Metrics` snapshot: counters plus live
+    /// depth / inflight / waiter state, sorted by name. Snapshot-time
+    /// only — locks queues one at a time, never on the hot path.
+    pub fn metrics_queues(&self) -> Vec<obs::QueueMetrics> {
+        let entries: Vec<(String, Arc<QueueEntry>)> = {
+            let map = self.queues.read().unwrap();
+            map.iter().map(|(n, e)| (n.clone(), e.clone())).collect()
+        };
+        let mut rows: Vec<obs::QueueMetrics> = entries
+            .into_iter()
+            .map(|(name, e)| {
+                let st = e.state.lock().unwrap();
+                obs::QueueMetrics {
+                    name,
+                    published: st.stats.published,
+                    delivered: st.stats.delivered,
+                    acked: st.stats.acked,
+                    nacked: st.stats.nacked,
+                    redelivered: st.stats.redelivered,
+                    ready: st.ready.len() as u64,
+                    unacked: st.unacked.len() as u64,
+                    waiters: st.waiters.0.len() as u64,
+                }
+            })
+            .collect();
+        rows.sort_by(|a, b| a.name.cmp(&b.name));
+        rows
+    }
+
     // --- identity-returning variants (durability layer) -------------------
     //
     // Same semantics as the QueueApi entry points, but they report the
@@ -319,6 +352,7 @@ impl Broker {
         st.ready.clear();
         st.unacked.clear();
         st.epoch += 1;
+        obs::inc(obs::Counter::BrokerPurges);
         Ok(st.epoch)
     }
 

@@ -135,6 +135,14 @@ impl RemoteQueue {
         self.conn.expect_ok(Op::Shutdown, &[])?;
         Ok(())
     }
+
+    /// Live introspection: fetch and decode the server's [`crate::obs`]
+    /// snapshot (counters, gauges, latency histograms, per-queue stats,
+    /// recent trace events). Powers `jsdoop metrics`.
+    pub fn metrics(&self) -> Result<crate::obs::MetricsSnapshot> {
+        let resp = self.conn.expect_ok(Op::Metrics, &[])?;
+        crate::obs::decode(&resp)
+    }
 }
 
 impl QueueApi for RemoteQueue {

@@ -74,13 +74,14 @@ use std::collections::{BTreeMap, HashMap, HashSet};
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::sync::{Condvar, Mutex, MutexGuard};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use self::wal::{read_wal, Record, WalWriter};
 use super::broker::{decode_snapshot, Broker, MsgId, SnapshotContents};
 use super::{Delivery, QueueApi, QueueService, QueueStats, DEFAULT_PRIORITY};
+use crate::obs;
 
 /// When WAL records reach the disk.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -572,6 +573,8 @@ impl DurableBroker {
                 // poisoning there too is the conservative choice; a
                 // retried compact() can still succeed and heal.)
                 w.poisoned = true;
+                obs::inc(obs::Counter::WalPoisons);
+                obs::trace("wal.poison", format!("segment rotation failed: {e:#}"));
                 self.synced.notify_all();
                 return Err(e);
             }
@@ -591,6 +594,9 @@ impl DurableBroker {
         w.gen = w.gen.wrapping_add(1);
         w.durable_bytes = w.writer.bytes_written; // fsynced preamble
         w.poisoned = false;
+        obs::inc(obs::Counter::WalRotations);
+        obs::gauge_set(obs::Gauge::WalUnsyncedRecords, 0);
+        obs::trace("wal.rotate", format!("fresh segment, gen {}", w.gen));
         self.synced.notify_all();
         Ok(())
     }
@@ -641,6 +647,7 @@ impl DurableBroker {
         // without the lock covers all of them.
         let fd = w.writer.sync_handle();
         drop(w);
+        let t0 = Instant::now();
         let sync_res = fd.sync_data();
         let mut w = self.wal.lock().unwrap();
         w.syncing = false;
@@ -650,12 +657,19 @@ impl DurableBroker {
             // would spuriously succeed. Poison the log so waiters (woken
             // below) and future committers fail instead of re-electing.
             w.poisoned = true;
+            obs::inc(obs::Counter::WalPoisons);
+            obs::trace("wal.poison", "fsync failed; log poisoned until rotation");
         }
         self.synced.notify_all();
         sync_res.context("fsyncing WAL segment")?;
+        obs::observe_since(obs::Hist::WalFsyncNs, t0);
+        // Group-commit batch size: records this one fsync newly covered.
+        obs::observe(obs::Hist::WalSyncBatchRecords, cover.saturating_sub(w.durable));
         w.durable = w.durable.max(cover);
         w.durable_bytes = w.durable_bytes.max(cover_bytes);
         w.syncs += 1;
+        obs::inc(obs::Counter::WalSyncs);
+        obs::gauge_set(obs::Gauge::WalUnsyncedRecords, (w.appended - w.durable) as i64);
         Ok(w)
     }
 
@@ -676,6 +690,7 @@ impl DurableBroker {
         if w.poisoned {
             bail!("WAL poisoned by an earlier write/fsync failure; refusing new journaled operations (compact() to recover)");
         }
+        let t0 = Instant::now();
         if let Err(e) = append(&mut w.writer) {
             // Same durability class as a failed fsync: a partial write
             // can tear a record MID-segment (oversized bodies bypass the
@@ -683,9 +698,14 @@ impl DurableBroker {
             // every later record — including ones fsync confirmed after
             // the tear. Fail-stop until a rotation rebuilds the log.
             w.poisoned = true;
+            obs::inc(obs::Counter::WalPoisons);
+            obs::trace("wal.poison", format!("append failed: {e:#}"));
             return Err(e);
         }
+        obs::observe_since(obs::Hist::WalAppendNs, t0);
+        obs::inc(obs::Counter::WalAppends);
         w.appended += 1;
+        obs::gauge_set(obs::Gauge::WalUnsyncedRecords, (w.appended - w.durable) as i64);
         let my = w.appended;
         if w.writer.bytes_written >= self.opts.compact_after_bytes {
             // Compaction covers `my` (it is a durability point), so the
@@ -896,6 +916,10 @@ impl QueueService for DurableBroker {
 
     fn cancel_waiter(&self, queue: &str, id: u64) {
         self.inner.cancel_waiter(queue, id)
+    }
+
+    fn metrics_queues(&self) -> Vec<obs::QueueMetrics> {
+        self.inner.metrics_queues()
     }
 }
 

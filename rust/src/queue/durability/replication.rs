@@ -60,12 +60,13 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::wal::read_wal_strict;
 use super::{sync_dir, DurableBroker, ReplStatus, ReplayState};
+use crate::obs;
 use crate::queue::broker::decode_snapshot;
 use crate::queue::client::ReplicaClient;
 use crate::queue::{Delivery, QueueApi, QueueService, QueueStats};
@@ -252,7 +253,33 @@ impl Default for ReplicaBroker {
     }
 }
 
-impl QueueService for ReplicaBroker {}
+impl QueueService for ReplicaBroker {
+    /// Mirrored queues expose their live depth (ready = survivors); the
+    /// lifecycle counters are not part of replicated state and read zero,
+    /// exactly like [`ReplicaBroker::stats`].
+    fn metrics_queues(&self) -> Vec<obs::QueueMetrics> {
+        let state = self.state.lock().unwrap();
+        let mut names = state.queue_names();
+        names.sort();
+        names
+            .into_iter()
+            .map(|name| {
+                let ready = state.queue_len(&name).unwrap_or(0) as u64;
+                obs::QueueMetrics {
+                    name,
+                    published: 0,
+                    delivered: 0,
+                    acked: 0,
+                    nacked: 0,
+                    redelivered: 0,
+                    ready,
+                    unacked: 0,
+                    waiters: 0,
+                }
+            })
+            .collect()
+    }
+}
 
 /// The deterministic follower state machine: baseline + pull/persist/
 /// apply steps against any [`ReplSource`]. [`start_follower`] drives it
@@ -350,6 +377,12 @@ impl FollowerCore {
         self.wal = Some(f);
         self.offset = 0;
         self.gen = Some(gen);
+        obs::inc(obs::Counter::ReplRebaselines);
+        obs::gauge_set(obs::Gauge::ReplBytesBehind, status.durable_bytes as i64);
+        obs::trace(
+            "repl.baseline",
+            format!("gen {gen}, {} durable bytes at primary", status.durable_bytes),
+        );
         Ok(())
     }
 
@@ -363,7 +396,10 @@ impl FollowerCore {
             self.baseline(src)?;
         }
         let gen = self.gen.expect("baselined above");
+        let t0 = Instant::now();
         let (status, bytes) = src.pull(gen, self.offset, self.chunk)?;
+        obs::observe_since(obs::Hist::ReplPullNs, t0);
+        obs::inc(obs::Counter::ReplPulls);
         if status.gen != gen {
             // Rotation (or primary restart): the old byte space is gone,
             // the snapshot we are about to fetch covers all of it.
@@ -375,6 +411,10 @@ impl FollowerCore {
             lag.primary_durable_bytes = status.durable_bytes;
             lag.primary_appended_bytes = status.appended_bytes;
         }
+        obs::gauge_set(
+            obs::Gauge::ReplBytesBehind,
+            status.durable_bytes.saturating_sub(self.offset) as i64,
+        );
         if bytes.is_empty() {
             return Ok(0);
         }
@@ -400,6 +440,10 @@ impl FollowerCore {
             lag.offset = self.offset;
             lag.chunks_applied += 1;
         }
+        obs::gauge_set(
+            obs::Gauge::ReplBytesBehind,
+            status.durable_bytes.saturating_sub(self.offset) as i64,
+        );
         Ok(bytes.len() as u64)
     }
 }

@@ -105,8 +105,27 @@
 //! one-shot and may be spurious, and every notify site in the broker
 //! (publish, nack, requeue sweep, purge…) fires them alongside its
 //! `Condvar` broadcast so in-process and remote waiters stay equivalent.
+//!
+//! Two lifecycle rules keep a churny volunteer fleet from leaking server
+//! state:
+//!
+//! - **Dead waiters are cancelled eagerly.** When a parked consumer's
+//!   connection dies (POLLHUP / read error), the event loop tears the
+//!   connection down immediately and cancels its broker/store waiter
+//!   registration — a vanished volunteer stops counting against
+//!   `max_connections` and its waiter entry right away, instead of
+//!   lingering until the park deadline would have expired.
+//! - **Idle connections are reaped.** With `--idle_timeout=N`, a
+//!   connection with no frame activity for N seconds is closed by the
+//!   same lazily-invalidated timer heap that drives park deadlines
+//!   (counted in the `server.conns_reaped` metric) — so a slow-loris
+//!   peer, or a browser tab that silently went away, cannot hold a file
+//!   descriptor forever. Parked consumers are exempt: waiting for work
+//!   is their job, and their park deadline already bounds them.
+//!
 //! Connection lifecycle, write backpressure, and shutdown-drain rules
-//! are documented at the top of [`server`].
+//! are documented at the top of [`server`]; live counters for all of the
+//! above are served by `Op::Metrics` (see [`crate::obs`]).
 
 pub mod broker;
 pub mod client;
@@ -195,6 +214,14 @@ pub trait QueueService: QueueApi {
     fn cancel_waiter(&self, queue: &str, id: u64) {
         let _ = (queue, id);
     }
+
+    /// Per-queue live rows for the `Op::Metrics` snapshot: counters plus
+    /// current depth/inflight/waiter state. Computed at snapshot time —
+    /// the hot path never touches a per-queue metrics map. The default
+    /// (no queues) suits backends with nothing to report.
+    fn metrics_queues(&self) -> Vec<crate::obs::QueueMetrics> {
+        Vec::new()
+    }
 }
 
 impl QueueService for broker::Broker {
@@ -208,6 +235,10 @@ impl QueueService for broker::Broker {
 
     fn cancel_waiter(&self, queue: &str, id: u64) {
         broker::Broker::cancel_waiter(self, queue, id)
+    }
+
+    fn metrics_queues(&self) -> Vec<crate::obs::QueueMetrics> {
+        broker::Broker::metrics_queues(self)
     }
 }
 

@@ -31,6 +31,21 @@
 //!   slow reader backpressures itself to one buffered response (bounded
 //!   memory per connection).
 //!
+//! Two lifecycle guards keep the connection table honest at volunteer
+//! scale: parked sockets stay in the poll set for `POLLIN`, so a consumer
+//! that dies mid-wait is torn down — and its broker/store waiter
+//! registration cancelled — the moment the kernel reports the hangup
+//! rather than at park-deadline expiry; and
+//! [`ServerOptions::idle_timeout`] rides the (lazily invalidated) timer
+//! heap to reap connections with no frame activity, counted in
+//! `server.conns_reaped`. Parked consumers are exempt from reaping: a
+//! blocked Consume **is** activity.
+//!
+//! Every layer of the loop feeds the process-wide [`crate::obs`]
+//! registry (per-op queue-wait/execute latency, poll round duration,
+//! live/parked connection gauges, read-budget and backpressure
+//! counters), served live by `Op::Metrics`.
+//!
 //! A background sweeper still requeues expired unACKed deliveries every
 //! 100 ms; its requeues fire the queue wakers, so parked consumers keep
 //! their at-most-100 ms-late redelivery semantics.
@@ -51,6 +66,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::data::{DataApi, Store};
+use crate::obs;
 use crate::queue::wire::{
     put_bytes, put_str, put_u32, read_frame, write_frame, BodyReader, Op, MAX_FRAME, ST_ERR,
     ST_NONE, ST_OK,
@@ -143,6 +159,10 @@ pub struct ServerOptions {
     /// Shutdown bound-wait: how long the event loop waits for in-flight
     /// ops to finish and response buffers to flush before closing.
     pub drain_wait: Duration,
+    /// Reap connections with no frame activity for this long (`None` =
+    /// never). Parked consumers are exempt — a blocked Consume is
+    /// activity — so only half-open or abandoned sockets are collected.
+    pub idle_timeout: Option<Duration>,
 }
 
 impl Default for ServerOptions {
@@ -151,6 +171,7 @@ impl Default for ServerOptions {
             workers: 0,
             max_connections: 16_384,
             drain_wait: Duration::from_secs(5),
+            idle_timeout: None,
         }
     }
 }
@@ -290,6 +311,7 @@ pub fn serve_with(
         opts,
         conns: HashMap::new(),
         timers: BinaryHeap::new(),
+        idle_timers: BinaryHeap::new(),
         next_id: 0,
         accept_backoff_until: None,
         draining_since: None,
@@ -450,6 +472,9 @@ struct Work {
     /// park/retry cycles so a retry never extends the client's timeout.
     deadline: Option<Instant>,
     waker: Arc<ConnWaker>,
+    /// When this item entered the work channel — the worker's pickup
+    /// delta is the `server.op_queue_wait_ns` histogram (pool saturation).
+    enqueued: Instant,
 }
 
 #[cfg(unix)]
@@ -504,6 +529,9 @@ struct Conn {
     wake_pending: bool,
     close_after_write: bool,
     waker: Arc<ConnWaker>,
+    /// Last observed frame activity (readiness, dispatch, or response
+    /// flush) — the idle-reaper's clock.
+    last_activity: Instant,
 }
 
 #[cfg(unix)]
@@ -523,7 +551,11 @@ impl Conn {
             match self.stream.write(&self.out[self.out_pos..]) {
                 Ok(0) => return false,
                 Ok(n) => self.out_pos += n,
-                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    // Slow reader: the response waits for POLLOUT.
+                    obs::inc(obs::Counter::ServerBackpressureStalls);
+                    return true;
+                }
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
                 Err(_) => return false,
             }
@@ -559,6 +591,10 @@ struct EventLoop {
     /// Park deadlines (min-heap, lazily invalidated: a connection may
     /// respond and re-park before an old entry pops).
     timers: BinaryHeap<Reverse<(Instant, u64)>>,
+    /// Idle-reap checkpoints (same lazy-invalidation discipline: the
+    /// entry fires, `last_activity` decides, and a live connection is
+    /// simply re-armed at its true due time).
+    idle_timers: BinaryHeap<Reverse<(Instant, u64)>>,
     next_id: u64,
     accept_backoff_until: Option<Instant>,
     draining_since: Option<Instant>,
@@ -622,6 +658,7 @@ impl EventLoop {
         let Phase::Parked(p) = std::mem::replace(&mut conn.phase, Phase::Executing) else {
             unreachable!()
         };
+        obs::gauge_add(obs::Gauge::ServerConnsParked, -1);
         conn.wake_pending = false;
         let work = Work {
             conn: id,
@@ -629,6 +666,7 @@ impl EventLoop {
             body: p.body,
             deadline: Some(forced_deadline.unwrap_or(p.deadline)),
             waker: conn.waker.clone(),
+            enqueued: Instant::now(),
         };
         // Drop the previous attempt's registration; the retry re-registers
         // if it parks again. (Wakes already consumed it in the common
@@ -646,6 +684,7 @@ impl EventLoop {
                 match done.verdict {
                     Verdict::Respond(frame) => {
                         conn.phase = Phase::Reading;
+                        conn.last_activity = Instant::now();
                         conn.queue_response(frame);
                         let ok = conn.flush_output();
                         close = !ok || (conn.close_after_write && !conn.has_output());
@@ -665,9 +704,12 @@ impl EventLoop {
                                 body,
                                 deadline: Some(dl),
                                 waker: conn.waker.clone(),
+                                enqueued: Instant::now(),
                             };
                             let _ = self.work_tx.send(work);
                         } else {
+                            obs::inc(obs::Counter::ServerParks);
+                            obs::gauge_add(obs::Gauge::ServerConnsParked, 1);
                             self.timers.push(Reverse((deadline, done.conn)));
                             conn.phase = Phase::Parked(ParkedOp { op, body, deadline, site });
                         }
@@ -720,11 +762,49 @@ impl EventLoop {
                 self.resume_parked(id, Some(now));
             }
         }
+        self.reap_idle(now);
+    }
+
+    /// Idle-reap pass: pop due checkpoints; close a reading connection
+    /// whose `last_activity` really is `idle_timeout` old, lazily re-arm
+    /// everything else. Parked consumers (mid-op) and conns with buffered
+    /// output (making progress / backpressured) are never reaped.
+    fn reap_idle(&mut self, now: Instant) {
+        let Some(idle) = self.opts.idle_timeout else { return };
+        let mut reap = Vec::new();
+        while let Some(&Reverse((t, id))) = self.idle_timers.peek() {
+            if t > now {
+                break;
+            }
+            self.idle_timers.pop();
+            let Some(c) = self.conns.get(&id) else { continue };
+            let due = c.last_activity + idle;
+            let reapable = matches!(c.phase, Phase::Reading) && !c.has_output();
+            if reapable && due <= now {
+                reap.push(id);
+            } else if reapable {
+                // Activity since this entry was pushed: re-arm at the
+                // true due time.
+                self.idle_timers.push(Reverse((due, id)));
+            } else {
+                // Mid-op or flushing: not idle by definition. Check again
+                // a full period later.
+                self.idle_timers.push(Reverse((now + idle, id)));
+            }
+        }
+        for id in reap {
+            obs::inc(obs::Counter::ServerConnsReaped);
+            obs::trace("server.reap", format!("conn {id}: no frame activity for {idle:?}"));
+            self.close_conn(id);
+        }
     }
 
     fn poll_timeout(&self, now: Instant) -> Duration {
         let mut t = IDLE_POLL;
         if let Some(&Reverse((dl, _))) = self.timers.peek() {
+            t = t.min(dl.saturating_duration_since(now));
+        }
+        if let Some(&Reverse((dl, _))) = self.idle_timers.peek() {
             t = t.min(dl.saturating_duration_since(now));
         }
         if let Some(b) = self.accept_backoff_until {
@@ -765,6 +845,13 @@ impl EventLoop {
                 POLLOUT
             } else if matches!(c.phase, Phase::Reading) && !draining {
                 POLLIN
+            } else if matches!(c.phase, Phase::Parked(_)) {
+                // Watch parked consumers for hangup: the protocol is
+                // synchronous, so readiness while an op is parked means
+                // the peer died (EOF/RST) or broke protocol. Catching it
+                // here cancels the broker/store waiter immediately
+                // instead of leaking it until the park deadline expires.
+                POLLIN
             } else {
                 0
             };
@@ -779,6 +866,8 @@ impl EventLoop {
             std::thread::sleep(Duration::from_millis(5));
             return;
         }
+        // Round duration = dispatch work after the wait, not the sleep.
+        let round_start = Instant::now();
 
         if fds[0].revents != 0 {
             self.drain_pipe();
@@ -794,6 +883,7 @@ impl EventLoop {
                 self.handle_conn_event(id, re);
             }
         }
+        obs::observe_since(obs::Hist::ServerPollRoundNs, round_start);
     }
 
     fn drain_pipe(&mut self) {
@@ -821,6 +911,7 @@ impl EventLoop {
                     let _ = stream.set_nodelay(true);
                     let id = self.next_id;
                     self.next_id += 1;
+                    let now = Instant::now();
                     let waker = Arc::new(ConnWaker { conn: id, signal: self.signal.clone() });
                     self.conns.insert(
                         id,
@@ -833,8 +924,14 @@ impl EventLoop {
                             wake_pending: false,
                             close_after_write: false,
                             waker,
+                            last_activity: now,
                         },
                     );
+                    obs::inc(obs::Counter::ServerConnsAccepted);
+                    obs::gauge_add(obs::Gauge::ServerConnsLive, 1);
+                    if let Some(idle) = self.opts.idle_timeout {
+                        self.idle_timers.push(Reverse((now + idle, id)));
+                    }
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
@@ -850,6 +947,7 @@ impl EventLoop {
     fn handle_conn_event(&mut self, id: u64, revents: i16) {
         let next = {
             let Some(conn) = self.conns.get_mut(&id) else { return };
+            conn.last_activity = Instant::now();
             if conn.has_output() {
                 // Writable (or the error surfaces on write): keep flushing.
                 if revents & (POLLOUT | POLLERR | POLLHUP | POLLNVAL) != 0 {
@@ -866,9 +964,13 @@ impl EventLoop {
             } else if revents & POLLNVAL != 0 {
                 Next::Close
             } else if revents & (POLLIN | POLLHUP | POLLERR) != 0 {
-                // POLLHUP/POLLERR still go through read(): the peer may
-                // have sent a final request, and read() reports the error.
-                Self::read_next(conn)
+                if matches!(conn.phase, Phase::Parked(_)) {
+                    Self::parked_readable(id, conn)
+                } else {
+                    // POLLHUP/POLLERR still go through read(): the peer may
+                    // have sent a final request, and read() reports the error.
+                    Self::read_next(conn)
+                }
             } else {
                 Next::Keep
             }
@@ -881,10 +983,50 @@ impl EventLoop {
         }
     }
 
+    /// A parked connection's socket turned readable. The protocol is
+    /// synchronous — one request in flight, and this one is still parked —
+    /// so the only legal peer behavior is silence: EOF/RST means the
+    /// volunteer died, and actual bytes are a protocol violation. Either
+    /// way the connection is torn down NOW, which cancels its broker/store
+    /// waiter registration (via `close_conn`) instead of leaking it until
+    /// the park deadline expires.
+    fn parked_readable(id: u64, conn: &mut Conn) -> Next {
+        let mut probe = [0u8; 64];
+        match conn.stream.read(&mut probe) {
+            Ok(0) => {
+                obs::trace("server.dead_waiter", format!("conn {id}: peer hung up while parked"));
+                Next::Close
+            }
+            Ok(n) => {
+                obs::trace(
+                    "server.dead_waiter",
+                    format!("conn {id}: {n} bytes while an op was parked (protocol violation)"),
+                );
+                Next::Close
+            }
+            // Spurious wakeup (e.g. POLLERR that read() doesn't surface
+            // yet): leave the park in place.
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => Next::Keep,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => Next::Keep,
+            Err(_) => {
+                obs::trace("server.dead_waiter", format!("conn {id}: read error while parked"));
+                Next::Close
+            }
+        }
+    }
+
     /// Drive the frame assembler; at most one decoded frame per call (the
     /// protocol is synchronous — the next frame is read after responding).
     fn read_next(conn: &mut Conn) -> Next {
-        match conn.asm.poll_read(&mut conn.stream, READ_BUDGET) {
+        let mut counted = CountingReader { inner: &mut conn.stream, n: 0 };
+        let polled = conn.asm.poll_read(&mut counted, READ_BUDGET);
+        if counted.n >= READ_BUDGET {
+            // The frame outran this round's fairness budget; the rest
+            // arrives on later readiness. Worth counting: a sustained rate
+            // here means one firehose peer is rationed by the loop.
+            obs::inc(obs::Counter::ServerReadBudgetExhausted);
+        }
+        match polled {
             Ok(Some((op_byte, body))) => match Op::from_u8(op_byte) {
                 Ok(Op::Shutdown) => Next::Shutdown,
                 Ok(op) => Next::Dispatch(op, body),
@@ -909,7 +1051,15 @@ impl EventLoop {
         // A wake left over from the previous (already answered) op must
         // not count against this one.
         conn.wake_pending = false;
-        let work = Work { conn: id, op, body, deadline: None, waker: conn.waker.clone() };
+        obs::inc(obs::Counter::ServerOps);
+        let work = Work {
+            conn: id,
+            op,
+            body,
+            deadline: None,
+            waker: conn.waker.clone(),
+            enqueued: Instant::now(),
+        };
         let _ = self.work_tx.send(work);
     }
 
@@ -931,10 +1081,31 @@ impl EventLoop {
 
     fn close_conn(&mut self, id: u64) {
         if let Some(conn) = self.conns.remove(&id) {
+            obs::inc(obs::Counter::ServerConnsClosed);
+            obs::gauge_add(obs::Gauge::ServerConnsLive, -1);
             if let Phase::Parked(p) = &conn.phase {
+                obs::gauge_add(obs::Gauge::ServerConnsParked, -1);
                 cancel_site(&p.site, id, self.broker.as_ref(), &self.store);
             }
         }
+    }
+}
+
+/// Counts bytes flowing through [`FrameAssembler::poll_read`] so the
+/// caller can tell "stream ran dry" from "fairness budget exhausted" —
+/// the assembler reports both as `Ok(None)`.
+#[cfg(unix)]
+struct CountingReader<'a, R: Read> {
+    inner: &'a mut R,
+    n: usize,
+}
+
+#[cfg(unix)]
+impl<R: Read> Read for CountingReader<'_, R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.n += n;
+        Ok(n)
     }
 }
 
@@ -952,12 +1123,15 @@ fn worker_loop(
         let msg = { work_rx.lock().unwrap().recv() };
         let Ok(work) = msg else { return }; // server shut down
         let conn = work.conn;
+        obs::observe_since(obs::Hist::ServerOpQueueWaitNs, work.enqueued);
+        let exec_start = Instant::now();
         // A panicking op (poisoned lock, arithmetic bug) must not shrink
         // the pool: convert it to an in-band error response.
         let verdict = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             run_work(work, broker, store)
         }))
         .unwrap_or_else(|_| Verdict::Respond(frame_bytes(ST_ERR, b"internal server error")));
+        obs::observe_since(obs::Hist::ServerOpExecuteNs, exec_start);
         if done_tx.send(Done { conn, verdict }).is_err() {
             return;
         }
@@ -970,7 +1144,7 @@ fn worker_loop(
 /// re-check with a zero timeout, park on empty — the worker never sleeps.
 #[cfg(unix)]
 fn run_work(work: Work, broker: &dyn QueueService, store: &Store) -> Verdict {
-    let Work { conn, op, body, deadline, waker } = work;
+    let Work { conn, op, body, deadline, waker, .. } = work;
     let now = Instant::now();
     let (site, deadline, expired) = match blocking_site(op, &body) {
         Some((site, timeout)) => {
@@ -1287,6 +1461,14 @@ fn execute_op_with(
         Op::Incr => {
             let v = store.incr(r.str()?)?;
             (ST_OK, v.to_le_bytes().to_vec())
+        }
+        Op::Metrics => {
+            // Sampled gauges: values owned by other subsystems are read
+            // at snapshot time instead of being maintained on their hot
+            // paths (the snapshot is the rare path).
+            obs::gauge_set(obs::Gauge::StoreWaiters, store.waiter_count() as i64);
+            let snap = obs::snapshot(broker.metrics_queues());
+            (ST_OK, obs::encode(&snap))
         }
         // --- replication (queue/durability/replication) --------------------
         // All three answer from the WAL-backed broker behind this service;

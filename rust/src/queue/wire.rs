@@ -50,6 +50,10 @@ pub enum Op {
     // Admin
     Ping = 32,
     Shutdown = 33,
+    /// Live introspection: returns a versioned [`crate::obs`] snapshot
+    /// (counters, gauges, latency histograms, per-queue depth/waiter
+    /// rows, recent trace events). Empty request body.
+    Metrics = 34,
     // Replication (queue/durability/replication): a follower pulls the
     // primary's durable WAL bytes + snapshot baselines over the same
     // framing as everything else. `ReplPull` responses carry a
@@ -84,6 +88,7 @@ impl Op {
             22 => Op::Incr,
             32 => Op::Ping,
             33 => Op::Shutdown,
+            34 => Op::Metrics,
             40 => Op::ReplHandshake,
             41 => Op::ReplSnapshot,
             42 => Op::ReplPull,
@@ -421,6 +426,7 @@ mod tests {
             Op::NackMany,
             Op::WaitVersion,
             Op::Shutdown,
+            Op::Metrics,
             Op::ReplHandshake,
             Op::ReplSnapshot,
             Op::ReplPull,

@@ -26,7 +26,7 @@
 //! in rust/tests/agg_topology.rs).
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -38,6 +38,7 @@ use crate::coordinator::{keys, queues, ProblemSpec};
 use crate::data::DataApi;
 use crate::metrics::{Span, SpanKind, Timeline};
 use crate::model::{GradAccumulator, ModelSnapshot};
+use crate::obs;
 use crate::queue::{Delivery, QueueApi};
 use crate::runtime::{Engine, GRAD_STEP_B8};
 use crate::textdata::Corpus;
@@ -268,6 +269,7 @@ impl<'a> Agent<'a> {
                                 // original slots; the earlier one runs.
                                 self.queue.nack_many(queues::TASKS, tags)?;
                                 report.tasks_swapped += 1;
+                                obs::inc(obs::Counter::AgentStaleSwaps);
                                 return Ok(VersionWait::Swapped(t2, d2));
                             }
                             Ok(_) => self.queue.nack(queues::TASKS, d2.tag)?,
@@ -292,6 +294,7 @@ impl<'a> Agent<'a> {
         report: &mut AgentReport,
     ) -> Result<()> {
         let start = self.now();
+        let svc_start = Instant::now();
         let tags: Vec<u64> = run.iter().map(|(_, d)| d.tag).collect();
         let pinned = run[0].0.clone();
         let snapshot = match self.await_version(&pinned, &tags, quit, report)? {
@@ -337,6 +340,10 @@ impl<'a> Agent<'a> {
         self.queue.publish_many(&rq, &refs)?;
         self.queue.ack_many(queues::TASKS, &tags)?;
         report.maps_done += run.len() as u64;
+        obs::add(obs::Counter::AgentMapTasks, run.len() as u64);
+        // One observation for the whole run: the histogram answers "how
+        // long does a map-stage pull keep a volunteer busy".
+        obs::observe_since(obs::Hist::AgentMapServiceNs, svc_start);
         Ok(())
     }
 
@@ -369,6 +376,11 @@ impl<'a> Agent<'a> {
     /// harmless — the accumulators dedup first-wins and finished batches
     /// settle via the stale path.
     fn republish_producers(&self, holder: &Task, missing: &[(u32, u32)]) -> Result<()> {
+        obs::inc(obs::Counter::AgentPoisonRepublish);
+        obs::trace(
+            "agent.republish",
+            format!("agent {}: regenerating {} missing range(s)", self.id, missing.len()),
+        );
         let plan = Self::task_plan(holder);
         let batch_ref = holder.batch_ref();
         let model_version = holder.model_version();
@@ -501,6 +513,7 @@ impl<'a> Agent<'a> {
                                 && precedes(&t2, holder) =>
                         {
                             report.tasks_swapped += 1;
+                            obs::inc(obs::Counter::AgentStaleSwaps);
                             self.handle(spec, corpus, t2, &d2, quit, report)?;
                         }
                         Ok(_) => self.queue.nack(queues::TASKS, d2.tag)?,
@@ -536,6 +549,7 @@ impl<'a> Agent<'a> {
                         poison(&e);
                         self.queue.ack(input_queue, d.tag)?;
                         report.poison_dropped += 1;
+                        obs::inc(obs::Counter::AgentPoisonDropped);
                         poisoned_this_round = true;
                         last_progress = std::time::Instant::now();
                     }
@@ -549,6 +563,7 @@ impl<'a> Agent<'a> {
                         ));
                         self.queue.ack(input_queue, d.tag)?;
                         report.poison_dropped += 1;
+                        obs::inc(obs::Counter::AgentPoisonDropped);
                     }
                     Ok(g) if is_foreign(holder, &g) => {
                         // A sibling fold's input sharing this level queue
@@ -571,6 +586,7 @@ impl<'a> Agent<'a> {
                             poison(&e);
                             self.queue.ack(input_queue, d.tag)?;
                             report.poison_dropped += 1;
+                            obs::inc(obs::Counter::AgentPoisonDropped);
                             poisoned_this_round = true;
                         }
                     },
@@ -614,6 +630,7 @@ impl<'a> Agent<'a> {
         report: &mut AgentReport,
     ) -> Result<()> {
         let start = self.now();
+        let svc_start = Instant::now();
         let snapshot = match self.await_version(&task, &[delivery.tag], quit, report)? {
             VersionWait::Ready(s) => s,
             VersionWait::Quit => return Ok(()),
@@ -654,6 +671,8 @@ impl<'a> Agent<'a> {
                     .publish(&queues::map_results(batch_ref), &result.encode())?;
                 self.queue.ack(queues::TASKS, delivery.tag)?;
                 report.maps_done += 1;
+                obs::inc(obs::Counter::AgentMapTasks);
+                obs::observe_since(obs::Hist::AgentMapServiceNs, svc_start);
                 self.record(SpanKind::Compute, start);
             }
             Task::Combine { batch_ref, level, slot_lo, slot_hi, fanin, .. } => {
@@ -692,6 +711,8 @@ impl<'a> Agent<'a> {
                 self.queue.ack_many(&input_queue, &tags)?;
                 self.queue.ack(queues::TASKS, delivery.tag)?;
                 report.combines_done += 1;
+                obs::inc(obs::Counter::AgentCombineTasks);
+                obs::observe_since(obs::Hist::AgentCombineServiceNs, svc_start);
                 self.record(SpanKind::Accumulate, start);
             }
             Task::Reduce { batch_ref, num_minibatches, model_version, plan } => {
@@ -729,6 +750,8 @@ impl<'a> Agent<'a> {
                 self.queue.ack(queues::TASKS, delivery.tag)?;
                 self.data.incr(keys::REDUCES_DONE)?;
                 report.reduces_done += 1;
+                obs::inc(obs::Counter::AgentReduceTasks);
+                obs::observe_since(obs::Hist::AgentReduceServiceNs, svc_start);
                 self.record(SpanKind::Accumulate, start);
             }
         }

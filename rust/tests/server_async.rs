@@ -155,6 +155,99 @@ fn shutdown_settles_parked_ops_instead_of_hanging() {
     assert!(got.is_none());
 }
 
+/// Satellite of the idle reaper (`ServerOptions::idle_timeout`): a
+/// connection stuck mid-frame is collected once it stays silent past the
+/// cutoff, counted in `server.conns_reaped`, while an active client on
+/// the same server keeps living through several idle periods.
+#[test]
+fn idle_timeout_reaps_stalled_connections_but_not_active_ones() {
+    let h = serve_with(
+        "127.0.0.1:0",
+        Arc::new(Broker::new(Duration::from_secs(5))),
+        Arc::new(Store::new()),
+        ServerOptions {
+            idle_timeout: Some(Duration::from_millis(400)),
+            ..ServerOptions::default()
+        },
+    )
+    .unwrap();
+    // Half a length prefix, then silence: the reaper's target.
+    let mut stalled = TcpStream::connect(h.addr).unwrap();
+    stalled.write_all(&[0xff, 0x00]).unwrap();
+    stalled.flush().unwrap();
+    let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
+    q.declare("reap-jobs").unwrap();
+    // The obs registry is process-global, but conns_reaped only moves
+    // when a reaper fires, and only this test enables one.
+    let reaped_at_start = q.metrics().unwrap().counter("server.conns_reaped").unwrap_or(0);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        // Steady frame activity keeps THIS connection alive across
+        // several idle periods while the stalled one ages out.
+        q.publish("reap-jobs", b"tick").unwrap();
+        let d = q.consume("reap-jobs", Duration::from_millis(100)).unwrap().unwrap();
+        q.ack("reap-jobs", d.tag).unwrap();
+        let reaped = q.metrics().unwrap().counter("server.conns_reaped").unwrap_or(0);
+        if reaped > reaped_at_start {
+            break;
+        }
+        assert!(Instant::now() < deadline, "stalled connection was never reaped");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    // The reaped socket is really closed (EOF or reset) ...
+    stalled.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+    let mut buf = [0u8; 8];
+    let closed = matches!(std::io::Read::read(&mut stalled, &mut buf), Ok(0) | Err(_));
+    assert!(closed, "reaped connection still open");
+    // ... and the active client outlived the reaper.
+    q.ping().unwrap();
+    h.shutdown();
+}
+
+/// Regression for the dead-waiter leak: a consumer that parks a long
+/// blocking Consume and then dies abruptly must have its broker waiter
+/// registration cancelled when the kernel reports the hangup — visible in
+/// the metrics op as the queue's waiter count returning to zero well
+/// before the op's 30 s deadline (previously it leaked until expiry).
+#[test]
+fn dead_parked_consumer_cancels_its_waiter_registration() {
+    let h = start();
+    h.broker.declare("dead-waiters").unwrap();
+    let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
+    // Raw client: park a 30 s consume, then vanish without a goodbye.
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    let mut body = Vec::new();
+    jsdoop::queue::wire::put_str(&mut body, "dead-waiters");
+    body.extend_from_slice(&30_000u64.to_le_bytes());
+    write_frame(&mut s, Op::Consume as u8, &body).unwrap();
+    s.flush().unwrap();
+    // Wait until the consume is parked (its waiter registered).
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let snap = q.metrics().unwrap();
+        if snap.queue("dead-waiters").map(|r| r.waiters).unwrap_or(0) == 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "consume never parked");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // Abrupt death: RST/FIN with the op still parked.
+    drop(s);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let snap = q.metrics().unwrap();
+        if snap.queue("dead-waiters").map(|r| r.waiters).unwrap_or(1) == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "dead consumer's waiter registration leaked (only reclaimed at deadline?)"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    h.shutdown();
+}
+
 /// Two requests written back-to-back are both answered, in order. The
 /// protocol is synchronous per connection; the second frame waits in the
 /// kernel buffer while the first executes.
