@@ -1,0 +1,184 @@
+//! Two tenants, one volunteer fleet.
+//!
+//! Declares two independent training jobs on a single durable broker —
+//! a char-RNN-shaped job ("lstm") and a smaller MLP-shaped job ("mlp"),
+//! both on the deterministic exact-math stub so this runs without any
+//! PJRT artifacts — then drives three volunteers that pull work from
+//! BOTH jobs through the fair-share consume path. Each job finishes
+//! bit-identical to the model it would have produced on a private
+//! deployment: the co-tenant can shift timing, never numerics.
+//!
+//!     cargo run --release --example two_jobs
+
+#[cfg(feature = "pjrt")]
+fn main() {
+    eprintln!("two_jobs uses the exact-math stub; build without --features pjrt");
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() -> anyhow::Result<()> {
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use jsdoop::coordinator::agg::AggregationPlan;
+    use jsdoop::coordinator::initiator::setup_problem_job;
+    use jsdoop::coordinator::version::get_model;
+    use jsdoop::coordinator::ProblemSpec;
+    use jsdoop::data::{DataApi, Store};
+    use jsdoop::queue::durability::{DurabilityOptions, DurableBroker, SyncPolicy};
+    use jsdoop::queue::job::{JobData, JobQuota, JobQueueApi};
+    use jsdoop::runtime::Engine;
+    use jsdoop::textdata::{Corpus, Schedule};
+    use jsdoop::volunteer::agent::{AgentOptions, MultiJobAgent};
+
+    // Two workload families with different model sizes, schedules,
+    // learning rates, and aggregation topologies.
+    let lstm_spec = ProblemSpec {
+        schedule: Schedule {
+            seq_len: 10,
+            batch_size: 8,
+            minibatch_size: 2,
+            examples_per_epoch: 32,
+            epochs: 1,
+        },
+        learning_rate: 0.25,
+    };
+    let mlp_spec = ProblemSpec {
+        schedule: Schedule {
+            seq_len: 8,
+            batch_size: 6,
+            minibatch_size: 2,
+            examples_per_epoch: 18,
+            epochs: 1,
+        },
+        learning_rate: 0.5,
+    };
+    let lstm_corpus = Corpus::synthetic_js(7, 4000);
+    let mlp_corpus = Corpus::synthetic_js(13, 3000);
+
+    let engine = Engine::exact_math_for_tests();
+    println!("engine: {}", engine.platform());
+
+    // Solo oracles: what each job must produce regardless of tenancy.
+    let lstm_oracle = jsdoop::baseline::train_accumulated_with_plan(
+        &engine,
+        &lstm_corpus,
+        &lstm_spec,
+        vec![0.0f32; 5],
+        AggregationPlan::Flat,
+    )?
+    .snapshot
+    .params;
+    let mlp_oracle = jsdoop::baseline::train_accumulated_with_plan(
+        &engine,
+        &mlp_corpus,
+        &mlp_spec,
+        vec![0.0f32; 7],
+        AggregationPlan::Tree { fanin: 2 },
+    )?
+    .snapshot
+    .params;
+
+    // One durable broker + one data store serve both tenants.
+    let dir = std::env::temp_dir().join(format!("jsdoop-two-jobs-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = DurabilityOptions {
+        sync: SyncPolicy::EveryN(5),
+        compact_after_bytes: u64::MAX,
+        visibility_timeout: Duration::from_secs(5),
+        ..Default::default()
+    };
+    let broker = Arc::new(DurableBroker::open(&dir, opts)?);
+    let store = Arc::new(Store::new());
+
+    // The bigger job gets a ready-backlog cap; the small one is unmetered.
+    broker.set_job_quota(
+        "lstm",
+        JobQuota { max_ready_msgs: 10_000, max_ready_bytes: 64 << 20 },
+    )?;
+    setup_problem_job(
+        "lstm",
+        broker.clone() as Arc<dyn JobQueueApi>,
+        store.clone() as Arc<dyn DataApi>,
+        &lstm_spec,
+        &lstm_corpus,
+        vec![0.0f32; 5],
+        AggregationPlan::Flat,
+    )?;
+    setup_problem_job(
+        "mlp",
+        broker.clone() as Arc<dyn JobQueueApi>,
+        store.clone() as Arc<dyn DataApi>,
+        &mlp_spec,
+        &mlp_corpus,
+        vec![0.0f32; 7],
+        AggregationPlan::Tree { fanin: 2 },
+    )?;
+    for j in broker.list_jobs()? {
+        println!(
+            "job {:<5} queues={} ready={} msgs / {} B  quota={:?}",
+            j.job, j.queues, j.ready_msgs, j.ready_bytes, j.quota
+        );
+    }
+
+    // Three volunteers, each serving BOTH jobs via fair-share pulls.
+    let jobids = vec!["lstm".to_string(), "mlp".to_string()];
+    let quit = AtomicBool::new(false);
+    let agent_opts = AgentOptions {
+        poll: Duration::from_millis(20),
+        version_wait: Duration::from_millis(150),
+        prefetch: 2,
+        ..Default::default()
+    };
+    let reports: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..3)
+            .map(|id| {
+                let broker = broker.clone();
+                let store = store.clone();
+                let engine = &engine;
+                let quit = &quit;
+                let jobids = jobids.clone();
+                let agent_opts = agent_opts.clone();
+                s.spawn(move || {
+                    let agent = MultiJobAgent {
+                        id,
+                        engine,
+                        queue: broker as Arc<dyn JobQueueApi>,
+                        data: store as Arc<dyn DataApi>,
+                        timeline: None,
+                        opts: agent_opts,
+                    };
+                    agent.run(&jobids, quit)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (id, r) in reports.iter().enumerate() {
+        let r = r.as_ref().map_err(|e| anyhow::anyhow!("volunteer {id}: {e}"))?;
+        for (job, rep) in r {
+            println!(
+                "  volunteer {id} on {job:<5}: {} maps, {} reduces",
+                rep.maps_done, rep.reduces_done
+            );
+        }
+    }
+
+    // Both tenants must match their private-deployment oracles exactly.
+    let lstm_view = JobData::new("lstm", store.clone() as Arc<dyn DataApi>)?;
+    let mlp_view = JobData::new("mlp", store.clone() as Arc<dyn DataApi>)?;
+    let lstm_model = get_model(&lstm_view)?.expect("lstm: no model");
+    let mlp_model = get_model(&mlp_view)?.expect("mlp: no model");
+    anyhow::ensure!(lstm_model.params == lstm_oracle, "lstm diverged from its solo oracle");
+    anyhow::ensure!(mlp_model.params == mlp_oracle, "mlp diverged from its solo oracle");
+    println!(
+        "both jobs converged bit-identical to their solo oracles \
+         (lstm v{}, mlp v{})",
+        lstm_model.version, mlp_model.version
+    );
+
+    drop(broker);
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

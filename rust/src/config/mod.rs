@@ -82,6 +82,15 @@ pub struct Config {
     pub watch: u64,
     /// `jsdoop metrics --json` prints a JSON line instead of tables.
     pub json: bool,
+    // Multi-tenant fleets (queue/job).
+    /// `jsdoop metrics --job=<id>` shows only that job's queue rows
+    /// (`--job=` selects the default, unprefixed namespace). None = all.
+    pub job: Option<String>,
+    /// `serve --job_quotas=job=<max_msgs>:<max_bytes>,...` applies
+    /// per-job admission caps at boot (0 = unlimited on that axis).
+    /// Quotas are runtime policy, not journaled — re-apply here after
+    /// every restart.
+    pub job_quotas: String,
     // Corpus
     pub corpus_file: Option<PathBuf>,
     pub corpus_seed: u64,
@@ -120,6 +129,8 @@ impl Default for Config {
             metrics_every: 0,
             watch: 0,
             json: false,
+            job: None,
+            job_quotas: String::new(),
             corpus_file: None,
             corpus_seed: 1234,
             corpus_len: 200_000,
@@ -208,7 +219,20 @@ impl Config {
         if self.watch > 86_400 {
             bail!("watch must be <= 86400 seconds (0 = one shot)");
         }
+        if let Some(job) = &self.job {
+            // Empty selects the default namespace; anything else must be
+            // a legal job id.
+            if !job.is_empty() {
+                crate::queue::job::validate_job_id(job).context("bad --job")?;
+            }
+        }
+        self.job_quota_list()?;
         Ok(())
+    }
+
+    /// The per-job admission caps `job_quotas` names (validated).
+    pub fn job_quota_list(&self) -> Result<Vec<(String, crate::queue::job::JobQuota)>> {
+        crate::queue::job::parse_quota_spec(&self.job_quotas).context("bad job_quotas")
     }
 
     /// Parse a `key = value` file ('#' comments, blank lines ok).
@@ -292,6 +316,8 @@ impl Config {
             "metrics_every" => self.metrics_every = p(key, val)?,
             "watch" => self.watch = p(key, val)?,
             "json" => self.json = p(key, val)?,
+            "job" => self.job = Some(val.to_string()),
+            "job_quotas" => self.job_quotas = val.to_string(),
             "corpus_file" => self.corpus_file = Some(PathBuf::from(val)),
             "corpus_seed" => self.corpus_seed = p(key, val)?,
             "corpus_len" => self.corpus_len = p(key, val)?,
@@ -457,6 +483,32 @@ mod tests {
         assert!(c.validate().is_err());
         c.metrics_every = 0;
         c.watch = 100_000;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn multi_tenant_keys_parse_and_validate() {
+        let mut c = Config::default();
+        c.apply_cli(&[
+            "--job=alpha".into(),
+            "--job-quotas=heavy=1000:1048576,light=0:0".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.job.as_deref(), Some("alpha"));
+        let quotas = c.job_quota_list().unwrap();
+        assert_eq!(quotas.len(), 2);
+        assert_eq!(quotas[0].0, "heavy");
+        assert_eq!(quotas[0].1.max_ready_msgs, 1000);
+        assert_eq!(quotas[0].1.max_ready_bytes, 1 << 20);
+        assert!(quotas[1].1.is_unlimited());
+        c.validate().unwrap();
+        // Job ids obey the namespace grammar ('/' is the separator).
+        c.job = Some("a/b".into());
+        assert!(c.validate().is_err());
+        // `--job=` (empty) legally selects the default namespace.
+        c.job = Some(String::new());
+        c.validate().unwrap();
+        c.job_quotas = "heavy=nope".into();
         assert!(c.validate().is_err());
     }
 

@@ -3,6 +3,8 @@
 //! to the QueueServer. "From then on, the Initiator does not participate
 //! again in the solution of the problem."
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::coordinator::agg::AggregationPlan;
@@ -11,6 +13,7 @@ use crate::coordinator::version::publish_model;
 use crate::coordinator::{keys, queues, ProblemSpec};
 use crate::data::DataApi;
 use crate::model::ModelSnapshot;
+use crate::queue::job::{JobData, JobQueue, JobQueueApi};
 use crate::queue::QueueApi;
 use crate::textdata::Corpus;
 
@@ -127,6 +130,26 @@ pub fn setup_problem_with(
         reduce_tasks,
         total_versions: spec.total_versions(),
     })
+}
+
+/// [`setup_problem_with`] inside a job (tenant) namespace: every queue
+/// and every DataServer key rides behind a `"<job>/"` prefix via the
+/// [`JobQueue`]/[`JobData`] views, so N problems share one fleet without
+/// touching each other's state. The task stream, priorities, and
+/// per-batch layout are IDENTICAL to the single-job setup — multi-tenancy
+/// is a deployment decision, not a different protocol.
+pub fn setup_problem_job(
+    job: &str,
+    queue: Arc<dyn JobQueueApi>,
+    data: Arc<dyn DataApi>,
+    spec: &ProblemSpec,
+    corpus: &Corpus,
+    init_params: Vec<f32>,
+    plan: AggregationPlan,
+) -> Result<SetupSummary> {
+    let q = JobQueue::new(job, queue)?;
+    let d = JobData::new(job, data)?;
+    setup_problem_with(&q, &d, spec, corpus, init_params, plan)
 }
 
 /// Fetch the problem + corpus a volunteer needs (§IV.F step 2: "a program
@@ -263,6 +286,39 @@ mod tests {
         // Model v0 is live.
         let v = crate::coordinator::version::current_version(&store).unwrap();
         assert_eq!(v, Some(0));
+    }
+
+    #[test]
+    fn job_scoped_setup_is_isolated_and_layout_identical() {
+        use crate::coordinator::agg::AggregationPlan;
+        use std::sync::Arc;
+        let broker = Arc::new(Broker::with_default_timeout());
+        let store = Arc::new(Store::new());
+        let spec = ProblemSpec { schedule: Schedule::tiny(), learning_rate: 0.1 };
+        let corpus = Corpus::synthetic_js(1, 2000);
+        for job in ["alpha", "beta"] {
+            let s = setup_problem_job(
+                job,
+                broker.clone(),
+                store.clone(),
+                &spec,
+                &corpus,
+                vec![0.0; 16],
+                AggregationPlan::Flat,
+            )
+            .unwrap();
+            assert_eq!(s.map_tasks, 4);
+            assert_eq!(s.reduce_tasks, 2);
+        }
+        // Each job's InitialQueue filled independently; the bare names
+        // were never created.
+        assert_eq!(broker.len("alpha/tasks").unwrap(), 6);
+        assert_eq!(broker.len("beta/tasks").unwrap(), 6);
+        assert!(broker.len("tasks").is_err());
+        // DataServer keys are prefixed per job, too.
+        assert!(store.get("alpha/problem").unwrap().is_some());
+        assert!(store.get("beta/corpus").unwrap().is_some());
+        assert!(store.get("problem").unwrap().is_none());
     }
 
     #[test]

@@ -24,6 +24,20 @@
 //!  results.map.e<e>.b<b>.l<k> = partial sums published by level-k combines
 //! ```
 //!
+//! On a multi-tenant fleet every name above additionally rides behind a
+//! job prefix (see `queue/job.rs` — the namespace lives INSIDE the name,
+//! so nothing else about the layout changes):
+//!
+//! ```text
+//!  <job>/tasks                      = that job's InitialQueue
+//!  <job>/results.map.e<e>.b<b>      = its per-batch leaf gradients
+//!  <job>/results.map.e<e>.b<b>.l<k> = its tree-combine partials
+//!  DataServer: "<job>/problem", "<job>/corpus", "<job>/model", ...
+//! ```
+//!
+//! A single-job deployment keeps the bare names, byte-identical on the
+//! wire and in the WAL to every build before jobs existed.
+//!
 //! All task kinds share ONE priority queue, exactly like the paper's
 //! `InitialQueue`. Priorities encode a TOTAL order — batch first, then
 //! stage within the batch (maps < level-1 combines < level-2 combines <

@@ -11,7 +11,8 @@
 //!                                 vs the paper's single reducer)
 //!   serve [addr] [--durability_dir=D --sync_policy=P --wal_compact_bytes=N
 //!                 --wal_group_window_us=U --server_workers=W --max_connections=C
-//!                 --idle_timeout=SECS --metrics_every=SECS]
+//!                 --idle_timeout=SECS --metrics_every=SECS
+//!                 --job_quotas=job=<max_msgs>:<max_bytes>,...]
 //!                                 host QueueServer + DataServer over TCP
 //!                                 (poll(2) event loop + W op workers; see
 //!                                 queue/server.rs); with a durability dir
@@ -25,7 +26,7 @@
 //!   serve [addr] --durability_dir=D --promote
 //!                                 promote a follower's mirror: clear its
 //!                                 replica marker, recover, serve as primary
-//!   metrics [addr] [--watch=SECS --json]
+//!   metrics [addr] [--watch=SECS --json --job=ID]
 //!                                 live introspection of a running server
 //!                                 (Op::Metrics): op latency histograms,
 //!                                 queue depths, WAL/replication gauges,
@@ -54,6 +55,7 @@ use jsdoop::queue::broker::Broker;
 use jsdoop::queue::client::{RemoteData, RemoteQueue};
 use jsdoop::queue::durability::replication;
 use jsdoop::queue::durability::{DurabilityOptions, DurableBroker};
+use jsdoop::queue::job::JobQueueApi;
 use jsdoop::queue::QueueService;
 use jsdoop::runtime::Engine;
 use jsdoop::textdata::id_to_char;
@@ -312,6 +314,9 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
             replication::guard_not_replica(dir)?;
         }
     }
+    // Per-job admission caps are runtime policy, never journaled —
+    // re-applied here on every boot, including after WAL recovery.
+    let job_quotas = cfg.job_quota_list()?;
     let mut durable: Option<Arc<DurableBroker>> = None;
     let handle = match &cfg.durability_dir {
         Some(dir) => {
@@ -330,16 +335,23 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
                 broker.recovered_messages(),
                 broker.recovered_queues()
             );
+            for (job, q) in &job_quotas {
+                broker.set_job_quota(job, *q)?;
+            }
             durable = Some(broker.clone());
             jsdoop::queue::server::serve_with(&addr, broker, store, server_opts)?
         }
-        None => jsdoop::queue::server::serve_with(
-            &addr,
-            Arc::new(Broker::new(visibility)),
-            store,
-            server_opts,
-        )?,
+        None => {
+            let broker = Arc::new(Broker::new(visibility));
+            for (job, q) in &job_quotas {
+                broker.set_job_quota(job, *q)?;
+            }
+            jsdoop::queue::server::serve_with(&addr, broker, store, server_opts)?
+        }
     };
+    if !job_quotas.is_empty() {
+        println!("job quotas: {} tenant(s) capped (--job_quotas)", job_quotas.len());
+    }
     println!("QueueServer+DataServer listening on {}", handle.addr);
     if durable.is_some() {
         // Ctrl-C is an abrupt kill (no signal handler): what survives it
@@ -401,7 +413,13 @@ fn metrics_cmd(cfg: &Config, rest: &[String]) -> Result<()> {
         .unwrap_or_else(|| "127.0.0.1:7333".to_string());
     let queue = RemoteQueue::connect(&addr)?;
     loop {
-        let snap = queue.metrics()?;
+        let mut snap = queue.metrics()?;
+        if let Some(job) = &cfg.job {
+            // `--job=<id>` narrows the queue section to one tenant
+            // (`--job=` = the default namespace); process-wide
+            // counters/gauges/histograms are global and stay.
+            snap.retain_job(job);
+        }
         if cfg.json {
             println!("{}", snap.to_json_line());
         } else {

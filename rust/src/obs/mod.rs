@@ -405,6 +405,17 @@ impl MetricsSnapshot {
         self.queues.iter().map(|q| q.waiters).sum()
     }
 
+    /// Drop every queue row outside `jobid`'s namespace (the CLI's
+    /// `--job=<id>` filter). `""` selects the default (unprefixed)
+    /// namespace. Counters/gauges/histograms stay: they are
+    /// process-global by the overhead contract.
+    pub fn retain_job(&mut self, jobid: &str) {
+        self.queues.retain(|q| match crate::queue::job::split(&q.name) {
+            (Some(job), _) => job == jobid,
+            (None, _) => jobid.is_empty(),
+        });
+    }
+
     /// Human table for `jsdoop metrics`.
     pub fn render_table(&self) -> String {
         let mut out = String::new();
@@ -435,10 +446,13 @@ impl MetricsSnapshot {
             ));
         }
         out.push_str("-- queues (ready / unacked / waiters | pub / deliv / ack / nack / redeliv) --\n");
-        for q in &self.queues {
+        // Rows group by job namespace: default (unprefixed) rows first,
+        // exactly as a single-job deployment always printed them, then
+        // one `[job <id>]` block per tenant with base queue names.
+        let row = |out: &mut String, name: &str, q: &QueueMetrics| {
             out.push_str(&format!(
                 "  {:<24} {:>6} {:>6} {:>4} | {} / {} / {} / {} / {}\n",
-                q.name,
+                name,
                 q.ready,
                 q.unacked,
                 q.waiters,
@@ -448,6 +462,21 @@ impl MetricsSnapshot {
                 q.nacked,
                 q.redelivered,
             ));
+        };
+        let mut by_job: std::collections::BTreeMap<&str, Vec<&QueueMetrics>> =
+            std::collections::BTreeMap::new();
+        for q in &self.queues {
+            match crate::queue::job::split(&q.name) {
+                (None, _) => row(&mut out, &q.name, q),
+                (Some(job), _) => by_job.entry(job).or_default().push(q),
+            }
+        }
+        for (job, rows) in &by_job {
+            out.push_str(&format!("  [job {job}]\n"));
+            for q in rows {
+                let (_, base) = crate::queue::job::split(&q.name);
+                row(&mut out, &format!("  {base}"), q);
+            }
         }
         if !self.events.is_empty() {
             out.push_str("-- recent events --\n");
@@ -899,6 +928,47 @@ mod tests {
         let empty = HistSnapshot { name: "e".into(), count: 0, sum: 0, buckets: vec![] };
         assert_eq!(empty.quantile(0.5), 0);
         assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn queue_rows_group_by_job_and_filter() {
+        let qm = |name: &str| QueueMetrics {
+            name: name.into(),
+            published: 1,
+            delivered: 0,
+            acked: 0,
+            nacked: 0,
+            redelivered: 0,
+            ready: 1,
+            unacked: 0,
+            waiters: 0,
+        };
+        let mut snap = snapshot(vec![
+            qm("tasks"),
+            qm("beta/tasks"),
+            qm("alpha/tasks"),
+            qm("alpha/results.map.e0.b0"),
+        ]);
+        let table = snap.render_table();
+        assert!(table.contains("[job alpha]"));
+        assert!(table.contains("[job beta]"));
+        // Default-namespace rows keep their bare names, ahead of any
+        // job block (single-job output shape is unchanged).
+        let pos_default = table.find("\n  tasks").unwrap();
+        assert!(pos_default < table.find("[job alpha]").unwrap());
+        // Jobs are alphabetical regardless of row arrival order.
+        assert!(table.find("[job alpha]").unwrap() < table.find("[job beta]").unwrap());
+
+        // --job=alpha keeps only alpha's rows; globals stay.
+        snap.retain_job("alpha");
+        assert_eq!(snap.queues.len(), 2);
+        assert!(!snap.render_table().contains("[job beta]"));
+
+        // --job= (empty) selects the default namespace.
+        let mut d = snapshot(vec![qm("tasks"), qm("alpha/tasks")]);
+        d.retain_job("");
+        assert_eq!(d.queues.len(), 1);
+        assert_eq!(d.queues[0].name, "tasks");
     }
 
     #[test]

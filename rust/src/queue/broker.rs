@@ -40,6 +40,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::job::{self, JobInfo, JobQueueApi, JobQuota, QuotaExceeded};
 use super::wire::BodyReader;
 use super::{Delivery, QueueApi, QueueStats, ReadyWaker, DEFAULT_PRIORITY};
 use crate::obs;
@@ -72,12 +73,46 @@ impl std::fmt::Debug for WaiterSet {
     }
 }
 
+/// Per-job (tenant) bookkeeping shared by every queue under one job
+/// prefix: live ready-state usage (for admission control), the quota in
+/// force, and the deficit-round-robin scheduler balance. Usage counters
+/// are atomics updated next to each queue mutation (under that queue's
+/// lock); cross-queue totals are therefore eventually exact — each
+/// delta is atomic, so the sum never drifts, it only lags by in-flight
+/// operations.
+#[derive(Debug)]
+struct JobState {
+    name: String,
+    /// Ready messages across all of the job's queues.
+    ready_msgs: AtomicU64,
+    /// Ready payload bytes across all of the job's queues.
+    ready_bytes: AtomicU64,
+    quota: Mutex<JobQuota>,
+    /// Deficit-round-robin balance, in bytes (see `consume_fair_ids`).
+    deficit: AtomicU64,
+}
+
+impl JobState {
+    fn new(name: &str) -> Self {
+        JobState {
+            name: name.to_string(),
+            ready_msgs: AtomicU64::new(0),
+            ready_bytes: AtomicU64::new(0),
+            quota: Mutex::new(JobQuota::unlimited()),
+            deficit: AtomicU64::new(0),
+        }
+    }
+}
+
 #[derive(Debug, Default)]
 struct QueueState {
     /// Ready messages ordered by (priority, seq).
     ready: BTreeMap<(u64, u64), Msg>,
     /// tag -> (message, visibility deadline)
     unacked: HashMap<u64, (Msg, Instant)>,
+    /// Set for queues declared under a job prefix; every mutation of
+    /// `ready` mirrors its delta into the job's usage atomics.
+    job: Option<Arc<JobState>>,
     /// Parked remote consumers, woken (one-shot) whenever messages become
     /// ready — the readiness-loop analogue of `readable` below.
     waiters: WaiterSet,
@@ -99,10 +134,27 @@ struct QueueEntry {
     readable: Condvar,
 }
 
+/// Deficit-round-robin refill per scheduler visit, in bytes. Large
+/// enough that a job with ordinary payloads is served every visit;
+/// a job whose head message is huge accumulates deficit across rounds
+/// instead of being skipped forever.
+const FAIR_QUANTUM: u64 = 64 * 1024;
+/// Floor on a message's scheduling cost, so jobs with tiny payloads
+/// degrade to per-message (not per-byte) round-robin instead of one job
+/// draining thousands of empty messages per turn.
+const FAIR_COST_FLOOR: u64 = 256;
+
 /// Thread-safe in-process broker with per-queue locking.
 #[derive(Debug)]
 pub struct Broker {
     queues: RwLock<HashMap<String, Arc<QueueEntry>>>,
+    /// Registered jobs (tenants) by id. A job exists once `declare_job`
+    /// or `set_job_quota` names it; queues link back to their job's
+    /// state via `QueueState::job`.
+    jobs: RwLock<HashMap<String, Arc<JobState>>>,
+    /// Round-robin position of the fair-share scheduler (index into the
+    /// sorted job list).
+    fair_cursor: Mutex<usize>,
     next_tag: AtomicU64,
     next_seq: AtomicU64,
     visibility_timeout: Duration,
@@ -113,6 +165,8 @@ impl Broker {
     pub fn new(visibility_timeout: Duration) -> Self {
         Broker {
             queues: RwLock::new(HashMap::new()),
+            jobs: RwLock::new(HashMap::new()),
+            fair_cursor: Mutex::new(0),
             next_tag: AtomicU64::new(0),
             next_seq: AtomicU64::new(0),
             visibility_timeout,
@@ -127,8 +181,9 @@ impl Broker {
         self.visibility_timeout
     }
 
-    /// Look up one queue's entry (shared read on the name map; the map
-    /// only ever grows, so the `Arc` stays valid after the lock drops).
+    /// Look up one queue's entry (shared read on the name map; the
+    /// `Arc` keeps the entry valid after the lock drops, even if
+    /// `remove_job` unlinks it from the map concurrently).
     fn entry(&self, queue: &str) -> Result<Arc<QueueEntry>> {
         let map = self.queues.read().unwrap();
         match map.get(queue) {
@@ -196,6 +251,61 @@ impl Broker {
         }
     }
 
+    /// Mirror a ready-set GROWTH into the owning job's usage atomics
+    /// (no-op for default-namespace queues). Call under the queue lock,
+    /// next to the mutation it describes.
+    fn job_add(st: &QueueState, msgs: u64, bytes: u64) {
+        if let Some(js) = &st.job {
+            js.ready_msgs.fetch_add(msgs, Ordering::Relaxed);
+            js.ready_bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Mirror a ready-set SHRINK into the owning job's usage atomics.
+    fn job_sub(st: &QueueState, msgs: u64, bytes: u64) {
+        if let Some(js) = &st.job {
+            let prev = js.ready_msgs.fetch_sub(msgs, Ordering::Relaxed);
+            debug_assert!(prev >= msgs, "job ready_msgs underflow");
+            let prev = js.ready_bytes.fetch_sub(bytes, Ordering::Relaxed);
+            debug_assert!(prev >= bytes, "job ready_bytes underflow");
+        }
+    }
+
+    /// Admission control: would growing the job's ready set by
+    /// (`add_msgs`, `add_bytes`) burst its quota? Errors with a typed
+    /// [`QuotaExceeded`] (the server answers `ST_QUOTA` in-band).
+    /// Checked under the queue lock BEFORE the mutation, so a rejected
+    /// publish leaves no trace — and nothing reaches the WAL.
+    fn admit(st: &QueueState, add_msgs: u64, add_bytes: u64) -> Result<()> {
+        let Some(js) = &st.job else { return Ok(()) };
+        let quota = *js.quota.lock().unwrap();
+        if quota.max_ready_msgs != 0 {
+            let cur = js.ready_msgs.load(Ordering::Relaxed);
+            if cur + add_msgs > quota.max_ready_msgs {
+                return Err(anyhow::Error::new(QuotaExceeded {
+                    job: js.name.clone(),
+                    detail: format!(
+                        "ready depth {cur} + {add_msgs} exceeds cap {}",
+                        quota.max_ready_msgs
+                    ),
+                }));
+            }
+        }
+        if quota.max_ready_bytes != 0 {
+            let cur = js.ready_bytes.load(Ordering::Relaxed);
+            if cur + add_bytes > quota.max_ready_bytes {
+                return Err(anyhow::Error::new(QuotaExceeded {
+                    job: js.name.clone(),
+                    detail: format!(
+                        "ready bytes {cur} + {add_bytes} exceeds cap {}",
+                        quota.max_ready_bytes
+                    ),
+                }));
+            }
+        }
+        Ok(())
+    }
+
     /// Sweep ONE queue's expired unACKed messages; returns whether any
     /// message became ready (caller notifies the queue's condvar).
     fn sweep_locked(st: &mut QueueState, now: Instant) -> bool {
@@ -213,6 +323,7 @@ impl Broker {
             let (mut msg, _) = st.unacked.remove(&tag).unwrap();
             msg.redelivered = true;
             st.stats.redelivered += 1;
+            Self::job_add(st, 1, msg.payload.len() as u64);
             st.ready.insert((msg.priority, msg.seq), msg);
         }
         moved
@@ -222,6 +333,7 @@ impl Broker {
     fn deliver_head(&self, st: &mut QueueState, now: Instant) -> Option<(Delivery, MsgId)> {
         let (&key, _) = st.ready.iter().next()?;
         let msg = st.ready.remove(&key).unwrap();
+        Self::job_sub(st, 1, msg.payload.len() as u64);
         let tag = self.next_tag.fetch_add(1, Ordering::Relaxed);
         let redelivered = msg.redelivered;
         let payload = msg.payload.clone();
@@ -296,17 +408,22 @@ impl Broker {
     // costs nothing; ack/nack keep their id-free fast paths.
 
     /// [`QueueApi::publish_pri`], returning the (seq, purge epoch) the
-    /// message was applied under.
+    /// message was applied under. Subject to the owning job's quota for
+    /// namespaced queues; name validation happens at the `QueueApi` /
+    /// [`JobQueueApi`] entry layer, so durability replay and other
+    /// trusted internal callers can reach any existing queue.
     pub fn publish_seq(&self, queue: &str, payload: &[u8], priority: u64) -> Result<(u64, u64)> {
         let entry = self.entry(queue)?;
         let mut st = entry.state.lock().unwrap();
         Self::sweep_locked(&mut st, Instant::now());
+        Self::admit(&st, 1, payload.len() as u64)?;
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         st.ready.insert(
             (priority, seq),
             Msg { payload: payload.to_vec(), redelivered: false, priority, seq },
         );
         st.stats.published += 1;
+        Self::job_add(&st, 1, payload.len() as u64);
         let epoch = st.epoch;
         let waiters = Self::take_waiters(&mut st);
         drop(st);
@@ -318,11 +435,15 @@ impl Broker {
     /// [`QueueApi::publish_many`], returning (first seq, purge epoch).
     /// The batch takes a CONTIGUOUS seq block (one atomic bump), so
     /// `first..first+n` identifies every message — the compact WAL record.
-    /// Must not be called with an empty slice.
+    /// Admission is all-or-nothing: the whole batch fits under the
+    /// job's quota or nothing is applied. Must not be called with an
+    /// empty slice.
     pub fn publish_many_seq(&self, queue: &str, payloads: &[&[u8]]) -> Result<(u64, u64)> {
         let entry = self.entry(queue)?;
         let mut st = entry.state.lock().unwrap();
         Self::sweep_locked(&mut st, Instant::now());
+        let total_bytes: u64 = payloads.iter().map(|p| p.len() as u64).sum();
+        Self::admit(&st, payloads.len() as u64, total_bytes)?;
         let first = self.next_seq.fetch_add(payloads.len() as u64, Ordering::Relaxed);
         for (k, payload) in payloads.iter().enumerate() {
             let seq = first + k as u64;
@@ -335,6 +456,7 @@ impl Broker {
             st.ready.insert((DEFAULT_PRIORITY, seq), msg);
             st.stats.published += 1;
         }
+        Self::job_add(&st, payloads.len() as u64, total_bytes);
         let epoch = st.epoch;
         let waiters = Self::take_waiters(&mut st);
         drop(st);
@@ -349,6 +471,8 @@ impl Broker {
     pub fn purge_epoch(&self, queue: &str) -> Result<u64> {
         let entry = self.entry(queue)?;
         let mut st = entry.state.lock().unwrap();
+        let bytes: u64 = st.ready.values().map(|m| m.payload.len() as u64).sum();
+        Self::job_sub(&st, st.ready.len() as u64, bytes);
         st.ready.clear();
         st.unacked.clear();
         st.epoch += 1;
@@ -440,6 +564,7 @@ impl Broker {
                 msg.redelivered = true;
                 st.stats.nacked += 1;
                 ids.push((msg.priority, msg.seq));
+                Self::job_add(&st, 1, msg.payload.len() as u64);
                 st.ready.insert((msg.priority, msg.seq), msg);
             }
         }
@@ -466,6 +591,7 @@ impl Broker {
     ) -> Result<()> {
         let entry = self.entry(queue)?;
         let mut st = entry.state.lock().unwrap();
+        Self::job_add(&st, 1, payload.len() as u64);
         st.ready.insert((priority, seq), Msg { payload, redelivered, priority, seq });
         let waiters = Self::take_waiters(&mut st);
         drop(st);
@@ -478,6 +604,162 @@ impl Broker {
     /// recovered message's id.
     pub fn ensure_seq_above(&self, seq: u64) {
         self.next_seq.fetch_max(seq.saturating_add(1), Ordering::Relaxed);
+    }
+
+    // --- job (tenant) namespace -------------------------------------------
+
+    /// Get-or-create a job's shared state.
+    fn job_state(&self, job: &str) -> Arc<JobState> {
+        {
+            let jobs = self.jobs.read().unwrap();
+            if let Some(js) = jobs.get(job) {
+                return js.clone();
+            }
+        }
+        let mut jobs = self.jobs.write().unwrap();
+        jobs.entry(job.to_string()).or_insert_with(|| Arc::new(JobState::new(job))).clone()
+    }
+
+    /// Declare a queue under an already-validated (or trusted) full
+    /// name, linking it to its job's state when the name is qualified.
+    /// Recovery and replication replay go through here directly: WAL
+    /// and snapshot bytes were validated when first admitted, and
+    /// replaying them must never fail on stricter future rules.
+    pub(crate) fn declare_raw(&self, name: &str) {
+        let jstate = job::split(name).0.map(|j| self.job_state(j));
+        let mut map = self.queues.write().unwrap();
+        map.entry(name.to_string()).or_insert_with(|| {
+            Arc::new(QueueEntry {
+                state: Mutex::new(QueueState { job: jstate, ..QueueState::default() }),
+                readable: Condvar::new(),
+            })
+        });
+    }
+
+    /// [`JobQueueApi::publish_job`] returning (seq, purge epoch) for the
+    /// durability layer's journaling.
+    pub fn publish_job_seq(
+        &self,
+        jobid: &str,
+        queue: &str,
+        payload: &[u8],
+        priority: u64,
+    ) -> Result<(u64, u64)> {
+        job::validate_job_id(jobid)?;
+        job::validate_queue_name(queue)?;
+        self.publish_seq(&job::qualify(jobid, queue), payload, priority)
+    }
+
+    /// [`JobQueueApi::publish_many_job`] returning (first seq, epoch).
+    pub fn publish_many_job_seq(
+        &self,
+        jobid: &str,
+        queue: &str,
+        payloads: &[&[u8]],
+    ) -> Result<(u64, u64)> {
+        job::validate_job_id(jobid)?;
+        job::validate_queue_name(queue)?;
+        self.publish_many_seq(&job::qualify(jobid, queue), payloads)
+    }
+
+    /// Fair-share pull with the delivered message's id (durability).
+    ///
+    /// Deficit round-robin, byte-weighted: the scheduler visits jobs in
+    /// sorted order starting from a rotating cursor; a visited job with
+    /// a ready head message earns one [`FAIR_QUANTUM`] of deficit, and
+    /// is served if its balance covers the head's cost (payload bytes,
+    /// floored at [`FAIR_COST_FLOOR`]). A job whose head is huge skips
+    /// a few turns while its balance accumulates — so a heavy job
+    /// flooding large tasks cannot starve a light job, and vice versa a
+    /// light job's tiny tasks cannot monopolize the fleet either. An
+    /// empty visited queue forfeits its balance (classic DRR: deficit
+    /// only persists while backlogged).
+    ///
+    /// Non-parking by design: with `timeout` zero this answers
+    /// "anything ready across jobs right now?" in one pass. A nonzero
+    /// timeout polls at millisecond granularity (there is no cross-
+    /// queue condvar); the TCP server always calls with zero and lets
+    /// remote agents poll, exactly like their existing task loop.
+    pub fn consume_fair_ids(
+        &self,
+        base: &str,
+        timeout: Duration,
+    ) -> Result<Option<(String, Delivery, MsgId)>> {
+        job::validate_queue_name(base)?;
+        let deadline = Instant::now() + timeout;
+        loop {
+            let jobs: Vec<Arc<JobState>> = {
+                let m = self.jobs.read().unwrap();
+                let mut v: Vec<Arc<JobState>> = m.values().cloned().collect();
+                v.sort_by(|a, b| a.name.cmp(&b.name));
+                v
+            };
+            if !jobs.is_empty() {
+                let start = *self.fair_cursor.lock().unwrap() % jobs.len();
+                for i in 0..jobs.len() {
+                    let idx = (start + i) % jobs.len();
+                    let js = &jobs[idx];
+                    let Ok(entry) = self.entry(&job::qualify(&js.name, base)) else {
+                        continue; // job has no such queue: not eligible
+                    };
+                    let now = Instant::now();
+                    let mut st = entry.state.lock().unwrap();
+                    Self::sweep_locked(&mut st, now);
+                    let Some((_, head)) = st.ready.iter().next() else {
+                        js.deficit.store(0, Ordering::Relaxed);
+                        continue;
+                    };
+                    let cost = (head.payload.len() as u64).max(FAIR_COST_FLOOR);
+                    let mut balance = js.deficit.load(Ordering::Relaxed);
+                    if balance < cost {
+                        balance += FAIR_QUANTUM;
+                    }
+                    if balance < cost {
+                        js.deficit.store(balance, Ordering::Relaxed);
+                        continue;
+                    }
+                    js.deficit.store(balance - cost, Ordering::Relaxed);
+                    let (delivery, id) = self.deliver_head(&mut st, now).unwrap();
+                    drop(st);
+                    *self.fair_cursor.lock().unwrap() = idx + 1;
+                    return Ok(Some((js.name.clone(), delivery, id)));
+                }
+            }
+            if Instant::now() >= deadline {
+                return Ok(None);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Tear a job's queues out of the name map and wake anything parked
+    /// on them (consumers see their queue vanish and time out; remote
+    /// waiters re-poll and get "does not exist"). Returns the number of
+    /// queues removed. The caller-facing entry is
+    /// [`JobQueueApi::remove_job`]; the durability layer compacts its
+    /// log right after so removed queues never replay.
+    pub(crate) fn remove_job_inner(&self, jobid: &str) -> Result<u32> {
+        job::validate_job_id(jobid)?;
+        let prefix = job::qualify(jobid, "");
+        let removed: Vec<Arc<QueueEntry>> = {
+            let mut map = self.queues.write().unwrap();
+            let names: Vec<String> =
+                map.keys().filter(|n| n.starts_with(&prefix)).cloned().collect();
+            names.iter().map(|n| map.remove(n).unwrap()).collect()
+        };
+        self.jobs.write().unwrap().remove(jobid);
+        let count = removed.len() as u32;
+        for entry in removed {
+            let mut st = entry.state.lock().unwrap();
+            st.ready.clear();
+            st.unacked.clear();
+            st.job = None;
+            let waiters = Self::take_waiters(&mut st);
+            drop(st);
+            entry.readable.notify_all();
+            Self::wake_all(waiters);
+        }
+        Ok(count)
     }
 
     // --- persistence ------------------------------------------------------
@@ -543,11 +825,21 @@ impl Broker {
     pub fn restore(bytes: &[u8], visibility_timeout: Duration) -> Result<Broker> {
         let decoded = decode_snapshot(bytes)?;
         let mut queues = HashMap::new();
+        // Jobs rebuild from the namespaced queue names themselves (the
+        // prefix IS the tenant record), usage counters from the
+        // surviving messages. Quotas are runtime policy, not snapshot
+        // state — the operator re-applies them at serve time.
+        let mut jobs: HashMap<String, Arc<JobState>> = HashMap::new();
         let mut max_seq = 0u64;
         for (name, epoch, msgs) in decoded.queues {
-            let mut q = QueueState { epoch, ..QueueState::default() };
+            let jstate = job::split(&name).0.map(|j| {
+                jobs.entry(j.to_string()).or_insert_with(|| Arc::new(JobState::new(j))).clone()
+            });
+            let mut q = QueueState { epoch, job: jstate, ..QueueState::default() };
+            let mut bytes_total = 0u64;
             for m in msgs {
                 max_seq = max_seq.max(m.seq);
+                bytes_total += m.payload.len() as u64;
                 q.ready.insert(
                     (m.priority, m.seq),
                     Msg {
@@ -558,6 +850,7 @@ impl Broker {
                     },
                 );
             }
+            Self::job_add(&q, q.ready.len() as u64, bytes_total);
             queues.insert(
                 name,
                 Arc::new(QueueEntry { state: Mutex::new(q), readable: Condvar::new() }),
@@ -569,6 +862,8 @@ impl Broker {
         let next_seq = decoded.next_seq.unwrap_or(0).max(max_seq + 1);
         Ok(Broker {
             queues: RwLock::new(queues),
+            jobs: RwLock::new(jobs),
+            fair_cursor: Mutex::new(0),
             next_tag: AtomicU64::new(1),
             next_seq: AtomicU64::new(next_seq),
             visibility_timeout,
@@ -646,8 +941,13 @@ pub fn decode_snapshot(bytes: &[u8]) -> Result<SnapshotContents> {
 
 impl QueueApi for Broker {
     fn declare(&self, queue: &str) -> Result<()> {
-        let mut map = self.queues.write().unwrap();
-        map.entry(queue.to_string()).or_default();
+        // Plain declares live in the DEFAULT namespace: reject empty /
+        // oversized names and anything carrying the job separator, so a
+        // hostile or buggy client cannot squat inside a job's prefix
+        // (and bypass its quota). Job-scoped queues are created only
+        // through `declare_job`, which validates each segment.
+        job::validate_queue_name(queue)?;
+        self.declare_raw(queue);
         Ok(())
     }
 
@@ -656,6 +956,7 @@ impl QueueApi for Broker {
     }
 
     fn publish_pri(&self, queue: &str, payload: &[u8], priority: u64) -> Result<()> {
+        job::validate_queue_name(queue)?;
         self.publish_seq(queue, payload, priority).map(|_| ())
     }
 
@@ -683,6 +984,7 @@ impl QueueApi for Broker {
         if let Some((mut msg, _)) = st.unacked.remove(&tag) {
             msg.redelivered = true;
             st.stats.nacked += 1;
+            Self::job_add(&st, 1, msg.payload.len() as u64);
             // Original position — see QueueApi::nack for why.
             st.ready.insert((msg.priority, msg.seq), msg);
         }
@@ -720,6 +1022,7 @@ impl QueueApi for Broker {
         if payloads.is_empty() {
             return Ok(());
         }
+        job::validate_queue_name(queue)?;
         // Seq allocation under the queue lock keeps (priority, seq) order
         // == slice order for the whole batch (see publish_many_seq).
         self.publish_many_seq(queue, payloads).map(|_| ())
@@ -755,6 +1058,7 @@ impl QueueApi for Broker {
             if let Some((mut msg, _)) = st.unacked.remove(tag) {
                 msg.redelivered = true;
                 st.stats.nacked += 1;
+                Self::job_add(&st, 1, msg.payload.len() as u64);
                 st.ready.insert((msg.priority, msg.seq), msg);
                 moved = true;
             }
@@ -766,6 +1070,69 @@ impl QueueApi for Broker {
             Self::wake_all(waiters);
         }
         Ok(())
+    }
+}
+
+impl JobQueueApi for Broker {
+    fn declare_job(&self, jobid: &str, queue: &str) -> Result<()> {
+        job::validate_job_id(jobid)?;
+        job::validate_queue_name(queue)?;
+        self.declare_raw(&job::qualify(jobid, queue));
+        Ok(())
+    }
+
+    fn publish_job(&self, jobid: &str, queue: &str, payload: &[u8], priority: u64) -> Result<()> {
+        self.publish_job_seq(jobid, queue, payload, priority).map(|_| ())
+    }
+
+    fn publish_many_job(&self, jobid: &str, queue: &str, payloads: &[&[u8]]) -> Result<()> {
+        if payloads.is_empty() {
+            return Ok(());
+        }
+        self.publish_many_job_seq(jobid, queue, payloads).map(|_| ())
+    }
+
+    fn consume_fair(&self, base: &str, timeout: Duration) -> Result<Option<(String, Delivery)>> {
+        Ok(self.consume_fair_ids(base, timeout)?.map(|(jobid, d, _)| (jobid, d)))
+    }
+
+    fn list_jobs(&self) -> Result<Vec<JobInfo>> {
+        let jobs: Vec<Arc<JobState>> = {
+            let m = self.jobs.read().unwrap();
+            let mut v: Vec<Arc<JobState>> = m.values().cloned().collect();
+            v.sort_by(|a, b| a.name.cmp(&b.name));
+            v
+        };
+        let queue_counts: HashMap<String, u64> = {
+            let map = self.queues.read().unwrap();
+            let mut counts: HashMap<String, u64> = HashMap::new();
+            for name in map.keys() {
+                if let (Some(j), _) = job::split(name) {
+                    *counts.entry(j.to_string()).or_default() += 1;
+                }
+            }
+            counts
+        };
+        Ok(jobs
+            .into_iter()
+            .map(|js| JobInfo {
+                queues: queue_counts.get(&js.name).copied().unwrap_or(0),
+                ready_msgs: js.ready_msgs.load(Ordering::Relaxed),
+                ready_bytes: js.ready_bytes.load(Ordering::Relaxed),
+                quota: *js.quota.lock().unwrap(),
+                job: js.name.clone(),
+            })
+            .collect())
+    }
+
+    fn set_job_quota(&self, jobid: &str, quota: JobQuota) -> Result<()> {
+        job::validate_job_id(jobid)?;
+        *self.job_state(jobid).quota.lock().unwrap() = quota;
+        Ok(())
+    }
+
+    fn remove_job(&self, jobid: &str) -> Result<u32> {
+        self.remove_job_inner(jobid)
     }
 }
 
@@ -1288,5 +1655,204 @@ mod tests {
         std::thread::sleep(Duration::from_millis(40));
         b.sweep();
         assert_eq!(w.0.load(AtOrd::SeqCst), 2);
+    }
+
+    // --- job namespace / quotas / fair share --------------------------------
+
+    use crate::queue::job::{JobQuota, JobQueueApi, QuotaExceeded, MAX_QUEUE_NAME};
+
+    #[test]
+    fn declare_rejects_hostile_names() {
+        let b = broker_ms(1000);
+        assert!(b.declare("").is_err());
+        assert!(b.declare("a/b").is_err(), "separator must be reserved");
+        assert!(b.declare(&"x".repeat(MAX_QUEUE_NAME + 1)).is_err());
+        assert!(b.declare(&"x".repeat(MAX_QUEUE_NAME)).is_ok());
+    }
+
+    #[test]
+    fn plain_publish_cannot_reach_namespaced_queues() {
+        let b = broker_ms(1000);
+        b.declare_job("A", "tasks").unwrap();
+        // The queue exists, but the plain publish path must refuse the
+        // qualified name: insertion into a job's namespace only goes
+        // through publish_job (which is what enforces the quota).
+        assert!(b.publish("A/tasks", b"x").is_err());
+        assert!(b.publish_many("A/tasks", &[b"x".as_slice()]).is_err());
+        b.publish_job("A", "tasks", b"x", DEFAULT_PRIORITY).unwrap();
+        // Settlement of an existing namespaced queue rides plain ops.
+        let d = b.consume("A/tasks", Duration::from_millis(5)).unwrap().unwrap();
+        b.ack("A/tasks", d.tag).unwrap();
+    }
+
+    #[test]
+    fn job_segments_are_validated() {
+        let b = broker_ms(1000);
+        assert!(b.declare_job("", "q").is_err());
+        assert!(b.declare_job("a/b", "q").is_err());
+        assert!(b.declare_job("A", "x/y").is_err());
+        assert!(b.declare_job("A", "").is_err());
+        assert!(b.publish_job("A", "x/y", b"p", 0).is_err());
+    }
+
+    #[test]
+    fn quota_rejects_over_depth_and_recovers() {
+        let b = broker_ms(1000);
+        b.declare_job("A", "tasks").unwrap();
+        b.set_job_quota("A", JobQuota { max_ready_msgs: 2, max_ready_bytes: 0 }).unwrap();
+        b.publish_job("A", "tasks", b"1", 1).unwrap();
+        b.publish_job("A", "tasks", b"2", 1).unwrap();
+        let err = b.publish_job("A", "tasks", b"3", 1).unwrap_err();
+        assert!(err.downcast_ref::<QuotaExceeded>().is_some(), "want typed error, got {err}");
+        // Delivery frees ready depth: admission is on READY state.
+        let d = b.consume("A/tasks", Duration::from_millis(5)).unwrap().unwrap();
+        b.publish_job("A", "tasks", b"3", 1).unwrap();
+        b.ack("A/tasks", d.tag).unwrap();
+        // Other jobs are untouched by A's quota.
+        b.declare_job("B", "tasks").unwrap();
+        b.publish_job("B", "tasks", b"free", 1).unwrap();
+    }
+
+    #[test]
+    fn quota_byte_axis_and_batch_all_or_nothing() {
+        let b = broker_ms(1000);
+        b.declare_job("A", "tasks").unwrap();
+        b.set_job_quota("A", JobQuota { max_ready_msgs: 0, max_ready_bytes: 8 }).unwrap();
+        b.publish_job("A", "tasks", b"12345", 1).unwrap(); // 5 bytes
+        assert!(b.publish_job("A", "tasks", b"6789a", 1).is_err()); // would be 10
+        // A batch that does not fit is rejected whole.
+        let err =
+            b.publish_many_job("A", "tasks", &[b"ab".as_slice(), b"cd".as_slice()]).unwrap_err();
+        assert!(err.downcast_ref::<QuotaExceeded>().is_some());
+        assert_eq!(b.len("A/tasks").unwrap(), 1, "rejected batch must leave no trace");
+        b.publish_many_job("A", "tasks", &[b"abc".as_slice()]).unwrap(); // 8 total: fits
+    }
+
+    #[test]
+    fn purge_and_nack_keep_job_accounting_consistent() {
+        let b = broker_ms(1000);
+        b.declare_job("A", "tasks").unwrap();
+        b.set_job_quota("A", JobQuota { max_ready_msgs: 2, max_ready_bytes: 0 }).unwrap();
+        b.publish_job("A", "tasks", b"x", 1).unwrap();
+        b.publish_job("A", "tasks", b"y", 1).unwrap();
+        // NACK round-trips depth: deliver (-1) then requeue (+1).
+        let d = b.consume("A/tasks", Duration::from_millis(5)).unwrap().unwrap();
+        b.nack("A/tasks", d.tag).unwrap();
+        assert!(b.publish_job("A", "tasks", b"z", 1).is_err());
+        // Purge resets usage; the quota then admits fresh publishes.
+        b.purge("A/tasks").unwrap();
+        b.publish_job("A", "tasks", b"z", 1).unwrap();
+        b.publish_job("A", "tasks", b"w", 1).unwrap();
+    }
+
+    #[test]
+    fn consume_fair_alternates_between_jobs() {
+        let b = broker_ms(1000);
+        for job in ["heavy", "light"] {
+            b.declare_job(job, "tasks").unwrap();
+        }
+        for i in 0..6u8 {
+            b.publish_job("heavy", "tasks", &[i], 1).unwrap();
+        }
+        b.publish_job("light", "tasks", b"L0", 1).unwrap();
+        b.publish_job("light", "tasks", b"L1", 1).unwrap();
+        let mut served = Vec::new();
+        while let Some((jobid, d, _)) = b.consume_fair_ids("tasks", Duration::ZERO).unwrap() {
+            let q = format!("{jobid}/tasks");
+            b.ack(&q, d.tag).unwrap();
+            served.push(jobid);
+        }
+        assert_eq!(served.len(), 8);
+        // Both light tasks are served within the first four pulls: the
+        // flood of heavy tasks cannot push them to the back.
+        let light_positions: Vec<usize> =
+            served.iter().enumerate().filter(|(_, j)| *j == "light").map(|(i, _)| i).collect();
+        assert!(
+            light_positions.iter().all(|&p| p < 4),
+            "light job starved: served at {light_positions:?} in {served:?}"
+        );
+    }
+
+    #[test]
+    fn consume_fair_accumulates_deficit_for_large_heads() {
+        let b = broker_ms(1000);
+        b.declare_job("big", "tasks").unwrap();
+        b.declare_job("small", "tasks").unwrap();
+        // big's head costs multiple quanta; small's are at the floor.
+        let huge = vec![7u8; 3 * 64 * 1024];
+        b.publish_job("big", "tasks", &huge, 1).unwrap();
+        for i in 0..8u8 {
+            b.publish_job("small", "tasks", &[i], 1).unwrap();
+        }
+        let mut order = Vec::new();
+        while let Some((jobid, d, _)) = b.consume_fair_ids("tasks", Duration::ZERO).unwrap() {
+            b.ack(&format!("{jobid}/tasks"), d.tag).unwrap();
+            order.push(jobid);
+        }
+        assert_eq!(order.len(), 9);
+        assert!(order.contains(&"big".to_string()), "oversized head must eventually serve");
+        // The huge message waits at least a couple of scheduler rounds
+        // while its deficit accumulates — small tasks flow meanwhile.
+        let big_at = order.iter().position(|j| j == "big").unwrap();
+        assert!(big_at >= 2, "huge head served too early (position {big_at}) in {order:?}");
+    }
+
+    #[test]
+    fn consume_fair_skips_default_namespace_and_other_bases() {
+        let b = broker_ms(1000);
+        b.declare("tasks").unwrap(); // default namespace: not a job
+        b.publish("tasks", b"plain").unwrap();
+        b.declare_job("A", "other").unwrap();
+        b.publish_job("A", "other", b"x", 1).unwrap();
+        assert!(b.consume_fair_ids("tasks", Duration::ZERO).unwrap().is_none());
+    }
+
+    #[test]
+    fn remove_job_isolates_survivors() {
+        let b = broker_ms(1000);
+        b.declare_job("A", "tasks").unwrap();
+        b.declare_job("A", "results").unwrap();
+        b.declare_job("B", "tasks").unwrap();
+        b.publish_job("A", "tasks", b"a", 1).unwrap();
+        b.publish_job("B", "tasks", b"b", 1).unwrap();
+        assert_eq!(b.remove_job("A").unwrap(), 2);
+        assert!(b.consume("A/tasks", Duration::from_millis(1)).is_err(), "A's queues are gone");
+        let jobs = b.list_jobs().unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].job, "B");
+        assert_eq!(jobs[0].ready_msgs, 1);
+        let d = b.consume("B/tasks", Duration::from_millis(5)).unwrap().unwrap();
+        assert_eq!(d.payload, b"b");
+    }
+
+    #[test]
+    fn list_jobs_reports_usage_and_quota() {
+        let b = broker_ms(1000);
+        b.declare_job("A", "tasks").unwrap();
+        b.declare_job("A", "results").unwrap();
+        b.set_job_quota("A", JobQuota { max_ready_msgs: 10, max_ready_bytes: 100 }).unwrap();
+        b.publish_job("A", "tasks", b"12345", 1).unwrap();
+        let rows = b.list_jobs().unwrap();
+        assert_eq!(rows.len(), 1);
+        let a = &rows[0];
+        assert_eq!((a.job.as_str(), a.queues, a.ready_msgs, a.ready_bytes), ("A", 2, 1, 5));
+        assert_eq!(a.quota, JobQuota { max_ready_msgs: 10, max_ready_bytes: 100 });
+    }
+
+    #[test]
+    fn restore_rebuilds_job_accounting() {
+        let b = broker_ms(1000);
+        b.declare_job("A", "tasks").unwrap();
+        b.publish_job("A", "tasks", b"abcd", 1).unwrap();
+        b.declare("plain").unwrap();
+        b.publish("plain", b"p").unwrap();
+        let r = Broker::restore(&b.snapshot(), Duration::from_secs(1)).unwrap();
+        let jobs = r.list_jobs().unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!((jobs[0].job.as_str(), jobs[0].ready_msgs, jobs[0].ready_bytes), ("A", 1, 4));
+        // Quotas are policy, not state: restored unlimited, and
+        // re-applying one immediately counts the recovered backlog.
+        r.set_job_quota("A", JobQuota { max_ready_msgs: 1, max_ready_bytes: 0 }).unwrap();
+        assert!(r.publish_job("A", "tasks", b"x", 1).is_err());
     }
 }

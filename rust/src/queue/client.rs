@@ -16,8 +16,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::data::{DataApi, Versioned};
 use crate::queue::durability::replication::ReplSource;
 use crate::queue::durability::ReplStatus;
+use crate::queue::job::{JobInfo, JobQueueApi, JobQuota, QuotaExceeded};
 use crate::queue::server::{body_with_name, roundtrip};
-use crate::queue::wire::{put_bytes, put_u32, BodyReader, Op, ST_NONE, ST_OK};
+use crate::queue::wire::{put_bytes, put_str, put_u32, BodyReader, Op, ST_NONE, ST_OK, ST_QUOTA};
 use crate::queue::{Delivery, QueueApi, QueueStats};
 
 /// Extra slack on the socket read deadline beyond protocol-level timeouts.
@@ -281,6 +282,113 @@ impl QueueApi for RemoteQueue {
         self.conn
             .expect_ok(Op::NackMany, &body_with_name(queue, &tags_body(tags)))?;
         Ok(())
+    }
+}
+
+impl JobQueueApi for RemoteQueue {
+    fn declare_job(&self, job: &str, queue: &str) -> Result<()> {
+        let mut body = Vec::with_capacity(4 + job.len() + queue.len());
+        put_str(&mut body, job);
+        put_str(&mut body, queue);
+        self.conn.expect_ok(Op::DeclareJob, &body)?;
+        Ok(())
+    }
+
+    fn publish_job(&self, job: &str, queue: &str, payload: &[u8], priority: u64) -> Result<()> {
+        let mut body = Vec::with_capacity(12 + job.len() + queue.len() + payload.len());
+        put_str(&mut body, job);
+        put_str(&mut body, queue);
+        body.extend_from_slice(&priority.to_le_bytes());
+        body.extend_from_slice(payload);
+        let (st, resp) = self.conn.call(Op::PublishJob, &body, None)?;
+        quota_checked(st, resp, job, "publish_job")
+    }
+
+    fn publish_many_job(&self, job: &str, queue: &str, payloads: &[&[u8]]) -> Result<()> {
+        if payloads.is_empty() {
+            return Ok(());
+        }
+        let total: usize = payloads.iter().map(|p| p.len() + 4).sum();
+        let mut body = Vec::with_capacity(8 + job.len() + queue.len() + total);
+        put_str(&mut body, job);
+        put_str(&mut body, queue);
+        put_u32(&mut body, payloads.len() as u32);
+        for p in payloads {
+            put_bytes(&mut body, p);
+        }
+        let (st, resp) = self.conn.call(Op::PublishManyJob, &body, None)?;
+        quota_checked(st, resp, job, "publish_many_job")
+    }
+
+    fn consume_fair(&self, base: &str, timeout: Duration) -> Result<Option<(String, Delivery)>> {
+        let mut body = Vec::with_capacity(10 + base.len());
+        put_str(&mut body, base);
+        body.extend_from_slice(&(timeout.as_millis() as u64).to_le_bytes());
+        let (st, resp) = self.conn.call(Op::ConsumeFair, &body, Some(timeout))?;
+        match st {
+            ST_NONE => Ok(None),
+            ST_OK => {
+                let mut r = BodyReader::new(&resp);
+                let jobid = r.str()?.to_string();
+                let tag = r.u64()?;
+                let redelivered = r.u8()? != 0;
+                let d = Delivery { tag, payload: r.rest().to_vec(), redelivered };
+                Ok(Some((jobid, d)))
+            }
+            _ => Err(anyhow!(
+                "consume_fair failed: {}",
+                String::from_utf8_lossy(&resp)
+            )),
+        }
+    }
+
+    fn list_jobs(&self) -> Result<Vec<JobInfo>> {
+        let resp = self.conn.expect_ok(Op::ListJobs, &[])?;
+        let mut r = BodyReader::new(&resp);
+        let n = r.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(resp.len())); // sanity bound
+        for _ in 0..n {
+            let job = r.str()?.to_string();
+            out.push(JobInfo {
+                job,
+                queues: r.u64()?,
+                ready_msgs: r.u64()?,
+                ready_bytes: r.u64()?,
+                quota: JobQuota { max_ready_msgs: r.u64()?, max_ready_bytes: r.u64()? },
+            });
+        }
+        Ok(out)
+    }
+
+    fn set_job_quota(&self, job: &str, quota: JobQuota) -> Result<()> {
+        let mut body = Vec::with_capacity(18 + job.len());
+        put_str(&mut body, job);
+        body.extend_from_slice(&quota.max_ready_msgs.to_le_bytes());
+        body.extend_from_slice(&quota.max_ready_bytes.to_le_bytes());
+        self.conn.expect_ok(Op::SetJobQuota, &body)?;
+        Ok(())
+    }
+
+    fn remove_job(&self, job: &str) -> Result<u32> {
+        let mut body = Vec::with_capacity(2 + job.len());
+        put_str(&mut body, job);
+        let resp = self.conn.expect_ok(Op::RemoveJob, &body)?;
+        BodyReader::new(&resp).u32()
+    }
+}
+
+/// Map an `ST_QUOTA` reply back to the typed [`QuotaExceeded`] error the
+/// broker raised (the body is the detail; the job id came from our own
+/// request). The status rides IN-BAND — a clean `(status, body)` frame —
+/// so the connection stays healthy: only transport failures poison it.
+fn quota_checked(st: u8, resp: Vec<u8>, job: &str, what: &str) -> Result<()> {
+    match st {
+        ST_OK => Ok(()),
+        ST_QUOTA => Err(anyhow::Error::new(QuotaExceeded {
+            job: job.to_string(),
+            detail: String::from_utf8_lossy(&resp).into_owned(),
+        })),
+        _ => Err(anyhow!("{what} failed: {}", String::from_utf8_lossy(&resp))),
     }
 }
 

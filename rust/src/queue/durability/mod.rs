@@ -80,6 +80,7 @@ use anyhow::{bail, Context, Result};
 
 use self::wal::{read_wal, Record, WalWriter};
 use super::broker::{decode_snapshot, Broker, MsgId, SnapshotContents};
+use super::job::{self, JobInfo, JobQueueApi, JobQuota};
 use super::{Delivery, QueueApi, QueueService, QueueStats, DEFAULT_PRIORITY};
 use crate::obs;
 
@@ -319,7 +320,10 @@ impl ReplayState {
         let mut messages = 0usize;
         let queues = self.queues.len();
         for (name, msgs) in self.queues {
-            inner.declare(&name)?;
+            // Raw declare: recovered names were validated when first
+            // admitted (and may be job-qualified, which the validated
+            // `declare` rejects by design).
+            inner.declare_raw(&name);
             for ((priority, seq), (payload, redelivered, _epoch)) in msgs {
                 inner.insert_raw(&name, payload, priority, seq, redelivered)?;
                 messages += 1;
@@ -731,6 +735,39 @@ impl DurableBroker {
         }
         Ok(())
     }
+
+    /// Journal a published batch in record-sized chunks over adjacent
+    /// seq ranges: replay rebuilds the identical batch (seqs are what
+    /// order it), and no single record can outgrow the recovery or
+    /// replication frames. Shared by the plain and job-scoped batch
+    /// publishes — both journal the standard `PublishMany` record, one
+    /// under the bare name, one under the qualified name.
+    fn journal_publish_many(
+        &self,
+        queue: &str,
+        first_seq: u64,
+        epoch: u64,
+        payloads: &[&[u8]],
+    ) -> Result<()> {
+        let mut start = 0usize;
+        while start < payloads.len() {
+            let mut end = start;
+            let mut bytes = 0usize;
+            while end < payloads.len() {
+                let item = payloads[end].len() + 4;
+                if end > start && bytes + item > MAX_PUBLISH_MANY_RECORD {
+                    break;
+                }
+                bytes += item;
+                end += 1;
+            }
+            let chunk = &payloads[start..end];
+            let seq = first_seq + start as u64;
+            self.log(|w| w.publish_many(queue, DEFAULT_PRIORITY, seq, epoch, chunk))?;
+            start = end;
+        }
+        Ok(())
+    }
 }
 
 impl Drop for DurableBroker {
@@ -824,27 +861,7 @@ impl QueueApi for DurableBroker {
             check_journalable(p.len())?; // reject BEFORE any state changes
         }
         let (first_seq, epoch) = self.inner.publish_many_seq(queue, payloads)?;
-        // Journal in record-sized chunks over adjacent seq ranges: replay
-        // rebuilds the identical batch (seqs are what order it), and no
-        // single record can outgrow the recovery or replication frames.
-        let mut start = 0usize;
-        while start < payloads.len() {
-            let mut end = start;
-            let mut bytes = 0usize;
-            while end < payloads.len() {
-                let item = payloads[end].len() + 4;
-                if end > start && bytes + item > MAX_PUBLISH_MANY_RECORD {
-                    break;
-                }
-                bytes += item;
-                end += 1;
-            }
-            let chunk = &payloads[start..end];
-            let seq = first_seq + start as u64;
-            self.log(|w| w.publish_many(queue, DEFAULT_PRIORITY, seq, epoch, chunk))?;
-            start = end;
-        }
-        Ok(())
+        self.journal_publish_many(queue, first_seq, epoch, payloads)
     }
 
     fn consume_many(&self, queue: &str, max: usize, timeout: Duration) -> Result<Vec<Delivery>> {
@@ -886,6 +903,88 @@ impl QueueApi for DurableBroker {
             return Ok(());
         }
         self.log(|w| w.nacked(queue, &ids))
+    }
+}
+
+/// Job-scoped ops journal through the SAME record types as the plain
+/// ops, just under the qualified (`"job/queue"`) name — the WAL codec and
+/// the snapshot codec are untouched, which is what keeps a single-job
+/// deployment's bytes identical to before the namespace existed. Replay
+/// re-links each queue to its job from the name prefix (`declare_raw`),
+/// and [`Broker::restore`]/recovery rebuild per-job usage by summing the
+/// survivors.
+impl JobQueueApi for DurableBroker {
+    fn declare_job(&self, jobid: &str, queue: &str) -> Result<()> {
+        self.inner.declare_job(jobid, queue)?;
+        if !self.journaling() {
+            return Ok(());
+        }
+        let name = job::qualify(jobid, queue);
+        self.log(|w| w.declare(&name).map(|_| ()))
+    }
+
+    fn publish_job(&self, jobid: &str, queue: &str, payload: &[u8], priority: u64) -> Result<()> {
+        if !self.journaling() {
+            return self.inner.publish_job(jobid, queue, payload, priority);
+        }
+        check_journalable(payload.len())?;
+        // Admission (quota) runs inside the broker BEFORE any mutation,
+        // so a rejected publish journals nothing.
+        let (seq, epoch) = self.inner.publish_job_seq(jobid, queue, payload, priority)?;
+        let name = job::qualify(jobid, queue);
+        self.log(|w| w.publish(&name, priority, seq, epoch, payload))
+    }
+
+    fn publish_many_job(&self, jobid: &str, queue: &str, payloads: &[&[u8]]) -> Result<()> {
+        if payloads.is_empty() {
+            return Ok(());
+        }
+        if !self.journaling() {
+            return self.inner.publish_many_job(jobid, queue, payloads);
+        }
+        for p in payloads {
+            check_journalable(p.len())?; // reject BEFORE any state changes
+        }
+        let (first_seq, epoch) = self.inner.publish_many_job_seq(jobid, queue, payloads)?;
+        let name = job::qualify(jobid, queue);
+        self.journal_publish_many(&name, first_seq, epoch, payloads)
+    }
+
+    fn consume_fair(&self, base: &str, timeout: Duration) -> Result<Option<(String, Delivery)>> {
+        if !self.journaling() {
+            return self.inner.consume_fair(base, timeout);
+        }
+        match self.inner.consume_fair_ids(base, timeout)? {
+            None => Ok(None),
+            Some((jobid, d, id)) => {
+                let name = job::qualify(&jobid, base);
+                self.log(|w| w.delivered(&name, &[id]))?;
+                Ok(Some((jobid, d)))
+            }
+        }
+    }
+
+    fn list_jobs(&self) -> Result<Vec<JobInfo>> {
+        self.inner.list_jobs()
+    }
+
+    fn set_job_quota(&self, jobid: &str, quota: JobQuota) -> Result<()> {
+        // Quotas are runtime POLICY, not queue state: they are not
+        // journaled and do not survive a restart (the operator's config
+        // re-applies them at boot — see `--job_quotas`). Journaling them
+        // would change the WAL record vocabulary and break the
+        // byte-compat guarantee for nothing the recovery story needs.
+        self.inner.set_job_quota(jobid, quota)
+    }
+
+    fn remove_job(&self, jobid: &str) -> Result<u32> {
+        let removed = self.inner.remove_job_inner(jobid)?;
+        // Compaction is the durability point for removal: the fresh
+        // snapshot no longer holds the removed queues and the new
+        // segment's preamble no longer declares them, so nothing of the
+        // job can ever replay — without adding a WAL record type.
+        self.compact()?;
+        Ok(removed)
     }
 }
 
@@ -1217,6 +1316,43 @@ mod tests {
         // Acked [0] gone; unacked [1] back first (original slot) and
         // flagged; never-delivered [2], [3] back unflagged.
         assert_eq!(got, vec![(1, true), (2, false), (3, false)]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn job_queues_recover_with_their_accounting() {
+        let dir = tmpdir("jobs");
+        {
+            let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+            b.declare_job("alpha", "tasks").unwrap();
+            b.declare_job("beta", "tasks").unwrap();
+            b.publish_job("alpha", "tasks", b"a0", 1).unwrap();
+            b.publish_job("beta", "tasks", b"b0", 1).unwrap();
+            let (jobid, d) = b.consume_fair("tasks", POLL).unwrap().unwrap();
+            b.ack(&job::qualify(&jobid, "tasks"), d.tag).unwrap();
+        }
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+        let rows = b.list_jobs().unwrap();
+        assert_eq!(rows.len(), 2, "both jobs re-link from the name prefix");
+        let total: u64 = rows.iter().map(|r| r.ready_msgs).sum();
+        assert_eq!(total, 1, "the acked message must not count after recovery");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn removed_job_never_replays_but_survivors_do() {
+        let dir = tmpdir("rmjob");
+        {
+            let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+            b.declare_job("doomed", "tasks").unwrap();
+            b.publish_job("doomed", "tasks", b"x", 1).unwrap();
+            b.declare_job("kept", "tasks").unwrap();
+            b.publish_job("kept", "tasks", b"y", 1).unwrap();
+            assert_eq!(b.remove_job("doomed").unwrap(), 1);
+        }
+        let b = DurableBroker::open(&dir, opts(SyncPolicy::Always)).unwrap();
+        assert!(b.len("doomed/tasks").is_err(), "removed job must not replay");
+        assert_eq!(b.len("kept/tasks").unwrap(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,412 @@
+//! Job (tenant) namespace for the broker: N isolated problems on one
+//! fleet.
+//!
+//! The paper trains exactly one LSTM, so every layer below this module
+//! historically assumed a single flat namespace of queue-name strings.
+//! MLitB and Pando (PAPERS.md) both frame browser volunteers as a
+//! *general* computing resource serving many concurrent problems; this
+//! module introduces the tenant boundary that makes that safe.
+//!
+//! Design: a job is a NAME PREFIX inside the queue-name string —
+//! `"{job}/{queue}"`, with [`JOB_SEP`] reserved. Riding the prefix
+//! inside the existing string keys means the qid-interned WAL, the
+//! snapshot codec, replication, and the sharded queue all become
+//! per-job isolated *for free* (names are their unit of isolation
+//! already), and a single-job deployment — whose names never contain
+//! the separator — produces byte-identical wire frames, WAL bytes, and
+//! snapshots to the pre-tenant code (golden-tested in
+//! rust/tests/multi_job.rs).
+//!
+//! Enforcement lives in three places:
+//! - **Name validation** ([`validate_queue_name`] / [`validate_job_id`]):
+//!   plain `declare`/`publish` reject empty names, names over
+//!   [`MAX_QUEUE_NAME`] bytes, and names containing the separator, so a
+//!   hostile or buggy client cannot collide with the namespaced layout.
+//!   Job-scoped ops validate the two segments independently and are the
+//!   only route that creates namespaced queues.
+//! - **Admission control** ([`JobQuota`]): per-job caps on total ready
+//!   depth and ready bytes, checked at publish time under the queue
+//!   lock. An over-quota publish fails with a typed [`QuotaExceeded`]
+//!   that the server maps to the in-band `ST_QUOTA` wire status — a
+//!   clean rejection, not an OOM and not a poisoned connection.
+//! - **Fair-share scheduling**: deficit round-robin across jobs on the
+//!   shared pull path (`Broker::consume_fair`), so a heavy job flooding
+//!   its task queue cannot starve a light one (byte-weighted; see the
+//!   broker for the DRR details).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::{Delivery, QueueApi, DEFAULT_PRIORITY};
+use crate::data::{DataApi, Versioned};
+
+/// Reserved separator between the job id and the queue base name.
+/// Plain (non-job) queue names may never contain it.
+pub const JOB_SEP: char = '/';
+
+/// Length cap for one queue name segment, in bytes. Far below the wire
+/// codec's u16 string limit, so a validated name always encodes.
+pub const MAX_QUEUE_NAME: usize = 255;
+
+/// Length cap for a job id, in bytes.
+pub const MAX_JOB_ID: usize = 64;
+
+/// Validate a plain queue name (or the base-name segment of a job-scoped
+/// one): non-empty, at most [`MAX_QUEUE_NAME`] bytes, no [`JOB_SEP`].
+pub fn validate_queue_name(name: &str) -> Result<()> {
+    if name.is_empty() {
+        bail!("queue name must not be empty");
+    }
+    if name.len() > MAX_QUEUE_NAME {
+        bail!("queue name is {} bytes (cap {MAX_QUEUE_NAME})", name.len());
+    }
+    if name.contains(JOB_SEP) {
+        bail!("queue name {name:?} contains reserved job separator '{JOB_SEP}'");
+    }
+    Ok(())
+}
+
+/// Validate a job id: non-empty, at most [`MAX_JOB_ID`] bytes, no
+/// [`JOB_SEP`].
+pub fn validate_job_id(job: &str) -> Result<()> {
+    if job.is_empty() {
+        bail!("job id must not be empty");
+    }
+    if job.len() > MAX_JOB_ID {
+        bail!("job id is {} bytes (cap {MAX_JOB_ID})", job.len());
+    }
+    if job.contains(JOB_SEP) {
+        bail!("job id {job:?} contains reserved separator '{JOB_SEP}'");
+    }
+    Ok(())
+}
+
+/// The fully qualified queue name a (job, base) pair maps to.
+pub fn qualify(job: &str, queue: &str) -> String {
+    format!("{job}{JOB_SEP}{queue}")
+}
+
+/// Split a stored queue name into its (job, base) parts. Names without
+/// the separator belong to the DEFAULT (unprefixed) namespace — exactly
+/// the names a single-job deployment uses.
+pub fn split(name: &str) -> (Option<&str>, &str) {
+    match name.split_once(JOB_SEP) {
+        Some((job, base)) => (Some(job), base),
+        None => (None, name),
+    }
+}
+
+/// Per-job admission-control limits. `0` means unlimited. Quotas bound
+/// READY state (depth and payload bytes queued but not yet delivered);
+/// in-flight (unacked) messages already cost the publisher nothing new.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JobQuota {
+    /// Max ready messages across all of the job's queues (0 = unlimited).
+    pub max_ready_msgs: u64,
+    /// Max ready payload bytes across all of the job's queues
+    /// (0 = unlimited).
+    pub max_ready_bytes: u64,
+}
+
+impl JobQuota {
+    pub fn unlimited() -> Self {
+        JobQuota::default()
+    }
+
+    pub fn is_unlimited(&self) -> bool {
+        self.max_ready_msgs == 0 && self.max_ready_bytes == 0
+    }
+}
+
+/// Parse a `--job_quotas` CLI spec: comma-separated
+/// `job=<max_msgs>:<max_bytes>` entries, `0` meaning unlimited on that
+/// axis. Example: `heavy=1000:1048576,light=0:0`.
+pub fn parse_quota_spec(spec: &str) -> Result<Vec<(String, JobQuota)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let Some((job, caps)) = part.split_once('=') else {
+            bail!("bad quota entry {part:?} (want job=<max_msgs>:<max_bytes>)");
+        };
+        validate_job_id(job)?;
+        let Some((msgs, bytes)) = caps.split_once(':') else {
+            bail!("bad quota caps {caps:?} (want <max_msgs>:<max_bytes>)");
+        };
+        let quota = JobQuota {
+            max_ready_msgs: msgs.parse().map_err(|_| anyhow::anyhow!("bad max_msgs {msgs:?}"))?,
+            max_ready_bytes: bytes
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad max_bytes {bytes:?}"))?,
+        };
+        out.push((job.to_string(), quota));
+    }
+    Ok(out)
+}
+
+/// Typed error for an over-quota publish. The server downcasts to this
+/// to answer with the in-band `ST_QUOTA` status (connection stays
+/// healthy); `RemoteQueue` re-raises it client-side so callers can
+/// back off without reconnecting.
+#[derive(Debug, Clone)]
+pub struct QuotaExceeded {
+    pub job: String,
+    pub detail: String,
+}
+
+impl std::fmt::Display for QuotaExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job '{}' over quota: {}", self.job, self.detail)
+    }
+}
+
+impl std::error::Error for QuotaExceeded {}
+
+/// One row of a `ListJobs` answer: live per-job usage plus the quota in
+/// force.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobInfo {
+    pub job: String,
+    /// Queues currently declared under this job's prefix.
+    pub queues: u64,
+    pub ready_msgs: u64,
+    pub ready_bytes: u64,
+    pub quota: JobQuota,
+}
+
+/// Job-scoped extension of [`QueueApi`]. Implemented by every queue
+/// backend (`Broker`, `DurableBroker`, `RemoteQueue`, `ShardedQueue`),
+/// so the [`JobQueue`] decorator — and therefore the whole
+/// initiator/agent stack — runs identically in-process and over the
+/// wire.
+///
+/// These entry points are the ONLY route that creates or fills
+/// namespaced queues: they validate the job id and base name as
+/// separate segments, while the plain [`QueueApi`] declare/publish
+/// paths reject any name containing [`JOB_SEP`]. Settlement and
+/// introspection of an existing namespaced queue (consume / ack / nack
+/// / len / stats / purge) ride the plain ops on the qualified name —
+/// those cannot create state, so no separate variants are needed.
+pub trait JobQueueApi: QueueApi {
+    /// Declare `queue` under `job`, registering the job on first use.
+    fn declare_job(&self, job: &str, queue: &str) -> Result<()>;
+
+    /// Publish into a job's queue at an explicit priority, subject to
+    /// the job's [`JobQuota`] (fails with [`QuotaExceeded`] inside the
+    /// error chain when over).
+    fn publish_job(&self, job: &str, queue: &str, payload: &[u8], priority: u64) -> Result<()>;
+
+    /// Batched [`JobQueueApi::publish_job`] at the default priority.
+    /// Admission is all-or-nothing: either the whole batch fits under
+    /// the quota or none of it is applied.
+    fn publish_many_job(&self, job: &str, queue: &str, payloads: &[&[u8]]) -> Result<()>;
+
+    /// Fair-share pull: deliver one ready message from SOME job's
+    /// `base` queue, chosen by deficit round-robin across jobs, and
+    /// report which job it came from. Non-parking: a zero timeout asks
+    /// "anything ready right now?" and callers poll (the agents already
+    /// run a poll loop).
+    fn consume_fair(&self, base: &str, timeout: Duration) -> Result<Option<(String, Delivery)>>;
+
+    /// Live usage + quota per registered job, sorted by job id.
+    fn list_jobs(&self) -> Result<Vec<JobInfo>>;
+
+    /// Install (or replace) a job's quota, registering the job if new.
+    fn set_job_quota(&self, job: &str, quota: JobQuota) -> Result<()>;
+
+    /// Drop a job wholesale: every queue under its prefix, its quota,
+    /// and its scheduler state. Returns the number of queues removed.
+    fn remove_job(&self, job: &str) -> Result<u32>;
+}
+
+/// View of one job's namespace as a plain [`QueueApi`]: qualifies every
+/// queue name with the job prefix and routes creation/insertion through
+/// the validated job-scoped entry points. The initiator, agents, and
+/// driver all run UNCHANGED against this view — multi-tenancy is a
+/// deployment decision, not an application rewrite.
+pub struct JobQueue {
+    job: String,
+    inner: Arc<dyn JobQueueApi>,
+}
+
+impl JobQueue {
+    pub fn new(job: &str, inner: Arc<dyn JobQueueApi>) -> Result<Self> {
+        validate_job_id(job)?;
+        Ok(JobQueue { job: job.to_string(), inner })
+    }
+
+    pub fn job(&self) -> &str {
+        &self.job
+    }
+
+    fn q(&self, queue: &str) -> String {
+        qualify(&self.job, queue)
+    }
+}
+
+impl QueueApi for JobQueue {
+    fn declare(&self, queue: &str) -> Result<()> {
+        self.inner.declare_job(&self.job, queue)
+    }
+
+    fn publish(&self, queue: &str, payload: &[u8]) -> Result<()> {
+        self.inner.publish_job(&self.job, queue, payload, DEFAULT_PRIORITY)
+    }
+
+    fn publish_pri(&self, queue: &str, payload: &[u8], priority: u64) -> Result<()> {
+        self.inner.publish_job(&self.job, queue, payload, priority)
+    }
+
+    fn consume(&self, queue: &str, timeout: Duration) -> Result<Option<Delivery>> {
+        self.inner.consume(&self.q(queue), timeout)
+    }
+
+    fn ack(&self, queue: &str, tag: u64) -> Result<()> {
+        self.inner.ack(&self.q(queue), tag)
+    }
+
+    fn nack(&self, queue: &str, tag: u64) -> Result<()> {
+        self.inner.nack(&self.q(queue), tag)
+    }
+
+    fn len(&self, queue: &str) -> Result<usize> {
+        self.inner.len(&self.q(queue))
+    }
+
+    fn purge(&self, queue: &str) -> Result<()> {
+        self.inner.purge(&self.q(queue))
+    }
+
+    fn stats(&self, queue: &str) -> Result<super::QueueStats> {
+        self.inner.stats(&self.q(queue))
+    }
+
+    fn publish_many(&self, queue: &str, payloads: &[&[u8]]) -> Result<()> {
+        self.inner.publish_many_job(&self.job, queue, payloads)
+    }
+
+    fn consume_many(&self, queue: &str, max: usize, timeout: Duration) -> Result<Vec<Delivery>> {
+        self.inner.consume_many(&self.q(queue), max, timeout)
+    }
+
+    fn ack_many(&self, queue: &str, tags: &[u64]) -> Result<()> {
+        self.inner.ack_many(&self.q(queue), tags)
+    }
+
+    fn nack_many(&self, queue: &str, tags: &[u64]) -> Result<()> {
+        self.inner.nack_many(&self.q(queue), tags)
+    }
+}
+
+/// The data-store side of a job's view: every key gains the same
+/// `"{job}/{key}"` prefix, so two jobs' models, corpora, and counters
+/// can never collide on one store.
+pub struct JobData {
+    job: String,
+    inner: Arc<dyn DataApi>,
+}
+
+impl JobData {
+    pub fn new(job: &str, inner: Arc<dyn DataApi>) -> Result<Self> {
+        validate_job_id(job)?;
+        Ok(JobData { job: job.to_string(), inner })
+    }
+
+    fn k(&self, key: &str) -> String {
+        qualify(&self.job, key)
+    }
+}
+
+impl DataApi for JobData {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.inner.put(&self.k(key), bytes)
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        self.inner.get(&self.k(key))
+    }
+
+    fn del(&self, key: &str) -> Result<bool> {
+        self.inner.del(&self.k(key))
+    }
+
+    fn put_versioned(&self, key: &str, version: u64, bytes: &[u8]) -> Result<()> {
+        self.inner.put_versioned(&self.k(key), version, bytes)
+    }
+
+    fn get_versioned(&self, key: &str) -> Result<Option<Versioned>> {
+        self.inner.get_versioned(&self.k(key))
+    }
+
+    fn wait_version(
+        &self,
+        key: &str,
+        min_version: u64,
+        timeout: Duration,
+    ) -> Result<Option<Versioned>> {
+        self.inner.wait_version(&self.k(key), min_version, timeout)
+    }
+
+    fn incr(&self, key: &str) -> Result<u64> {
+        self.inner.incr(&self.k(key))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_validation_rejects_hostile_inputs() {
+        assert!(validate_queue_name("tasks").is_ok());
+        assert!(validate_queue_name("results.map.e0.b1").is_ok());
+        assert!(validate_queue_name("").is_err());
+        assert!(validate_queue_name("a/b").is_err());
+        assert!(validate_queue_name("/").is_err());
+        assert!(validate_queue_name(&"x".repeat(MAX_QUEUE_NAME)).is_ok());
+        assert!(validate_queue_name(&"x".repeat(MAX_QUEUE_NAME + 1)).is_err());
+    }
+
+    #[test]
+    fn job_id_validation() {
+        assert!(validate_job_id("jobA").is_ok());
+        assert!(validate_job_id("").is_err());
+        assert!(validate_job_id("a/b").is_err());
+        assert!(validate_job_id(&"j".repeat(MAX_JOB_ID)).is_ok());
+        assert!(validate_job_id(&"j".repeat(MAX_JOB_ID + 1)).is_err());
+    }
+
+    #[test]
+    fn qualify_and_split_roundtrip() {
+        assert_eq!(qualify("A", "tasks"), "A/tasks");
+        assert_eq!(split("A/tasks"), (Some("A"), "tasks"));
+        assert_eq!(split("tasks"), (None, "tasks"));
+        // Only the FIRST separator splits: base names never contain one
+        // (validated), so anything after it belongs to the base.
+        assert_eq!(split("A/x/y"), (Some("A"), "x/y"));
+    }
+
+    #[test]
+    fn quota_spec_parses() {
+        let got = parse_quota_spec("heavy=1000:1048576,light=0:0").unwrap();
+        assert_eq!(
+            got,
+            vec![
+                ("heavy".into(), JobQuota { max_ready_msgs: 1000, max_ready_bytes: 1048576 }),
+                ("light".into(), JobQuota::unlimited()),
+            ]
+        );
+        assert!(parse_quota_spec("nocaps").is_err());
+        assert!(parse_quota_spec("j=5").is_err());
+        assert!(parse_quota_spec("j=x:1").is_err());
+        assert!(parse_quota_spec("a/b=1:1").is_err());
+        assert!(parse_quota_spec("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn quota_exceeded_displays_job() {
+        let e = QuotaExceeded { job: "heavy".into(), detail: "ready depth 10 >= cap 10".into() };
+        let s = e.to_string();
+        assert!(s.contains("heavy") && s.contains("quota"), "{s}");
+    }
+}

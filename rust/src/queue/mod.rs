@@ -130,6 +130,7 @@
 pub mod broker;
 pub mod client;
 pub mod durability;
+pub mod job;
 pub mod server;
 pub mod sharded;
 pub mod wire;
@@ -175,11 +176,12 @@ pub trait ReadyWaker: Send + Sync {
     fn wake(&self);
 }
 
-/// What the TCP [`server`] hosts: the queue operations plus the periodic
-/// visibility sweep. Implemented by the plain in-process
-/// [`broker::Broker`] and the WAL-backed [`durability::DurableBroker`],
-/// so one `serve` call hosts either.
-pub trait QueueService: QueueApi {
+/// What the TCP [`server`] hosts: the queue operations (plain AND
+/// job-scoped — see [`job::JobQueueApi`]) plus the periodic visibility
+/// sweep. Implemented by the plain in-process [`broker::Broker`] and
+/// the WAL-backed [`durability::DurableBroker`], so one `serve` call
+/// hosts either.
+pub trait QueueService: job::JobQueueApi {
     /// Requeue expired unACKed messages (no-op default for backends that
     /// sweep internally).
     fn sweep(&self) {}

@@ -67,9 +67,10 @@ use anyhow::Result;
 
 use crate::data::{DataApi, Store};
 use crate::obs;
+use crate::queue::job::{JobQueueApi, JobQuota, QuotaExceeded};
 use crate::queue::wire::{
     put_bytes, put_str, put_u32, read_frame, write_frame, BodyReader, Op, MAX_FRAME, ST_ERR,
-    ST_NONE, ST_OK,
+    ST_NONE, ST_OK, ST_QUOTA,
 };
 use crate::queue::{QueueApi, QueueService};
 
@@ -1504,7 +1505,99 @@ fn execute_op_with(
             out.extend_from_slice(&chunk);
             (ST_OK, out)
         }
+        // --- job (tenant) namespace ops (queue/job.rs) ----------------------
+        Op::DeclareJob => {
+            let jobid = r.str()?;
+            broker.declare_job(jobid, r.str()?)?;
+            (ST_OK, Vec::new())
+        }
+        Op::PublishJob => {
+            let jobid = r.str()?;
+            let q = r.str()?;
+            let pri = r.u64()?;
+            match broker.publish_job(jobid, q, r.rest(), pri) {
+                Ok(()) => (ST_OK, Vec::new()),
+                Err(e) => quota_status(e)?,
+            }
+        }
+        Op::PublishManyJob => {
+            let jobid = r.str()?;
+            let q = r.str()?;
+            let n = r.u32()? as usize;
+            // Same hostile-count audit as Op::PublishMany (division form:
+            // `n * 4` wraps usize on 32-bit targets).
+            if n > body.len() / 4 {
+                anyhow::bail!("batch count {n} exceeds body size");
+            }
+            let mut payloads = Vec::with_capacity(n);
+            for _ in 0..n {
+                payloads.push(r.bytes()?);
+            }
+            match broker.publish_many_job(jobid, q, &payloads) {
+                Ok(()) => (ST_OK, Vec::new()),
+                Err(e) => quota_status(e)?,
+            }
+        }
+        Op::ConsumeFair => {
+            let base = r.str()?;
+            // Never parks: the deficit-round-robin pull has no single
+            // queue to register a waiter on, so the event loop answers
+            // from what is ready right now and remote agents poll.
+            let timeout = op_timeout(Duration::from_millis(r.u64()?));
+            match broker.consume_fair(base, timeout)? {
+                Some((jobid, d)) => {
+                    let mut out = Vec::with_capacity(11 + jobid.len() + d.payload.len());
+                    put_str(&mut out, &jobid);
+                    out.extend_from_slice(&d.tag.to_le_bytes());
+                    out.push(d.redelivered as u8);
+                    out.extend_from_slice(&d.payload);
+                    (ST_OK, out)
+                }
+                None => (ST_NONE, Vec::new()),
+            }
+        }
+        Op::ListJobs => {
+            let rows = broker.list_jobs()?;
+            let mut out = Vec::new();
+            put_u32(&mut out, rows.len() as u32);
+            for j in &rows {
+                put_str(&mut out, &j.job);
+                for v in [
+                    j.queues,
+                    j.ready_msgs,
+                    j.ready_bytes,
+                    j.quota.max_ready_msgs,
+                    j.quota.max_ready_bytes,
+                ] {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            (ST_OK, out)
+        }
+        Op::SetJobQuota => {
+            let jobid = r.str()?;
+            let quota = JobQuota { max_ready_msgs: r.u64()?, max_ready_bytes: r.u64()? };
+            broker.set_job_quota(jobid, quota)?;
+            (ST_OK, Vec::new())
+        }
+        Op::RemoveJob => {
+            let removed = broker.remove_job(r.str()?)?;
+            (ST_OK, removed.to_le_bytes().to_vec())
+        }
     })
+}
+
+/// Map an over-quota publish to the in-band [`ST_QUOTA`] status; every
+/// other error propagates (and poisons nothing — the dispatch loop
+/// answers `ST_ERR` with the message, same as always). The body carries
+/// only the detail: the requester named the job in its own request, and
+/// shipping the bare detail lets `RemoteQueue` reconstruct the typed
+/// [`QuotaExceeded`] exactly as the broker raised it.
+fn quota_status(e: anyhow::Error) -> Result<(u8, Vec<u8>)> {
+    match e.downcast_ref::<QuotaExceeded>() {
+        Some(q) => Ok((ST_QUOTA, q.detail.clone().into_bytes())),
+        None => Err(e),
+    }
 }
 
 fn repl_source(broker: &dyn QueueService) -> Result<&crate::queue::durability::DurableBroker> {

@@ -7,29 +7,41 @@
 //! one of N backends via rendezvous (highest-random-weight) hashing, so
 //! adding a shard only remaps ~1/N of the queues and every client derives
 //! the same placement independently — no routing table to distribute.
-//! Backends are any [`QueueApi`] (in-process brokers, TCP clients, or a
-//! mix), so the training run's heavy per-batch gradient queues can live
+//! Backends are any [`JobQueueApi`] (in-process brokers, TCP clients, or
+//! a mix), so the training run's heavy per-batch gradient queues can live
 //! on different servers than the task queue.
+//!
+//! Job-scoped ops route by the QUALIFIED name (`"job/queue"`) — the same
+//! string the plain settlement ops (consume/ack/len/...) are called with
+//! afterwards — so a job queue's publishes and acks always meet on one
+//! shard, and a single-job deployment's placement is byte-for-byte the
+//! routing it always had.
 
+use std::collections::BTreeMap;
 use std::path::Path;
-use std::time::Duration;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use super::durability::{DurabilityOptions, DurableBroker};
+use super::job::{self, JobInfo, JobQueueApi, JobQuota};
 use super::{Delivery, QueueApi, QueueStats};
 
 /// Stateless queue-name -> shard router + fan-out for the QueueApi.
 pub struct ShardedQueue {
-    shards: Vec<Box<dyn QueueApi>>,
+    shards: Vec<Box<dyn JobQueueApi>>,
+    /// Rotating start shard for [`JobQueueApi::consume_fair`], so
+    /// repeated fair pulls don't always drain shard 0's jobs first.
+    fair_cursor: AtomicUsize,
 }
 
 impl ShardedQueue {
-    pub fn new(shards: Vec<Box<dyn QueueApi>>) -> Result<Self> {
+    pub fn new(shards: Vec<Box<dyn JobQueueApi>>) -> Result<Self> {
         if shards.is_empty() {
             bail!("need at least one shard");
         }
-        Ok(ShardedQueue { shards })
+        Ok(ShardedQueue { shards, fair_cursor: AtomicUsize::new(0) })
     }
 
     /// A balancer over `n` [`DurableBroker`] shards, one WAL + snapshot
@@ -45,7 +57,7 @@ impl ShardedQueue {
         if n == 0 {
             bail!("need at least one shard");
         }
-        let mut shards: Vec<Box<dyn QueueApi>> = Vec::with_capacity(n);
+        let mut shards: Vec<Box<dyn JobQueueApi>> = Vec::with_capacity(n);
         for i in 0..n {
             let dir = base_dir.join(format!("shard-{i}"));
             shards.push(Box::new(DurableBroker::open(&dir, opts.clone())?));
@@ -82,7 +94,7 @@ impl ShardedQueue {
         z ^ (z >> 31)
     }
 
-    fn shard(&self, queue: &str) -> &dyn QueueApi {
+    fn shard(&self, queue: &str) -> &dyn JobQueueApi {
         self.shards[self.shard_for(queue)].as_ref()
     }
 }
@@ -146,6 +158,85 @@ impl QueueApi for ShardedQueue {
     }
 }
 
+impl JobQueueApi for ShardedQueue {
+    // Creation/insertion route by the qualified name, exactly like the
+    // plain ops that settle the same messages later (see module doc).
+
+    fn declare_job(&self, jobid: &str, queue: &str) -> Result<()> {
+        self.shard(&job::qualify(jobid, queue)).declare_job(jobid, queue)
+    }
+
+    fn publish_job(&self, jobid: &str, queue: &str, payload: &[u8], priority: u64) -> Result<()> {
+        self.shard(&job::qualify(jobid, queue)).publish_job(jobid, queue, payload, priority)
+    }
+
+    fn publish_many_job(&self, jobid: &str, queue: &str, payloads: &[&[u8]]) -> Result<()> {
+        self.shard(&job::qualify(jobid, queue)).publish_many_job(jobid, queue, payloads)
+    }
+
+    fn consume_fair(&self, base: &str, timeout: Duration) -> Result<Option<(String, Delivery)>> {
+        // Each shard runs its own deficit scheduler over the jobs whose
+        // queues hash to it; the balancer rotates which shard answers
+        // first and polls until the deadline, mirroring the broker's own
+        // non-parking fair loop.
+        let deadline = Instant::now() + timeout;
+        loop {
+            let start = self.fair_cursor.fetch_add(1, Ordering::Relaxed);
+            for k in 0..self.num_shards() {
+                let i = (start + k) % self.num_shards();
+                if let Some(hit) = self.shards[i].consume_fair(base, Duration::ZERO)? {
+                    return Ok(Some(hit));
+                }
+            }
+            if Instant::now() >= deadline {
+                return Ok(None);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn list_jobs(&self) -> Result<Vec<JobInfo>> {
+        // Merge per-shard rows: usage sums across shards; the quota is
+        // fleet-wide policy (set_job_quota broadcasts), so the first
+        // shard's copy serves for the merged row.
+        let mut merged: BTreeMap<String, JobInfo> = BTreeMap::new();
+        for s in &self.shards {
+            for row in s.list_jobs()? {
+                match merged.get_mut(&row.job) {
+                    Some(m) => {
+                        m.queues += row.queues;
+                        m.ready_msgs += row.ready_msgs;
+                        m.ready_bytes += row.ready_bytes;
+                    }
+                    None => {
+                        merged.insert(row.job.clone(), row);
+                    }
+                }
+            }
+        }
+        Ok(merged.into_values().collect())
+    }
+
+    fn set_job_quota(&self, jobid: &str, quota: JobQuota) -> Result<()> {
+        // Broadcast: a job's queues spread across shards and each shard
+        // admits against its LOCAL usage, so the cap bounds every shard
+        // rather than the fleet-wide sum (a global cap would need
+        // cross-shard coordination on every publish).
+        for s in &self.shards {
+            s.set_job_quota(jobid, quota)?;
+        }
+        Ok(())
+    }
+
+    fn remove_job(&self, jobid: &str) -> Result<u32> {
+        let mut removed = 0;
+        for s in &self.shards {
+            removed += s.remove_job(jobid)?;
+        }
+        Ok(removed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,7 +245,7 @@ mod tests {
     fn sharded(n: usize) -> ShardedQueue {
         ShardedQueue::new(
             (0..n)
-                .map(|_| Box::new(Broker::with_default_timeout()) as Box<dyn QueueApi>)
+                .map(|_| Box::new(Broker::with_default_timeout()) as Box<dyn JobQueueApi>)
                 .collect(),
         )
         .unwrap()
@@ -280,6 +371,66 @@ mod tests {
         assert_eq!(d.payload, b"second");
         assert!(d.redelivered);
         let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn job_ops_route_with_their_settlement_twins() {
+        let s = sharded(4);
+        s.declare_job("alpha", "tasks").unwrap();
+        s.publish_job("alpha", "tasks", b"t0", 1).unwrap();
+        // Plain ops on the qualified name land on the same shard.
+        assert_eq!(s.len("alpha/tasks").unwrap(), 1);
+        let d = s.consume("alpha/tasks", Duration::from_millis(10)).unwrap().unwrap();
+        assert_eq!(d.payload, b"t0");
+        s.ack("alpha/tasks", d.tag).unwrap();
+        assert_eq!(s.len("alpha/tasks").unwrap(), 0);
+    }
+
+    #[test]
+    fn fair_consume_reaches_jobs_on_every_shard() {
+        let s = sharded(3);
+        for jobid in ["a", "b", "c", "d", "e", "f"] {
+            s.declare_job(jobid, "tasks").unwrap();
+            s.publish_job(jobid, "tasks", jobid.as_bytes(), 1).unwrap();
+        }
+        let mut seen = Vec::new();
+        while let Some((jobid, d)) = s.consume_fair("tasks", Duration::ZERO).unwrap() {
+            s.ack(&job::qualify(&jobid, "tasks"), d.tag).unwrap();
+            seen.push(jobid);
+        }
+        seen.sort();
+        assert_eq!(seen, ["a", "b", "c", "d", "e", "f"]);
+    }
+
+    #[test]
+    fn quota_broadcast_applies_wherever_the_queue_lands() {
+        use crate::queue::job::QuotaExceeded;
+        let s = sharded(3);
+        s.set_job_quota("capped", JobQuota { max_ready_msgs: 1, max_ready_bytes: 0 })
+            .unwrap();
+        s.declare_job("capped", "tasks").unwrap();
+        s.publish_job("capped", "tasks", b"one", 1).unwrap();
+        let err = s.publish_job("capped", "tasks", b"two", 1).unwrap_err();
+        assert!(err.downcast_ref::<QuotaExceeded>().is_some());
+    }
+
+    #[test]
+    fn remove_job_and_list_jobs_span_shards() {
+        let s = sharded(3);
+        for q in ["tasks", "grads", "results.map.e0.b0"] {
+            s.declare_job("alpha", q).unwrap();
+            s.publish_job("alpha", q, b"x", 1).unwrap();
+        }
+        s.declare_job("beta", "tasks").unwrap();
+        let rows = s.list_jobs().unwrap();
+        let alpha = rows.iter().find(|r| r.job == "alpha").unwrap();
+        assert_eq!(alpha.queues, 3);
+        assert_eq!(alpha.ready_msgs, 3);
+        assert_eq!(s.remove_job("alpha").unwrap(), 3);
+        assert!(s.len("alpha/tasks").is_err(), "removed queue must be gone");
+        let rows = s.list_jobs().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].job, "beta");
     }
 
     #[test]

@@ -61,6 +61,31 @@ pub enum Op {
     ReplHandshake = 40,
     ReplSnapshot = 41,
     ReplPull = 42,
+    // Job (tenant) namespace ops — see queue/job.rs. These are the only
+    // route that creates or fills job-scoped queues: the job id and the
+    // base queue name travel as SEPARATE validated segments. Settlement
+    // (ack/nack/len/stats/purge/consume) of an existing job queue rides
+    // the plain ops on the qualified "{job}/{queue}" name. Single-job
+    // deployments never emit any of these opcodes, so their byte
+    // streams are identical to the pre-tenant protocol.
+    DeclareJob = 50,
+    /// Body: [job][queue][priority u64][payload]. Over-quota publishes
+    /// answer the in-band [`ST_QUOTA`] status.
+    PublishJob = 51,
+    /// Body: [job][queue][n u32][(len u32, bytes)*n] — all-or-nothing
+    /// under the job's quota.
+    PublishManyJob = 52,
+    /// Fair-share pull across jobs on a shared base queue name. Body:
+    /// [base][timeout_ms u64]; reply [job][tag u64][redelivered u8]
+    /// [payload] or [`ST_NONE`]. The server never parks this op
+    /// (deficit round-robin has no single queue to wait on) — clients
+    /// poll, like the agents' existing task loop.
+    ConsumeFair = 53,
+    ListJobs = 54,
+    /// Body: [job][max_ready_msgs u64][max_ready_bytes u64] (0 = unlimited).
+    SetJobQuota = 55,
+    /// Body: [job]; reply [removed_queues u32].
+    RemoveJob = 56,
 }
 
 impl Op {
@@ -92,6 +117,13 @@ impl Op {
             40 => Op::ReplHandshake,
             41 => Op::ReplSnapshot,
             42 => Op::ReplPull,
+            50 => Op::DeclareJob,
+            51 => Op::PublishJob,
+            52 => Op::PublishManyJob,
+            53 => Op::ConsumeFair,
+            54 => Op::ListJobs,
+            55 => Op::SetJobQuota,
+            56 => Op::RemoveJob,
             _ => bail!("unknown opcode {v}"),
         })
     }
@@ -102,6 +134,12 @@ pub const ST_OK: u8 = 0;
 pub const ST_ERR: u8 = 1;
 /// Successful call, empty result (consume timeout, missing key).
 pub const ST_NONE: u8 = 2;
+/// Publish rejected by the job's admission-control quota
+/// (queue/job.rs). In-band like [`ST_NONE`]: the connection stays
+/// healthy, the body carries the human-readable reason, and the client
+/// re-raises a typed [`crate::queue::job::QuotaExceeded`] so callers
+/// can back off instead of reconnecting.
+pub const ST_QUOTA: u8 = 3;
 
 /// Hard cap on frame size: a model snapshot is ~440 KB; corpus ~1 MB.
 pub const MAX_FRAME: usize = 64 << 20;
@@ -430,6 +468,13 @@ mod tests {
             Op::ReplHandshake,
             Op::ReplSnapshot,
             Op::ReplPull,
+            Op::DeclareJob,
+            Op::PublishJob,
+            Op::PublishManyJob,
+            Op::ConsumeFair,
+            Op::ListJobs,
+            Op::SetJobQuota,
+            Op::RemoveJob,
         ] {
             assert_eq!(Op::from_u8(op as u8).unwrap(), op);
         }

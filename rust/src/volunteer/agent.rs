@@ -26,6 +26,7 @@
 //! in rust/tests/agg_topology.rs).
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -39,6 +40,7 @@ use crate::data::DataApi;
 use crate::metrics::{Span, SpanKind, Timeline};
 use crate::model::{GradAccumulator, ModelSnapshot};
 use crate::obs;
+use crate::queue::job::{self, JobData, JobQueue, JobQueueApi};
 use crate::queue::{Delivery, QueueApi};
 use crate::runtime::{Engine, GRAD_STEP_B8};
 use crate::textdata::Corpus;
@@ -769,5 +771,103 @@ impl<'a> Agent<'a> {
         if pad > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(pad.min(30.0)));
         }
+    }
+}
+
+/// One job's bootstrap context inside a [`MultiJobAgent`].
+struct JobCtx {
+    jobid: String,
+    queue: JobQueue,
+    data: JobData,
+    spec: ProblemSpec,
+    corpus: Corpus,
+    report: AgentReport,
+}
+
+/// A volunteer serving EVERY job it is eligible for on a shared fleet.
+///
+/// Tasks are pulled through the broker's deficit-round-robin
+/// [`JobQueueApi::consume_fair`] over the shared `tasks` base, so a heavy
+/// job cannot monopolize this volunteer's time; each delivered task then
+/// runs under its job's scoped [`JobQueue`]/[`JobData`] views through the
+/// single-job [`Agent`]'s own task handler — the training protocol is
+/// UNCHANGED per job, only the pull is fleet-wide.
+pub struct MultiJobAgent<'a> {
+    pub id: usize,
+    pub engine: &'a Engine,
+    pub queue: Arc<dyn JobQueueApi>,
+    pub data: Arc<dyn DataApi>,
+    pub timeline: Option<&'a Timeline>,
+    pub opts: AgentOptions,
+}
+
+impl MultiJobAgent<'_> {
+    /// Run until every job in `jobids` reaches its final model version
+    /// (or requests stop), or `quit` is set. Returns per-job reports in
+    /// the order given.
+    pub fn run(&self, jobids: &[String], quit: &AtomicBool) -> Result<Vec<(String, AgentReport)>> {
+        let mut ctxs: Vec<JobCtx> = Vec::with_capacity(jobids.len());
+        for jobid in jobids {
+            let queue = JobQueue::new(jobid, self.queue.clone())?;
+            let data = JobData::new(jobid, self.data.clone())?;
+            let (spec, corpus) = fetch_problem(&data)
+                .with_context(|| format!("bootstrapping job '{jobid}'"))?;
+            ctxs.push(JobCtx {
+                jobid: jobid.clone(),
+                queue,
+                data,
+                spec,
+                corpus,
+                report: AgentReport::default(),
+            });
+        }
+        loop {
+            if quit.load(Ordering::Relaxed) {
+                break;
+            }
+            let mut all_done = true;
+            for ctx in &ctxs {
+                let v = crate::coordinator::version::current_version(&ctx.data)?;
+                if v.unwrap_or(0) < ctx.spec.total_versions() && !stop_requested(&ctx.data)? {
+                    all_done = false;
+                    break;
+                }
+            }
+            if all_done {
+                break;
+            }
+            let Some((jobid, d)) = self.queue.consume_fair(queues::TASKS, self.opts.poll)? else {
+                continue; // nothing ready anywhere; unfinished folds will redeliver
+            };
+            let Some(ctx) = ctxs.iter_mut().find(|c| c.jobid == jobid) else {
+                // A job this volunteer does not serve: hand the task back
+                // (redelivery flags it), and back off so a lone foreign
+                // job cannot hot-spin this loop.
+                self.queue.nack(&job::qualify(&jobid, queues::TASKS), d.tag)?;
+                std::thread::sleep(self.opts.poll.min(Duration::from_millis(20)));
+                continue;
+            };
+            let agent = Agent {
+                id: self.id,
+                engine: self.engine,
+                queue: &ctx.queue,
+                data: &ctx.data,
+                timeline: self.timeline,
+                opts: self.opts.clone(),
+            };
+            match Task::decode(&d.payload) {
+                Ok(task) => {
+                    agent.handle(&ctx.spec, &ctx.corpus, task, &d, quit, &mut ctx.report)?;
+                }
+                Err(e) => {
+                    ctx.queue.ack(queues::TASKS, d.tag)?;
+                    eprintln!(
+                        "agent {}: dropping malformed task on job '{jobid}': {e}",
+                        self.id
+                    );
+                }
+            }
+        }
+        Ok(ctxs.into_iter().map(|c| (c.jobid, c.report)).collect())
     }
 }

@@ -19,6 +19,13 @@
 //!
 //! Time parameters are seconds; see `benches/` for the cluster/classroom
 //! calibrations.
+//!
+//! [`simulate_multi_job`] adds a compact shared-fleet model of the
+//! multi-tenant broker: several jobs' task streams served by one
+//! volunteer fleet through the broker's deficit-round-robin fair-share
+//! scheduler (queue/broker.rs `consume_fair_ids`), so quota and
+//! fairness behaviour can be explored on the virtual clock without
+//! perturbing the calibrated single-job event machine above.
 
 use std::collections::{BTreeMap, HashMap};
 
@@ -977,6 +984,169 @@ pub fn simulate(
     })
 }
 
+// ---------------------------------------------------------------------------
+// Shared-fleet multi-job model
+// ---------------------------------------------------------------------------
+
+/// One tenant's workload in the shared-fleet model: `tasks` independent
+/// work items enqueued at t=0, each costing `t_task` seconds of compute
+/// and `task_bytes` of scheduling currency (the payload size the broker's
+/// deficit-round-robin charges against the job's balance).
+#[derive(Debug, Clone)]
+pub struct SimJob {
+    pub name: String,
+    pub tasks: u64,
+    pub t_task: f64,
+    pub task_bytes: u64,
+}
+
+/// Per-job outcome of one [`simulate_multi_job`] run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JobOutcome {
+    pub done: u64,
+    /// Virtual time the job's last task completed.
+    pub finish_time: f64,
+    /// Tasks claimed while at least one OTHER job was still backlogged —
+    /// the window where fair-share actually arbitrates.
+    pub served_contended: u64,
+}
+
+/// Aggregate outcome of a shared-fleet run.
+#[derive(Debug)]
+pub struct MultiJobResult {
+    pub runtime: f64,
+    pub per_job: BTreeMap<String, JobOutcome>,
+    pub events: u64,
+}
+
+// Mirrors of the broker's scheduler constants (queue/broker.rs); the sim
+// model is only faithful while these match.
+const MJ_FAIR_QUANTUM: u64 = 64 * 1024;
+const MJ_FAIR_COST_FLOOR: u64 = 256;
+
+/// Run several jobs' task streams over one shared volunteer fleet.
+///
+/// Volunteers pull through a faithful model of the broker's DRR
+/// fair-share (`consume_fair_ids`): jobs visited in name order behind a
+/// rotating cursor; a visit tops the balance up by one quantum only when
+/// it cannot cover the head's cost (payload bytes, floored); an
+/// uncovered head skips the turn with its balance retained; an empty job
+/// forfeits its balance. Deterministic — no jitter, homogeneous speeds.
+pub fn simulate_multi_job(
+    jobs: &[SimJob],
+    n_workers: usize,
+    rtt: f64,
+    poll: f64,
+) -> Result<MultiJobResult> {
+    if jobs.is_empty() || n_workers == 0 {
+        bail!("need at least one job and one worker");
+    }
+    struct JState {
+        spec: SimJob,
+        remaining: u64,
+        in_flight: u64,
+        deficit: u64,
+        out: JobOutcome,
+    }
+    let mut js: Vec<JState> = jobs
+        .iter()
+        .map(|j| JState {
+            spec: j.clone(),
+            remaining: j.tasks,
+            in_flight: 0,
+            deficit: 0,
+            out: JobOutcome::default(),
+        })
+        .collect();
+    js.sort_by(|a, b| a.spec.name.cmp(&b.spec.name));
+    let n_jobs = js.len();
+    let mut cursor = 0usize;
+
+    // One DRR pass: claim the next task, or None if every backlogged
+    // job's head is still accumulating deficit (or nothing is ready).
+    let claim = |js: &mut [JState], cursor: &mut usize| -> Option<usize> {
+        for k in 0..n_jobs {
+            let idx = (*cursor + k) % n_jobs;
+            if js[idx].remaining == 0 {
+                js[idx].deficit = 0; // DRR: balance only persists while backlogged
+                continue;
+            }
+            let cost = js[idx].spec.task_bytes.max(MJ_FAIR_COST_FLOOR);
+            let mut balance = js[idx].deficit;
+            if balance < cost {
+                balance += MJ_FAIR_QUANTUM;
+            }
+            if balance < cost {
+                js[idx].deficit = balance; // skip the turn, keep saving
+                continue;
+            }
+            js[idx].deficit = balance - cost;
+            js[idx].remaining -= 1;
+            js[idx].in_flight += 1;
+            let contended = js
+                .iter()
+                .enumerate()
+                .any(|(j, s)| j != idx && s.remaining > 0);
+            if contended {
+                js[idx].out.served_contended += 1;
+            }
+            *cursor = idx + 1;
+            return Some(idx);
+        }
+        None
+    };
+
+    enum MEv {
+        Pull(usize),
+        Done { w: usize, job: usize },
+    }
+    let mut clock: SimClock<MEv> = SimClock::new();
+    for w in 0..n_workers {
+        clock.schedule_at(rtt, MEv::Pull(w));
+    }
+    let mut runtime = 0.0f64;
+
+    while let Some((now, ev)) = clock.next() {
+        match ev {
+            MEv::Pull(w) => match claim(&mut js, &mut cursor) {
+                Some(job) => {
+                    let dur = rtt + js[job].spec.t_task;
+                    clock.schedule_in(dur, MEv::Done { w, job });
+                }
+                None => {
+                    if js.iter().any(|s| s.remaining > 0) {
+                        // Backlog exists but every head is saving deficit:
+                        // re-poll, exactly like a live agent.
+                        clock.schedule_in(poll, MEv::Pull(w));
+                    }
+                    // Otherwise the worker retires; in-flight tasks drain.
+                }
+            },
+            MEv::Done { w, job } => {
+                js[job].in_flight -= 1;
+                js[job].out.done += 1;
+                if js[job].remaining == 0 && js[job].in_flight == 0 {
+                    js[job].out.finish_time = now;
+                }
+                runtime = runtime.max(now);
+                clock.schedule_in(rtt, MEv::Pull(w));
+            }
+        }
+    }
+
+    let stalled: Vec<&str> = js
+        .iter()
+        .filter(|s| s.remaining > 0 || s.in_flight > 0)
+        .map(|s| s.spec.name.as_str())
+        .collect();
+    if !stalled.is_empty() {
+        bail!("multi-job simulation stalled with unfinished jobs: {stalled:?}");
+    }
+
+    let per_job = js.into_iter().map(|s| (s.spec.name, s.out)).collect();
+    Ok(MultiJobResult { runtime, per_job, events: clock.processed() })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1346,5 +1516,69 @@ mod tests {
             "cache effect should amplify speedup: cached {speedup_cached} vs flat {speedup_flat}"
         );
         assert!(r16.cache_hit_rate > r1.cache_hit_rate);
+    }
+
+    fn job(name: &str, tasks: u64, t_task: f64, task_bytes: u64) -> SimJob {
+        SimJob { name: name.to_string(), tasks, t_task, task_bytes }
+    }
+
+    #[test]
+    fn two_equal_jobs_share_the_fleet_evenly() {
+        let jobs = [job("alpha", 40, 0.1, 1024), job("beta", 40, 0.1, 1024)];
+        let r = simulate_multi_job(&jobs, 4, 0.01, 0.1).unwrap();
+        let a = r.per_job["alpha"];
+        let b = r.per_job["beta"];
+        assert_eq!(a.done, 40);
+        assert_eq!(b.done, 40);
+        // Equal demand, equal cost: DRR alternates, so neither job's
+        // makespan can run away from the other's.
+        let gap = (a.finish_time - b.finish_time).abs();
+        assert!(gap <= 0.25 * r.runtime, "gap {gap} vs runtime {}", r.runtime);
+        // Nearly every claim happened under contention (both backlogged).
+        assert!(a.served_contended >= 35 && b.served_contended >= 35);
+    }
+
+    #[test]
+    fn heavy_job_cannot_starve_light_job() {
+        // A flood of megabyte tasks shares the fleet with a tiny job. The
+        // broker's DRR charges by bytes, so each heavy claim must save 16
+        // quanta of deficit while the light job flows freely.
+        let heavy = job("heavy", 300, 0.05, 1 << 20);
+        let light = job("light", 20, 0.05, 256);
+        let both = simulate_multi_job(&[heavy, light.clone()], 4, 0.01, 0.1).unwrap();
+        let solo = simulate_multi_job(&[light], 4, 0.01, 0.1).unwrap();
+        let l = both.per_job["light"];
+        let h = both.per_job["heavy"];
+        assert_eq!(l.done, 20);
+        assert_eq!(h.done, 300);
+        // All 20 light claims were arbitrated against the heavy backlog...
+        assert_eq!(l.served_contended, 20);
+        // ...yet the light job's makespan stays within 2x of running the
+        // fleet alone, and the heavy flood finishes far behind it.
+        let solo_t = solo.per_job["light"].finish_time;
+        assert!(
+            l.finish_time <= solo_t * 2.0,
+            "light contended {} vs solo {solo_t}",
+            l.finish_time
+        );
+        assert!(l.finish_time * 10.0 < h.finish_time);
+    }
+
+    #[test]
+    fn multi_job_model_is_deterministic() {
+        let jobs = [job("a", 50, 0.07, 4096), job("b", 30, 0.11, 512), job("c", 5, 0.9, 1 << 20)];
+        let x = simulate_multi_job(&jobs, 6, 0.02, 0.2).unwrap();
+        let y = simulate_multi_job(&jobs, 6, 0.02, 0.2).unwrap();
+        assert_eq!(x.runtime, y.runtime);
+        assert_eq!(x.events, y.events);
+        for (name, out) in &x.per_job {
+            assert_eq!(out.done, y.per_job[name].done);
+        }
+    }
+
+    #[test]
+    fn multi_job_rejects_degenerate_input() {
+        assert!(simulate_multi_job(&[], 4, 0.01, 0.1).is_err());
+        assert!(simulate_multi_job(&[job("a", 1, 0.1, 256)], 0, 0.01, 0.1).is_err());
     }
 }
