@@ -10,6 +10,14 @@
 //! `AGG_TREE_MAX_CRITICAL_OPS` env floor (same anti-flake style as
 //! `WAL_GROUP_MIN_SPEEDUP`).
 //!
+//! A second section reruns the same workload on a deterministic
+//! heavy-tailed straggler fleet (every eighth volunteer at a tenth
+//! speed) and reports **wall-clock per applied update** — the figure the
+//! barrier-free `async:<tau>` plan optimizes: the sync barrier stretches
+//! EVERY batch to its slowest map, async only pays the tail on batches a
+//! straggler actually touches. CI pins the async-vs-flat ratio with
+//! `AGG_ASYNC_MIN_WCU_SPEEDUP` (and the seeded bench_baselines row).
+//!
 //! Run: cargo bench --bench agg_topology
 //! Output: BENCH_agg.json (machine-readable trajectory, uploaded by CI).
 
@@ -30,6 +38,18 @@ fn run(agg: AggregationPlan) -> SimResult {
     let plan = FaultPlan::sync_start(WORKERS);
     let speeds = vec![1.0; WORKERS];
     simulate(SimWorkload::paper(), &params, &plan, &speeds, 42).unwrap()
+}
+
+/// Deterministic heavy-tailed fleet (same profile as the sim's
+/// acceptance test): every eighth volunteer limps at a tenth speed.
+fn heavy_tailed_speeds(n: usize) -> Vec<f64> {
+    (0..n).map(|i| if i % 8 == 7 { 0.1 } else { 1.0 }).collect()
+}
+
+fn run_stragglers(agg: AggregationPlan) -> SimResult {
+    let params = SimParams { agg, ..SimParams::default() };
+    let plan = FaultPlan::sync_start(WORKERS);
+    simulate(SimWorkload::paper(), &params, &plan, &heavy_tailed_speeds(WORKERS), 42).unwrap()
 }
 
 fn main() {
@@ -116,6 +136,64 @@ fn main() {
             "  gate: tree:4 critical ops/step {:.2} <= {} OK",
             tree4.critical_ops_per_step, ceiling
         );
+    }
+
+    // == E10b: wall-clock per applied update under heavy-tailed stragglers ==
+    println!(
+        "== E10b: heavy-tailed stragglers ({WORKERS} volunteers, every 8th at 0.1x), \
+         wall-clock per update =="
+    );
+    println!("{:<10} {:>14} {:>20}", "plan", "runtime (s)", "wall-clock/update (s)");
+    let s_flat = run_stragglers(AggregationPlan::Flat);
+    let s_tree = run_stragglers(AggregationPlan::Tree { fanin: 4 });
+    let s_async = run_stragglers(AggregationPlan::Async { tau: 4 });
+    assert_eq!(s_async.reduces_done, s_flat.reduces_done);
+    assert_eq!(s_async.reduces_done, s_tree.reduces_done);
+    for (name, r) in
+        [("flat", &s_flat), ("tree:4", &s_tree), ("async:4", &s_async)]
+    {
+        println!("{:<10} {:>14.1} {:>20.3}", name, r.runtime, r.wall_clock_per_update);
+        let speedup = if name == "async:4" {
+            // Ratio row (machine-independent): how much cheaper an
+            // applied update is without the barrier, on this fleet.
+            Some(s_flat.wall_clock_per_update / r.wall_clock_per_update)
+        } else {
+            None
+        };
+        rows.push(BenchRow {
+            op: format!("stragglers/{name}/wall_clock_per_update"),
+            iters: 1,
+            ns_per_op: r.wall_clock_per_update * 1e9,
+            speedup,
+        });
+    }
+
+    // Acceptance shape: barrier-free async must beat BOTH sync plans on
+    // wall-clock per update once the fleet has a heavy tail.
+    assert!(
+        s_async.wall_clock_per_update < s_flat.wall_clock_per_update,
+        "async:4 wall-clock/update {} must beat flat {}",
+        s_async.wall_clock_per_update,
+        s_flat.wall_clock_per_update
+    );
+    assert!(
+        s_async.wall_clock_per_update < s_tree.wall_clock_per_update,
+        "async:4 wall-clock/update {} must beat tree:4 {}",
+        s_async.wall_clock_per_update,
+        s_tree.wall_clock_per_update
+    );
+
+    // CI env floor (deterministic sim -> hard pin): the async-vs-flat
+    // wall-clock-per-update ratio must stay at or above the floor.
+    if let Ok(s) = std::env::var("AGG_ASYNC_MIN_WCU_SPEEDUP") {
+        let floor: f64 = s.parse().expect("AGG_ASYNC_MIN_WCU_SPEEDUP must be a number");
+        let ratio = s_flat.wall_clock_per_update / s_async.wall_clock_per_update;
+        assert!(
+            ratio >= floor,
+            "async:4 wall-clock/update speedup {ratio:.2}x vs flat fell below \
+             AGG_ASYNC_MIN_WCU_SPEEDUP={floor}"
+        );
+        println!("  gate: async:4 wall-clock/update speedup {ratio:.2}x >= {floor} OK");
     }
 
     match write_bench_json("agg", &rows) {

@@ -104,6 +104,7 @@ fn main() {
         batch_ref: BatchRef { epoch: 3, batch: 9 },
         minibatch: 7,
         model_version: 57,
+        staleness: None,
     };
     bench(&mut rows, "task encode+decode", iters(200_000), || {
         let b = task.encode();

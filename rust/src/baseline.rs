@@ -143,8 +143,11 @@ pub fn train_accumulated_with_plan(
             let folded = match plan {
                 // Flat keeps the historical accumulator path (bitwise
                 // identical; oracle_fold matches it, but the original
-                // code stays the reference).
-                AggregationPlan::Flat => {
+                // code stays the reference). Async shares it: this serial
+                // loop IS the synchronous oracle the bounded-divergence
+                // property measures an `async:<tau>` fleet against, and
+                // at τ=0 the fleet must reproduce it bit-identically.
+                AggregationPlan::Flat | AggregationPlan::Async { .. } => {
                     let mut acc = GradAccumulator::new(k);
                     for (m, g) in grads_by_slot.into_iter().enumerate() {
                         acc.insert(m, g)?;

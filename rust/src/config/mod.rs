@@ -70,6 +70,12 @@ pub struct Config {
     /// Cap on concurrently accepted server connections; excess connects
     /// wait in the OS backlog until a slot frees.
     pub max_connections: usize,
+    /// Cap on live connections from any single peer IP (0 = unlimited).
+    /// Unlike `max_connections` (which parks excess connects in the OS
+    /// backlog), a per-IP violation REFUSES the connection outright —
+    /// counted by the `server.conns_refused` metric — so one misbehaving
+    /// volunteer cannot starve the rest of the fleet.
+    pub max_conns_per_ip: usize,
     /// Reap server connections with no frame activity for this many
     /// seconds (0 = never). Parked consumers (blocked Consume /
     /// WaitVersion) are exempt.
@@ -91,6 +97,11 @@ pub struct Config {
     /// Quotas are runtime policy, not journaled — re-apply here after
     /// every restart.
     pub job_quotas: String,
+    /// Per-job aggregation-plan overrides on a multi-tenant fleet:
+    /// `--job_agg=job=<plan>,...` where `<plan>` is any value `agg`
+    /// accepts (`flat`, `tree:<fanin>`, `async:<tau>`). Jobs not listed
+    /// fall back to the global `agg`.
+    pub job_agg: String,
     // Corpus
     pub corpus_file: Option<PathBuf>,
     pub corpus_seed: u64,
@@ -125,12 +136,14 @@ impl Default for Config {
             repl_poll_ms: 50,
             server_workers: 0,
             max_connections: 16_384,
+            max_conns_per_ip: 0,
             idle_timeout: 0,
             metrics_every: 0,
             watch: 0,
             json: false,
             job: None,
             job_quotas: String::new(),
+            job_agg: String::new(),
             corpus_file: None,
             corpus_seed: 1234,
             corpus_len: 200_000,
@@ -227,12 +240,55 @@ impl Config {
             }
         }
         self.job_quota_list()?;
+        self.job_agg_list()?;
+        if self.max_conns_per_ip > self.max_connections {
+            bail!("max_conns_per_ip must be <= max_connections (0 = unlimited)");
+        }
         Ok(())
     }
 
     /// The per-job admission caps `job_quotas` names (validated).
     pub fn job_quota_list(&self) -> Result<Vec<(String, crate::queue::job::JobQuota)>> {
         crate::queue::job::parse_quota_spec(&self.job_quotas).context("bad job_quotas")
+    }
+
+    /// The per-job aggregation plans `job_agg` names (validated): each
+    /// entry is `job=<plan>` with `<plan>` in the `agg` grammar. Jobs
+    /// not listed use the global `agg` plan.
+    pub fn job_agg_list(
+        &self,
+    ) -> Result<Vec<(String, crate::coordinator::agg::AggregationPlan)>> {
+        let mut out = Vec::new();
+        for entry in self.job_agg.split(',').filter(|e| !e.trim().is_empty()) {
+            let (job, plan) = entry
+                .trim()
+                .split_once('=')
+                .with_context(|| format!("bad job_agg entry '{entry}': want job=<plan>"))?;
+            crate::queue::job::validate_job_id(job.trim()).context("bad job_agg job id")?;
+            let plan = plan
+                .trim()
+                .parse()
+                .with_context(|| format!("bad job_agg plan for job '{}'", job.trim()))?;
+            if out.iter().any(|(j, _)| j == job.trim()) {
+                bail!("duplicate job_agg entry for job '{}'", job.trim());
+            }
+            out.push((job.trim().to_string(), plan));
+        }
+        Ok(out)
+    }
+
+    /// The plan a given job trains under: its `job_agg` override if one
+    /// is listed, the global `agg` plan otherwise.
+    pub fn agg_plan_for_job(
+        &self,
+        job: &str,
+    ) -> Result<crate::coordinator::agg::AggregationPlan> {
+        for (j, plan) in self.job_agg_list()? {
+            if j == job {
+                return Ok(plan);
+            }
+        }
+        self.agg_plan()
     }
 
     /// Parse a `key = value` file ('#' comments, blank lines ok).
@@ -312,12 +368,14 @@ impl Config {
             "repl_poll_ms" => self.repl_poll_ms = p(key, val)?,
             "server_workers" => self.server_workers = p(key, val)?,
             "max_connections" => self.max_connections = p(key, val)?,
+            "max_conns_per_ip" => self.max_conns_per_ip = p(key, val)?,
             "idle_timeout" => self.idle_timeout = p(key, val)?,
             "metrics_every" => self.metrics_every = p(key, val)?,
             "watch" => self.watch = p(key, val)?,
             "json" => self.json = p(key, val)?,
             "job" => self.job = Some(val.to_string()),
             "job_quotas" => self.job_quotas = val.to_string(),
+            "job_agg" => self.job_agg = val.to_string(),
             "corpus_file" => self.corpus_file = Some(PathBuf::from(val)),
             "corpus_seed" => self.corpus_seed = p(key, val)?,
             "corpus_len" => self.corpus_len = p(key, val)?,
@@ -509,6 +567,50 @@ mod tests {
         c.job = Some(String::new());
         c.validate().unwrap();
         c.job_quotas = "heavy=nope".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn job_agg_key_parses_and_validates() {
+        use crate::coordinator::agg::AggregationPlan;
+        let mut c = Config::default();
+        c.apply_cli(&["--job-agg=lstm=flat,mlp=tree:2,big=async:4".into()]).unwrap();
+        c.validate().unwrap();
+        let plans = c.job_agg_list().unwrap();
+        assert_eq!(
+            plans,
+            vec![
+                ("lstm".to_string(), AggregationPlan::Flat),
+                ("mlp".to_string(), AggregationPlan::Tree { fanin: 2 }),
+                ("big".to_string(), AggregationPlan::Async { tau: 4 }),
+            ]
+        );
+        // Listed jobs get their override; everyone else the global plan.
+        assert_eq!(c.agg_plan_for_job("mlp").unwrap(), AggregationPlan::Tree { fanin: 2 });
+        assert_eq!(c.agg_plan_for_job("other").unwrap(), AggregationPlan::Flat);
+        // Empty = no overrides (the default).
+        c.job_agg = String::new();
+        assert!(c.job_agg_list().unwrap().is_empty());
+        // Bad plan grammar, bad job id, missing '=', duplicates: loud.
+        c.job_agg = "lstm=ring".into();
+        assert!(c.validate().is_err());
+        c.job_agg = "a/b=flat".into();
+        assert!(c.validate().is_err());
+        c.job_agg = "flat".into();
+        assert!(c.validate().is_err());
+        c.job_agg = "lstm=flat,lstm=tree:2".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn max_conns_per_ip_parses_and_validates() {
+        let mut c = Config::default();
+        assert_eq!(c.max_conns_per_ip, 0, "default: unlimited");
+        c.apply_cli(&["--max-conns-per-ip=4".into()]).unwrap();
+        assert_eq!(c.max_conns_per_ip, 4);
+        c.validate().unwrap();
+        // A per-IP cap above the global cap could never bind.
+        c.max_conns_per_ip = c.max_connections + 1;
         assert!(c.validate().is_err());
     }
 

@@ -34,8 +34,18 @@
 //! is the serial oracle of the same shape the property tests compare
 //! against.
 //!
-//! A third variant (asynchronous / bounded-staleness aggregation) slots
-//! in behind the same type — see ROADMAP.md.
+//! - [`AggregationPlan::Async`] — `async:<tau>`: bounded-staleness
+//!   aggregation. Each batch's Reduce applies its folded gradient against
+//!   whatever model is current — no version barrier — as long as the
+//!   model has advanced at most τ versions past the batch's base version.
+//!   Staler-than-τ updates are rejected and their work recycled as fresh
+//!   tasks. What a finished gradient *does* to the model is no longer
+//!   hard-coded per call site: every variant compiles to an
+//!   [`UpdatePolicy`], and the sync plans are exactly the τ=0 degenerate
+//!   case ([`UpdatePolicy::BarrierSync`]).
+//!
+//! A fourth variant (DistML.js-style synchronous allreduce rounds) slots
+//! in behind the same types — see ROADMAP.md.
 
 use std::fmt;
 use std::str::FromStr;
@@ -50,6 +60,42 @@ pub enum AggregationPlan {
     /// Hierarchical partial sums: Combine nodes with `fanin` children per
     /// level, final Reduce folds ≤ `fanin` partials. `fanin >= 2`.
     Tree { fanin: u32 },
+    /// Bounded-staleness: the flat task layout, but Reduce applies its
+    /// update against the *current* model (no version barrier) provided
+    /// the model is at most `tau` versions ahead of the batch's base
+    /// version. `tau = 0` degenerates to the synchronous barrier.
+    Async { tau: u64 },
+}
+
+/// How a finished, folded gradient becomes a model update — the seam the
+/// agent apply path and the sim release schedule both branch on. Derived
+/// from the plan via [`AggregationPlan::update_policy`]; sync plans (flat,
+/// tree) are the τ=0 degenerate case.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UpdatePolicy {
+    /// Paper semantics: a Reduce pins the exact model version its maps
+    /// computed against and waits for it (`await_version`); the update is
+    /// the plain optimizer step. Equivalent to `BoundedStaleness` with
+    /// τ = 0 plus a wait instead of a reject.
+    BarrierSync,
+    /// Barrier-free: apply against the current model if its version is at
+    /// most `tau` past the update's base version (weighted by version
+    /// distance, [`crate::model::merge_update`]); recycle the batch as
+    /// fresh tasks otherwise.
+    BoundedStaleness { tau: u64 },
+}
+
+impl UpdatePolicy {
+    /// Whether an update computed against base version `base` may still
+    /// be applied when the model is at `current` (`current >= base`).
+    /// Under `BarrierSync` only the exact version matches — the barrier
+    /// itself guarantees `current == base` on the apply path.
+    pub fn admits(&self, base: u64, current: u64) -> bool {
+        match self {
+            UpdatePolicy::BarrierSync => current == base,
+            UpdatePolicy::BoundedStaleness { tau } => current.saturating_sub(base) <= *tau,
+        }
+    }
 }
 
 impl Default for AggregationPlan {
@@ -63,6 +109,7 @@ impl fmt::Display for AggregationPlan {
         match self {
             AggregationPlan::Flat => write!(f, "flat"),
             AggregationPlan::Tree { fanin } => write!(f, "tree:{fanin}"),
+            AggregationPlan::Async { tau } => write!(f, "async:{tau}"),
         }
     }
 }
@@ -83,7 +130,13 @@ impl FromStr for AggregationPlan {
             }
             return Ok(AggregationPlan::Tree { fanin });
         }
-        bail!("unknown aggregation plan '{s}' (flat | tree:<fanin>)")
+        if let Some(n) = s.strip_prefix("async:") {
+            let tau: u64 = n
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad async staleness bound '{n}' in agg plan '{s}'"))?;
+            return Ok(AggregationPlan::Async { tau });
+        }
+        bail!("unknown aggregation plan '{s}' (flat | tree:<fanin> | async:<tau>)")
     }
 }
 
@@ -100,7 +153,7 @@ impl AggregationPlan {
     /// (0 = the Reduce folds the leaves directly).
     pub fn levels(&self, k: u32) -> u32 {
         match self {
-            AggregationPlan::Flat => 0,
+            AggregationPlan::Flat | AggregationPlan::Async { .. } => 0,
             AggregationPlan::Tree { fanin } => {
                 let mut l = 0u32;
                 let mut count = k.max(1);
@@ -118,7 +171,7 @@ impl AggregationPlan {
     /// every slot of any u32-sized batch.
     pub fn node_width(&self, level: u32) -> u64 {
         match self {
-            AggregationPlan::Flat => 1,
+            AggregationPlan::Flat | AggregationPlan::Async { .. } => 1,
             AggregationPlan::Tree { fanin } => (*fanin as u64).saturating_pow(level),
         }
     }
@@ -183,8 +236,20 @@ impl AggregationPlan {
     /// in the task queue.
     pub fn stride(&self) -> u64 {
         match self {
-            AggregationPlan::Flat => 2,
+            // Async keeps the flat stride: it has no combine levels, and
+            // sharing the scheme keeps τ=0 streams byte-identical to flat.
+            AggregationPlan::Flat | AggregationPlan::Async { .. } => 2,
             AggregationPlan::Tree { .. } => TREE_PRIORITY_STRIDE,
+        }
+    }
+
+    /// The update policy this plan compiles to: the one seam deciding how
+    /// a finished gradient becomes a model update (agent apply path, sim
+    /// release schedule, oracle fold).
+    pub fn update_policy(&self) -> UpdatePolicy {
+        match self {
+            AggregationPlan::Flat | AggregationPlan::Tree { .. } => UpdatePolicy::BarrierSync,
+            AggregationPlan::Async { tau } => UpdatePolicy::BoundedStaleness { tau: *tau },
         }
     }
 
@@ -270,6 +335,65 @@ mod tests {
         assert!("tree:1".parse::<AggregationPlan>().is_err());
         assert!("tree:".parse::<AggregationPlan>().is_err());
         assert!("ring".parse::<AggregationPlan>().is_err());
+        assert_eq!(
+            "async:4".parse::<AggregationPlan>().unwrap(),
+            AggregationPlan::Async { tau: 4 }
+        );
+        assert_eq!(
+            "async:0".parse::<AggregationPlan>().unwrap(),
+            AggregationPlan::Async { tau: 0 }
+        );
+        assert_eq!(AggregationPlan::Async { tau: 16 }.to_string(), "async:16");
+        assert!("async:".parse::<AggregationPlan>().is_err());
+        assert!("async:-1".parse::<AggregationPlan>().is_err());
+        assert!("async".parse::<AggregationPlan>().is_err());
+    }
+
+    #[test]
+    fn async_keeps_the_flat_task_scheme() {
+        // async:<τ> has no combine levels and shares flat's priority
+        // stride, so its task stream shape is flat's exactly — only the
+        // reduce tag and apply semantics differ.
+        let a = AggregationPlan::Async { tau: 3 };
+        let f = AggregationPlan::Flat;
+        assert_eq!(a.levels(16), 0);
+        assert_eq!(a.stride(), f.stride());
+        for v in [0u64, 7] {
+            assert_eq!(a.task_priority(v, 0), f.task_priority(v, 0));
+            assert_eq!(a.task_priority(v, u32::MAX), f.task_priority(v, u32::MAX));
+        }
+        assert_eq!(a.reduce_ranges(5), f.reduce_ranges(5));
+        assert_eq!(a.subtree(0, 3, 4), f.subtree(0, 3, 4));
+    }
+
+    #[test]
+    fn update_policy_degenerates_at_tau_zero() {
+        assert_eq!(AggregationPlan::Flat.update_policy(), UpdatePolicy::BarrierSync);
+        assert_eq!(
+            AggregationPlan::Tree { fanin: 4 }.update_policy(),
+            UpdatePolicy::BarrierSync
+        );
+        let p0 = AggregationPlan::Async { tau: 0 }.update_policy();
+        assert_eq!(p0, UpdatePolicy::BoundedStaleness { tau: 0 });
+        // τ=0 admits exactly what the barrier admits.
+        for (base, cur) in [(0u64, 0u64), (3, 3), (3, 4), (0, 10)] {
+            assert_eq!(p0.admits(base, cur), UpdatePolicy::BarrierSync.admits(base, cur));
+        }
+        let p2 = UpdatePolicy::BoundedStaleness { tau: 2 };
+        assert!(p2.admits(5, 5) && p2.admits(5, 7));
+        assert!(!p2.admits(5, 8));
+        // current < base (concurrent publish raced us) never underflows.
+        assert!(p2.admits(5, 3));
+    }
+
+    #[test]
+    fn oracle_fold_async_matches_flat() {
+        let grads: Vec<Vec<f32>> =
+            (0..5).map(|i| vec![i as f32 * 0.3 + 0.1, -(i as f32) * 0.7]).collect();
+        assert_eq!(
+            AggregationPlan::Async { tau: 4 }.oracle_fold(&grads).unwrap(),
+            AggregationPlan::Flat.oracle_fold(&grads).unwrap()
+        );
     }
 
     #[test]

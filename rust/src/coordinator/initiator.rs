@@ -85,8 +85,15 @@ pub fn setup_problem_with(
             // serves the earliest outstanding work first no matter how
             // tasks re-enter it (redelivery, hand-back) — the
             // deadlock-freedom backbone, see coordinator/mod.rs.
+            // Async maps carry the staleness bound so volunteers know to
+            // skip the exact-version pin; sync maps stay the frozen
+            // 21-byte layout.
+            let staleness = match plan {
+                AggregationPlan::Async { tau } => Some(tau),
+                AggregationPlan::Flat | AggregationPlan::Tree { .. } => None,
+            };
             for minibatch in 0..k {
-                let t = Task::Map { batch_ref: bref, minibatch, model_version: version };
+                let t = Task::Map { batch_ref: bref, minibatch, model_version: version, staleness };
                 queue.publish_pri(queues::TASKS, &t.encode(), plan.task_priority(version, 0))?;
                 map_tasks += 1;
             }
@@ -274,6 +281,42 @@ mod tests {
                 ("map", 1),
                 ("reduce", 1)
             ]
+        );
+    }
+
+    #[test]
+    fn async_setup_mirrors_flat_layout_with_staleness_fields() {
+        use crate::coordinator::agg::AggregationPlan;
+        let broker = Broker::with_default_timeout();
+        let store = Store::new();
+        let spec = ProblemSpec { schedule: Schedule::tiny(), learning_rate: 0.1 };
+        let corpus = Corpus::synthetic_js(1, 2000);
+        let plan = AggregationPlan::Async { tau: 3 };
+        let summary =
+            setup_problem_with(&broker, &store, &spec, &corpus, vec![0.0; 16], plan).unwrap();
+        // Same counts and drain order as flat: no combine stages.
+        assert_eq!(summary.map_tasks, 4);
+        assert_eq!(summary.combine_tasks, 0);
+        assert_eq!(summary.reduce_tasks, 2);
+        let mut drained = Vec::new();
+        while let Some(d) = broker.consume(queues::TASKS, Duration::from_millis(1)).unwrap() {
+            let t = Task::decode(&d.payload).unwrap();
+            drained.push(t.clone());
+            broker.ack(queues::TASKS, d.tag).unwrap();
+        }
+        assert_eq!(drained.len(), 6);
+        // Every task carries the bound: maps via the staleness field,
+        // reduces via the embedded plan.
+        for t in &drained {
+            match t {
+                Task::Map { staleness, .. } => assert_eq!(*staleness, Some(3)),
+                Task::Reduce { plan: p, .. } => assert_eq!(*p, plan),
+                Task::Combine { .. } => panic!("async plan emitted a combine"),
+            }
+        }
+        assert_eq!(
+            drained.iter().map(|t| (t.kind_str(), t.model_version())).collect::<Vec<_>>(),
+            vec![("map", 0), ("map", 0), ("reduce", 0), ("map", 1), ("map", 1), ("reduce", 1)]
         );
     }
 

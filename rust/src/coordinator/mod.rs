@@ -54,6 +54,22 @@
 //! inline-steal rule in volunteer/agent.rs) — so the earliest unfinished
 //! task always finds a runner, exactly as in the proved two-stage case
 //! (property-tested for both plans in rust/tests/).
+//!
+//! The barrier-free `async:<tau>` plan KEEPS that total order (its task
+//! stream and priorities are the flat layout, so the queue head is still
+//! the earliest outstanding task) but weakens what "waiting" means, and
+//! the deadlock argument extends rather than breaks: an async map waits
+//! only for the version floor `v - tau` — a weaker condition than the
+//! sync barrier, satisfied whenever the barrier would be — and an async
+//! reduce waits for nothing but its own batch's leaves, which the maps
+//! it follows in the order produce. The one NEW wait async introduces is
+//! the apply turnstile (volunteer/agent.rs), and it is acquired only
+//! AFTER a reduce's inputs are fully collected, strictly in ticket
+//! order, with each holder guaranteed to release it on every exit path
+//! — so turnstile waits form a chain, never a cycle, and the earliest
+//! unfinished task still always finds a runner. Rejected-and-recycled
+//! updates re-enter the stream at their original priority, which keeps
+//! the head order intact under recycling too.
 
 pub mod agg;
 pub mod initiator;
@@ -102,6 +118,14 @@ pub mod keys {
     pub const STOP: &str = "stop";
     /// Progress counter: completed reduce tasks.
     pub const REDUCES_DONE: &str = "ctr.reduces";
+    /// Ticket counter for the `async:<tau>` apply turnstile: each
+    /// async reduce draws a ticket here after collecting its inputs.
+    pub const ASYNC_APPLY_TICKETS: &str = "ctr.async.tickets";
+    /// Versioned turnstile key: ticket t applies (or recycles) once
+    /// version t-1 is published here, then publishes version t —
+    /// serializing model applies so none are lost to the
+    /// drop-same-version rule of `put_versioned`.
+    pub const ASYNC_APPLY_TURNSTILE: &str = "async.turnstile";
 }
 
 /// Everything a volunteer needs to know about the problem — the stand-in

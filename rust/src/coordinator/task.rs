@@ -8,10 +8,14 @@
 //! Under a [`AggregationPlan::Tree`] plan the Initiator additionally
 //! emits *combine* tasks: fold a disjoint slot-range of the batch's
 //! gradients into one partial-sum [`GradResult`] on the next level's
-//! queue (see coordinator/agg.rs). The flat encodings are frozen — a tag-2
-//! Reduce payload is byte-for-byte what it always was, and legacy
-//! single-minibatch gradient payloads still decode — so mixed-version
-//! fleets and the golden flat task stream both keep working.
+//! queue (see coordinator/agg.rs). Under an [`AggregationPlan::Async`]
+//! plan the staleness bound τ rides dedicated task tags (the flat layouts
+//! plus a trailing `tau u64`), and map results carry their true base
+//! version in a [`ModelUpdate`](crate::model::ModelUpdate) header. The
+//! flat encodings are frozen — a tag-2 Reduce payload is byte-for-byte
+//! what it always was, and legacy single-minibatch gradient payloads
+//! still decode — so mixed-version fleets and the golden flat task
+//! stream both keep working.
 
 use anyhow::{bail, Result};
 
@@ -37,10 +41,18 @@ impl BatchRef {
 pub enum Task {
     /// Compute the gradient of minibatch `minibatch` of `batch_ref` against
     /// model version `model_version`; publish a `GradResult`.
+    ///
+    /// `staleness`: `None` is the paper's barrier (pin exactly
+    /// `model_version`, wait until it exists). `Some(tau)` is the
+    /// bounded-staleness plan: compute against whatever model is current
+    /// once it has reached `model_version - tau`, and publish a
+    /// [`ModelUpdate`](crate::model::ModelUpdate) carrying the version
+    /// actually used.
     Map {
         batch_ref: BatchRef,
         minibatch: u32,
         model_version: u64,
+        staleness: Option<u64>,
     },
     /// Collect the batch's top-level partials (under `plan`; for
     /// [`AggregationPlan::Flat`] that is all `num_minibatches` leaf
@@ -70,6 +82,8 @@ const TAG_MAP: u8 = 1;
 const TAG_REDUCE: u8 = 2; // frozen flat layout (legacy wire format)
 const TAG_COMBINE: u8 = 3;
 const TAG_REDUCE_TREE: u8 = 4;
+const TAG_REDUCE_ASYNC: u8 = 5; // flat reduce layout + tau u64
+const TAG_MAP_ASYNC: u8 = 6; // flat map layout + tau u64
 
 impl Task {
     pub fn model_version(&self) -> u64 {
@@ -111,12 +125,17 @@ impl Task {
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::with_capacity(33);
         match self {
-            Task::Map { batch_ref, minibatch, model_version } => {
-                b.push(TAG_MAP);
+            Task::Map { batch_ref, minibatch, model_version, staleness } => {
+                // Barrier maps keep the frozen 21-byte tag-1 layout; the
+                // async variant appends its staleness bound.
+                b.push(if staleness.is_some() { TAG_MAP_ASYNC } else { TAG_MAP });
                 b.extend_from_slice(&batch_ref.epoch.to_le_bytes());
                 b.extend_from_slice(&batch_ref.batch.to_le_bytes());
                 b.extend_from_slice(&minibatch.to_le_bytes());
                 b.extend_from_slice(&model_version.to_le_bytes());
+                if let Some(tau) = staleness {
+                    b.extend_from_slice(&tau.to_le_bytes());
+                }
             }
             Task::Reduce { batch_ref, num_minibatches, model_version, plan } => match plan {
                 AggregationPlan::Flat => {
@@ -133,6 +152,14 @@ impl Task {
                     b.extend_from_slice(&num_minibatches.to_le_bytes());
                     b.extend_from_slice(&model_version.to_le_bytes());
                     b.extend_from_slice(&fanin.to_le_bytes());
+                }
+                AggregationPlan::Async { tau } => {
+                    b.push(TAG_REDUCE_ASYNC);
+                    b.extend_from_slice(&batch_ref.epoch.to_le_bytes());
+                    b.extend_from_slice(&batch_ref.batch.to_le_bytes());
+                    b.extend_from_slice(&num_minibatches.to_le_bytes());
+                    b.extend_from_slice(&model_version.to_le_bytes());
+                    b.extend_from_slice(&tau.to_le_bytes());
                 }
             },
             Task::Combine { batch_ref, level, slot_lo, slot_hi, fanin, model_version } => {
@@ -173,6 +200,22 @@ impl Task {
                     batch_ref: BatchRef { epoch: u32at(1), batch: u32at(5) },
                     minibatch,
                     model_version: u64at(13),
+                    staleness: None,
+                })
+            }
+            TAG_MAP_ASYNC => {
+                if b.len() != 29 {
+                    bail!("async map task payload must be 29 bytes, got {}", b.len());
+                }
+                let minibatch = u32at(9);
+                if minibatch == u32::MAX {
+                    bail!("map task minibatch index out of range");
+                }
+                Ok(Task::Map {
+                    batch_ref: BatchRef { epoch: u32at(1), batch: u32at(5) },
+                    minibatch,
+                    model_version: u64at(13),
+                    staleness: Some(u64at(21)),
                 })
             }
             TAG_REDUCE => {
@@ -206,6 +249,20 @@ impl Task {
                     num_minibatches: u32at(9),
                     model_version: u64at(13),
                     plan: AggregationPlan::Tree { fanin },
+                })
+            }
+            TAG_REDUCE_ASYNC => {
+                if b.len() != 29 {
+                    bail!("async reduce payload must be 29 bytes, got {}", b.len());
+                }
+                if u32at(9) == 0 {
+                    bail!("reduce task with zero minibatches");
+                }
+                Ok(Task::Reduce {
+                    batch_ref: BatchRef { epoch: u32at(1), batch: u32at(5) },
+                    num_minibatches: u32at(9),
+                    model_version: u64at(13),
+                    plan: AggregationPlan::Async { tau: u64at(21) },
                 })
             }
             TAG_COMBINE => {
@@ -363,6 +420,13 @@ mod tests {
                 batch_ref: BatchRef { epoch: 3, batch: 11 },
                 minibatch: 7,
                 model_version: 59,
+                staleness: None,
+            },
+            Task::Map {
+                batch_ref: BatchRef { epoch: 3, batch: 11 },
+                minibatch: 7,
+                model_version: 59,
+                staleness: Some(4),
             },
             Task::Reduce {
                 batch_ref: BatchRef { epoch: 0, batch: 0 },
@@ -383,6 +447,18 @@ mod tests {
                 slot_hi: 16,
                 fanin: 2,
                 model_version: 21,
+            },
+            Task::Reduce {
+                batch_ref: BatchRef { epoch: 2, batch: 9 },
+                num_minibatches: 16,
+                model_version: 41,
+                plan: AggregationPlan::Async { tau: 3 },
+            },
+            Task::Reduce {
+                batch_ref: BatchRef { epoch: 0, batch: 1 },
+                num_minibatches: 8,
+                model_version: 1,
+                plan: AggregationPlan::Async { tau: 0 },
             },
         ];
         for t in tasks {
@@ -419,6 +495,7 @@ mod tests {
             batch_ref: BatchRef { epoch: 0, batch: 0 },
             minibatch: 0,
             model_version: 0,
+            staleness: None,
         }
         .encode();
         m[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
@@ -455,6 +532,72 @@ mod tests {
         let mut b = good.encode();
         b[29..33].copy_from_slice(&1u32.to_le_bytes()); // fanin 1
         assert!(Task::decode(&b).is_err());
+    }
+
+    #[test]
+    fn async_task_codec_is_exact_length() {
+        // The staleness fields ride fixed 29-byte layouts; every other
+        // length — truncation, the sync 21-byte frame under the async
+        // tag, trailing bytes — is rejected exactly (PR-3 style: no
+        // arithmetic on attacker-controlled counts, just equality).
+        let red = Task::Reduce {
+            batch_ref: BatchRef { epoch: 1, batch: 2 },
+            num_minibatches: 16,
+            model_version: 18,
+            plan: AggregationPlan::Async { tau: 7 },
+        };
+        let rb = red.encode();
+        assert_eq!(rb.len(), 29);
+        assert_eq!(rb[0], 5); // TAG_REDUCE_ASYNC
+        // Prefix matches the frozen flat reduce layout byte-for-byte;
+        // tau rides behind it.
+        let flat = Task::Reduce {
+            batch_ref: BatchRef { epoch: 1, batch: 2 },
+            num_minibatches: 16,
+            model_version: 18,
+            plan: AggregationPlan::Flat,
+        }
+        .encode();
+        assert_eq!(&rb[1..21], &flat[1..21]);
+        assert_eq!(u64::from_le_bytes(rb[21..29].try_into().unwrap()), 7);
+        for cut in [1, 20, 21, 25, 28] {
+            assert!(Task::decode(&rb[..cut]).is_err(), "reduce cut {cut}");
+        }
+        let mut long = rb.clone();
+        long.push(0);
+        assert!(Task::decode(&long).is_err());
+        // Zero minibatches still rejected through the async tag.
+        let mut z = rb.clone();
+        z[9..13].copy_from_slice(&0u32.to_le_bytes());
+        assert!(Task::decode(&z).is_err());
+
+        let map = Task::Map {
+            batch_ref: BatchRef { epoch: 1, batch: 2 },
+            minibatch: 5,
+            model_version: 18,
+            staleness: Some(3),
+        };
+        let mb = map.encode();
+        assert_eq!(mb.len(), 29);
+        assert_eq!(mb[0], 6); // TAG_MAP_ASYNC
+        for cut in [1, 20, 21, 28] {
+            assert!(Task::decode(&mb[..cut]).is_err(), "map cut {cut}");
+        }
+        let mut mlong = mb.clone();
+        mlong.push(0);
+        assert!(Task::decode(&mlong).is_err());
+        // Reserved slot index rejected through the async tag too.
+        let mut mm = mb.clone();
+        mm[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Task::decode(&mm).is_err());
+        // τ = 0 is a legal bound (the barrier degenerate), not garbage.
+        let m0 = Task::Map {
+            batch_ref: BatchRef { epoch: 0, batch: 0 },
+            minibatch: 0,
+            model_version: 0,
+            staleness: Some(0),
+        };
+        assert_eq!(Task::decode(&m0.encode()).unwrap(), m0);
     }
 
     #[test]
@@ -569,7 +712,7 @@ mod tests {
     #[test]
     fn task_stage_order() {
         let b = BatchRef { epoch: 0, batch: 0 };
-        let map = Task::Map { batch_ref: b, minibatch: 0, model_version: 0 };
+        let map = Task::Map { batch_ref: b, minibatch: 0, model_version: 0, staleness: None };
         let c1 = Task::Combine {
             batch_ref: b,
             level: 1,

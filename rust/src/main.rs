@@ -230,6 +230,7 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
         workers: cfg.server_workers,
         max_connections: cfg.max_connections,
         idle_timeout: (cfg.idle_timeout > 0).then(|| Duration::from_secs(cfg.idle_timeout)),
+        max_conns_per_ip: cfg.max_conns_per_ip,
         ..Default::default()
     };
     // The wait loops below tick every 200 ms; metrics_every is seconds.

@@ -184,6 +184,110 @@ impl ModelSnapshot {
     }
 }
 
+/// Magic sentinel opening a versioned async update leaf ([`ModelUpdate`]).
+/// Distinct from every layout that can share a results queue: a legacy
+/// leaf `GradResult` starts with a real epoch (small), and the tree
+/// partial header starts with `u32::MAX` — so `u32::MAX - 1` collides
+/// with neither.
+pub const UPDATE_MAGIC: u32 = u32::MAX - 1;
+/// Current [`ModelUpdate`] codec version; future versions are rejected,
+/// never guessed at.
+pub const UPDATE_VERSION: u32 = 1;
+
+/// An async (bounded-staleness) map result: one minibatch gradient plus
+/// the version of the model it was actually computed against. Under
+/// `--agg=async:<tau>` maps do not wait for the batch's nominal version —
+/// they compute on whatever model is current — so the update must carry
+/// its true base version for the reduce's staleness check and the
+/// versioned-merge rule ([`weight_by_staleness`]). Rides the same
+/// magic-header style as the tree partial `GradResult` layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelUpdate {
+    /// Model version the gradient was computed against.
+    pub base_version: u64,
+    pub epoch: u32,
+    pub batch: u32,
+    /// Leaf slot index within the batch.
+    pub minibatch: u32,
+    pub loss: f32,
+    pub grads: Vec<f32>,
+}
+
+impl ModelUpdate {
+    /// `[magic u32][codec u32][base_version u64][epoch u32][batch u32]`
+    /// `[minibatch u32][loss f32][n u32][grads f32*n]` — 36 + 4n bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(36 + self.grads.len() * 4);
+        out.extend_from_slice(&UPDATE_MAGIC.to_le_bytes());
+        out.extend_from_slice(&UPDATE_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.base_version.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.batch.to_le_bytes());
+        out.extend_from_slice(&self.minibatch.to_le_bytes());
+        out.extend_from_slice(&self.loss.to_le_bytes());
+        out.extend_from_slice(&(self.grads.len() as u32).to_le_bytes());
+        out.extend_from_slice(&f32_to_le_bytes(&self.grads));
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        if b.len() < 36 {
+            bail!("model update too short ({} bytes)", b.len());
+        }
+        let magic = u32::from_le_bytes(b[0..4].try_into().unwrap());
+        if magic != UPDATE_MAGIC {
+            bail!("model update magic mismatch (got {magic:#x})");
+        }
+        let codec = u32::from_le_bytes(b[4..8].try_into().unwrap());
+        if codec != UPDATE_VERSION {
+            bail!("model update codec version {codec} not supported (have {UPDATE_VERSION})");
+        }
+        let base_version = u64::from_le_bytes(b[8..16].try_into().unwrap());
+        let epoch = u32::from_le_bytes(b[16..20].try_into().unwrap());
+        let batch = u32::from_le_bytes(b[20..24].try_into().unwrap());
+        let minibatch = u32::from_le_bytes(b[24..28].try_into().unwrap());
+        if minibatch == u32::MAX {
+            bail!("model update claims reserved slot index");
+        }
+        let loss = f32::from_le_bytes(b[28..32].try_into().unwrap());
+        let n = u32::from_le_bytes(b[32..36].try_into().unwrap());
+        // Division form: `36 + n * 4` wraps for an adversarial count —
+        // same overflow audit as the snapshot codec above.
+        if ((b.len() - 36) / 4) as u32 != n || (b.len() - 36) % 4 != 0 {
+            bail!("model update length {} inconsistent with element count {n}", b.len());
+        }
+        let grads = f32_from_le_bytes(&b[36..]);
+        Ok(ModelUpdate { base_version, epoch, batch, minibatch, loss, grads })
+    }
+}
+
+/// Staleness weight of the versioned-merge rule: an update produced
+/// against `base_version` and applied at `current_version` is scaled by
+/// `1 / (1 + d)` with `d = current - base` (saturating: a base *newer*
+/// than current — a racing publish — counts as fresh). `d = 0` is exactly
+/// `1.0`.
+pub fn staleness_weight(base_version: u64, current_version: u64) -> f32 {
+    let d = current_version.saturating_sub(base_version);
+    1.0f32 / (1.0f32 + d as f32)
+}
+
+/// The versioned-merge rule for bounded-staleness aggregation: scale a
+/// folded gradient by [`staleness_weight`] before the optimizer step, so
+/// stale gradients pull the model proportionally less the further the
+/// model has moved past their base. `d = 0` is a strict no-op — not a
+/// multiply by 1.0 — so the synchronous (τ=0) path stays bit-identical
+/// to the unweighted fold.
+pub fn weight_by_staleness(grads: &mut [f32], base_version: u64, current_version: u64) {
+    let d = current_version.saturating_sub(base_version);
+    if d == 0 {
+        return;
+    }
+    let w = 1.0f32 / (1.0f32 + d as f32);
+    for g in grads.iter_mut() {
+        *g *= w;
+    }
+}
+
 /// Deterministic gradient accumulator for the reduce and combine tasks.
 ///
 /// The paper's reduce "downloads all calculated gradients ... accumulates
@@ -362,6 +466,84 @@ mod tests {
         c.extend_from_slice(&0x2000_0001u64.to_le_bytes());
         c.extend_from_slice(&[0u8; 16]);
         assert!(ModelSnapshot::from_bytes(&c).is_err());
+    }
+
+    #[test]
+    fn model_update_roundtrip() {
+        let u = ModelUpdate {
+            base_version: 9,
+            epoch: 1,
+            batch: 3,
+            minibatch: 7,
+            loss: 0.5,
+            grads: vec![1.0, -2.5, 0.0],
+        };
+        let b = u.to_bytes();
+        assert_eq!(b.len(), 36 + 12);
+        assert_eq!(ModelUpdate::from_bytes(&b).unwrap(), u);
+        // Empty gradient is representable (n = 0).
+        let e = ModelUpdate { grads: vec![], ..u };
+        assert_eq!(ModelUpdate::from_bytes(&e.to_bytes()).unwrap(), e);
+    }
+
+    #[test]
+    fn model_update_rejects_malformed() {
+        let u = ModelUpdate {
+            base_version: 2,
+            epoch: 0,
+            batch: 1,
+            minibatch: 0,
+            loss: 1.0,
+            grads: vec![1.0, 2.0],
+        };
+        let good = u.to_bytes();
+        // Truncation: every prefix shorter than the full frame fails.
+        for cut in [0, 1, 35, good.len() - 1] {
+            assert!(ModelUpdate::from_bytes(&good[..cut]).is_err(), "cut {cut}");
+        }
+        // Trailing bytes break the length/count consistency.
+        let mut long = good.clone();
+        long.push(0);
+        assert!(ModelUpdate::from_bytes(&long).is_err());
+        long.extend_from_slice(&[0; 3]); // a whole extra f32
+        assert!(ModelUpdate::from_bytes(&long).is_err());
+        // Wrong magic (a legacy leaf's epoch, or the partial header).
+        let mut m = good.clone();
+        m[0..4].copy_from_slice(&3u32.to_le_bytes());
+        assert!(ModelUpdate::from_bytes(&m).is_err());
+        m[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ModelUpdate::from_bytes(&m).is_err());
+        // Future codec version is rejected, never guessed at.
+        let mut v = good.clone();
+        v[4..8].copy_from_slice(&2u32.to_le_bytes());
+        assert!(ModelUpdate::from_bytes(&v).is_err());
+        // Reserved slot index.
+        let mut s = good.clone();
+        s[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ModelUpdate::from_bytes(&s).is_err());
+        // Adversarial count: n near 2^30 wraps `36 + n * 4` on 32-bit
+        // usize; the division form must reject it as an error.
+        let mut a = good.clone();
+        a[32..36].copy_from_slice(&0x4000_0001u32.to_le_bytes());
+        assert!(ModelUpdate::from_bytes(&a).is_err());
+    }
+
+    #[test]
+    fn staleness_weight_merge_rule() {
+        assert_eq!(staleness_weight(5, 5), 1.0);
+        assert_eq!(staleness_weight(5, 6), 0.5);
+        assert_eq!(staleness_weight(5, 8), 0.25);
+        // Racing publish (base newer than current) counts as fresh.
+        assert_eq!(staleness_weight(7, 5), 1.0);
+        // d = 0 is a strict no-op: bits untouched, signed zero included.
+        let mut g = vec![1.5, -0.0, f32::MIN_POSITIVE];
+        let orig: Vec<u32> = g.iter().map(|x| x.to_bits()).collect();
+        weight_by_staleness(&mut g, 3, 3);
+        assert_eq!(g.iter().map(|x| x.to_bits()).collect::<Vec<_>>(), orig);
+        // d = 1 halves exactly (dyadic weight).
+        let mut h = vec![2.0, -6.0];
+        weight_by_staleness(&mut h, 3, 4);
+        assert_eq!(h, vec![1.0, -3.0]);
     }
 
     #[test]

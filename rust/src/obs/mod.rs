@@ -68,6 +68,9 @@ pub enum Counter {
     ServerBackpressureStalls,
     /// Blocking ops parked (waiter registered, no thread held).
     ServerParks,
+    /// Accepts refused by the per-IP connection cap
+    /// (`--max_conns_per_ip`).
+    ServerConnsRefused,
     /// Waiter registrations fired by broker notify sites.
     BrokerWaiterFires,
     BrokerPurges,
@@ -87,9 +90,12 @@ pub enum Counter {
     AgentPoisonDropped,
     /// Producer-subtree republish rounds triggered by poison/stalls.
     AgentPoisonRepublish,
+    /// Async updates rejected by the staleness policy and recycled as
+    /// fresh producer tasks (`--agg=async:<tau>`).
+    AgentUpdatesRecycled,
 }
 
-pub const NUM_COUNTERS: usize = 21;
+pub const NUM_COUNTERS: usize = 23;
 
 pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
     "server.ops",
@@ -99,6 +105,7 @@ pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
     "server.read_budget_exhausted",
     "server.backpressure_stalls",
     "server.parks",
+    "server.conns_refused",
     "broker.waiter_fires",
     "broker.purges",
     "wal.appends",
@@ -113,6 +120,7 @@ pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
     "agent.stale_swaps",
     "agent.poison_dropped",
     "agent.poison_republish",
+    "agent.updates_recycled",
 ];
 
 /// Signed level gauges (current state, not totals).

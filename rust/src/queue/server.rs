@@ -164,6 +164,13 @@ pub struct ServerOptions {
     /// never). Parked consumers are exempt — a blocked Consume is
     /// activity — so only half-open or abandoned sockets are collected.
     pub idle_timeout: Option<Duration>,
+    /// Cap on live connections from any single peer IP (0 = unlimited).
+    /// Unlike `max_connections`, which parks excess connects in the OS
+    /// backlog, a per-IP violation REFUSES the connection outright
+    /// (accept + immediate close, counted by `server.conns_refused`) —
+    /// otherwise one misbehaving volunteer saturating the global cap
+    /// would starve every other peer's place in the backlog.
+    pub max_conns_per_ip: usize,
 }
 
 impl Default for ServerOptions {
@@ -173,6 +180,7 @@ impl Default for ServerOptions {
             max_connections: 16_384,
             drain_wait: Duration::from_secs(5),
             idle_timeout: None,
+            max_conns_per_ip: 0,
         }
     }
 }
@@ -313,6 +321,7 @@ pub fn serve_with(
         conns: HashMap::new(),
         timers: BinaryHeap::new(),
         idle_timers: BinaryHeap::new(),
+        per_ip: HashMap::new(),
         next_id: 0,
         accept_backoff_until: None,
         draining_since: None,
@@ -521,6 +530,9 @@ struct ParkedOp {
 #[cfg(unix)]
 struct Conn {
     stream: TcpStream,
+    /// Peer IP at accept time — the key released from the per-IP
+    /// accounting when this connection closes.
+    peer_ip: Option<std::net::IpAddr>,
     asm: FrameAssembler,
     phase: Phase,
     out: Vec<u8>,
@@ -596,6 +608,9 @@ struct EventLoop {
     /// entry fires, `last_activity` decides, and a live connection is
     /// simply re-armed at its true due time).
     idle_timers: BinaryHeap<Reverse<(Instant, u64)>>,
+    /// Live-connection count per peer IP (entries removed at zero);
+    /// only maintained when `opts.max_conns_per_ip > 0`.
+    per_ip: HashMap<std::net::IpAddr, usize>,
     next_id: u64,
     accept_backoff_until: Option<Instant>,
     draining_since: Option<Instant>,
@@ -905,8 +920,24 @@ impl EventLoop {
             }
             let Some(listener) = &self.listener else { return };
             match listener.accept() {
-                Ok((stream, _)) => {
+                Ok((stream, peer)) => {
+                    let peer_ip = (self.opts.max_conns_per_ip > 0).then(|| peer.ip());
+                    if let Some(ip) = peer_ip {
+                        let live = self.per_ip.get(&ip).copied().unwrap_or(0);
+                        if live >= self.opts.max_conns_per_ip {
+                            // Refuse outright (drop closes the socket):
+                            // parking this peer in the backlog would let
+                            // it starve everyone else's slots.
+                            drop(stream);
+                            obs::inc(obs::Counter::ServerConnsRefused);
+                            continue;
+                        }
+                        *self.per_ip.entry(ip).or_insert(0) += 1;
+                    }
                     if stream.set_nonblocking(true).is_err() {
+                        if let Some(ip) = peer_ip {
+                            self.release_ip(ip);
+                        }
                         continue;
                     }
                     let _ = stream.set_nodelay(true);
@@ -918,6 +949,7 @@ impl EventLoop {
                         id,
                         Conn {
                             stream,
+                            peer_ip,
                             asm: FrameAssembler::new(),
                             phase: Phase::Reading,
                             out: Vec::new(),
@@ -1084,9 +1116,23 @@ impl EventLoop {
         if let Some(conn) = self.conns.remove(&id) {
             obs::inc(obs::Counter::ServerConnsClosed);
             obs::gauge_add(obs::Gauge::ServerConnsLive, -1);
+            if let Some(ip) = conn.peer_ip {
+                self.release_ip(ip);
+            }
             if let Phase::Parked(p) = &conn.phase {
                 obs::gauge_add(obs::Gauge::ServerConnsParked, -1);
                 cancel_site(&p.site, id, self.broker.as_ref(), &self.store);
+            }
+        }
+    }
+
+    /// Release one per-IP accounting slot (entries vanish at zero so the
+    /// map tracks only currently-connected peers).
+    fn release_ip(&mut self, ip: std::net::IpAddr) {
+        if let Some(n) = self.per_ip.get_mut(&ip) {
+            *n -= 1;
+            if *n == 0 {
+                self.per_ip.remove(&ip);
             }
         }
     }

@@ -24,6 +24,25 @@
 //! ACKed away, logged, and the producer tasks of the still-missing
 //! slot-ranges are republished so the slots can refill (regression-tested
 //! in rust/tests/agg_topology.rs).
+//!
+//! Bounded staleness (`async:<tau>`, [`UpdatePolicy::BoundedStaleness`]):
+//! maps carry a staleness budget and wait only for the version FLOOR
+//! `pinned - tau` (never the exact pin), compute against whatever
+//! snapshot is current, and publish a [`ModelUpdate`] stamped with the
+//! base version actually used. The async reduce is barrier-free: it
+//! collects those updates, serializes through the job's apply turnstile
+//! (`put_versioned` drops same-version publishes, so unserialized racing
+//! reduces would silently lose updates), asks the plan's
+//! [`UpdatePolicy`] whether the folded gradient is still admissible
+//! against the CURRENT model, and either applies it staleness-weighted
+//! ([`weight_by_staleness`]) or — when the model has moved more than tau
+//! versions past the gradient's base — recycles the batch's producer
+//! tasks as fresh work at their original priority. Caveat (documented,
+//! not yet closed): async applies are at-least-once — a
+//! visibility-timeout duplicate of an already-applied reduce re-derives
+//! its batch and applies it again, and a volunteer that dies while
+//! holding a turnstile ticket stalls the apply chain until the fleet
+//! quits; the synchronous plans' stall escalation does not cover either.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -31,14 +50,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::agg::AggregationPlan;
+use crate::coordinator::agg::{AggregationPlan, UpdatePolicy};
 use crate::coordinator::initiator::fetch_problem;
-use crate::coordinator::task::{GradResult, Task};
-use crate::coordinator::version::{publish_model, stop_requested, wait_exact_model};
+use crate::coordinator::task::{BatchRef, GradResult, Task};
+use crate::coordinator::version::{
+    get_model, publish_model, stop_requested, wait_exact_model, wait_model,
+};
 use crate::coordinator::{keys, queues, ProblemSpec};
 use crate::data::DataApi;
 use crate::metrics::{Span, SpanKind, Timeline};
-use crate::model::{GradAccumulator, ModelSnapshot};
+use crate::model::{weight_by_staleness, GradAccumulator, ModelSnapshot, ModelUpdate};
 use crate::obs;
 use crate::queue::job::{self, JobData, JobQueue, JobQueueApi};
 use crate::queue::{Delivery, QueueApi};
@@ -90,6 +111,9 @@ pub struct AgentReport {
     pub tasks_swapped: u64,
     /// Corrupt gradient payloads ACKed away (poison, producer republished).
     pub poison_dropped: u64,
+    /// Async updates rejected by the staleness policy (distance > tau)
+    /// whose producer tasks were recycled as fresh work.
+    pub updates_recycled: u64,
 }
 
 /// Does `a` precede `b` in the global task order? Strictly-earlier model
@@ -142,8 +166,12 @@ enum VersionWait {
 /// Outcome of collecting a fold's inputs from a results queue.
 enum Collect {
     /// All expected ranges arrived; `tags` are their unACKed deliveries
-    /// (settled by the caller AFTER its own output is published).
-    Done { tags: Vec<u64>, loss: f32 },
+    /// (settled by the caller AFTER its own output is published). `base`
+    /// is the minimum producer base version over the collected
+    /// [`ModelUpdate`] leaves (async plans; `None` for sync plans, whose
+    /// inputs are version-barrier [`GradResult`]s) — the most
+    /// conservative staleness the folded gradient carries.
+    Done { tags: Vec<u64>, loss: f32, base: Option<u64> },
     /// The volunteer quit (or stop was requested); inputs and the held
     /// task were NACKed back.
     Quit,
@@ -284,6 +312,49 @@ impl<'a> Agent<'a> {
         }
     }
 
+    /// Bounded-staleness twin of [`Agent::await_version`]: an async map
+    /// blocks only until the model reaches the FLOOR `pinned - tau` —
+    /// the oldest version whose gradient could still be admitted — and
+    /// then computes against whatever snapshot is current. It never goes
+    /// [`VersionWait::Stale`]: a model that advanced past the pinned
+    /// version just gives the gradient a fresher base. The priority-swap
+    /// probe between waits is unchanged, so a parked async map still
+    /// cannot starve redelivered earlier work.
+    fn await_floor(
+        &self,
+        pinned: &Task,
+        tau: u64,
+        tags: &[u64],
+        quit: &AtomicBool,
+        report: &mut AgentReport,
+    ) -> Result<VersionWait> {
+        let floor = pinned.model_version().saturating_sub(tau);
+        loop {
+            match wait_model(self.data, floor, self.opts.version_wait)? {
+                Some(s) => return Ok(VersionWait::Ready(s)),
+                None => {
+                    if quit.load(Ordering::Relaxed) || stop_requested(self.data)? {
+                        self.queue.nack_many(queues::TASKS, tags)?;
+                        report.tasks_nacked += tags.len() as u64;
+                        return Ok(VersionWait::Quit);
+                    }
+                    if let Some(d2) = self.queue.consume(queues::TASKS, Duration::ZERO)? {
+                        match Task::decode(&d2.payload) {
+                            Ok(t2) if precedes(&t2, pinned) => {
+                                self.queue.nack_many(queues::TASKS, tags)?;
+                                report.tasks_swapped += 1;
+                                obs::inc(obs::Counter::AgentStaleSwaps);
+                                return Ok(VersionWait::Swapped(t2, d2));
+                            }
+                            Ok(_) => self.queue.nack(queues::TASKS, d2.tag)?,
+                            Err(_) => self.queue.ack(queues::TASKS, d2.tag)?, // poison
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// Resolve a run of >= 2 consecutive Map tasks pinned to the same
     /// (batch, model version): one model wait, one `publish_many` of all
     /// gradients, one `ack_many` of all task deliveries.
@@ -299,7 +370,13 @@ impl<'a> Agent<'a> {
         let svc_start = Instant::now();
         let tags: Vec<u64> = run.iter().map(|(_, d)| d.tag).collect();
         let pinned = run[0].0.clone();
-        let snapshot = match self.await_version(&pinned, &tags, quit, report)? {
+        let wait = match pinned {
+            Task::Map { staleness: Some(tau), .. } => {
+                self.await_floor(&pinned, tau, &tags, quit, report)?
+            }
+            _ => self.await_version(&pinned, &tags, quit, report)?,
+        };
+        let snapshot = match wait {
             VersionWait::Ready(s) => s,
             VersionWait::Quit => return Ok(()),
             VersionWait::Swapped(t2, d2) => {
@@ -316,7 +393,7 @@ impl<'a> Agent<'a> {
         let rq = queues::map_results(pinned.batch_ref());
         let mut encoded = Vec::with_capacity(run.len());
         for (task, _) in run {
-            let Task::Map { batch_ref, minibatch, .. } = task else {
+            let Task::Map { batch_ref, minibatch, staleness, .. } = task else {
                 unreachable!("map run contains a non-map task");
             };
             let t0 = self.now();
@@ -330,8 +407,7 @@ impl<'a> Agent<'a> {
                 .engine
                 .grad_step(GRAD_STEP_B8, &snapshot.params, &x, &y)
                 .context("map grad_step")?;
-            let result = GradResult::leaf(*batch_ref, *minibatch, loss, grads);
-            encoded.push(result.encode());
+            encoded.push(Self::encode_map_result(*batch_ref, *minibatch, *staleness, loss, grads, &snapshot));
             self.record(SpanKind::Compute, t0);
         }
         self.throttle(start);
@@ -349,10 +425,43 @@ impl<'a> Agent<'a> {
         Ok(())
     }
 
+    /// Encode a resolved map's result for its leaf queue: sync maps keep
+    /// the legacy [`GradResult`] leaf layout (byte-identical to every
+    /// build before async existed); async maps publish a [`ModelUpdate`]
+    /// stamped with the base version ACTUALLY used — the floor wait may
+    /// have returned a snapshot newer than the task's pinned version,
+    /// and the reduce's staleness policy must judge the truth.
+    fn encode_map_result(
+        batch_ref: BatchRef,
+        minibatch: u32,
+        staleness: Option<u64>,
+        loss: f32,
+        grads: Vec<f32>,
+        snapshot: &ModelSnapshot,
+    ) -> Vec<u8> {
+        match staleness {
+            Some(_) => ModelUpdate {
+                base_version: snapshot.version,
+                epoch: batch_ref.epoch,
+                batch: batch_ref.batch,
+                minibatch,
+                loss,
+                grads,
+            }
+            .to_bytes(),
+            None => GradResult::leaf(batch_ref, minibatch, loss, grads).encode(),
+        }
+    }
+
     /// The aggregation plan a fold-type task runs under.
     fn task_plan(task: &Task) -> AggregationPlan {
         match task {
-            Task::Map { .. } => AggregationPlan::Flat,
+            // An async map remembers its plan through the staleness
+            // budget it carries, so stolen/republished maps stay
+            // coherent with their reduce.
+            Task::Map { staleness, .. } => {
+                staleness.map_or(AggregationPlan::Flat, |tau| AggregationPlan::Async { tau })
+            }
             Task::Reduce { plan, .. } => *plan,
             Task::Combine { fanin, .. } => AggregationPlan::Tree { fanin: *fanin },
         }
@@ -387,10 +496,14 @@ impl<'a> Agent<'a> {
         let batch_ref = holder.batch_ref();
         let model_version = holder.model_version();
         let input_level = Self::input_level(holder);
+        let staleness = match plan {
+            AggregationPlan::Async { tau } => Some(tau),
+            AggregationPlan::Flat | AggregationPlan::Tree { .. } => None,
+        };
         for (lo, hi) in missing {
             for (level, a, b) in plan.subtree(input_level, *lo, *hi) {
                 let task = match (level, plan) {
-                    (0, _) => Task::Map { batch_ref, minibatch: a, model_version },
+                    (0, _) => Task::Map { batch_ref, minibatch: a, model_version, staleness },
                     (_, AggregationPlan::Tree { fanin }) => Task::Combine {
                         batch_ref,
                         level,
@@ -399,8 +512,8 @@ impl<'a> Agent<'a> {
                         fanin,
                         model_version,
                     },
-                    (_, AggregationPlan::Flat) => {
-                        unreachable!("flat folds read level 0 directly")
+                    (_, AggregationPlan::Flat | AggregationPlan::Async { .. }) => {
+                        unreachable!("flat/async folds read level 0 directly")
                     }
                 };
                 self.queue.publish_pri(
@@ -429,7 +542,12 @@ impl<'a> Agent<'a> {
         quit: &AtomicBool,
         report: &mut AgentReport,
     ) -> Result<Collect> {
+        let is_async = matches!(Self::task_plan(holder), AggregationPlan::Async { .. });
         let mut pending_acks: Vec<u64> = Vec::new();
+        // Minimum producer base version over collected ModelUpdate
+        // leaves (async only): the folded gradient is judged by its
+        // OLDEST constituent.
+        let mut min_base: Option<u64> = None;
         // Weighted losses by range start, summed in key order at the end
         // so the (informational) loss stays arrival-order independent.
         let mut losses: std::collections::BTreeMap<u32, f32> = std::collections::BTreeMap::new();
@@ -468,7 +586,20 @@ impl<'a> Agent<'a> {
                     return Ok(Collect::Quit);
                 }
                 let current = crate::coordinator::version::current_version(self.data)?;
-                if current.unwrap_or(0) > holder.model_version() {
+                if is_async && current.unwrap_or(0) >= spec.total_versions() {
+                    // Async holders tolerate the model passing their
+                    // nominal version (that is the whole point), so the
+                    // duplicate escape below cannot apply; but once
+                    // training is COMPLETE a redelivered duplicate must
+                    // still settle instead of waiting forever for leaves
+                    // that will never be regenerated.
+                    self.queue.ack_many(input_queue, &pending_acks)?;
+                    self.queue.purge(input_queue)?;
+                    self.queue.ack(queues::TASKS, delivery.tag)?;
+                    report.stale_skipped += 1;
+                    return Ok(Collect::Stale);
+                }
+                if !is_async && current.unwrap_or(0) > holder.model_version() {
                     // Settle the orphaned duplicates we consumed; a stale
                     // reduce also purges every level queue (same as the
                     // await_version stale path).
@@ -543,7 +674,21 @@ impl<'a> Agent<'a> {
                         self.id
                     );
                 };
-                match GradResult::decode(&d.payload) {
+                // Async leaf queues carry ModelUpdate frames (versioned
+                // header, base version stamped); sync queues carry the
+                // legacy GradResult layout. Both normalize to a leaf
+                // GradResult here so the accumulator/poison/foreign
+                // machinery below is shared.
+                let decoded: Result<(GradResult, Option<u64>)> = if is_async {
+                    ModelUpdate::from_bytes(&d.payload).map(|u| {
+                        let bref = BatchRef { epoch: u.epoch, batch: u.batch };
+                        let base = u.base_version;
+                        (GradResult::leaf(bref, u.minibatch, u.loss, u.grads), Some(base))
+                    })
+                } else {
+                    GradResult::decode(&d.payload).map(|g| (g, None))
+                };
+                match decoded {
                     Err(e) => {
                         // POISON: settle it so it can never wedge another
                         // holder; the slots it may have held refill via
@@ -555,7 +700,7 @@ impl<'a> Agent<'a> {
                         poisoned_this_round = true;
                         last_progress = std::time::Instant::now();
                     }
-                    Ok(g) if g.batch_ref != holder.batch_ref() => {
+                    Ok((g, _)) if g.batch_ref != holder.batch_ref() => {
                         // Queues are per-batch: a cross-batch payload is
                         // garbage, not a sibling's input. Settle it.
                         poison(&format!(
@@ -567,15 +712,19 @@ impl<'a> Agent<'a> {
                         report.poison_dropped += 1;
                         obs::inc(obs::Counter::AgentPoisonDropped);
                     }
-                    Ok(g) if is_foreign(holder, &g) => {
+                    Ok((g, _)) if is_foreign(holder, &g) => {
                         // A sibling fold's input sharing this level queue
                         // (tree plans): hand it back to its original slot
                         // for its owner.
                         self.queue.nack(input_queue, d.tag)?;
                         foreign_this_round = true;
                     }
-                    Ok(g) => match acc.insert_range(g.slot_lo, g.slot_hi, g.weight, g.grads) {
+                    Ok((g, base)) => match acc.insert_range(g.slot_lo, g.slot_hi, g.weight, g.grads)
+                    {
                         Ok(_) => {
+                            if let Some(bv) = base {
+                                min_base = Some(min_base.map_or(bv, |m: u64| m.min(bv)));
+                            }
                             losses.entry(g.slot_lo).or_insert(g.loss * g.weight as f32);
                             pending_acks.push(d.tag);
                             owned_this_round = true;
@@ -619,7 +768,7 @@ impl<'a> Agent<'a> {
         }
         let total = acc.total_weight() as f32;
         let loss = losses.values().sum::<f32>() / total;
-        Ok(Collect::Done { tags: pending_acks, loss })
+        Ok(Collect::Done { tags: pending_acks, loss, base: min_base })
     }
 
     fn handle(
@@ -633,7 +782,19 @@ impl<'a> Agent<'a> {
     ) -> Result<()> {
         let start = self.now();
         let svc_start = Instant::now();
-        let snapshot = match self.await_version(&task, &[delivery.tag], quit, report)? {
+        let wait = match task {
+            // Async maps wait for the staleness floor, not the exact
+            // pin; async reduces have no version wait at all — they
+            // judge the CURRENT model at apply time.
+            Task::Map { staleness: Some(tau), .. } => {
+                self.await_floor(&task, tau, &[delivery.tag], quit, report)?
+            }
+            Task::Reduce { plan: AggregationPlan::Async { .. }, .. } => {
+                return self.handle_async_reduce(spec, corpus, &task, delivery, quit, report);
+            }
+            _ => self.await_version(&task, &[delivery.tag], quit, report)?,
+        };
+        let snapshot = match wait {
             VersionWait::Ready(s) => s,
             VersionWait::Quit => return Ok(()),
             VersionWait::Swapped(t2, d2) => {
@@ -656,7 +817,7 @@ impl<'a> Agent<'a> {
             }
         };
         match task {
-            Task::Map { batch_ref, minibatch, .. } => {
+            Task::Map { batch_ref, minibatch, staleness, .. } => {
                 let (x, y) = spec.schedule.minibatch(
                     corpus,
                     batch_ref.epoch as usize,
@@ -668,9 +829,9 @@ impl<'a> Agent<'a> {
                     .grad_step(GRAD_STEP_B8, &snapshot.params, &x, &y)
                     .context("map grad_step")?;
                 self.throttle(start);
-                let result = GradResult::leaf(batch_ref, minibatch, loss, grads);
-                self.queue
-                    .publish(&queues::map_results(batch_ref), &result.encode())?;
+                let payload =
+                    Self::encode_map_result(batch_ref, minibatch, staleness, loss, grads, &snapshot);
+                self.queue.publish(&queues::map_results(batch_ref), &payload)?;
                 self.queue.ack(queues::TASKS, delivery.tag)?;
                 report.maps_done += 1;
                 obs::inc(obs::Counter::AgentMapTasks);
@@ -692,7 +853,7 @@ impl<'a> Agent<'a> {
                     quit,
                     report,
                 )? {
-                    Collect::Done { tags, loss } => (tags, loss),
+                    Collect::Done { tags, loss, .. } => (tags, loss),
                     Collect::Quit | Collect::Stale => return Ok(()),
                 };
                 let (sum, weight) = acc.fold_sum()?;
@@ -757,6 +918,136 @@ impl<'a> Agent<'a> {
                 self.record(SpanKind::Accumulate, start);
             }
         }
+        Ok(())
+    }
+
+    /// Resolve a Reduce under `async:<tau>` — the barrier-free apply
+    /// path. No version pin: collect the batch's [`ModelUpdate`] leaves
+    /// (each stamped with its producer's true base version), join the
+    /// job's apply TURNSTILE, and judge the folded gradient against the
+    /// CURRENT model with the plan's [`UpdatePolicy`]:
+    ///
+    /// - admitted (version distance <= tau): staleness-weight the fold
+    ///   ([`weight_by_staleness`] — a strict no-op at distance 0, so
+    ///   `async:0` stays bit-identical to `flat`), RMSprop against the
+    ///   current snapshot, publish `current + 1`;
+    /// - rejected (distance > tau): drop the stale gradients and
+    ///   recycle the batch's producer tasks as FRESH work at their
+    ///   original priority — the regenerated maps rebase on a newer
+    ///   snapshot, so the retry converges toward admission.
+    ///
+    /// The turnstile (ticket counter + versioned turnstile key)
+    /// serializes applies: `put_versioned` drops same-version publishes,
+    /// so two unserialized reduces racing to `current + 1` would
+    /// silently lose one update and wedge the final-version accounting.
+    /// Ticket t waits until turnstile t-1 is published, applies (or
+    /// recycles), then publishes turnstile t. At tau = 0 batches are
+    /// strictly chained by the map floor wait, so tickets issue in batch
+    /// order and the trajectory is the synchronous one.
+    fn handle_async_reduce(
+        &self,
+        spec: &ProblemSpec,
+        corpus: &Corpus,
+        task: &Task,
+        delivery: &Delivery,
+        quit: &AtomicBool,
+        report: &mut AgentReport,
+    ) -> Result<()> {
+        let start = self.now();
+        let svc_start = Instant::now();
+        let (batch_ref, num_minibatches, model_version, plan) = match task {
+            Task::Reduce { batch_ref, num_minibatches, model_version, plan } => {
+                (*batch_ref, *num_minibatches, *model_version, *plan)
+            }
+            _ => unreachable!("handle_async_reduce requires a reduce task"),
+        };
+        let policy = plan.update_policy();
+        debug_assert!(matches!(policy, UpdatePolicy::BoundedStaleness { .. }));
+        let input_queue = queues::agg_results(batch_ref, 0);
+        let mut acc = GradAccumulator::with_ranges(plan.reduce_ranges(num_minibatches))?;
+        let (tags, base) = match self.collect_inputs(
+            spec,
+            corpus,
+            task,
+            delivery,
+            &input_queue,
+            &mut acc,
+            quit,
+            report,
+        )? {
+            // `base` is None only if a malformed mixed stream slipped
+            // through; treating it as the nominal version keeps the
+            // policy check meaningful instead of panicking.
+            Collect::Done { tags, base, .. } => (tags, base.unwrap_or(model_version)),
+            Collect::Quit | Collect::Stale => return Ok(()),
+        };
+        // Join the apply turnstile. Ticket 1 has no predecessor.
+        let ticket = self.data.incr(keys::ASYNC_APPLY_TICKETS)?;
+        if ticket > 1 {
+            loop {
+                if self
+                    .data
+                    .wait_version(keys::ASYNC_APPLY_TURNSTILE, ticket - 1, self.opts.version_wait)?
+                    .is_some()
+                {
+                    break;
+                }
+                if quit.load(Ordering::Relaxed) || stop_requested(self.data)? {
+                    // Shutdown mid-wait: hand everything back WITHOUT
+                    // filling our slot (publishing ticket out of order
+                    // would let two later appliers run concurrently).
+                    // The chain only matters while training continues.
+                    self.queue.nack_many(&input_queue, &tags)?;
+                    self.queue.nack(queues::TASKS, delivery.tag)?;
+                    report.tasks_nacked += 1;
+                    return Ok(());
+                }
+                if self.finished(spec)? {
+                    // Training completed while we waited (duplicate
+                    // applies can overshoot the final version): settle.
+                    self.queue.ack_many(&input_queue, &tags)?;
+                    self.queue.ack(queues::TASKS, delivery.tag)?;
+                    report.stale_skipped += 1;
+                    return Ok(());
+                }
+            }
+        }
+        let current = get_model(self.data)?
+            .context("async reduce: no model snapshot published")?;
+        if !policy.admits(base, current.version) {
+            // Rejected: staler than tau. Advance the turnstile, drop the
+            // stale gradients, and recycle the producers + this reduce.
+            self.data.put_versioned(keys::ASYNC_APPLY_TURNSTILE, ticket, &[])?;
+            self.queue.ack_many(&input_queue, &tags)?;
+            self.republish_producers(task, &plan.reduce_ranges(num_minibatches))?;
+            self.queue.publish_pri(
+                queues::TASKS,
+                &task.encode(),
+                plan.task_priority(model_version, task.stage()),
+            )?;
+            self.queue.ack(queues::TASKS, delivery.tag)?;
+            report.updates_recycled += 1;
+            obs::inc(obs::Counter::AgentUpdatesRecycled);
+            return Ok(());
+        }
+        let mut folded = acc.fold()?;
+        weight_by_staleness(&mut folded, base, current.version);
+        let (params, ms) = self
+            .engine
+            .rmsprop_update(&current.params, &current.ms, &folded, spec.learning_rate)
+            .context("async reduce rmsprop")?;
+        self.throttle(start);
+        publish_model(self.data, &ModelSnapshot { version: current.version + 1, params, ms })?;
+        self.data.put_versioned(keys::ASYNC_APPLY_TURNSTILE, ticket, &[])?;
+        // Settle gradients only after the model is durably published (a
+        // crash in between redelivers them), same as the sync reduce.
+        self.queue.ack_many(&input_queue, &tags)?;
+        self.queue.ack(queues::TASKS, delivery.tag)?;
+        self.data.incr(keys::REDUCES_DONE)?;
+        report.reduces_done += 1;
+        obs::inc(obs::Counter::AgentReduceTasks);
+        obs::observe_since(obs::Hist::AgentReduceServiceNs, svc_start);
+        self.record(SpanKind::Accumulate, start);
         Ok(())
     }
 

@@ -11,11 +11,16 @@
 //!
 //! Aggregation plans (coordinator/agg.rs) are modelled one-to-one:
 //! `flat` is the paper's single-reducer pipeline, `tree:<fanin>` adds
-//! Combine tasks that fold slot-ranges level by level. The simulator also
-//! measures the **per-step critical path** — the queue operations and
-//! gradient vectors moved through the busiest single agent per model
-//! update — which is the number the tree topology exists to shrink
-//! (benches/agg_topology.rs gates it in CI).
+//! Combine tasks that fold slot-ranges level by level, and
+//! `async:<tau>` lifts the per-batch version barrier — maps dispatch as
+//! soon as the model is within tau versions of their pin, reduces apply
+//! as soon as their leaves arrive. The simulator also measures the
+//! **per-step critical path** — the queue operations and gradient
+//! vectors moved through the busiest single agent per model update —
+//! which is the number the tree topology exists to shrink, and
+//! **wall-clock-per-update** — makespan over applies — which is the
+//! number the async plan exists to shrink under heavy-tailed stragglers
+//! (benches/agg_topology.rs gates both in CI).
 //!
 //! Time parameters are seconds; see `benches/` for the cluster/classroom
 //! calibrations.
@@ -279,6 +284,12 @@ pub struct SimResult {
     /// updates of the max full gradient vectors moved through any single
     /// agent for that batch (in + out).
     pub critical_grad_vecs_per_step: f64,
+    /// Wall-clock seconds per model update (makespan / applies) — the
+    /// throughput figure `async:<tau>` exists to improve: under
+    /// heavy-tailed stragglers the synchronous barrier inflates every
+    /// step by the slowest worker's tail, while the barrier-free path
+    /// keeps the pipeline full (gated in benches/agg_topology.rs).
+    pub wall_clock_per_update: f64,
 }
 
 /// Run one experiment.
@@ -303,6 +314,19 @@ pub fn simulate(
     let top = agg.levels(k);
     // Inputs the final reduce collects: top-level node count (k for flat).
     let reduce_fan = agg.nodes_at(k, top).len() as u32;
+    // Bounded staleness (`async:<tau>`): barrier-free dispatch. Maps run
+    // as soon as the model is within tau versions of their pin (the
+    // agent's floor wait) and reduces apply as soon as their leaves
+    // arrive — no version barrier. The sim models the SERVICE-TIME win
+    // only: the rejection/recycle path never fires here because with
+    // batch-ordered priorities a collected gradient is never staler than
+    // tau by construction, and the real stack's apply turnstile is
+    // approximated by instantaneous apply events (slightly optimistic
+    // when two reduces' update phases overlap).
+    let tau = match agg {
+        AggregationPlan::Async { tau } => Some(tau),
+        AggregationPlan::Flat | AggregationPlan::Tree { .. } => None,
+    };
 
     // The InitialQueue: priority-ordered by (batch, stage), see TaskQueue.
     let mut queue = TaskQueue::new(agg);
@@ -348,6 +372,10 @@ pub fn simulate(
     let mut broker_up = true;
 
     let mut model_version: u64 = 0;
+    // Batches whose update has been applied (async bookkeeping: applies
+    // may complete out of batch order, so "done" is a set, not a
+    // watermark; `model_version` counts applies either way).
+    let mut applied: std::collections::HashSet<u64> = std::collections::HashSet::new();
     let mut grads_done: HashMap<u64, u32> = HashMap::new();
     // Completed minibatches — deduplicates straggler redeliveries ("first
     // result wins", the broker's at-least-once semantics).
@@ -499,7 +527,11 @@ pub fn simulate(
     // (version, worker) — the raw material of the critical-path metric.
     macro_rules! credit {
         ($version:expr, $w:expr, $ops:expr, $vecs:expr) => {{
-            if $version >= model_version {
+            let fresh = match tau {
+                Some(_) => !applied.contains(&$version),
+                None => $version >= model_version,
+            };
+            if fresh {
                 let e = step_ops.entry(($version, $w)).or_insert((0, 0));
                 e.0 += $ops;
                 e.1 += $vecs;
@@ -514,14 +546,26 @@ pub fn simulate(
             let started = $now;
             match task {
                 STask::Map { version, minibatch } => {
-                    if version < model_version || map_done.contains(&(version, minibatch)) {
-                        // Stale duplicate (batch already reduced, or a
-                        // straggler redelivery whose original finished).
+                    // Stale duplicate (batch already applied, or a
+                    // straggler redelivery whose original finished).
+                    let stale = map_done.contains(&(version, minibatch))
+                        || match tau {
+                            Some(_) => applied.contains(&version),
+                            None => version < model_version,
+                        };
+                    // Sync: the §IV.G barrier (exact version). Async:
+                    // the agent's floor wait — runnable once the model
+                    // is within tau versions of the pin.
+                    let runnable = match tau {
+                        Some(t) => model_version + t >= version,
+                        None => version == model_version,
+                    };
+                    if stale {
                         pull_later!($clock, $w, params.rtt, $workers);
-                    } else if version == model_version {
+                    } else if runnable {
                         start_map!($clock, $workers, $w, version, minibatch, started);
                     } else {
-                        // §IV.G: wait for the model version; bounded by
+                        // Wait for the model version; bounded by
                         // version_wait (agent NACK-to-back equivalent).
                         let wk = &mut $workers[$w];
                         wk.state = WState::Parked;
@@ -546,9 +590,17 @@ pub fn simulate(
                     }
                 }
                 STask::Reduce { version } => {
-                    if version < model_version {
+                    let stale = match tau {
+                        Some(_) => applied.contains(&version),
+                        None => version < model_version,
+                    };
+                    // Async reduces are barrier-free: only the leaves
+                    // gate them, never the model version.
+                    let runnable =
+                        (tau.is_some() || version == model_version) && reduce_ready!(version);
+                    if stale {
                         pull_later!($clock, $w, params.rtt, $workers); // stale duplicate
-                    } else if version == model_version && reduce_ready!(version) {
+                    } else if runnable {
                         start_reduce_update!($clock, $workers, $w, version, started);
                     } else {
                         // Wait for version and/or gradients (also bounded).
@@ -574,11 +626,19 @@ pub fn simulate(
                 let Some((task, started)) = $workers[w].held else { continue };
                 match task {
                     STask::Map { version, minibatch } => {
-                        if version < model_version {
+                        let stale = match tau {
+                            Some(_) => applied.contains(&version),
+                            None => version < model_version,
+                        };
+                        let runnable = match tau {
+                            Some(t) => model_version + t >= version,
+                            None => version == model_version,
+                        };
+                        if stale {
                             // Batch finished while parked: discard duplicate.
                             $workers[w].held = None;
                             pull_later!($clock, w, params.rtt, $workers);
-                        } else if version == model_version {
+                        } else if runnable {
                             start_map!($clock, $workers, w, version, minibatch, started);
                         }
                     }
@@ -595,11 +655,17 @@ pub fn simulate(
                         }
                     }
                     STask::Reduce { version } => {
-                        if version < model_version {
+                        let stale = match tau {
+                            Some(_) => applied.contains(&version),
+                            None => version < model_version,
+                        };
+                        if stale {
                             $workers[w].held = None;
                             reduce_waiting.remove(&version);
                             pull_later!($clock, w, params.rtt, $workers);
-                        } else if version == model_version && reduce_ready!(version) {
+                        } else if (tau.is_some() || version == model_version)
+                            && reduce_ready!(version)
+                        {
                             reduce_waiting.remove(&version);
                             start_reduce_update!($clock, $workers, w, version, started);
                         }
@@ -824,6 +890,12 @@ pub fn simulate(
                     continue;
                 }
                 workers[w].held = None;
+                if tau.is_some() && applied.contains(&version) {
+                    // Async straggler duplicate: the batch already
+                    // applied (first apply wins); ignore it.
+                    pull_later!(clock, w, params.rtt, workers);
+                    continue;
+                }
                 // Task claim + collect roundtrips (+ model push, not a
                 // gradient vector); reduce_fan vectors in.
                 credit!(
@@ -832,7 +904,14 @@ pub fn simulate(
                     1 + grad_fetches(reduce_fan, params.grad_batch) as u64,
                     reduce_fan as u64
                 );
-                model_version = version + 1;
+                if tau.is_some() {
+                    // Async: applies may land out of batch order; the
+                    // version is an apply COUNT, as in the real stack.
+                    applied.insert(version);
+                    model_version += 1;
+                } else {
+                    model_version = version + 1;
+                }
                 last_progress_events = clock.processed();
                 timeline.record(Span {
                     worker: w,
@@ -860,7 +939,11 @@ pub fn simulate(
                 pull_later!(clock, w, params.rtt, workers);
             }
             Ev::Requeue(task) => {
-                let still_needed = task.version() >= model_version
+                let fresh_batch = match tau {
+                    Some(_) => !applied.contains(&task.version()),
+                    None => task.version() >= model_version,
+                };
+                let still_needed = fresh_batch
                     && match task {
                         STask::Map { version, minibatch } => {
                             !map_done.contains(&(version, minibatch))
@@ -981,6 +1064,7 @@ pub fn simulate(
         cache_hit_rate,
         critical_ops_per_step: crit_ops_sum / steps,
         critical_grad_vecs_per_step: crit_vecs_sum / steps,
+        wall_clock_per_update: finish_time / steps,
     })
 }
 
@@ -1269,6 +1353,103 @@ mod tests {
         let b = quick_tree(6, 2);
         assert_eq!(a.runtime, b.runtime);
         assert_eq!(a.events, b.events);
+    }
+
+    fn quick_async(n: usize, tau: u64) -> SimResult {
+        let plan = FaultPlan::sync_start(n);
+        let speeds = vec![1.0; n];
+        let params = SimParams { agg: AggregationPlan::Async { tau }, ..SimParams::default() };
+        simulate(
+            SimWorkload { total_batches: 10, minibatches_per_batch: 4, batches_per_epoch: 5 },
+            &params,
+            &plan,
+            &speeds,
+            7,
+        )
+        .unwrap()
+    }
+
+    /// A deterministic heavy-tailed fleet: most workers run at full
+    /// speed, every eighth limps at a tenth — the straggler profile the
+    /// async plan exists to absorb (same profile as the bench).
+    fn heavy_tailed_speeds(n: usize) -> Vec<f64> {
+        (0..n).map(|i| if i % 8 == 7 { 0.1 } else { 1.0 }).collect()
+    }
+
+    #[test]
+    fn async_completes_and_is_deterministic() {
+        let a = quick_async(4, 4);
+        let b = quick_async(4, 4);
+        assert_eq!(a.reduces_done, 10);
+        assert_eq!(a.maps_done, 40);
+        assert_eq!(a.combines_done, 0, "async compiles to the flat task scheme");
+        assert_eq!(a.runtime, b.runtime);
+        assert_eq!(a.events, b.events);
+        assert!((a.wall_clock_per_update - a.runtime / 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn async_single_worker_completes() {
+        let r = quick_async(1, 2);
+        assert_eq!(r.reduces_done, 10);
+    }
+
+    #[test]
+    fn async_tau_zero_degenerates_to_the_flat_barrier() {
+        // At tau = 0 the floor wait IS the version barrier: batches
+        // chain strictly and the event trajectory — hence the makespan —
+        // is the synchronous one.
+        let flat = quick(6);
+        let async0 = quick_async(6, 0);
+        assert_eq!(async0.reduces_done, flat.reduces_done);
+        assert_eq!(async0.runtime, flat.runtime);
+    }
+
+    #[test]
+    fn async_beats_sync_wall_clock_under_heavy_tailed_stragglers() {
+        // The acceptance shape: under a heavy-tailed straggler profile
+        // the sync barrier stretches EVERY batch to the slowest map
+        // (all workers re-sync at each version), while the barrier-free
+        // plan only pays the tail on batches a straggler actually
+        // touches and pipelines the rest. Gated in CI via
+        // benches/agg_topology.rs (BENCH_agg.json).
+        let wl = SimWorkload::paper();
+        let plan = FaultPlan::sync_start(16);
+        let speeds = heavy_tailed_speeds(16);
+        let flat = simulate(wl, &SimParams::default(), &plan, &speeds, 42).unwrap();
+        let tp = SimParams { agg: AggregationPlan::Tree { fanin: 4 }, ..SimParams::default() };
+        let tree = simulate(wl, &tp, &plan, &speeds, 42).unwrap();
+        let ap = SimParams { agg: AggregationPlan::Async { tau: 4 }, ..SimParams::default() };
+        let asy = simulate(wl, &ap, &plan, &speeds, 42).unwrap();
+        assert_eq!(asy.reduces_done, flat.reduces_done);
+        assert!(
+            asy.wall_clock_per_update < flat.wall_clock_per_update,
+            "async {} vs flat {}",
+            asy.wall_clock_per_update,
+            flat.wall_clock_per_update
+        );
+        assert!(
+            asy.wall_clock_per_update < tree.wall_clock_per_update,
+            "async {} vs tree {}",
+            asy.wall_clock_per_update,
+            tree.wall_clock_per_update
+        );
+    }
+
+    #[test]
+    fn async_survives_churn() {
+        let n = 6;
+        let plan = FaultPlan::departure(n, 3, 5.0);
+        let params = SimParams { agg: AggregationPlan::Async { tau: 2 }, ..SimParams::default() };
+        let r = simulate(
+            SimWorkload { total_batches: 10, minibatches_per_batch: 4, batches_per_epoch: 5 },
+            &params,
+            &plan,
+            &vec![1.0; n],
+            11,
+        )
+        .unwrap();
+        assert_eq!(r.reduces_done, 10);
     }
 
     #[test]

@@ -40,7 +40,7 @@ fn stale_batch0_world() -> (Broker, Store) {
     broker.declare(queues::TASKS).unwrap();
     broker.declare(&queues::map_results(batch0())).unwrap();
     for m in 0..2u32 {
-        let t = Task::Map { batch_ref: batch0(), minibatch: m, model_version: 0 };
+        let t = Task::Map { batch_ref: batch0(), minibatch: m, model_version: 0, staleness: None };
         broker.publish_pri(queues::TASKS, &t.encode(), 0).unwrap();
     }
     let t = Task::Reduce {

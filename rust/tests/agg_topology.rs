@@ -317,6 +317,144 @@ mod fleet {
     }
 
     #[test]
+    fn async_tau_zero_fleet_is_bit_identical_to_flat() {
+        // tau = 0 compiles to the same machinery with the policy pinned
+        // at zero distance: maps floor-wait on exactly the barrier
+        // version, the staleness weight is a strict no-op at distance 0,
+        // and the turnstile issues tickets in batch order — so the whole
+        // trajectory, not just the final loss, must be THE synchronous
+        // one, bit for bit.
+        let spec = spec_k(4, 3);
+        let (model, _) = run_fleet(&spec, AggregationPlan::Async { tau: 0 }, 2, 1, false);
+        assert_eq!(model.version, spec.total_versions());
+        assert_eq!(model.params, oracle(&spec, AggregationPlan::Flat));
+    }
+
+    #[test]
+    fn async_fleet_stays_within_the_tau_divergence_bound() {
+        // Bounded divergence on the exact-math stub: the per-minibatch
+        // gradient is a model-INDEPENDENT data term in [-2, 2] plus
+        // sign(p) in {-1, 0, 1} (runtime/stub.rs), folds are means, and
+        // the update is p - lr * g — so any single update moves a
+        // parameter by at most 3 * lr. An admitted async update has
+        // version distance d <= tau and is scaled by 1/(1+d), so per
+        // applied update the async and oracle trajectories separate by
+        // at most lr * (2 + 3*tau/(1+tau)); over B applies the final
+        // models differ by at most lr * B * (2 + 3*tau/(1+tau))
+        // per parameter.
+        let tau = 2u64;
+        let spec = spec_k(4, 4);
+        let (model, _) = run_fleet(&spec, AggregationPlan::Async { tau }, 3, 1, false);
+        // At-least-once applies may overshoot the nominal count; the
+        // bound scales with the applies that actually happened.
+        assert!(model.version >= spec.total_versions(), "version {}", model.version);
+        let o = oracle(&spec, AggregationPlan::Flat);
+        let lr = spec.learning_rate as f64;
+        let b = model.version as f64;
+        let bound = lr * b * (2.0 + 3.0 * tau as f64 / (1.0 + tau as f64));
+        for (i, (a, e)) in model.params.iter().zip(&o).enumerate() {
+            let d = (*a as f64 - *e as f64).abs();
+            assert!(d <= bound, "param {i}: async {a} vs oracle {e}, |d|={d} > bound {bound}");
+        }
+    }
+
+    #[test]
+    fn async_reduce_rejects_stale_update_and_recycles_producers() {
+        // Drive the policy's reject path deterministically: the model is
+        // at version 3, but batch 3's leaf queue holds ModelUpdates
+        // stamped base_version = 0 — distance 3 > tau = 1. The reduce
+        // must NOT fold them into the model; it recycles the producer
+        // maps as fresh work, the regenerated updates rebase on the
+        // current snapshot (distance 0), and the retry applies cleanly.
+        let spec = spec_k(2, 5);
+        let plan = AggregationPlan::Async { tau: 1 };
+        let broker = Broker::new(Duration::from_secs(5));
+        let store = Store::new();
+        let corpus = Corpus::synthetic_js(7, 3000);
+        let engine = Engine::exact_math_for_tests();
+        let p3 = vec![1.0f32, -1.0, 0.5, 0.0, 2.0, -0.25];
+
+        store.put(jsdoop::coordinator::keys::PROBLEM, &spec.encode()).unwrap();
+        store.put(jsdoop::coordinator::keys::CORPUS, &corpus.to_bytes()).unwrap();
+        publish_model(
+            &store,
+            &ModelSnapshot { version: 3, params: p3.clone(), ms: vec![0.0; 6] },
+        )
+        .unwrap();
+
+        let bref = BatchRef { epoch: 0, batch: 3 };
+        broker.declare(queues::TASKS).unwrap();
+        broker.declare(&queues::agg_results(bref, 0)).unwrap();
+        // Stale leaves: gradients taken at the initial model, base 0.
+        for m in 0..2u32 {
+            let (x, y) = spec.schedule.minibatch(&corpus, 0, 3, m as usize);
+            let (g, l) = engine.grad_step(GRAD_STEP_B8, &[0.0; 6], &x, &y).unwrap();
+            let upd = jsdoop::model::ModelUpdate {
+                base_version: 0,
+                epoch: 0,
+                batch: 3,
+                minibatch: m,
+                loss: l,
+                grads: g,
+            };
+            broker.publish(&queues::agg_results(bref, 0), &upd.to_bytes()).unwrap();
+        }
+        let reduce =
+            Task::Reduce { batch_ref: bref, num_minibatches: 2, model_version: 3, plan };
+        broker
+            .publish_pri(queues::TASKS, &reduce.encode(), plan.task_priority(3, u32::MAX))
+            .unwrap();
+
+        // Expected retry outcome: regenerated maps rebase on p3
+        // (distance 0 -> weight 1), mean-fold, one SGD step.
+        let leaf = |m: usize| {
+            let (x, y) = spec.schedule.minibatch(&corpus, 0, 3, m);
+            engine.grad_step(GRAD_STEP_B8, &p3, &x, &y).unwrap().0
+        };
+        let (g0, g1) = (leaf(0), leaf(1));
+        let expected: Vec<f32> = p3
+            .iter()
+            .zip(g0.iter().zip(&g1))
+            .map(|(p, (a, b))| p - spec.learning_rate * ((a + b) / 2.0))
+            .collect();
+
+        let quit = Arc::new(AtomicBool::new(false));
+        let report = std::thread::scope(|s| {
+            let quit2 = quit.clone();
+            let broker = &broker;
+            let store = &store;
+            let engine = &engine;
+            let h = s.spawn(move || {
+                let agent = Agent {
+                    id: 0,
+                    engine,
+                    queue: broker,
+                    data: store,
+                    timeline: None,
+                    opts: fleet_opts(),
+                };
+                agent.run(&quit2).unwrap()
+            });
+            let t0 = std::time::Instant::now();
+            while current_version(store).unwrap().unwrap_or(0) < 4 {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(20),
+                    "recycled batch never applied"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            quit.store(true, Ordering::Relaxed);
+            h.join().unwrap()
+        });
+        assert!(report.updates_recycled >= 1, "report: {report:?}");
+        assert!(report.maps_done >= 2, "recycled maps must re-run: {report:?}");
+        assert_eq!(report.reduces_done, 1, "report: {report:?}");
+        let model = get_model(&store).unwrap().unwrap();
+        assert_eq!(model.version, 4);
+        assert_eq!(model.params, expected, "retry must rebase on the CURRENT snapshot");
+    }
+
+    #[test]
     fn poisoned_results_queue_still_converges() {
         // Regression for the fatal `?` on GradResult::decode: a corrupt
         // payload on the results queue used to kill every volunteer that
