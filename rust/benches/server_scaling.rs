@@ -1,5 +1,5 @@
 //! S-series bench — connection scaling of the TCP server's readiness
-//! event loop (queue/server.rs):
+//! event loop (queue/server/):
 //!   S1 resident memory per idle connection at 1k and 10k connections
 //!      (the event loop holds a ~few-hundred-byte state machine per conn;
 //!      the old design held a whole thread stack)
@@ -12,12 +12,20 @@
 //!      acked + unacked + ready, gated at exactly zero violations), and
 //!      the obs-probe-vs-broker-op headroom ratio that bounds the flight
 //!      recorder's hot-path overhead
+//!   S5 readiness backends: publish-to-parked-consumer wake latency with
+//!      10k idle connections open, poll(2) vs epoll (the O(n)-vs-O(ready)
+//!      wait cost made visible), and RSS/conn at 50k idle under epoll —
+//!      the volunteer-scale tier poll(2) cannot reach affordably
+//!   S6 event-loop sharding: S3's 64-active-connection workload against a
+//!      4-shard server, gated as a ratio vs the single-shard figure
 //!
-//! Run: cargo bench --bench server_scaling          (wants `ulimit -n` >= 25k)
-//! CI:  SERVER_MAX_RSS_PER_CONN=16384 caps S1 hard; OBS_MAX_OVERHEAD_PCT=5
-//!      caps the registry probe at 5% of a broker op; the committed
-//!      bench_baselines/BENCH_server.json and BENCH_obs.json gate S1/S3/S4
-//!      against regression via `cargo run --bin bench_check`.
+//! Run: cargo bench --bench server_scaling          (wants `ulimit -n` >= 25k;
+//!      the 50k tier wants >= 110k — client and server fds share the process)
+//! CI:  SERVER_MAX_RSS_PER_CONN=16384 caps S1/S5 hard; OBS_MAX_OVERHEAD_PCT=5
+//!      caps the registry probe at 5% of a broker op; EPOLL_MIN_WAKE_RATIO
+//!      floors the S5 poll/epoll wake-latency ratio; the committed
+//!      bench_baselines/BENCH_server.json and BENCH_obs.json gate
+//!      S1/S3/S5/S6 against regression via `cargo run --bin bench_check`.
 //!
 //! Counts degrade gracefully under a low fd limit: a tier that cannot be
 //! reached is skipped (with a note) instead of emitting a bogus row.
@@ -34,7 +42,7 @@ use jsdoop::metrics::{write_bench_json, BenchRow};
 use jsdoop::obs;
 use jsdoop::queue::broker::Broker;
 use jsdoop::queue::client::RemoteQueue;
-use jsdoop::queue::server::{execute_op, serve};
+use jsdoop::queue::server::{execute_op, serve, serve_with, PollerKind, ServerOptions};
 use jsdoop::queue::wire::{read_frame, write_frame, Op, ST_ERR};
 use jsdoop::queue::QueueApi;
 
@@ -160,6 +168,65 @@ fn measure_ops(addr: std::net::SocketAddr, threads: usize, cycles: u32) -> f64 {
         h.join().unwrap();
     }
     (threads as u64 * cycles as u64) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Mean publish-to-delivery latency for a consumer that is PARKED (its
+/// blocking Consume registered as a waker, no thread held) when the
+/// publish lands. This is the path where the readiness backend's wait
+/// cost shows: with 10k idle connections enrolled, poll(2) scans all of
+/// them per wakeup while epoll returns just the ready one.
+fn measure_wake_latency(addr: std::net::SocketAddr, samples: u32) -> f64 {
+    let q = RemoteQueue::connect(&addr.to_string()).unwrap();
+    let _ = q.declare("wake");
+    let mut total = Duration::ZERO;
+    for _ in 0..samples {
+        let addr_s = addr.to_string();
+        let consumer = std::thread::spawn(move || {
+            let c = RemoteQueue::connect(&addr_s).unwrap();
+            let d = c.consume("wake", Duration::from_secs(5)).unwrap();
+            (Instant::now(), d)
+        });
+        // Let the consume arrive and park before the timer starts.
+        std::thread::sleep(Duration::from_millis(30));
+        let t0 = Instant::now();
+        q.publish("wake", b"wake").unwrap();
+        let (t1, d) = consumer.join().unwrap();
+        let d = d.expect("parked consume timed out instead of waking");
+        q.ack("wake", d.tag).unwrap();
+        total += t1.saturating_duration_since(t0);
+    }
+    total.as_nanos() as f64 / samples as f64
+}
+
+/// One S5 wake-latency tier: a fresh server on `kind`, 10k idle
+/// connections enrolled, then `samples` timed park/publish/wake cycles.
+/// `None` when the backend or the fd budget is unavailable here.
+fn wake_tier(kind: PollerKind, samples: u32) -> Option<f64> {
+    let h = match serve_with(
+        "127.0.0.1:0",
+        Arc::new(Broker::new(Duration::from_secs(60))),
+        Arc::new(Store::new()),
+        ServerOptions { poller: kind, ..ServerOptions::default() },
+    ) {
+        Ok(h) => h,
+        Err(e) => {
+            println!("  ({kind} backend unavailable here: {e})");
+            return None;
+        }
+    };
+    let idle = open_idle(h.addr, 10_000);
+    let got = idle.len();
+    let ns = if got == 10_000 {
+        let ns = measure_wake_latency(h.addr, samples);
+        println!("  {kind:<6} {ns:>12.0} ns publish->wake @10k idle ({samples} samples)");
+        Some(ns)
+    } else {
+        println!("  (fd limit: only {got} conns; skipping the {kind} wake tier)");
+        None
+    };
+    drop(idle);
+    h.shutdown();
+    ns
 }
 
 fn per_conn_row(rows: &mut Vec<BenchRow>, name: &str, delta: u64, conns: usize) -> f64 {
@@ -363,6 +430,98 @@ fn main() {
         );
     }
 
+    println!("== S5: parked-consumer wake latency @10k idle, poll vs epoll ==");
+    let samples = iters(50);
+    let poll_wake_ns = wake_tier(PollerKind::Poll, samples);
+    let epoll_wake_ns = if cfg!(target_os = "linux") {
+        wake_tier(PollerKind::Epoll, samples)
+    } else {
+        println!("  (epoll is linux-only; wake-ratio row skipped on this host)");
+        None
+    };
+    if let (Some(p), Some(e)) = (poll_wake_ns, epoll_wake_ns) {
+        let wake_ratio = p / e.max(1.0);
+        println!("  -> epoll wakes parked consumers at {wake_ratio:.2}x poll's latency");
+        rows.push(BenchRow {
+            op: "S5 wake-latency ratio poll/epoll @10k idle".to_string(),
+            iters: samples,
+            ns_per_op: e,
+            speedup: Some(wake_ratio),
+        });
+        if let Some(min) = std::env::var("EPOLL_MIN_WAKE_RATIO")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+        {
+            assert!(
+                wake_ratio >= min,
+                "epoll publish->wake latency is {wake_ratio:.2}x poll's \
+                 (floor {min:.2}): the O(ready) backend must not lose to O(n)"
+            );
+        }
+    }
+
+    println!("== S5: 50k idle connections under epoll ==");
+    let mut s5_per_conn: Option<f64> = None;
+    if cfg!(target_os = "linux") {
+        match serve_with(
+            "127.0.0.1:0",
+            Arc::new(Broker::new(Duration::from_secs(60))),
+            Arc::new(Store::new()),
+            ServerOptions {
+                max_connections: 65_536,
+                poller: PollerKind::Epoll,
+                ..ServerOptions::default()
+            },
+        ) {
+            Ok(h) => {
+                if let Some(rss0) = vm_rss_bytes() {
+                    let conns = open_idle(h.addr, 50_000);
+                    if conns.len() == 50_000 {
+                        let d = vm_rss_bytes().unwrap_or(rss0).saturating_sub(rss0);
+                        let name = "S5 rss_per_conn_bytes @50k idle (epoll)";
+                        s5_per_conn = Some(per_conn_row(&mut rows, name, d, 50_000));
+                        // The tier only counts if the server still answers
+                        // with all 50k enrolled.
+                        let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
+                        q.ping().unwrap();
+                    } else {
+                        println!(
+                            "  (fd limit: only {} conns; skipping the 50k row)",
+                            conns.len()
+                        );
+                    }
+                    drop(conns);
+                } else {
+                    println!("  (no /proc/self/status on this host; 50k row skipped)");
+                }
+                h.shutdown();
+            }
+            Err(e) => println!("  (epoll server unavailable: {e})"),
+        }
+    } else {
+        println!("  (epoll is linux-only; 50k tier skipped on this host)");
+    }
+
+    println!("== S6: event-loop sharding, 4 shards vs 1 @64 active ==");
+    let shard4 = serve_with(
+        "127.0.0.1:0",
+        Arc::new(Broker::new(Duration::from_secs(60))),
+        Arc::new(Store::new()),
+        ServerOptions { loop_shards: 4, ..ServerOptions::default() },
+    )
+    .unwrap();
+    let shard_ops = measure_ops(shard4.addr, 64, cycles);
+    shard4.shutdown();
+    let shard_ratio = shard_ops / evt_ops;
+    println!("  4 shards:        {shard_ops:>10.0} cycles/s (64 clients x {cycles})");
+    println!("  -> {shard_ratio:.2}x the single-shard figure (shared broker bounds the win)");
+    rows.push(BenchRow {
+        op: "S6 throughput ratio 4-shard/1-shard @64 active".to_string(),
+        iters: cycles,
+        ns_per_op: 1e9 / shard_ops,
+        speedup: Some(shard_ratio),
+    });
+
     base.shutdown();
     evt.shutdown();
 
@@ -379,6 +538,12 @@ fn main() {
             None => {
                 println!("(SERVER_MAX_RSS_PER_CONN set but no RSS tier ran — raise ulimit -n)")
             }
+        }
+        if let Some(per) = s5_per_conn {
+            assert!(
+                per <= cap,
+                "epoll RSS/conn {per:.0} B at 50k idle exceeds the {cap:.0} B cap"
+            );
         }
     }
     if let Some(min) = std::env::var("SERVER_MIN_OPS_RATIO")

@@ -80,6 +80,14 @@ pub struct Config {
     /// seconds (0 = never). Parked consumers (blocked Consume /
     /// WaitVersion) are exempt.
     pub idle_timeout: u64,
+    /// Event-loop shards: each is one loop thread owning its own
+    /// connections and timers (on Linux with its own `SO_REUSEPORT`
+    /// listener). 1 (default) = the classic single-loop server; capped
+    /// at `obs::MAX_SHARDS`.
+    pub loop_shards: usize,
+    /// Readiness backend: "auto" (default — epoll on Linux, poll
+    /// elsewhere), "poll", or "epoll" (Linux only).
+    pub poller: String,
     // Observability (obs + `jsdoop metrics`).
     /// `serve` emits a JSON metrics line every N seconds (0 = off).
     pub metrics_every: u64,
@@ -88,6 +96,9 @@ pub struct Config {
     pub watch: u64,
     /// `jsdoop metrics --json` prints a JSON line instead of tables.
     pub json: bool,
+    /// `jsdoop metrics --prom` prints Prometheus text exposition format
+    /// (one scrape) instead of tables.
+    pub prom: bool,
     // Multi-tenant fleets (queue/job).
     /// `jsdoop metrics --job=<id>` shows only that job's queue rows
     /// (`--job=` selects the default, unprefixed namespace). None = all.
@@ -138,9 +149,12 @@ impl Default for Config {
             max_connections: 16_384,
             max_conns_per_ip: 0,
             idle_timeout: 0,
+            loop_shards: 1,
+            poller: "auto".to_string(),
             metrics_every: 0,
             watch: 0,
             json: false,
+            prom: false,
             job: None,
             job_quotas: String::new(),
             job_agg: String::new(),
@@ -154,7 +168,7 @@ impl Default for Config {
 }
 
 /// Keys whose bare `--flag` CLI form means `--flag=true`.
-const BOOL_KEYS: &[&str] = &["promote", "json"];
+const BOOL_KEYS: &[&str] = &["promote", "json", "prom"];
 
 impl Config {
     pub fn schedule(&self) -> Schedule {
@@ -225,6 +239,20 @@ impl Config {
         if self.idle_timeout > 86_400 {
             // A day-long "idle" cutoff is certainly a typo'd unit (ms?).
             bail!("idle_timeout must be <= 86400 seconds (0 = never reap)");
+        }
+        if self.loop_shards == 0 || self.loop_shards > crate::obs::MAX_SHARDS {
+            bail!("loop_shards must be in 1..={}", crate::obs::MAX_SHARDS);
+        }
+        let poller = self
+            .poller
+            .parse::<crate::queue::server::PollerKind>()
+            .context("bad poller")?;
+        if poller == crate::queue::server::PollerKind::Epoll && !cfg!(target_os = "linux") {
+            // Fail at validation, not at serve time on thread N.
+            bail!("poller=epoll is linux-only on this build; use auto or poll");
+        }
+        if self.prom && self.json {
+            bail!("--prom and --json are mutually exclusive output formats");
         }
         if self.metrics_every > 86_400 {
             bail!("metrics_every must be <= 86400 seconds (0 = off)");
@@ -370,9 +398,12 @@ impl Config {
             "max_connections" => self.max_connections = p(key, val)?,
             "max_conns_per_ip" => self.max_conns_per_ip = p(key, val)?,
             "idle_timeout" => self.idle_timeout = p(key, val)?,
+            "loop_shards" => self.loop_shards = p(key, val)?,
+            "poller" => self.poller = val.to_string(),
             "metrics_every" => self.metrics_every = p(key, val)?,
             "watch" => self.watch = p(key, val)?,
             "json" => self.json = p(key, val)?,
+            "prom" => self.prom = p(key, val)?,
             "job" => self.job = Some(val.to_string()),
             "job_quotas" => self.job_quotas = val.to_string(),
             "job_agg" => self.job_agg = val.to_string(),
@@ -513,6 +544,41 @@ mod tests {
         assert!(c.validate().is_err());
         c.max_connections = 512;
         c.server_workers = 4096; // typo'd pool size
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn event_loop_keys_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.loop_shards, 1); // classic single loop
+        assert_eq!(c.poller, "auto");
+        c.apply_cli(&["--loop-shards=4".into(), "--poller=poll".into()]).unwrap();
+        assert_eq!(c.loop_shards, 4);
+        assert_eq!(c.poller, "poll");
+        c.validate().unwrap();
+        c.loop_shards = 0;
+        assert!(c.validate().is_err());
+        c.loop_shards = crate::obs::MAX_SHARDS + 1;
+        assert!(c.validate().is_err());
+        c.loop_shards = crate::obs::MAX_SHARDS;
+        c.validate().unwrap();
+        // Unknown backends fail loudly at validation.
+        c.poller = "kqueue".into();
+        assert!(c.validate().is_err());
+        // An explicit epoll request is validated against the build target
+        // (it must not fail later on a shard thread).
+        c.poller = "epoll".into();
+        assert_eq!(c.validate().is_ok(), cfg!(target_os = "linux"));
+    }
+
+    #[test]
+    fn prom_key_parses_and_conflicts_with_json() {
+        let mut c = Config::default();
+        assert!(!c.prom);
+        c.apply_cli(&["--prom".into()]).unwrap(); // bare boolean flag
+        assert!(c.prom);
+        c.validate().unwrap();
+        c.json = true; // two output formats, one stream
         assert!(c.validate().is_err());
     }
 

@@ -11,26 +11,32 @@
 //!                                 vs the paper's single reducer)
 //!   serve [addr] [--durability_dir=D --sync_policy=P --wal_compact_bytes=N
 //!                 --wal_group_window_us=U --server_workers=W --max_connections=C
-//!                 --idle_timeout=SECS --metrics_every=SECS
+//!                 --idle_timeout=SECS --loop_shards=N --poller=auto|poll|epoll
+//!                 --metrics_every=SECS
 //!                 --job_quotas=job=<max_msgs>:<max_bytes>,...]
 //!                                 host QueueServer + DataServer over TCP
-//!                                 (poll(2) event loop + W op workers; see
-//!                                 queue/server.rs); with a durability dir
-//!                                 the broker recovers its queues from
-//!                                 WAL + snapshot on restart; idle_timeout
-//!                                 reaps dead connections, metrics_every
-//!                                 emits a JSON metrics line periodically
+//!                                 (readiness event loop + W op workers; see
+//!                                 queue/server); poller picks the readiness
+//!                                 backend (auto = epoll on Linux, poll
+//!                                 elsewhere) and loop_shards runs N event
+//!                                 loops with SO_REUSEPORT listeners; with a
+//!                                 durability dir the broker recovers its
+//!                                 queues from WAL + snapshot on restart;
+//!                                 idle_timeout reaps dead connections,
+//!                                 metrics_every emits a JSON metrics line
+//!                                 periodically
 //!   serve [addr] --durability_dir=D --replicate-from=PRIMARY [--repl_poll_ms=MS]
 //!                                 follow a primary: mirror its WAL into D and
 //!                                 serve READ-ONLY (Stats/Len) while it lives
 //!   serve [addr] --durability_dir=D --promote
 //!                                 promote a follower's mirror: clear its
 //!                                 replica marker, recover, serve as primary
-//!   metrics [addr] [--watch=SECS --json --job=ID]
+//!   metrics [addr] [--watch=SECS --json --prom --job=ID]
 //!                                 live introspection of a running server
 //!                                 (Op::Metrics): op latency histograms,
 //!                                 queue depths, WAL/replication gauges,
-//!                                 recent trace events
+//!                                 recent trace events; --prom renders one
+//!                                 Prometheus text-exposition scrape
 //!   init [--queue-addr --data-addr]  publish the problem to remote servers
 //!   volunteer [--queue-addr --data-addr --id=N]  remote volunteer process
 //!   generate [--model=path --chars=N --seed-text=...]  text-gen demo
@@ -231,6 +237,8 @@ fn serve(cfg: &Config, rest: &[String]) -> Result<()> {
         max_connections: cfg.max_connections,
         idle_timeout: (cfg.idle_timeout > 0).then(|| Duration::from_secs(cfg.idle_timeout)),
         max_conns_per_ip: cfg.max_conns_per_ip,
+        loop_shards: cfg.loop_shards,
+        poller: cfg.poller.parse()?, // validate() already vetted it
         ..Default::default()
     };
     // The wait loops below tick every 200 ms; metrics_every is seconds.
@@ -403,7 +411,7 @@ fn emit_metrics_line(handle: &jsdoop::queue::server::ServerHandle) {
     println!("{}", snap.to_json_line());
 }
 
-/// `jsdoop metrics [addr] [--watch=SECS --json]`: fetch the live
+/// `jsdoop metrics [addr] [--watch=SECS --json --prom]`: fetch the live
 /// [`jsdoop::obs`] snapshot from a running server and render it.
 fn metrics_cmd(cfg: &Config, rest: &[String]) -> Result<()> {
     cfg.validate()?;
@@ -421,7 +429,11 @@ fn metrics_cmd(cfg: &Config, rest: &[String]) -> Result<()> {
             // counters/gauges/histograms are global and stay.
             snap.retain_job(job);
         }
-        if cfg.json {
+        if cfg.prom {
+            // One scrape in Prometheus text exposition format — pipe to
+            // a pushgateway or a textfile-collector drop directory.
+            print!("{}", snap.to_prometheus());
+        } else if cfg.json {
             println!("{}", snap.to_json_line());
         } else {
             println!("{}", snap.render_table());

@@ -1,8 +1,9 @@
 //! Flight recorder (S18): a zero-dependency metrics + tracing registry
 //! shared by every hot layer — server event loop, broker, WAL,
 //! replication follower, and volunteer agents — and exposed live over the
-//! wire as `Op::Metrics` (see `queue/server.rs`) and on the CLI as
-//! `jsdoop metrics [--watch=N]` / `jsdoop serve --metrics_every=N`.
+//! wire as `Op::Metrics` (see `queue/server/`) and on the CLI as
+//! `jsdoop metrics [--watch=N --json | --prom]` / `jsdoop serve
+//! --metrics_every=N`.
 //!
 //! # Overhead contract
 //!
@@ -39,7 +40,7 @@
 //! against the input length in division form before any allocation.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -71,6 +72,9 @@ pub enum Counter {
     /// Accepts refused by the per-IP connection cap
     /// (`--max_conns_per_ip`).
     ServerConnsRefused,
+    /// Accept-loop backoff pauses (EMFILE and friends). A climbing rate
+    /// here is fd exhaustion, which is otherwise silent.
+    ServerAcceptBackoffs,
     /// Waiter registrations fired by broker notify sites.
     BrokerWaiterFires,
     BrokerPurges,
@@ -95,7 +99,7 @@ pub enum Counter {
     AgentUpdatesRecycled,
 }
 
-pub const NUM_COUNTERS: usize = 23;
+pub const NUM_COUNTERS: usize = 24;
 
 pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
     "server.ops",
@@ -106,6 +110,7 @@ pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
     "server.backpressure_stalls",
     "server.parks",
     "server.conns_refused",
+    "server.accept_backoffs",
     "broker.waiter_fires",
     "broker.purges",
     "wal.appends",
@@ -210,6 +215,67 @@ static TRACES: Lazy<Mutex<VecDeque<TraceEvent>>> =
     Lazy::new(|| Mutex::new(VecDeque::with_capacity(TRACE_CAP)));
 
 // ---------------------------------------------------------------------------
+// Per-shard server stats
+// ---------------------------------------------------------------------------
+//
+// The event loop can run as N shards (`--loop_shards=N`); SO_REUSEPORT
+// balancing is by connection-tuple hash, not load, so per-shard rows are
+// how a lagging or starved shard becomes visible. The registry stays
+// static (overhead contract): a fixed MAX_SHARDS worth of cells, with
+// only the first ACTIVE_SHARDS reported by `snapshot`.
+
+/// Upper bound on event-loop shards (`--loop_shards` is clamped to it).
+pub const MAX_SHARDS: usize = 16;
+
+/// How many shard rows `snapshot` reports (high-water across serves in
+/// this process; cleared by `reset`).
+static ACTIVE_SHARDS: AtomicUsize = AtomicUsize::new(0);
+
+static SHARD_CONNS_LIVE: [AtomicI64; MAX_SHARDS] = [const { AtomicI64::new(0) }; MAX_SHARDS];
+static SHARD_CONNS_ACCEPTED: [AtomicU64; MAX_SHARDS] =
+    [const { AtomicU64::new(0) }; MAX_SHARDS];
+static SHARD_CONNS_REFUSED: [AtomicU64; MAX_SHARDS] =
+    [const { AtomicU64::new(0) }; MAX_SHARDS];
+static SHARD_POLL_SUM: [AtomicU64; MAX_SHARDS] = [const { AtomicU64::new(0) }; MAX_SHARDS];
+static SHARD_POLL_BUCKET: [AtomicU64; MAX_SHARDS * HIST_BUCKETS] =
+    [const { AtomicU64::new(0) }; MAX_SHARDS * HIST_BUCKETS];
+
+/// Declare `n` shards live (called by `serve_with`); monotonic so a
+/// second server in the same process never hides the first one's rows.
+pub fn set_active_shards(n: usize) {
+    ACTIVE_SHARDS.fetch_max(n.min(MAX_SHARDS), Ordering::Relaxed);
+}
+
+#[inline]
+pub fn shard_conns_add(shard: usize, delta: i64) {
+    if shard < MAX_SHARDS {
+        SHARD_CONNS_LIVE[shard].fetch_add(delta, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn shard_inc_accepted(shard: usize) {
+    if shard < MAX_SHARDS {
+        SHARD_CONNS_ACCEPTED[shard].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn shard_inc_refused(shard: usize) {
+    if shard < MAX_SHARDS {
+        SHARD_CONNS_REFUSED[shard].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn shard_observe_poll_round(shard: usize, ns: u64) {
+    if shard < MAX_SHARDS {
+        SHARD_POLL_SUM[shard].fetch_add(ns, Ordering::Relaxed);
+        SHARD_POLL_BUCKET[shard * HIST_BUCKETS + bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Hot-path API (lock-free, relaxed atomics)
 // ---------------------------------------------------------------------------
 
@@ -308,6 +374,18 @@ pub fn reset() {
     }
     for h in HIST_COUNT.iter().chain(HIST_SUM.iter()).chain(HIST_BUCKET.iter()) {
         h.store(0, Ordering::Relaxed);
+    }
+    ACTIVE_SHARDS.store(0, Ordering::Relaxed);
+    for g in &SHARD_CONNS_LIVE {
+        g.store(0, Ordering::Relaxed);
+    }
+    for c in SHARD_CONNS_ACCEPTED
+        .iter()
+        .chain(SHARD_CONNS_REFUSED.iter())
+        .chain(SHARD_POLL_SUM.iter())
+        .chain(SHARD_POLL_BUCKET.iter())
+    {
+        c.store(0, Ordering::Relaxed);
     }
     TRACES.lock().unwrap().clear();
 }
@@ -555,6 +633,96 @@ impl MetricsSnapshot {
         s.push_str("}}");
         s
     }
+
+    /// Prometheus text exposition format (`text/plain; version=0.0.4`)
+    /// for `jsdoop metrics --prom`. Names are `jsdoop_`-prefixed with
+    /// every non-alphanumeric folded to `_`; the log2 histograms become
+    /// the cumulative `le` series Prometheus requires — observations are
+    /// integers and bucket `b` spans `[2^(b-1), 2^b)`, so its inclusive
+    /// upper bound is `le = 2^b - 1` (bucket 0 is exactly `le = 0`), and
+    /// the final absorbing bucket is the `+Inf` series. Queue rows
+    /// become `queue`-labeled families; the trace ring has no scrape
+    /// representation (it is a log, not a metric).
+    pub fn to_prometheus(&self) -> String {
+        fn name(n: &str) -> String {
+            let mut s = String::with_capacity(7 + n.len());
+            s.push_str("jsdoop_");
+            for c in n.chars() {
+                s.push(if c.is_ascii_alphanumeric() { c } else { '_' });
+            }
+            s
+        }
+        fn label(v: &str) -> String {
+            let mut s = String::with_capacity(v.len());
+            for c in v.chars() {
+                match c {
+                    '\\' => s.push_str("\\\\"),
+                    '"' => s.push_str("\\\""),
+                    '\n' => s.push_str("\\n"),
+                    c => s.push(c),
+                }
+            }
+            s
+        }
+        let mut out = String::with_capacity(4096);
+        out.push_str("# TYPE jsdoop_uptime_seconds gauge\n");
+        out.push_str(&format!("jsdoop_uptime_seconds {}\n", self.uptime_ms as f64 / 1000.0));
+        for (n, v) in &self.counters {
+            let n = name(n);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        for (n, v) in &self.gauges {
+            let n = name(n);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+        }
+        for h in &self.hists {
+            let n = name(&h.name);
+            out.push_str(&format!("# TYPE {n} histogram\n"));
+            let mut cum = 0u64;
+            for (b, c) in h.buckets.iter().enumerate() {
+                if b + 1 == h.buckets.len() {
+                    break; // the absorbing bucket is the +Inf series
+                }
+                cum += c;
+                let le = if b == 0 { 0 } else { (1u64 << b) - 1 };
+                out.push_str(&format!("{n}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("{n}_sum {}\n{n}_count {}\n", h.sum, h.count));
+        }
+        if !self.queues.is_empty() {
+            let gauge_fams: [(&str, fn(&QueueMetrics) -> u64); 3] =
+                [("ready", |q| q.ready), ("unacked", |q| q.unacked), ("waiters", |q| q.waiters)];
+            let counter_fams: [(&str, fn(&QueueMetrics) -> u64); 5] = [
+                ("published", |q| q.published),
+                ("delivered", |q| q.delivered),
+                ("acked", |q| q.acked),
+                ("nacked", |q| q.nacked),
+                ("redelivered", |q| q.redelivered),
+            ];
+            for (fam, get) in gauge_fams {
+                out.push_str(&format!("# TYPE jsdoop_queue_{fam} gauge\n"));
+                for q in &self.queues {
+                    out.push_str(&format!(
+                        "jsdoop_queue_{fam}{{queue=\"{}\"}} {}\n",
+                        label(&q.name),
+                        get(q)
+                    ));
+                }
+            }
+            for (fam, get) in counter_fams {
+                out.push_str(&format!("# TYPE jsdoop_queue_{fam} counter\n"));
+                for q in &self.queues {
+                    out.push_str(&format!(
+                        "jsdoop_queue_{fam}{{queue=\"{}\"}} {}\n",
+                        label(&q.name),
+                        get(q)
+                    ));
+                }
+            }
+        }
+        out
+    }
 }
 
 fn json_str(s: &str) -> String {
@@ -591,18 +759,22 @@ fn fmt_val(v: u64, ns: bool) -> String {
 }
 
 /// Fold the registry plus caller-supplied per-queue rows into a snapshot.
+/// When event-loop shards are active their per-shard rows are appended
+/// after the static schema (`server.shard<i>.*`) — the name-carrying
+/// codec ships them with no version bump, and old clients render them
+/// like any other row.
 pub fn snapshot(queues: Vec<QueueMetrics>) -> MetricsSnapshot {
-    let counters = COUNTER_NAMES
+    let mut counters: Vec<(String, u64)> = COUNTER_NAMES
         .iter()
         .enumerate()
         .map(|(i, n)| (n.to_string(), COUNTERS[i].load(Ordering::Relaxed)))
         .collect();
-    let gauges = GAUGE_NAMES
+    let mut gauges: Vec<(String, i64)> = GAUGE_NAMES
         .iter()
         .enumerate()
         .map(|(i, n)| (n.to_string(), GAUGES[i].load(Ordering::Relaxed)))
         .collect();
-    let hists = HIST_NAMES
+    let mut hists: Vec<HistSnapshot> = HIST_NAMES
         .iter()
         .enumerate()
         .map(|(i, n)| HistSnapshot {
@@ -614,6 +786,30 @@ pub fn snapshot(queues: Vec<QueueMetrics>) -> MetricsSnapshot {
                 .collect(),
         })
         .collect();
+    let active = ACTIVE_SHARDS.load(Ordering::Relaxed).min(MAX_SHARDS);
+    for i in 0..active {
+        gauges.push((
+            format!("server.shard{i}.conns_live"),
+            SHARD_CONNS_LIVE[i].load(Ordering::Relaxed),
+        ));
+        counters.push((
+            format!("server.shard{i}.conns_accepted"),
+            SHARD_CONNS_ACCEPTED[i].load(Ordering::Relaxed),
+        ));
+        counters.push((
+            format!("server.shard{i}.conns_refused"),
+            SHARD_CONNS_REFUSED[i].load(Ordering::Relaxed),
+        ));
+        let buckets: Vec<u64> = (0..HIST_BUCKETS)
+            .map(|b| SHARD_POLL_BUCKET[i * HIST_BUCKETS + b].load(Ordering::Relaxed))
+            .collect();
+        hists.push(HistSnapshot {
+            name: format!("server.shard{i}.poll_round_ns"),
+            count: buckets.iter().sum(),
+            sum: SHARD_POLL_SUM[i].load(Ordering::Relaxed),
+            buckets,
+        });
+    }
     let events = TRACES.lock().unwrap().iter().cloned().collect();
     MetricsSnapshot {
         uptime_ms: START.elapsed().as_millis().min(u64::MAX as u128) as u64,
@@ -977,6 +1173,131 @@ mod tests {
         d.retain_job("");
         assert_eq!(d.queues.len(), 1);
         assert_eq!(d.queues[0].name, "tasks");
+    }
+
+    #[test]
+    fn prometheus_exposition_matches_golden_scrape() {
+        // A hand-built snapshot so the scrape is fully deterministic:
+        // 3 observations — one 0 (bucket 0), one 1 (bucket 1), one in
+        // the absorbing bucket — over a 4-bucket histogram.
+        let snap = MetricsSnapshot {
+            uptime_ms: 1500,
+            counters: vec![("server.ops".into(), 7)],
+            gauges: vec![("server.shard0.conns_live".into(), 2)],
+            hists: vec![HistSnapshot {
+                name: "server.poll_round_ns".into(),
+                count: 3,
+                sum: 6,
+                buckets: vec![1, 1, 0, 1],
+            }],
+            queues: vec![QueueMetrics {
+                name: "alpha/tasks".into(),
+                published: 5,
+                delivered: 4,
+                acked: 3,
+                nacked: 0,
+                redelivered: 1,
+                ready: 1,
+                unacked: 1,
+                waiters: 2,
+            }],
+            events: Vec::new(),
+        };
+        let golden = r#"# TYPE jsdoop_uptime_seconds gauge
+jsdoop_uptime_seconds 1.5
+# TYPE jsdoop_server_ops counter
+jsdoop_server_ops 7
+# TYPE jsdoop_server_shard0_conns_live gauge
+jsdoop_server_shard0_conns_live 2
+# TYPE jsdoop_server_poll_round_ns histogram
+jsdoop_server_poll_round_ns_bucket{le="0"} 1
+jsdoop_server_poll_round_ns_bucket{le="1"} 2
+jsdoop_server_poll_round_ns_bucket{le="3"} 2
+jsdoop_server_poll_round_ns_bucket{le="+Inf"} 3
+jsdoop_server_poll_round_ns_sum 6
+jsdoop_server_poll_round_ns_count 3
+# TYPE jsdoop_queue_ready gauge
+jsdoop_queue_ready{queue="alpha/tasks"} 1
+# TYPE jsdoop_queue_unacked gauge
+jsdoop_queue_unacked{queue="alpha/tasks"} 1
+# TYPE jsdoop_queue_waiters gauge
+jsdoop_queue_waiters{queue="alpha/tasks"} 2
+# TYPE jsdoop_queue_published counter
+jsdoop_queue_published{queue="alpha/tasks"} 5
+# TYPE jsdoop_queue_delivered counter
+jsdoop_queue_delivered{queue="alpha/tasks"} 4
+# TYPE jsdoop_queue_acked counter
+jsdoop_queue_acked{queue="alpha/tasks"} 3
+# TYPE jsdoop_queue_nacked counter
+jsdoop_queue_nacked{queue="alpha/tasks"} 0
+# TYPE jsdoop_queue_redelivered counter
+jsdoop_queue_redelivered{queue="alpha/tasks"} 1
+"#;
+        assert_eq!(snap.to_prometheus(), golden);
+    }
+
+    #[test]
+    fn prometheus_escapes_hostile_label_values() {
+        let mut snap = MetricsSnapshot {
+            uptime_ms: 0,
+            counters: Vec::new(),
+            gauges: Vec::new(),
+            hists: Vec::new(),
+            queues: vec![QueueMetrics {
+                name: "evil\"q\\name\nx".into(),
+                published: 0,
+                delivered: 0,
+                acked: 0,
+                nacked: 0,
+                redelivered: 0,
+                ready: 0,
+                unacked: 0,
+                waiters: 0,
+            }],
+            events: Vec::new(),
+        };
+        let text = snap.to_prometheus();
+        assert!(text.contains(r#"queue="evil\"q\\name\nx""#));
+        // No raw newline may survive inside a label value.
+        for line in text.lines() {
+            assert!(!line.ends_with("evil"));
+        }
+        snap.queues.clear();
+        assert!(!snap.to_prometheus().contains("jsdoop_queue_"));
+    }
+
+    #[test]
+    fn shard_stats_ride_the_snapshot() {
+        // Deltas against the last shard slot: the registry is process-
+        // global and other tests run concurrently, but only this test
+        // touches MAX_SHARDS-1.
+        let i = MAX_SHARDS - 1;
+        let before = snapshot(Vec::new());
+        let acc0 = before.counter(&format!("server.shard{i}.conns_accepted")).unwrap_or(0);
+        set_active_shards(MAX_SHARDS);
+        set_active_shards(2); // monotonic: must not shrink
+        shard_inc_accepted(i);
+        shard_inc_refused(i);
+        shard_conns_add(i, 3);
+        shard_conns_add(i, -1);
+        shard_observe_poll_round(i, 100);
+        // Out-of-range shard indexes are ignored, not a panic.
+        shard_inc_accepted(MAX_SHARDS);
+        shard_observe_poll_round(MAX_SHARDS + 5, 1);
+        let snap = snapshot(Vec::new());
+        assert_eq!(
+            snap.counter(&format!("server.shard{i}.conns_accepted")).unwrap() - acc0,
+            1
+        );
+        assert!(snap.counter(&format!("server.shard{i}.conns_refused")).unwrap() >= 1);
+        assert!(snap.gauge(&format!("server.shard{i}.conns_live")).is_some());
+        let h = snap.hist(&format!("server.shard{i}.poll_round_ns")).unwrap();
+        assert!(h.count >= 1);
+        assert_eq!(h.count, h.buckets.iter().sum::<u64>());
+        // The shard rows ride the existing name-carrying codec untouched.
+        let back = decode(&encode(&snap)).unwrap();
+        assert_eq!(back.counter(&format!("server.shard{i}.conns_accepted")),
+            snap.counter(&format!("server.shard{i}.conns_accepted")));
     }
 
     #[test]

@@ -95,8 +95,10 @@
 //! The paper's deployments lean on the browser-facing middleware to fan
 //! thousands of volunteers into RabbitMQ; this reproduction's [`server`]
 //! carries that load directly, so it is readiness-driven rather than
-//! thread-per-connection: one event-loop thread multiplexes every socket
-//! through `poll(2)`, a fixed worker pool executes decoded ops, and a
+//! thread-per-connection: event-loop threads multiplex every socket
+//! through a pluggable readiness backend (`poll(2)` everywhere; `epoll`
+//! on Linux, where its O(ready) wait cost carries 50k idle volunteers),
+//! a fixed worker pool executes decoded ops, and a
 //! blocked consumer costs a parked *registration* — a [`ReadyWaker`]
 //! lodged with the broker ([`QueueService::register_waiter`]) or store —
 //! instead of a sleeping thread. Wakers follow a register-THEN-recheck
@@ -123,9 +125,20 @@
 //!   descriptor forever. Parked consumers are exempt: waiting for work
 //!   is their job, and their park deadline already bounds them.
 //!
+//! Past one loop thread, `--loop_shards=N` splits the fleet across N
+//! event loops — each shard owns its connections, timer heap, and waker
+//! registrations outright (no cross-shard locking on the readiness
+//! path), accepting via per-shard `SO_REUSEPORT` listeners where the
+//! kernel provides them and an accept-and-hand-off round-robin where it
+//! does not. The worker pool stays global, so a burst on one shard still
+//! draws on every core. Backend selection (`--poller=auto|poll|epoll`),
+//! the `Poller` trait contract, and the sharding topology are documented
+//! at the top of [`server`].
+//!
 //! Connection lifecycle, write backpressure, and shutdown-drain rules
 //! are documented at the top of [`server`]; live counters for all of the
-//! above are served by `Op::Metrics` (see [`crate::obs`]).
+//! above — including per-shard accept/refuse/poll-round gauges — are
+//! served by `Op::Metrics` (see [`crate::obs`]).
 
 pub mod broker;
 pub mod client;

@@ -1,0 +1,903 @@
+//! TCP server hosting the QueueServer and/or DataServer (paper Figure 2).
+//!
+//! # Architecture: readiness-driven core (unix)
+//!
+//! Event-loop shards own the accepted sockets and multiplex them through
+//! a pluggable readiness backend (`poll(2)` or `epoll`, hand-rolled FFI:
+//! the crate's no-new-deps rule rules out `mio`/`libc`, and `std`
+//! exposes no readiness API). Decoded requests are executed by a small
+//! fixed pool of worker threads against the shared [`QueueService`] +
+//! [`Store`]; workers never sleep inside an op. A connection walks
+//!
+//! ```text
+//! assembling --frame--> executing --would-block--> parked --waker/deadline--+
+//!      ^                    |                                               |
+//!      +------(writing, while the response drains)<---final/ready-----------+
+//! ```
+//!
+//! * **assembling** — nonblocking reads feed a resumable
+//!   [`FrameAssembler`]; a stalled or hostile peer costs one idle fd, not
+//!   a pinned thread (slow-loris containment).
+//! * **executing** — the frame is in the worker pool; the socket is not
+//!   watched meanwhile (the protocol is synchronous: one request in
+//!   flight per connection; pipelined bytes wait in the kernel buffer).
+//! * **parked** — a blocking op (Consume / ConsumeMany / WaitVersion)
+//!   found nothing. The worker registers a [`crate::queue::ReadyWaker`]
+//!   with the broker or store FIRST, then re-checks with a zero timeout,
+//!   so a publish landing in between cannot be a lost wakeup. A parked
+//!   connection holds no thread; a wake or the op's deadline
+//!   re-dispatches it.
+//! * **writing** — responses are written nonblockingly; leftovers wait
+//!   for writability. While a response is draining the socket is not
+//!   read, so a slow reader backpressures itself to one buffered
+//!   response (bounded memory per connection).
+//!
+//! Two lifecycle guards keep the connection table honest at volunteer
+//! scale: parked sockets stay readable in the interest set, so a
+//! consumer that dies mid-wait is torn down — and its broker/store
+//! waiter registration cancelled — the moment the kernel reports the
+//! hangup rather than at park-deadline expiry; and
+//! [`ServerOptions::idle_timeout`] rides the (lazily invalidated,
+//! self-compacting) timer heap to reap connections with no frame
+//! activity, counted in `server.conns_reaped`. Parked consumers are
+//! exempt from reaping: a blocked Consume **is** activity.
+//!
+//! # Readiness backends and event-loop sharding
+//!
+//! The readiness layer is the [`poller::Poller`] trait — register /
+//! modify / deregister fds under caller tokens, wait for events — with
+//! two hand-rolled FFI implementations selected by
+//! [`ServerOptions::poller`]:
+//!
+//! * **`poll`** (every unix; the non-Linux default) rebuilds an O(open)
+//!   fd array per wait and the kernel rescans all of it.
+//! * **`epoll`** (Linux; what `auto` picks there) keeps the interest set
+//!   in the kernel, so a wait costs O(ready) — the backend that carries
+//!   50k+ mostly-idle volunteers.
+//!
+//! Both are level-triggered: unconsumed readiness is simply re-reported,
+//! which the loop's one-frame-per-round fairness budget relies on. The
+//! trait contract has one sharp edge — an EMPTY interest must report
+//! nothing at all (not even errors), because a connection mid-execute
+//! owns a waiter registration that only the verdict may release; epoll
+//! cannot mask ERR/HUP, so its backend maps empty interest to
+//! `EPOLL_CTL_DEL`.
+//!
+//! [`ServerOptions::loop_shards`] = N runs N event-loop threads, each
+//! owning its own connections, timer heaps, and waker registrations. On
+//! Linux every shard gets its own `SO_REUSEPORT` listener and the kernel
+//! balances accepts by connection-tuple hash — note the caveat: hash
+//! balancing ignores shard load, so a slow shard still receives its
+//! share (the per-shard `server.shard<i>.*` obs rows make that
+//! visible). Elsewhere — or if the reuseport binds fail — shard 0
+//! accepts and round-robins sockets to its peers through their wake
+//! pipes. `max_connections` stays a global cap; `max_conns_per_ip` is
+//! enforced per shard (worst case a peer holds `loop_shards *` the
+//! cap).
+//!
+//! Every layer of the loop feeds the process-wide [`crate::obs`]
+//! registry (per-op queue-wait/execute latency, poll round duration,
+//! live/parked connection gauges, read-budget, backpressure and
+//! accept-backoff counters, per-shard breakdowns), served live by
+//! `Op::Metrics`.
+//!
+//! A background sweeper still requeues expired unACKed deliveries every
+//! 100 ms; its requeues fire the queue wakers, so parked consumers keep
+//! their at-most-100 ms-late redelivery semantics.
+//!
+//! `Shutdown` (op or [`ServerHandle::shutdown`]) closes the listeners
+//! immediately, gives parked ops a final attempt, bound-waits for
+//! in-flight work and response flushes, then joins the shards, the
+//! workers, and the sweeper — no detached threads survive a shutdown.
+//!
+//! Non-unix targets keep the previous thread-per-connection loop as a
+//! degraded fallback: same wire semantics, none of the scaling.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::data::{DataApi, Store};
+use crate::obs;
+use crate::queue::job::{JobQueueApi, JobQuota, QuotaExceeded};
+use crate::queue::wire::{
+    put_bytes, put_str, put_u32, read_frame, write_frame, BodyReader, Op, MAX_FRAME, ST_NONE,
+    ST_OK, ST_QUOTA,
+};
+use crate::queue::{QueueApi, QueueService};
+
+#[cfg(not(unix))]
+use crate::queue::wire::ST_ERR;
+
+pub mod poller;
+
+#[cfg(unix)]
+mod poll_backend;
+
+#[cfg(target_os = "linux")]
+mod epoll_backend;
+
+#[cfg(unix)]
+mod shard;
+
+pub use poller::PollerKind;
+
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+#[cfg(unix)]
+use std::sync::atomic::AtomicUsize;
+#[cfg(unix)]
+use std::sync::{mpsc, Mutex};
+
+#[cfg(unix)]
+use self::poller::make_poller;
+#[cfg(unix)]
+use self::shard::{worker_loop, AcceptMode, LoopSignal, Shard, ShardSetup, Work};
+
+/// Tuning for [`serve_with`]; `Default` matches [`serve`].
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Worker threads executing decoded ops (0 = one per CPU, capped at
+    /// 8). Workers never block inside an op, so a handful covers thousands
+    /// of connections.
+    pub workers: usize,
+    /// Cap on concurrently accepted connections — global across shards.
+    /// At the cap the listeners are simply not watched: excess connects
+    /// wait in the OS backlog until a slot frees (no accept-then-close
+    /// churn).
+    pub max_connections: usize,
+    /// Shutdown bound-wait: how long the event loop waits for in-flight
+    /// ops to finish and response buffers to flush before closing.
+    pub drain_wait: Duration,
+    /// Reap connections with no frame activity for this long (`None` =
+    /// never). Parked consumers are exempt — a blocked Consume is
+    /// activity — so only half-open or abandoned sockets are collected.
+    pub idle_timeout: Option<Duration>,
+    /// Cap on live connections from any single peer IP (0 = unlimited).
+    /// Unlike `max_connections`, which parks excess connects in the OS
+    /// backlog, a per-IP violation REFUSES the connection outright
+    /// (accept + immediate close, counted by `server.conns_refused`) —
+    /// otherwise one misbehaving volunteer saturating the global cap
+    /// would starve every other peer's place in the backlog. Enforced
+    /// per shard when `loop_shards > 1`.
+    pub max_conns_per_ip: usize,
+    /// Event-loop shards (clamped to 1..=[`obs::MAX_SHARDS`]). Each
+    /// shard is one loop thread with its own connections and timers; on
+    /// Linux each gets an `SO_REUSEPORT` listener, elsewhere shard 0
+    /// accepts and distributes. 1 = the classic single-loop server.
+    pub loop_shards: usize,
+    /// Readiness backend; [`PollerKind::Auto`] picks `epoll` on Linux
+    /// and `poll` elsewhere.
+    pub poller: PollerKind,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            workers: 0,
+            max_connections: 16_384,
+            drain_wait: Duration::from_secs(5),
+            idle_timeout: None,
+            max_conns_per_ip: 0,
+            loop_shards: 1,
+            poller: PollerKind::Auto,
+        }
+    }
+}
+
+#[cfg(unix)]
+impl ServerOptions {
+    fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+    }
+}
+
+/// A running server; dropping does NOT stop it — call [`ServerHandle::shutdown`].
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    #[cfg(unix)]
+    signals: Vec<Arc<LoopSignal>>,
+    /// Shards first, workers, then sweeper — join order matters: the
+    /// exiting shards drop the work channel, which releases the workers.
+    threads: Vec<std::thread::JoinHandle<()>>,
+    /// The hosted queue backend (plain [`crate::queue::broker::Broker`] or
+    /// [`crate::queue::durability::DurableBroker`]).
+    pub broker: Arc<dyn QueueService>,
+    pub store: Arc<Store>,
+}
+
+/// Where a self-poke connects: a wildcard bind address (0.0.0.0 / ::) is
+/// not connectable on every platform (Windows refuses it), so rewrite an
+/// unspecified IP to the loopback of the same family.
+#[cfg(not(unix))]
+fn poke_addr(mut addr: std::net::SocketAddr) -> std::net::SocketAddr {
+    if addr.ip().is_unspecified() {
+        addr.set_ip(if addr.is_ipv4() {
+            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+        } else {
+            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+        });
+    }
+    addr
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        #[cfg(unix)]
+        for signal in &self.signals {
+            signal.notify();
+        }
+        #[cfg(not(unix))]
+        {
+            // Unpark the blocking accept loop with a throwaway connection.
+            let _ = TcpStream::connect(poke_addr(self.addr));
+        }
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// True once a Shutdown op (or [`ServerHandle::shutdown`]) stopped the
+    /// server — lets a CLI host block until remotely shut down.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+/// Serve `broker` + `store` on `addr` (use port 0 for an ephemeral port)
+/// with default [`ServerOptions`].
+pub fn serve(addr: &str, broker: Arc<dyn QueueService>, store: Arc<Store>) -> Result<ServerHandle> {
+    serve_with(addr, broker, store, ServerOptions::default())
+}
+
+/// Visibility sweeper: the lazy in-op sweep covers active brokers; this
+/// timer covers idle periods (all volunteers gone mid-batch). Its requeues
+/// fire queue wakers, so parked remote consumers re-check too.
+fn spawn_sweeper(
+    broker: Arc<dyn QueueService>,
+    stop: Arc<AtomicBool>,
+) -> Result<std::thread::JoinHandle<()>> {
+    Ok(std::thread::Builder::new().name("jsdoop-sweeper".into()).spawn(move || {
+        while !stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(100));
+            broker.sweep();
+        }
+    })?)
+}
+
+/// Bind one `SO_REUSEPORT` listener per shard on the same port (Linux,
+/// `loop_shards > 1`). All-or-nothing: any failure drops the lot and the
+/// caller falls back to distribute mode.
+#[cfg(target_os = "linux")]
+fn try_reuseport_group(
+    addr: &str,
+    nshards: usize,
+) -> Option<(Vec<TcpListener>, std::net::SocketAddr)> {
+    use std::net::ToSocketAddrs;
+    let sa = addr.to_socket_addrs().ok()?.next()?;
+    let first = shard::bind_reuseport(&sa).ok()?;
+    // Re-resolve through the first bind so an ephemeral port 0 lands all
+    // shards on the same concrete port.
+    let local = first.local_addr().ok()?;
+    let mut listeners = vec![first];
+    for _ in 1..nshards {
+        listeners.push(shard::bind_reuseport(&local).ok()?);
+    }
+    Some((listeners, local))
+}
+
+/// Decide how each shard comes by connections: per-shard `SO_REUSEPORT`
+/// listeners when the platform cooperates, otherwise a single listener
+/// on shard 0 distributing round-robin.
+#[cfg(unix)]
+fn plan_accept(
+    addr: &str,
+    nshards: usize,
+) -> Result<(Vec<(Option<TcpListener>, AcceptMode)>, std::net::SocketAddr)> {
+    #[cfg(target_os = "linux")]
+    if nshards > 1 {
+        if let Some((listeners, local)) = try_reuseport_group(addr, nshards) {
+            let plan = listeners.into_iter().map(|l| (Some(l), AcceptMode::Own)).collect();
+            return Ok((plan, local));
+        }
+    }
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let mode = if nshards > 1 { AcceptMode::Distribute } else { AcceptMode::Own };
+    let mut plan = vec![(Some(listener), mode)];
+    for _ in 1..nshards {
+        plan.push((None, AcceptMode::Handoff));
+    }
+    Ok((plan, local))
+}
+
+/// Serve with explicit tuning (`server_workers` / `max_connections` /
+/// `loop_shards` / `poller` from the config land here via `jsdoop serve`).
+#[cfg(unix)]
+pub fn serve_with(
+    addr: &str,
+    broker: Arc<dyn QueueService>,
+    store: Arc<Store>,
+    opts: ServerOptions,
+) -> Result<ServerHandle> {
+    let nshards = opts.loop_shards.clamp(1, obs::MAX_SHARDS);
+    let (plan, local) = plan_accept(addr, nshards)?;
+    obs::set_active_shards(nshards);
+    let stop = Arc::new(AtomicBool::new(false));
+    let conns_total = Arc::new(AtomicUsize::new(0));
+
+    // One self-pipe (socketpair) per shard, waking its poller wait from
+    // workers, wakers, and peer shards.
+    let mut signals = Vec::with_capacity(nshards);
+    let mut pipe_rxs = Vec::with_capacity(nshards);
+    for _ in 0..nshards {
+        let (pipe_rx, pipe_tx) = UnixStream::pair()?;
+        pipe_rx.set_nonblocking(true)?;
+        pipe_tx.set_nonblocking(true)?;
+        signals.push(Arc::new(LoopSignal::new(pipe_tx)));
+        pipe_rxs.push(pipe_rx);
+    }
+
+    let (work_tx, work_rx) = mpsc::channel::<Work>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
+    let workers = opts.effective_workers();
+    let mut threads = Vec::with_capacity(nshards + workers + 1);
+
+    for (i, (listener, accept_mode)) in plan.into_iter().enumerate() {
+        let poller = make_poller(opts.poller)
+            .map_err(|e| anyhow::anyhow!("poller backend unavailable: {e}"))?;
+        let sh = Shard::new(ShardSetup {
+            index: i,
+            nshards,
+            listener,
+            accept_mode,
+            stop: stop.clone(),
+            signal: signals[i].clone(),
+            peers: signals.clone(),
+            pipe_rx: pipe_rxs.remove(0),
+            poller,
+            work_tx: work_tx.clone(),
+            broker: broker.clone(),
+            store: store.clone(),
+            opts: opts.clone(),
+            conns_total: conns_total.clone(),
+        });
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("jsdoop-eventloop-{i}"))
+                .spawn(move || sh.run())?,
+        );
+    }
+    drop(work_tx); // the shards hold the only work senders now
+
+    for i in 0..workers {
+        let work_rx = work_rx.clone();
+        let broker = broker.clone();
+        let store = store.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("jsdoop-worker-{i}"))
+                .spawn(move || worker_loop(&work_rx, broker.as_ref(), &store))?,
+        );
+    }
+    threads.push(spawn_sweeper(broker.clone(), stop.clone())?);
+
+    Ok(ServerHandle { addr: local, stop, signals, threads, broker, store })
+}
+
+/// Degraded fallback for targets without `poll(2)`: the previous
+/// thread-per-connection loop. Same wire semantics; none of the scaling,
+/// and connection threads are detached (not joined by shutdown).
+#[cfg(not(unix))]
+pub fn serve_with(
+    addr: &str,
+    broker: Arc<dyn QueueService>,
+    store: Arc<Store>,
+    opts: ServerOptions,
+) -> Result<ServerHandle> {
+    let _ = &opts;
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let sweeper = spawn_sweeper(broker.clone(), stop.clone())?;
+    let accept = {
+        let broker = broker.clone();
+        let store = store.clone();
+        let stop = stop.clone();
+        std::thread::Builder::new().name("jsdoop-accept".into()).spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let broker = broker.clone();
+                let store = store.clone();
+                let stop = stop.clone();
+                let _ = std::thread::Builder::new().name("jsdoop-conn".into()).spawn(move || {
+                    let _ = blocking_conn(stream, local, broker.as_ref(), &store, &stop);
+                });
+            }
+        })?
+    };
+    Ok(ServerHandle { addr: local, stop, threads: vec![accept, sweeper], broker, store })
+}
+
+#[cfg(not(unix))]
+fn blocking_conn(
+    mut stream: TcpStream,
+    local: std::net::SocketAddr,
+    broker: &dyn QueueService,
+    store: &Store,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    loop {
+        let Ok((op_byte, body)) = read_frame(&mut stream) else {
+            return Ok(()); // client disconnected
+        };
+        let op = match Op::from_u8(op_byte) {
+            Ok(op) => op,
+            Err(e) => {
+                write_frame(&mut stream, ST_ERR, e.to_string().as_bytes())?;
+                continue;
+            }
+        };
+        if matches!(op, Op::Shutdown) {
+            stop.store(true, Ordering::SeqCst);
+            // The accept thread is parked in listener.incoming(); poke it
+            // with a throwaway self-connection so it re-checks the flag.
+            let _ = TcpStream::connect(poke_addr(local));
+            write_frame(&mut stream, ST_OK, &[])?;
+            return Ok(());
+        }
+        match execute_op(op, &body, broker, store) {
+            Ok((st, resp)) => write_frame(&mut stream, st, &resp)?,
+            Err(e) => write_frame(&mut stream, ST_ERR, e.to_string().as_bytes())?,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Op execution (shared by the worker pool, the non-unix fallback, and the
+// bench baseline)
+// ---------------------------------------------------------------------------
+
+/// How [`execute_op_with`] treats the timeout field of blocking ops.
+#[cfg_attr(not(unix), allow(dead_code))]
+enum TimeoutMode {
+    /// Honor it in place, sleeping inside the broker/store — for
+    /// thread-per-connection callers (non-unix fallback, bench baseline).
+    Block,
+    /// Replace it with zero: the event loop parks the connection instead
+    /// of blocking a worker; retries arrive via wakers.
+    Immediate,
+}
+
+/// Execute one request against `broker`/`store`, honoring blocking
+/// timeouts in place; returns `(status, response body)`. Public so the
+/// scaling bench can drive a thread-per-connection baseline over the very
+/// same op implementations. `Op::Shutdown` only acknowledges — stopping
+/// the server is the hosting loop's job.
+pub fn execute_op(
+    op: Op,
+    body: &[u8],
+    broker: &dyn QueueService,
+    store: &Store,
+) -> Result<(u8, Vec<u8>)> {
+    execute_op_with(op, body, broker, store, TimeoutMode::Block)
+}
+
+fn execute_op_with(
+    op: Op,
+    body: &[u8],
+    broker: &dyn QueueService,
+    store: &Store,
+    mode: TimeoutMode,
+) -> Result<(u8, Vec<u8>)> {
+    let mut r = BodyReader::new(body);
+    let op_timeout = |t: Duration| match mode {
+        TimeoutMode::Block => t,
+        TimeoutMode::Immediate => Duration::ZERO,
+    };
+    Ok(match op {
+        Op::Ping => (ST_OK, b"pong".to_vec()),
+        Op::Shutdown => (ST_OK, Vec::new()),
+        Op::Declare => {
+            broker.declare(r.str()?)?;
+            (ST_OK, Vec::new())
+        }
+        Op::Publish => {
+            let q = r.str()?;
+            broker.publish(q, r.rest())?;
+            (ST_OK, Vec::new())
+        }
+        Op::PublishPri => {
+            let q = r.str()?;
+            let pri = r.u64()?;
+            broker.publish_pri(q, r.rest(), pri)?;
+            (ST_OK, Vec::new())
+        }
+        Op::Consume => {
+            let q = r.str()?;
+            let timeout = op_timeout(Duration::from_millis(r.u64()?));
+            match broker.consume(q, timeout)? {
+                Some(d) => {
+                    let mut out = Vec::with_capacity(9 + d.payload.len());
+                    out.extend_from_slice(&d.tag.to_le_bytes());
+                    out.push(d.redelivered as u8);
+                    out.extend_from_slice(&d.payload);
+                    (ST_OK, out)
+                }
+                None => (ST_NONE, Vec::new()),
+            }
+        }
+        Op::Ack => {
+            let q = r.str()?;
+            broker.ack(q, r.u64()?)?;
+            (ST_OK, Vec::new())
+        }
+        Op::Nack => {
+            let q = r.str()?;
+            broker.nack(q, r.u64()?)?;
+            (ST_OK, Vec::new())
+        }
+        Op::Len => {
+            let n = broker.len(r.str()?)? as u64;
+            (ST_OK, n.to_le_bytes().to_vec())
+        }
+        Op::Purge => {
+            broker.purge(r.str()?)?;
+            (ST_OK, Vec::new())
+        }
+        Op::Stats => {
+            let s = broker.stats(r.str()?)?;
+            let mut out = Vec::with_capacity(56);
+            for v in [
+                s.published,
+                s.delivered,
+                s.acked,
+                s.nacked,
+                s.redelivered,
+                s.ready as u64,
+                s.unacked as u64,
+            ] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            (ST_OK, out)
+        }
+        Op::PublishMany => {
+            let q = r.str()?;
+            let n = r.u32()? as usize;
+            // Each message costs at least its 4-byte length prefix, so a
+            // count claiming more is corrupt — reject before allocating.
+            // Division form: `n * 4` wraps usize on 32-bit targets.
+            if n > body.len() / 4 {
+                anyhow::bail!("batch count {n} exceeds body size");
+            }
+            let mut payloads = Vec::with_capacity(n);
+            for _ in 0..n {
+                payloads.push(r.bytes()?);
+            }
+            broker.publish_many(q, &payloads)?;
+            (ST_OK, Vec::new())
+        }
+        Op::ConsumeMany => {
+            let q = r.str()?;
+            let max = r.u64()? as usize;
+            let timeout = op_timeout(Duration::from_millis(r.u64()?));
+            let mut batch = broker.consume_many(q, max, timeout)?;
+            // A batch of large payloads can overflow MAX_FRAME. Erroring
+            // after the pop would strand the deliveries in unacked until
+            // the visibility timeout — instead send the prefix that fits
+            // and NACK the rest straight back to their original slots
+            // (lossless: they lead the very next consume).
+            let mut body_len = 5; // status byte + count u32
+            let mut fits = 0;
+            while fits < batch.len() {
+                let need = 13 + batch[fits].payload.len();
+                if body_len + need > MAX_FRAME {
+                    break;
+                }
+                body_len += need;
+                fits += 1;
+            }
+            if fits == 0 && !batch.is_empty() {
+                fits = 1; // single oversized message: fail like Op::Consume
+            }
+            if fits < batch.len() {
+                let tags: Vec<u64> = batch[fits..].iter().map(|d| d.tag).collect();
+                broker.nack_many(q, &tags)?;
+                batch.truncate(fits);
+            }
+            if batch.is_empty() {
+                (ST_NONE, Vec::new())
+            } else {
+                let size = 4 + batch.iter().map(|d| 13 + d.payload.len()).sum::<usize>();
+                let mut out = Vec::with_capacity(size);
+                put_u32(&mut out, batch.len() as u32);
+                for d in &batch {
+                    out.extend_from_slice(&d.tag.to_le_bytes());
+                    out.push(d.redelivered as u8);
+                    put_bytes(&mut out, &d.payload);
+                }
+                (ST_OK, out)
+            }
+        }
+        Op::AckMany => {
+            let q = r.str()?;
+            let tags = read_tags(&mut r, body.len())?;
+            broker.ack_many(q, &tags)?;
+            (ST_OK, Vec::new())
+        }
+        Op::NackMany => {
+            let q = r.str()?;
+            let tags = read_tags(&mut r, body.len())?;
+            broker.nack_many(q, &tags)?;
+            (ST_OK, Vec::new())
+        }
+        Op::Put => {
+            let k = r.str()?;
+            store.put(k, r.rest())?;
+            (ST_OK, Vec::new())
+        }
+        Op::Get => match store.get(r.str()?)? {
+            Some(v) => (ST_OK, v),
+            None => (ST_NONE, Vec::new()),
+        },
+        Op::Del => {
+            let existed = store.del(r.str()?)?;
+            (ST_OK, vec![existed as u8])
+        }
+        Op::PutVersioned => {
+            let k = r.str()?;
+            let ver = r.u64()?;
+            store.put_versioned(k, ver, r.rest())?;
+            (ST_OK, Vec::new())
+        }
+        Op::GetVersioned => match store.get_versioned(r.str()?)? {
+            Some(v) => {
+                let mut out = Vec::with_capacity(8 + v.bytes.len());
+                out.extend_from_slice(&v.version.to_le_bytes());
+                out.extend_from_slice(&v.bytes);
+                (ST_OK, out)
+            }
+            None => (ST_NONE, Vec::new()),
+        },
+        Op::WaitVersion => {
+            let k = r.str()?;
+            let min = r.u64()?;
+            let timeout = op_timeout(Duration::from_millis(r.u64()?));
+            match store.wait_version(k, min, timeout)? {
+                Some(v) => {
+                    let mut out = Vec::with_capacity(8 + v.bytes.len());
+                    out.extend_from_slice(&v.version.to_le_bytes());
+                    out.extend_from_slice(&v.bytes);
+                    (ST_OK, out)
+                }
+                None => (ST_NONE, Vec::new()),
+            }
+        }
+        Op::Incr => {
+            let v = store.incr(r.str()?)?;
+            (ST_OK, v.to_le_bytes().to_vec())
+        }
+        Op::Metrics => {
+            // Sampled gauges: values owned by other subsystems are read
+            // at snapshot time instead of being maintained on their hot
+            // paths (the snapshot is the rare path).
+            obs::gauge_set(obs::Gauge::StoreWaiters, store.waiter_count() as i64);
+            let snap = obs::snapshot(broker.metrics_queues());
+            (ST_OK, obs::encode(&snap))
+        }
+        // --- replication (queue/durability/replication) --------------------
+        // All three answer from the WAL-backed broker behind this service;
+        // a plain in-memory broker (or a replica) has no log to ship.
+        Op::ReplHandshake => {
+            let db = repl_source(broker)?;
+            let status = db.repl_status()?;
+            (ST_OK, status_body(&status, 0))
+        }
+        Op::ReplSnapshot => {
+            let db = repl_source(broker)?;
+            let (gen, bytes) = db.repl_snapshot()?;
+            if 9 + bytes.len() > MAX_FRAME {
+                // v0 limitation: a baseline must fit one frame. Chunked
+                // snapshot shipping rides the same ops later if needed.
+                anyhow::bail!(
+                    "snapshot of {} bytes exceeds the replication frame cap",
+                    bytes.len()
+                );
+            }
+            let mut out = Vec::with_capacity(8 + bytes.len());
+            out.extend_from_slice(&gen.to_le_bytes());
+            out.extend_from_slice(&bytes);
+            (ST_OK, out)
+        }
+        Op::ReplPull => {
+            let db = repl_source(broker)?;
+            let gen = r.u64()?;
+            let from = r.u64()?;
+            let max = r.u32()? as usize;
+            let (status, chunk) = db.repl_read(gen, from, max)?;
+            let mut out = status_body(&status, chunk.len());
+            out.extend_from_slice(&chunk);
+            (ST_OK, out)
+        }
+        // --- job (tenant) namespace ops (queue/job.rs) ----------------------
+        Op::DeclareJob => {
+            let jobid = r.str()?;
+            broker.declare_job(jobid, r.str()?)?;
+            (ST_OK, Vec::new())
+        }
+        Op::PublishJob => {
+            let jobid = r.str()?;
+            let q = r.str()?;
+            let pri = r.u64()?;
+            match broker.publish_job(jobid, q, r.rest(), pri) {
+                Ok(()) => (ST_OK, Vec::new()),
+                Err(e) => quota_status(e)?,
+            }
+        }
+        Op::PublishManyJob => {
+            let jobid = r.str()?;
+            let q = r.str()?;
+            let n = r.u32()? as usize;
+            // Same hostile-count audit as Op::PublishMany (division form:
+            // `n * 4` wraps usize on 32-bit targets).
+            if n > body.len() / 4 {
+                anyhow::bail!("batch count {n} exceeds body size");
+            }
+            let mut payloads = Vec::with_capacity(n);
+            for _ in 0..n {
+                payloads.push(r.bytes()?);
+            }
+            match broker.publish_many_job(jobid, q, &payloads) {
+                Ok(()) => (ST_OK, Vec::new()),
+                Err(e) => quota_status(e)?,
+            }
+        }
+        Op::ConsumeFair => {
+            let base = r.str()?;
+            // Never parks: the deficit-round-robin pull has no single
+            // queue to register a waiter on, so the event loop answers
+            // from what is ready right now and remote agents poll.
+            let timeout = op_timeout(Duration::from_millis(r.u64()?));
+            match broker.consume_fair(base, timeout)? {
+                Some((jobid, d)) => {
+                    let mut out = Vec::with_capacity(11 + jobid.len() + d.payload.len());
+                    put_str(&mut out, &jobid);
+                    out.extend_from_slice(&d.tag.to_le_bytes());
+                    out.push(d.redelivered as u8);
+                    out.extend_from_slice(&d.payload);
+                    (ST_OK, out)
+                }
+                None => (ST_NONE, Vec::new()),
+            }
+        }
+        Op::ListJobs => {
+            let rows = broker.list_jobs()?;
+            let mut out = Vec::new();
+            put_u32(&mut out, rows.len() as u32);
+            for j in &rows {
+                put_str(&mut out, &j.job);
+                for v in [
+                    j.queues,
+                    j.ready_msgs,
+                    j.ready_bytes,
+                    j.quota.max_ready_msgs,
+                    j.quota.max_ready_bytes,
+                ] {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            (ST_OK, out)
+        }
+        Op::SetJobQuota => {
+            let jobid = r.str()?;
+            let quota = JobQuota { max_ready_msgs: r.u64()?, max_ready_bytes: r.u64()? };
+            broker.set_job_quota(jobid, quota)?;
+            (ST_OK, Vec::new())
+        }
+        Op::RemoveJob => {
+            let removed = broker.remove_job(r.str()?)?;
+            (ST_OK, removed.to_le_bytes().to_vec())
+        }
+    })
+}
+
+/// Map an over-quota publish to the in-band [`ST_QUOTA`] status; every
+/// other error propagates (and poisons nothing — the dispatch loop
+/// answers `ST_ERR` with the message, same as always). The body carries
+/// only the detail: the requester named the job in its own request, and
+/// shipping the bare detail lets `RemoteQueue` reconstruct the typed
+/// [`QuotaExceeded`] exactly as the broker raised it.
+fn quota_status(e: anyhow::Error) -> Result<(u8, Vec<u8>)> {
+    match e.downcast_ref::<QuotaExceeded>() {
+        Some(q) => Ok((ST_QUOTA, q.detail.clone().into_bytes())),
+        None => Err(e),
+    }
+}
+
+fn repl_source(broker: &dyn QueueService) -> Result<&crate::queue::durability::DurableBroker> {
+    broker.replication().ok_or_else(|| {
+        anyhow::anyhow!("replication unavailable: this server is not backed by a durable (WAL) broker")
+    })
+}
+
+/// `[gen u64][durable_bytes u64][appended_bytes u64]` — the watermark
+/// prefix of ReplHandshake/ReplPull responses.
+fn status_body(status: &crate::queue::durability::ReplStatus, chunk_len: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24 + chunk_len);
+    out.extend_from_slice(&status.gen.to_le_bytes());
+    out.extend_from_slice(&status.durable_bytes.to_le_bytes());
+    out.extend_from_slice(&status.appended_bytes.to_le_bytes());
+    out
+}
+
+/// Parse a `[count u32][tag u64]*` tail (AckMany/NackMany bodies), with a
+/// sanity bound so a corrupt count cannot trigger a huge allocation.
+fn read_tags(r: &mut BodyReader<'_>, body_len: usize) -> Result<Vec<u64>> {
+    let n = r.u32()? as usize;
+    // Division form: `n * 8` wraps usize on 32-bit targets.
+    if n > body_len / 8 {
+        anyhow::bail!("tag count {n} exceeds body size");
+    }
+    let mut tags = Vec::with_capacity(n);
+    for _ in 0..n {
+        tags.push(r.u64()?);
+    }
+    Ok(tags)
+}
+
+/// Client-side helper shared with `client.rs`: send one request, read the
+/// response frame.
+pub(crate) fn roundtrip(
+    stream: &mut TcpStream,
+    op: Op,
+    body: &[u8],
+) -> Result<(u8, Vec<u8>)> {
+    write_frame(stream, op as u8, body)?;
+    read_frame(stream)
+}
+
+/// Build a body that starts with a name string.
+pub(crate) fn body_with_name(name: &str, extra: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 + name.len() + extra.len());
+    put_str(&mut out, name);
+    out.extend_from_slice(extra);
+    out
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use crate::queue::broker::Broker;
+
+    #[test]
+    fn execute_op_matches_wire_shapes() {
+        let broker = Broker::new(Duration::from_secs(5));
+        let store = Store::new();
+        let (st, body) = execute_op(Op::Ping, &[], &broker, &store).unwrap();
+        assert_eq!((st, body.as_slice()), (ST_OK, b"pong".as_slice()));
+        let (st, _) =
+            execute_op(Op::Declare, &body_with_name("q", &[]), &broker, &store).unwrap();
+        assert_eq!(st, ST_OK);
+        // Immediate mode turns a long blocking consume into a fast try.
+        let mut c = body_with_name("q", &[]);
+        c.extend_from_slice(&10_000u64.to_le_bytes());
+        let t0 = std::time::Instant::now();
+        let (st, _) =
+            execute_op_with(Op::Consume, &c, &broker, &store, TimeoutMode::Immediate).unwrap();
+        assert_eq!(st, ST_NONE);
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+}

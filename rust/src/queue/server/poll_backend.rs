@@ -1,0 +1,169 @@
+//! `poll(2)` readiness backend: the portable fallback (default off
+//! Linux). The kernel has no persistent interest set for `poll`, so this
+//! backend keeps the fd table in userspace and rebuilds the `pollfd`
+//! array on every wait — O(open connections) per round, which is exactly
+//! the cost curve the epoll backend exists to avoid. Below ~10k
+//! connections the difference is noise; the backend stays because it
+//! runs on every unix and keeps the parity test matrix honest.
+
+use std::collections::HashMap;
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+use super::poller::{Event, Interest, Poller};
+
+/// Minimal `poll(2)` FFI. The dependency budget (anyhow + once_cell only)
+/// rules out `libc`/`mio`, so the one syscall this backend needs is
+/// declared by hand. Constants match every mainstream unix.
+mod sys {
+    use std::io;
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    #[repr(C)]
+    #[derive(Clone, Copy, Debug)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    // nfds_t is unsigned long on linux, unsigned int on the BSDs/macOS.
+    #[cfg(target_os = "linux")]
+    type Nfds = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type Nfds = std::os::raw::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: Nfds, timeout: c_int) -> c_int;
+    }
+
+    /// Wait for readiness on `fds` (or `timeout`). EINTR reports as zero
+    /// events: the caller's loop re-runs housekeeping and polls again.
+    pub fn wait(fds: &mut [PollFd], timeout: Duration) -> io::Result<usize> {
+        let ms = timeout.as_millis().min(i32::MAX as u128) as c_int;
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, ms) };
+        if rc < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(err);
+        }
+        Ok(rc as usize)
+    }
+}
+
+pub(crate) struct PollPoller {
+    /// fd → (token, interest). Empty-interest entries stay in the map
+    /// but are skipped when the `pollfd` array is built, so they report
+    /// nothing — matching the trait contract (and epoll's CTL_DEL).
+    registered: HashMap<RawFd, (usize, Interest)>,
+    /// Scratch reused across waits (`tokens` runs parallel to `fds`).
+    fds: Vec<sys::PollFd>,
+    tokens: Vec<usize>,
+}
+
+impl PollPoller {
+    pub(crate) fn new() -> Self {
+        PollPoller { registered: HashMap::new(), fds: Vec::new(), tokens: Vec::new() }
+    }
+}
+
+impl Poller for PollPoller {
+    fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        self.registered.insert(fd, (token, interest));
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        self.registered.insert(fd, (token, interest));
+        Ok(())
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        self.registered.remove(&fd);
+        Ok(())
+    }
+
+    fn wait(&mut self, timeout: Duration, out: &mut Vec<Event>) -> io::Result<usize> {
+        self.fds.clear();
+        self.tokens.clear();
+        for (&fd, &(token, interest)) in &self.registered {
+            if interest.is_empty() {
+                continue;
+            }
+            let mut events = 0i16;
+            if interest.readable {
+                events |= sys::POLLIN;
+            }
+            if interest.writable {
+                events |= sys::POLLOUT;
+            }
+            self.fds.push(sys::PollFd { fd, events, revents: 0 });
+            self.tokens.push(token);
+        }
+        let n = sys::wait(&mut self.fds, timeout)?;
+        if n == 0 {
+            return Ok(0);
+        }
+        let mut appended = 0;
+        for (pfd, &token) in self.fds.iter().zip(&self.tokens) {
+            let re = pfd.revents;
+            if re == 0 {
+                continue;
+            }
+            out.push(Event {
+                token,
+                readable: re & sys::POLLIN != 0,
+                writable: re & sys::POLLOUT != 0,
+                error: re & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0,
+            });
+            appended += 1;
+        }
+        Ok(appended)
+    }
+
+    fn name(&self) -> &'static str {
+        "poll"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn reports_readability_and_respects_empty_interest() {
+        let (rx, mut tx) = UnixStream::pair().unwrap();
+        let mut p = PollPoller::new();
+        p.register(rx.as_raw_fd(), 7, Interest::READABLE).unwrap();
+        tx.write_all(&[1]).unwrap();
+        let mut out = Vec::new();
+        let n = p.wait(Duration::from_millis(500), &mut out).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(out[0].token, 7);
+        assert!(out[0].readable);
+
+        // Empty interest: the byte is still unread, but nothing reports.
+        p.modify(rx.as_raw_fd(), 7, Interest::NONE).unwrap();
+        out.clear();
+        let n = p.wait(Duration::from_millis(10), &mut out).unwrap();
+        assert_eq!(n, 0);
+
+        p.deregister(rx.as_raw_fd()).unwrap();
+        out.clear();
+        assert_eq!(p.wait(Duration::from_millis(10), &mut out).unwrap(), 0);
+    }
+}

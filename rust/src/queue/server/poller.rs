@@ -1,0 +1,170 @@
+//! Pluggable readiness backends for the event loop.
+//!
+//! The loop's contract with a backend is a token→interest map:
+//!
+//! * [`Poller::register`] / [`Poller::modify`] — declare what a file
+//!   descriptor should be watched for ([`Interest`]), tagged with a
+//!   caller-chosen `token` that comes back verbatim in events. An EMPTY
+//!   interest means "registered but not watched at all": no event —
+//!   not even an error event — may be reported for it. (This is how the
+//!   loop expresses "a frame from this connection is mid-execute in the
+//!   worker pool"; the epoll backend maps it to `EPOLL_CTL_DEL` because
+//!   epoll cannot mask ERR/HUP.)
+//! * [`Poller::deregister`] — forget the fd. MUST be called before the
+//!   fd is closed: the `poll(2)` backend keeps its own fd table and
+//!   would otherwise poll a dead descriptor forever (`POLLNVAL` spin).
+//! * [`Poller::wait`] — block until readiness or timeout, appending
+//!   [`Event`]s. Signal interruption (EINTR) reports as zero events so
+//!   the caller re-runs housekeeping and waits again.
+//!
+//! Both implementations are level-triggered: an event the loop does not
+//! consume is simply reported again next round, so a partial read or a
+//! skipped accept can never strand a connection. Edge-triggered modes
+//! were deliberately rejected — they demand drain-until-EAGAIN on every
+//! event, which conflicts with the loop's per-round read budget
+//! (fairness) and buys nothing at this op rate.
+
+#[cfg(unix)]
+use std::io;
+#[cfg(unix)]
+use std::os::unix::io::RawFd;
+#[cfg(unix)]
+use std::time::Duration;
+
+/// Which readiness backend the event loop uses.
+///
+/// `Auto` resolves to `epoll` on Linux (falling back to `poll` if the
+/// epoll instance cannot be created) and to `poll` everywhere else.
+/// `poll(2)` rebuilds an O(open) fd set every round and the kernel scans
+/// all of it; `epoll` pays one syscall per interest *change* and its
+/// wait cost is O(ready) — the difference is what pushes the server past
+/// ~50k mostly-idle volunteers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PollerKind {
+    Auto,
+    Poll,
+    Epoll,
+}
+
+impl std::str::FromStr for PollerKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "auto" => Ok(PollerKind::Auto),
+            "poll" => Ok(PollerKind::Poll),
+            "epoll" => Ok(PollerKind::Epoll),
+            other => anyhow::bail!("unknown poller '{other}' (expected auto, poll, or epoll)"),
+        }
+    }
+}
+
+impl std::fmt::Display for PollerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PollerKind::Auto => "auto",
+            PollerKind::Poll => "poll",
+            PollerKind::Epoll => "epoll",
+        })
+    }
+}
+
+/// What an fd is watched for. Empty interest = enrolled but silent.
+#[cfg(unix)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+#[cfg(unix)]
+impl Interest {
+    pub(crate) const NONE: Interest = Interest { readable: false, writable: false };
+    pub(crate) const READABLE: Interest = Interest { readable: true, writable: false };
+    pub(crate) const WRITABLE: Interest = Interest { readable: false, writable: true };
+
+    pub(crate) fn is_empty(self) -> bool {
+        !self.readable && !self.writable
+    }
+}
+
+/// One readiness report. `error` collapses the backend's ERR/HUP/NVAL
+/// bits: the loop resolves what actually happened through `read()`/
+/// `write()`, which report the concrete error.
+#[cfg(unix)]
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+    pub error: bool,
+}
+
+/// Token of the shard's self-pipe read end.
+#[cfg(unix)]
+pub(crate) const TOKEN_PIPE: usize = usize::MAX;
+/// Token of the shard's listener (absent while backed off / at the cap).
+#[cfg(unix)]
+pub(crate) const TOKEN_LISTENER: usize = usize::MAX - 1;
+
+/// A readiness backend. Object-safe so a shard can hold `Box<dyn Poller>`
+/// chosen at serve time from config.
+#[cfg(unix)]
+pub(crate) trait Poller: Send {
+    fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()>;
+    fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()>;
+    /// Forget `fd`. Must precede closing the descriptor.
+    fn deregister(&mut self, fd: RawFd) -> io::Result<()>;
+    /// Wait for readiness or `timeout`, appending to `out` (not cleared
+    /// here). Returns the number of events appended; EINTR is `Ok(0)`.
+    fn wait(&mut self, timeout: Duration, out: &mut Vec<Event>) -> io::Result<usize>;
+    fn name(&self) -> &'static str;
+}
+
+/// Build the backend `kind` asks for. `Auto` never fails (it falls back
+/// to `poll`); an explicit `Epoll` reports why it cannot be had.
+#[cfg(unix)]
+pub(crate) fn make_poller(kind: PollerKind) -> io::Result<Box<dyn Poller>> {
+    match kind {
+        PollerKind::Poll => Ok(Box::new(super::poll_backend::PollPoller::new())),
+        #[cfg(target_os = "linux")]
+        PollerKind::Epoll => Ok(Box::new(super::epoll_backend::EpollPoller::new()?)),
+        #[cfg(not(target_os = "linux"))]
+        PollerKind::Epoll => Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "the epoll backend is linux-only; use poller=auto or poller=poll",
+        )),
+        #[cfg(target_os = "linux")]
+        PollerKind::Auto => Ok(match super::epoll_backend::EpollPoller::new() {
+            Ok(p) => Box::new(p),
+            Err(_) => Box::new(super::poll_backend::PollPoller::new()),
+        }),
+        #[cfg(not(target_os = "linux"))]
+        PollerKind::Auto => Ok(Box::new(super::poll_backend::PollPoller::new())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::PollerKind;
+
+    #[test]
+    fn poller_kind_parses_and_rejects() {
+        assert_eq!("auto".parse::<PollerKind>().unwrap(), PollerKind::Auto);
+        assert_eq!("poll".parse::<PollerKind>().unwrap(), PollerKind::Poll);
+        assert_eq!("epoll".parse::<PollerKind>().unwrap(), PollerKind::Epoll);
+        assert!("kqueue".parse::<PollerKind>().is_err());
+        assert_eq!(PollerKind::Epoll.to_string(), "epoll");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn auto_always_yields_a_backend() {
+        let p = super::make_poller(PollerKind::Auto).unwrap();
+        if cfg!(target_os = "linux") {
+            assert_eq!(p.name(), "epoll");
+        } else {
+            assert_eq!(p.name(), "poll");
+        }
+    }
+}

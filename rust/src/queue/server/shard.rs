@@ -1,0 +1,1371 @@
+//! One event-loop shard: owns a slice of the connections, their timer
+//! heaps, and their waker registrations, multiplexing readiness through
+//! a pluggable [`Poller`] backend. `--loop_shards=N` runs N of these on
+//! their own threads; a single global worker pool executes decoded ops
+//! for all of them, and each `Work` item carries the owning shard's
+//! completion channel + wake signal so verdicts route home.
+//!
+//! Accept strategies ([`AcceptMode`]):
+//! * `Own` — this shard accepts from its own listener and keeps every
+//!   connection (the single-shard case, and the per-shard `SO_REUSEPORT`
+//!   listeners on Linux where the kernel balances accepts).
+//! * `Distribute` — this shard accepts from the single listener and
+//!   round-robins accepted sockets across all shards via their
+//!   [`LoopSignal`] handoff queues (the portable multi-shard fallback).
+//! * `Handoff` — this shard never accepts; connections arrive only
+//!   through its handoff queue.
+//!
+//! The loop structure (frame assembly, park/wake, backpressure,
+//! drain-on-shutdown, idle reaping) is the PR 6/7 event loop verbatim;
+//! only the readiness layer changed. Two bookkeeping deltas:
+//! connection ids stride by the shard count so waiter registrations
+//! (keyed by id) never collide across shards, and the lazily-invalidated
+//! timer heaps now compact themselves once stale entries outnumber live
+//! ones (see [`TimerHeap`]).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::io::{self, Read, Write};
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::data::Store;
+use crate::obs;
+use crate::queue::wire::{BodyReader, FrameAssembler, Op, MAX_FRAME, ST_ERR, ST_NONE, ST_OK};
+use crate::queue::{QueueService, ReadyWaker};
+
+use super::poller::{Event, Interest, Poller, TOKEN_LISTENER, TOKEN_PIPE};
+use super::{execute_op_with, ServerOptions, TimeoutMode};
+
+/// Per-connection read budget per poll round, so one firehose connection
+/// cannot starve the rest of the loop.
+const READ_BUDGET: usize = 1 << 20;
+
+/// Listener backoff after accept errors (EMFILE and friends): without it
+/// a level-triggered listener spins the loop hot.
+const ACCEPT_BACKOFF: Duration = Duration::from_millis(100);
+
+/// Upper bound on a poll sleep, so a stop request is noticed even if the
+/// wake-pipe byte were ever lost.
+const IDLE_POLL: Duration = Duration::from_millis(500);
+
+/// Cap on a blocking op's park. Protocol timeouts are client-controlled
+/// u64 millis; uncapped they overflow `Instant` arithmetic.
+const MAX_BLOCK: Duration = Duration::from_secs(24 * 60 * 60);
+
+/// Shared wake channel into a shard: connection ids whose readiness
+/// changed, sockets handed off by the accepting shard, plus a self-pipe
+/// byte that interrupts the poller wait.
+pub(super) struct LoopSignal {
+    woken: Mutex<Vec<u64>>,
+    handoff: Mutex<Vec<TcpStream>>,
+    pipe_tx: UnixStream,
+}
+
+impl LoopSignal {
+    pub(super) fn new(pipe_tx: UnixStream) -> Self {
+        LoopSignal { woken: Mutex::new(Vec::new()), handoff: Mutex::new(Vec::new()), pipe_tx }
+    }
+
+    /// Interrupt the poll sleep. A full pipe already guarantees a pending
+    /// wakeup, so the write result is deliberately ignored.
+    pub(super) fn notify(&self) {
+        let _ = (&self.pipe_tx).write(&[1]);
+    }
+
+    fn wake_conn(&self, id: u64) {
+        self.woken.lock().unwrap().push(id);
+        self.notify();
+    }
+
+    fn drain_woken(&self) -> Vec<u64> {
+        std::mem::take(&mut *self.woken.lock().unwrap())
+    }
+
+    fn hand_off(&self, stream: TcpStream) {
+        self.handoff.lock().unwrap().push(stream);
+        self.notify();
+    }
+
+    fn drain_handoff(&self) -> Vec<TcpStream> {
+        std::mem::take(&mut *self.handoff.lock().unwrap())
+    }
+}
+
+/// The token a parked connection leaves with the broker/store: waking it
+/// re-dispatches the parked op on the owning shard's loop.
+struct ConnWaker {
+    conn: u64,
+    signal: Arc<LoopSignal>,
+}
+
+impl ReadyWaker for ConnWaker {
+    fn wake(&self) {
+        self.signal.wake_conn(self.conn);
+    }
+}
+
+pub(super) struct Work {
+    conn: u64,
+    op: Op,
+    body: Vec<u8>,
+    /// Deadline of a blocking op. `None` on the first attempt (the worker
+    /// derives it from the body's timeout field); carried through
+    /// park/retry cycles so a retry never extends the client's timeout.
+    deadline: Option<Instant>,
+    waker: Arc<ConnWaker>,
+    /// When this item entered the work channel — the worker's pickup
+    /// delta is the `server.op_queue_wait_ns` histogram (pool saturation).
+    enqueued: Instant,
+    /// Completion channel of the shard that owns `conn` (the worker pool
+    /// is global; verdicts must route back to the owning loop).
+    done: mpsc::Sender<Done>,
+}
+
+enum Verdict {
+    /// A complete response frame, ready to write.
+    Respond(Vec<u8>),
+    /// The op would block: park the connection until waker or deadline.
+    Park { op: Op, body: Vec<u8>, deadline: Instant, site: WaitSite },
+}
+
+struct Done {
+    conn: u64,
+    verdict: Verdict,
+}
+
+/// What a parked op waits on (and where to cancel its registration).
+#[derive(Debug, Clone)]
+enum WaitSite {
+    Queue(String),
+    Version,
+}
+
+enum Phase {
+    /// Assembling the next request frame.
+    Reading,
+    /// A frame is in the worker pool; the socket is not read meanwhile.
+    Executing,
+    /// A blocking op came up empty; waiting for a waker or the deadline.
+    Parked(ParkedOp),
+}
+
+struct ParkedOp {
+    op: Op,
+    body: Vec<u8>,
+    deadline: Instant,
+    site: WaitSite,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Peer IP at accept time — the key released from the per-IP
+    /// accounting when this connection closes.
+    peer_ip: Option<IpAddr>,
+    asm: FrameAssembler,
+    phase: Phase,
+    out: Vec<u8>,
+    out_pos: usize,
+    /// A waker fired while the op was still executing: re-dispatch instead
+    /// of parking when the Park verdict lands.
+    wake_pending: bool,
+    close_after_write: bool,
+    waker: Arc<ConnWaker>,
+    /// Last observed frame activity (readiness, dispatch, or response
+    /// flush) — the idle-reaper's clock.
+    last_activity: Instant,
+    /// What the poller currently watches this socket for; reconciled
+    /// against [`desired_interest`] before every wait.
+    interest: Interest,
+}
+
+impl Conn {
+    fn has_output(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+
+    fn queue_response(&mut self, frame: Vec<u8>) {
+        self.out = frame;
+        self.out_pos = 0;
+    }
+
+    /// Push buffered output until the socket blocks. `false` = fatal.
+    fn flush_output(&mut self) -> bool {
+        while self.has_output() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => return false,
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    // Slow reader: the response waits for writability.
+                    obs::inc(obs::Counter::ServerBackpressureStalls);
+                    return true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        self.out.clear();
+        self.out_pos = 0;
+        true
+    }
+}
+
+/// What the poller should watch a connection for, derived from its
+/// state. Parked consumers stay readable so a dead peer is caught (and
+/// its waiter registration cancelled) immediately; executing connections
+/// are watched for NOTHING — the protocol is synchronous, and the empty
+/// interest keeps even error events quiet until the verdict lands.
+fn desired_interest(c: &Conn, draining: bool) -> Interest {
+    if c.has_output() {
+        Interest::WRITABLE
+    } else if matches!(c.phase, Phase::Reading) && !draining {
+        Interest::READABLE
+    } else if matches!(c.phase, Phase::Parked(_)) {
+        Interest::READABLE
+    } else {
+        Interest::NONE
+    }
+}
+
+enum Next {
+    Keep,
+    Close,
+    Dispatch(Op, Vec<u8>),
+    Shutdown,
+}
+
+/// A lazily-invalidated min-heap of `(due, conn id)` timers with bounded
+/// garbage. Owners call [`TimerHeap::note_stale`] when a live entry stops
+/// mapping to a real wait (a consumer woken before its deadline, a
+/// closed connection); once known-stale entries outnumber live ones the
+/// heap is rebuilt against a ground-truth predicate. Without this, a
+/// connection that repeatedly parks and wakes before its deadline grows
+/// the heap without bound (one dead entry per cycle) — the compaction
+/// caps it at ~2x the live count. `stale` is an estimate and may
+/// overshoot (e.g. a reaped connection whose entry was already popped);
+/// that only makes compaction run early, never wrong, because the
+/// rebuild keeps exactly what the predicate vouches for.
+pub(super) struct TimerHeap {
+    heap: BinaryHeap<Reverse<(Instant, u64)>>,
+    stale: usize,
+}
+
+impl TimerHeap {
+    fn new() -> Self {
+        TimerHeap { heap: BinaryHeap::new(), stale: 0 }
+    }
+
+    fn arm(&mut self, due: Instant, id: u64) {
+        self.heap.push(Reverse((due, id)));
+    }
+
+    fn peek(&self) -> Option<(Instant, u64)> {
+        self.heap.peek().map(|&Reverse(e)| e)
+    }
+
+    fn pop(&mut self) {
+        self.heap.pop();
+    }
+
+    /// An entry still in the heap went stale (resume-before-deadline,
+    /// connection closed).
+    fn note_stale(&mut self) {
+        self.stale = (self.stale + 1).min(self.heap.len());
+    }
+
+    /// A popped entry turned out stale: it left the heap, so it no
+    /// longer counts toward the compaction trigger.
+    fn note_popped_stale(&mut self) {
+        self.stale = self.stale.saturating_sub(1);
+    }
+
+    #[cfg_attr(not(test), allow(dead_code))]
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Rebuild once stale entries exceed half the heap (skipping tiny
+    /// heaps where the O(n) rebuild would churn for nothing). `live`
+    /// is the ground truth: keep exactly the entries it vouches for.
+    fn maybe_compact(&mut self, live: impl Fn(u64, Instant) -> bool) {
+        if self.heap.len() < 8 || self.stale <= self.heap.len() / 2 {
+            return;
+        }
+        let old = std::mem::take(&mut self.heap);
+        self.heap = old.into_iter().filter(|&Reverse((t, id))| live(id, t)).collect();
+        self.stale = 0;
+    }
+}
+
+/// How this shard comes by new connections; see the module doc.
+pub(super) enum AcceptMode {
+    Own,
+    Distribute,
+    Handoff,
+}
+
+/// Everything a shard is built from (a struct rather than a parameter
+/// list so `serve_with` reads as configuration).
+pub(super) struct ShardSetup {
+    pub index: usize,
+    pub nshards: usize,
+    pub listener: Option<TcpListener>,
+    pub accept_mode: AcceptMode,
+    pub stop: Arc<AtomicBool>,
+    pub signal: Arc<LoopSignal>,
+    /// Every shard's signal (own included), indexed by shard — the
+    /// distribute path and stop broadcasts fan out through these.
+    pub peers: Vec<Arc<LoopSignal>>,
+    pub pipe_rx: UnixStream,
+    pub poller: Box<dyn Poller>,
+    pub work_tx: mpsc::Sender<Work>,
+    pub broker: Arc<dyn QueueService>,
+    pub store: Arc<Store>,
+    pub opts: ServerOptions,
+    /// Live connections across ALL shards — `max_connections` stays a
+    /// global cap under sharding.
+    pub conns_total: Arc<AtomicUsize>,
+}
+
+pub(super) struct Shard {
+    index: usize,
+    nshards: usize,
+    /// `None` once draining: dropping the listener closes the port
+    /// immediately, which remote-Shutdown semantics require.
+    listener: Option<TcpListener>,
+    listener_registered: bool,
+    accept_mode: AcceptMode,
+    /// Round-robin cursor for `AcceptMode::Distribute`.
+    rr: usize,
+    stop: Arc<AtomicBool>,
+    signal: Arc<LoopSignal>,
+    peers: Vec<Arc<LoopSignal>>,
+    pipe_rx: UnixStream,
+    poller: Box<dyn Poller>,
+    work_tx: mpsc::Sender<Work>,
+    done_tx: mpsc::Sender<Done>,
+    done_rx: mpsc::Receiver<Done>,
+    broker: Arc<dyn QueueService>,
+    store: Arc<Store>,
+    opts: ServerOptions,
+    conns: HashMap<u64, Conn>,
+    conns_total: Arc<AtomicUsize>,
+    /// Connection ids stride by `nshards` from `index`, so ids — which
+    /// key waiter registrations with the broker/store — never collide
+    /// across shards.
+    next_id: u64,
+    id_stride: u64,
+    /// Park deadlines (lazily invalidated, self-compacting).
+    timers: TimerHeap,
+    /// Idle-reap checkpoints (same discipline: the entry fires,
+    /// `last_activity` decides, live connections are re-armed).
+    idle_timers: TimerHeap,
+    /// Live-connection count per peer IP (entries removed at zero);
+    /// only maintained when `opts.max_conns_per_ip > 0`. Per-SHARD under
+    /// sharding: a peer can hold up to `loop_shards *` the configured
+    /// cap in the worst case — the cap is a flood guard, not a quota.
+    per_ip: HashMap<IpAddr, usize>,
+    accept_backoff_until: Option<Instant>,
+    draining_since: Option<Instant>,
+    /// Event buffer reused across poll rounds.
+    events: Vec<Event>,
+}
+
+impl Shard {
+    pub(super) fn new(s: ShardSetup) -> Shard {
+        let (done_tx, done_rx) = mpsc::channel::<Done>();
+        Shard {
+            index: s.index,
+            nshards: s.nshards,
+            listener: s.listener,
+            listener_registered: false,
+            accept_mode: s.accept_mode,
+            rr: 0,
+            stop: s.stop,
+            signal: s.signal,
+            peers: s.peers,
+            pipe_rx: s.pipe_rx,
+            poller: s.poller,
+            work_tx: s.work_tx,
+            done_tx,
+            done_rx,
+            broker: s.broker,
+            store: s.store,
+            opts: s.opts,
+            conns: HashMap::new(),
+            conns_total: s.conns_total,
+            next_id: s.index as u64,
+            id_stride: s.nshards as u64,
+            timers: TimerHeap::new(),
+            idle_timers: TimerHeap::new(),
+            per_ip: HashMap::new(),
+            accept_backoff_until: None,
+            draining_since: None,
+            events: Vec::new(),
+        }
+    }
+
+    pub(super) fn run(mut self) {
+        if self
+            .poller
+            .register(self.pipe_rx.as_raw_fd(), TOKEN_PIPE, Interest::READABLE)
+            .is_err()
+        {
+            obs::trace(
+                "server.start",
+                format!("shard {}: wake-pipe registration failed; shard down", self.index),
+            );
+            return;
+        }
+        obs::trace(
+            "server.start",
+            format!("shard {} serving on the {} backend", self.index, self.poller.name()),
+        );
+        loop {
+            if self.stop.load(Ordering::SeqCst) && self.draining_since.is_none() {
+                self.begin_drain();
+            }
+            self.adopt_handoffs();
+            self.drain_done();
+            self.drain_woken();
+            self.fire_timers();
+            if let Some(t0) = self.draining_since {
+                if self.drained() || Instant::now() >= t0 + self.opts.drain_wait {
+                    // Conns and this shard's work-channel clone drop here;
+                    // once every shard has, workers see the closed channel
+                    // and unwind.
+                    return;
+                }
+            }
+            self.poll_once();
+        }
+    }
+
+    /// Stop accepting (close the listener NOW — remote Shutdown promises
+    /// the port is closed shortly after the op returns), then give every
+    /// parked op a final attempt so its client gets a legal empty answer
+    /// instead of a cut connection.
+    fn begin_drain(&mut self) {
+        self.draining_since = Some(Instant::now());
+        if let Some(listener) = self.listener.take() {
+            if self.listener_registered {
+                let _ = self.poller.deregister(listener.as_raw_fd());
+                self.listener_registered = false;
+            }
+        }
+        let parked: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| matches!(c.phase, Phase::Parked(_)))
+            .map(|(&id, _)| id)
+            .collect();
+        let now = Instant::now();
+        for id in parked {
+            self.timers.note_stale();
+            self.resume_parked(id, Some(now));
+        }
+    }
+
+    /// Drain complete: nothing executing in a worker and every response
+    /// buffer flushed (reading/parked conns hold no server-side work).
+    fn drained(&self) -> bool {
+        self.conns.values().all(|c| !matches!(c.phase, Phase::Executing) && !c.has_output())
+    }
+
+    /// Adopt sockets the accepting shard handed to this one. During a
+    /// drain nothing is adopted: the socket drops (connection reset),
+    /// exactly what a fresh connect against a closed listener would see.
+    fn adopt_handoffs(&mut self) {
+        for stream in self.signal.drain_handoff() {
+            if self.draining_since.is_some() {
+                self.conns_total.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            match stream.peer_addr() {
+                Ok(peer) => self.admit(stream, peer),
+                Err(_) => {
+                    // Peer vanished between accept and adoption.
+                    self.conns_total.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+        }
+    }
+
+    /// Move a parked connection back to executing and re-dispatch its op.
+    /// A `forced_deadline` (drain or timer expiry) makes the attempt
+    /// final: the worker sees it as expired and responds with what's
+    /// there, mirroring the blocking loop's deliver-then-check-deadline.
+    fn resume_parked(&mut self, id: u64, forced_deadline: Option<Instant>) {
+        let Some(conn) = self.conns.get_mut(&id) else { return };
+        if !matches!(conn.phase, Phase::Parked(_)) {
+            return;
+        }
+        let Phase::Parked(p) = std::mem::replace(&mut conn.phase, Phase::Executing) else {
+            unreachable!()
+        };
+        obs::gauge_add(obs::Gauge::ServerConnsParked, -1);
+        conn.wake_pending = false;
+        let work = Work {
+            conn: id,
+            op: p.op,
+            body: p.body,
+            deadline: Some(forced_deadline.unwrap_or(p.deadline)),
+            waker: conn.waker.clone(),
+            enqueued: Instant::now(),
+            done: self.done_tx.clone(),
+        };
+        // Drop the previous attempt's registration; the retry re-registers
+        // if it parks again. (Wakes already consumed it in the common
+        // case — cancelling is cheap and keeps the maps tidy.)
+        cancel_site(&p.site, id, self.broker.as_ref(), &self.store);
+        let _ = self.work_tx.send(work);
+    }
+
+    fn drain_done(&mut self) {
+        while let Ok(done) = self.done_rx.try_recv() {
+            let draining = self.draining_since.is_some();
+            let mut close = false;
+            {
+                let Some(conn) = self.conns.get_mut(&done.conn) else { continue };
+                match done.verdict {
+                    Verdict::Respond(frame) => {
+                        conn.phase = Phase::Reading;
+                        conn.last_activity = Instant::now();
+                        conn.queue_response(frame);
+                        let ok = conn.flush_output();
+                        close = !ok || (conn.close_after_write && !conn.has_output());
+                    }
+                    Verdict::Park { op, body, deadline, site } => {
+                        if conn.wake_pending || draining {
+                            // A waker fired mid-execution (or we are
+                            // draining): retry immediately. Drain retries
+                            // carry an expired deadline, making them final.
+                            conn.wake_pending = false;
+                            conn.phase = Phase::Executing;
+                            let dl = if draining { Instant::now() } else { deadline };
+                            cancel_site(&site, done.conn, self.broker.as_ref(), &self.store);
+                            let work = Work {
+                                conn: done.conn,
+                                op,
+                                body,
+                                deadline: Some(dl),
+                                waker: conn.waker.clone(),
+                                enqueued: Instant::now(),
+                                done: self.done_tx.clone(),
+                            };
+                            let _ = self.work_tx.send(work);
+                        } else {
+                            obs::inc(obs::Counter::ServerParks);
+                            obs::gauge_add(obs::Gauge::ServerConnsParked, 1);
+                            self.timers.arm(deadline, done.conn);
+                            conn.phase = Phase::Parked(ParkedOp { op, body, deadline, site });
+                        }
+                    }
+                }
+            }
+            if close {
+                self.close_conn(done.conn);
+            }
+        }
+    }
+
+    fn drain_woken(&mut self) {
+        for id in self.signal.drain_woken() {
+            let resume = match self.conns.get_mut(&id) {
+                Some(conn) => match conn.phase {
+                    Phase::Parked(_) => true,
+                    Phase::Executing => {
+                        conn.wake_pending = true;
+                        false
+                    }
+                    // Response already sent; the wake was consumed by a
+                    // finished attempt. Nothing to re-check.
+                    Phase::Reading => false,
+                },
+                // Closed since the wake was queued (ids are never reused).
+                None => false,
+            };
+            if resume {
+                // The heap entry for this park outlives the resume.
+                self.timers.note_stale();
+                self.resume_parked(id, None);
+            }
+        }
+    }
+
+    fn fire_timers(&mut self) {
+        let now = Instant::now();
+        while let Some((t, id)) = self.timers.peek() {
+            if t > now {
+                break;
+            }
+            self.timers.pop();
+            let due = match self.conns.get(&id) {
+                Some(c) => match &c.phase {
+                    Phase::Parked(p) => p.deadline <= now,
+                    _ => false,
+                },
+                None => false,
+            };
+            if due {
+                self.resume_parked(id, Some(now));
+            } else {
+                self.timers.note_popped_stale();
+            }
+        }
+        {
+            let conns = &self.conns;
+            self.timers.maybe_compact(|id, t| {
+                matches!(conns.get(&id),
+                    Some(c) if matches!(&c.phase, Phase::Parked(p) if p.deadline == t))
+            });
+        }
+        self.reap_idle(now);
+    }
+
+    /// Idle-reap pass: pop due checkpoints; close a reading connection
+    /// whose `last_activity` really is `idle_timeout` old, lazily re-arm
+    /// everything else. Parked consumers (mid-op) and conns with buffered
+    /// output (making progress / backpressured) are never reaped.
+    fn reap_idle(&mut self, now: Instant) {
+        let Some(idle) = self.opts.idle_timeout else { return };
+        let mut reap = Vec::new();
+        while let Some((t, id)) = self.idle_timers.peek() {
+            if t > now {
+                break;
+            }
+            self.idle_timers.pop();
+            let Some(c) = self.conns.get(&id) else {
+                self.idle_timers.note_popped_stale();
+                continue;
+            };
+            let due = c.last_activity + idle;
+            let reapable = matches!(c.phase, Phase::Reading) && !c.has_output();
+            if reapable && due <= now {
+                reap.push(id);
+            } else if reapable {
+                // Activity since this entry was pushed: re-arm at the
+                // true due time.
+                self.idle_timers.arm(due, id);
+            } else {
+                // Mid-op or flushing: not idle by definition. Check again
+                // a full period later.
+                self.idle_timers.arm(now + idle, id);
+            }
+        }
+        {
+            let conns = &self.conns;
+            self.idle_timers.maybe_compact(|id, _| conns.contains_key(&id));
+        }
+        for id in reap {
+            obs::inc(obs::Counter::ServerConnsReaped);
+            obs::trace("server.reap", format!("conn {id}: no frame activity for {idle:?}"));
+            self.close_conn(id);
+        }
+    }
+
+    fn poll_timeout(&self, now: Instant) -> Duration {
+        let mut t = IDLE_POLL;
+        if let Some((dl, _)) = self.timers.peek() {
+            t = t.min(dl.saturating_duration_since(now));
+        }
+        if let Some((dl, _)) = self.idle_timers.peek() {
+            t = t.min(dl.saturating_duration_since(now));
+        }
+        if let Some(b) = self.accept_backoff_until {
+            t = t.min(b.saturating_duration_since(now));
+        }
+        if let Some(t0) = self.draining_since {
+            t = t.min((t0 + self.opts.drain_wait).saturating_duration_since(now));
+        }
+        t.max(Duration::from_millis(1))
+    }
+
+    fn poll_once(&mut self) {
+        let now = Instant::now();
+        let draining = self.draining_since.is_some();
+
+        let backoff_over = match self.accept_backoff_until {
+            Some(t) => t <= now,
+            None => true,
+        };
+        if backoff_over {
+            self.accept_backoff_until = None;
+        }
+        // The listener joins the interest set only while under the
+        // (global) cap and not backed off: at the cap excess connects
+        // wait in the OS backlog (no accept-then-close churn).
+        let want_listener = self.listener.is_some()
+            && backoff_over
+            && self.conns_total.load(Ordering::SeqCst) < self.opts.max_connections;
+        if want_listener != self.listener_registered {
+            if let Some(listener) = &self.listener {
+                let r = if want_listener {
+                    self.poller.register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READABLE)
+                } else {
+                    self.poller.deregister(listener.as_raw_fd())
+                };
+                if r.is_ok() {
+                    self.listener_registered = want_listener;
+                }
+            } else {
+                self.listener_registered = false;
+            }
+        }
+
+        // Reconcile connection interests with the poller (states changed
+        // in drain_done/fire_timers since the last wait). A no-op
+        // reconcile is a cached comparison, not a syscall — with epoll,
+        // steady state costs zero syscalls here and the wait is O(ready).
+        {
+            let poller = &mut self.poller;
+            for (&id, c) in self.conns.iter_mut() {
+                let want = desired_interest(c, draining);
+                if want != c.interest
+                    && poller.modify(c.stream.as_raw_fd(), id as usize, want).is_ok()
+                {
+                    c.interest = want;
+                }
+            }
+        }
+
+        let timeout = self.poll_timeout(now);
+        let mut events = std::mem::take(&mut self.events);
+        events.clear();
+        if self.poller.wait(timeout, &mut events).is_err() {
+            // Transient poller failure: don't spin.
+            std::thread::sleep(Duration::from_millis(5));
+            self.events = events;
+            return;
+        }
+        // Round duration = dispatch work after the wait, not the sleep.
+        let round_start = Instant::now();
+        for ev in &events {
+            match ev.token {
+                TOKEN_PIPE => self.drain_pipe(),
+                TOKEN_LISTENER => self.accept_ready(),
+                token => self.handle_conn_event(token as u64, *ev),
+            }
+        }
+        let ns = round_start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        obs::observe(obs::Hist::ServerPollRoundNs, ns);
+        obs::shard_observe_poll_round(self.index, ns);
+        self.events = events;
+    }
+
+    fn drain_pipe(&mut self) {
+        let mut buf = [0u8; 256];
+        loop {
+            match self.pipe_rx.read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => {}
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            if self.conns_total.load(Ordering::SeqCst) >= self.opts.max_connections {
+                return;
+            }
+            let Some(listener) = &self.listener else { return };
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    // Counted at accept; released on close, refusal, or a
+                    // failed adoption — whichever shard gets the socket.
+                    self.conns_total.fetch_add(1, Ordering::SeqCst);
+                    match self.accept_mode {
+                        AcceptMode::Own | AcceptMode::Handoff => self.admit(stream, peer),
+                        AcceptMode::Distribute => {
+                            let target = self.rr % self.nshards;
+                            self.rr = self.rr.wrapping_add(1);
+                            if target == self.index {
+                                self.admit(stream, peer);
+                            } else {
+                                self.peers[target].hand_off(stream);
+                            }
+                        }
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    // EMFILE and friends: pause accepting briefly, and
+                    // count it — a climbing rate here is fd exhaustion,
+                    // which is otherwise silent.
+                    obs::inc(obs::Counter::ServerAcceptBackoffs);
+                    self.accept_backoff_until = Some(Instant::now() + ACCEPT_BACKOFF);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Take ownership of an accepted socket: per-IP admission, poller
+    /// registration, connection table entry. The `conns_total` slot was
+    /// claimed at accept time; every refusal path here releases it.
+    fn admit(&mut self, stream: TcpStream, peer: SocketAddr) {
+        let peer_ip = (self.opts.max_conns_per_ip > 0).then(|| peer.ip());
+        if let Some(ip) = peer_ip {
+            let live = self.per_ip.get(&ip).copied().unwrap_or(0);
+            if live >= self.opts.max_conns_per_ip {
+                // Refuse outright (drop closes the socket): parking this
+                // peer in the backlog would let it starve everyone
+                // else's slots.
+                drop(stream);
+                self.conns_total.fetch_sub(1, Ordering::SeqCst);
+                obs::inc(obs::Counter::ServerConnsRefused);
+                obs::shard_inc_refused(self.index);
+                return;
+            }
+            *self.per_ip.entry(ip).or_insert(0) += 1;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            if let Some(ip) = peer_ip {
+                self.release_ip(ip);
+            }
+            self.conns_total.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let id = self.next_id;
+        self.next_id += self.id_stride;
+        if self.poller.register(stream.as_raw_fd(), id as usize, Interest::READABLE).is_err() {
+            if let Some(ip) = peer_ip {
+                self.release_ip(ip);
+            }
+            self.conns_total.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        let now = Instant::now();
+        let waker = Arc::new(ConnWaker { conn: id, signal: self.signal.clone() });
+        self.conns.insert(
+            id,
+            Conn {
+                stream,
+                peer_ip,
+                asm: FrameAssembler::new(),
+                phase: Phase::Reading,
+                out: Vec::new(),
+                out_pos: 0,
+                wake_pending: false,
+                close_after_write: false,
+                waker,
+                last_activity: now,
+                interest: Interest::READABLE,
+            },
+        );
+        obs::inc(obs::Counter::ServerConnsAccepted);
+        obs::shard_inc_accepted(self.index);
+        obs::gauge_add(obs::Gauge::ServerConnsLive, 1);
+        obs::shard_conns_add(self.index, 1);
+        if let Some(idle) = self.opts.idle_timeout {
+            self.idle_timers.arm(now + idle, id);
+        }
+    }
+
+    fn handle_conn_event(&mut self, id: u64, ev: Event) {
+        let next = {
+            let Some(conn) = self.conns.get_mut(&id) else { return };
+            conn.last_activity = Instant::now();
+            if conn.has_output() {
+                // Writable (or the error surfaces on write): keep flushing.
+                if ev.writable || ev.error {
+                    if !conn.flush_output() {
+                        Next::Close
+                    } else if !conn.has_output() && conn.close_after_write {
+                        Next::Close
+                    } else {
+                        Next::Keep
+                    }
+                } else {
+                    Next::Keep
+                }
+            } else if matches!(conn.phase, Phase::Executing) {
+                // Not watched while executing; a stale event can only be
+                // a leftover from the round that dispatched. Ignore it —
+                // acting here could close a connection whose waiter
+                // registration the in-flight op still owns.
+                Next::Keep
+            } else if ev.readable || ev.error {
+                if matches!(conn.phase, Phase::Parked(_)) {
+                    Self::parked_readable(id, conn)
+                } else {
+                    // Errors still go through read(): the peer may have
+                    // sent a final request, and read() reports the error.
+                    Self::read_next(conn)
+                }
+            } else {
+                Next::Keep
+            }
+        };
+        match next {
+            Next::Keep => {}
+            Next::Close => self.close_conn(id),
+            Next::Dispatch(op, body) => self.dispatch(id, op, body),
+            Next::Shutdown => self.remote_shutdown(id),
+        }
+    }
+
+    /// A parked connection's socket turned readable. The protocol is
+    /// synchronous — one request in flight, and this one is still parked —
+    /// so the only legal peer behavior is silence: EOF/RST means the
+    /// volunteer died, and actual bytes are a protocol violation. Either
+    /// way the connection is torn down NOW, which cancels its broker/store
+    /// waiter registration (via `close_conn`) instead of leaking it until
+    /// the park deadline expires.
+    fn parked_readable(id: u64, conn: &mut Conn) -> Next {
+        let mut probe = [0u8; 64];
+        match conn.stream.read(&mut probe) {
+            Ok(0) => {
+                obs::trace("server.dead_waiter", format!("conn {id}: peer hung up while parked"));
+                Next::Close
+            }
+            Ok(n) => {
+                obs::trace(
+                    "server.dead_waiter",
+                    format!("conn {id}: {n} bytes while an op was parked (protocol violation)"),
+                );
+                Next::Close
+            }
+            // Spurious wakeup (e.g. an error event that read() doesn't
+            // surface yet): leave the park in place.
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => Next::Keep,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => Next::Keep,
+            Err(_) => {
+                obs::trace("server.dead_waiter", format!("conn {id}: read error while parked"));
+                Next::Close
+            }
+        }
+    }
+
+    /// Drive the frame assembler; at most one decoded frame per call (the
+    /// protocol is synchronous — the next frame is read after responding).
+    fn read_next(conn: &mut Conn) -> Next {
+        let mut counted = CountingReader { inner: &mut conn.stream, n: 0 };
+        let polled = conn.asm.poll_read(&mut counted, READ_BUDGET);
+        if counted.n >= READ_BUDGET {
+            // The frame outran this round's fairness budget; the rest
+            // arrives on later readiness. Worth counting: a sustained rate
+            // here means one firehose peer is rationed by the loop.
+            obs::inc(obs::Counter::ServerReadBudgetExhausted);
+        }
+        match polled {
+            Ok(Some((op_byte, body))) => match Op::from_u8(op_byte) {
+                Ok(Op::Shutdown) => Next::Shutdown,
+                Ok(op) => Next::Dispatch(op, body),
+                Err(e) => {
+                    // Unknown opcode: error response, connection lives on.
+                    conn.queue_response(frame_bytes(ST_ERR, e.to_string().as_bytes()));
+                    if conn.flush_output() {
+                        Next::Keep
+                    } else {
+                        Next::Close
+                    }
+                }
+            },
+            Ok(None) => Next::Keep, // mid-frame; resume on next readiness
+            Err(_) => Next::Close,  // disconnect, truncation, bad length
+        }
+    }
+
+    fn dispatch(&mut self, id: u64, op: Op, body: Vec<u8>) {
+        let Some(conn) = self.conns.get_mut(&id) else { return };
+        conn.phase = Phase::Executing;
+        // A wake left over from the previous (already answered) op must
+        // not count against this one.
+        conn.wake_pending = false;
+        obs::inc(obs::Counter::ServerOps);
+        let work = Work {
+            conn: id,
+            op,
+            body,
+            deadline: None,
+            waker: conn.waker.clone(),
+            enqueued: Instant::now(),
+            done: self.done_tx.clone(),
+        };
+        let _ = self.work_tx.send(work);
+    }
+
+    /// Remote Shutdown: set the stop flag (every shard's next loop turn
+    /// starts its drain — the peers are poked awake), acknowledge with
+    /// ST_OK, and close this connection once the ack is flushed.
+    fn remote_shutdown(&mut self, id: u64) {
+        self.stop.store(true, Ordering::SeqCst);
+        for peer in &self.peers {
+            peer.notify();
+        }
+        let mut close = false;
+        if let Some(conn) = self.conns.get_mut(&id) {
+            conn.queue_response(frame_bytes(ST_OK, &[]));
+            conn.close_after_write = true;
+            close = !conn.flush_output() || !conn.has_output();
+        }
+        if close {
+            self.close_conn(id);
+        }
+    }
+
+    fn close_conn(&mut self, id: u64) {
+        if let Some(conn) = self.conns.remove(&id) {
+            // Deregister BEFORE the fd closes: the poll backend keeps its
+            // own table and would spin on a dead descriptor.
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            self.conns_total.fetch_sub(1, Ordering::SeqCst);
+            obs::inc(obs::Counter::ServerConnsClosed);
+            obs::gauge_add(obs::Gauge::ServerConnsLive, -1);
+            obs::shard_conns_add(self.index, -1);
+            if self.opts.idle_timeout.is_some() {
+                self.idle_timers.note_stale();
+            }
+            if let Some(ip) = conn.peer_ip {
+                self.release_ip(ip);
+            }
+            if let Phase::Parked(p) = &conn.phase {
+                obs::gauge_add(obs::Gauge::ServerConnsParked, -1);
+                self.timers.note_stale();
+                cancel_site(&p.site, id, self.broker.as_ref(), &self.store);
+            }
+        }
+    }
+
+    /// Release one per-IP accounting slot (entries vanish at zero so the
+    /// map tracks only currently-connected peers).
+    fn release_ip(&mut self, ip: IpAddr) {
+        if let Some(n) = self.per_ip.get_mut(&ip) {
+            *n -= 1;
+            if *n == 0 {
+                self.per_ip.remove(&ip);
+            }
+        }
+    }
+}
+
+/// Counts bytes flowing through [`FrameAssembler::poll_read`] so the
+/// caller can tell "stream ran dry" from "fairness budget exhausted" —
+/// the assembler reports both as `Ok(None)`.
+struct CountingReader<'a, R: Read> {
+    inner: &'a mut R,
+    n: usize,
+}
+
+impl<R: Read> Read for CountingReader<'_, R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.n += n;
+        Ok(n)
+    }
+}
+
+pub(super) fn worker_loop(
+    work_rx: &Mutex<mpsc::Receiver<Work>>,
+    broker: &dyn QueueService,
+    store: &Store,
+) {
+    loop {
+        // Standard shared-receiver pool: the lock is held only while
+        // waiting for/taking an item, never while executing it.
+        let msg = { work_rx.lock().unwrap().recv() };
+        let Ok(work) = msg else { return }; // every shard has shut down
+        let conn = work.conn;
+        let done_tx = work.done.clone();
+        let signal = work.waker.signal.clone();
+        obs::observe_since(obs::Hist::ServerOpQueueWaitNs, work.enqueued);
+        let exec_start = Instant::now();
+        // A panicking op (poisoned lock, arithmetic bug) must not shrink
+        // the pool: convert it to an in-band error response.
+        let verdict = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_work(work, broker, store)
+        }))
+        .unwrap_or_else(|_| Verdict::Respond(frame_bytes(ST_ERR, b"internal server error")));
+        obs::observe_since(obs::Hist::ServerOpExecuteNs, exec_start);
+        if done_tx.send(Done { conn, verdict }).is_ok() {
+            signal.notify();
+        }
+        // A failed send means that one shard already exited (shutdown
+        // race); the pool keeps serving the remaining shards.
+    }
+}
+
+/// Execute one decoded request. Blocking ops (Consume / ConsumeMany /
+/// WaitVersion) run the register-then-try protocol: register a waker,
+/// re-check with a zero timeout, park on empty — the worker never sleeps.
+fn run_work(work: Work, broker: &dyn QueueService, store: &Store) -> Verdict {
+    let Work { conn, op, body, deadline, waker, .. } = work;
+    let now = Instant::now();
+    let (site, deadline, expired) = match blocking_site(op, &body) {
+        Some((site, timeout)) => {
+            let dl = deadline.unwrap_or_else(|| now + timeout.min(MAX_BLOCK));
+            (Some(site), dl, now >= dl)
+        }
+        None => (None, now, false),
+    };
+    if !expired {
+        if let Some(site) = &site {
+            let registered = match site {
+                WaitSite::Queue(q) => broker.register_waiter(q, conn, waker.clone()),
+                WaitSite::Version => {
+                    store.register_waiter(conn, waker.clone());
+                    Ok(())
+                }
+            };
+            if let Err(e) = registered {
+                // e.g. consume on an undeclared queue — the same error
+                // the op itself would report.
+                return Verdict::Respond(frame_bytes(ST_ERR, e.to_string().as_bytes()));
+            }
+        }
+    }
+    match execute_op_with(op, &body, broker, store, TimeoutMode::Immediate) {
+        Ok((st, resp)) => match site {
+            Some(site) if st == ST_NONE && !expired => Verdict::Park { op, body, deadline, site },
+            Some(site) => {
+                cancel_site(&site, conn, broker, store);
+                Verdict::Respond(frame_bytes(st, &resp))
+            }
+            None => Verdict::Respond(frame_bytes(st, &resp)),
+        },
+        Err(e) => {
+            if let Some(site) = &site {
+                cancel_site(site, conn, broker, store);
+            }
+            Verdict::Respond(frame_bytes(ST_ERR, e.to_string().as_bytes()))
+        }
+    }
+}
+
+/// `(wait site, protocol timeout)` for ops that may block; `None` for
+/// everything else — including malformed bodies, which fall through to
+/// [`execute_op_with`] for the verbatim parse error.
+fn blocking_site(op: Op, body: &[u8]) -> Option<(WaitSite, Duration)> {
+    let mut r = BodyReader::new(body);
+    match op {
+        Op::Consume => {
+            let q = r.str().ok()?.to_string();
+            Some((WaitSite::Queue(q), Duration::from_millis(r.u64().ok()?)))
+        }
+        Op::ConsumeMany => {
+            let q = r.str().ok()?.to_string();
+            r.u64().ok()?; // max batch size
+            Some((WaitSite::Queue(q), Duration::from_millis(r.u64().ok()?)))
+        }
+        Op::WaitVersion => {
+            r.str().ok()?;
+            r.u64().ok()?; // min version
+            Some((WaitSite::Version, Duration::from_millis(r.u64().ok()?)))
+        }
+        _ => None,
+    }
+}
+
+fn cancel_site(site: &WaitSite, conn: u64, broker: &dyn QueueService, store: &Store) {
+    match site {
+        WaitSite::Queue(q) => broker.cancel_waiter(q, conn),
+        WaitSite::Version => store.cancel_waiter(conn),
+    }
+}
+
+/// Frame a response the way the client reads it: `[len u32][status][body]`.
+pub(super) fn frame_bytes(status: u8, body: &[u8]) -> Vec<u8> {
+    if 1 + body.len() > MAX_FRAME {
+        // Mirror write_frame's cap: answer with the error instead of
+        // emitting a frame the client would reject as corrupt.
+        let msg = format!("frame too large: {} bytes", 1 + body.len());
+        return frame_bytes(ST_ERR, msg.as_bytes());
+    }
+    let mut out = Vec::with_capacity(5 + body.len());
+    out.extend_from_slice(&((1 + body.len()) as u32).to_le_bytes());
+    out.push(status);
+    out.extend_from_slice(body);
+    out
+}
+
+/// Bind `addr` with `SO_REUSEPORT` set before the bind, so several shard
+/// listeners can share one port and the kernel balances accepts across
+/// them by connection-tuple hash. Hand-rolled FFI under the same
+/// dependency budget as the pollers. Caveat: kernel balancing is by
+/// hash, not load — a shard that falls behind still receives its share,
+/// which is why per-shard `obs` gauges exist.
+#[cfg(target_os = "linux")]
+pub(super) fn bind_reuseport(addr: &SocketAddr) -> io::Result<TcpListener> {
+    use std::os::raw::{c_int, c_void};
+    use std::os::unix::io::FromRawFd;
+
+    const AF_INET: c_int = 2;
+    const AF_INET6: c_int = 10;
+    const SOCK_STREAM: c_int = 1;
+    const SOCK_CLOEXEC: c_int = 0o2000000;
+    const SOL_SOCKET: c_int = 1;
+    const SO_REUSEADDR: c_int = 2;
+    const SO_REUSEPORT: c_int = 15;
+    const BACKLOG: c_int = 1024;
+
+    #[repr(C)]
+    struct SockAddrIn {
+        family: u16,
+        port: u16,
+        addr: u32,
+        zero: [u8; 8],
+    }
+
+    #[repr(C)]
+    struct SockAddrIn6 {
+        family: u16,
+        port: u16,
+        flowinfo: u32,
+        addr: [u8; 16],
+        scope_id: u32,
+    }
+
+    extern "C" {
+        fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+        fn setsockopt(
+            fd: c_int,
+            level: c_int,
+            name: c_int,
+            value: *const c_void,
+            len: u32,
+        ) -> c_int;
+        fn bind(fd: c_int, addr: *const c_void, len: u32) -> c_int;
+        fn listen(fd: c_int, backlog: c_int) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    let domain = if addr.is_ipv4() { AF_INET } else { AF_INET6 };
+    let fd = unsafe { socket(domain, SOCK_STREAM | SOCK_CLOEXEC, 0) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let fail = |fd: c_int| -> io::Error {
+        let e = io::Error::last_os_error();
+        unsafe { close(fd) };
+        e
+    };
+    let one: c_int = 1;
+    for opt in [SO_REUSEADDR, SO_REUSEPORT] {
+        let rc = unsafe {
+            setsockopt(fd, SOL_SOCKET, opt, &one as *const c_int as *const c_void, 4)
+        };
+        if rc < 0 {
+            return Err(fail(fd));
+        }
+    }
+    let rc = match addr {
+        SocketAddr::V4(v4) => {
+            let sa = SockAddrIn {
+                family: AF_INET as u16,
+                port: v4.port().to_be(),
+                addr: u32::from(*v4.ip()).to_be(),
+                zero: [0; 8],
+            };
+            unsafe {
+                bind(
+                    fd,
+                    &sa as *const SockAddrIn as *const c_void,
+                    std::mem::size_of::<SockAddrIn>() as u32,
+                )
+            }
+        }
+        SocketAddr::V6(v6) => {
+            let sa = SockAddrIn6 {
+                family: AF_INET6 as u16,
+                port: v6.port().to_be(),
+                flowinfo: 0,
+                addr: v6.ip().octets(),
+                scope_id: v6.scope_id(),
+            };
+            unsafe {
+                bind(
+                    fd,
+                    &sa as *const SockAddrIn6 as *const c_void,
+                    std::mem::size_of::<SockAddrIn6>() as u32,
+                )
+            }
+        }
+    };
+    if rc < 0 {
+        return Err(fail(fd));
+    }
+    if unsafe { listen(fd, BACKLOG) } < 0 {
+        return Err(fail(fd));
+    }
+    let listener = unsafe { TcpListener::from_raw_fd(fd) };
+    listener.set_nonblocking(true)?;
+    Ok(listener)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite bugfix regression: a connection that repeatedly parks
+    /// and is woken before its deadline used to leave one dead heap
+    /// entry per cycle — unbounded growth for a long-lived chatty
+    /// consumer. With stale-count compaction the heap stays at a small
+    /// constant independent of the cycle count.
+    #[test]
+    fn timer_heap_stays_bounded_across_park_wake_cycles() {
+        let mut th = TimerHeap::new();
+        let deadline = Instant::now() + Duration::from_secs(3600);
+        let mut max_len = 0;
+        for _ in 0..10_000 {
+            // Park: arm a deadline entry. Wake before the deadline: the
+            // entry goes stale in place (exactly what drain_woken does).
+            th.arm(deadline, 1);
+            th.note_stale();
+            th.maybe_compact(|_, _| false);
+            max_len = max_len.max(th.len());
+        }
+        assert!(max_len <= 16, "timer heap grew to {max_len} entries over park/wake cycles");
+        assert!(th.len() <= 16);
+    }
+
+    #[test]
+    fn timer_heap_compaction_keeps_live_entries() {
+        let mut th = TimerHeap::new();
+        let deadline = Instant::now() + Duration::from_secs(3600);
+        th.arm(deadline, 2); // the one live wait
+        for _ in 0..100 {
+            th.arm(deadline, 1);
+            th.note_stale();
+            th.maybe_compact(|id, _| id == 2);
+        }
+        assert!(th.len() <= 16);
+        assert!(
+            th.heap.iter().any(|&Reverse((_, id))| id == 2),
+            "compaction must keep the live entry"
+        );
+    }
+
+    #[test]
+    fn blocking_site_parses_only_blocking_ops() {
+        let mut c = super::super::body_with_name("jobs", &[]);
+        c.extend_from_slice(&250u64.to_le_bytes());
+        match blocking_site(Op::Consume, &c) {
+            Some((WaitSite::Queue(q), t)) => {
+                assert_eq!(q, "jobs");
+                assert_eq!(t, Duration::from_millis(250));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert!(blocking_site(Op::Publish, &c).is_none());
+        // Malformed body: not a blocking site; the executor reports it.
+        assert!(blocking_site(Op::Consume, &[1, 2]).is_none());
+    }
+
+    #[test]
+    fn frame_bytes_caps_oversize_responses() {
+        let f = frame_bytes(ST_OK, &vec![0u8; MAX_FRAME]);
+        // Replaced by an in-band error frame the client can parse.
+        assert_eq!(f[4], ST_ERR);
+        let len = u32::from_le_bytes(f[0..4].try_into().unwrap()) as usize;
+        assert_eq!(len, f.len() - 4);
+        assert!(len <= MAX_FRAME);
+    }
+}

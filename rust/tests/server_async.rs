@@ -1,8 +1,14 @@
-//! Behavior that only the readiness event loop provides (queue/server.rs):
+//! Behavior that only the readiness event loop provides (queue/server/):
 //! slow-loris containment with a worker pool of one, thousands of idle
 //! connections on a handful of threads, parked consumers woken by
 //! publishes instead of polling, pipelined frames, and a shutdown that
 //! settles in-flight blocking ops instead of cutting them.
+//!
+//! The loop's readiness layer is pluggable (`ServerOptions::poller`), so
+//! the behavioral scenarios here run as a parity matrix: once under the
+//! portable poll(2) backend and — on Linux — once again under epoll. A
+//! backend that passes its unit tests but mis-reports readiness would
+//! fail here, identically visible under either name.
 #![cfg(unix)]
 
 use std::io::Write;
@@ -13,9 +19,19 @@ use std::time::{Duration, Instant};
 use jsdoop::data::Store;
 use jsdoop::queue::broker::Broker;
 use jsdoop::queue::client::RemoteQueue;
-use jsdoop::queue::server::{serve, serve_with, ServerHandle, ServerOptions};
+use jsdoop::queue::server::{serve, serve_with, PollerKind, ServerHandle, ServerOptions};
 use jsdoop::queue::wire::{read_frame, write_frame, Op, ST_OK};
 use jsdoop::queue::QueueApi;
+
+/// Every readiness backend this build can run. Non-Linux unix targets
+/// exercise poll(2) only; Linux runs the whole matrix.
+fn backends() -> Vec<PollerKind> {
+    let mut kinds = vec![PollerKind::Poll];
+    if cfg!(target_os = "linux") {
+        kinds.push(PollerKind::Epoll);
+    }
+    kinds
+}
 
 fn start() -> ServerHandle {
     serve(
@@ -26,19 +42,22 @@ fn start() -> ServerHandle {
     .unwrap()
 }
 
+fn start_with(opts: ServerOptions) -> ServerHandle {
+    serve_with(
+        "127.0.0.1:0",
+        Arc::new(Broker::new(Duration::from_secs(5))),
+        Arc::new(Store::new()),
+        opts,
+    )
+    .unwrap()
+}
+
 /// Regression: with ONE worker, stalled half-written requests must not
 /// pin it. The old thread-per-connection server survived this by burning
 /// a thread per loris; the event loop must survive it by never handing
 /// an incomplete frame to the pool.
-#[test]
-fn slow_loris_does_not_pin_the_single_worker() {
-    let h = serve_with(
-        "127.0.0.1:0",
-        Arc::new(Broker::new(Duration::from_secs(5))),
-        Arc::new(Store::new()),
-        ServerOptions { workers: 1, ..ServerOptions::default() },
-    )
-    .unwrap();
+fn slow_loris_scenario(poller: PollerKind) {
+    let h = start_with(ServerOptions { workers: 1, poller, ..ServerOptions::default() });
     let mut lorises = Vec::new();
     for _ in 0..8 {
         let mut s = TcpStream::connect(h.addr).unwrap();
@@ -58,10 +77,198 @@ fn slow_loris_does_not_pin_the_single_worker() {
     }
     assert!(
         t0.elapsed() < Duration::from_secs(2),
-        "active client starved behind stalled connections: {:?}",
+        "[{poller}] active client starved behind stalled connections: {:?}",
         t0.elapsed()
     );
     drop(lorises);
+    h.shutdown();
+}
+
+#[test]
+fn slow_loris_does_not_pin_the_single_worker() {
+    for poller in backends() {
+        slow_loris_scenario(poller);
+    }
+}
+
+/// A parked consumer (no thread on the server side) is woken by a
+/// publish from another connection — promptly, not at its timeout and
+/// not on the 100 ms sweeper cadence alone.
+fn parked_wake_scenario(poller: PollerKind) {
+    let h = start_with(ServerOptions { poller, ..ServerOptions::default() });
+    let addr = h.addr.to_string();
+    h.broker.declare("jobs").unwrap();
+    let waiter = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let q = RemoteQueue::connect(&addr).unwrap();
+            let t0 = Instant::now();
+            let d = q.consume("jobs", Duration::from_secs(5)).unwrap();
+            (d, t0.elapsed())
+        })
+    };
+    std::thread::sleep(Duration::from_millis(150));
+    let q = RemoteQueue::connect(&addr).unwrap();
+    q.publish("jobs", b"wake up").unwrap();
+    let (d, waited) = waiter.join().unwrap();
+    assert_eq!(d.unwrap().payload, b"wake up");
+    assert!(
+        waited < Duration::from_secs(2),
+        "[{poller}] delivery took {waited:?} (timeout-poll, not wake?)"
+    );
+    h.shutdown();
+}
+
+#[test]
+fn parked_consume_wakes_on_publish_from_another_connection() {
+    for poller in backends() {
+        parked_wake_scenario(poller);
+    }
+}
+
+/// Two requests written back-to-back are both answered, in order. The
+/// protocol is synchronous per connection; the second frame waits in the
+/// kernel buffer while the first executes.
+fn pipelining_scenario(poller: PollerKind) {
+    let h = start_with(ServerOptions { poller, ..ServerOptions::default() });
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    let mut burst = Vec::new();
+    write_frame(&mut burst, Op::Ping as u8, &[]).unwrap();
+    write_frame(&mut burst, Op::Ping as u8, &[]).unwrap();
+    s.write_all(&burst).unwrap();
+    s.flush().unwrap();
+    for _ in 0..2 {
+        let (st, body) = read_frame(&mut s).unwrap();
+        assert_eq!(st, ST_OK, "[{poller}] pipelined frame got a non-OK status");
+        assert_eq!(body, b"pong");
+    }
+    h.shutdown();
+}
+
+#[test]
+fn pipelined_frames_are_answered_in_order() {
+    for poller in backends() {
+        pipelining_scenario(poller);
+    }
+}
+
+/// Shutdown with a long blocking consume parked: the client gets a legal
+/// empty answer (its op's would-block result), and shutdown returns well
+/// before the op's 30 s timeout.
+fn drain_on_shutdown_scenario(poller: PollerKind) {
+    let h = start_with(ServerOptions { poller, ..ServerOptions::default() });
+    let addr = h.addr.to_string();
+    h.broker.declare("jobs").unwrap();
+    let waiter = std::thread::spawn(move || {
+        let q = RemoteQueue::connect(&addr).unwrap();
+        q.consume("jobs", Duration::from_secs(30))
+    });
+    std::thread::sleep(Duration::from_millis(150));
+    let t0 = Instant::now();
+    h.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(6),
+        "[{poller}] shutdown waited on a parked op: {:?}",
+        t0.elapsed()
+    );
+    // The parked consume was given a final attempt: an empty queue yields
+    // a clean None, not a cut connection.
+    let got = waiter.join().unwrap().unwrap();
+    assert!(got.is_none(), "[{poller}] drained op returned data from an empty queue");
+}
+
+#[test]
+fn shutdown_settles_parked_ops_instead_of_hanging() {
+    for poller in backends() {
+        drain_on_shutdown_scenario(poller);
+    }
+}
+
+/// Satellite of the idle reaper (`ServerOptions::idle_timeout`): a
+/// connection stuck mid-frame is collected once it stays silent past the
+/// cutoff, counted in `server.conns_reaped`, while an active client on
+/// the same server keeps living through several idle periods.
+fn idle_reap_scenario(poller: PollerKind) {
+    let h = start_with(ServerOptions {
+        idle_timeout: Some(Duration::from_millis(400)),
+        poller,
+        ..ServerOptions::default()
+    });
+    // Half a length prefix, then silence: the reaper's target.
+    let mut stalled = TcpStream::connect(h.addr).unwrap();
+    stalled.write_all(&[0xff, 0x00]).unwrap();
+    stalled.flush().unwrap();
+    let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
+    q.declare("reap-jobs").unwrap();
+    // The obs registry is process-global (and this scenario runs once per
+    // backend), so assert on the counter's delta, not its value.
+    let reaped_at_start = q.metrics().unwrap().counter("server.conns_reaped").unwrap_or(0);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        // Steady frame activity keeps THIS connection alive across
+        // several idle periods while the stalled one ages out.
+        q.publish("reap-jobs", b"tick").unwrap();
+        let d = q.consume("reap-jobs", Duration::from_millis(100)).unwrap().unwrap();
+        q.ack("reap-jobs", d.tag).unwrap();
+        let reaped = q.metrics().unwrap().counter("server.conns_reaped").unwrap_or(0);
+        if reaped > reaped_at_start {
+            break;
+        }
+        assert!(Instant::now() < deadline, "[{poller}] stalled connection was never reaped");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    // The reaped socket is really closed (EOF or reset) ...
+    stalled.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+    let mut buf = [0u8; 8];
+    let closed = matches!(std::io::Read::read(&mut stalled, &mut buf), Ok(0) | Err(_));
+    assert!(closed, "[{poller}] reaped connection still open");
+    // ... and the active client outlived the reaper.
+    q.ping().unwrap();
+    h.shutdown();
+}
+
+#[test]
+fn idle_timeout_reaps_stalled_connections_but_not_active_ones() {
+    for poller in backends() {
+        idle_reap_scenario(poller);
+    }
+}
+
+/// `--loop_shards=4`: every shard ends up owning connections, whether
+/// the kernel spread them via SO_REUSEPORT hashing or the fallback
+/// acceptor round-robined them. A shard that never receives work would
+/// make sharding a silent no-op, so this asserts on the per-shard
+/// `server.shard<i>.conns_accepted` counters (deltas — obs is
+/// process-global).
+#[test]
+fn every_loop_shard_accepts_connections_under_loop_shards_4() {
+    const NSHARDS: usize = 4;
+    let h = start_with(ServerOptions { loop_shards: NSHARDS, ..ServerOptions::default() });
+    let addr = h.addr.to_string();
+    let q = RemoteQueue::connect(&addr).unwrap();
+    let accepted = |q: &RemoteQueue| -> Vec<u64> {
+        let snap = q.metrics().unwrap();
+        (0..NSHARDS)
+            .map(|i| snap.counter(&format!("server.shard{i}.conns_accepted")).unwrap_or(0))
+            .collect()
+    };
+    let before = accepted(&q);
+    // ~100 distinct source ports: plenty for the reuseport hash to land
+    // on all four shards, and a guarantee under round-robin handoff.
+    let mut clients = Vec::new();
+    for _ in 0..100 {
+        let c = RemoteQueue::connect(&addr).unwrap();
+        c.ping().unwrap(); // forces the accept + registration to complete
+        clients.push(c);
+    }
+    let after = accepted(&q);
+    for i in 0..NSHARDS {
+        assert!(
+            after[i] > before[i],
+            "shard {i} accepted no connections (before={before:?} after={after:?})"
+        );
+    }
+    drop(clients);
     h.shutdown();
 }
 
@@ -69,7 +276,7 @@ fn slow_loris_does_not_pin_the_single_worker() {
 /// cheap (no thread each), and an active client stays responsive with
 /// all of them open. Degrades with the process fd limit — default CI
 /// soft limits sit near 1024, so the floor asserted here is modest; the
-/// full 10k tier runs in the server-scaling bench job with a raised
+/// full 10k-50k tiers run in the server-scaling bench job with a raised
 /// ulimit.
 #[test]
 fn idle_connection_storm_keeps_active_clients_responsive() {
@@ -108,13 +315,7 @@ fn idle_connection_storm_keeps_active_clients_responsive() {
 /// the same peer can reconnect afterwards.
 #[test]
 fn per_ip_limit_refuses_excess_and_frees_slots_on_close() {
-    let h = serve_with(
-        "127.0.0.1:0",
-        Arc::new(Broker::new(Duration::from_secs(5))),
-        Arc::new(Store::new()),
-        ServerOptions { max_conns_per_ip: 2, ..ServerOptions::default() },
-    )
-    .unwrap();
+    let h = start_with(ServerOptions { max_conns_per_ip: 2, ..ServerOptions::default() });
     let addr = h.addr.to_string();
     // Two connections from this IP work end to end.
     let q1 = RemoteQueue::connect(&addr).unwrap();
@@ -145,107 +346,6 @@ fn per_ip_limit_refuses_excess_and_frees_slots_on_close() {
     let d = q4.consume("jobs", Duration::from_millis(500)).unwrap().unwrap();
     q4.ack("jobs", d.tag).unwrap();
     drop((q2, q4));
-    h.shutdown();
-}
-
-/// A parked consumer (no thread on the server side) is woken by a
-/// publish from another connection — promptly, not at its timeout and
-/// not on the 100 ms sweeper cadence alone.
-#[test]
-fn parked_consume_wakes_on_publish_from_another_connection() {
-    let h = start();
-    let addr = h.addr.to_string();
-    h.broker.declare("jobs").unwrap();
-    let waiter = {
-        let addr = addr.clone();
-        std::thread::spawn(move || {
-            let q = RemoteQueue::connect(&addr).unwrap();
-            let t0 = Instant::now();
-            let d = q.consume("jobs", Duration::from_secs(5)).unwrap();
-            (d, t0.elapsed())
-        })
-    };
-    std::thread::sleep(Duration::from_millis(150));
-    let q = RemoteQueue::connect(&addr).unwrap();
-    q.publish("jobs", b"wake up").unwrap();
-    let (d, waited) = waiter.join().unwrap();
-    assert_eq!(d.unwrap().payload, b"wake up");
-    assert!(waited < Duration::from_secs(2), "delivery took {waited:?} (timeout-poll, not wake?)");
-    h.shutdown();
-}
-
-/// Shutdown with a long blocking consume parked: the client gets a legal
-/// empty answer (its op's would-block result), and shutdown returns well
-/// before the op's 30 s timeout.
-#[test]
-fn shutdown_settles_parked_ops_instead_of_hanging() {
-    let h = start();
-    let addr = h.addr.to_string();
-    h.broker.declare("jobs").unwrap();
-    let waiter = std::thread::spawn(move || {
-        let q = RemoteQueue::connect(&addr).unwrap();
-        q.consume("jobs", Duration::from_secs(30))
-    });
-    std::thread::sleep(Duration::from_millis(150));
-    let t0 = Instant::now();
-    h.shutdown();
-    assert!(
-        t0.elapsed() < Duration::from_secs(6),
-        "shutdown waited on a parked op: {:?}",
-        t0.elapsed()
-    );
-    // The parked consume was given a final attempt: an empty queue yields
-    // a clean None, not a cut connection.
-    let got = waiter.join().unwrap().unwrap();
-    assert!(got.is_none());
-}
-
-/// Satellite of the idle reaper (`ServerOptions::idle_timeout`): a
-/// connection stuck mid-frame is collected once it stays silent past the
-/// cutoff, counted in `server.conns_reaped`, while an active client on
-/// the same server keeps living through several idle periods.
-#[test]
-fn idle_timeout_reaps_stalled_connections_but_not_active_ones() {
-    let h = serve_with(
-        "127.0.0.1:0",
-        Arc::new(Broker::new(Duration::from_secs(5))),
-        Arc::new(Store::new()),
-        ServerOptions {
-            idle_timeout: Some(Duration::from_millis(400)),
-            ..ServerOptions::default()
-        },
-    )
-    .unwrap();
-    // Half a length prefix, then silence: the reaper's target.
-    let mut stalled = TcpStream::connect(h.addr).unwrap();
-    stalled.write_all(&[0xff, 0x00]).unwrap();
-    stalled.flush().unwrap();
-    let q = RemoteQueue::connect(&h.addr.to_string()).unwrap();
-    q.declare("reap-jobs").unwrap();
-    // The obs registry is process-global, but conns_reaped only moves
-    // when a reaper fires, and only this test enables one.
-    let reaped_at_start = q.metrics().unwrap().counter("server.conns_reaped").unwrap_or(0);
-    let deadline = Instant::now() + Duration::from_secs(10);
-    loop {
-        // Steady frame activity keeps THIS connection alive across
-        // several idle periods while the stalled one ages out.
-        q.publish("reap-jobs", b"tick").unwrap();
-        let d = q.consume("reap-jobs", Duration::from_millis(100)).unwrap().unwrap();
-        q.ack("reap-jobs", d.tag).unwrap();
-        let reaped = q.metrics().unwrap().counter("server.conns_reaped").unwrap_or(0);
-        if reaped > reaped_at_start {
-            break;
-        }
-        assert!(Instant::now() < deadline, "stalled connection was never reaped");
-        std::thread::sleep(Duration::from_millis(100));
-    }
-    // The reaped socket is really closed (EOF or reset) ...
-    stalled.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
-    let mut buf = [0u8; 8];
-    let closed = matches!(std::io::Read::read(&mut stalled, &mut buf), Ok(0) | Err(_));
-    assert!(closed, "reaped connection still open");
-    // ... and the active client outlived the reaper.
-    q.ping().unwrap();
     h.shutdown();
 }
 
@@ -289,26 +389,6 @@ fn dead_parked_consumer_cancels_its_waiter_registration() {
             "dead consumer's waiter registration leaked (only reclaimed at deadline?)"
         );
         std::thread::sleep(Duration::from_millis(20));
-    }
-    h.shutdown();
-}
-
-/// Two requests written back-to-back are both answered, in order. The
-/// protocol is synchronous per connection; the second frame waits in the
-/// kernel buffer while the first executes.
-#[test]
-fn pipelined_frames_are_answered_in_order() {
-    let h = start();
-    let mut s = TcpStream::connect(h.addr).unwrap();
-    let mut burst = Vec::new();
-    write_frame(&mut burst, Op::Ping as u8, &[]).unwrap();
-    write_frame(&mut burst, Op::Ping as u8, &[]).unwrap();
-    s.write_all(&burst).unwrap();
-    s.flush().unwrap();
-    for _ in 0..2 {
-        let (st, body) = read_frame(&mut s).unwrap();
-        assert_eq!(st, ST_OK);
-        assert_eq!(body, b"pong");
     }
     h.shutdown();
 }
